@@ -1,0 +1,80 @@
+//! Accelerator-simulator walkthrough: reproduces the paper's hardware
+//! evaluation (Fig. 5b + §5 headline) and prints the per-phase breakdown
+//! that explains *where* EfficientGrad's advantage comes from — the
+//! eliminated transposed-weight fetch and the pruned backward MACs.
+//!
+//!     cargo run --release --example accel_sim [-- --batch 16 --prune-rate 0.9]
+
+use anyhow::Result;
+
+use efficientgrad::accel::config::{efficientgrad, efficientgrad_bp_ablation, eyeriss_v2_bp};
+use efficientgrad::accel::sim::{simulate_training, ALL_PHASES};
+use efficientgrad::accel::workload::resnet18_cifar;
+use efficientgrad::cli::{Args, FlagSpec};
+use efficientgrad::figures::fig5b;
+use efficientgrad::sparsity::expected_survivor_fraction;
+
+fn main() -> Result<()> {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let specs = vec![
+        FlagSpec { name: "batch", help: "batch size", takes_value: true, default: Some("16") },
+        FlagSpec { name: "prune-rate", help: "pruning rate P", takes_value: true, default: Some("0.9") },
+    ];
+    let args = Args::parse(&raw, &specs)?;
+    let batch = args.get_usize("batch")?.unwrap();
+    let p = args.get_f64("prune-rate")?.unwrap();
+
+    let wl = resnet18_cifar(batch);
+    let surv = expected_survivor_fraction(p);
+    println!(
+        "workload: {} — {:.1} GMAC fwd, {:.1} M params; P={p} -> survivor {surv:.3}",
+        wl.name,
+        wl.fwd_macs() as f64 / 1e9,
+        wl.weight_words() as f64 / 1e6
+    );
+
+    // Fig. 5b + headline
+    let out = fig5b::generate(&wl, p, None);
+    out.report.print();
+    fig5b::headline(p).print();
+
+    // per-phase breakdown for both chips
+    for cfg in [eyeriss_v2_bp(), efficientgrad()] {
+        let r = simulate_training(&cfg, &wl, surv);
+        println!("\n### {} — per-phase breakdown", cfg.name);
+        println!("phase          |   GMACs | cycles(M) | DRAM MB | ms    | mJ");
+        for ph in ALL_PHASES {
+            let c = r.phase(ph);
+            println!(
+                "{:14} | {:7.2} | {:9.1} | {:7.1} | {:5.1} | {:5.1}",
+                format!("{ph:?}"),
+                c.macs / 1e9,
+                c.cycles / 1e6,
+                c.dram_words * 2.0 / 1e6,
+                c.seconds * 1e3,
+                c.energy.total_joules() * 1e3,
+            );
+        }
+        println!(
+            "total: {:.1} ms, {:.1} mJ, avg power {:.3} W",
+            r.step_seconds() * 1e3,
+            r.total_energy_j() * 1e3,
+            r.avg_power_w(&cfg)
+        );
+    }
+
+    // ablation: same silicon, dataflow features toggled off
+    println!("\n### ablation — EfficientGrad array running plain BP (isolates dataflow)");
+    let rows = efficientgrad::accel::compare(
+        &[&efficientgrad_bp_ablation(), &efficientgrad()],
+        &wl,
+        surv,
+    );
+    for r in &rows {
+        println!(
+            "{:24} {:7.1} ms  {:.3} W  -> {:.2}x throughput, {:.2}x power",
+            r.name, r.step_ms, r.power_w, r.norm_throughput, r.norm_power
+        );
+    }
+    Ok(())
+}

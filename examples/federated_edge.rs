@@ -1,0 +1,88 @@
+//! Federated edge training — the paper's §1 deployment scenario.
+//!
+//! A leader coordinates N edge workers (each with its own PJRT client,
+//! private data shard and EfficientGrad train loop), aggregating with
+//! examples-weighted FedAvg each round. Reports accuracy per round,
+//! communication volume, and per-worker (simulated) device time with an
+//! optional straggler injection.
+//!
+//!     cargo run --release --example federated_edge [-- --workers 4 --rounds 6 --non-iid]
+
+use anyhow::Result;
+
+use efficientgrad::cli::{Args, FlagSpec};
+use efficientgrad::config::{FedConfig, TrainConfig};
+use efficientgrad::coordinator::Leader;
+use efficientgrad::manifest::Manifest;
+use efficientgrad::runtime::Runtime;
+
+fn main() -> Result<()> {
+    efficientgrad::util::logging::init();
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let specs = vec![
+        FlagSpec { name: "workers", help: "edge workers", takes_value: true, default: Some("4") },
+        FlagSpec { name: "rounds", help: "federated rounds", takes_value: true, default: Some("6") },
+        FlagSpec { name: "local-steps", help: "steps per round per worker", takes_value: true, default: Some("8") },
+        FlagSpec { name: "non-iid", help: "label-skewed shards", takes_value: false, default: None },
+        FlagSpec { name: "straggler-prob", help: "straggler probability", takes_value: true, default: Some("0.25") },
+        FlagSpec { name: "model", help: "model", takes_value: true, default: Some("convnet_t") },
+    ];
+    let args = Args::parse(&raw, &specs)?;
+
+    let cfg = FedConfig {
+        workers: args.get_usize("workers")?.unwrap(),
+        rounds: args.get_usize("rounds")?.unwrap(),
+        local_steps: args.get_usize("local-steps")?.unwrap(),
+        iid: !args.get_bool("non-iid"),
+        straggler_prob: args.get_f64("straggler-prob")?.unwrap(),
+        straggler_slowdown: 4.0,
+        train: TrainConfig {
+            model: args.get("model").unwrap().to_string(),
+            mode: "efficientgrad".into(),
+            train_examples: 1024,
+            test_examples: 256,
+            ..Default::default()
+        },
+    };
+
+    println!(
+        "== federated: {} workers x {} rounds x {} local steps ({} shards) ==",
+        cfg.workers,
+        cfg.rounds,
+        cfg.local_steps,
+        if cfg.iid { "IID" } else { "non-IID" }
+    );
+
+    let rt = Runtime::cpu()?;
+    let manifest = Manifest::load(&efficientgrad::artifacts_dir())?;
+    let mut leader = Leader::new(&rt, &manifest, cfg.clone())?;
+    let summary = leader.run()?;
+    leader.shutdown();
+
+    println!("\nround | mean loss | eval acc | sparsity | worker secs (sim)");
+    for r in &summary.rounds {
+        let times: Vec<String> = r.worker_secs.iter().map(|t| format!("{t:.2}")).collect();
+        println!(
+            "{:5} | {:9.4} | {:8.4} | {:8.3} | [{}]",
+            r.round,
+            r.mean_loss,
+            r.eval_acc,
+            r.mean_sparsity,
+            times.join(", ")
+        );
+    }
+    println!(
+        "\nfinal acc {:.4}; comms: {:.1} MB up + {:.1} MB down \
+         (params only — EfficientGrad's fixed feedback B never travels: \
+         it is re-derived from the shared seed on-device)",
+        summary.final_acc,
+        summary.total_upload_bytes as f64 / 1e6,
+        summary.total_download_bytes as f64 / 1e6
+    );
+    anyhow::ensure!(
+        summary.rounds.last().unwrap().mean_loss < summary.rounds[0].mean_loss,
+        "federated training made no progress"
+    );
+    println!("FEDERATED RUN OK");
+    Ok(())
+}

@@ -1,0 +1,188 @@
+"""AOT export: lower every train/eval/probe computation to HLO *text* +
+write manifest.json describing the artifact interface for the Rust runtime.
+
+HLO text (not `.serialize()`) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the `xla` crate) rejects; the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Python runs ONCE, here. Nothing in this package is imported at runtime.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from . import feedback_modes as fm
+from . import models as M
+from .train_step import make_forward, make_probe, make_train_step
+
+# Default export set: model -> (batch, modes). ResNet-18 is the paper's
+# network but costs minutes of XLA CPU compile per mode; exported with
+# --full (DESIGN.md substitutions).
+DEFAULT_EXPORTS = {
+    "convnet_t": {"batch": 16, "modes": ["bp", "efficientgrad"]},
+    "convnet_s": {"batch": 32, "modes": list(fm.MODES)},
+    "resnet8": {"batch": 32, "modes": ["bp", "signsym", "efficientgrad"]},
+}
+FULL_EXPORTS = {
+    **DEFAULT_EXPORTS,
+    "resnet18": {"batch": 16, "modes": ["bp", "efficientgrad"]},
+}
+
+NUM_CLASSES = 10
+IMAGE = (32, 32, 3)
+PRUNE_RATE = 0.9  # paper's operating point: ~90% of the band pruned
+
+
+def to_hlo_text(lowered) -> str:
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _spec_entry(spec: Dict[str, Any]) -> Dict[str, Any]:
+    return {
+        "name": spec["name"],
+        "shape": spec["shape"],
+        "dtype": "f32",
+        "init": spec["init"],
+    }
+
+
+def export_model(model_name: str, batch: int, modes: List[str], outdir: str):
+    model = M.build(model_name, NUM_CLASSES)
+    pspecs = model.param_specs()
+    fspecs = model.feedback_specs()
+    p_sds = [_sds(s["shape"]) for s in pspecs]
+    f_sds = [_sds(s["shape"]) for s in fspecs]
+    img_sds = _sds((batch, *IMAGE))
+    lbl_sds = _sds((batch,), jnp.int32)
+    scalar = _sds((), jnp.float32)
+    iscalar = _sds((), jnp.int32)
+
+    pruned_layers = len(fspecs)  # one sparsity stat per feedback transport
+    entry: Dict[str, Any] = {
+        "params": [_spec_entry(s) for s in pspecs],
+        "feedback": [_spec_entry(s) for s in fspecs],
+        "batch": batch,
+        "image": list(IMAGE),
+        "num_classes": NUM_CLASSES,
+        "prune_rate": PRUNE_RATE,
+        "param_count": int(sum(int(jnp.prod(jnp.asarray(s["shape"]))) for s in pspecs)),
+        "layers": M.layer_descriptor(model, batch, IMAGE),
+        "artifacts": {},
+    }
+
+    def emit(tag: str, lowered, inputs: List[str], outputs: List[str]):
+        text = to_hlo_text(lowered)
+        fname = f"{model_name}_{tag}.hlo.txt"
+        path = os.path.join(outdir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        entry["artifacts"][tag] = {
+            "file": fname,
+            "inputs": inputs,
+            "outputs": outputs,
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+        }
+        print(f"  wrote {fname} ({len(text)/1e6:.2f} MB)", flush=True)
+
+    pnames = [s["name"] for s in pspecs]
+    mnames = [f"m.{n}" for n in pnames]
+    fnames = [s["name"] for s in fspecs]
+
+    # --- train steps, one per mode ---------------------------------------
+    for mode in modes:
+        step = make_train_step(
+            model, mode, PRUNE_RATE if mode == "efficientgrad" else 0.0
+        )
+        # keep_unused=True: modes that ignore some inputs (bp ignores B
+        # and seed, non-pruning modes ignore seed) must still expose the
+        # full uniform signature the Rust runtime feeds.
+        lowered = jax.jit(step, keep_unused=True).lower(
+            p_sds, p_sds, f_sds, img_sds, lbl_sds, scalar, scalar, iscalar
+        )
+        n_sp = max(pruned_layers, 1)
+        emit(
+            f"train_{mode}",
+            lowered,
+            pnames + mnames + fnames + ["images", "labels", "lr", "mu", "seed"],
+            [f"out.{n}" for n in pnames]
+            + [f"out.m.{n}" for n in pnames]
+            + ["loss", "acc", f"sparsity[{n_sp}]"],
+        )
+
+    # --- forward (eval) ---------------------------------------------------
+    fwd = make_forward(model)
+    emit("fwd", jax.jit(fwd, keep_unused=True).lower(p_sds, img_sds), pnames + ["images"], ["logits"])
+
+    # --- Fig.3 probe --------------------------------------------------------
+    probe = make_probe(model, PRUNE_RATE)
+    emit(
+        "probe",
+        jax.jit(probe, keep_unused=True).lower(p_sds, f_sds, img_sds, lbl_sds, iscalar),
+        pnames + fnames + ["images", "labels", "seed"],
+        [
+            f"angles[{len(pnames)}]",
+            f"stds[{len(pnames)}]",
+            "sparsity",
+            "hist[64]",
+            "loss",
+        ],
+    )
+
+    return entry
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="legacy single-file stamp (Makefile)")
+    ap.add_argument("--full", action="store_true", help="also export resnet18")
+    ap.add_argument("--models", nargs="*", default=None, help="subset of models")
+    args = ap.parse_args()
+
+    outdir = args.outdir
+    if args.out:
+        outdir = os.path.dirname(os.path.abspath(args.out)) or "."
+    os.makedirs(outdir, exist_ok=True)
+
+    exports = FULL_EXPORTS if args.full else DEFAULT_EXPORTS
+    if args.models:
+        exports = {k: v for k, v in exports.items() if k in args.models}
+
+    manifest: Dict[str, Any] = {"version": 1, "prune_rate": PRUNE_RATE, "models": {}}
+    for name, cfg in exports.items():
+        print(f"exporting {name} (batch={cfg['batch']}, modes={cfg['modes']})", flush=True)
+        manifest["models"][name] = export_model(name, cfg["batch"], cfg["modes"], outdir)
+
+    mpath = os.path.join(outdir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote {mpath}")
+
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write("# stamp; artifacts enumerated in manifest.json\n")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,65 @@
+"""Feedback-alignment mode registry (paper §2, §4.1 and Fig. 5a).
+
+Each mode names the modulatory operand used in Algo. 1 phase 2 in place of
+the transposed weights, i.e. the `W_eff` of
+
+    delta_l = W_eff_{l+1} (*) delta_{l+1} ⊙ sigma'(a_l)
+
+| mode          | W_eff                           | source              |
+|---------------|---------------------------------|---------------------|
+| bp            | W                               | backprop (baseline) |
+| fa            | B  (fixed random)               | Lillicrap et al. 16 |
+| binary        | sign(B) · rms(B)                | Han et al. TCAS-I 19|
+| sign          | sign(W) · rms(W)                | Liao et al. AAAI 16 |
+| signsym       | sign(W) ⊙ |B|                   | paper eq. 2         |
+| efficientgrad | sign(W) ⊙ |B| + stoch. pruning  | paper eq. 2 + 3     |
+
+`binary`/`sign` carry an in-graph scalar magnitude (the operand's RMS) so
+their transport keeps the same energy scale as the matrix it replaces —
+without it those baselines diverge immediately at CNN depth, which is a
+stronger failure than the accuracy gap the paper reports.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+MODES = ("bp", "fa", "binary", "sign", "signsym", "efficientgrad")
+
+# Modes whose backward phase never touches W's magnitudes — on the
+# accelerator this is what eliminates the transposed-weight DRAM fetch
+# (signs ride along with the forward-resident scratchpad copy).
+SIGN_ONLY_MODES = ("sign", "signsym", "efficientgrad")
+
+
+def needs_feedback(mode: str) -> bool:
+    """Does the mode require a fixed random feedback tensor B?"""
+    return mode in ("fa", "binary", "signsym", "efficientgrad")
+
+
+def prunes(mode: str) -> bool:
+    return mode == "efficientgrad"
+
+
+def effective_feedback(mode: str, w: jax.Array, b: jax.Array | None) -> jax.Array:
+    """Materialize W_eff for transports that don't use the fused kernel
+    (BP, fa, binary, sign). signsym/efficientgrad go through the fused
+    sign_matmul / sign_feedback_matmul kernels instead and never call
+    this."""
+    if mode == "bp":
+        return w
+    if mode == "fa":
+        assert b is not None
+        return b
+    if mode == "binary":
+        assert b is not None
+        rms = jnp.sqrt(jnp.mean(jnp.square(b)))
+        return jnp.sign(b) * rms
+    if mode == "sign":
+        rms = jnp.sqrt(jnp.mean(jnp.square(w)))
+        return jnp.sign(w) * rms
+    if mode in ("signsym", "efficientgrad"):
+        assert b is not None
+        return jnp.sign(w) * jnp.abs(b)
+    raise ValueError(f"unknown feedback mode {mode!r}")

@@ -1,0 +1,12 @@
+"""L1: Pallas kernels for EfficientGrad's compute hot-spots.
+
+All kernels run interpret=True (CPU PJRT cannot execute Mosaic
+custom-calls); block shapes are still chosen MXU/VMEM-shaped so the
+structural perf audit in DESIGN.md #perf is meaningful.
+"""
+
+from .matmul import matmul  # noqa: F401
+from .feedback import sign_feedback_matmul  # noqa: F401
+from .prune import stochastic_prune, tau_from_rate  # noqa: F401
+from .update import sgd_momentum  # noqa: F401
+from .conv2d import conv2d  # noqa: F401

@@ -1,0 +1,38 @@
+"""Kernel backend toggle.
+
+`pallas` (default) routes all L1 FLOPs through the Pallas kernels; `ref`
+routes them through the pure-jnp oracles in ref.py. The ref path exists so
+that (a) pytest can diff the two numerically at the model level and (b)
+jax.grad can build autodiff references (pallas_call has no VJP rule for
+our scratch-accumulator kernels — by design, the paper's backward is
+manual anyway).
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+_BACKEND = "pallas"
+
+VALID = ("pallas", "ref")
+
+
+def get() -> str:
+    return _BACKEND
+
+
+def set_backend(name: str) -> None:
+    global _BACKEND
+    if name not in VALID:
+        raise ValueError(f"backend must be one of {VALID}, got {name!r}")
+    _BACKEND = name
+
+
+@contextlib.contextmanager
+def use(name: str):
+    prev = get()
+    set_backend(name)
+    try:
+        yield
+    finally:
+        set_backend(prev)

@@ -1,0 +1,138 @@
+"""L1: convolution through the Pallas matmul kernel (im2col lowering).
+
+The paper's accelerator keeps the weight row stationary in the PE
+scratchpad and streams activation rows through the systolic array; the
+algebraic content of that schedule is exactly `patches @ W` where
+`patches` is the im2col matrix. We extract patches with
+`conv_general_dilated_patches` (pure data movement — XLA fuses it into
+gather/reshape ops) and push *all* FLOPs through the tiled MXU matmul in
+`matmul.py`, so the compute hot-spot of forward, error-transport and
+weight-gradient phases is a single, optimizable kernel.
+
+Layouts: activations NHWC, weights HWIO, as in `ref.conv2d_nhwc`.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from .matmul import matmul
+
+Padding = Union[str, Sequence[Tuple[int, int]]]
+
+
+def _patches(x: jax.Array, kh: int, kw: int, stride: int, padding: Padding):
+    """im2col: NHWC -> [N, OH, OW, KH*KW*C] (feature dim ordered C-major
+    per spatial offset, matching conv_general_dilated_patches' CHW->...
+    convention; we reorder W to match in `conv2d`)."""
+    return jax.lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(kh, kw),
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def conv2d(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    stride: int = 1,
+    padding: Padding = "SAME",
+) -> jax.Array:
+    """NHWC conv via im2col + Pallas matmul. w: [KH, KW, CI, CO]."""
+    kh, kw, ci, co = w.shape
+    p = _patches(x, kh, kw, stride, padding)
+    n, oh, ow, feat = p.shape
+    # conv_general_dilated_patches emits features as [CI, KH, KW] blocks
+    # (channel-major); permute W accordingly: HWIO -> [CI, KH, KW, CO].
+    wmat = jnp.transpose(w, (2, 0, 1, 3)).reshape(ci * kh * kw, co)
+    assert feat == ci * kh * kw, (feat, ci, kh, kw)
+    out = matmul(p.reshape(n * oh * ow, feat), wmat)
+    return out.reshape(n, oh, ow, co)
+
+
+def conv2d_input_grad(
+    dy: jax.Array,
+    w_eff: jax.Array,
+    x_shape: Tuple[int, ...],
+    *,
+    stride: int = 1,
+    padding: Padding = "SAME",
+) -> jax.Array:
+    """Error transport through a conv: dx = conv_transpose(dy, w_eff).
+
+    `w_eff` is whichever modulatory operand the feedback mode prescribes
+    (W for BP, sign(W)·|B| for EfficientGrad, ...). Implemented as a
+    *full* convolution of the (stride-dilated) dy with the spatially
+    rotated kernel, whose FLOPs again run through the Pallas matmul.
+    """
+    kh, kw, ci, co = w_eff.shape
+    n, ih, iw, _ = x_shape
+    # resolve SAME/VALID padding of the forward conv into explicit lo/hi
+    if padding == "SAME":
+        oh = -(-ih // stride)
+        pad_h = max((oh - 1) * stride + kh - ih, 0)
+        ow = -(-iw // stride)
+        pad_w = max((ow - 1) * stride + kw - iw, 0)
+        pads = ((pad_h // 2, pad_h - pad_h // 2), (pad_w // 2, pad_w - pad_w // 2))
+    elif padding == "VALID":
+        pads = ((0, 0), (0, 0))
+    else:
+        pads = tuple(padding)  # type: ignore[assignment]
+    # transposed conv = conv of lhs-dilated dy with rotated kernel,
+    # padding (k-1-lo, k-1-hi)
+    rot = jnp.transpose(w_eff[::-1, ::-1, :, :], (0, 1, 3, 2))  # HW(O)(I)
+    dyd = dy
+    if stride > 1:
+        # lhs dilation: insert stride-1 zeros between dy rows/cols
+        n_, oh_, ow_, co_ = dy.shape
+        z = jnp.zeros((n_, oh_, stride, ow_, stride, co_), dy.dtype)
+        z = z.at[:, :, 0, :, 0, :].set(dy)
+        dyd = z.reshape(n_, oh_ * stride, ow_ * stride, co_)[
+            :, : (oh_ - 1) * stride + 1, : (ow_ - 1) * stride + 1, :
+        ]
+    tp = (
+        (kh - 1 - pads[0][0], ih + pads[0][0] - 1 - (dyd.shape[1] - 1) - (kh - 1 - pads[0][0]) + kh - 1),
+        (kw - 1 - pads[1][0], iw + pads[1][0] - 1 - (dyd.shape[2] - 1) - (kw - 1 - pads[1][0]) + kw - 1),
+    )
+    # simpler: compute required hi padding so output is exactly (ih, iw)
+    lo_h = kh - 1 - pads[0][0]
+    lo_w = kw - 1 - pads[1][0]
+    hi_h = ih - (dyd.shape[1] + lo_h - kh + 1)
+    hi_w = iw - (dyd.shape[2] + lo_w - kw + 1)
+    del tp
+    p = _patches(dyd, kh, kw, 1, ((lo_h, hi_h), (lo_w, hi_w)))
+    n_, oh_, ow_, feat = p.shape
+    wmat = jnp.transpose(rot, (2, 0, 1, 3)).reshape(co * kh * kw, ci)
+    dx = matmul(p.reshape(n_ * oh_ * ow_, feat), wmat)
+    return dx.reshape(n_, oh_, ow_, ci)
+
+
+def conv2d_weight_grad(
+    x: jax.Array,
+    dy: jax.Array,
+    w_shape: Tuple[int, ...],
+    *,
+    stride: int = 1,
+    padding: Padding = "SAME",
+) -> jax.Array:
+    """Phase-3 weight gradient: dW[kh,kw,ci,co] = patches(x)^T @ dy.
+
+    Same im2col matrix as the forward pass (the accelerator reuses the
+    activation rows still resident in the GLB), contracted against dy over
+    the N*OH*OW axis via the Pallas matmul.
+    """
+    kh, kw, ci, co = w_shape
+    p = _patches(x, kh, kw, stride, padding)
+    n, oh, ow, feat = p.shape
+    pm = p.reshape(n * oh * ow, feat)
+    dym = dy.reshape(n * oh * ow, co)
+    # [feat, co] = pm^T @ dym ; transpose via matmul operand order
+    dw = matmul(pm.T, dym)
+    # feat is [CI, KH, KW]-ordered; back to HWIO
+    return jnp.transpose(dw.reshape(ci, kh, kw, co), (1, 2, 0, 3))

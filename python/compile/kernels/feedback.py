@@ -1,0 +1,181 @@
+"""L1 Pallas kernel: sign-symmetric feedback error transport (paper eq. 2).
+
+Computes, in one fused kernel,
+
+    delta_in[M, I] = delta_out[M, O] @ (sign(W) * |B|)^T
+
+without ever materializing the effective feedback matrix
+`B_eff = sign(W) ⊙ |B|` in HBM — the sign/abs/multiply happens on the VMEM
+block right before it feeds the MXU. This mirrors the paper's hardware
+point: the backward phase reads the *same* resident weight scratchpad as
+the forward phase (only its signs) plus the fixed feedback magnitudes, so
+the transposed-weight DRAM fetch of standard BP disappears. The L3
+accelerator simulator charges memory traffic accordingly.
+
+Grid layout: (M/bm, I/bi, O/bo); the O dimension is the contraction. The
+W/B blocks are indexed (i, o) — i.e. *untransposed* storage — and the
+kernel contracts against dimension O via dot_general, so no transposed
+copy of W or B exists anywhere in the pipeline.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import _round_up, _vmem
+
+# interpret-mode tiles; see matmul.py for the rationale (TPU deployment
+# would use 128x128x128).
+DEFAULT_BLOCK_M = 16384
+DEFAULT_BLOCK_I = 512
+DEFAULT_BLOCK_O = 2048
+
+
+def _sign_feedback_kernel(dy_ref, w_ref, b_ref, o_ref, acc_ref, *, n_o: int):
+    o = pl.program_id(2)
+
+    @pl.when(o == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Fused construction of the effective feedback block (never hits HBM):
+    beff = jnp.sign(w_ref[...]) * jnp.abs(b_ref[...])  # [bi, bo]
+    # delta[M,O] @ beff[I,O]^T  — contract on O without materializing a
+    # transpose: dot_general with rhs contracting dim 1.
+    acc_ref[...] += jax.lax.dot_general(
+        dy_ref[...],
+        beff,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(o == n_o - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _pad2(x, m0, m1):
+    p0 = (-x.shape[0]) % m0
+    p1 = (-x.shape[1]) % m1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+def sign_feedback_matmul(
+    dy: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    *,
+    block_m: int = DEFAULT_BLOCK_M,
+    block_i: int = DEFAULT_BLOCK_I,
+    block_o: int = DEFAULT_BLOCK_O,
+) -> jax.Array:
+    """`dy @ (sign(w) * |b|).T` with w, b of shape [I, O], dy of [M, O]."""
+    from . import backend, ref as _ref
+
+    if backend.get() == "ref":
+        return _ref.sign_feedback_matmul(dy, w, b)
+    if w.shape != b.shape:
+        raise ValueError(f"W/B shape mismatch: {w.shape} vs {b.shape}")
+    if dy.shape[1] != w.shape[1]:
+        raise ValueError(f"contraction mismatch: dy {dy.shape} vs W {w.shape}")
+    m, o = dy.shape
+    i = w.shape[0]
+
+    bm = min(block_m, _round_up(m, 8))
+    bi = min(block_i, _round_up(i, 8))
+    bo = min(block_o, _round_up(o, 8))
+
+    dyp = _pad2(dy, bm, bo)
+    wp = _pad2(w, bi, bo)
+    bp = _pad2(b, bi, bo)
+    mp, op = dyp.shape
+    ip = wp.shape[0]
+    n_o = op // bo
+
+    out = pl.pallas_call(
+        functools.partial(_sign_feedback_kernel, n_o=n_o),
+        grid=(mp // bm, ip // bi, n_o),
+        in_specs=[
+            pl.BlockSpec((bm, bo), lambda mi, ii, oi: (mi, oi)),
+            pl.BlockSpec((bi, bo), lambda mi, ii, oi: (ii, oi)),
+            pl.BlockSpec((bi, bo), lambda mi, ii, oi: (ii, oi)),
+        ],
+        out_specs=pl.BlockSpec((bm, bi), lambda mi, ii, oi: (mi, ii)),
+        out_shape=jax.ShapeDtypeStruct((mp, ip), dy.dtype),
+        scratch_shapes=[_vmem((bm, bi), jnp.float32)],
+        interpret=True,
+    )(dyp, wp, bp)
+    return out[:m, :i]
+
+
+def _sign_matmul_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    beff = jnp.sign(w_ref[...]) * jnp.abs(b_ref[...])
+    acc_ref[...] += jnp.dot(
+        x_ref[...], beff, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == n_k - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def sign_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    *,
+    block_m: int = DEFAULT_BLOCK_M,
+    block_n: int = DEFAULT_BLOCK_I,
+    block_k: int = DEFAULT_BLOCK_O,
+) -> jax.Array:
+    """`x @ (sign(w) * |b|)` with w, b of shape [K, N], x of [M, K].
+
+    Untransposed sibling of `sign_feedback_matmul`, used by the conv error
+    transport after im2col (the rotated/reshaped kernel matrix commutes
+    with sign/abs, so the fusion stays valid — see layers.py)."""
+    from . import backend, ref as _ref
+
+    if backend.get() == "ref":
+        beff = jnp.sign(w) * jnp.abs(b)
+        return _ref.matmul(x, beff)
+    if w.shape != b.shape:
+        raise ValueError(f"W/B shape mismatch: {w.shape} vs {b.shape}")
+    if x.shape[1] != w.shape[0]:
+        raise ValueError(f"contraction mismatch: x {x.shape} vs W {w.shape}")
+    m, k = x.shape
+    n = w.shape[1]
+    bm = min(block_m, _round_up(m, 8))
+    bn = min(block_n, _round_up(n, 8))
+    bk = min(block_k, _round_up(k, 8))
+    xp = _pad2(x, bm, bk)
+    wp = _pad2(w, bk, bn)
+    bpad = _pad2(b, bk, bn)
+    mp, kp = xp.shape
+    np_ = wp.shape[1]
+    n_k = kp // bk
+    out = pl.pallas_call(
+        functools.partial(_sign_matmul_kernel, n_k=n_k),
+        grid=(mp // bm, np_ // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        scratch_shapes=[_vmem((bm, bn), jnp.float32)],
+        interpret=True,
+    )(xp, wp, bpad)
+    return out[:m, :n]

@@ -1,0 +1,162 @@
+"""L1 Pallas kernel: MXU-tiled matmul.
+
+This is the compute hot-spot of EfficientGrad: every one of the three
+training phases (forward conv via im2col, backward error transport via the
+sign-symmetric feedback, and weight-gradient accumulation) is expressed as a
+matmul over this kernel.
+
+TPU adaptation of the paper's row-stationary ASIC dataflow (DESIGN.md
+#hardware-adaptation): the grid iterates output tiles; the BlockSpec index
+maps keep an operand block resident in VMEM across the contraction
+dimension, playing the role of the PE scratchpad ("reuse data scratch-pad"
+in Fig. 4 of the paper). Block shapes default to the MXU-native 128x128.
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls, and interpret mode lowers the kernel to plain HLO so the AOT
+artifact executes on the Rust CPU client.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-native tile: the configuration a real TPU deployment would use, and
+# the one audited for VMEM footprint / MXU utilization in DESIGN.md #perf.
+TPU_BLOCK_M = 128
+TPU_BLOCK_N = 128
+TPU_BLOCK_K = 128
+
+# Interpret-mode (CPU PJRT) tiles. Interpret lowers each grid step to a
+# loop iteration with dynamic slices; with 128-cubed tiles a 32x32
+# ConvNet-S conv becomes ~2000 iterations of sub-microsecond dots and the
+# AOT artifact runs ~50x slower than the math requires (EXPERIMENTS.md
+# #perf, L1 iteration 1). Large blocks keep the SAME kernel structure
+# (grid + BlockSpec + VMEM accumulator) at a loop count XLA CPU digests.
+DEFAULT_BLOCK_M = 16384
+DEFAULT_BLOCK_N = 512
+DEFAULT_BLOCK_K = 2048
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_k: int):
+    """One (bm, bn) output tile; grid dim 2 walks the K blocks.
+
+    acc_ref is a VMEM scratch accumulator in f32 (the MXU accumulates in
+    f32 even for bf16 inputs); the output block is written once on the
+    last K step, which keeps HBM traffic at exactly one write per tile.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == n_k - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _pad_to(x: jax.Array, mult0: int, mult1: int) -> jax.Array:
+    p0 = (-x.shape[0]) % mult0
+    p1 = (-x.shape[1]) % mult1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+def matmul(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    block_m: int = DEFAULT_BLOCK_M,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_k: int = DEFAULT_BLOCK_K,
+) -> jax.Array:
+    """`x @ w` through the Pallas tile kernel.
+
+    Shapes are padded up to block multiples and the result sliced back, so
+    arbitrary (M, K) x (K, N) work. dtype follows x.
+    """
+    from . import backend, ref as _ref
+
+    if backend.get() == "ref":
+        return _ref.matmul(x, w)
+    if x.ndim != 2 or w.ndim != 2:
+        raise ValueError(f"matmul expects 2-D operands, got {x.shape} @ {w.shape}")
+    if x.shape[1] != w.shape[0]:
+        raise ValueError(f"contraction mismatch: {x.shape} @ {w.shape}")
+    m, k = x.shape
+    _, n = w.shape
+
+    # Small problems: tile to the problem itself (single grid step) instead
+    # of padding 128x — interpret-mode padding is pure waste.
+    bm = min(block_m, _round_up(m, 8))
+    bn = min(block_n, _round_up(n, 8))
+    bk = min(block_k, _round_up(k, 8))
+
+    xp = _pad_to(x, bm, bk)
+    wp = _pad_to(w, bk, bn)
+    mp, kp = xp.shape
+    np_ = wp.shape[1]
+    n_k = kp // bk
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=n_k),
+        grid=(mp // bm, np_ // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        scratch_shapes=[_vmem((bm, bn), jnp.float32)],
+        interpret=True,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)
+
+
+def _round_up(v: int, m: int) -> int:
+    return ((v + m - 1) // m) * m
+
+
+def vmem_footprint_bytes(
+    block_m: int = TPU_BLOCK_M,
+    block_n: int = TPU_BLOCK_N,
+    block_k: int = TPU_BLOCK_K,
+    bytes_per_el: int = 4,
+) -> int:
+    """Static VMEM budget of one grid step: x block + w block + out block +
+    f32 accumulator. Audited against the ~16 MiB/core VMEM in DESIGN.md."""
+    return bytes_per_el * (
+        block_m * block_k + block_k * block_n + block_m * block_n
+    ) + 4 * block_m * block_n
+
+
+def mxu_utilization_estimate(
+    m: int,
+    n: int,
+    k: int,
+    block_m: int = TPU_BLOCK_M,
+    block_n: int = TPU_BLOCK_N,
+    block_k: int = TPU_BLOCK_K,
+) -> float:
+    """Fraction of MXU issue slots doing useful work = real FLOPs over
+    padded FLOPs. This is the structural metric we optimize in interpret
+    mode (wallclock on CPU is not a TPU proxy)."""
+    mp = _round_up(m, min(block_m, _round_up(m, 8)))
+    np_ = _round_up(n, min(block_n, _round_up(n, 8)))
+    kp = _round_up(k, min(block_k, _round_up(k, 8)))
+    return (m * n * k) / float(mp * np_ * kp)

@@ -1,0 +1,103 @@
+"""L1 Pallas kernel: stochastic gradient pruning (paper eq. 3).
+
+Given error gradients delta, a threshold tau and per-element uniform noise
+r ~ U[0,1):
+
+    delta_hat = delta                     if |delta| >  tau
+              = tau * sign(delta)         if tau >= |delta| >= r * tau
+              = 0                         otherwise
+
+The rule is expectation-preserving: an element with |delta| = a <= tau
+survives with probability a/tau and is rounded up to magnitude tau when it
+survives, so E[delta_hat] = a * sign(delta) = E[delta].  That invariant is
+what lets the paper discard the (1 - P) tail of the long-tailed gradient
+distribution without moving the SGD fixed point; both the pytest suite and
+the Rust `sparsity` module re-check it.
+
+This is a VPU-shaped elementwise kernel: 2-D tiles, no MXU. On the paper's
+ASIC the comparison gates the MAC; on TPU the win is the pruned-dense
+tensor's downstream FLOP/HBM reduction, which the L3 simulator accounts.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# elements per grid step (flattened view); large so interpret-mode grid
+# loops stay short (see matmul.py)
+DEFAULT_BLOCK = 1 << 16
+
+
+def _prune_kernel(d_ref, r_ref, tau_ref, o_ref):
+    d = d_ref[...]
+    r = r_ref[...]
+    tau = tau_ref[0]
+    mag = jnp.abs(d)
+    keep = mag > tau
+    # stochastic band: tau >= |d| >= r*tau  <=>  |d|/tau >= r
+    promote = jnp.logical_and(jnp.logical_not(keep), mag >= r * tau)
+    promoted = jnp.sign(d) * tau
+    o_ref[...] = jnp.where(keep, d, jnp.where(promote, promoted, 0.0)).astype(
+        o_ref.dtype
+    )
+
+
+def stochastic_prune(
+    delta: jax.Array,
+    rand: jax.Array,
+    tau: jax.Array,
+    *,
+    block: int = DEFAULT_BLOCK,
+) -> jax.Array:
+    """Apply eq. 3 elementwise. `rand` must be U[0,1) with delta's shape;
+    `tau` is a scalar (dynamic — computed from the live gradient std and
+    the configured pruning rate P, eq. 5)."""
+    from . import backend, ref as _ref
+
+    if backend.get() == "ref":
+        return _ref.stochastic_prune(delta, rand, tau)
+    if delta.shape != rand.shape:
+        raise ValueError(f"rand shape {rand.shape} != delta shape {delta.shape}")
+    shape = delta.shape
+    flat = delta.reshape(-1)
+    rflat = rand.reshape(-1)
+    n = flat.shape[0]
+    bl = min(block, n)
+    pad = (-n) % bl
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+        rflat = jnp.pad(rflat, (0, pad), constant_values=1.0)
+    tau_arr = jnp.reshape(tau.astype(jnp.float32), (1,))
+    out = pl.pallas_call(
+        _prune_kernel,
+        grid=((n + pad) // bl,),
+        in_specs=[
+            pl.BlockSpec((bl,), lambda i: (i,)),
+            pl.BlockSpec((bl,), lambda i: (i,)),
+            # tau is broadcast to every grid step: block index 0 always.
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bl,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n + pad,), delta.dtype),
+        interpret=True,
+    )(flat, rflat, tau_arr)
+    return out[:n].reshape(shape)
+
+
+def tau_from_rate(delta: jax.Array, prune_rate: jax.Array | float) -> jax.Array:
+    """Paper eq. 5: tau = ndtri((1+P)/2) * sigma(delta).
+
+    Under the paper's empirical observation that delta is zero-mean
+    long-tailed normal (Fig. 3a), pruning everything below tau removes a
+    fraction P of elements (eq. 4). sigma is the live standard deviation of
+    the gradient tensor, so tau adapts per layer per step.
+    """
+    from jax.scipy.special import ndtri
+
+    p = jnp.clip(jnp.asarray(prune_rate, jnp.float32), 0.0, 0.999999)
+    sigma = jnp.std(delta.astype(jnp.float32))
+    return ndtri((1.0 + p) / 2.0) * sigma

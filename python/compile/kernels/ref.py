@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for every L1 Pallas kernel.
+
+These are the CORE correctness signal: pytest (and hypothesis sweeps)
+assert kernel-vs-ref allclose across shapes and dtypes before anything is
+AOT-exported. Keep them boring and obviously-correct.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    return jnp.matmul(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def sign_feedback_matmul(dy: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """dy @ (sign(w) * |b|).T — eq. 2's transport, materialized naively."""
+    beff = jnp.sign(w) * jnp.abs(b)
+    return jnp.matmul(dy, beff.T, preferred_element_type=jnp.float32).astype(
+        dy.dtype
+    )
+
+
+def stochastic_prune(
+    delta: jax.Array, rand: jax.Array, tau: jax.Array
+) -> jax.Array:
+    """Paper eq. 3, straight from the case split."""
+    mag = jnp.abs(delta)
+    keep = mag > tau
+    promote = jnp.logical_and(~keep, mag >= rand * tau)
+    return jnp.where(
+        keep, delta, jnp.where(promote, jnp.sign(delta) * tau, 0.0)
+    ).astype(delta.dtype)
+
+
+def sgd_momentum(w, v, g, lr, momentum):
+    v2 = momentum * v + g
+    return w - lr * v2, v2
+
+
+def conv2d_nhwc(x: jax.Array, w: jax.Array, stride: int, padding):
+    """Reference convolution, NHWC x HWIO -> NHWC, via lax."""
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )

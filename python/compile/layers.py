@@ -1,0 +1,491 @@
+"""L2: layer definitions with *manual* forward/backward (Algo. 1).
+
+We do NOT use jax.grad for the training path: the whole point of the paper
+is a backward phase that is not the adjoint of the forward phase (feedback
+alignment transports the error through a fixed random operand). Each layer
+implements
+
+    forward(params, x)            -> y, cache
+    backward(params, feedback, cache, dy, ctx) -> dx, grads
+
+where `ctx` carries the feedback mode, pruning configuration and a PRNG
+key. Gradients w.r.t. parameters (phase 3) are always the *true* local
+gradients — only the inter-layer error transport (phase 2) is replaced,
+exactly as in the paper.
+
+All dense/conv FLOPs route through the L1 Pallas kernels.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import conv2d as k_conv
+from .kernels.conv2d import conv2d_input_grad, conv2d_weight_grad, _patches
+from .kernels.feedback import sign_feedback_matmul, sign_matmul
+from .kernels.matmul import matmul
+from .kernels.prune import stochastic_prune, tau_from_rate
+from . import feedback_modes as fm
+
+BN_EPS = 1e-5
+
+
+@dataclasses.dataclass(frozen=True)
+class BackwardCtx:
+    """Static + dynamic context threaded through the backward walk."""
+
+    mode: str  # one of feedback_modes.MODES
+    prune_rate: float  # paper's P (eq. 4); only used when mode prunes
+    key: jax.Array  # PRNG key for the stochastic pruning draw
+
+    def child(self, i: int) -> "BackwardCtx":
+        return dataclasses.replace(self, key=jax.random.fold_in(self.key, i))
+
+
+def maybe_prune(delta: jax.Array, ctx: BackwardCtx) -> Tuple[jax.Array, jax.Array]:
+    """Apply eq. 3 to a transported error tensor when the mode asks for it.
+
+    Returns (delta', sparsity) where sparsity is the realized zero
+    fraction (exported to Rust for Fig. 3a / the accel simulator)."""
+    if not fm.prunes(ctx.mode) or ctx.prune_rate <= 0.0:
+        return delta, jnp.asarray(0.0, jnp.float32)
+    tau = tau_from_rate(delta, ctx.prune_rate)
+    rand = jax.random.uniform(ctx.key, delta.shape, jnp.float32)
+    pruned = stochastic_prune(delta, rand, tau)
+    sparsity = jnp.mean((pruned == 0.0).astype(jnp.float32))
+    return pruned, sparsity
+
+
+# --------------------------------------------------------------------------
+# Layer protocol: plain classes with static config; params/feedback are
+# lists of arrays owned by the caller (flat, manifest-described).
+# --------------------------------------------------------------------------
+
+
+class Layer:
+    """Static layer description. Subclasses define param_specs(),
+    feedback_specs(), forward(), backward()."""
+
+    name: str = "layer"
+
+    def param_specs(self) -> List[Dict[str, Any]]:
+        return []
+
+    def feedback_specs(self) -> List[Dict[str, Any]]:
+        return []
+
+    def out_shape(self, in_shape: Tuple[int, ...]) -> Tuple[int, ...]:
+        raise NotImplementedError
+
+    def forward(self, params, x, train: bool):
+        raise NotImplementedError
+
+    def backward(self, params, feedback, cache, dy, ctx: BackwardCtx):
+        """returns (dx, param_grads, stats_dict)"""
+        raise NotImplementedError
+
+    def flops(self, in_shape) -> int:
+        """MACs*2 of the forward pass (accel-sim descriptor)."""
+        return 0
+
+
+def _spec(name, shape, init, **kw):
+    d = {"name": name, "shape": list(shape), "init": init}
+    d.update(kw)
+    return d
+
+
+class Conv(Layer):
+    """2-D convolution, NHWC/HWIO, no bias (BN follows), SAME padding."""
+
+    def __init__(self, name: str, ci: int, co: int, k: int = 3, stride: int = 1):
+        self.name = name
+        self.ci, self.co, self.k, self.stride = ci, co, k, stride
+
+    def param_specs(self):
+        fan_in = self.k * self.k * self.ci
+        return [
+            _spec(
+                f"{self.name}.w",
+                (self.k, self.k, self.ci, self.co),
+                {"kind": "he_normal", "fan_in": fan_in},
+            )
+        ]
+
+    def feedback_specs(self):
+        fan_in = self.k * self.k * self.ci
+        # B is drawn from the same distribution as W's init (the paper's
+        # "random magnitude"); fixed for the entire run.
+        return [
+            _spec(
+                f"{self.name}.B",
+                (self.k, self.k, self.ci, self.co),
+                {"kind": "he_normal", "fan_in": fan_in},
+            )
+        ]
+
+    def out_shape(self, s):
+        n, h, w, c = s
+        assert c == self.ci, (self.name, s)
+        return (n, -(-h // self.stride), -(-w // self.stride), self.co)
+
+    def forward(self, params, x, train: bool):
+        (w,) = params
+        y = k_conv(x, w, stride=self.stride, padding="SAME")
+        return y, {"x": x}
+
+    def backward(self, params, feedback, cache, dy, ctx: BackwardCtx):
+        (w,) = params
+        x = cache["x"]
+        stats = {}
+        # phase 3 (true local gradient, same for every mode)
+        dw = conv2d_weight_grad(x, dy, w.shape, stride=self.stride, padding="SAME")
+        # phase 2 (mode-dependent error transport)
+        if ctx.mode in ("signsym", "efficientgrad"):
+            b = feedback[0]
+            dx = _conv_input_grad_fused_signsym(
+                dy, w, b, x.shape, stride=self.stride
+            )
+        else:
+            b = feedback[0] if fm.needs_feedback(ctx.mode) else None
+            weff = fm.effective_feedback(ctx.mode, w, b)
+            dx = conv2d_input_grad(
+                dy, weff, x.shape, stride=self.stride, padding="SAME"
+            )
+        dx, sp = maybe_prune(dx, ctx)
+        stats["sparsity"] = sp
+        return dx, [dw], stats
+
+    def flops(self, in_shape):
+        n, h, w, _ = in_shape
+        oh, ow = -(-h // self.stride), -(-w // self.stride)
+        return 2 * n * oh * ow * self.k * self.k * self.ci * self.co
+
+
+def _conv_input_grad_fused_signsym(dy, w, b, x_shape, *, stride):
+    """conv transposed transport with the sign-symmetric feedback fused in
+    the matmul kernel (sign/abs commute with the rotation + reshape that
+    turn the conv into a matmul, so fusing at the matrix level is exact).
+    """
+    kh, kw, ci, co = w.shape
+    n, ih, iw, _ = x_shape
+    # replicate conv2d_input_grad's padding resolution for SAME
+    oh, ow = -(-ih // stride), -(-iw // stride)
+    pad_h = max((oh - 1) * stride + kh - ih, 0)
+    pad_w = max((ow - 1) * stride + kw - iw, 0)
+    pads = ((pad_h // 2, pad_h - pad_h // 2), (pad_w // 2, pad_w - pad_w // 2))
+    rot_w = jnp.transpose(w[::-1, ::-1, :, :], (0, 1, 3, 2))
+    rot_b = jnp.transpose(b[::-1, ::-1, :, :], (0, 1, 3, 2))
+    dyd = dy
+    if stride > 1:
+        n_, oh_, ow_, co_ = dy.shape
+        z = jnp.zeros((n_, oh_, stride, ow_, stride, co_), dy.dtype)
+        z = z.at[:, :, 0, :, 0, :].set(dy)
+        dyd = z.reshape(n_, oh_ * stride, ow_ * stride, co_)[
+            :, : (oh_ - 1) * stride + 1, : (ow_ - 1) * stride + 1, :
+        ]
+    lo_h = kh - 1 - pads[0][0]
+    lo_w = kw - 1 - pads[1][0]
+    hi_h = ih - (dyd.shape[1] + lo_h - kh + 1)
+    hi_w = iw - (dyd.shape[2] + lo_w - kw + 1)
+    p = _patches(dyd, kh, kw, 1, ((lo_h, hi_h), (lo_w, hi_w)))
+    n_, oh_, ow_, feat = p.shape
+    wmat = jnp.transpose(rot_w, (2, 0, 1, 3)).reshape(co * kh * kw, ci)
+    bmat = jnp.transpose(rot_b, (2, 0, 1, 3)).reshape(co * kh * kw, ci)
+    dx = sign_matmul(p.reshape(n_ * oh_ * ow_, feat), wmat, bmat)
+    return dx.reshape(n_, oh_, ow_, ci)
+
+
+class BatchNorm(Layer):
+    """Batch normalization over (N, H, W). Backward is exact for every
+    feedback mode (BN has no weight-transport problem; the paper *adds* BN
+    precisely to rescue FA-killed ReLU neurons, §4.1)."""
+
+    def __init__(self, name: str, c: int):
+        self.name = name
+        self.c = c
+
+    def param_specs(self):
+        return [
+            _spec(f"{self.name}.gamma", (self.c,), {"kind": "ones"}),
+            _spec(f"{self.name}.beta", (self.c,), {"kind": "zeros"}),
+        ]
+
+    def out_shape(self, s):
+        return s
+
+    def forward(self, params, x, train: bool):
+        gamma, beta = params
+        axes = tuple(range(x.ndim - 1))
+        mu = jnp.mean(x, axes)
+        var = jnp.var(x, axes)
+        inv = jax.lax.rsqrt(var + BN_EPS)
+        xhat = (x - mu) * inv
+        y = gamma * xhat + beta
+        return y, {"xhat": xhat, "inv": inv, "gamma": gamma, "n": x.size // x.shape[-1]}
+
+    def backward(self, params, feedback, cache, dy, ctx: BackwardCtx):
+        xhat, inv, gamma = cache["xhat"], cache["inv"], cache["gamma"]
+        axes = tuple(range(dy.ndim - 1))
+        dbeta = jnp.sum(dy, axes)
+        dgamma = jnp.sum(dy * xhat, axes)
+        m = cache["n"]
+        dx = (gamma * inv) * (
+            dy - dbeta / m - xhat * (dgamma / m)
+        )
+        return dx, [dgamma, dbeta], {}
+
+
+class ReLU(Layer):
+    """sigma'(a) mask of eq. 2."""
+
+    def __init__(self, name: str):
+        self.name = name
+
+    def out_shape(self, s):
+        return s
+
+    def forward(self, params, x, train: bool):
+        y = jnp.maximum(x, 0.0)
+        return y, {"mask": (x > 0.0)}
+
+    def backward(self, params, feedback, cache, dy, ctx: BackwardCtx):
+        return dy * cache["mask"].astype(dy.dtype), [], {}
+
+
+class GlobalAvgPool(Layer):
+    def __init__(self, name: str):
+        self.name = name
+
+    def out_shape(self, s):
+        n, h, w, c = s
+        return (n, c)
+
+    def forward(self, params, x, train: bool):
+        return jnp.mean(x, axis=(1, 2)), {"shape": x.shape}
+
+    def backward(self, params, feedback, cache, dy, ctx: BackwardCtx):
+        n, h, w, c = cache["shape"]
+        dx = jnp.broadcast_to(dy[:, None, None, :] / (h * w), (n, h, w, c))
+        return dx, [], {}
+
+
+class Dense(Layer):
+    """Fully-connected classifier head, with bias."""
+
+    def __init__(self, name: str, ci: int, co: int):
+        self.name = name
+        self.ci, self.co = ci, co
+
+    def param_specs(self):
+        return [
+            _spec(
+                f"{self.name}.w",
+                (self.ci, self.co),
+                {"kind": "glorot_normal", "fan_in": self.ci, "fan_out": self.co},
+            ),
+            _spec(f"{self.name}.b", (self.co,), {"kind": "zeros"}),
+        ]
+
+    def feedback_specs(self):
+        return [
+            _spec(
+                f"{self.name}.B",
+                (self.ci, self.co),
+                {"kind": "glorot_normal", "fan_in": self.ci, "fan_out": self.co},
+            )
+        ]
+
+    def out_shape(self, s):
+        return (s[0], self.co)
+
+    def forward(self, params, x, train: bool):
+        w, b = params
+        return matmul(x, w) + b, {"x": x}
+
+    def backward(self, params, feedback, cache, dy, ctx: BackwardCtx):
+        w, b = params
+        x = cache["x"]
+        dw = matmul(x.T, dy)
+        db = jnp.sum(dy, axis=0)
+        if ctx.mode in ("signsym", "efficientgrad"):
+            dx = sign_feedback_matmul(dy, w, feedback[0])
+        else:
+            bb = feedback[0] if fm.needs_feedback(ctx.mode) else None
+            weff = fm.effective_feedback(ctx.mode, w, bb)
+            dx = matmul(dy, weff.T)
+        dx, sp = maybe_prune(dx, ctx)
+        return dx, [dw, db], {"sparsity": sp}
+
+    def flops(self, in_shape):
+        return 2 * in_shape[0] * self.ci * self.co
+
+
+class Sequential(Layer):
+    """Composite of layers run in order; the backward walk distributes the
+    flat grad list back per sub-layer."""
+
+    def __init__(self, name: str, layers: Sequence[Layer]):
+        self.name = name
+        self.layers = list(layers)
+
+    def param_specs(self):
+        return [s for l in self.layers for s in l.param_specs()]
+
+    def feedback_specs(self):
+        return [s for l in self.layers for s in l.feedback_specs()]
+
+    def out_shape(self, s):
+        for l in self.layers:
+            s = l.out_shape(s)
+        return s
+
+    def _split(self, flat, specs_of):
+        out, i = [], 0
+        for l in self.layers:
+            n = len(specs_of(l))
+            out.append(flat[i : i + n])
+            i += n
+        return out
+
+    def forward(self, params, x, train: bool):
+        per = self._split(params, lambda l: l.param_specs())
+        caches = []
+        for l, p in zip(self.layers, per):
+            x, c = l.forward(p, x, train)
+            caches.append(c)
+        return x, {"caches": caches}
+
+    def backward(self, params, feedback, cache, dy, ctx: BackwardCtx):
+        per_p = self._split(params, lambda l: l.param_specs())
+        per_f = self._split(feedback, lambda l: l.feedback_specs())
+        grads: List[Any] = []
+        stats: Dict[str, Any] = {}
+        for i in reversed(range(len(self.layers))):
+            l = self.layers[i]
+            dy, g, st = l.backward(
+                per_p[i], per_f[i], cache["caches"][i], dy, ctx.child(i)
+            )
+            grads = list(g) + grads
+            for k, v in st.items():
+                stats[f"{l.name}.{k}"] = v
+        return dy, grads, stats
+
+    def flops(self, in_shape):
+        total = 0
+        for l in self.layers:
+            total += l.flops(in_shape)
+            in_shape = l.out_shape(in_shape)
+        return total
+
+
+class ResidualBlock(Layer):
+    """Basic ResNet block: conv-bn-relu-conv-bn (+ projection) + add + relu.
+
+    The join sums the two transported deltas — each branch transports with
+    its own mode-specific operand, matching how the paper trains ResNet-18.
+    """
+
+    def __init__(self, name: str, ci: int, co: int, stride: int = 1):
+        self.name = name
+        self.ci, self.co, self.stride = ci, co, stride
+        self.conv1 = Conv(f"{name}.conv1", ci, co, 3, stride)
+        self.bn1 = BatchNorm(f"{name}.bn1", co)
+        self.relu1 = ReLU(f"{name}.relu1")
+        self.conv2 = Conv(f"{name}.conv2", co, co, 3, 1)
+        self.bn2 = BatchNorm(f"{name}.bn2", co)
+        self.relu2 = ReLU(f"{name}.relu2")
+        self.proj: Optional[Conv] = None
+        self.proj_bn: Optional[BatchNorm] = None
+        if stride != 1 or ci != co:
+            self.proj = Conv(f"{name}.proj", ci, co, 1, stride)
+            self.proj_bn = BatchNorm(f"{name}.proj_bn", co)
+
+    def _sublayers(self) -> List[Layer]:
+        ls: List[Layer] = [self.conv1, self.bn1, self.conv2, self.bn2]
+        if self.proj is not None:
+            ls += [self.proj, self.proj_bn]  # type: ignore[list-item]
+        return ls
+
+    def param_specs(self):
+        return [s for l in self._sublayers() for s in l.param_specs()]
+
+    def feedback_specs(self):
+        return [s for l in self._sublayers() for s in l.feedback_specs()]
+
+    def out_shape(self, s):
+        return self.conv1.out_shape(s)[:3] + (self.co,)
+
+    def _split(self, flat, specs_of):
+        out, i = [], 0
+        for l in self._sublayers():
+            n = len(specs_of(l))
+            out.append(flat[i : i + n])
+            i += n
+        return out
+
+    def forward(self, params, x, train: bool):
+        pp = self._split(params, lambda l: l.param_specs())
+        h, c1 = self.conv1.forward(pp[0], x, train)
+        h, cb1 = self.bn1.forward(pp[1], h, train)
+        h, cr1 = self.relu1.forward([], h, train)
+        h, c2 = self.conv2.forward(pp[2], h, train)
+        h, cb2 = self.bn2.forward(pp[3], h, train)
+        if self.proj is not None:
+            s, cp = self.proj.forward(pp[4], x, train)
+            s, cpb = self.proj_bn.forward(pp[5], s, train)
+        else:
+            s, cp, cpb = x, None, None
+        y = h + s
+        out, cr2 = self.relu2.forward([], y, train)
+        return out, {
+            "c1": c1,
+            "cb1": cb1,
+            "cr1": cr1,
+            "c2": c2,
+            "cb2": cb2,
+            "cp": cp,
+            "cpb": cpb,
+            "cr2": cr2,
+        }
+
+    def backward(self, params, feedback, cache, dy, ctx: BackwardCtx):
+        pp = self._split(params, lambda l: l.param_specs())
+        ff = self._split(feedback, lambda l: l.feedback_specs())
+        stats: Dict[str, Any] = {}
+        dy, _, _ = self.relu2.backward([], [], cache["cr2"], dy, ctx)
+        # main branch
+        d, gb2, _ = self.bn2.backward(pp[3], [], cache["cb2"], dy, ctx)
+        d, g2, s2 = self.conv2.backward(pp[2], ff[2], cache["c2"], d, ctx.child(2))
+        d, _, _ = self.relu1.backward([], [], cache["cr1"], d, ctx)
+        d, gb1, _ = self.bn1.backward(pp[1], [], cache["cb1"], d, ctx)
+        d, g1, s1 = self.conv1.backward(pp[0], ff[0], cache["c1"], d, ctx.child(1))
+        # shortcut branch
+        if self.proj is not None:
+            ds, gpb, _ = self.proj_bn.backward(pp[5], [], cache["cpb"], dy, ctx)
+            ds, gp, sp = self.proj.backward(
+                pp[4], ff[4], cache["cp"], ds, ctx.child(3)
+            )
+            dx = d + ds
+            grads = g1 + gb1 + g2 + gb2 + gp + gpb
+        else:
+            dx = d + dy
+            grads = g1 + gb1 + g2 + gb2
+        for nm, st in ((self.conv1.name, s1), (self.conv2.name, s2)):
+            for k, v in st.items():
+                stats[f"{nm}.{k}"] = v
+        return dx, grads, stats
+
+    def flops(self, in_shape):
+        total = 0
+        s = in_shape
+        for l in (self.conv1, self.bn1, self.conv2):
+            total += l.flops(s)
+            s = l.out_shape(s)
+        if self.proj is not None:
+            total += self.proj.flops(in_shape)
+        return total

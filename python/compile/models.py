@@ -1,0 +1,160 @@
+"""L2: model zoo (paper's benchmark is ResNet-18 on CIFAR-10; ConvNet-S and
+ResNet-8 are the CPU-budget stand-ins used by default — see DESIGN.md
+substitutions)."""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+from .layers import (
+    BatchNorm,
+    Conv,
+    Dense,
+    GlobalAvgPool,
+    ReLU,
+    ResidualBlock,
+    Sequential,
+)
+
+
+def _stem(name: str, co: int) -> List:
+    return [
+        Conv(f"{name}.conv", 3, co, 3, 1),
+        BatchNorm(f"{name}.bn", co),
+        ReLU(f"{name}.relu"),
+    ]
+
+
+def convnet_s(num_classes: int = 10) -> Sequential:
+    """~42k-param 4-conv CNN for 32x32x3 inputs; the fast e2e workhorse."""
+    layers = _stem("stem", 16)
+    layers += [
+        Conv("c2.conv", 16, 32, 3, 2),
+        BatchNorm("c2.bn", 32),
+        ReLU("c2.relu"),
+        Conv("c3.conv", 32, 32, 3, 1),
+        BatchNorm("c3.bn", 32),
+        ReLU("c3.relu"),
+        Conv("c4.conv", 32, 64, 3, 2),
+        BatchNorm("c4.bn", 64),
+        ReLU("c4.relu"),
+        GlobalAvgPool("gap"),
+        Dense("fc", 64, num_classes),
+    ]
+    return Sequential("convnet_s", layers)
+
+
+def convnet_t(num_classes: int = 10) -> Sequential:
+    """Tiny 2-conv net (unit tests / property sweeps)."""
+    return Sequential(
+        "convnet_t",
+        _stem("stem", 8)
+        + [
+            Conv("c2.conv", 8, 16, 3, 2),
+            BatchNorm("c2.bn", 16),
+            ReLU("c2.relu"),
+            GlobalAvgPool("gap"),
+            Dense("fc", 16, num_classes),
+        ],
+    )
+
+
+def resnet8(num_classes: int = 10) -> Sequential:
+    """3-stage basic-block ResNet (16/32/64), the scaled-down ResNet-18."""
+    layers = _stem("stem", 16)
+    layers += [
+        ResidualBlock("s1.b1", 16, 16, 1),
+        ResidualBlock("s2.b1", 16, 32, 2),
+        ResidualBlock("s3.b1", 32, 64, 2),
+        GlobalAvgPool("gap"),
+        Dense("fc", 64, num_classes),
+    ]
+    return Sequential("resnet8", layers)
+
+
+def resnet18(num_classes: int = 10) -> Sequential:
+    """CIFAR-style ResNet-18 (3x3 stem, no maxpool), ~11.2M params — the
+    paper's evaluation network (Fig. 3, Fig. 5a)."""
+    layers = _stem("stem", 64)
+    cfg: List[Tuple[str, int, int, int]] = [
+        ("s1.b1", 64, 64, 1),
+        ("s1.b2", 64, 64, 1),
+        ("s2.b1", 64, 128, 2),
+        ("s2.b2", 128, 128, 1),
+        ("s3.b1", 128, 256, 2),
+        ("s3.b2", 256, 256, 1),
+        ("s4.b1", 256, 512, 2),
+        ("s4.b2", 512, 512, 1),
+    ]
+    for name, ci, co, st in cfg:
+        layers.append(ResidualBlock(name, ci, co, st))
+    layers += [GlobalAvgPool("gap"), Dense("fc", 512, num_classes)]
+    return Sequential("resnet18", layers)
+
+
+MODELS = {
+    "convnet_t": convnet_t,
+    "convnet_s": convnet_s,
+    "resnet8": resnet8,
+    "resnet18": resnet18,
+}
+
+
+def build(name: str, num_classes: int = 10) -> Sequential:
+    if name not in MODELS:
+        raise KeyError(f"unknown model {name!r}; have {sorted(MODELS)}")
+    return MODELS[name](num_classes)
+
+
+def layer_descriptor(model: Sequential, batch: int, image: Tuple[int, int, int]):
+    """Per-layer conv/dense shape descriptor consumed by the Rust
+    accelerator simulator (accel::workload)."""
+    desc = []
+    shape: Tuple[int, ...] = (batch, *image)
+
+    def walk(layer, in_shape):
+        from .layers import Conv as C, Dense as D, ResidualBlock as RB, Sequential as S
+
+        if isinstance(layer, S):
+            s = in_shape
+            for l in layer.layers:
+                walk(l, s)
+                s = l.out_shape(s)
+        elif isinstance(layer, RB):
+            s = in_shape
+            for l in (layer.conv1, layer.bn1, layer.conv2):
+                walk(l, s)
+                s = l.out_shape(s)
+            if layer.proj is not None:
+                walk(layer.proj, in_shape)
+        elif isinstance(layer, C):
+            n, h, w, _ = in_shape
+            oh, ow = -(-h // layer.stride), -(-w // layer.stride)
+            desc.append(
+                {
+                    "kind": "conv",
+                    "name": layer.name,
+                    "n": n,
+                    "h": h,
+                    "w": w,
+                    "ci": layer.ci,
+                    "co": layer.co,
+                    "k": layer.k,
+                    "stride": layer.stride,
+                    "oh": oh,
+                    "ow": ow,
+                }
+            )
+        elif isinstance(layer, D):
+            desc.append(
+                {
+                    "kind": "dense",
+                    "name": layer.name,
+                    "n": in_shape[0],
+                    "ci": layer.ci,
+                    "co": layer.co,
+                }
+            )
+
+    walk(model, shape)
+    return desc

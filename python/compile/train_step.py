@@ -1,0 +1,144 @@
+"""L2: the exported train/eval/probe computations (Algo. 1, all 3 phases).
+
+These are the functions `aot.py` lowers to HLO text. Their signatures are
+flat (lists of arrays + scalars) because the Rust runtime feeds PJRT
+literals positionally; `aot.py` writes the ordering into manifest.json.
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.update import sgd_momentum
+from .layers import BackwardCtx, Sequential
+from . import feedback_modes as fm
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Mean cross-entropy + dLoss/dlogits (the `e` of Algo. 1 phase 2)."""
+    n = logits.shape[0]
+    z = logits - jax.scipy.special.logsumexp(logits, axis=1, keepdims=True)
+    loss = -jnp.mean(jnp.take_along_axis(z, labels[:, None], axis=1))
+    p = jnp.exp(z)
+    onehot = jax.nn.one_hot(labels, logits.shape[1], dtype=logits.dtype)
+    dlogits = (p - onehot) / n
+    return loss, dlogits
+
+
+def accuracy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    return jnp.mean((jnp.argmax(logits, axis=1) == labels).astype(jnp.float32))
+
+
+def make_train_step(model: Sequential, mode: str, prune_rate: float):
+    """Returns f(params, momenta, feedback, images, labels, lr, mu, seed)
+    -> (new_params, new_momenta, loss, acc, sparsity_vec).
+
+    - phase 1: model.forward (Pallas conv/matmul kernels)
+    - phase 2: model.backward with the mode's transport (+ eq. 3 pruning)
+    - phase 3: fused Pallas SGD-momentum update
+    - sparsity_vec: realized zero-fraction per pruned transport, exported
+      so Rust can drive the accelerator simulator with *measured* sparsity.
+    """
+    assert mode in fm.MODES, mode
+
+    def step(
+        params: List[jax.Array],
+        momenta: List[jax.Array],
+        feedback: List[jax.Array],
+        images: jax.Array,
+        labels: jax.Array,
+        lr: jax.Array,
+        mu: jax.Array,
+        seed: jax.Array,
+    ):
+        logits, cache = model.forward(params, images, train=True)
+        loss, dlogits = softmax_xent(logits, labels)
+        acc = accuracy(logits, labels)
+        ctx = BackwardCtx(
+            mode=mode,
+            prune_rate=prune_rate,
+            key=jax.random.PRNGKey(seed.astype(jnp.uint32)),
+        )
+        _, grads, stats = model.backward(params, feedback, cache, dlogits, ctx)
+        new_p, new_m = [], []
+        for w, v, g in zip(params, momenta, grads):
+            w2, v2 = sgd_momentum(w, v, g, lr, mu)
+            new_p.append(w2)
+            new_m.append(v2)
+        spars = jnp.stack(
+            [v for k, v in sorted(stats.items()) if k.endswith("sparsity")]
+        ) if stats else jnp.zeros((1,), jnp.float32)
+        return new_p, new_m, loss, acc, spars
+
+    return step
+
+
+def make_forward(model: Sequential):
+    """Inference: (params, images) -> logits. BN uses batch statistics
+    (documented substitution: no running averages; eval batches are large
+    enough that batch stats are a faithful proxy on this testbed)."""
+
+    def fwd(params: List[jax.Array], images: jax.Array):
+        logits, _ = model.forward(params, images, train=False)
+        return logits
+
+    return fwd
+
+
+def make_probe(model: Sequential, prune_rate: float):
+    """Fig. 3 probe: runs phase 2 twice from the same forward tape — once
+    with BP's transport, once with EfficientGrad's — and reports, per
+    parameter tensor:
+
+      * cos angle between the BP gradient and the EfficientGrad gradient
+        (Fig. 3b plots the angle in degrees),
+      * the EfficientGrad gradient's std + realized sparsity,
+      * a 64-bin histogram of the (normalized) error gradients (Fig. 3a).
+
+    Output: (angles[P], stds[P], sparsity_scalar, hist[64], loss)
+    """
+
+    def probe(
+        params: List[jax.Array],
+        feedback: List[jax.Array],
+        images: jax.Array,
+        labels: jax.Array,
+        seed: jax.Array,
+    ):
+        logits, cache = model.forward(params, images, train=True)
+        loss, dlogits = softmax_xent(logits, labels)
+        key = jax.random.PRNGKey(seed.astype(jnp.uint32))
+        ctx_bp = BackwardCtx(mode="bp", prune_rate=0.0, key=key)
+        ctx_eg = BackwardCtx(mode="efficientgrad", prune_rate=prune_rate, key=key)
+        _, g_bp, _ = model.backward(params, feedback, cache, dlogits, ctx_bp)
+        _, g_eg, st = model.backward(params, feedback, cache, dlogits, ctx_eg)
+
+        def cos(a, b):
+            af, bf = a.reshape(-1), b.reshape(-1)
+            den = jnp.linalg.norm(af) * jnp.linalg.norm(bf) + 1e-12
+            return jnp.dot(af, bf) / den
+
+        angles = jnp.stack([cos(a, b) for a, b in zip(g_bp, g_eg)])
+        stds = jnp.stack([jnp.std(g.astype(jnp.float32)) for g in g_eg])
+        spars = (
+            jnp.mean(
+                jnp.stack(
+                    [v for k, v in sorted(st.items()) if k.endswith("sparsity")]
+                )
+            )
+            if st
+            else jnp.asarray(0.0, jnp.float32)
+        )
+        # Fig 3a histogram: pool every EG gradient, normalize by its std,
+        # histogram over +-4 sigma with 64 bins.
+        pooled = jnp.concatenate([g.reshape(-1) for g in g_eg])
+        sigma = jnp.std(pooled) + 1e-12
+        edges = jnp.linspace(-4.0, 4.0, 65)
+        hist = jnp.histogram(pooled / sigma, bins=edges)[0].astype(jnp.float32)
+        hist = hist / jnp.sum(hist)
+        return angles, stds, spars, hist, loss
+
+    return probe

@@ -1,0 +1,105 @@
+"""AOT export: manifest consistency + HLO text artifacts well-formed."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from compile import models
+from compile import aot
+
+REPO = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+ARTIFACTS = os.path.join(REPO, "artifacts")
+
+
+def test_layer_descriptor_convnet_s():
+    model = models.build("convnet_s")
+    desc = models.layer_descriptor(model, 32, (32, 32, 3))
+    convs = [d for d in desc if d["kind"] == "conv"]
+    denses = [d for d in desc if d["kind"] == "dense"]
+    assert len(convs) == 4 and len(denses) == 1
+    assert convs[0]["ci"] == 3 and convs[-1]["co"] == 64
+    s2 = [c for c in convs if c["stride"] == 2]
+    assert len(s2) == 2
+    for c in convs:
+        assert c["oh"] == -(-c["h"] // c["stride"])
+
+
+def test_layer_descriptor_resnet18_matches_paper_flops():
+    """ResNet-18 CIFAR fwd ~ 0.56 GMAC/image: sanity for the accel sim."""
+    model = models.build("resnet18")
+    desc = models.layer_descriptor(model, 1, (32, 32, 3))
+    macs = 0
+    for d in desc:
+        if d["kind"] == "conv":
+            macs += d["oh"] * d["ow"] * d["k"] ** 2 * d["ci"] * d["co"]
+        else:
+            macs += d["ci"] * d["co"]
+    assert 4.0e8 < macs < 7.0e8, macs
+
+
+def test_param_specs_match_param_count():
+    model = models.build("resnet8")
+    import numpy as np
+
+    total = sum(int(np.prod(s["shape"])) for s in model.param_specs())
+    assert 70_000 < total < 90_000  # resnet8 (16/32/64) basic blocks
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+    reason="run `make artifacts` first",
+)
+def test_manifest_matches_exported_files():
+    with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["version"] == 1
+    for mname, m in man["models"].items():
+        model = models.build(mname)
+        assert len(m["params"]) == len(model.param_specs()), mname
+        assert len(m["feedback"]) == len(model.feedback_specs()), mname
+        for tag, art in m["artifacts"].items():
+            path = os.path.join(ARTIFACTS, art["file"])
+            assert os.path.exists(path), art["file"]
+            head = open(path).read(200)
+            assert "HloModule" in head, art["file"]
+            # input ordering contract used by the Rust runtime:
+            if tag.startswith("train_"):
+                n_p = len(m["params"])
+                n_f = len(m["feedback"])
+                assert len(art["inputs"]) == 2 * n_p + n_f + 5
+                assert art["inputs"][-5:] == ["images", "labels", "lr", "mu", "seed"]
+                assert len(art["outputs"]) == 2 * n_p + 3
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+    reason="run `make artifacts` first",
+)
+def test_manifest_prune_rate_is_papers_operating_point():
+    with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["prune_rate"] == pytest.approx(0.9)
+
+
+def test_hlo_text_roundtrip_tiny_export(tmp_path):
+    """Exports convnet_t into a tmpdir end-to-end via the CLI."""
+    env = dict(os.environ)
+    out = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--outdir", str(tmp_path), "--models", "convnet_t"],
+        cwd=os.path.join(REPO, "python"),
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=600,
+    )
+    assert out.returncode == 0, out.stderr
+    man = json.loads((tmp_path / "manifest.json").read_text())
+    assert "convnet_t" in man["models"]
+    arts = man["models"]["convnet_t"]["artifacts"]
+    assert set(arts) == {"train_bp", "train_efficientgrad", "fwd", "probe"}
+    for art in arts.values():
+        text = (tmp_path / art["file"]).read_text()
+        assert text.startswith("HloModule")

@@ -1,0 +1,91 @@
+"""Conv kernel family vs lax reference and autodiff (ref backend)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv2d
+from compile.kernels.conv2d import conv2d_input_grad, conv2d_weight_grad
+from compile.kernels import ref
+
+RTOL = 3e-4
+ATOL = 3e-4
+
+CASES = [
+    (2, 8, 8, 3, 16, 3, 1, "SAME"),
+    (2, 9, 9, 4, 8, 3, 2, "SAME"),
+    (1, 8, 8, 3, 8, 1, 1, "SAME"),
+    (2, 8, 8, 3, 8, 3, 1, "VALID"),
+    (2, 16, 16, 8, 16, 3, 2, "SAME"),
+    (1, 7, 11, 2, 4, 5, 1, "SAME"),
+]
+
+
+def _data(n, h, w, ci, co, k, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n, h, w, ci)).astype(np.float32))
+    wt = jnp.asarray(rng.normal(size=(k, k, ci, co)).astype(np.float32))
+    return x, wt
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_conv2d_forward(case):
+    n, h, w, ci, co, k, s, pad = case
+    x, wt = _data(n, h, w, ci, co, k)
+    out = conv2d(x, wt, stride=s, padding=pad)
+    want = ref.conv2d_nhwc(x, wt, s, pad)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_conv2d_input_grad_matches_vjp(case):
+    n, h, w, ci, co, k, s, pad = case
+    x, wt = _data(n, h, w, ci, co, k, seed=1)
+    y, vjp = jax.vjp(lambda xx: ref.conv2d_nhwc(xx, wt, s, pad), x)
+    rng = np.random.default_rng(2)
+    dy = jnp.asarray(rng.normal(size=y.shape).astype(np.float32))
+    want = vjp(dy)[0]
+    got = conv2d_input_grad(dy, wt, x.shape, stride=s, padding=pad)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_conv2d_weight_grad_matches_vjp(case):
+    n, h, w, ci, co, k, s, pad = case
+    x, wt = _data(n, h, w, ci, co, k, seed=3)
+    y, vjp = jax.vjp(lambda ww: ref.conv2d_nhwc(x, ww, s, pad), wt)
+    rng = np.random.default_rng(4)
+    dy = jnp.asarray(rng.normal(size=y.shape).astype(np.float32))
+    want = vjp(dy)[0]
+    got = conv2d_weight_grad(x, dy, wt.shape, stride=s, padding=pad)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=2e-3, atol=2e-3
+    )
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    n=st.integers(1, 3),
+    hw=st.integers(4, 14),
+    ci=st.integers(1, 6),
+    co=st.integers(1, 10),
+    k=st.sampled_from([1, 3, 5]),
+    s=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv2d_forward_hypothesis(n, hw, ci, co, k, s, seed):
+    x, wt = _data(n, hw, hw, ci, co, k, seed=seed)
+    out = conv2d(x, wt, stride=s, padding="SAME")
+    want = ref.conv2d_nhwc(x, wt, s, "SAME")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=RTOL, atol=ATOL)
+
+
+def test_transport_roundtrip_shape_stride2_odd():
+    """stride-2 transport on odd spatial dims must return the exact input
+    shape (the lhs-dilation arithmetic is the fiddly part)."""
+    x, wt = _data(2, 9, 13, 3, 8, 3, seed=5)
+    y = conv2d(x, wt, stride=2, padding="SAME")
+    dx = conv2d_input_grad(y, wt, x.shape, stride=2, padding="SAME")
+    assert dx.shape == x.shape

@@ -1,0 +1,160 @@
+"""L1 kernel vs pure-jnp oracle: the core correctness signal.
+
+Hypothesis sweeps shapes (and the prune kernel's threshold space); every
+kernel must match ref.py to float32 tolerance on every draw.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    matmul,
+    sign_feedback_matmul,
+    stochastic_prune,
+    tau_from_rate,
+    sgd_momentum,
+)
+from compile.kernels.feedback import sign_matmul
+from compile.kernels import ref
+from compile.kernels.matmul import (
+    mxu_utilization_estimate,
+    vmem_footprint_bytes,
+)
+
+RTOL = 2e-4
+ATOL = 2e-4
+
+dims = st.integers(min_value=1, max_value=96)
+
+
+def _arr(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=dims, k=dims, n=dims, seed=st.integers(0, 2**31 - 1))
+def test_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, w = _arr(rng, m, k), _arr(rng, k, n)
+    np.testing.assert_allclose(
+        np.asarray(matmul(x, w)), np.asarray(ref.matmul(x, w)), rtol=RTOL, atol=ATOL
+    )
+
+
+@pytest.mark.parametrize("block", [8, 16, 64, 128])
+def test_matmul_block_shapes(block):
+    rng = np.random.default_rng(0)
+    x, w = _arr(rng, 70, 50), _arr(rng, 50, 33)
+    out = matmul(x, w, block_m=block, block_n=block, block_k=block)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref.matmul(x, w)), rtol=RTOL, atol=ATOL
+    )
+
+
+def test_matmul_rejects_bad_shapes():
+    rng = np.random.default_rng(0)
+    with pytest.raises(ValueError):
+        matmul(_arr(rng, 4, 5), _arr(rng, 6, 7))
+    with pytest.raises(ValueError):
+        matmul(_arr(rng, 4, 5, 6), _arr(rng, 6, 7))
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=dims, i=dims, o=dims, seed=st.integers(0, 2**31 - 1))
+def test_sign_feedback_matmul_matches_ref(m, i, o, seed):
+    rng = np.random.default_rng(seed)
+    dy, w, b = _arr(rng, m, o), _arr(rng, i, o), _arr(rng, i, o)
+    np.testing.assert_allclose(
+        np.asarray(sign_feedback_matmul(dy, w, b)),
+        np.asarray(ref.sign_feedback_matmul(dy, w, b)),
+        rtol=RTOL,
+        atol=ATOL,
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=dims, k=dims, n=dims, seed=st.integers(0, 2**31 - 1))
+def test_sign_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = _arr(rng, m, k), _arr(rng, k, n), _arr(rng, k, n)
+    want = ref.matmul(x, jnp.sign(w) * jnp.abs(b))
+    np.testing.assert_allclose(
+        np.asarray(sign_matmul(x, w, b)), np.asarray(want), rtol=RTOL, atol=ATOL
+    )
+
+
+def test_sign_feedback_never_reads_w_magnitude():
+    """Scaling W's magnitudes (keeping signs) must not change the output —
+    the property that lets the accelerator skip the W-magnitude fetch."""
+    rng = np.random.default_rng(3)
+    dy, w, b = _arr(rng, 17, 9), _arr(rng, 13, 9), _arr(rng, 13, 9)
+    out1 = np.asarray(sign_feedback_matmul(dy, w, b))
+    out2 = np.asarray(sign_feedback_matmul(dy, w * 37.5, b))
+    np.testing.assert_allclose(out1, out2, rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(1, 5000),
+    p=st.floats(0.0, 0.99),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_prune_matches_ref(n, p, seed):
+    rng = np.random.default_rng(seed)
+    d = _arr(rng, n)
+    r = jnp.asarray(rng.uniform(size=n).astype(np.float32))
+    tau = tau_from_rate(d, p)
+    np.testing.assert_allclose(
+        np.asarray(stochastic_prune(d, r, tau)),
+        np.asarray(ref.stochastic_prune(d, r, tau)),
+        rtol=1e-6,
+        atol=1e-6,
+    )
+
+
+def test_prune_case_split():
+    """Hand-constructed vectors hit all three branches of eq. 3."""
+    d = jnp.asarray([2.0, -2.0, 0.5, -0.5, 0.1, -0.1], jnp.float32)
+    r = jnp.asarray([0.9, 0.9, 0.4, 0.4, 0.9, 0.9], jnp.float32)
+    tau = jnp.asarray(1.0, jnp.float32)
+    out = np.asarray(stochastic_prune(d, r, tau))
+    # |d|>tau -> kept as-is; tau>=|d|>=r*tau -> +-tau; |d|<r*tau -> 0
+    np.testing.assert_allclose(out, [2.0, -2.0, 1.0, -1.0, 0.0, 0.0])
+
+
+def test_prune_zero_rate_keeps_everything_above_zero_band():
+    rng = np.random.default_rng(7)
+    d = _arr(rng, 1000)
+    r = jnp.asarray(rng.uniform(size=1000).astype(np.float32))
+    tau = tau_from_rate(d, 0.0)  # tau = 0
+    out = np.asarray(stochastic_prune(d, r, tau))
+    np.testing.assert_allclose(out, np.asarray(d))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    shape=st.tuples(st.integers(1, 20), st.integers(1, 20)),
+    seed=st.integers(0, 2**31 - 1),
+    lr=st.floats(1e-4, 1.0),
+    mu=st.floats(0.0, 0.99),
+)
+def test_sgd_momentum_matches_ref(shape, seed, lr, mu):
+    rng = np.random.default_rng(seed)
+    w, v, g = (_arr(rng, *shape) for _ in range(3))
+    w2, v2 = sgd_momentum(w, v, g, jnp.float32(lr), jnp.float32(mu))
+    w2r, v2r = ref.sgd_momentum(w, v, g, lr, mu)
+    np.testing.assert_allclose(np.asarray(w2), np.asarray(w2r), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(v2), np.asarray(v2r), rtol=1e-5, atol=1e-6)
+
+
+def test_vmem_footprint_within_budget():
+    # default blocks must fit a TPU core's ~16 MiB VMEM with headroom
+    assert vmem_footprint_bytes() < 4 * 1024 * 1024
+
+
+def test_mxu_utilization_perfect_on_aligned():
+    assert mxu_utilization_estimate(256, 256, 256) == 1.0
+    assert 0.0 < mxu_utilization_estimate(100, 100, 100) <= 1.0

@@ -1,0 +1,186 @@
+"""Layer-level manual backward vs autodiff (BP mode must equal jax.grad),
+plus feedback-mode transport properties at the layer level."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import feedback_modes as fm
+from compile import models
+from compile.kernels import backend
+from compile.layers import (
+    BackwardCtx,
+    BatchNorm,
+    Conv,
+    Dense,
+    GlobalAvgPool,
+    ReLU,
+    ResidualBlock,
+)
+from compile.train_step import softmax_xent
+
+
+def _init_flat(specs, rng):
+    out = []
+    for s in specs:
+        sh, k = s["shape"], s["init"]["kind"]
+        if k == "ones":
+            out.append(jnp.ones(sh, jnp.float32))
+        elif k == "zeros":
+            out.append(jnp.zeros(sh, jnp.float32))
+        else:
+            fan_in = s["init"]["fan_in"]
+            scale = np.sqrt(2.0 / fan_in)
+            out.append(jnp.asarray(rng.normal(size=sh, scale=scale).astype(np.float32)))
+    return out
+
+
+BP = BackwardCtx(mode="bp", prune_rate=0.0, key=jax.random.PRNGKey(0))
+
+
+def test_batchnorm_backward_matches_autodiff():
+    rng = np.random.default_rng(0)
+    bn = BatchNorm("bn", 5)
+    params = _init_flat(bn.param_specs(), rng)
+    params = [p + 0.1 for p in params]  # non-trivial gamma/beta
+    x = jnp.asarray(rng.normal(size=(4, 6, 6, 5)).astype(np.float32) * 3 + 1)
+    dy = jnp.asarray(rng.normal(size=(4, 6, 6, 5)).astype(np.float32))
+
+    y, cache = bn.forward(params, x, True)
+    dx, (dg, db), _ = bn.backward(params, [], cache, dy, BP)
+
+    def f(p, xx):
+        yy, _ = bn.forward(p, xx, True)
+        return jnp.sum(yy * dy)
+
+    want_p, want_x = jax.grad(f, argnums=(0, 1))(params, x)
+    np.testing.assert_allclose(np.asarray(dg), np.asarray(want_p[0]), rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(db), np.asarray(want_p[1]), rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(dx), np.asarray(want_x), rtol=1e-3, atol=1e-4)
+
+
+def test_relu_backward_is_mask():
+    r = ReLU("r")
+    x = jnp.asarray([[-1.0, 2.0], [0.5, -3.0]])
+    dy = jnp.ones_like(x)
+    y, c = r.forward([], x, True)
+    dx, _, _ = r.backward([], [], c, dy, BP)
+    np.testing.assert_allclose(np.asarray(dx), [[0, 1], [1, 0]])
+
+
+def test_gap_backward_distributes_mean():
+    g = GlobalAvgPool("g")
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(2, 4, 4, 3)).astype(np.float32))
+    dy = jnp.asarray(rng.normal(size=(2, 3)).astype(np.float32))
+    y, c = g.forward([], x, True)
+    dx, _, _ = g.backward([], [], c, dy, BP)
+    np.testing.assert_allclose(
+        np.asarray(dx), np.broadcast_to(np.asarray(dy)[:, None, None, :] / 16, x.shape),
+        rtol=1e-6,
+    )
+
+
+@pytest.mark.parametrize("stride,ci,co", [(1, 8, 8), (2, 8, 16)])
+def test_residual_block_bp_matches_autodiff(stride, ci, co):
+    rng = np.random.default_rng(2)
+    rb = ResidualBlock("rb", ci, co, stride)
+    params = _init_flat(rb.param_specs(), rng)
+    feedback = _init_flat(rb.feedback_specs(), rng)
+    x = jnp.asarray(rng.normal(size=(2, 8, 8, ci)).astype(np.float32))
+    dy_shape = rb.out_shape((2, 8, 8, ci))
+    dy = jnp.asarray(rng.normal(size=dy_shape).astype(np.float32))
+
+    y, cache = rb.forward(params, x, True)
+    dx, grads, _ = rb.backward(params, feedback, cache, dy, BP)
+
+    with backend.use("ref"):
+
+        def f(p, xx):
+            yy, _ = rb.forward(p, xx, True)
+            return jnp.sum(yy * dy)
+
+        want_p, want_x = jax.grad(f, argnums=(0, 1))(params, x)
+    for g, w in zip(grads, want_p):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=5e-3, atol=5e-4)
+    np.testing.assert_allclose(np.asarray(dx), np.asarray(want_x), rtol=5e-3, atol=5e-4)
+
+
+@pytest.mark.parametrize("model_name", ["convnet_t", "convnet_s"])
+def test_model_bp_backward_matches_autodiff(model_name):
+    rng = np.random.default_rng(3)
+    model = models.build(model_name)
+    params = _init_flat(model.param_specs(), rng)
+    feedback = _init_flat(model.feedback_specs(), rng)
+    x = jnp.asarray(rng.normal(size=(4, 32, 32, 3)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, 10, size=(4,)).astype(np.int32))
+
+    logits, cache = model.forward(params, x, True)
+    loss, dl = softmax_xent(logits, y)
+    _, grads, _ = model.backward(params, feedback, cache, dl, BP)
+
+    with backend.use("ref"):
+
+        def lossfn(p):
+            lg, _ = model.forward(p, x, True)
+            return softmax_xent(lg, y)[0]
+
+        want = jax.grad(lossfn)(params)
+    for g, w, s in zip(grads, want, model.param_specs()):
+        np.testing.assert_allclose(
+            np.asarray(g), np.asarray(w), rtol=5e-3, atol=5e-4, err_msg=s["name"]
+        )
+
+
+def test_conv_signsym_transport_ignores_w_magnitude():
+    rng = np.random.default_rng(4)
+    conv = Conv("c", 4, 8, 3, 1)
+    (w,) = _init_flat(conv.param_specs(), rng)
+    (b,) = _init_flat(conv.feedback_specs(), rng)
+    x = jnp.asarray(rng.normal(size=(2, 8, 8, 4)).astype(np.float32))
+    _, cache = conv.forward([w], x, True)
+    dy = jnp.asarray(rng.normal(size=(2, 8, 8, 8)).astype(np.float32))
+    ctx = BackwardCtx(mode="signsym", prune_rate=0.0, key=jax.random.PRNGKey(0))
+    dx1, _, _ = conv.backward([w], [b], cache, dy, ctx)
+    # rescale W magnitudes, keep signs: transport must be identical
+    _, cache2 = conv.forward([w * 11.0], x, True)
+    dx2, _, _ = conv.backward([w * 11.0], [b], cache2, dy, ctx)
+    np.testing.assert_allclose(np.asarray(dx1), np.asarray(dx2), rtol=1e-5, atol=1e-5)
+
+
+def test_dense_modes_produce_distinct_transports():
+    rng = np.random.default_rng(5)
+    d = Dense("d", 12, 7)
+    params = _init_flat(d.param_specs(), rng)
+    feedback = _init_flat(d.feedback_specs(), rng)
+    x = jnp.asarray(rng.normal(size=(3, 12)).astype(np.float32))
+    _, cache = d.forward(params, x, True)
+    dy = jnp.asarray(rng.normal(size=(3, 7)).astype(np.float32))
+    outs = {}
+    for mode in fm.MODES:
+        ctx = BackwardCtx(mode=mode, prune_rate=0.0, key=jax.random.PRNGKey(0))
+        dx, _, _ = d.backward(params, feedback, cache, dy, ctx)
+        outs[mode] = np.asarray(dx)
+    # all transports differ from BP except none
+    for mode in fm.MODES:
+        if mode == "bp":
+            continue
+        assert not np.allclose(outs[mode], outs["bp"]), mode
+    # signsym == efficientgrad when prune_rate = 0
+    np.testing.assert_allclose(outs["signsym"], outs["efficientgrad"])
+
+
+def test_effective_feedback_sign_agreement():
+    rng = np.random.default_rng(6)
+    w = jnp.asarray(rng.normal(size=(5, 9)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(5, 9)).astype(np.float32))
+    for mode in ("sign", "signsym"):
+        eff = np.asarray(fm.effective_feedback(mode, w, b))
+        assert (np.sign(eff) == np.sign(np.asarray(w))).all(), mode
+    eff_fa = np.asarray(fm.effective_feedback("fa", w, b))
+    np.testing.assert_allclose(eff_fa, np.asarray(b))
+    eff_bin = np.asarray(fm.effective_feedback("binary", w, b))
+    assert set(np.round(np.unique(np.abs(eff_bin)), 5)).issubset(
+        {np.round(np.abs(eff_bin).max(), 5)}
+    )

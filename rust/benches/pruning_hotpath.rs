@@ -1,0 +1,100 @@
+//! Bench: the gradient-pruning math on both sides of the stack —
+//! (a) the Rust host-side mirror (used by the simulator + verification)
+//! across tensor sizes, and (b) the pruning threshold's effect measured
+//! through the real AOT train step: efficientgrad's step vs signsym's
+//! (identical transport, no pruning) vs bp. On CPU-XLA the pruned step is
+//! NOT expected to be faster (dense kernels); the assertion is that the
+//! pruning overhead is bounded — the *hardware* win is quantified by the
+//! fig5b simulator bench.
+//!
+//!     cargo bench --bench pruning_hotpath
+
+use std::time::Duration;
+
+use efficientgrad::benchlib::{bench, fmt_ns, Report};
+use efficientgrad::data::synthetic::{generate, SynthConfig};
+use efficientgrad::manifest::Manifest;
+use efficientgrad::params::ParamStore;
+use efficientgrad::runtime::{Runtime, TrainState};
+use efficientgrad::sparsity;
+use efficientgrad::util::rng::Rng;
+
+fn main() {
+    let mut rep = Report::new(
+        "Host-side pruning mirror (eq. 3 + eq. 5)",
+        &["n elements", "mean", "per-elem ns", "realized sparsity"],
+    );
+    let mut rng = Rng::new(0);
+    for n in [1 << 12, 1 << 16, 1 << 20] {
+        let mut delta = vec![0f32; n];
+        rng.fill_normal(&mut delta, 0.02);
+        let sigma = efficientgrad::util::stats::std_dev(&delta);
+        let tau = sparsity::tau_from_rate(sigma, 0.9);
+        let mut out = Vec::new();
+        let s = bench(
+            &format!("prune n={n}"),
+            2,
+            20,
+            Duration::from_secs(5),
+            || {
+                let mut r = Rng::new(1);
+                out = sparsity::stochastic_prune(&delta, tau, &mut r);
+            },
+        );
+        rep.row(vec![
+            n.to_string(),
+            fmt_ns(s.mean_ns),
+            format!("{:.2}", s.mean_ns / n as f64),
+            format!("{:.3}", efficientgrad::util::stats::zero_fraction(&out)),
+        ]);
+    }
+    rep.print();
+
+    // threshold math microbench
+    let s = bench("tau_from_rate", 10, 1000, Duration::from_secs(2), || {
+        std::hint::black_box(sparsity::tau_from_rate(0.02, 0.9));
+    });
+    println!("tau_from_rate (ndtri): {}", fmt_ns(s.mean_ns));
+
+    // through the real artifacts
+    let Ok(manifest) = Manifest::load(&efficientgrad::artifacts_dir()) else {
+        eprintln!("SKIP artifact half: run `make artifacts`");
+        return;
+    };
+    let rt = Runtime::cpu().expect("client");
+    let model = manifest.model("convnet_s").unwrap();
+    let ds = generate(&SynthConfig {
+        n: model.batch,
+        seed: 0,
+        ..Default::default()
+    });
+    let batch = ds.gather(&(0..model.batch as u32).collect::<Vec<_>>());
+    let mut rep2 = Report::new(
+        "Train-step latency by mode (convnet_s, CPU-XLA — see fig5b for the hardware claim)",
+        &["mode", "mean", "p95"],
+    );
+    let mut eg_mean = 0.0;
+    let mut ss_mean = 0.0;
+    for mode in ["bp", "signsym", "efficientgrad"] {
+        let state = TrainState::new(
+            rt.load(model.artifact(&format!("train_{mode}")).unwrap()).unwrap(),
+            model,
+        )
+        .unwrap();
+        let mut store = ParamStore::init(model, 2);
+        let s = bench(mode, 3, 25, Duration::from_secs(12), || {
+            state.step(&mut store, &batch, 0.05, 0.9).unwrap();
+        });
+        if mode == "efficientgrad" {
+            eg_mean = s.mean_ns;
+        }
+        if mode == "signsym" {
+            ss_mean = s.mean_ns;
+        }
+        rep2.row(vec![mode.into(), fmt_ns(s.mean_ns), fmt_ns(s.p95_ns)]);
+    }
+    rep2.print();
+    let overhead = eg_mean / ss_mean;
+    println!("pruning overhead on CPU-XLA: {overhead:.2}x signsym (bounded < 2x expected)");
+    assert!(overhead < 2.5, "pruning overhead exploded: {overhead}");
+}

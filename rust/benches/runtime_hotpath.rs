@@ -1,0 +1,99 @@
+//! Bench: the L3 request-path hot loop — one train step through the PJRT
+//! executable, broken into its components (literal upload, execute,
+//! download), plus eval-forward latency/throughput. This is the §Perf
+//! target for layer 3: the Rust overhead around `execute` should be a
+//! small fraction of step time.
+//!
+//!     cargo bench --bench runtime_hotpath
+
+use std::time::Duration;
+
+use efficientgrad::benchlib::{bench, bench_default, fmt_ns, Report};
+use efficientgrad::data::synthetic::{generate, SynthConfig};
+use efficientgrad::manifest::Manifest;
+use efficientgrad::params::ParamStore;
+use efficientgrad::runtime::exec::EvalState;
+use efficientgrad::runtime::{tensor_to_literal, Runtime, TrainState};
+
+fn main() {
+    let Ok(manifest) = Manifest::load(&efficientgrad::artifacts_dir()) else {
+        eprintln!("SKIP: artifacts missing (run `make artifacts`)");
+        return;
+    };
+    let rt = Runtime::cpu().expect("PJRT client");
+    let mut rep = Report::new(
+        "L3 runtime hot path (convnet_s unless noted)",
+        &["op", "mean", "p50", "p95", "per-image µs"],
+    );
+
+    for model_name in ["convnet_t", "convnet_s"] {
+        let model = manifest.model(model_name).unwrap();
+        let train = TrainState::new(
+            rt.load(model.artifact("train_efficientgrad").unwrap()).unwrap(),
+            model,
+        )
+        .unwrap();
+        let eval =
+            EvalState::new(rt.load(model.artifact("fwd").unwrap()).unwrap(), model).unwrap();
+        let mut store = ParamStore::init(model, 1);
+        let ds = generate(&SynthConfig {
+            n: model.batch,
+            seed: 0,
+            ..Default::default()
+        });
+        let batch = ds.gather(&(0..model.batch as u32).collect::<Vec<_>>());
+
+        // full train step
+        let s = bench(
+            &format!("{model_name}: train step"),
+            3,
+            30,
+            Duration::from_secs(15),
+            || {
+                train.step(&mut store, &batch, 0.05, 0.9).unwrap();
+            },
+        );
+        rep.row(vec![
+            s.name.clone(),
+            fmt_ns(s.mean_ns),
+            fmt_ns(s.p50_ns),
+            fmt_ns(s.p95_ns),
+            format!("{:.1}", s.mean_ns / 1e3 / model.batch as f64),
+        ]);
+
+        // eval forward
+        let s = bench(
+            &format!("{model_name}: eval fwd"),
+            3,
+            30,
+            Duration::from_secs(10),
+            || {
+                eval.logits(&store, &batch.images).unwrap();
+            },
+        );
+        rep.row(vec![
+            s.name.clone(),
+            fmt_ns(s.mean_ns),
+            fmt_ns(s.p50_ns),
+            fmt_ns(s.p95_ns),
+            format!("{:.1}", s.mean_ns / 1e3 / model.batch as f64),
+        ]);
+
+        // host->literal conversion overhead (the Rust-side share)
+        let s = bench_default(&format!("{model_name}: literals up (params)"), || {
+            for t in &store.params {
+                std::hint::black_box(tensor_to_literal(t).unwrap());
+            }
+        });
+        rep.row(vec![
+            s.name.clone(),
+            fmt_ns(s.mean_ns),
+            fmt_ns(s.p50_ns),
+            fmt_ns(s.p95_ns),
+            "-".into(),
+        ]);
+    }
+    rep.print();
+    rep.save_csv(&efficientgrad::figures::reports_dir().join("runtime_hotpath.csv"))
+        .unwrap();
+}

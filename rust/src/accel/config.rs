@@ -1,0 +1,136 @@
+//! Accelerator configurations: the EfficientGrad chip (paper §4.2) and
+//! the EyerissV2-with-BP baseline (paper Fig. 5b).
+
+use super::energy::EnergyTable;
+
+/// Static description of one accelerator configuration.
+#[derive(Clone, Debug)]
+pub struct AccelConfig {
+    pub name: String,
+    /// processing clusters
+    pub clusters: usize,
+    /// PEs per cluster
+    pub pes_per_cluster: usize,
+    /// MAC units per PE (EfficientGrad PEs are dual-MAC: 121 GOP/s peak
+    /// at 500 MHz needs 72 PEs x 2 MACs x 2 ops ~ 144 GOP/s raw)
+    pub macs_per_pe: usize,
+    pub clock_hz: f64,
+    /// per-PE scratchpad (bytes) — holds the stationary weight row (+ its
+    /// feedback magnitudes on EfficientGrad)
+    pub spad_bytes: usize,
+    /// per-cluster global buffer (bytes)
+    pub glb_bytes: usize,
+    /// sustained DRAM bandwidth (bytes/s)
+    pub dram_bw: f64,
+    /// energy table
+    pub energy: EnergyTable,
+    // --- dataflow capabilities (what EfficientGrad changes) -------------
+    /// backward phase reuses forward-resident weight signs + feedback
+    /// magnitudes: no transposed-weight DRAM fetch (eq. 2's hardware win)
+    pub fa_no_transpose: bool,
+    /// pruned error gradients gate MACs and compress delta traffic
+    pub sparsity_gating: bool,
+    /// phase-3 update fused in-PE while the weight row is resident
+    pub fused_update: bool,
+}
+
+impl AccelConfig {
+    pub fn num_pes(&self) -> usize {
+        self.clusters * self.pes_per_cluster
+    }
+
+    /// Peak throughput in ops/s (1 MAC = 2 ops).
+    pub fn peak_ops(&self) -> f64 {
+        (self.num_pes() * self.macs_per_pe) as f64 * 2.0 * self.clock_hz
+    }
+}
+
+/// The paper's accelerator: 6 PCs x 12 PEs, 500 MHz, SMIC 14 nm.
+pub fn efficientgrad() -> AccelConfig {
+    AccelConfig {
+        name: "EfficientGrad".into(),
+        clusters: 6,
+        pes_per_cluster: 12,
+        macs_per_pe: 2,
+        clock_hz: 500e6,
+        spad_bytes: 512,
+        glb_bytes: 96 * 1024,
+        dram_bw: 3.2e9, // one LPDDR4x channel-ish for an edge part
+        energy: EnergyTable::smic14(),
+        fa_no_transpose: true,
+        sparsity_gating: true,
+        fused_update: true,
+    }
+}
+
+/// Fig. 5b baseline: "unpruned back propagation version of EyerissV2" —
+/// the *published* EyerissV2 geometry (16 clusters x 12 PEs, dual-MAC,
+/// 200 MHz, 65 nm — 153.6 GOP/s peak) running standard BP training:
+/// transposed weights re-fetched in phase 2 (strided bursts + mapping
+/// penalty), no gradient sparsity, update as a separate elementwise pass.
+/// This mirrors the paper, which normalizes its chip against EyerissV2's
+/// own operating point rather than re-synthesizing the baseline at 14 nm.
+pub fn eyeriss_v2_bp() -> AccelConfig {
+    AccelConfig {
+        name: "EyerissV2-BP".into(),
+        clusters: 16,
+        pes_per_cluster: 12,
+        macs_per_pe: 2,
+        clock_hz: 200e6,
+        spad_bytes: 512,
+        glb_bytes: 192 * 1024,
+        dram_bw: 1.6e9,
+        energy: EnergyTable::tsmc65(),
+        fa_no_transpose: false,
+        sparsity_gating: false,
+        fused_update: false,
+    }
+}
+
+/// Same-geometry ablation baseline: the EfficientGrad array running plain
+/// BP. Isolates the dataflow (no-transpose + sparsity + fused update)
+/// from the process/clock advantage; used by the ablation bench.
+pub fn efficientgrad_bp_ablation() -> AccelConfig {
+    AccelConfig {
+        name: "EfficientGrad-array-BP".into(),
+        fa_no_transpose: false,
+        sparsity_gating: false,
+        fused_update: false,
+        ..efficientgrad()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn efficientgrad_matches_paper_geometry() {
+        let c = efficientgrad();
+        assert_eq!(c.num_pes(), 72); // 6 clusters x 12 PEs (Fig. 4)
+        assert_eq!(c.clock_hz, 500e6);
+        // peak must be >= the paper's achieved 121 GOP/s
+        assert!(c.peak_ops() >= 121e9, "peak {} < 121 GOP/s", c.peak_ops());
+        assert!(c.peak_ops() < 200e9, "peak implausibly high");
+    }
+
+    #[test]
+    fn baseline_matches_published_eyeriss_v2() {
+        let b = eyeriss_v2_bp();
+        assert_eq!(b.num_pes(), 192); // EyerissV2: 16 clusters x 12 PEs
+        // published peak: 153.6 GOP/s at 200 MHz
+        assert!((b.peak_ops() - 153.6e9).abs() / 153.6e9 < 1e-9);
+        assert!(!b.fa_no_transpose && !b.sparsity_gating && !b.fused_update);
+    }
+
+    #[test]
+    fn ablation_baseline_differs_only_in_dataflow() {
+        let a = efficientgrad();
+        let b = efficientgrad_bp_ablation();
+        assert_eq!(a.num_pes(), b.num_pes());
+        assert_eq!(a.clock_hz, b.clock_hz);
+        assert!(a.fa_no_transpose && !b.fa_no_transpose);
+        assert!(a.sparsity_gating && !b.sparsity_gating);
+        assert!(a.fused_update && !b.fused_update);
+    }
+}

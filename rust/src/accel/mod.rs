@@ -1,0 +1,32 @@
+//! Accelerator simulator — reproduces the paper's hardware evaluation
+//! (§4.2, §5) in software.
+//!
+//! The paper synthesized a Chisel design in SMIC 14 nm and simulated it
+//! with a scala timing model; neither tool chain nor PDK is available
+//! here, so per DESIGN.md substitutions we model the accelerator
+//! analytically at the granularity the paper's own claims live at:
+//! counted MACs, scratchpad/GLB/DRAM traffic under the row-stationary
+//! dataflow, cycle counts with array-utilization factors, and an energy
+//! table scaled from Horowitz ISSCC'14 (the paper's own energy reference).
+//!
+//! Two configurations matter:
+//! * [`config::efficientgrad`] — 6 PC x 12 PE, 500 MHz, weight+feedback
+//!   scratchpad reuse across all three training phases, no transposed
+//!   weight fetch (sign-symmetric feedback), gradient-sparsity gating.
+//! * [`config::eyeriss_v2_bp`] — the same array running *unpruned
+//!   back-propagation* the way EyerissV2 would (the paper's Fig. 5b
+//!   baseline): transposed weights re-fetched from DRAM in phase 2, no
+//!   sparsity gating, no fused update.
+
+pub mod config;
+pub mod dataflow;
+pub mod energy;
+pub mod report;
+pub mod sim;
+pub mod workload;
+
+pub use config::AccelConfig;
+pub use energy::{EnergyBreakdown, EnergyTable};
+pub use report::{compare, ComparisonRow};
+pub use sim::{simulate_training, PhaseCost, SimResult, TrainingPhase};
+pub use workload::{resnet18_cifar, Workload};

@@ -1,0 +1,164 @@
+//! Workloads for the simulator: either built from the manifest's layer
+//! descriptors (live models) or the canned ResNet-18/CIFAR-10 descriptor
+//! the paper evaluates (so `cargo bench` works without artifacts).
+
+use crate::manifest::{LayerDesc, LayerKind};
+
+/// A training workload: layers + batch size.
+#[derive(Clone, Debug)]
+pub struct Workload {
+    pub name: String,
+    pub layers: Vec<LayerDesc>,
+    pub batch: usize,
+}
+
+impl Workload {
+    pub fn from_manifest(name: &str, layers: &[LayerDesc], batch: usize) -> Self {
+        Self {
+            name: name.to_string(),
+            layers: layers.to_vec(),
+            batch,
+        }
+    }
+
+    /// Total forward MACs.
+    pub fn fwd_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+
+    /// Total parameter words (weight traffic unit).
+    pub fn weight_words(&self) -> u64 {
+        self.layers
+            .iter()
+            .map(|l| match l.kind {
+                LayerKind::Conv => (l.k * l.k * l.ci * l.co) as u64,
+                LayerKind::Dense => (l.ci * l.co) as u64,
+            })
+            .sum()
+    }
+}
+
+fn conv(name: &str, n: usize, hw: usize, ci: usize, co: usize, k: usize, stride: usize) -> LayerDesc {
+    let o = hw.div_ceil(stride);
+    LayerDesc {
+        kind: LayerKind::Conv,
+        name: name.into(),
+        n,
+        h: hw,
+        w: hw,
+        ci,
+        co,
+        k,
+        stride,
+        oh: o,
+        ow: o,
+    }
+}
+
+fn dense(name: &str, n: usize, ci: usize, co: usize) -> LayerDesc {
+    LayerDesc {
+        kind: LayerKind::Dense,
+        name: name.into(),
+        n,
+        h: 1,
+        w: 1,
+        ci,
+        co,
+        k: 1,
+        stride: 1,
+        oh: 1,
+        ow: 1,
+    }
+}
+
+/// CIFAR-style ResNet-18 (the paper's evaluation network), batch `n`.
+pub fn resnet18_cifar(n: usize) -> Workload {
+    let mut layers = vec![conv("stem", n, 32, 3, 64, 3, 1)];
+    // (name, hw_in, ci, co, stride) for each basic block's two convs
+    let blocks = [
+        ("s1.b1", 32, 64, 64, 1),
+        ("s1.b2", 32, 64, 64, 1),
+        ("s2.b1", 32, 64, 128, 2),
+        ("s2.b2", 16, 128, 128, 1),
+        ("s3.b1", 16, 128, 256, 2),
+        ("s3.b2", 8, 256, 256, 1),
+        ("s4.b1", 8, 256, 512, 2),
+        ("s4.b2", 4, 512, 512, 1),
+    ];
+    for (name, hw, ci, co, stride) in blocks {
+        layers.push(conv(&format!("{name}.conv1"), n, hw, ci, co, 3, stride));
+        layers.push(conv(
+            &format!("{name}.conv2"),
+            n,
+            hw.div_ceil(stride),
+            co,
+            co,
+            3,
+            1,
+        ));
+        if stride != 1 || ci != co {
+            layers.push(conv(&format!("{name}.proj"), n, hw, ci, co, 1, stride));
+        }
+    }
+    layers.push(dense("fc", n, 512, 10));
+    Workload {
+        name: format!("resnet18-cifar(b{n})"),
+        layers,
+        batch: n,
+    }
+}
+
+/// The paper's Fig. 1 plots devices by throughput/power; this is the small
+/// literature table behind the scatter (published numbers).
+pub struct DevicePoint {
+    pub name: &'static str,
+    pub gops: f64,
+    pub power_w: f64,
+    pub class: &'static str,
+}
+
+pub fn fig1_devices() -> Vec<DevicePoint> {
+    vec![
+        DevicePoint { name: "Xeon E5-2697 (CPU)", gops: 600.0, power_w: 145.0, class: "cloud" },
+        DevicePoint { name: "Tesla P100 (GPU)", gops: 10_600.0, power_w: 300.0, class: "cloud" },
+        DevicePoint { name: "Jetson TX2 (edge GPU)", gops: 1_300.0, power_w: 15.0, class: "mobile" },
+        DevicePoint { name: "DaDianNao", gops: 5_580.0, power_w: 14.0, class: "accelerator" },
+        DevicePoint { name: "EyerissV2 (65nm, inference)", gops: 153.6, power_w: 0.6, class: "edge" },
+        DevicePoint { name: "Mobile SoC NPU", gops: 1_000.0, power_w: 2.0, class: "mobile" },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet18_macs_match_known_value() {
+        // CIFAR ResNet-18 forward ~0.555 GMAC per image
+        let w = resnet18_cifar(1);
+        let macs = w.fwd_macs();
+        assert!(
+            (4.5e8..6.5e8).contains(&(macs as f64)),
+            "got {macs} MACs"
+        );
+        // ~11.2M params
+        let params = w.weight_words();
+        assert!((10.5e6..12.0e6).contains(&(params as f64)), "got {params}");
+    }
+
+    #[test]
+    fn batch_scales_macs_linearly() {
+        let a = resnet18_cifar(1).fwd_macs();
+        let b = resnet18_cifar(8).fwd_macs();
+        assert_eq!(b, 8 * a);
+    }
+
+    #[test]
+    fn fig1_devices_span_the_hierarchy() {
+        let d = fig1_devices();
+        assert!(d.iter().any(|p| p.class == "cloud"));
+        assert!(d.iter().any(|p| p.class == "edge"));
+        // the edge power envelope from the paper's Fig. 1 is < ~2 W
+        assert!(d.iter().filter(|p| p.class == "edge").all(|p| p.power_w < 2.0));
+    }
+}

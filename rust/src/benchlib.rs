@@ -1,0 +1,152 @@
+//! Bench harness (no `criterion` offline): warmup + timed iterations,
+//! robust stats, and a uniform report format used by every `cargo bench`
+//! target. Each paper table/figure bench prints its rows through
+//! [`Report`] so `bench_output.txt` reads like the paper's evaluation.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::percentile;
+
+/// Timing summary of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl Sample {
+    pub fn mean(&self) -> Duration {
+        Duration::from_nanos(self.mean_ns as u64)
+    }
+
+    pub fn throughput(&self, items: f64) -> f64 {
+        items / (self.mean_ns / 1e9)
+    }
+}
+
+/// Run `f` repeatedly: `warmup` unmeasured + up to `iters` measured (or
+/// until `budget` elapses, whichever first; at least 3 measured).
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, budget: Duration, mut f: F) -> Sample {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    let start = Instant::now();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_nanos() as f64);
+        if start.elapsed() > budget && times.len() >= 3 {
+            break;
+        }
+    }
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    Sample {
+        name: name.to_string(),
+        iters: times.len(),
+        mean_ns: mean,
+        p50_ns: percentile(&times, 50.0),
+        p95_ns: percentile(&times, 95.0),
+        min_ns: times.iter().cloned().fold(f64::MAX, f64::min),
+    }
+}
+
+/// Quick default: 2 warmup, 10 iters, 10 s budget.
+pub fn bench_default<F: FnMut()>(name: &str, f: F) -> Sample {
+    bench(name, 2, 10, Duration::from_secs(10), f)
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Markdown-table report writer shared by the figure benches.
+pub struct Report {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Report {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        println!("\n## {}\n", self.title);
+        println!("| {} |", self.headers.join(" | "));
+        println!("|{}|", self.headers.iter().map(|_| "---").collect::<Vec<_>>().join("|"));
+        for r in &self.rows {
+            println!("| {} |", r.join(" | "));
+        }
+        println!();
+    }
+
+    /// Also persist as CSV next to the bench output.
+    pub fn save_csv(&self, path: &std::path::Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut out = self.headers.join(",") + "\n";
+        for r in &self.rows {
+            out.push_str(&r.join(","));
+            out.push('\n');
+        }
+        std::fs::write(path, out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let s = bench("noop", 1, 5, Duration::from_secs(1), || {
+            std::hint::black_box(42);
+        });
+        assert!(s.iters >= 3);
+        assert!(s.mean_ns >= 0.0);
+        assert!(s.p95_ns >= s.p50_ns || s.iters < 4);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5e4).contains("µs"));
+        assert!(fmt_ns(5e7).contains("ms"));
+        assert!(fmt_ns(5e9).contains("s"));
+    }
+
+    #[test]
+    fn report_roundtrip() {
+        let mut r = Report::new("t", &["a", "b"]);
+        r.row(vec!["1".into(), "2".into()]);
+        let p = std::env::temp_dir().join("effgrad_report_test.csv");
+        r.save_csv(&p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.starts_with("a,b\n1,2"));
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -1,0 +1,14 @@
+// Dev tool: verify an HLO-text artifact parses and compiles on the CPU
+// PJRT client (no execution). Usage: hlo_check <path>...
+fn main() -> anyhow::Result<()> {
+    let client = xla::PjRtClient::cpu()?;
+    for path in std::env::args().skip(1) {
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        match client.compile(&comp) {
+            Ok(_) => println!("OK      {path}"),
+            Err(e) => println!("FAIL    {path}: {e}"),
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,176 @@
+//! Command-line parsing substrate (no `clap` offline).
+//!
+//! Supports subcommands, `--key value`, `--key=value`, boolean `--flag`,
+//! repeated flags, positional args, and generated help text.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Declarative flag spec used for help + validation.
+#[derive(Clone, Debug)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+/// Parsed arguments for one (sub)command.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub flags: BTreeMap<String, Vec<String>>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(raw: &[String], specs: &[FlagSpec]) -> Result<Args> {
+        let known: BTreeMap<&str, &FlagSpec> =
+            specs.iter().map(|s| (s.name, s)).collect();
+        let mut flags: BTreeMap<String, Vec<String>> = BTreeMap::new();
+        let mut positional = Vec::new();
+        let mut it = raw.iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (body, None),
+                };
+                let spec = known
+                    .get(name)
+                    .ok_or_else(|| anyhow!("unknown flag --{name}"))?;
+                let val = if spec.takes_value {
+                    match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| anyhow!("--{name} needs a value"))?
+                            .clone(),
+                    }
+                } else {
+                    if inline_val.is_some() {
+                        bail!("--{name} does not take a value");
+                    }
+                    "true".to_string()
+                };
+                flags.entry(name.to_string()).or_default().push(val);
+            } else {
+                positional.push(tok.clone());
+            }
+        }
+        // fill defaults
+        for s in specs {
+            if let Some(d) = s.default {
+                flags
+                    .entry(s.name.to_string())
+                    .or_insert_with(|| vec![d.to_string()]);
+            }
+        }
+        Ok(Args { flags, positional })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).and_then(|v| v.last()).map(String::as_str)
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        matches!(self.get(name), Some("true" | "1" | "yes"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>> {
+        self.get(name)
+            .map(|v| v.parse::<f64>().map_err(|e| anyhow!("--{name}: {e}")))
+            .transpose()
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<Option<usize>> {
+        self.get(name)
+            .map(|v| v.parse::<usize>().map_err(|e| anyhow!("--{name}: {e}")))
+            .transpose()
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<Option<u64>> {
+        self.get(name)
+            .map(|v| v.parse::<u64>().map_err(|e| anyhow!("--{name}: {e}")))
+            .transpose()
+    }
+}
+
+/// Render help text for a subcommand.
+pub fn render_help(bin: &str, cmd: &str, about: &str, specs: &[FlagSpec]) -> String {
+    let mut out = format!("{about}\n\nUSAGE:\n  {bin} {cmd} [flags]\n\nFLAGS:\n");
+    for s in specs {
+        let val = if s.takes_value { " <value>" } else { "" };
+        let def = s
+            .default
+            .map(|d| format!(" (default: {d})"))
+            .unwrap_or_default();
+        out.push_str(&format!("  --{}{val}\n      {}{def}\n", s.name, s.help));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<FlagSpec> {
+        vec![
+            FlagSpec {
+                name: "model",
+                help: "model name",
+                takes_value: true,
+                default: Some("convnet_s"),
+            },
+            FlagSpec {
+                name: "steps",
+                help: "train steps",
+                takes_value: true,
+                default: None,
+            },
+            FlagSpec {
+                name: "verbose",
+                help: "chatty",
+                takes_value: false,
+                default: None,
+            },
+        ]
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_values_and_defaults() {
+        let a = Args::parse(&sv(&["--steps", "100", "--verbose", "pos1"]), &specs()).unwrap();
+        assert_eq!(a.get("steps"), Some("100"));
+        assert_eq!(a.get("model"), Some("convnet_s"));
+        assert!(a.get_bool("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = Args::parse(&sv(&["--model=resnet8"]), &specs()).unwrap();
+        assert_eq!(a.get("model"), Some("resnet8"));
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        assert!(Args::parse(&sv(&["--nope"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(Args::parse(&sv(&["--steps"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = Args::parse(&sv(&["--steps", "12"]), &specs()).unwrap();
+        assert_eq!(a.get_usize("steps").unwrap(), Some(12));
+        let bad = Args::parse(&sv(&["--steps", "xx"]), &specs()).unwrap();
+        assert!(bad.get_usize("steps").is_err());
+    }
+}

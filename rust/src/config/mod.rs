@@ -1,0 +1,337 @@
+//! Configuration system: a TOML-subset parser (no `toml` crate offline)
+//! plus typed configs for training, federated runs and the accelerator
+//! simulator. CLI flags override file values (see `cli.rs`).
+//!
+//! Supported syntax: `[section]` headers, `key = value` with string,
+//! integer, float, bool and flat-array values, `#` comments.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// A parsed TOML-subset value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Flat `section.key -> value` table.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    entries: BTreeMap<String, Value>,
+}
+
+impl Table {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut entries = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            entries.insert(
+                key,
+                parse_value(v.trim())
+                    .with_context(|| format!("line {}: bad value {v:?}", lineno + 1))?,
+            );
+        }
+        Ok(Self { entries })
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    /// Merge another table over this one (overrides win).
+    pub fn merge(&mut self, over: Table) {
+        self.entries.extend(over.entries);
+    }
+
+    pub fn set(&mut self, key: &str, v: Value) {
+        self.entries.insert(key.to_string(), v);
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key)
+            .and_then(Value::as_str)
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Value::as_f64).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .and_then(Value::as_i64)
+            .map(|v| v as usize)
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .and_then(Value::as_i64)
+            .map(|v| v as u64)
+            .unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(Value::as_bool).unwrap_or(default)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // naive but sufficient: we don't allow '#' inside strings in configs
+    match line.find('#') {
+        Some(i) => &line[..i],
+        None => line,
+    }
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if s.starts_with('"') && s.ends_with('"') && s.len() >= 2 {
+        return Ok(Value::Str(s[1..s.len() - 1].to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if s.starts_with('[') && s.ends_with(']') {
+        let inner = &s[1..s.len() - 1];
+        let items: Result<Vec<Value>> = inner
+            .split(',')
+            .map(str::trim)
+            .filter(|t| !t.is_empty())
+            .map(parse_value)
+            .collect();
+        return Ok(Value::Arr(items?));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("cannot parse {s:?}")
+}
+
+// ---------------------------------------------------------------------------
+// typed configs
+// ---------------------------------------------------------------------------
+
+/// Training hyperparameters (defaults match the paper's CIFAR recipe,
+/// scaled to the synthetic workload).
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub model: String,
+    pub mode: String,
+    pub steps: usize,
+    pub lr: f64,
+    pub momentum: f64,
+    /// cosine | step | const
+    pub lr_schedule: String,
+    pub seed: u64,
+    pub train_examples: usize,
+    pub test_examples: usize,
+    pub difficulty: f64,
+    pub eval_every: usize,
+    pub log_every: usize,
+    pub checkpoint: Option<String>,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            model: "convnet_s".into(),
+            mode: "efficientgrad".into(),
+            steps: 300,
+            lr: 0.05,
+            momentum: 0.9,
+            lr_schedule: "cosine".into(),
+            seed: 42,
+            train_examples: 2048,
+            test_examples: 512,
+            difficulty: 0.6,
+            eval_every: 100,
+            log_every: 20,
+            checkpoint: None,
+        }
+    }
+}
+
+impl TrainConfig {
+    pub fn from_table(t: &Table) -> Self {
+        let d = Self::default();
+        Self {
+            model: t.str_or("train.model", &d.model),
+            mode: t.str_or("train.mode", &d.mode),
+            steps: t.usize_or("train.steps", d.steps),
+            lr: t.f64_or("train.lr", d.lr),
+            momentum: t.f64_or("train.momentum", d.momentum),
+            lr_schedule: t.str_or("train.lr_schedule", &d.lr_schedule),
+            seed: t.u64_or("train.seed", d.seed),
+            train_examples: t.usize_or("data.train_examples", d.train_examples),
+            test_examples: t.usize_or("data.test_examples", d.test_examples),
+            difficulty: t.f64_or("data.difficulty", d.difficulty),
+            eval_every: t.usize_or("train.eval_every", d.eval_every),
+            log_every: t.usize_or("train.log_every", d.log_every),
+            checkpoint: t.get("train.checkpoint").and_then(Value::as_str).map(String::from),
+        }
+    }
+}
+
+/// Federated coordinator config (paper §1's motivating deployment).
+#[derive(Clone, Debug)]
+pub struct FedConfig {
+    pub workers: usize,
+    pub rounds: usize,
+    pub local_steps: usize,
+    pub iid: bool,
+    /// probability a worker is a straggler in a round
+    pub straggler_prob: f64,
+    /// simulated straggler slowdown factor
+    pub straggler_slowdown: f64,
+    pub train: TrainConfig,
+}
+
+impl Default for FedConfig {
+    fn default() -> Self {
+        Self {
+            workers: 4,
+            rounds: 10,
+            local_steps: 20,
+            iid: true,
+            straggler_prob: 0.0,
+            straggler_slowdown: 3.0,
+            train: TrainConfig::default(),
+        }
+    }
+}
+
+impl FedConfig {
+    pub fn from_table(t: &Table) -> Self {
+        let d = Self::default();
+        Self {
+            workers: t.usize_or("federated.workers", d.workers),
+            rounds: t.usize_or("federated.rounds", d.rounds),
+            local_steps: t.usize_or("federated.local_steps", d.local_steps),
+            iid: t.bool_or("federated.iid", d.iid),
+            straggler_prob: t.f64_or("federated.straggler_prob", d.straggler_prob),
+            straggler_slowdown: t.f64_or("federated.straggler_slowdown", d.straggler_slowdown),
+            train: TrainConfig::from_table(t),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let t = Table::parse(
+            r#"
+            # comment
+            top = 1
+            [train]
+            model = "resnet8"   # trailing comment
+            lr = 0.1
+            steps = 500
+            verbose = true
+            dims = [1, 2, 3]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(t.get("top"), Some(&Value::Int(1)));
+        assert_eq!(t.str_or("train.model", "x"), "resnet8");
+        assert_eq!(t.f64_or("train.lr", 0.0), 0.1);
+        assert_eq!(t.usize_or("train.steps", 0), 500);
+        assert!(t.bool_or("train.verbose", false));
+        assert_eq!(
+            t.get("train.dims"),
+            Some(&Value::Arr(vec![Value::Int(1), Value::Int(2), Value::Int(3)]))
+        );
+    }
+
+    #[test]
+    fn merge_overrides() {
+        let mut a = Table::parse("x = 1\ny = 2").unwrap();
+        let b = Table::parse("y = 3").unwrap();
+        a.merge(b);
+        assert_eq!(a.get("y"), Some(&Value::Int(3)));
+        assert_eq!(a.get("x"), Some(&Value::Int(1)));
+    }
+
+    #[test]
+    fn typed_train_config() {
+        let t = Table::parse("[train]\nmode = \"bp\"\nlr = 0.2").unwrap();
+        let c = TrainConfig::from_table(&t);
+        assert_eq!(c.mode, "bp");
+        assert_eq!(c.lr, 0.2);
+        assert_eq!(c.momentum, 0.9); // default
+    }
+
+    #[test]
+    fn bad_syntax_rejected() {
+        assert!(Table::parse("no_equals_here").is_err());
+        assert!(Table::parse("x = @@").is_err());
+    }
+}

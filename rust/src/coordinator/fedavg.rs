@@ -1,0 +1,139 @@
+//! FedAvg aggregation (McMahan et al. 2017 — the paper's reference [16]).
+
+use anyhow::{bail, Result};
+
+use crate::tensor::Tensor;
+
+/// Unweighted mean of parameter sets.
+pub fn fedavg(updates: &[&Vec<Tensor>]) -> Result<Vec<Tensor>> {
+    let w = vec![1.0; updates.len()];
+    weighted_fedavg(updates, &w)
+}
+
+/// Examples-weighted FedAvg: global_i = Σ_k (n_k / n) · params_k,i.
+pub fn weighted_fedavg(updates: &[&Vec<Tensor>], weights: &[f64]) -> Result<Vec<Tensor>> {
+    if updates.is_empty() {
+        bail!("no updates to aggregate");
+    }
+    if updates.len() != weights.len() {
+        bail!("{} updates vs {} weights", updates.len(), weights.len());
+    }
+    let total: f64 = weights.iter().sum();
+    if total <= 0.0 {
+        bail!("non-positive total weight");
+    }
+    let n_tensors = updates[0].len();
+    for (k, u) in updates.iter().enumerate() {
+        if u.len() != n_tensors {
+            bail!("worker {k} returned {} tensors, expected {n_tensors}", u.len());
+        }
+    }
+    let mut out: Vec<Tensor> = updates[0]
+        .iter()
+        .map(|t| {
+            let mut z = Tensor::zeros(t.shape());
+            z.axpy((weights[0] / total) as f32, t);
+            z
+        })
+        .collect();
+    for (k, u) in updates.iter().enumerate().skip(1) {
+        let alpha = (weights[k] / total) as f32;
+        for (acc, t) in out.iter_mut().zip(u.iter()) {
+            if acc.shape() != t.shape() {
+                bail!("worker {k}: shape mismatch {:?} vs {:?}", t.shape(), acc.shape());
+            }
+            acc.axpy(alpha, t);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{for_all, UsizeIn};
+    use crate::util::rng::Rng;
+
+    fn t(v: &[f32]) -> Tensor {
+        Tensor::new(vec![v.len()], v.to_vec())
+    }
+
+    #[test]
+    fn unweighted_mean() {
+        let a = vec![t(&[1.0, 2.0])];
+        let b = vec![t(&[3.0, 4.0])];
+        let out = fedavg(&[&a, &b]).unwrap();
+        assert_eq!(out[0].data(), &[2.0, 3.0]);
+    }
+
+    #[test]
+    fn weighted_mean() {
+        let a = vec![t(&[0.0])];
+        let b = vec![t(&[10.0])];
+        let out = weighted_fedavg(&[&a, &b], &[1.0, 3.0]).unwrap();
+        assert!((out[0].data()[0] - 7.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rejects_mismatches() {
+        let a = vec![t(&[0.0])];
+        let b = vec![t(&[1.0]), t(&[2.0])];
+        assert!(fedavg(&[&a, &b]).is_err());
+        assert!(weighted_fedavg(&[&a], &[]).is_err());
+        assert!(weighted_fedavg(&[&a], &[0.0]).is_err());
+        let c = vec![t(&[1.0, 2.0])];
+        assert!(fedavg(&[&a, &c]).is_err());
+        let empty: &[&Vec<Tensor>] = &[];
+        assert!(fedavg(empty).is_err());
+    }
+
+    #[test]
+    fn prop_identical_updates_are_fixed_point() {
+        // FedAvg(k copies of P) == P for any k and any tensor contents
+        for_all(11, &UsizeIn(1, 8), 32, |&k| {
+            let mut rng = Rng::new(k as u64);
+            let mut data = vec![0f32; 33];
+            rng.fill_normal(&mut data, 2.0);
+            let p = vec![t(&data)];
+            let refs: Vec<&Vec<Tensor>> = (0..k).map(|_| &p).collect();
+            let out = fedavg(&refs).map_err(|e| e.to_string())?;
+            let max_err = out[0]
+                .data()
+                .iter()
+                .zip(&data)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            if max_err < 1e-5 {
+                Ok(())
+            } else {
+                Err(format!("fixed point violated: {max_err}"))
+            }
+        });
+    }
+
+    #[test]
+    fn prop_aggregate_within_convex_hull() {
+        // every coordinate of the aggregate lies in [min, max] of inputs
+        for_all(12, &UsizeIn(2, 6), 32, |&k| {
+            let mut sets = Vec::new();
+            for i in 0..k {
+                let mut rng = Rng::new(100 + i as u64);
+                let mut d = vec![0f32; 17];
+                rng.fill_normal(&mut d, 1.0);
+                sets.push(vec![t(&d)]);
+            }
+            let refs: Vec<&Vec<Tensor>> = sets.iter().collect();
+            let weights: Vec<f64> = (1..=k).map(|i| i as f64).collect();
+            let out = weighted_fedavg(&refs, &weights).map_err(|e| e.to_string())?;
+            for j in 0..17 {
+                let lo = sets.iter().map(|s| s[0].data()[j]).fold(f32::MAX, f32::min);
+                let hi = sets.iter().map(|s| s[0].data()[j]).fold(f32::MIN, f32::max);
+                let v = out[0].data()[j];
+                if v < lo - 1e-5 || v > hi + 1e-5 {
+                    return Err(format!("coord {j}: {v} outside [{lo}, {hi}]"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

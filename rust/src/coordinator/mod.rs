@@ -1,0 +1,210 @@
+//! Federated edge-training coordinator — the L3 systems contribution.
+//!
+//! The paper motivates EfficientGrad with federated learning: edge devices
+//! must *train locally* and ship model updates, not data (§1). This module
+//! implements that deployment: a leader drives rounds of local training on
+//! N simulated edge workers (std threads, each with its own data shard and
+//! PJRT executables), aggregates with FedAvg, and accounts communication
+//! and (via the accel simulator's energy model) on-device training energy
+//! per round.
+//!
+//! Worker execution is genuinely concurrent: the `xla` handles are not
+//! `Send`, so each worker thread brings up its own PJRT client and
+//! compiles its own executable — exactly like a fleet of edge devices,
+//! each with its own accelerator and its own ParamStore replica.
+
+pub mod fedavg;
+pub mod worker;
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::FedConfig;
+use crate::data::synthetic::{generate, SynthConfig};
+use crate::data::Dataset;
+use crate::manifest::Manifest;
+use crate::params::ParamStore;
+use crate::runtime::Runtime;
+use crate::util::rng::Rng;
+
+pub use fedavg::{fedavg, weighted_fedavg};
+pub use worker::{WorkerHandle, WorkerReport, WorkerTask};
+
+/// Outcome of one federated round.
+#[derive(Clone, Debug)]
+pub struct RoundReport {
+    pub round: usize,
+    pub mean_loss: f64,
+    pub mean_sparsity: f64,
+    /// bytes shipped up (worker->leader) this round
+    pub upload_bytes: u64,
+    pub download_bytes: u64,
+    pub eval_acc: f64,
+    pub wall_secs: f64,
+    /// per-worker simulated wall time (stragglers show here)
+    pub worker_secs: Vec<f64>,
+}
+
+/// Full run summary.
+#[derive(Clone, Debug)]
+pub struct FedSummary {
+    pub rounds: Vec<RoundReport>,
+    pub final_acc: f64,
+    pub total_upload_bytes: u64,
+    pub total_download_bytes: u64,
+}
+
+/// The federated leader.
+pub struct Leader {
+    cfg: FedConfig,
+    global: ParamStore,
+    workers: Vec<WorkerHandle>,
+    test: Dataset,
+    eval: crate::runtime::exec::EvalState,
+    model_batch: usize,
+}
+
+impl Leader {
+    /// Build leader + workers. Shards the synthetic dataset across
+    /// workers (IID or label-skewed per config).
+    pub fn new(rt: &Runtime, manifest: &Manifest, cfg: FedConfig) -> Result<Self> {
+        if cfg.workers == 0 {
+            bail!("need at least one worker");
+        }
+        let model = manifest.model(&cfg.train.model)?.clone();
+        let full = generate(&SynthConfig {
+            n: cfg.train.train_examples + cfg.train.test_examples,
+            difficulty: cfg.train.difficulty as f32,
+            seed: cfg.train.seed,
+            ..Default::default()
+        });
+        let (train, test) = full.split(cfg.train.train_examples);
+        let shards = train.shard(cfg.workers, cfg.iid, cfg.train.seed ^ 0x5A4D);
+
+        let tag = format!("train_{}", cfg.train.mode);
+        let art = model.artifact(&tag).with_context(|| {
+            format!("mode {:?} not exported for {}", cfg.train.mode, model.name)
+        })?;
+        let eval_exe = rt.load(model.artifact("fwd")?)?;
+        let eval = crate::runtime::exec::EvalState::new(eval_exe, &model)?;
+
+        let workers = shards
+            .into_iter()
+            .enumerate()
+            .map(|(i, shard)| {
+                WorkerHandle::spawn(i, shard, art.clone(), &model, cfg.train.clone())
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let global = ParamStore::init(&model, cfg.train.seed);
+        Ok(Self {
+            cfg,
+            global,
+            workers,
+            test,
+            eval,
+            model_batch: model.batch,
+        })
+    }
+
+    /// Bytes of one model broadcast (params only; momenta stay local,
+    /// feedback B is derived from the shared seed — a real EfficientGrad
+    /// deployment never ships B).
+    fn model_bytes(&self) -> u64 {
+        (self.global.param_elements() * 4) as u64
+    }
+
+    /// Run all rounds.
+    pub fn run(&mut self) -> Result<FedSummary> {
+        let mut rounds = Vec::with_capacity(self.cfg.rounds);
+        let mut straggler_rng = Rng::new(self.cfg.train.seed ^ 0x57AA);
+        for round in 0..self.cfg.rounds {
+            let t0 = Instant::now();
+            // broadcast current global params
+            let (tx, rx) = mpsc::channel::<WorkerReport>();
+            let mut dispatched = 0usize;
+            for w in &self.workers {
+                let slowdown = if straggler_rng.uniform() < self.cfg.straggler_prob {
+                    self.cfg.straggler_slowdown
+                } else {
+                    1.0
+                };
+                w.submit(WorkerTask {
+                    round,
+                    params: self.global.params.clone(),
+                    local_steps: self.cfg.local_steps,
+                    slowdown,
+                    reply: tx.clone(),
+                })?;
+                dispatched += 1;
+            }
+            drop(tx);
+
+            // gather
+            let mut reports = Vec::with_capacity(dispatched);
+            for _ in 0..dispatched {
+                reports.push(rx.recv().context("worker died mid-round")?);
+            }
+            reports.sort_by_key(|r| r.worker_id);
+
+            // aggregate (examples-weighted FedAvg)
+            let weights: Vec<f64> = reports.iter().map(|r| r.examples as f64).collect();
+            let updates: Vec<&Vec<crate::tensor::Tensor>> =
+                reports.iter().map(|r| &r.params).collect();
+            self.global.params = weighted_fedavg(&updates, &weights)?;
+
+            let mean_loss = reports.iter().map(|r| r.mean_loss).sum::<f64>()
+                / reports.len() as f64;
+            let mean_sparsity = reports.iter().map(|r| r.mean_sparsity).sum::<f64>()
+                / reports.len() as f64;
+            let eval_acc = self.evaluate()?;
+            let report = RoundReport {
+                round,
+                mean_loss,
+                mean_sparsity,
+                upload_bytes: self.model_bytes() * dispatched as u64,
+                download_bytes: self.model_bytes() * dispatched as u64,
+                eval_acc,
+                wall_secs: t0.elapsed().as_secs_f64(),
+                worker_secs: reports.iter().map(|r| r.sim_secs).collect(),
+            };
+            log::info!(
+                "round {round:3} loss {mean_loss:.4} acc {eval_acc:.4} sparsity {mean_sparsity:.3} ({:.2}s)",
+                report.wall_secs
+            );
+            rounds.push(report);
+        }
+        let final_acc = rounds.last().map(|r| r.eval_acc).unwrap_or(0.0);
+        let total_upload_bytes = rounds.iter().map(|r| r.upload_bytes).sum();
+        let total_download_bytes = rounds.iter().map(|r| r.download_bytes).sum();
+        Ok(FedSummary {
+            rounds,
+            final_acc,
+            total_upload_bytes,
+            total_download_bytes,
+        })
+    }
+
+    fn evaluate(&self) -> Result<f64> {
+        let mut correct = 0.0;
+        let mut total = 0usize;
+        for idx in crate::data::batcher::eval_batches(&self.test, self.model_batch) {
+            let batch = self.test.gather(&idx);
+            correct += self.eval.accuracy(&self.global, &batch)? * idx.len() as f64;
+            total += idx.len();
+        }
+        if total == 0 {
+            bail!("test set smaller than one batch");
+        }
+        Ok(correct / total as f64)
+    }
+
+    /// Graceful shutdown (joins worker threads).
+    pub fn shutdown(self) {
+        for w in self.workers {
+            w.shutdown();
+        }
+    }
+}

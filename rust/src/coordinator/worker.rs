@@ -1,0 +1,174 @@
+//! Edge worker: a thread owning a data shard + train-step executable.
+//!
+//! Workers model the paper's edge devices: they receive the global model,
+//! run `local_steps` of EfficientGrad training on their private shard, and
+//! ship back updated parameters plus telemetry (loss, realized gradient
+//! sparsity — the input the accelerator energy model needs). A `slowdown`
+//! factor simulates stragglers; the simulated time is reported without
+//! actually sleeping so tests stay fast.
+
+use std::sync::mpsc::{self, Sender};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::TrainConfig;
+use crate::data::batcher::Batcher;
+use crate::data::Dataset;
+use crate::manifest::{ArtifactSpec, ModelSpec};
+use crate::params::ParamStore;
+use crate::runtime::{Runtime, TrainState};
+use crate::tensor::Tensor;
+
+/// One round's work order.
+pub struct WorkerTask {
+    pub round: usize,
+    pub params: Vec<Tensor>,
+    pub local_steps: usize,
+    /// straggler slowdown factor (1.0 = healthy)
+    pub slowdown: f64,
+    pub reply: mpsc::Sender<WorkerReport>,
+}
+
+/// One round's result.
+#[derive(Clone, Debug)]
+pub struct WorkerReport {
+    pub worker_id: usize,
+    pub round: usize,
+    pub params: Vec<Tensor>,
+    pub examples: usize,
+    pub mean_loss: f64,
+    pub mean_sparsity: f64,
+    /// measured wall time x slowdown (what a real deployment would see)
+    pub sim_secs: f64,
+}
+
+enum Msg {
+    Task(WorkerTask),
+    Stop,
+}
+
+/// Handle to a running worker thread.
+pub struct WorkerHandle {
+    pub id: usize,
+    tx: Sender<Msg>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl WorkerHandle {
+    /// Spawn the worker thread. The `xla` crate's handles are not `Send`,
+    /// so the thread creates its *own* PJRT client and compiles the train
+    /// artifact itself — exactly like a real edge device bringing up its
+    /// own accelerator. Compile failures surface through the `ready`
+    /// handshake so `spawn` stays synchronous and fallible.
+    pub fn spawn(
+        id: usize,
+        shard: Dataset,
+        train_art: ArtifactSpec,
+        model: &ModelSpec,
+        cfg: TrainConfig,
+    ) -> Result<Self> {
+        let mut store = ParamStore::init(model, cfg.seed); // momenta + B local
+        let batch = model.batch;
+        if shard.n < batch {
+            return Err(anyhow!(
+                "worker {id}: shard has {} examples < batch {batch}",
+                shard.n
+            ));
+        }
+        let model = model.clone();
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let join = std::thread::Builder::new()
+            .name(format!("edge-worker-{id}"))
+            .spawn(move || {
+                let state = match (|| -> Result<TrainState> {
+                    let rt = Runtime::cpu()?;
+                    TrainState::new(rt.load(&train_art)?, &model)
+                })() {
+                    Ok(s) => {
+                        let _ = ready_tx.send(Ok(()));
+                        s
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                let mut batcher = Batcher::new(&shard, batch, cfg.seed ^ id as u64);
+                while let Ok(Msg::Task(task)) = rx.recv() {
+                    let t0 = Instant::now();
+                    store.params = task.params;
+                    let mut losses = 0.0;
+                    let mut spars = 0.0;
+                    let mut ok = true;
+                    for _ in 0..task.local_steps {
+                        let batch = batcher.next_batch();
+                        match state.step(
+                            &mut store,
+                            &batch,
+                            cfg.lr as f32,
+                            cfg.momentum as f32,
+                        ) {
+                            Ok(out) => {
+                                losses += out.loss as f64;
+                                spars += crate::util::stats::mean(&out.sparsity);
+                            }
+                            Err(e) => {
+                                log::error!("worker {id}: step failed: {e:#}");
+                                ok = false;
+                                break;
+                            }
+                        }
+                    }
+                    if !ok {
+                        // drop the reply sender: leader sees a dead round
+                        continue;
+                    }
+                    let n = task.local_steps.max(1) as f64;
+                    let _ = task.reply.send(WorkerReport {
+                        worker_id: id,
+                        round: task.round,
+                        params: store.params.clone(),
+                        examples: shard.n,
+                        mean_loss: losses / n,
+                        mean_sparsity: spars / n,
+                        sim_secs: t0.elapsed().as_secs_f64() * task.slowdown,
+                    });
+                }
+            })
+            .map_err(|e| anyhow!("spawning worker {id}: {e}"))?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("worker {id} died during startup"))?
+            .map_err(|e| e.context(format!("worker {id} failed to compile artifact")))?;
+        Ok(Self {
+            id,
+            tx,
+            join: Some(join),
+        })
+    }
+
+    pub fn submit(&self, task: WorkerTask) -> Result<()> {
+        self.tx
+            .send(Msg::Task(task))
+            .map_err(|_| anyhow!("worker {} channel closed", self.id))
+    }
+
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Msg::Stop);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for WorkerHandle {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Stop);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}

@@ -1,0 +1,59 @@
+//! Fig. 1 — throughput vs. power across the hardware hierarchy.
+//!
+//! The paper's figure positions published devices (CPU/GPU/mobile/
+//! accelerators) on a log-log throughput/power plane and shows
+//! EfficientGrad landing in the edge power envelope at high efficiency.
+//! We regenerate it from the same literature numbers plus our *simulated*
+//! points for EfficientGrad and the EyerissV2-BP baseline.
+
+use crate::accel::config::{efficientgrad, eyeriss_v2_bp};
+use crate::accel::sim::simulate_training;
+use crate::accel::workload::{fig1_devices, resnet18_cifar};
+use crate::benchlib::Report;
+use crate::sparsity::expected_survivor_fraction;
+
+pub fn generate(prune_rate: f64) -> Report {
+    let mut rep = Report::new(
+        "Fig. 1 — Throughput vs. power, hardware hierarchy",
+        &["device", "class", "GOP/s", "power W", "GOP/s/W"],
+    );
+    for d in fig1_devices() {
+        rep.row(vec![
+            d.name.to_string(),
+            d.class.to_string(),
+            format!("{:.1}", d.gops),
+            format!("{:.2}", d.power_w),
+            format!("{:.1}", d.gops / d.power_w),
+        ]);
+    }
+    let wl = resnet18_cifar(16);
+    let surv = expected_survivor_fraction(prune_rate);
+    for cfg in [eyeriss_v2_bp(), efficientgrad()] {
+        let r = simulate_training(&cfg, &wl, surv);
+        let tp = r.throughput_ops() / 1e9;
+        let pw = r.avg_power_w(&cfg);
+        rep.row(vec![
+            format!("{} (sim, training)", cfg.name),
+            "edge".into(),
+            format!("{tp:.1}"),
+            format!("{pw:.2}"),
+            format!("{:.1}", tp / pw),
+        ]);
+    }
+    rep
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn fig1_has_simulated_and_literature_rows() {
+        let rep = super::generate(0.9);
+        // smoke: printable + saves
+        let p = std::env::temp_dir().join("effgrad_fig1_test.csv");
+        rep.save_csv(&p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.contains("EfficientGrad (sim, training)"));
+        assert!(text.contains("Tesla P100"));
+        std::fs::remove_file(&p).ok();
+    }
+}

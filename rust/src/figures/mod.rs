@@ -1,0 +1,25 @@
+//! Figure regenerators: one module per figure in the paper's evaluation.
+//! Each produces a [`crate::benchlib::Report`] (printed as markdown and
+//! saved as CSV under `reports/`) whose rows mirror what the paper plots.
+//!
+//! | paper artifact | module | needs artifacts? |
+//! |---|---|---|
+//! | Fig. 1 throughput-vs-power hierarchy | [`fig1`] | no (simulator) |
+//! | Fig. 3a gradient distribution        | [`fig3`] | yes (probe HLO) |
+//! | Fig. 3b BP-vs-EfficientGrad angles   | [`fig3`] | yes (probe HLO) |
+//! | Fig. 5a accuracy convergence         | [`fig5a`] | yes (train HLO) |
+//! | Fig. 5b normalized throughput/power  | [`fig5b`] | no (simulator) |
+
+pub mod fig1;
+pub mod fig3;
+pub mod fig5a;
+pub mod fig5b;
+
+use std::path::PathBuf;
+
+/// Where figure CSVs land.
+pub fn reports_dir() -> PathBuf {
+    std::env::var_os("EFFICIENTGRAD_REPORTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("reports"))
+}

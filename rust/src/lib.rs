@@ -1,0 +1,44 @@
+//! # EfficientGrad — gradient-pruned sign-symmetric feedback alignment
+//!
+//! Rust + JAX + Pallas reproduction of *"Efficient Training Convolutional
+//! Neural Networks on Edge Devices with Gradient-pruned Sign-symmetric
+//! Feedback Alignment"* (Hong & Yue, 2021).
+//!
+//! Three layers (see `DESIGN.md`):
+//! * **L1/L2 (build time)**: Pallas kernels + JAX models under `python/`,
+//!   AOT-lowered to HLO-text artifacts in `artifacts/`.
+//! * **L3 (this crate)**: the runtime system — PJRT execution
+//!   ([`runtime`]), single-device training ([`training`]), the federated
+//!   edge coordinator ([`coordinator`]), and the accelerator simulator
+//!   that reproduces the paper's hardware evaluation ([`accel`]).
+//!
+//! Python never runs on the request path: once `make artifacts` has been
+//! run, the `efficientgrad` binary is self-contained.
+
+pub mod accel;
+pub mod benchlib;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod figures;
+pub mod manifest;
+pub mod params;
+pub mod runtime;
+pub mod sparsity;
+pub mod tensor;
+pub mod testing;
+pub mod training;
+pub mod util;
+
+/// Crate version (mirrors Cargo.toml).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}
+
+/// Default artifacts directory, overridable with `EFFICIENTGRAD_ARTIFACTS`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var_os("EFFICIENTGRAD_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+}

@@ -1,0 +1,289 @@
+//! `efficientgrad` — CLI for the EfficientGrad reproduction.
+//!
+//! Subcommands:
+//!   train      single-device training via the AOT artifacts
+//!   federated  leader + N edge workers with FedAvg (paper §1 deployment)
+//!   simulate   accelerator simulator (Fig. 5b / headline numbers)
+//!   figures    regenerate paper figures into reports/
+//!   doctor     validate artifacts against the manifest
+//!   help
+
+use anyhow::{bail, Result};
+
+use efficientgrad::cli::{render_help, Args, FlagSpec};
+use efficientgrad::config::{FedConfig, Table, TrainConfig, Value};
+use efficientgrad::data::synthetic::{generate, SynthConfig};
+use efficientgrad::manifest::Manifest;
+use efficientgrad::runtime::Runtime;
+use efficientgrad::{accel, coordinator, figures, training, util};
+
+fn main() {
+    util::logging::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn common_flags() -> Vec<FlagSpec> {
+    vec![
+        FlagSpec { name: "config", help: "TOML config file", takes_value: true, default: None },
+        FlagSpec { name: "model", help: "model name (convnet_t|convnet_s|resnet8|resnet18)", takes_value: true, default: None },
+        FlagSpec { name: "mode", help: "feedback mode (bp|fa|binary|sign|signsym|efficientgrad)", takes_value: true, default: None },
+        FlagSpec { name: "steps", help: "training steps", takes_value: true, default: None },
+        FlagSpec { name: "lr", help: "learning rate", takes_value: true, default: None },
+        FlagSpec { name: "seed", help: "seed", takes_value: true, default: None },
+        FlagSpec { name: "checkpoint", help: "save checkpoint here", takes_value: true, default: None },
+        FlagSpec { name: "metrics-csv", help: "write per-step metrics CSV", takes_value: true, default: None },
+    ]
+}
+
+fn load_table(args: &Args) -> Result<Table> {
+    let mut table = match args.get("config") {
+        Some(path) => Table::load(std::path::Path::new(path))?,
+        None => Table::default(),
+    };
+    // CLI overrides
+    if let Some(v) = args.get("model") {
+        table.set("train.model", Value::Str(v.into()));
+    }
+    if let Some(v) = args.get("mode") {
+        table.set("train.mode", Value::Str(v.into()));
+    }
+    if let Some(v) = args.get_usize("steps")? {
+        table.set("train.steps", Value::Int(v as i64));
+    }
+    if let Some(v) = args.get_f64("lr")? {
+        table.set("train.lr", Value::Float(v));
+    }
+    if let Some(v) = args.get_u64("seed")? {
+        table.set("train.seed", Value::Int(v as i64));
+    }
+    if let Some(v) = args.get("checkpoint") {
+        table.set("train.checkpoint", Value::Str(v.into()));
+    }
+    Ok(table)
+}
+
+fn dispatch(argv: &[String]) -> Result<()> {
+    let (cmd, rest) = match argv.split_first() {
+        Some((c, r)) => (c.as_str(), r),
+        None => ("help", &[] as &[String]),
+    };
+    match cmd {
+        "train" => cmd_train(rest),
+        "federated" => cmd_federated(rest),
+        "simulate" => cmd_simulate(rest),
+        "figures" => cmd_figures(rest),
+        "doctor" => cmd_doctor(rest),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        "version" | "--version" => {
+            println!("efficientgrad {}", efficientgrad::version());
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}; try `efficientgrad help`"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "efficientgrad {} — gradient-pruned sign-symmetric feedback alignment\n\n\
+         USAGE: efficientgrad <command> [flags]\n\n\
+         COMMANDS:\n\
+         \u{20}  train      single-device training on the synthetic edge workload\n\
+         \u{20}  federated  federated leader + N edge workers (FedAvg)\n\
+         \u{20}  simulate   accelerator simulator: EfficientGrad vs EyerissV2-BP\n\
+         \u{20}  figures    regenerate the paper's figures into reports/\n\
+         \u{20}  doctor     validate artifacts/ against manifest.json\n\
+         \u{20}  help, version\n\n\
+         Run any command with --help for its flags.",
+        efficientgrad::version()
+    );
+}
+
+fn cmd_train(raw: &[String]) -> Result<()> {
+    let specs = common_flags();
+    if raw.iter().any(|a| a == "--help") {
+        println!("{}", render_help("efficientgrad", "train", "Single-device training", &specs));
+        return Ok(());
+    }
+    let args = Args::parse(raw, &specs)?;
+    let table = load_table(&args)?;
+    let cfg = TrainConfig::from_table(&table);
+
+    let rt = Runtime::cpu()?;
+    let manifest = Manifest::load(&efficientgrad::artifacts_dir())?;
+    log::info!(
+        "training {} mode={} steps={} on {}",
+        cfg.model,
+        cfg.mode,
+        cfg.steps,
+        rt.platform()
+    );
+    let ds = generate(&SynthConfig {
+        n: cfg.train_examples + cfg.test_examples,
+        difficulty: cfg.difficulty as f32,
+        seed: cfg.seed,
+        ..Default::default()
+    });
+    let (train, test) = ds.split(cfg.train_examples);
+    let mut trainer = training::Trainer::new(&rt, &manifest, cfg)?;
+    let acc = trainer.run(&train, &test)?;
+    println!(
+        "final: eval_acc={acc:.4} loss={:.4} mean_sparsity={:.3} steps={}",
+        trainer.log.trailing_loss(10).unwrap_or(f64::NAN),
+        trainer.log.mean_sparsity(),
+        trainer.log.records.len()
+    );
+    if let Some(path) = args.get("metrics-csv") {
+        trainer.log.save_csv(std::path::Path::new(path))?;
+        println!("metrics -> {path}");
+    }
+    Ok(())
+}
+
+fn cmd_federated(raw: &[String]) -> Result<()> {
+    let mut specs = common_flags();
+    specs.extend([
+        FlagSpec { name: "workers", help: "number of edge workers", takes_value: true, default: Some("4") },
+        FlagSpec { name: "rounds", help: "federated rounds", takes_value: true, default: Some("8") },
+        FlagSpec { name: "local-steps", help: "local steps per round", takes_value: true, default: Some("10") },
+        FlagSpec { name: "non-iid", help: "label-skewed shards", takes_value: false, default: None },
+        FlagSpec { name: "straggler-prob", help: "per-round straggler probability", takes_value: true, default: Some("0.0") },
+    ]);
+    if raw.iter().any(|a| a == "--help") {
+        println!("{}", render_help("efficientgrad", "federated", "Federated edge training", &specs));
+        return Ok(());
+    }
+    let args = Args::parse(raw, &specs)?;
+    let table = load_table(&args)?;
+    let mut cfg = FedConfig::from_table(&table);
+    if let Some(v) = args.get_usize("workers")? {
+        cfg.workers = v;
+    }
+    if let Some(v) = args.get_usize("rounds")? {
+        cfg.rounds = v;
+    }
+    if let Some(v) = args.get_usize("local-steps")? {
+        cfg.local_steps = v;
+    }
+    if args.get_bool("non-iid") {
+        cfg.iid = false;
+    }
+    if let Some(v) = args.get_f64("straggler-prob")? {
+        cfg.straggler_prob = v;
+    }
+
+    let rt = Runtime::cpu()?;
+    let manifest = Manifest::load(&efficientgrad::artifacts_dir())?;
+    let mut leader = coordinator::Leader::new(&rt, &manifest, cfg.clone())?;
+    let summary = leader.run()?;
+    leader.shutdown();
+    println!(
+        "federated done: final_acc={:.4} rounds={} upload={:.1} MB download={:.1} MB",
+        summary.final_acc,
+        summary.rounds.len(),
+        summary.total_upload_bytes as f64 / 1e6,
+        summary.total_download_bytes as f64 / 1e6,
+    );
+    Ok(())
+}
+
+fn cmd_simulate(raw: &[String]) -> Result<()> {
+    let specs = vec![
+        FlagSpec { name: "batch", help: "workload batch size", takes_value: true, default: Some("16") },
+        FlagSpec { name: "prune-rate", help: "pruning rate P", takes_value: true, default: Some("0.9") },
+        FlagSpec { name: "survivor", help: "override survivor fraction (measured)", takes_value: true, default: None },
+    ];
+    if raw.iter().any(|a| a == "--help") {
+        println!("{}", render_help("efficientgrad", "simulate", "Accelerator simulator", &specs));
+        return Ok(());
+    }
+    let args = Args::parse(raw, &specs)?;
+    let batch = args.get_usize("batch")?.unwrap_or(16);
+    let p = args.get_f64("prune-rate")?.unwrap_or(0.9);
+    let survivor = args.get_f64("survivor")?;
+    let wl = accel::resnet18_cifar(batch);
+    let out = figures::fig5b::generate(&wl, p, survivor);
+    out.report.print();
+    figures::fig5b::headline(p).print();
+    Ok(())
+}
+
+fn cmd_figures(raw: &[String]) -> Result<()> {
+    let specs = vec![
+        FlagSpec { name: "model", help: "model for fig3/fig5a", takes_value: true, default: Some("convnet_s") },
+        FlagSpec { name: "steps", help: "training steps for fig3/fig5a", takes_value: true, default: Some("120") },
+        FlagSpec { name: "only", help: "comma list: fig1,fig3,fig5a,fig5b", takes_value: true, default: Some("fig1,fig3,fig5a,fig5b") },
+    ];
+    if raw.iter().any(|a| a == "--help") {
+        println!("{}", render_help("efficientgrad", "figures", "Regenerate paper figures", &specs));
+        return Ok(());
+    }
+    let args = Args::parse(raw, &specs)?;
+    let model = args.get("model").unwrap_or("convnet_s").to_string();
+    let steps = args.get_usize("steps")?.unwrap_or(120);
+    let only: Vec<&str> = args.get("only").unwrap_or("").split(',').collect();
+    let dir = figures::reports_dir();
+
+    if only.contains(&"fig1") {
+        let rep = figures::fig1::generate(0.9);
+        rep.print();
+        rep.save_csv(&dir.join("fig1.csv"))?;
+    }
+    if only.contains(&"fig5b") {
+        let out = figures::fig5b::generate(&accel::resnet18_cifar(16), 0.9, None);
+        out.report.print();
+        out.report.save_csv(&dir.join("fig5b.csv"))?;
+        let h = figures::fig5b::headline(0.9);
+        h.print();
+        h.save_csv(&dir.join("headline.csv"))?;
+    }
+    if only.contains(&"fig3") || only.contains(&"fig5a") {
+        let rt = Runtime::cpu()?;
+        let manifest = Manifest::load(&efficientgrad::artifacts_dir())?;
+        if only.contains(&"fig3") {
+            let out =
+                figures::fig3::generate(&rt, &manifest, &model, steps, (steps / 8).max(1))?;
+            out.angles.print();
+            out.angles.save_csv(&dir.join("fig3b_angles.csv"))?;
+            out.hist.save_csv(&dir.join("fig3a_hist.csv"))?;
+            println!("fig3a histogram -> {}", dir.join("fig3a_hist.csv").display());
+        }
+        if only.contains(&"fig5a") {
+            let exported = manifest.model(&model)?.train_modes();
+            let modes: Vec<&str> = exported.iter().map(String::as_str).collect();
+            let (rep, _) = figures::fig5a::generate(&rt, &manifest, &model, &modes, steps)?;
+            rep.print();
+            rep.save_csv(&dir.join("fig5a.csv"))?;
+        }
+    }
+    println!("reports -> {}", dir.display());
+    Ok(())
+}
+
+fn cmd_doctor(raw: &[String]) -> Result<()> {
+    let _ = raw;
+    let manifest = Manifest::load(&efficientgrad::artifacts_dir())?;
+    let mut bad = 0;
+    for (name, model) in &manifest.models {
+        for (tag, art) in &model.artifacts {
+            match efficientgrad::runtime::check_artifact(model, art) {
+                Ok(()) => println!("OK    {name}/{tag}"),
+                Err(e) => {
+                    println!("FAIL  {name}/{tag}: {e}");
+                    bad += 1;
+                }
+            }
+        }
+    }
+    if bad > 0 {
+        bail!("{bad} artifacts failed validation");
+    }
+    println!("all artifacts consistent with manifest");
+    Ok(())
+}

@@ -1,0 +1,373 @@
+//! `artifacts/manifest.json` — the contract between the Python compile
+//! path and the Rust runtime. Parsed once at startup into typed structs.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// How a parameter / feedback tensor is initialized (mirrors the spec the
+/// Python layer emitted; Rust owns actual initialization).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Init {
+    HeNormal { fan_in: usize },
+    GlorotNormal { fan_in: usize, fan_out: usize },
+    Ones,
+    Zeros,
+}
+
+/// One parameter or feedback tensor.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init: Init,
+}
+
+impl TensorSpec {
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// One AOT-compiled HLO artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub tag: String,
+    pub file: PathBuf,
+    pub inputs: Vec<String>,
+    pub outputs: Vec<String>,
+}
+
+/// Conv/dense layer descriptor for the accelerator simulator.
+#[derive(Clone, Debug)]
+pub struct LayerDesc {
+    pub kind: LayerKind,
+    pub name: String,
+    pub n: usize,
+    pub h: usize,
+    pub w: usize,
+    pub ci: usize,
+    pub co: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub oh: usize,
+    pub ow: usize,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerKind {
+    Conv,
+    Dense,
+}
+
+impl LayerDesc {
+    /// Forward MACs of this layer.
+    pub fn macs(&self) -> u64 {
+        match self.kind {
+            LayerKind::Conv => {
+                (self.n * self.oh * self.ow) as u64
+                    * (self.k * self.k * self.ci * self.co) as u64
+            }
+            LayerKind::Dense => (self.n * self.ci * self.co) as u64,
+        }
+    }
+}
+
+/// One exported model.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub name: String,
+    pub params: Vec<TensorSpec>,
+    pub feedback: Vec<TensorSpec>,
+    pub batch: usize,
+    pub image: [usize; 3],
+    pub num_classes: usize,
+    pub prune_rate: f64,
+    pub param_count: usize,
+    pub layers: Vec<LayerDesc>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl ModelSpec {
+    pub fn artifact(&self, tag: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(tag)
+            .ok_or_else(|| anyhow!("model {} has no artifact {tag:?}", self.name))
+    }
+
+    /// Train-mode tags available (e.g. "bp", "efficientgrad").
+    pub fn train_modes(&self) -> Vec<String> {
+        self.artifacts
+            .keys()
+            .filter_map(|k| k.strip_prefix("train_").map(String::from))
+            .collect()
+    }
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub prune_rate: f64,
+    pub models: BTreeMap<String, ModelSpec>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}; run `make artifacts` first"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{path:?}: {e}"))?;
+        Self::from_json(&j, dir)
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelSpec> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("manifest has no model {name:?}; have {:?}", self.models.keys()))
+    }
+
+    fn from_json(j: &Json, dir: &Path) -> Result<Self> {
+        let version = j
+            .get("version")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("manifest missing version"))?;
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let prune_rate = j.get("prune_rate").and_then(Json::as_f64).unwrap_or(0.9);
+        let mut models = BTreeMap::new();
+        let mobj = j
+            .get("models")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing models"))?;
+        for (name, mj) in mobj {
+            models.insert(name.clone(), parse_model(name, mj, dir)?);
+        }
+        Ok(Self {
+            prune_rate,
+            models,
+            dir: dir.to_path_buf(),
+        })
+    }
+}
+
+fn parse_tensor_spec(j: &Json) -> Result<TensorSpec> {
+    let name = j
+        .get("name")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("tensor spec missing name"))?
+        .to_string();
+    let shape: Vec<usize> = j
+        .get("shape")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("{name}: missing shape"))?
+        .iter()
+        .map(|v| v.as_usize().ok_or_else(|| anyhow!("{name}: bad dim")))
+        .collect::<Result<_>>()?;
+    let init_j = j.get("init").ok_or_else(|| anyhow!("{name}: missing init"))?;
+    let kind = init_j
+        .get("kind")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("{name}: missing init.kind"))?;
+    let init = match kind {
+        "he_normal" => Init::HeNormal {
+            fan_in: init_j
+                .get("fan_in")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("{name}: he_normal needs fan_in"))?,
+        },
+        "glorot_normal" => Init::GlorotNormal {
+            fan_in: init_j
+                .get("fan_in")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("{name}: glorot needs fan_in"))?,
+            fan_out: init_j
+                .get("fan_out")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("{name}: glorot needs fan_out"))?,
+        },
+        "ones" => Init::Ones,
+        "zeros" => Init::Zeros,
+        other => bail!("{name}: unknown init kind {other:?}"),
+    };
+    Ok(TensorSpec { name, shape, init })
+}
+
+fn parse_model(name: &str, j: &Json, dir: &Path) -> Result<ModelSpec> {
+    let parse_specs = |key: &str| -> Result<Vec<TensorSpec>> {
+        j.get(key)
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("{name}: missing {key}"))?
+            .iter()
+            .map(parse_tensor_spec)
+            .collect()
+    };
+    let params = parse_specs("params")?;
+    let feedback = parse_specs("feedback")?;
+    let image_arr = j
+        .get("image")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("{name}: missing image"))?;
+    if image_arr.len() != 3 {
+        bail!("{name}: image must be rank 3");
+    }
+    let mut image = [0usize; 3];
+    for (i, v) in image_arr.iter().enumerate() {
+        image[i] = v.as_usize().ok_or_else(|| anyhow!("{name}: bad image dim"))?;
+    }
+
+    let mut layers = Vec::new();
+    for lj in j
+        .get("layers")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("{name}: missing layers"))?
+    {
+        let kind = match lj.get("kind").and_then(Json::as_str) {
+            Some("conv") => LayerKind::Conv,
+            Some("dense") => LayerKind::Dense,
+            other => bail!("{name}: bad layer kind {other:?}"),
+        };
+        let get = |k: &str| lj.get(k).and_then(Json::as_usize).unwrap_or(0);
+        layers.push(LayerDesc {
+            kind,
+            name: lj
+                .get("name")
+                .and_then(Json::as_str)
+                .unwrap_or("?")
+                .to_string(),
+            n: get("n"),
+            h: get("h"),
+            w: get("w"),
+            ci: get("ci"),
+            co: get("co"),
+            k: get("k"),
+            stride: get("stride").max(1),
+            oh: get("oh"),
+            ow: get("ow"),
+        });
+    }
+
+    let mut artifacts = BTreeMap::new();
+    for (tag, aj) in j
+        .get("artifacts")
+        .and_then(Json::as_obj)
+        .ok_or_else(|| anyhow!("{name}: missing artifacts"))?
+    {
+        let file = aj
+            .get("file")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("{name}/{tag}: missing file"))?;
+        let names = |k: &str| -> Result<Vec<String>> {
+            Ok(aj
+                .get(k)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("{name}/{tag}: missing {k}"))?
+                .iter()
+                .filter_map(|v| v.as_str().map(String::from))
+                .collect())
+        };
+        artifacts.insert(
+            tag.clone(),
+            ArtifactSpec {
+                tag: tag.clone(),
+                file: dir.join(file),
+                inputs: names("inputs")?,
+                outputs: names("outputs")?,
+            },
+        );
+    }
+
+    Ok(ModelSpec {
+        name: name.to_string(),
+        params,
+        feedback,
+        batch: j
+            .get("batch")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("{name}: missing batch"))?,
+        image,
+        num_classes: j.get("num_classes").and_then(Json::as_usize).unwrap_or(10),
+        prune_rate: j.get("prune_rate").and_then(Json::as_f64).unwrap_or(0.9),
+        param_count: j.get("param_count").and_then(Json::as_usize).unwrap_or(0),
+        layers,
+        artifacts,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_manifest() -> &'static str {
+        r#"{
+          "version": 1,
+          "prune_rate": 0.9,
+          "models": {
+            "toy": {
+              "params": [
+                {"name": "w", "shape": [3,3,3,8], "dtype": "f32",
+                 "init": {"kind": "he_normal", "fan_in": 27}},
+                {"name": "g", "shape": [8], "dtype": "f32", "init": {"kind": "ones"}}
+              ],
+              "feedback": [
+                {"name": "B", "shape": [3,3,3,8], "dtype": "f32",
+                 "init": {"kind": "he_normal", "fan_in": 27}}
+              ],
+              "batch": 4, "image": [32,32,3], "num_classes": 10,
+              "prune_rate": 0.9, "param_count": 224,
+              "layers": [
+                {"kind":"conv","name":"c","n":4,"h":32,"w":32,"ci":3,"co":8,
+                 "k":3,"stride":1,"oh":32,"ow":32},
+                {"kind":"dense","name":"fc","n":4,"ci":8,"co":10}
+              ],
+              "artifacts": {
+                "train_bp": {"file": "toy_train_bp.hlo.txt",
+                  "inputs": ["w","g","m.w","m.g","B","images","labels","lr","mu","seed"],
+                  "outputs": ["out.w","out.g","out.m.w","out.m.g","loss","acc","sparsity[1]"]}
+              }
+            }
+          }
+        }"#
+    }
+
+    #[test]
+    fn parses_toy_manifest() {
+        let j = Json::parse(toy_manifest()).unwrap();
+        let m = Manifest::from_json(&j, Path::new("/tmp/arts")).unwrap();
+        let model = m.model("toy").unwrap();
+        assert_eq!(model.params.len(), 2);
+        assert_eq!(model.params[0].init, Init::HeNormal { fan_in: 27 });
+        assert_eq!(model.params[0].len(), 216);
+        assert_eq!(model.feedback.len(), 1);
+        assert_eq!(model.batch, 4);
+        assert_eq!(model.layers.len(), 2);
+        assert_eq!(model.layers[0].macs(), 4 * 32 * 32 * 27 * 8);
+        assert_eq!(model.layers[1].macs(), 4 * 8 * 10);
+        let art = model.artifact("train_bp").unwrap();
+        assert_eq!(art.inputs.len(), 10);
+        assert!(art.file.ends_with("toy_train_bp.hlo.txt"));
+        assert_eq!(model.train_modes(), vec!["bp".to_string()]);
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let j = Json::parse(r#"{"version": 2, "models": {}}"#).unwrap();
+        assert!(Manifest::from_json(&j, Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn missing_model_errors() {
+        let j = Json::parse(toy_manifest()).unwrap();
+        let m = Manifest::from_json(&j, Path::new(".")).unwrap();
+        assert!(m.model("nope").is_err());
+        assert!(m.model("toy").unwrap().artifact("nope").is_err());
+    }
+}

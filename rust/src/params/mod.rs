@@ -1,0 +1,299 @@
+//! Parameter store: training state (weights, momenta, fixed feedback)
+//! owned by the Rust coordinator, initialized from the manifest's init
+//! specs, checkpointable to a simple length-prefixed binary format.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::manifest::{Init, ModelSpec, TensorSpec};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Full training state for one model replica.
+#[derive(Clone, Debug)]
+pub struct ParamStore {
+    pub params: Vec<Tensor>,
+    pub momenta: Vec<Tensor>,
+    pub feedback: Vec<Tensor>,
+    /// step counter (advances once per train-step execution)
+    pub step: u64,
+}
+
+fn init_tensor(spec: &TensorSpec, rng: &mut Rng) -> Tensor {
+    match spec.init {
+        Init::HeNormal { fan_in } => Tensor::he_normal(&spec.shape, fan_in, rng),
+        Init::GlorotNormal { fan_in, fan_out } => {
+            Tensor::glorot_normal(&spec.shape, fan_in, fan_out, rng)
+        }
+        Init::Ones => Tensor::ones(&spec.shape),
+        Init::Zeros => Tensor::zeros(&spec.shape),
+    }
+}
+
+impl ParamStore {
+    /// Fresh init. `seed` controls weights; the fixed feedback B draws
+    /// from `seed ^ FEEDBACK_SALT` so the same weights can be paired with
+    /// different feedback draws in ablations.
+    pub fn init(model: &ModelSpec, seed: u64) -> Self {
+        const FEEDBACK_SALT: u64 = 0xFEEDBAC4;
+        let prng = Rng::new(seed);
+        let params: Vec<Tensor> = model
+            .params
+            .iter()
+            .enumerate()
+            .map(|(i, s)| init_tensor(s, &mut prng.fold_in(i as u64)))
+            .collect();
+        let momenta = model
+            .params
+            .iter()
+            .map(|s| Tensor::zeros(&s.shape))
+            .collect();
+        let frng = Rng::new(seed ^ FEEDBACK_SALT);
+        let feedback = model
+            .feedback
+            .iter()
+            .enumerate()
+            .map(|(i, s)| init_tensor(s, &mut frng.fold_in(i as u64)))
+            .collect();
+        Self {
+            params,
+            momenta,
+            feedback,
+            step: 0,
+        }
+    }
+
+    pub fn param_elements(&self) -> usize {
+        self.params.iter().map(Tensor::len).sum()
+    }
+
+    /// L2 norm over all parameters (divergence watchdog).
+    pub fn global_norm(&self) -> f64 {
+        self.params
+            .iter()
+            .map(|t| t.norm().powi(2))
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    // ----------------------------------------------------------------
+    // checkpoint format: magic, version, step, then per section
+    // [count, (rank, dims.., len, f32 data)..] for params/momenta/feedback
+    // ----------------------------------------------------------------
+
+    const MAGIC: &'static [u8; 8] = b"EFFGRAD1";
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(path).with_context(|| format!("create {path:?}"))?,
+        );
+        f.write_all(Self::MAGIC)?;
+        f.write_all(&self.step.to_le_bytes())?;
+        for section in [&self.params, &self.momenta, &self.feedback] {
+            f.write_all(&(section.len() as u64).to_le_bytes())?;
+            for t in section {
+                f.write_all(&(t.shape().len() as u64).to_le_bytes())?;
+                for &d in t.shape() {
+                    f.write_all(&(d as u64).to_le_bytes())?;
+                }
+                f.write_all(&(t.len() as u64).to_le_bytes())?;
+                for &v in t.data() {
+                    f.write_all(&v.to_le_bytes())?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("open {path:?}"))?,
+        );
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != Self::MAGIC {
+            bail!("{path:?}: not an EfficientGrad checkpoint");
+        }
+        let step = read_u64(&mut f)?;
+        let mut sections = Vec::with_capacity(3);
+        for _ in 0..3 {
+            let count = read_u64(&mut f)? as usize;
+            let mut ts = Vec::with_capacity(count);
+            for _ in 0..count {
+                let rank = read_u64(&mut f)? as usize;
+                if rank > 8 {
+                    bail!("{path:?}: corrupt checkpoint (rank {rank})");
+                }
+                let mut shape = Vec::with_capacity(rank);
+                for _ in 0..rank {
+                    shape.push(read_u64(&mut f)? as usize);
+                }
+                let len = read_u64(&mut f)? as usize;
+                if len != shape.iter().product::<usize>() {
+                    bail!("{path:?}: corrupt checkpoint (len mismatch)");
+                }
+                let mut data = vec![0f32; len];
+                let mut buf = [0u8; 4];
+                for v in data.iter_mut() {
+                    f.read_exact(&mut buf)?;
+                    *v = f32::from_le_bytes(buf);
+                }
+                ts.push(Tensor::new(shape, data));
+            }
+            sections.push(ts);
+        }
+        let feedback = sections.pop().unwrap();
+        let momenta = sections.pop().unwrap();
+        let params = sections.pop().unwrap();
+        Ok(Self {
+            params,
+            momenta,
+            feedback,
+            step,
+        })
+    }
+
+    /// Validate state shapes against a model spec (checkpoint/model guard).
+    pub fn check_compatible(&self, model: &ModelSpec) -> Result<()> {
+        if self.params.len() != model.params.len()
+            || self.feedback.len() != model.feedback.len()
+        {
+            bail!(
+                "checkpoint has {}/{} param/feedback tensors, model {} wants {}/{}",
+                self.params.len(),
+                self.feedback.len(),
+                model.name,
+                model.params.len(),
+                model.feedback.len()
+            );
+        }
+        for (t, s) in self.params.iter().zip(&model.params) {
+            if t.shape() != s.shape.as_slice() {
+                bail!("{}: shape {:?} != {:?}", s.name, t.shape(), s.shape);
+            }
+        }
+        Ok(())
+    }
+}
+
+fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifest::LayerKind;
+
+    fn toy_model() -> ModelSpec {
+        ModelSpec {
+            name: "toy".into(),
+            params: vec![
+                TensorSpec {
+                    name: "w".into(),
+                    shape: vec![3, 3, 3, 8],
+                    init: Init::HeNormal { fan_in: 27 },
+                },
+                TensorSpec {
+                    name: "g".into(),
+                    shape: vec![8],
+                    init: Init::Ones,
+                },
+                TensorSpec {
+                    name: "b".into(),
+                    shape: vec![8],
+                    init: Init::Zeros,
+                },
+            ],
+            feedback: vec![TensorSpec {
+                name: "B".into(),
+                shape: vec![3, 3, 3, 8],
+                init: Init::HeNormal { fan_in: 27 },
+            }],
+            batch: 4,
+            image: [32, 32, 3],
+            num_classes: 10,
+            prune_rate: 0.9,
+            param_count: 232,
+            layers: vec![crate::manifest::LayerDesc {
+                kind: LayerKind::Conv,
+                name: "c".into(),
+                n: 4,
+                h: 32,
+                w: 32,
+                ci: 3,
+                co: 8,
+                k: 3,
+                stride: 1,
+                oh: 32,
+                ow: 32,
+            }],
+            artifacts: Default::default(),
+        }
+    }
+
+    #[test]
+    fn init_shapes_and_kinds() {
+        let m = toy_model();
+        let ps = ParamStore::init(&m, 1);
+        assert_eq!(ps.params.len(), 3);
+        assert_eq!(ps.params[0].shape(), &[3, 3, 3, 8]);
+        assert!(ps.params[1].data().iter().all(|&v| v == 1.0)); // ones
+        assert!(ps.params[2].data().iter().all(|&v| v == 0.0)); // zeros
+        assert!(ps.momenta.iter().all(|t| t.data().iter().all(|&v| v == 0.0)));
+        assert_eq!(ps.feedback.len(), 1);
+        assert_eq!(ps.param_elements(), 216 + 8 + 8);
+    }
+
+    #[test]
+    fn init_deterministic_but_feedback_independent() {
+        let m = toy_model();
+        let a = ParamStore::init(&m, 7);
+        let b = ParamStore::init(&m, 7);
+        assert_eq!(a.params[0], b.params[0]);
+        assert_eq!(a.feedback[0], b.feedback[0]);
+        // W and B are different draws
+        assert_ne!(a.params[0], a.feedback[0]);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let m = toy_model();
+        let mut ps = ParamStore::init(&m, 3);
+        ps.step = 41;
+        let dir = std::env::temp_dir().join("effgrad_test_ckpt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("toy.ckpt");
+        ps.save(&path).unwrap();
+        let re = ParamStore::load(&path).unwrap();
+        assert_eq!(re.step, 41);
+        assert_eq!(re.params, ps.params);
+        assert_eq!(re.momenta, ps.momenta);
+        assert_eq!(re.feedback, ps.feedback);
+        re.check_compatible(&m).unwrap();
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn incompatible_checkpoint_rejected() {
+        let m = toy_model();
+        let ps = ParamStore::init(&m, 3);
+        let mut other = toy_model();
+        other.params[0].shape = vec![1, 1, 3, 8];
+        assert!(ps.check_compatible(&other).is_err());
+    }
+
+    #[test]
+    fn corrupt_file_rejected() {
+        let dir = std::env::temp_dir().join("effgrad_test_ckpt2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.ckpt");
+        std::fs::write(&path, b"NOTACKPTxxxxxxxxxxxx").unwrap();
+        assert!(ParamStore::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

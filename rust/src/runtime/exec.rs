@@ -1,0 +1,257 @@
+//! Compiled executables + the training-step hot path.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::{int_tensor_to_literal, into_anyhow, literal_to_tensor, tensor_to_literal};
+use crate::data::Batch;
+use crate::manifest::{ArtifactSpec, ModelSpec};
+use crate::params::ParamStore;
+use crate::tensor::Tensor;
+
+/// A compiled HLO artifact.
+pub struct Executable {
+    pub tag: String,
+    pub file: PathBuf,
+    pub inputs: Vec<String>,
+    pub outputs: Vec<String>,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    pub fn compile(client: &xla::PjRtClient, spec: &ArtifactSpec) -> Result<Self> {
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            spec.file
+                .to_str()
+                .ok_or_else(|| anyhow!("non-utf8 path {:?}", spec.file))?,
+        )
+        .map_err(into_anyhow)
+        .with_context(|| format!("parsing {:?}", spec.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(into_anyhow)
+            .with_context(|| format!("XLA-compiling {:?}", spec.file))?;
+        log::debug!(
+            "compiled {} in {:.2}s",
+            spec.file.display(),
+            t0.elapsed().as_secs_f64()
+        );
+        Ok(Self {
+            tag: spec.tag.clone(),
+            file: spec.file.clone(),
+            inputs: spec.inputs.clone(),
+            outputs: spec.outputs.clone(),
+            exe,
+        })
+    }
+
+    /// Execute with literal inputs; returns the flattened output tuple.
+    /// (All our artifacts are lowered with return_tuple=True.)
+    pub fn run(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        if args.len() != self.inputs.len() {
+            bail!(
+                "{}: got {} args, artifact wants {}",
+                self.tag,
+                args.len(),
+                self.inputs.len()
+            );
+        }
+        let outs = self.exe.execute::<xla::Literal>(args).map_err(into_anyhow)?;
+        let lit = outs
+            .into_iter()
+            .next()
+            .and_then(|d| d.into_iter().next())
+            .ok_or_else(|| anyhow!("{}: no output buffer", self.tag))?
+            .to_literal_sync()
+            .map_err(into_anyhow)?;
+        lit.to_tuple().map_err(into_anyhow)
+    }
+}
+
+/// Outputs of one training step (scalars downloaded, state kept as
+/// literals only long enough to refresh the ParamStore).
+#[derive(Clone, Debug)]
+pub struct TrainOutputs {
+    pub loss: f32,
+    pub acc: f32,
+    /// realized zero-fraction per feedback transport (EfficientGrad),
+    /// empty/zeros for other modes
+    pub sparsity: Vec<f32>,
+}
+
+/// Driver binding a ParamStore to a compiled train-step artifact.
+///
+/// Input layout contract (aot.py): params…, momenta…, feedback…, images,
+/// labels, lr, mu, seed. Output: params'…, momenta'…, loss, acc, sparsity.
+pub struct TrainState {
+    pub exe: std::rc::Rc<Executable>,
+    pub n_params: usize,
+    pub n_feedback: usize,
+}
+
+impl TrainState {
+    pub fn new(exe: std::rc::Rc<Executable>, model: &ModelSpec) -> Result<Self> {
+        let want = 2 * model.params.len() + model.feedback.len() + 5;
+        if exe.inputs.len() != want {
+            bail!(
+                "artifact {} input arity {} != expected {want}",
+                exe.tag,
+                exe.inputs.len()
+            );
+        }
+        Ok(Self {
+            exe,
+            n_params: model.params.len(),
+            n_feedback: model.feedback.len(),
+        })
+    }
+
+    /// Run one SGD step, updating `store` in place.
+    pub fn step(
+        &self,
+        store: &mut ParamStore,
+        batch: &Batch,
+        lr: f32,
+        momentum: f32,
+    ) -> Result<TrainOutputs> {
+        let mut args = Vec::with_capacity(self.exe.inputs.len());
+        for t in store.params.iter().chain(&store.momenta) {
+            args.push(tensor_to_literal(t)?);
+        }
+        for t in &store.feedback {
+            args.push(tensor_to_literal(t)?);
+        }
+        args.push(tensor_to_literal(&batch.images)?);
+        args.push(int_tensor_to_literal(&batch.labels)?);
+        args.push(super::scalar_f32(lr));
+        args.push(super::scalar_f32(momentum));
+        args.push(super::scalar_i32(store.step as i32));
+
+        let outs = self.exe.run(&args)?;
+        let np = self.n_params;
+        if outs.len() != 2 * np + 3 {
+            bail!(
+                "train step returned {} outputs, expected {}",
+                outs.len(),
+                2 * np + 3
+            );
+        }
+        for (i, lit) in outs[..np].iter().enumerate() {
+            store.params[i] = literal_to_tensor(lit)?;
+        }
+        for (i, lit) in outs[np..2 * np].iter().enumerate() {
+            store.momenta[i] = literal_to_tensor(lit)?;
+        }
+        let loss = outs[2 * np].get_first_element::<f32>().map_err(into_anyhow)?;
+        let acc = outs[2 * np + 1]
+            .get_first_element::<f32>()
+            .map_err(into_anyhow)?;
+        let sparsity = outs[2 * np + 2].to_vec::<f32>().map_err(into_anyhow)?;
+        store.step += 1;
+        Ok(TrainOutputs {
+            loss,
+            acc,
+            sparsity,
+        })
+    }
+}
+
+/// Forward/eval driver: (params…, images) -> logits.
+pub struct EvalState {
+    pub exe: std::rc::Rc<Executable>,
+    pub n_params: usize,
+}
+
+impl EvalState {
+    pub fn new(exe: std::rc::Rc<Executable>, model: &ModelSpec) -> Result<Self> {
+        let want = model.params.len() + 1;
+        if exe.inputs.len() != want {
+            bail!("fwd artifact arity {} != {want}", exe.inputs.len());
+        }
+        Ok(Self {
+            exe,
+            n_params: model.params.len(),
+        })
+    }
+
+    pub fn logits(&self, store: &ParamStore, images: &Tensor) -> Result<Tensor> {
+        let mut args = Vec::with_capacity(self.n_params + 1);
+        for t in &store.params {
+            args.push(tensor_to_literal(t)?);
+        }
+        args.push(tensor_to_literal(images)?);
+        let outs = self.exe.run(&args)?;
+        literal_to_tensor(&outs[0])
+    }
+
+    /// Top-1 accuracy on a batch.
+    pub fn accuracy(&self, store: &ParamStore, batch: &Batch) -> Result<f64> {
+        let logits = self.logits(store, &batch.images)?;
+        let preds = logits.argmax_rows();
+        let labels = batch.labels.data();
+        let correct = preds
+            .iter()
+            .zip(labels)
+            .filter(|(&p, &l)| p as i32 == l)
+            .count();
+        Ok(correct as f64 / labels.len() as f64)
+    }
+}
+
+/// Fig. 3 probe driver: (params…, feedback…, images, labels, seed) ->
+/// (angles, stds, sparsity, hist, loss).
+pub struct ProbeState {
+    pub exe: std::rc::Rc<Executable>,
+    pub n_params: usize,
+    pub n_feedback: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct ProbeOutputs {
+    /// cos angle between BP and EfficientGrad gradient per param tensor
+    pub cos_angles: Vec<f32>,
+    pub grad_stds: Vec<f32>,
+    pub sparsity: f32,
+    /// 64-bin normalized histogram of delta/sigma over [-4, 4] (Fig. 3a)
+    pub hist: Vec<f32>,
+    pub loss: f32,
+}
+
+impl ProbeState {
+    pub fn new(exe: std::rc::Rc<Executable>, model: &ModelSpec) -> Result<Self> {
+        let want = model.params.len() + model.feedback.len() + 3;
+        if exe.inputs.len() != want {
+            bail!("probe artifact arity {} != {want}", exe.inputs.len());
+        }
+        Ok(Self {
+            exe,
+            n_params: model.params.len(),
+            n_feedback: model.feedback.len(),
+        })
+    }
+
+    pub fn probe(&self, store: &ParamStore, batch: &Batch, seed: i32) -> Result<ProbeOutputs> {
+        let mut args = Vec::with_capacity(self.exe.inputs.len());
+        for t in store.params.iter().chain(&store.feedback) {
+            args.push(tensor_to_literal(t)?);
+        }
+        args.push(tensor_to_literal(&batch.images)?);
+        args.push(int_tensor_to_literal(&batch.labels)?);
+        args.push(super::scalar_i32(seed));
+        let outs = self.exe.run(&args)?;
+        if outs.len() != 5 {
+            bail!("probe returned {} outputs, expected 5", outs.len());
+        }
+        Ok(ProbeOutputs {
+            cos_angles: outs[0].to_vec().map_err(into_anyhow)?,
+            grad_stds: outs[1].to_vec().map_err(into_anyhow)?,
+            sparsity: outs[2].get_first_element().map_err(into_anyhow)?,
+            hist: outs[3].to_vec().map_err(into_anyhow)?,
+            loss: outs[4].get_first_element().map_err(into_anyhow)?,
+        })
+    }
+}

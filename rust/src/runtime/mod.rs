@@ -1,0 +1,153 @@
+//! PJRT runtime: loads HLO-text artifacts and executes them on the CPU
+//! client. This is the only module that touches the `xla` crate; the rest
+//! of the coordinator works in host [`Tensor`]s.
+//!
+//! Perf notes (EXPERIMENTS.md §Perf): the hot path is
+//! `TrainState::step` — literal construction, `execute`, tuple
+//! decomposition, literal→tensor download. Buffers are reused where the
+//! API allows; see `runtime::exec` for the measured breakdown.
+
+pub mod exec;
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::manifest::{ArtifactSpec, ModelSpec};
+use crate::tensor::{IntTensor, Tensor};
+
+pub use exec::{Executable, TrainOutputs, TrainState};
+
+/// PJRT CPU client + compile cache.
+///
+/// NOT `Send`/`Sync`: the underlying `xla` crate wraps PJRT handles in
+/// `Rc`. Multi-threaded users (the federated coordinator) create one
+/// `Runtime` per thread — which also matches the deployment being
+/// modeled: every edge device owns its own accelerator instance.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    /// compile cache keyed by artifact path
+    cache: RefCell<BTreeMap<String, Rc<Executable>>>,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self {
+            client,
+            cache: RefCell::new(BTreeMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact (cached by path).
+    pub fn load(&self, spec: &ArtifactSpec) -> Result<Rc<Executable>> {
+        let key = spec.file.to_string_lossy().to_string();
+        if let Some(e) = self.cache.borrow().get(&key) {
+            return Ok(e.clone());
+        }
+        let exe = Rc::new(Executable::compile(&self.client, spec)?);
+        self.cache.borrow_mut().insert(key, exe.clone());
+        Ok(exe)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// literal <-> host tensor conversion
+// ---------------------------------------------------------------------------
+
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(t.data());
+    if t.shape().is_empty() {
+        // scalar: reshape to rank-0
+        return lit.reshape(&[]).map_err(into_anyhow);
+    }
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims).map_err(into_anyhow)
+}
+
+pub fn int_tensor_to_literal(t: &IntTensor) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(t.data());
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims).map_err(into_anyhow)
+}
+
+pub fn scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+pub fn scalar_i32(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+pub fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape().map_err(into_anyhow)?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data: Vec<f32> = lit.to_vec().map_err(into_anyhow)?;
+    Ok(Tensor::new(dims, data))
+}
+
+pub(crate) fn into_anyhow(e: xla::Error) -> anyhow::Error {
+    anyhow!("{e}")
+}
+
+/// Quick self-check used by `efficientgrad doctor` and integration tests:
+/// verifies an artifact's input arity matches its manifest spec.
+pub fn check_artifact(model: &ModelSpec, spec: &ArtifactSpec) -> Result<()> {
+    let text = std::fs::read_to_string(&spec.file)
+        .with_context(|| format!("reading {:?}", spec.file))?;
+    if !text.starts_with("HloModule") {
+        anyhow::bail!("{:?}: not HLO text", spec.file);
+    }
+    // count "parameter(" occurrences in the ENTRY computation as a cheap
+    // arity check against the manifest
+    let entry = text
+        .split("ENTRY ")
+        .nth(1)
+        .ok_or_else(|| anyhow!("{:?}: no ENTRY computation", spec.file))?;
+    let arity = entry.matches("parameter(").count();
+    if arity != spec.inputs.len() {
+        anyhow::bail!(
+            "{:?}: HLO entry has {arity} parameters, manifest says {} ({})",
+            spec.file,
+            spec.inputs.len(),
+            model.name
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let t = Tensor::new(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let lit = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let t = Tensor::scalar(3.25);
+        let lit = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&lit).unwrap();
+        assert_eq!(back.first(), 3.25);
+        assert!(back.shape().is_empty());
+    }
+
+    #[test]
+    fn int_literal_shape() {
+        let t = IntTensor::new(vec![4], vec![1, 2, 3, 4]);
+        let lit = int_tensor_to_literal(&t).unwrap();
+        let shape = lit.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[4]);
+    }
+}

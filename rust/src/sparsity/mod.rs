@@ -1,0 +1,186 @@
+//! Host-side mirror of the gradient-pruning math (paper eq. 3-5).
+//!
+//! The authoritative pruning happens inside the AOT HLO (L1 kernel); this
+//! module lets the L3 coordinator (a) predict sparsity from a configured
+//! pruning rate P to drive the accelerator simulator, and (b) verify the
+//! expectation-preservation invariant on gradients streamed back from the
+//! runtime (failure injection for the test suite).
+
+use crate::util::rng::Rng;
+use crate::util::stats::{ndtri, normal_cdf, std_dev, zero_fraction};
+
+/// eq. 5: τ = Φ⁻¹((1+P)/2) · σ.
+pub fn tau_from_rate(sigma: f64, prune_rate: f64) -> f64 {
+    let p = prune_rate.clamp(0.0, 0.999_999);
+    ndtri((1.0 + p) / 2.0) * sigma
+}
+
+/// eq. 3 applied on the host (verification / simulation only).
+pub fn stochastic_prune(delta: &[f32], tau: f64, rng: &mut Rng) -> Vec<f32> {
+    delta
+        .iter()
+        .map(|&d| {
+            let mag = d.abs() as f64;
+            if mag > tau {
+                d
+            } else {
+                let r = rng.uniform();
+                if mag >= r * tau {
+                    (tau as f32).copysign(d)
+                } else {
+                    0.0
+                }
+            }
+        })
+        .collect()
+}
+
+/// Expected *zero* fraction after pruning N(0,σ²) gradients at rate P.
+///
+/// Band mass below τ is P (eq. 4); within the band an element of
+/// magnitude a survives w.p. a/τ, so
+///   E[zero] = P − (2/τ)·∫₀^τ (a/σ)·φ(a/σ) da
+///           = P − (2σ/τ)·(φ(0) − φ(τ/σ))     with φ the std normal pdf.
+/// This is what the accelerator simulator uses to discount backward-phase
+/// MACs and DRAM traffic when no measured sparsity is available.
+pub fn expected_zero_fraction(prune_rate: f64) -> f64 {
+    let p = prune_rate.clamp(0.0, 0.999_999);
+    if p == 0.0 {
+        return 0.0;
+    }
+    let t = ndtri((1.0 + p) / 2.0); // tau in sigma units
+    let phi = |x: f64| (-x * x / 2.0).exp() / (std::f64::consts::TAU).sqrt();
+    p - (2.0 / t) * (phi(0.0) - phi(t))
+}
+
+/// Expected fraction of surviving (non-zero) backward values = 1 - E[zero].
+pub fn expected_survivor_fraction(prune_rate: f64) -> f64 {
+    1.0 - expected_zero_fraction(prune_rate)
+}
+
+/// Measured sparsity summary of a gradient tensor coming back from the
+/// runtime (drives the simulator with live numbers).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SparsityStats {
+    pub zero_fraction: f64,
+    pub sigma: f64,
+}
+
+pub fn measure(delta: &[f32]) -> SparsityStats {
+    SparsityStats {
+        zero_fraction: zero_fraction(delta),
+        sigma: std_dev(delta),
+    }
+}
+
+/// Verify expectation preservation: prune a tensor on the host and check
+/// the mean moved by less than `k` standard errors. Returns the z-score.
+pub fn expectation_drift_z(delta: &[f32], prune_rate: f64, seed: u64) -> f64 {
+    let sigma = std_dev(delta);
+    if sigma == 0.0 || delta.is_empty() {
+        return 0.0;
+    }
+    let tau = tau_from_rate(sigma, prune_rate);
+    let mut rng = Rng::new(seed);
+    let pruned = stochastic_prune(delta, tau, &mut rng);
+    let m0: f64 = delta.iter().map(|&x| x as f64).sum::<f64>() / delta.len() as f64;
+    let m1: f64 = pruned.iter().map(|&x| x as f64).sum::<f64>() / delta.len() as f64;
+    let se = sigma / (delta.len() as f64).sqrt();
+    (m1 - m0) / se.max(1e-300)
+}
+
+/// Fraction of N(0,1) mass inside [-t, t] (sanity helper for eq. 4).
+pub fn band_mass(t: f64) -> f64 {
+    2.0 * normal_cdf(t) - 1.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tau_is_scipy_consistent() {
+        // P=0.9 -> tau = ndtri(0.95) = 1.6448... times sigma
+        assert!((tau_from_rate(1.0, 0.9) - 1.6448536269514722).abs() < 1e-7);
+        assert!((tau_from_rate(2.0, 0.9) - 2.0 * 1.6448536269514722).abs() < 1e-7);
+    }
+
+    #[test]
+    fn band_mass_roundtrip() {
+        let p = 0.85;
+        let t = tau_from_rate(1.0, p);
+        assert!((band_mass(t) - p).abs() < 1e-9);
+    }
+
+    #[test]
+    fn expected_zero_fraction_monotone_and_bounded() {
+        let mut prev = 0.0;
+        for &p in &[0.1, 0.3, 0.5, 0.7, 0.9, 0.99] {
+            let z = expected_zero_fraction(p);
+            assert!(z > prev, "not monotone at {p}");
+            assert!(z < p, "promotions must keep zeros below P");
+            prev = z;
+        }
+        assert_eq!(expected_zero_fraction(0.0), 0.0);
+    }
+
+    #[test]
+    fn expected_matches_monte_carlo() {
+        let mut rng = Rng::new(0);
+        let n = 400_000;
+        let mut delta = vec![0f32; n];
+        rng.fill_normal(&mut delta, 1.0);
+        for &p in &[0.5, 0.9] {
+            let tau = tau_from_rate(std_dev(&delta), p);
+            let pruned = stochastic_prune(&delta, tau, &mut rng);
+            let measured = zero_fraction(&pruned);
+            let want = expected_zero_fraction(p);
+            assert!(
+                (measured - want).abs() < 0.01,
+                "P={p}: measured {measured} want {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn expectation_preserved() {
+        let mut rng = Rng::new(1);
+        let mut delta = vec![0f32; 200_000];
+        rng.fill_normal(&mut delta, 0.5);
+        let z = expectation_drift_z(&delta, 0.9, 2);
+        assert!(z.abs() < 4.0, "mean drifted: z = {z}");
+    }
+
+    #[test]
+    fn prune_respects_case_split() {
+        let delta = [5.0f32, 0.0, -5.0];
+        let mut rng = Rng::new(3);
+        let out = stochastic_prune(&delta, 1.0, &mut rng);
+        assert_eq!(out[0], 5.0);
+        assert_eq!(out[1], 0.0);
+        assert_eq!(out[2], -5.0);
+    }
+
+    #[test]
+    fn property_zero_fraction_grows_with_rate() {
+        use crate::testing::{for_all, F64In};
+        let mut rng = Rng::new(4);
+        let mut delta = vec![0f32; 50_000];
+        rng.fill_normal(&mut delta, 1.0);
+        for_all(5, &F64In(0.05, 0.95), 20, |&p| {
+            let tau = tau_from_rate(1.0, p);
+            let mut r = Rng::new(6);
+            let z = zero_fraction(&stochastic_prune(&delta, tau, &mut r));
+            let z2 = {
+                let tau2 = tau_from_rate(1.0, (p + 0.04).min(0.99));
+                let mut r = Rng::new(6);
+                zero_fraction(&stochastic_prune(&delta, tau2, &mut r))
+            };
+            if z2 + 1e-9 >= z {
+                Ok(())
+            } else {
+                Err(format!("sparsity not monotone at P={p}: {z} vs {z2}"))
+            }
+        });
+    }
+}

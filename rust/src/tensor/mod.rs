@@ -1,0 +1,233 @@
+//! Host-side tensor: a shape + contiguous `f32` buffer.
+//!
+//! This is deliberately *not* a general ndarray — the coordinator only
+//! needs to hold parameter/activation state, convert to/from PJRT
+//! literals, aggregate (FedAvg), and compute metrics. All heavy math runs
+//! inside the AOT-compiled XLA executables.
+
+use crate::util::rng::Rng;
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} vs data len {}",
+            data.len()
+        );
+        Self { shape, data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Self {
+            data: vec![0.0; shape.iter().product()],
+            shape: shape.to_vec(),
+        }
+    }
+
+    pub fn ones(shape: &[usize]) -> Self {
+        Self {
+            data: vec![1.0; shape.iter().product()],
+            shape: shape.to_vec(),
+        }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        Self {
+            data: vec![v; shape.iter().product()],
+            shape: shape.to_vec(),
+        }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Self {
+            shape: vec![],
+            data: vec![v],
+        }
+    }
+
+    /// N(0, sigma^2) init.
+    pub fn randn(shape: &[usize], sigma: f32, rng: &mut Rng) -> Self {
+        let mut data = vec![0.0f32; shape.iter().product()];
+        rng.fill_normal(&mut data, sigma);
+        Self {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    /// He-normal: sigma = sqrt(2 / fan_in).
+    pub fn he_normal(shape: &[usize], fan_in: usize, rng: &mut Rng) -> Self {
+        Self::randn(shape, (2.0 / fan_in as f32).sqrt(), rng)
+    }
+
+    /// Glorot-normal: sigma = sqrt(2 / (fan_in + fan_out)).
+    pub fn glorot_normal(shape: &[usize], fan_in: usize, fan_out: usize, rng: &mut Rng) -> Self {
+        Self::randn(shape, (2.0 / (fan_in + fan_out) as f32).sqrt(), rng)
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    pub fn first(&self) -> f32 {
+        self.data[0]
+    }
+
+    // -- in-place arithmetic used by FedAvg / metrics ----------------------
+
+    /// self += other
+    pub fn add_assign(&mut self, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += *b;
+        }
+    }
+
+    /// self += alpha * other
+    pub fn axpy(&mut self, alpha: f32, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * *b;
+        }
+    }
+
+    /// self *= alpha
+    pub fn scale(&mut self, alpha: f32) {
+        for a in self.data.iter_mut() {
+            *a *= alpha;
+        }
+    }
+
+    /// L2 norm.
+    pub fn norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt()
+    }
+
+    /// Squared L2 distance to another tensor.
+    pub fn dist2(&self, other: &Tensor) -> f64 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| ((a - b) as f64).powi(2))
+            .sum()
+    }
+
+    /// Row-major argmax over the last axis; returns one index per row.
+    /// Requires a 2-D shape (the logits case).
+    pub fn argmax_rows(&self) -> Vec<usize> {
+        assert_eq!(self.shape.len(), 2, "argmax_rows needs 2-D, got {:?}", self.shape);
+        let (n, c) = (self.shape[0], self.shape[1]);
+        (0..n)
+            .map(|i| {
+                let row = &self.data[i * c..(i + 1) * c];
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(j, _)| j)
+                    .unwrap()
+            })
+            .collect()
+    }
+}
+
+/// Int32 host tensor (labels).
+#[derive(Clone, Debug, PartialEq)]
+pub struct IntTensor {
+    shape: Vec<usize>,
+    data: Vec<i32>,
+}
+
+impl IntTensor {
+    pub fn new(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Self { shape, data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn data(&self) -> &[i32] {
+        &self.data
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_data_invariant() {
+        let t = Tensor::zeros(&[2, 3]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.shape(), &[2, 3]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_shape_panics() {
+        Tensor::new(vec![2, 2], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn he_init_std() {
+        let mut rng = Rng::new(0);
+        let t = Tensor::he_normal(&[64, 64, 9], 576, &mut rng);
+        let sd = crate::util::stats::std_dev(t.data());
+        let want = (2.0f64 / 576.0).sqrt();
+        assert!((sd - want).abs() / want < 0.05, "sd {sd} want {want}");
+    }
+
+    #[test]
+    fn axpy_and_scale() {
+        let mut a = Tensor::ones(&[4]);
+        let b = Tensor::full(&[4], 2.0);
+        a.axpy(0.5, &b);
+        assert_eq!(a.data(), &[2.0, 2.0, 2.0, 2.0]);
+        a.scale(0.25);
+        assert_eq!(a.data(), &[0.5, 0.5, 0.5, 0.5]);
+    }
+
+    #[test]
+    fn argmax_rows_works() {
+        let t = Tensor::new(vec![2, 3], vec![0.1, 0.9, 0.2, 3.0, -1.0, 2.0]);
+        assert_eq!(t.argmax_rows(), vec![1, 0]);
+    }
+
+    #[test]
+    fn norm_and_dist() {
+        let a = Tensor::new(vec![2], vec![3.0, 4.0]);
+        assert!((a.norm() - 5.0).abs() < 1e-12);
+        let b = Tensor::zeros(&[2]);
+        assert!((a.dist2(&b) - 25.0).abs() < 1e-12);
+    }
+}

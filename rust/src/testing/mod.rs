@@ -1,0 +1,184 @@
+//! Property-testing harness (no `proptest` offline; DESIGN.md
+//! substitutions). Provides seeded generators and a `for_all` driver with
+//! greedy input shrinking on failure — enough to express the coordinator
+//! and simulator invariants the test plan calls for.
+
+use crate::util::rng::Rng;
+
+/// Number of cases per property (override with EFFICIENTGRAD_PROP_CASES).
+pub fn default_cases() -> usize {
+    std::env::var("EFFICIENTGRAD_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64)
+}
+
+/// A generator of random values of `T`.
+pub trait Gen<T> {
+    fn sample(&self, rng: &mut Rng) -> T;
+    /// Candidate smaller versions of a failing input (greedy shrink).
+    fn shrink(&self, _value: &T) -> Vec<T> {
+        Vec::new()
+    }
+}
+
+/// Uniform usize in [lo, hi].
+pub struct UsizeIn(pub usize, pub usize);
+
+impl Gen<usize> for UsizeIn {
+    fn sample(&self, rng: &mut Rng) -> usize {
+        self.0 + rng.below((self.1 - self.0 + 1) as u64) as usize
+    }
+
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *v > self.0 {
+            out.push(self.0);
+            out.push(self.0 + (*v - self.0) / 2);
+        }
+        out.dedup();
+        out.retain(|x| x != v);
+        out
+    }
+}
+
+/// Uniform f64 in [lo, hi).
+pub struct F64In(pub f64, pub f64);
+
+impl Gen<f64> for F64In {
+    fn sample(&self, rng: &mut Rng) -> f64 {
+        rng.uniform_in(self.0, self.1)
+    }
+
+    fn shrink(&self, v: &f64) -> Vec<f64> {
+        let mid = (self.0 + self.1) / 2.0;
+        if (*v - self.0).abs() > 1e-9 {
+            vec![self.0, (self.0 + *v) / 2.0, mid]
+        } else {
+            vec![]
+        }
+    }
+}
+
+/// Vec<f32> of length in [1, max_len], N(0, sigma).
+pub struct NormalVec {
+    pub max_len: usize,
+    pub sigma: f32,
+}
+
+impl Gen<Vec<f32>> for NormalVec {
+    fn sample(&self, rng: &mut Rng) -> Vec<f32> {
+        let n = 1 + rng.below(self.max_len as u64) as usize;
+        let mut v = vec![0f32; n];
+        rng.fill_normal(&mut v, self.sigma);
+        v
+    }
+
+    fn shrink(&self, v: &Vec<f32>) -> Vec<Vec<f32>> {
+        let mut out = Vec::new();
+        if v.len() > 1 {
+            out.push(v[..v.len() / 2].to_vec());
+            out.push(v[..v.len() - 1].to_vec());
+        }
+        out
+    }
+}
+
+/// Run `prop` over `cases` random inputs; on failure, greedily shrink and
+/// panic with the minimal failing input (Debug-printed).
+pub fn for_all<T, G, F>(seed: u64, gen: &G, cases: usize, mut prop: F)
+where
+    T: std::fmt::Debug + Clone,
+    G: Gen<T>,
+    F: FnMut(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen.sample(&mut rng);
+        if let Err(msg) = prop(&input) {
+            // shrink
+            let mut best = input.clone();
+            let mut best_msg = msg;
+            let mut improved = true;
+            let mut budget = 200;
+            while improved && budget > 0 {
+                improved = false;
+                for cand in gen.shrink(&best) {
+                    budget -= 1;
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        improved = true;
+                        break;
+                    }
+                    if budget == 0 {
+                        break;
+                    }
+                }
+            }
+            panic!(
+                "property failed (case {case}, seed {seed})\n  minimal input: {best:?}\n  error: {best_msg}"
+            );
+        }
+    }
+}
+
+/// Two-generator convenience.
+pub fn for_all2<A, B, GA, GB, F>(seed: u64, ga: &GA, gb: &GB, cases: usize, mut prop: F)
+where
+    A: std::fmt::Debug + Clone,
+    B: std::fmt::Debug + Clone,
+    GA: Gen<A>,
+    GB: Gen<B>,
+    F: FnMut(&A, &B) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let a = ga.sample(&mut rng);
+        let b = gb.sample(&mut rng);
+        if let Err(msg) = prop(&a, &b) {
+            panic!("property failed (case {case}, seed {seed})\n  input: ({a:?}, {b:?})\n  error: {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        for_all(0, &UsizeIn(1, 100), 50, |&n| {
+            if n >= 1 {
+                Ok(())
+            } else {
+                Err("impossible".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_shrunk_input() {
+        for_all(0, &UsizeIn(1, 1000), 200, |&n| {
+            if n < 10 {
+                Ok(())
+            } else {
+                Err(format!("{n} too big"))
+            }
+        });
+    }
+
+    #[test]
+    fn normal_vec_lengths_in_range() {
+        let g = NormalVec {
+            max_len: 16,
+            sigma: 1.0,
+        };
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let v = g.sample(&mut rng);
+            assert!((1..=16).contains(&v.len()));
+        }
+    }
+}

@@ -1,0 +1,138 @@
+//! Training metrics: per-step records, summaries, CSV export.
+
+use std::path::Path;
+
+/// One training step's observables.
+#[derive(Clone, Debug)]
+pub struct StepRecord {
+    pub step: usize,
+    pub loss: f64,
+    pub batch_acc: f64,
+    pub lr: f64,
+    /// mean realized gradient sparsity across pruned transports
+    pub sparsity: f64,
+    pub eval_acc: Option<f64>,
+}
+
+/// Append-only training log.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsLog {
+    pub records: Vec<StepRecord>,
+}
+
+impl MetricsLog {
+    pub fn push(&mut self, r: StepRecord) {
+        self.records.push(r);
+    }
+
+    pub fn final_loss(&self) -> Option<f64> {
+        self.records.last().map(|r| r.loss)
+    }
+
+    /// Mean loss over the trailing `n` steps (smoother convergence signal).
+    pub fn trailing_loss(&self, n: usize) -> Option<f64> {
+        if self.records.is_empty() {
+            return None;
+        }
+        let tail = &self.records[self.records.len().saturating_sub(n)..];
+        Some(tail.iter().map(|r| r.loss).sum::<f64>() / tail.len() as f64)
+    }
+
+    pub fn mean_sparsity(&self) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        self.records.iter().map(|r| r.sparsity).sum::<f64>() / self.records.len() as f64
+    }
+
+    /// Best eval accuracy seen.
+    pub fn best_eval(&self) -> Option<f64> {
+        self.records
+            .iter()
+            .filter_map(|r| r.eval_acc)
+            .fold(None, |acc, v| Some(acc.map_or(v, |a: f64| a.max(v))))
+    }
+
+    /// Loss curve downsampled to ~`points` entries (figure export).
+    pub fn loss_curve(&self, points: usize) -> Vec<(usize, f64)> {
+        if self.records.is_empty() {
+            return vec![];
+        }
+        let stride = (self.records.len() / points.max(1)).max(1);
+        self.records
+            .iter()
+            .step_by(stride)
+            .map(|r| (r.step, r.loss))
+            .collect()
+    }
+
+    pub fn save_csv(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut out = String::from("step,loss,batch_acc,lr,sparsity,eval_acc\n");
+        for r in &self.records {
+            out.push_str(&format!(
+                "{},{:.6},{:.4},{:.6},{:.4},{}\n",
+                r.step,
+                r.loss,
+                r.batch_acc,
+                r.lr,
+                r.sparsity,
+                r.eval_acc.map(|v| format!("{v:.4}")).unwrap_or_default()
+            ));
+        }
+        std::fs::write(path, out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(step: usize, loss: f64) -> StepRecord {
+        StepRecord {
+            step,
+            loss,
+            batch_acc: 0.5,
+            lr: 0.1,
+            sparsity: 0.4,
+            eval_acc: if step == 5 { Some(0.7) } else { None },
+        }
+    }
+
+    #[test]
+    fn trailing_and_best() {
+        let mut log = MetricsLog::default();
+        for i in 0..10 {
+            log.push(rec(i, 10.0 - i as f64));
+        }
+        assert_eq!(log.final_loss(), Some(1.0));
+        assert!((log.trailing_loss(2).unwrap() - 1.5).abs() < 1e-12);
+        assert_eq!(log.best_eval(), Some(0.7));
+        assert!((log.mean_sparsity() - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let mut log = MetricsLog::default();
+        log.push(rec(0, 2.3));
+        let p = std::env::temp_dir().join("effgrad_metrics_test.csv");
+        log.save_csv(&p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.contains("step,loss"));
+        assert!(text.contains("2.3"));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn loss_curve_downsamples() {
+        let mut log = MetricsLog::default();
+        for i in 0..100 {
+            log.push(rec(i, i as f64));
+        }
+        let c = log.loss_curve(10);
+        assert!(c.len() >= 10 && c.len() <= 11);
+        assert_eq!(c[0].0, 0);
+    }
+}

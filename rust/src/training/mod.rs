@@ -1,0 +1,231 @@
+//! Single-device trainer: the e2e driver binding dataset + ParamStore +
+//! AOT train step, with LR scheduling, periodic eval, CSV metrics and
+//! divergence watchdogs. The federated coordinator composes several of
+//! these; `examples/train_cnn_e2e.rs` drives one directly.
+
+pub mod metrics;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::TrainConfig;
+use crate::data::batcher::{eval_batches, Batcher};
+use crate::data::Dataset;
+use crate::manifest::{Manifest, ModelSpec};
+use crate::params::ParamStore;
+use crate::runtime::exec::EvalState;
+use crate::runtime::{Runtime, TrainState};
+
+pub use metrics::{MetricsLog, StepRecord};
+
+/// Learning-rate schedule.
+#[derive(Clone, Debug)]
+pub enum LrSchedule {
+    Const(f64),
+    /// cosine decay from lr to lr*floor over total steps
+    Cosine { lr: f64, total: usize, floor: f64 },
+    /// step decay: lr * gamma^(step/every)
+    Step { lr: f64, every: usize, gamma: f64 },
+}
+
+impl LrSchedule {
+    pub fn from_config(cfg: &TrainConfig) -> Result<Self> {
+        Ok(match cfg.lr_schedule.as_str() {
+            "const" => LrSchedule::Const(cfg.lr),
+            "cosine" => LrSchedule::Cosine {
+                lr: cfg.lr,
+                total: cfg.steps,
+                floor: 0.05,
+            },
+            "step" => LrSchedule::Step {
+                lr: cfg.lr,
+                every: (cfg.steps / 3).max(1),
+                gamma: 0.1,
+            },
+            other => bail!("unknown lr schedule {other:?}"),
+        })
+    }
+
+    pub fn at(&self, step: usize) -> f64 {
+        match *self {
+            LrSchedule::Const(lr) => lr,
+            LrSchedule::Cosine { lr, total, floor } => {
+                let t = (step as f64 / total.max(1) as f64).min(1.0);
+                let cos = 0.5 * (1.0 + (std::f64::consts::PI * t).cos());
+                lr * (floor + (1.0 - floor) * cos)
+            }
+            LrSchedule::Step { lr, every, gamma } => {
+                lr * gamma.powi((step / every.max(1)) as i32)
+            }
+        }
+    }
+}
+
+/// A bound single-device trainer.
+pub struct Trainer {
+    pub cfg: TrainConfig,
+    pub model: ModelSpec,
+    pub store: ParamStore,
+    train_state: TrainState,
+    eval_state: EvalState,
+    pub log: MetricsLog,
+}
+
+impl Trainer {
+    /// Build from manifest + runtime: loads (compiles) the train artifact
+    /// for `cfg.mode` and the fwd artifact for eval.
+    pub fn new(rt: &Runtime, manifest: &Manifest, cfg: TrainConfig) -> Result<Self> {
+        let model = manifest.model(&cfg.model)?.clone();
+        let tag = format!("train_{}", cfg.mode);
+        let art = model.artifact(&tag).with_context(|| {
+            format!(
+                "mode {:?} not exported for {}; available: {:?}",
+                cfg.mode,
+                model.name,
+                model.train_modes()
+            )
+        })?;
+        let train_state = TrainState::new(rt.load(art)?, &model)?;
+        let eval_state = EvalState::new(rt.load(model.artifact("fwd")?)?, &model)?;
+        let store = ParamStore::init(&model, cfg.seed);
+        Ok(Self {
+            cfg,
+            model,
+            store,
+            train_state,
+            eval_state,
+            log: MetricsLog::default(),
+        })
+    }
+
+    /// Run `steps` steps over `train` (owned batcher), evaluating on
+    /// `test` every `eval_every`. Returns final eval accuracy.
+    pub fn run(&mut self, train: &Dataset, test: &Dataset) -> Result<f64> {
+        let sched = LrSchedule::from_config(&self.cfg)?;
+        let mut batcher = Batcher::new(train, self.model.batch, self.cfg.seed ^ 0xBA7C);
+        let mut last_eval = 0.0;
+        for step in 0..self.cfg.steps {
+            let batch = batcher.next_batch();
+            let lr = sched.at(step) as f32;
+            let out = self
+                .train_state
+                .step(&mut self.store, &batch, lr, self.cfg.momentum as f32)?;
+            if !out.loss.is_finite() {
+                bail!("loss diverged to {} at step {step}", out.loss);
+            }
+            self.log.push(StepRecord {
+                step,
+                loss: out.loss as f64,
+                batch_acc: out.acc as f64,
+                lr: lr as f64,
+                sparsity: crate::util::stats::mean(&out.sparsity),
+                eval_acc: None,
+            });
+            if step % self.cfg.log_every == 0 {
+                log::info!(
+                    "[{}/{}] step {step:5} loss {:.4} acc {:.3} lr {:.4} sparsity {:.3}",
+                    self.model.name,
+                    self.cfg.mode,
+                    out.loss,
+                    out.acc,
+                    lr,
+                    crate::util::stats::mean(&out.sparsity),
+                );
+            }
+            if self.cfg.eval_every > 0
+                && (step + 1) % self.cfg.eval_every == 0
+            {
+                last_eval = self.evaluate(test)?;
+                if let Some(r) = self.log.records.last_mut() {
+                    r.eval_acc = Some(last_eval);
+                }
+                log::info!(
+                    "[{}/{}] step {step:5} EVAL acc {:.4}",
+                    self.model.name,
+                    self.cfg.mode,
+                    last_eval
+                );
+            }
+        }
+        if self.cfg.eval_every == 0 || self.cfg.steps % self.cfg.eval_every != 0 {
+            last_eval = self.evaluate(test)?;
+        }
+        if let Some(path) = &self.cfg.checkpoint {
+            self.store.save(std::path::Path::new(path))?;
+        }
+        Ok(last_eval)
+    }
+
+    /// One externally-driven step (used by the Fig. 3 probe loop and the
+    /// bench harness; `run` is the batteries-included path).
+    pub fn manual_step(&mut self, batch: &crate::data::Batch, lr: f32) -> Result<()> {
+        let out = self
+            .train_state
+            .step(&mut self.store, batch, lr, self.cfg.momentum as f32)?;
+        if !out.loss.is_finite() {
+            bail!("loss diverged to {}", out.loss);
+        }
+        self.log.push(StepRecord {
+            step: self.store.step as usize - 1,
+            loss: out.loss as f64,
+            batch_acc: out.acc as f64,
+            lr: lr as f64,
+            sparsity: crate::util::stats::mean(&out.sparsity),
+            eval_acc: None,
+        });
+        Ok(())
+    }
+
+    /// Full-sweep top-1 accuracy on a dataset.
+    pub fn evaluate(&self, ds: &Dataset) -> Result<f64> {
+        let mut correct_weighted = 0.0;
+        let mut total = 0usize;
+        for idx in eval_batches(ds, self.model.batch) {
+            let batch = ds.gather(&idx);
+            correct_weighted += self.eval_state.accuracy(&self.store, &batch)? * idx.len() as f64;
+            total += idx.len();
+        }
+        if total == 0 {
+            bail!("dataset smaller than one batch ({})", self.model.batch);
+        }
+        Ok(correct_weighted / total as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cosine_schedule_decays_to_floor() {
+        let s = LrSchedule::Cosine {
+            lr: 1.0,
+            total: 100,
+            floor: 0.05,
+        };
+        assert!((s.at(0) - 1.0).abs() < 1e-9);
+        assert!(s.at(50) < s.at(10));
+        assert!((s.at(100) - 0.05).abs() < 1e-9);
+        assert!((s.at(500) - 0.05).abs() < 1e-9); // clamped past total
+    }
+
+    #[test]
+    fn step_schedule() {
+        let s = LrSchedule::Step {
+            lr: 1.0,
+            every: 10,
+            gamma: 0.1,
+        };
+        assert!((s.at(9) - 1.0).abs() < 1e-12);
+        assert!((s.at(10) - 0.1).abs() < 1e-12);
+        assert!((s.at(25) - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn schedule_from_config_rejects_unknown() {
+        let cfg = TrainConfig {
+            lr_schedule: "warp".into(),
+            ..Default::default()
+        };
+        assert!(LrSchedule::from_config(&cfg).is_err());
+    }
+}

@@ -1,0 +1,66 @@
+//! Tiny leveled logger backing the `log` crate facade (no env_logger
+//! offline). Level from `EFFICIENTGRAD_LOG` (error|warn|info|debug|trace),
+//! default `info`. Timestamps are seconds since process start — enough for
+//! correlating coordinator events without pulling in a clock/format crate.
+
+use std::io::Write;
+use std::sync::OnceLock;
+use std::time::Instant;
+
+struct SimpleLogger {
+    start: Instant,
+    level: log::LevelFilter,
+}
+
+impl log::Log for SimpleLogger {
+    fn enabled(&self, metadata: &log::Metadata) -> bool {
+        metadata.level() <= self.level
+    }
+
+    fn log(&self, record: &log::Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = self.start.elapsed().as_secs_f64();
+        let mut err = std::io::stderr().lock();
+        let _ = writeln!(
+            err,
+            "[{t:9.3}s {:5} {}] {}",
+            record.level(),
+            record.target().split("::").last().unwrap_or(""),
+            record.args()
+        );
+    }
+
+    fn flush(&self) {}
+}
+
+static LOGGER: OnceLock<SimpleLogger> = OnceLock::new();
+
+/// Install the logger (idempotent).
+pub fn init() {
+    let level = match std::env::var("EFFICIENTGRAD_LOG").as_deref() {
+        Ok("error") => log::LevelFilter::Error,
+        Ok("warn") => log::LevelFilter::Warn,
+        Ok("debug") => log::LevelFilter::Debug,
+        Ok("trace") => log::LevelFilter::Trace,
+        _ => log::LevelFilter::Info,
+    };
+    let logger = LOGGER.get_or_init(|| SimpleLogger {
+        start: Instant::now(),
+        level,
+    });
+    if log::set_logger(logger).is_ok() {
+        log::set_max_level(level);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logger smoke");
+    }
+}

@@ -1,0 +1,7 @@
+//! Foundation substrates built in-repo (no network; see DESIGN.md
+//! substitutions): PRNG, JSON, statistics, logging.
+
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod stats;

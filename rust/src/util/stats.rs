@@ -1,0 +1,268 @@
+//! Statistics helpers shared by the trainer metrics, the sparsity module
+//! and the bench harness: moments, percentiles, histograms, cosine angle,
+//! and Φ/Φ⁻¹ (the inverse normal CDF behind the paper's eq. 5).
+
+/// Mean of a slice (0.0 for empty).
+pub fn mean(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().map(|&x| x as f64).sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|&x| (x as f64 - m).powi(2)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Fraction of exact zeros (realized pruning sparsity).
+pub fn zero_fraction(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().filter(|&&x| x == 0.0).count() as f64 / xs.len() as f64
+}
+
+/// Cosine of the angle between two flat vectors (Fig. 3b's metric).
+pub fn cosine(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let (mut dot, mut na, mut nb) = (0.0f64, 0.0f64, 0.0f64);
+    for (&x, &y) in a.iter().zip(b) {
+        dot += x as f64 * y as f64;
+        na += (x as f64).powi(2);
+        nb += (y as f64).powi(2);
+    }
+    dot / (na.sqrt() * nb.sqrt() + 1e-300)
+}
+
+/// Angle in degrees between two vectors.
+pub fn angle_degrees(a: &[f32], b: &[f32]) -> f64 {
+    cosine(a, b).clamp(-1.0, 1.0).acos().to_degrees()
+}
+
+/// p-th percentile (0..=100) with linear interpolation; sorts a copy.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (v[hi] - v[lo]) * (rank - lo as f64)
+    }
+}
+
+/// Fixed-range histogram; values outside [lo, hi) are clamped to the edge
+/// bins (matches jnp.histogram's behaviour closely enough for Fig. 3a).
+pub fn histogram(xs: &[f32], lo: f64, hi: f64, bins: usize) -> Vec<u64> {
+    let mut out = vec![0u64; bins];
+    let w = (hi - lo) / bins as f64;
+    for &x in xs {
+        let mut i = ((x as f64 - lo) / w) as i64;
+        i = i.clamp(0, bins as i64 - 1);
+        out[i as usize] += 1;
+    }
+    out
+}
+
+/// Standard normal CDF Φ via erf.
+pub fn normal_cdf(x: f64) -> f64 {
+    0.5 * (1.0 + erf(x / std::f64::consts::SQRT_2))
+}
+
+/// Error function, |relative err| < ~1e-14: Maclaurin series for |x| <= 2
+/// (no catastrophic cancellation there), Lentz continued fraction for the
+/// complementary function beyond.
+pub fn erf(x: f64) -> f64 {
+    let ax = x.abs();
+    if ax <= 2.0 {
+        // erf(x) = 2/sqrt(pi) * sum (-1)^n x^(2n+1) / (n! (2n+1))
+        let mut term = x;
+        let mut sum = x;
+        let x2 = x * x;
+        for n in 1..200 {
+            term *= -x2 / n as f64;
+            let add = term / (2 * n + 1) as f64;
+            sum += add;
+            if add.abs() < 1e-18 * sum.abs().max(1e-30) {
+                break;
+            }
+        }
+        2.0 / std::f64::consts::PI.sqrt() * sum
+    } else {
+        let e = erfc_large(ax);
+        if x > 0.0 {
+            1.0 - e
+        } else {
+            e - 1.0
+        }
+    }
+}
+
+/// erfc for x > 2 via the classical continued fraction
+/// erfc(x) = exp(-x^2)/sqrt(pi) * 1/(x + (1/2)/(x + 1/(x + (3/2)/(x + ...))))
+/// evaluated with modified Lentz.
+fn erfc_large(x: f64) -> f64 {
+    let tiny = 1e-300;
+    let mut f: f64 = x;
+    let mut c: f64 = x;
+    let mut d: f64 = 0.0;
+    for k in 1..200 {
+        let a = k as f64 / 2.0; // a_k = k/2
+        // recurrence: b = x, a_k alternating k/2
+        d = x + a * d;
+        if d.abs() < tiny {
+            d = tiny;
+        }
+        c = x + a / c;
+        if c.abs() < tiny {
+            c = tiny;
+        }
+        d = 1.0 / d;
+        let delta = c * d;
+        f *= delta;
+        if (delta - 1.0).abs() < 1e-16 {
+            break;
+        }
+    }
+    (-x * x).exp() / std::f64::consts::PI.sqrt() / f
+}
+
+/// Inverse standard normal CDF Φ⁻¹ (Acklam's algorithm + one Halley
+/// refinement; |relative err| < 1e-9). This is the `ndtri` the paper's
+/// eq. 5 uses to map pruning rate P to threshold τ.
+pub fn ndtri(p: f64) -> f64 {
+    assert!((0.0..=1.0).contains(&p), "ndtri domain: {p}");
+    if p == 0.0 {
+        return f64::NEG_INFINITY;
+    }
+    if p == 1.0 {
+        return f64::INFINITY;
+    }
+    // Acklam coefficients
+    const A: [f64; 6] = [
+        -3.969683028665376e+01,
+        2.209460984245205e+02,
+        -2.759285104469687e+02,
+        1.383577518672690e+02,
+        -3.066479806614716e+01,
+        2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01,
+        1.615858368580409e+02,
+        -1.556989798598866e+02,
+        6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03,
+        -3.223964580411365e-01,
+        -2.400758277161838e+00,
+        -2.549732539343734e+00,
+        4.374664141464968e+00,
+        2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03,
+        3.224671290700398e-01,
+        2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    let plow = 0.02425;
+    let x = if p < plow {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - plow {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        let q = (-2.0 * (1.0 - p).ln()).sqrt();
+        -(((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    };
+    // one Halley refinement against Φ
+    let e = normal_cdf(x) - p;
+    let u = e * (std::f64::consts::TAU).sqrt() * (x * x / 2.0).exp();
+    x - u / (1.0 + x * u / 2.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std_basic() {
+        let xs = [1.0f32, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((std_dev(&xs) - 1.118033988749895).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cosine_orthogonal_and_parallel() {
+        assert!((cosine(&[1.0, 0.0], &[0.0, 1.0])).abs() < 1e-12);
+        assert!((cosine(&[1.0, 2.0], &[2.0, 4.0]) - 1.0).abs() < 1e-9);
+        assert!((angle_degrees(&[1.0, 0.0], &[0.0, 1.0]) - 90.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [0.0, 1.0, 2.0, 3.0];
+        assert!((percentile(&xs, 50.0) - 1.5).abs() < 1e-12);
+        assert!((percentile(&xs, 100.0) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let h = histogram(&[-10.0, -0.5, 0.5, 10.0], -1.0, 1.0, 2);
+        assert_eq!(h, vec![2, 2]);
+    }
+
+    #[test]
+    fn erf_known_values() {
+        assert!((erf(0.0)).abs() < 1e-15);
+        assert!((erf(1.0) - 0.8427007929497149).abs() < 1e-9);
+        assert!((erf(-1.0) + 0.8427007929497149).abs() < 1e-9);
+        assert!((erf(2.0) - 0.9953222650189527).abs() < 1e-7);
+    }
+
+    #[test]
+    fn ndtri_matches_scipy_values() {
+        // scipy.special.ndtri references
+        for (p, want) in [
+            (0.5, 0.0),
+            (0.975, 1.959963984540054),
+            (0.95, 1.6448536269514722),
+            (0.9, 1.2815515655446004),
+            (0.1, -1.2815515655446004),
+            (0.999, 3.090232306167813),
+        ] {
+            let got = ndtri(p);
+            assert!((got - want).abs() < 1e-7, "ndtri({p}) = {got}, want {want}");
+        }
+    }
+
+    #[test]
+    fn ndtri_roundtrips_cdf() {
+        for &p in &[0.01, 0.2, 0.5, 0.73, 0.99] {
+            assert!((normal_cdf(ndtri(p)) - p).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn zero_fraction_counts() {
+        assert_eq!(zero_fraction(&[0.0, 1.0, 0.0, 2.0]), 0.5);
+    }
+}

@@ -1,0 +1,101 @@
+//! Integration tests for the federated coordinator (leader + workers over
+//! real PJRT executables; each worker brings up its own client).
+
+use efficientgrad::config::{FedConfig, TrainConfig};
+use efficientgrad::coordinator::Leader;
+use efficientgrad::manifest::Manifest;
+use efficientgrad::runtime::Runtime;
+
+fn manifest() -> Option<Manifest> {
+    Manifest::load(&efficientgrad::artifacts_dir()).ok()
+}
+
+fn small_cfg(workers: usize, rounds: usize) -> FedConfig {
+    FedConfig {
+        workers,
+        rounds,
+        local_steps: 3,
+        iid: true,
+        straggler_prob: 0.0,
+        straggler_slowdown: 3.0,
+        train: TrainConfig {
+            model: "convnet_t".into(),
+            mode: "efficientgrad".into(),
+            train_examples: 256,
+            test_examples: 64,
+            difficulty: 0.4,
+            lr: 0.05,
+            ..Default::default()
+        },
+    }
+}
+
+#[test]
+fn federated_two_workers_improves_over_rounds() {
+    let Some(m) = manifest() else {
+        eprintln!("SKIP: artifacts missing");
+        return;
+    };
+    let rt = Runtime::cpu().unwrap();
+    let mut leader = Leader::new(&rt, &m, small_cfg(2, 4)).unwrap();
+    let summary = leader.run().unwrap();
+    leader.shutdown();
+    assert_eq!(summary.rounds.len(), 4);
+    // learning signal: last round's mean loss below the first round's
+    let first = summary.rounds.first().unwrap().mean_loss;
+    let last = summary.rounds.last().unwrap().mean_loss;
+    assert!(last < first, "no federated progress: {first} -> {last}");
+    // accuracy above chance by round 4 on the easy dataset
+    assert!(summary.final_acc > 0.15, "final acc {}", summary.final_acc);
+    // comms accounting: 2 workers x 4 rounds x param bytes, both ways
+    let model = m.model("convnet_t").unwrap();
+    let expect = (model.param_count * 4 * 2 * 4) as u64;
+    assert_eq!(summary.total_upload_bytes, expect);
+    assert_eq!(summary.total_download_bytes, expect);
+}
+
+#[test]
+fn federated_non_iid_still_learns() {
+    let Some(m) = manifest() else {
+        eprintln!("SKIP: artifacts missing");
+        return;
+    };
+    let rt = Runtime::cpu().unwrap();
+    let mut cfg = small_cfg(2, 4);
+    cfg.iid = false; // label-skewed shards
+    let mut leader = Leader::new(&rt, &m, cfg).unwrap();
+    let summary = leader.run().unwrap();
+    leader.shutdown();
+    let first = summary.rounds.first().unwrap().mean_loss;
+    let last = summary.rounds.last().unwrap().mean_loss;
+    assert!(
+        last < first * 1.05,
+        "non-IID run diverged: {first} -> {last}"
+    );
+}
+
+#[test]
+fn stragglers_show_in_worker_times_not_results() {
+    let Some(m) = manifest() else {
+        eprintln!("SKIP: artifacts missing");
+        return;
+    };
+    let rt = Runtime::cpu().unwrap();
+    let mut cfg = small_cfg(2, 2);
+    cfg.straggler_prob = 1.0; // every worker is a straggler
+    cfg.straggler_slowdown = 5.0;
+    let mut leader = Leader::new(&rt, &m, cfg.clone()).unwrap();
+    let with_stragglers = leader.run().unwrap();
+    leader.shutdown();
+
+    cfg.straggler_prob = 0.0;
+    let mut leader2 = Leader::new(&rt, &m, cfg).unwrap();
+    let without = leader2.run().unwrap();
+    leader2.shutdown();
+
+    // simulated per-worker time inflated ~5x; learning outcome unaffected
+    let t_slow: f64 = with_stragglers.rounds[0].worker_secs.iter().sum();
+    let t_fast: f64 = without.rounds[0].worker_secs.iter().sum();
+    assert!(t_slow > t_fast * 2.0, "straggler time {t_slow} vs {t_fast}");
+    assert!((with_stragglers.final_acc - without.final_acc).abs() < 0.5);
+}

@@ -1,0 +1,237 @@
+//! Integration tests over the real AOT artifacts (python -> HLO -> PJRT).
+//!
+//! These need `make artifacts` to have run; they skip (not fail) when the
+//! manifest is missing so `cargo test` works in a fresh checkout, and the
+//! Makefile's `test` target guarantees artifacts exist first.
+
+use efficientgrad::config::TrainConfig;
+use efficientgrad::data::batcher::Batcher;
+use efficientgrad::data::synthetic::{generate, SynthConfig};
+use efficientgrad::manifest::Manifest;
+use efficientgrad::params::ParamStore;
+use efficientgrad::runtime::exec::{EvalState, ProbeState};
+use efficientgrad::runtime::{Runtime, TrainState};
+use efficientgrad::training::Trainer;
+
+fn manifest() -> Option<Manifest> {
+    let dir = efficientgrad::artifacts_dir();
+    let dir = if dir.is_relative() {
+        // cargo test runs from the workspace root already
+        dir
+    } else {
+        dir
+    };
+    Manifest::load(&dir).ok()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match manifest() {
+            Some(m) => m,
+            None => {
+                eprintln!("SKIP: artifacts/ missing; run `make artifacts`");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn artifacts_validate_against_manifest() {
+    let m = require_artifacts!();
+    for model in m.models.values() {
+        for art in model.artifacts.values() {
+            efficientgrad::runtime::check_artifact(model, art)
+                .unwrap_or_else(|e| panic!("{e:#}"));
+        }
+    }
+}
+
+#[test]
+fn train_step_runs_and_loss_decreases() {
+    let m = require_artifacts!();
+    let rt = Runtime::cpu().unwrap();
+    let model = m.model("convnet_t").unwrap();
+    let art = model.artifact("train_efficientgrad").unwrap();
+    let state = TrainState::new(rt.load(art).unwrap(), model).unwrap();
+    let mut store = ParamStore::init(model, 1);
+
+    let ds = generate(&SynthConfig {
+        n: 64,
+        difficulty: 0.4,
+        seed: 3,
+        ..Default::default()
+    });
+    let mut batcher = Batcher::new(&ds, model.batch, 5);
+    let mut first = None;
+    let mut last = 0.0;
+    for _ in 0..12 {
+        let batch = batcher.next_batch();
+        let out = state.step(&mut store, &batch, 0.05, 0.9).unwrap();
+        assert!(out.loss.is_finite());
+        // efficientgrad must report live sparsity in a plausible band
+        let sp = efficientgrad::util::stats::mean(&out.sparsity);
+        assert!((0.1..0.97).contains(&sp), "sparsity {sp}");
+        first.get_or_insert(out.loss);
+        last = out.loss;
+    }
+    assert!(
+        last < first.unwrap(),
+        "loss did not decrease: {} -> {last}",
+        first.unwrap()
+    );
+    assert_eq!(store.step, 12);
+}
+
+#[test]
+fn bp_and_efficientgrad_agree_at_step0_forward() {
+    // same params, same batch: the *loss* (computed in the forward pass)
+    // must agree across mode artifacts; only the updates differ.
+    let m = require_artifacts!();
+    let rt = Runtime::cpu().unwrap();
+    let model = m.model("convnet_t").unwrap();
+    let ds = generate(&SynthConfig {
+        n: model.batch,
+        seed: 11,
+        ..Default::default()
+    });
+    let batch = ds.gather(&(0..model.batch as u32).collect::<Vec<_>>());
+    let mut losses = Vec::new();
+    for tag in ["train_bp", "train_efficientgrad"] {
+        let state =
+            TrainState::new(rt.load(model.artifact(tag).unwrap()).unwrap(), model).unwrap();
+        let mut store = ParamStore::init(model, 7);
+        let out = state.step(&mut store, &batch, 0.01, 0.9).unwrap();
+        losses.push(out.loss);
+    }
+    assert!(
+        (losses[0] - losses[1]).abs() < 1e-4,
+        "step-0 losses diverge: {losses:?}"
+    );
+}
+
+#[test]
+fn eval_state_logits_shape_and_determinism() {
+    let m = require_artifacts!();
+    let rt = Runtime::cpu().unwrap();
+    let model = m.model("convnet_t").unwrap();
+    let eval = EvalState::new(rt.load(model.artifact("fwd").unwrap()).unwrap(), model).unwrap();
+    let store = ParamStore::init(model, 2);
+    let ds = generate(&SynthConfig {
+        n: model.batch,
+        seed: 4,
+        ..Default::default()
+    });
+    let batch = ds.gather(&(0..model.batch as u32).collect::<Vec<_>>());
+    let l1 = eval.logits(&store, &batch.images).unwrap();
+    let l2 = eval.logits(&store, &batch.images).unwrap();
+    assert_eq!(l1.shape(), &[model.batch, model.num_classes]);
+    assert_eq!(l1, l2);
+}
+
+#[test]
+fn probe_reports_aligned_angles_after_training() {
+    let m = require_artifacts!();
+    let rt = Runtime::cpu().unwrap();
+    let model = m.model("convnet_t").unwrap();
+    let train =
+        TrainState::new(rt.load(model.artifact("train_efficientgrad").unwrap()).unwrap(), model)
+            .unwrap();
+    let probe =
+        ProbeState::new(rt.load(model.artifact("probe").unwrap()).unwrap(), model).unwrap();
+    let mut store = ParamStore::init(model, 5);
+    let ds = generate(&SynthConfig {
+        n: 64,
+        seed: 6,
+        ..Default::default()
+    });
+    let mut batcher = Batcher::new(&ds, model.batch, 8);
+    for _ in 0..10 {
+        let b = batcher.next_batch();
+        train.step(&mut store, &b, 0.05, 0.9).unwrap();
+    }
+    let batch = batcher.next_batch();
+    let out = probe.probe(&store, &batch, 42).unwrap();
+    assert_eq!(out.cos_angles.len(), model.params.len());
+    // Fig. 3b claim: angles under 90 deg for the conv / fc weights (the
+    // tensors whose transport the feedback replaces). BN params see the
+    // delta only through batch statistics and can be noisy this early.
+    for (i, &c) in out.cos_angles.iter().enumerate() {
+        let rank = model.params[i].shape.len();
+        if rank >= 2 {
+            assert!(
+                c > 0.0,
+                "param {i} ({}) angle >= 90deg (cos {c})",
+                model.params[i].name
+            );
+        }
+    }
+    let mean_cos: f32 =
+        out.cos_angles.iter().sum::<f32>() / out.cos_angles.len() as f32;
+    assert!(mean_cos > 0.1, "mean alignment too weak: {mean_cos}");
+    // Fig. 3a: histogram is a normalized, center-heavy distribution
+    let sum: f32 = out.hist.iter().sum();
+    assert!((sum - 1.0).abs() < 1e-3, "hist sum {sum}");
+    let center: f32 = out.hist[24..40].iter().sum();
+    assert!(center > 0.5, "center mass {center}");
+    assert!(out.sparsity > 0.2 && out.sparsity < 0.97);
+}
+
+#[test]
+fn trainer_end_to_end_short_run_beats_chance() {
+    let m = require_artifacts!();
+    let rt = Runtime::cpu().unwrap();
+    let cfg = TrainConfig {
+        model: "convnet_t".into(),
+        mode: "efficientgrad".into(),
+        steps: 60,
+        train_examples: 512,
+        test_examples: 128,
+        difficulty: 0.4,
+        eval_every: 0,
+        log_every: 1000,
+        ..Default::default()
+    };
+    let ds = generate(&SynthConfig {
+        n: cfg.train_examples + cfg.test_examples,
+        difficulty: cfg.difficulty as f32,
+        seed: cfg.seed,
+        ..Default::default()
+    });
+    let (train, test) = ds.split(cfg.train_examples);
+    let mut trainer = Trainer::new(&rt, &m, cfg).unwrap();
+    let acc = trainer.run(&train, &test).unwrap();
+    assert!(acc > 0.2, "60-step accuracy {acc} not above chance (0.1)");
+    assert!(trainer.log.records.len() == 60);
+}
+
+#[test]
+fn checkpoint_roundtrip_through_runtime() {
+    let m = require_artifacts!();
+    let rt = Runtime::cpu().unwrap();
+    let model = m.model("convnet_t").unwrap();
+    let state =
+        TrainState::new(rt.load(model.artifact("train_bp").unwrap()).unwrap(), model).unwrap();
+    let mut store = ParamStore::init(model, 9);
+    let ds = generate(&SynthConfig {
+        n: model.batch,
+        seed: 1,
+        ..Default::default()
+    });
+    let batch = ds.gather(&(0..model.batch as u32).collect::<Vec<_>>());
+    state.step(&mut store, &batch, 0.05, 0.9).unwrap();
+
+    let path = std::env::temp_dir().join("effgrad_integration.ckpt");
+    store.save(&path).unwrap();
+    let restored = ParamStore::load(&path).unwrap();
+    restored.check_compatible(model).unwrap();
+    assert_eq!(restored.step, 1);
+
+    // restored state must produce the identical next step
+    let mut a = store.clone();
+    let mut b = restored;
+    let oa = state.step(&mut a, &batch, 0.05, 0.9).unwrap();
+    let ob = state.step(&mut b, &batch, 0.05, 0.9).unwrap();
+    assert_eq!(oa.loss, ob.loss);
+    std::fs::remove_file(&path).ok();
+}

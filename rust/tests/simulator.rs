@@ -1,0 +1,102 @@
+//! Cross-module integration: accelerator simulator driven by *measured*
+//! sparsity from a live training run, plus figure-generation smoke tests.
+
+use efficientgrad::accel::config::{efficientgrad as eg_cfg, eyeriss_v2_bp};
+use efficientgrad::accel::report::compare;
+use efficientgrad::accel::workload::{resnet18_cifar, Workload};
+use efficientgrad::data::batcher::Batcher;
+use efficientgrad::data::synthetic::{generate, SynthConfig};
+use efficientgrad::manifest::Manifest;
+use efficientgrad::params::ParamStore;
+use efficientgrad::runtime::{Runtime, TrainState};
+use efficientgrad::sparsity;
+
+#[test]
+fn simulator_with_measured_sparsity_matches_analytic_band() {
+    let Some(m) = Manifest::load(&efficientgrad::artifacts_dir()).ok() else {
+        eprintln!("SKIP: artifacts missing");
+        return;
+    };
+    let rt = Runtime::cpu().unwrap();
+    let model = m.model("convnet_t").unwrap();
+    let state = TrainState::new(
+        rt.load(model.artifact("train_efficientgrad").unwrap()).unwrap(),
+        model,
+    )
+    .unwrap();
+    let mut store = ParamStore::init(model, 1);
+    let ds = generate(&SynthConfig {
+        n: 64,
+        seed: 2,
+        ..Default::default()
+    });
+    let mut batcher = Batcher::new(&ds, model.batch, 3);
+    let mut sparsities = Vec::new();
+    for _ in 0..6 {
+        let out = state.step(&mut store, &batcher.next_batch(), 0.05, 0.9).unwrap();
+        sparsities.push(efficientgrad::util::stats::mean(&out.sparsity));
+    }
+    let measured_zero = sparsities.iter().sum::<f64>() / sparsities.len() as f64;
+    let analytic_zero = sparsity::expected_zero_fraction(m.prune_rate);
+    // live gradients are not exactly gaussian, but the realized sparsity
+    // should sit within +-0.15 of the gaussian-model expectation (Fig 3a)
+    assert!(
+        (measured_zero - analytic_zero).abs() < 0.15,
+        "measured {measured_zero} vs analytic {analytic_zero}"
+    );
+
+    // feed the measured survivor fraction into the Fig. 5b comparison
+    let wl = resnet18_cifar(16);
+    let rows = compare(&[&eyeriss_v2_bp(), &eg_cfg()], &wl, 1.0 - measured_zero);
+    assert!(rows[1].norm_throughput > 1.5);
+    assert!(rows[1].norm_power < 0.8);
+}
+
+#[test]
+fn fig5b_stable_across_batch_sizes() {
+    for batch in [1, 4, 16, 64] {
+        let wl = resnet18_cifar(batch);
+        let rows = compare(
+            &[&eyeriss_v2_bp(), &eg_cfg()],
+            &wl,
+            sparsity::expected_survivor_fraction(0.9),
+        );
+        assert!(
+            rows[1].norm_throughput > 1.4,
+            "batch {batch}: {}",
+            rows[1].norm_throughput
+        );
+        assert!(
+            rows[1].norm_efficiency > 2.0,
+            "batch {batch}: {}",
+            rows[1].norm_efficiency
+        );
+    }
+}
+
+#[test]
+fn prune_rate_sweep_monotone_speedup() {
+    // ablation: higher pruning rate -> no slower on EfficientGrad
+    let wl: Workload = resnet18_cifar(16);
+    let mut prev = f64::MAX;
+    for p in [0.0, 0.5, 0.8, 0.9, 0.95] {
+        let surv = sparsity::expected_survivor_fraction(p);
+        let r = efficientgrad::accel::simulate_training(&eg_cfg(), &wl, surv);
+        let t = r.step_seconds();
+        assert!(t <= prev + 1e-12, "P={p}: {t} > {prev}");
+        prev = t;
+    }
+}
+
+#[test]
+fn figures_fig1_and_fig5b_generate() {
+    let rep = efficientgrad::figures::fig1::generate(0.9);
+    let dir = std::env::temp_dir();
+    rep.save_csv(&dir.join("fig1_it.csv")).unwrap();
+    let out = efficientgrad::figures::fig5b::generate(&resnet18_cifar(16), 0.9, None);
+    out.report.save_csv(&dir.join("fig5b_it.csv")).unwrap();
+    let text = std::fs::read_to_string(dir.join("fig5b_it.csv")).unwrap();
+    assert!(text.contains("EfficientGrad"));
+    std::fs::remove_file(dir.join("fig1_it.csv")).ok();
+    std::fs::remove_file(dir.join("fig5b_it.csv")).ok();
+}
