@@ -30,7 +30,9 @@ fn main() {
         rng.fill_normal(&mut delta, 0.02);
         let sigma = efficientgrad::util::stats::std_dev(&delta);
         let tau = sparsity::tau_from_rate(sigma, 0.9);
-        let mut out = Vec::new();
+        // in-place variant: one buffer reused across iterations, so the
+        // bench times the pruning math, not the allocator
+        let mut out = vec![0f32; n];
         let s = bench(
             &format!("prune n={n}"),
             2,
@@ -38,7 +40,7 @@ fn main() {
             Duration::from_secs(5),
             || {
                 let mut r = Rng::new(1);
-                out = sparsity::stochastic_prune(&delta, tau, &mut r);
+                sparsity::stochastic_prune_into(&delta, tau, &mut r, &mut out);
             },
         );
         rep.row(vec![

@@ -1,19 +1,23 @@
 //! Bench: the L3 request-path hot loop — one train step through the PJRT
-//! executable, broken into its components (literal upload, execute,
-//! download), plus eval-forward latency/throughput. This is the §Perf
-//! target for layer 3: the Rust overhead around `execute` should be a
-//! small fraction of step time.
+//! executable on both step backends (literal round-trip vs
+//! device-resident buffers), plus eval-forward latency/throughput.
+//! The §Perf claim measured here mirrors the paper's data-movement
+//! argument: the resident path's per-step host transfer of *training
+//! state* must be scalars-only (loss/acc/sparsity = 4·(2+n_feedback)
+//! bytes), against the literal path's full-model round-trip, and its
+//! step latency must be no worse. Rows are also emitted to
+//! `BENCH_runtime.json` so the trajectory is tracked across PRs.
 //!
 //!     cargo bench --bench runtime_hotpath
 
 use std::time::Duration;
 
-use efficientgrad::benchlib::{bench, bench_default, fmt_ns, Report};
+use efficientgrad::benchlib::{bench, bench_default, fmt_ns, Report, Sample};
 use efficientgrad::data::synthetic::{generate, SynthConfig};
 use efficientgrad::manifest::Manifest;
 use efficientgrad::params::ParamStore;
 use efficientgrad::runtime::exec::EvalState;
-use efficientgrad::runtime::{tensor_to_literal, Runtime, TrainState};
+use efficientgrad::runtime::{tensor_to_literal, DeviceState, Runtime, TrainState};
 
 fn main() {
     let Ok(manifest) = Manifest::load(&efficientgrad::artifacts_dir()) else {
@@ -22,20 +26,17 @@ fn main() {
     };
     let rt = Runtime::cpu().expect("PJRT client");
     let mut rep = Report::new(
-        "L3 runtime hot path (convnet_s unless noted)",
-        &["op", "mean", "p50", "p95", "per-image µs"],
+        "L3 runtime hot path (literal vs device-resident step backends)",
+        &["op", "mean", "p50", "p95", "per-image µs", "state B/step"],
     );
+    let per_image = |s: &Sample, batch: usize| format!("{:.1}", s.mean_ns / 1e3 / batch as f64);
 
+    let mut convnet_s_means = (0.0, 0.0); // (literal, resident)
     for model_name in ["convnet_t", "convnet_s"] {
         let model = manifest.model(model_name).unwrap();
-        let train = TrainState::new(
-            rt.load(model.artifact("train_efficientgrad").unwrap()).unwrap(),
-            model,
-        )
-        .unwrap();
+        let exe = rt.load(model.artifact("train_efficientgrad").unwrap()).unwrap();
         let eval =
             EvalState::new(rt.load(model.artifact("fwd").unwrap()).unwrap(), model).unwrap();
-        let mut store = ParamStore::init(model, 1);
         let ds = generate(&SynthConfig {
             n: model.batch,
             seed: 0,
@@ -43,9 +44,11 @@ fn main() {
         });
         let batch = ds.gather(&(0..model.batch as u32).collect::<Vec<_>>());
 
-        // full train step
+        // -- literal path: full state round-trips the host every step --
+        let train = TrainState::new(exe.clone(), model).unwrap();
+        let mut store = ParamStore::init(model, 1);
         let s = bench(
-            &format!("{model_name}: train step"),
+            &format!("{model_name}: train step (literal)"),
             3,
             30,
             Duration::from_secs(15),
@@ -53,15 +56,63 @@ fn main() {
                 train.step(&mut store, &batch, 0.05, 0.9).unwrap();
             },
         );
+        let lit_state_bytes = train.transfer_stats().state_bytes_per_step();
         rep.row(vec![
             s.name.clone(),
             fmt_ns(s.mean_ns),
             fmt_ns(s.p50_ns),
             fmt_ns(s.p95_ns),
-            format!("{:.1}", s.mean_ns / 1e3 / model.batch as f64),
+            per_image(&s, model.batch),
+            lit_state_bytes.to_string(),
         ]);
+        let lit_mean = s.mean_ns;
 
-        // eval forward
+        // -- resident path: state stays in PjRtBuffers; the host sees
+        //    only the scalar tail each step --
+        let res_store = ParamStore::init(model, 1);
+        let mut dev = DeviceState::new(&rt, exe, model, &res_store).unwrap();
+        for _ in 0..3 {
+            dev.step(&batch, 0.05, 0.9).unwrap(); // warm outside the ledger
+        }
+        dev.reset_transfer_stats();
+        let s = bench(
+            &format!("{model_name}: train step (resident)"),
+            0, // already warmed; keep the ledger aligned with the iters
+            30,
+            Duration::from_secs(15),
+            || {
+                dev.step(&batch, 0.05, 0.9).unwrap();
+            },
+        );
+        let stats = dev.transfer_stats();
+        let res_state_bytes = stats.state_bytes_per_step();
+        // the acceptance claim: per-step state traffic is scalars-only
+        assert_eq!(
+            res_state_bytes,
+            dev.scalar_tail_bytes(),
+            "resident path leaked state transfers: {stats:?}"
+        );
+        rep.row(vec![
+            s.name.clone(),
+            fmt_ns(s.mean_ns),
+            fmt_ns(s.p50_ns),
+            fmt_ns(s.p95_ns),
+            per_image(&s, model.batch),
+            res_state_bytes.to_string(),
+        ]);
+        println!(
+            "{model_name}: state bytes/step {} -> {} ({}x less), step mean {} -> {}",
+            lit_state_bytes,
+            res_state_bytes,
+            lit_state_bytes / res_state_bytes.max(1),
+            fmt_ns(lit_mean),
+            fmt_ns(s.mean_ns),
+        );
+        if model_name == "convnet_s" {
+            convnet_s_means = (lit_mean, s.mean_ns);
+        }
+
+        // -- eval forward (host store; unchanged by residency) --
         let s = bench(
             &format!("{model_name}: eval fwd"),
             3,
@@ -76,7 +127,8 @@ fn main() {
             fmt_ns(s.mean_ns),
             fmt_ns(s.p50_ns),
             fmt_ns(s.p95_ns),
-            format!("{:.1}", s.mean_ns / 1e3 / model.batch as f64),
+            per_image(&s, model.batch),
+            "-".into(),
         ]);
 
         // host->literal conversion overhead (the Rust-side share)
@@ -91,9 +143,22 @@ fn main() {
             fmt_ns(s.p50_ns),
             fmt_ns(s.p95_ns),
             "-".into(),
+            "-".into(),
         ]);
     }
     rep.print();
     rep.save_csv(&efficientgrad::figures::reports_dir().join("runtime_hotpath.csv"))
         .unwrap();
+    rep.save_json(std::path::Path::new("BENCH_runtime.json")).unwrap();
+    println!("json -> BENCH_runtime.json");
+
+    // resident must not be slower than the path it replaces (5% noise
+    // headroom; the transfer assert above is the exact part)
+    let (lit, res) = convnet_s_means;
+    assert!(
+        res <= lit * 1.05,
+        "resident step slower than literal on convnet_s: {} vs {}",
+        fmt_ns(res),
+        fmt_ns(lit)
+    );
 }

@@ -115,6 +115,32 @@ impl Report {
         }
         std::fs::write(path, out)
     }
+
+    /// Machine-readable twin of `print`/`save_csv`:
+    /// `{"title": ..., "headers": [...], "rows": [{header: cell, ...}]}`.
+    /// Benches write these (e.g. `BENCH_runtime.json`) so the perf
+    /// trajectory of a hot path can be diffed across PRs.
+    pub fn save_json(&self, path: &std::path::Path) -> std::io::Result<()> {
+        use crate::util::json::{arr, obj, s, Json};
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let rows = arr(self.rows.iter().map(|r| {
+            Json::Obj(
+                self.headers
+                    .iter()
+                    .cloned()
+                    .zip(r.iter().map(|c| Json::Str(c.clone())))
+                    .collect(),
+            )
+        }));
+        let j = obj(vec![
+            ("title", s(&self.title)),
+            ("headers", arr(self.headers.iter().map(|h| s(h)))),
+            ("rows", rows),
+        ]);
+        std::fs::write(path, format!("{j}\n"))
+    }
 }
 
 #[cfg(test)]
@@ -147,6 +173,23 @@ mod tests {
         r.save_csv(&p).unwrap();
         let text = std::fs::read_to_string(&p).unwrap();
         assert!(text.starts_with("a,b\n1,2"));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn report_json_parses_back() {
+        use crate::util::json::Json;
+        let mut r = Report::new("hot path", &["op", "mean"]);
+        r.row(vec!["train".into(), "1.2 ms".into()]);
+        r.row(vec!["eval".into(), "0.4 ms".into()]);
+        let p = std::env::temp_dir().join("effgrad_report_test.json");
+        r.save_json(&p).unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&p).unwrap()).unwrap();
+        assert_eq!(j.get("title").and_then(Json::as_str), Some("hot path"));
+        let rows = j.get("rows").and_then(Json::as_arr).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].get("op").and_then(Json::as_str), Some("train"));
+        assert_eq!(rows[1].get("mean").and_then(Json::as_str), Some("0.4 ms"));
         std::fs::remove_file(&p).ok();
     }
 }

@@ -94,6 +94,16 @@ impl Args {
             .map(|v| v.parse::<u64>().map_err(|e| anyhow!("--{name}: {e}")))
             .transpose()
     }
+
+    /// Value of an enumerated flag, validated against `allowed` (error
+    /// messages list the choices instead of failing deep in config).
+    pub fn get_choice(&self, name: &str, allowed: &[&str]) -> Result<Option<&str>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) if allowed.contains(&v) => Ok(Some(v)),
+            Some(v) => bail!("--{name}: {v:?} is not one of {allowed:?}"),
+        }
+    }
 }
 
 /// Render help text for a subcommand.
@@ -172,5 +182,16 @@ mod tests {
         assert_eq!(a.get_usize("steps").unwrap(), Some(12));
         let bad = Args::parse(&sv(&["--steps", "xx"]), &specs()).unwrap();
         assert!(bad.get_usize("steps").is_err());
+    }
+
+    #[test]
+    fn choice_validation() {
+        let a = Args::parse(&sv(&["--model", "resnet8"]), &specs()).unwrap();
+        assert_eq!(
+            a.get_choice("model", &["convnet_s", "resnet8"]).unwrap(),
+            Some("resnet8")
+        );
+        assert!(a.get_choice("model", &["convnet_s"]).is_err());
+        assert_eq!(a.get_choice("steps", &["1"]).unwrap(), None); // unset
     }
 }

@@ -177,6 +177,35 @@ fn parse_value(s: &str) -> Result<Value> {
 // typed configs
 // ---------------------------------------------------------------------------
 
+/// Where the training state lives between steps (see `runtime::resident`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ResidencyMode {
+    /// Device-resident `PjRtBuffer` state: upload once, per-step host
+    /// traffic is scalars-only; host store synced at round boundaries.
+    #[default]
+    Resident,
+    /// Legacy literal-in/literal-out path: full state round-trips the
+    /// host every step. Fallback + parity oracle.
+    Literal,
+}
+
+impl ResidencyMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "resident" | "device" => Ok(Self::Resident),
+            "literal" | "host" => Ok(Self::Literal),
+            other => bail!("unknown residency mode {other:?} (want resident|literal)"),
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Self::Resident => "resident",
+            Self::Literal => "literal",
+        }
+    }
+}
+
 /// Training hyperparameters (defaults match the paper's CIFAR recipe,
 /// scaled to the synthetic workload).
 #[derive(Clone, Debug)]
@@ -195,6 +224,8 @@ pub struct TrainConfig {
     pub eval_every: usize,
     pub log_every: usize,
     pub checkpoint: Option<String>,
+    /// step-backend selection: device-resident buffers vs literal path
+    pub residency: ResidencyMode,
 }
 
 impl Default for TrainConfig {
@@ -213,14 +244,15 @@ impl Default for TrainConfig {
             eval_every: 100,
             log_every: 20,
             checkpoint: None,
+            residency: ResidencyMode::default(),
         }
     }
 }
 
 impl TrainConfig {
-    pub fn from_table(t: &Table) -> Self {
+    pub fn from_table(t: &Table) -> Result<Self> {
         let d = Self::default();
-        Self {
+        Ok(Self {
             model: t.str_or("train.model", &d.model),
             mode: t.str_or("train.mode", &d.mode),
             steps: t.usize_or("train.steps", d.steps),
@@ -234,7 +266,17 @@ impl TrainConfig {
             eval_every: t.usize_or("train.eval_every", d.eval_every),
             log_every: t.usize_or("train.log_every", d.log_every),
             checkpoint: t.get("train.checkpoint").and_then(Value::as_str).map(String::from),
-        }
+            // invalid values error (like lr_schedule / mode do): silently
+            // falling back would hand resident-mode numbers to someone
+            // who asked for the literal oracle
+            residency: t
+                .get("train.residency")
+                .and_then(Value::as_str)
+                .map(ResidencyMode::parse)
+                .transpose()
+                .context("train.residency")?
+                .unwrap_or(d.residency),
+        })
     }
 }
 
@@ -267,17 +309,17 @@ impl Default for FedConfig {
 }
 
 impl FedConfig {
-    pub fn from_table(t: &Table) -> Self {
+    pub fn from_table(t: &Table) -> Result<Self> {
         let d = Self::default();
-        Self {
+        Ok(Self {
             workers: t.usize_or("federated.workers", d.workers),
             rounds: t.usize_or("federated.rounds", d.rounds),
             local_steps: t.usize_or("federated.local_steps", d.local_steps),
             iid: t.bool_or("federated.iid", d.iid),
             straggler_prob: t.f64_or("federated.straggler_prob", d.straggler_prob),
             straggler_slowdown: t.f64_or("federated.straggler_slowdown", d.straggler_slowdown),
-            train: TrainConfig::from_table(t),
-        }
+            train: TrainConfig::from_table(t)?,
+        })
     }
 }
 
@@ -323,10 +365,35 @@ mod tests {
     #[test]
     fn typed_train_config() {
         let t = Table::parse("[train]\nmode = \"bp\"\nlr = 0.2").unwrap();
-        let c = TrainConfig::from_table(&t);
+        let c = TrainConfig::from_table(&t).unwrap();
         assert_eq!(c.mode, "bp");
         assert_eq!(c.lr, 0.2);
         assert_eq!(c.momentum, 0.9); // default
+        assert_eq!(c.residency, ResidencyMode::Resident); // default
+    }
+
+    #[test]
+    fn residency_mode_parsing() {
+        assert_eq!(ResidencyMode::parse("resident").unwrap(), ResidencyMode::Resident);
+        assert_eq!(ResidencyMode::parse("device").unwrap(), ResidencyMode::Resident);
+        assert_eq!(ResidencyMode::parse("literal").unwrap(), ResidencyMode::Literal);
+        assert_eq!(ResidencyMode::parse("host").unwrap(), ResidencyMode::Literal);
+        assert!(ResidencyMode::parse("ram").is_err());
+        let t = Table::parse("[train]\nresidency = \"literal\"").unwrap();
+        assert_eq!(
+            TrainConfig::from_table(&t).unwrap().residency,
+            ResidencyMode::Literal
+        );
+        // unknown value is an error, not a silent fallback — picking the
+        // wrong backend would quietly invalidate parity/bench runs
+        let t = Table::parse("[train]\nresidency = \"ram\"").unwrap();
+        assert!(TrainConfig::from_table(&t).is_err());
+        // unset stays default
+        let t = Table::parse("[train]\nlr = 0.1").unwrap();
+        assert_eq!(
+            TrainConfig::from_table(&t).unwrap().residency,
+            ResidencyMode::Resident
+        );
     }
 
     #[test]

@@ -28,14 +28,10 @@ pub fn weighted_fedavg(updates: &[&Vec<Tensor>], weights: &[f64]) -> Result<Vec<
             bail!("worker {k} returned {} tensors, expected {n_tensors}", u.len());
         }
     }
-    let mut out: Vec<Tensor> = updates[0]
-        .iter()
-        .map(|t| {
-            let mut z = Tensor::zeros(t.shape());
-            z.axpy((weights[0] / total) as f32, t);
-            z
-        })
-        .collect();
+    // seed the accumulator with a scaled copy of the first update: one
+    // pass, no zero-fill + axpy double traversal
+    let alpha0 = (weights[0] / total) as f32;
+    let mut out: Vec<Tensor> = updates[0].iter().map(|t| t.scaled(alpha0)).collect();
     for (k, u) in updates.iter().enumerate().skip(1) {
         let alpha = (weights[k] / total) as f32;
         for (acc, t) in out.iter_mut().zip(u.iter()) {

@@ -12,6 +12,13 @@
 //! `Send`, so each worker thread brings up its own PJRT client and
 //! compiles its own executable — exactly like a fleet of edge devices,
 //! each with its own accelerator and its own ParamStore replica.
+//!
+//! Transfer model: with the default resident step backend
+//! (`runtime::resident`), each worker's host↔device traffic is one
+//! params upload + one params/momenta download *per round*, not per
+//! step; the leader's network accounting (`RoundReport::upload_bytes`)
+//! is unchanged — residency moves bytes off the device bus, the
+//! federated uplink was already per-round.
 
 pub mod fedavg;
 pub mod worker;

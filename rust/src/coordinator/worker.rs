@@ -6,6 +6,13 @@
 //! sparsity — the input the accelerator energy model needs). A `slowdown`
 //! factor simulates stragglers; the simulated time is reported without
 //! actually sleeping so tests stay fast.
+//!
+//! With `cfg.residency == Resident` (default) the worker's training state
+//! stays in device buffers for the whole round: the broadcast params are
+//! uploaded once per round, `local_steps` execute buffer-to-buffer, and
+//! the O(model) download happens once at the round boundary — the
+//! software analogue of the paper's on-chip-reuse argument. The literal
+//! path remains selectable as a fallback.
 
 use std::sync::mpsc::{self, Sender};
 use std::thread::JoinHandle;
@@ -14,11 +21,11 @@ use std::time::Instant;
 use anyhow::{anyhow, Result};
 
 use crate::config::TrainConfig;
-use crate::data::batcher::Batcher;
+use crate::data::batcher::Prefetcher;
 use crate::data::Dataset;
 use crate::manifest::{ArtifactSpec, ModelSpec};
 use crate::params::ParamStore;
-use crate::runtime::{Runtime, TrainState};
+use crate::runtime::{Runtime, StepDriver};
 use crate::tensor::Tensor;
 
 /// One round's work order.
@@ -77,35 +84,41 @@ impl WorkerHandle {
                 shard.n
             ));
         }
+        let shard_n = shard.n;
         let model = model.clone();
         let (tx, rx) = mpsc::channel::<Msg>();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         let join = std::thread::Builder::new()
             .name(format!("edge-worker-{id}"))
             .spawn(move || {
-                let state = match (|| -> Result<TrainState> {
+                let mut driver = match (|| -> Result<StepDriver> {
                     let rt = Runtime::cpu()?;
-                    TrainState::new(rt.load(&train_art)?, &model)
+                    StepDriver::new(cfg.residency, &rt, rt.load(&train_art)?, &model, &store)
                 })() {
-                    Ok(s) => {
+                    Ok(d) => {
                         let _ = ready_tx.send(Ok(()));
-                        s
+                        d
                     }
                     Err(e) => {
                         let _ = ready_tx.send(Err(e));
                         return;
                     }
                 };
-                let mut batcher = Batcher::new(&shard, batch, cfg.seed ^ id as u64);
+                // shard moves to the prefetch thread; gather/shuffle
+                // overlap with the train step
+                let mut batcher = Prefetcher::new(shard, batch, cfg.seed ^ id as u64, 2);
                 while let Ok(Msg::Task(task)) = rx.recv() {
                     let t0 = Instant::now();
-                    store.params = task.params;
+                    if let Err(e) = driver.load_params(&mut store, task.params) {
+                        log::error!("worker {id}: broadcast rejected: {e:#}");
+                        continue;
+                    }
                     let mut losses = 0.0;
                     let mut spars = 0.0;
                     let mut ok = true;
                     for _ in 0..task.local_steps {
                         let batch = batcher.next_batch();
-                        match state.step(
+                        match driver.step(
                             &mut store,
                             &batch,
                             cfg.lr as f32,
@@ -122,6 +135,14 @@ impl WorkerHandle {
                             }
                         }
                     }
+                    // round boundary: the one place the resident path
+                    // downloads the O(model) state
+                    if ok {
+                        if let Err(e) = driver.sync_to_host(&mut store) {
+                            log::error!("worker {id}: host sync failed: {e:#}");
+                            ok = false;
+                        }
+                    }
                     if !ok {
                         // drop the reply sender: leader sees a dead round
                         continue;
@@ -131,7 +152,7 @@ impl WorkerHandle {
                         worker_id: id,
                         round: task.round,
                         params: store.params.clone(),
-                        examples: shard.n,
+                        examples: shard_n,
                         mean_loss: losses / n,
                         mean_sparsity: spars / n,
                         sim_secs: t0.elapsed().as_secs_f64() * task.slowdown,

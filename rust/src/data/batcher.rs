@@ -64,6 +64,77 @@ impl<'a> Batcher<'a> {
     }
 }
 
+/// Pipelined batcher: a background thread owns the dataset and a
+/// [`Batcher`], keeping up to `depth` gathered batches ready in a bounded
+/// channel so shuffle + gather overlap with the consumer's train step.
+/// Produces the exact same batch sequence as `Batcher::new(ds, batch,
+/// seed)` — prefetching changes *when* batches are built, never *which*.
+pub struct Prefetcher {
+    rx: Option<std::sync::mpsc::Receiver<Batch>>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Prefetcher {
+    pub fn new(ds: Dataset, batch: usize, seed: u64, depth: usize) -> Self {
+        assert!(batch > 0 && batch <= ds.n, "batch {batch} vs n {}", ds.n);
+        let (tx, rx) = std::sync::mpsc::sync_channel::<Batch>(depth.max(1));
+        let join = std::thread::Builder::new()
+            .name("batch-prefetch".into())
+            .spawn(move || {
+                let mut b = Batcher::new(&ds, batch, seed);
+                // exits when the consumer drops its receiver
+                while tx.send(b.next_batch()).is_ok() {}
+            })
+            .expect("spawning prefetch thread");
+        Self {
+            rx: Some(rx),
+            join: Some(join),
+        }
+    }
+
+    /// Next batch, rolling over epochs transparently (same contract as
+    /// [`Batcher::next_batch`]).
+    pub fn next_batch(&mut self) -> Batch {
+        self.rx
+            .as_ref()
+            .expect("prefetcher already shut down")
+            .recv()
+            .expect("prefetch thread died")
+    }
+}
+
+impl Drop for Prefetcher {
+    fn drop(&mut self) {
+        // drop the receiver first so a producer blocked on a full channel
+        // unblocks and exits, then join it
+        drop(self.rx.take());
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Borrowing variant of [`Prefetcher`] for callers that only hold
+/// `&Dataset` (e.g. `Trainer::run`): the producer runs on a scoped
+/// thread, so no dataset clone is needed. Letting the returned receiver
+/// fall out of the scope closure unblocks the producer, and the scope
+/// then joins it.
+pub fn prefetch_scoped<'scope, 'env>(
+    scope: &'scope std::thread::Scope<'scope, 'env>,
+    ds: &'env Dataset,
+    batch: usize,
+    seed: u64,
+    depth: usize,
+) -> std::sync::mpsc::Receiver<Batch> {
+    assert!(batch > 0 && batch <= ds.n, "batch {batch} vs n {}", ds.n);
+    let (tx, rx) = std::sync::mpsc::sync_channel::<Batch>(depth.max(1));
+    scope.spawn(move || {
+        let mut b = Batcher::new(ds, batch, seed);
+        while tx.send(b.next_batch()).is_ok() {}
+    });
+    rx
+}
+
 /// Fixed-order full sweep (evaluation).
 pub fn eval_batches(ds: &Dataset, batch: usize) -> Vec<Vec<u32>> {
     (0..ds.n / batch)
@@ -113,6 +184,55 @@ mod tests {
         let e0 = b.next_batch();
         let e1 = b.next_batch();
         assert_ne!(e0.labels.data(), e1.labels.data());
+    }
+
+    #[test]
+    fn prefetcher_matches_batcher_sequence() {
+        let ds = generate(&SynthConfig {
+            n: 40,
+            seed: 3,
+            ..Default::default()
+        });
+        let mut direct = Batcher::new(&ds, 8, 17);
+        let mut pre = Prefetcher::new(ds.clone(), 8, 17, 2);
+        // across an epoch boundary (40/8 = 5 batches per epoch)
+        for _ in 0..12 {
+            let a = direct.next_batch();
+            let b = pre.next_batch();
+            assert_eq!(a.images.data(), b.images.data());
+            assert_eq!(a.labels.data(), b.labels.data());
+        }
+    }
+
+    #[test]
+    fn scoped_prefetch_matches_batcher_sequence() {
+        let ds = generate(&SynthConfig {
+            n: 40,
+            seed: 6,
+            ..Default::default()
+        });
+        let mut direct = Batcher::new(&ds, 8, 23);
+        std::thread::scope(|s| {
+            let rx = prefetch_scoped(s, &ds, 8, 23, 2);
+            for _ in 0..7 {
+                let a = direct.next_batch();
+                let b = rx.recv().unwrap();
+                assert_eq!(a.images.data(), b.images.data());
+                assert_eq!(a.labels.data(), b.labels.data());
+            }
+        });
+    }
+
+    #[test]
+    fn prefetcher_shutdown_does_not_hang() {
+        let ds = generate(&SynthConfig {
+            n: 16,
+            seed: 4,
+            ..Default::default()
+        });
+        // dropped while the producer is blocked on a full channel
+        let pre = Prefetcher::new(ds, 8, 4, 1);
+        drop(pre);
     }
 
     #[test]

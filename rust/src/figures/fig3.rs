@@ -79,6 +79,9 @@ pub fn generate(
         let lr = sched.at(step) as f32;
         trainer.manual_step(&batch, lr)?;
         if step % probe_every == 0 || step + 1 == steps {
+            // the probe reads host params; in resident mode they are a
+            // lazily-synced view, so refresh at each probe boundary
+            trainer.sync_store()?;
             let out = probe.probe(&trainer.store, &batch, step as i32)?;
             let deg = |c: f32| (c.clamp(-1.0, 1.0) as f64).acos().to_degrees();
             let mean_deg = out.cos_angles.iter().map(|&c| deg(c)).sum::<f64>()

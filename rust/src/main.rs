@@ -36,6 +36,7 @@ fn common_flags() -> Vec<FlagSpec> {
         FlagSpec { name: "seed", help: "seed", takes_value: true, default: None },
         FlagSpec { name: "checkpoint", help: "save checkpoint here", takes_value: true, default: None },
         FlagSpec { name: "metrics-csv", help: "write per-step metrics CSV", takes_value: true, default: None },
+        FlagSpec { name: "residency", help: "train-state residency (resident|literal)", takes_value: true, default: None },
     ]
 }
 
@@ -62,6 +63,9 @@ fn load_table(args: &Args) -> Result<Table> {
     }
     if let Some(v) = args.get("checkpoint") {
         table.set("train.checkpoint", Value::Str(v.into()));
+    }
+    if let Some(v) = args.get_choice("residency", &["resident", "device", "literal", "host"])? {
+        table.set("train.residency", Value::Str(v.into()));
     }
     Ok(table)
 }
@@ -113,15 +117,16 @@ fn cmd_train(raw: &[String]) -> Result<()> {
     }
     let args = Args::parse(raw, &specs)?;
     let table = load_table(&args)?;
-    let cfg = TrainConfig::from_table(&table);
+    let cfg = TrainConfig::from_table(&table)?;
 
     let rt = Runtime::cpu()?;
     let manifest = Manifest::load(&efficientgrad::artifacts_dir())?;
     log::info!(
-        "training {} mode={} steps={} on {}",
+        "training {} mode={} steps={} residency={} on {}",
         cfg.model,
         cfg.mode,
         cfg.steps,
+        cfg.residency.as_str(),
         rt.platform()
     );
     let ds = generate(&SynthConfig {
@@ -161,7 +166,7 @@ fn cmd_federated(raw: &[String]) -> Result<()> {
     }
     let args = Args::parse(raw, &specs)?;
     let table = load_table(&args)?;
-    let mut cfg = FedConfig::from_table(&table);
+    let mut cfg = FedConfig::from_table(&table)?;
     if let Some(v) = args.get_usize("workers")? {
         cfg.workers = v;
     }

@@ -69,6 +69,32 @@ impl ParamStore {
         self.params.iter().map(Tensor::len).sum()
     }
 
+    /// Bytes of the full training state (params + momenta + feedback,
+    /// f32) — what the literal runtime path uploads every step, and what
+    /// the resident path uploads exactly once.
+    pub fn state_bytes(&self) -> u64 {
+        let elems: usize = self
+            .params
+            .iter()
+            .chain(&self.momenta)
+            .chain(&self.feedback)
+            .map(Tensor::len)
+            .sum();
+        (elems * 4) as u64
+    }
+
+    /// Bytes of the mutable state slice (params + momenta) — what a
+    /// host sync / literal-path step downloads.
+    pub fn mutable_state_bytes(&self) -> u64 {
+        let elems: usize = self
+            .params
+            .iter()
+            .chain(&self.momenta)
+            .map(Tensor::len)
+            .sum();
+        (elems * 4) as u64
+    }
+
     /// L2 norm over all parameters (divergence watchdog).
     pub fn global_norm(&self) -> f64 {
         self.params
@@ -247,6 +273,9 @@ mod tests {
         assert!(ps.momenta.iter().all(|t| t.data().iter().all(|&v| v == 0.0)));
         assert_eq!(ps.feedback.len(), 1);
         assert_eq!(ps.param_elements(), 216 + 8 + 8);
+        // params + momenta + feedback = 232 + 232 + 216 elements
+        assert_eq!(ps.state_bytes(), (232 + 232 + 216) * 4);
+        assert_eq!(ps.mutable_state_bytes(), (232 + 232) * 4);
     }
 
     #[test]

@@ -1,10 +1,18 @@
-//! Compiled executables + the training-step hot path.
+//! Compiled executables + the literal-path training step.
+//!
+//! [`TrainState`] is the legacy host-round-trip backend (upload the whole
+//! state as literals each step, download it all back) — kept as the
+//! fallback and as the parity oracle for the buffer-resident path in
+//! [`super::resident`]. Its one concession to the hot path: the immutable
+//! feedback literals are cached per store instead of rebuilt every step.
 
+use std::cell::{Cell, RefCell};
 use std::path::PathBuf;
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use super::resident::TransferStats;
 use super::{int_tensor_to_literal, into_anyhow, literal_to_tensor, tensor_to_literal};
 use crate::data::Batch;
 use crate::manifest::{ArtifactSpec, ModelSpec};
@@ -70,6 +78,26 @@ impl Executable {
             .map_err(into_anyhow)?;
         lit.to_tuple().map_err(into_anyhow)
     }
+
+    /// Execute buffer-in / buffer-out. When running from device buffers
+    /// the runtime untuples the result (PJRT `untuple_result`), so each
+    /// tuple element comes back as its own `PjRtBuffer` — which is what
+    /// lets the resident path thread outputs straight into the next
+    /// step's inputs without a host round-trip.
+    pub fn run_buffers(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::PjRtBuffer>> {
+        if args.len() != self.inputs.len() {
+            bail!(
+                "{}: got {} buffer args, artifact wants {}",
+                self.tag,
+                args.len(),
+                self.inputs.len()
+            );
+        }
+        let outs = self.exe.execute_b(args).map_err(into_anyhow)?;
+        outs.into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("{}: no output buffers", self.tag))
+    }
 }
 
 /// Outputs of one training step (scalars downloaded, state kept as
@@ -83,7 +111,38 @@ pub struct TrainOutputs {
     pub sparsity: Vec<f32>,
 }
 
-/// Driver binding a ParamStore to a compiled train-step artifact.
+/// Cached feedback literals for the literal path. The feedback B never
+/// mutates after `ParamStore::init`, so converting it to literals once
+/// per store (instead of once per step) is free parity. Keyed by data
+/// pointer *plus* a boundary-value fingerprint: a bare pointer key could
+/// go stale if a dropped store's allocation is reused by a new store of
+/// the same model (same size class), which would silently train with the
+/// wrong feedback draw.
+#[derive(Default)]
+struct FeedbackCache {
+    key: u64,
+    lits: Vec<xla::Literal>,
+}
+
+fn feedback_key(feedback: &[Tensor]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325; // FNV offset basis
+    let mut mix = |v: u64| {
+        h ^= v;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    };
+    for t in feedback {
+        mix(t.data().as_ptr() as u64);
+        mix(t.len() as u64);
+        if let (Some(a), Some(b)) = (t.data().first(), t.data().last()) {
+            mix(a.to_bits() as u64);
+            mix(b.to_bits() as u64);
+        }
+    }
+    h
+}
+
+/// Driver binding a ParamStore to a compiled train-step artifact —
+/// the literal (host-round-trip) backend.
 ///
 /// Input layout contract (aot.py): params…, momenta…, feedback…, images,
 /// labels, lr, mu, seed. Output: params'…, momenta'…, loss, acc, sparsity.
@@ -91,6 +150,8 @@ pub struct TrainState {
     pub exe: std::rc::Rc<Executable>,
     pub n_params: usize,
     pub n_feedback: usize,
+    fb_cache: RefCell<FeedbackCache>,
+    stats: Cell<TransferStats>,
 }
 
 impl TrainState {
@@ -107,7 +168,20 @@ impl TrainState {
             exe,
             n_params: model.params.len(),
             n_feedback: model.feedback.len(),
+            fb_cache: RefCell::new(FeedbackCache::default()),
+            stats: Cell::new(TransferStats::default()),
         })
+    }
+
+    /// Host↔device traffic this state has accumulated (see
+    /// [`TransferStats`]); every step of the literal path moves the whole
+    /// model both ways.
+    pub fn transfer_stats(&self) -> TransferStats {
+        self.stats.get()
+    }
+
+    pub fn reset_transfer_stats(&self) {
+        self.stats.set(TransferStats::default());
     }
 
     /// Run one SGD step, updating `store` in place.
@@ -122,16 +196,32 @@ impl TrainState {
         for t in store.params.iter().chain(&store.momenta) {
             args.push(tensor_to_literal(t)?);
         }
-        for t in &store.feedback {
-            args.push(tensor_to_literal(t)?);
+        // immutable feedback: move the cached literals into the arg list,
+        // restore them afterwards (no Clone on xla::Literal needed)
+        let mut cache = self.fb_cache.borrow_mut();
+        let key = feedback_key(&store.feedback);
+        if cache.key != key || cache.lits.len() != store.feedback.len() {
+            cache.lits = store
+                .feedback
+                .iter()
+                .map(tensor_to_literal)
+                .collect::<Result<_>>()?;
+            cache.key = key;
         }
+        let fb_start = args.len();
+        args.append(&mut cache.lits);
         args.push(tensor_to_literal(&batch.images)?);
         args.push(int_tensor_to_literal(&batch.labels)?);
         args.push(super::scalar_f32(lr));
         args.push(super::scalar_f32(momentum));
         args.push(super::scalar_i32(store.step as i32));
 
-        let outs = self.exe.run(&args)?;
+        let run = self.exe.run(&args);
+        cache
+            .lits
+            .extend(args.drain(fb_start..fb_start + self.n_feedback));
+        drop(cache);
+        let outs = run?;
         let np = self.n_params;
         if outs.len() != 2 * np + 3 {
             bail!(
@@ -152,6 +242,15 @@ impl TrainState {
             .map_err(into_anyhow)?;
         let sparsity = outs[2 * np + 2].to_vec::<f32>().map_err(into_anyhow)?;
         store.step += 1;
+
+        let mut stats = self.stats.get();
+        let state = store.state_bytes();
+        let mutable = store.mutable_state_bytes();
+        stats.state_up += state; // params + momenta + feedback uploaded
+        stats.state_down += mutable + (2 + sparsity.len()) as u64 * 4;
+        stats.batch_up += (batch.images.len() * 4 + batch.labels.data().len() * 4 + 12) as u64;
+        stats.steps += 1;
+        self.stats.set(stats);
         Ok(TrainOutputs {
             loss,
             acc,

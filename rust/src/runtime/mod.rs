@@ -2,12 +2,31 @@
 //! client. This is the only module that touches the `xla` crate; the rest
 //! of the coordinator works in host [`Tensor`]s.
 //!
-//! Perf notes (EXPERIMENTS.md §Perf): the hot path is
-//! `TrainState::step` — literal construction, `execute`, tuple
-//! decomposition, literal→tensor download. Buffers are reused where the
-//! API allows; see `runtime::exec` for the measured breakdown.
+//! Perf notes (EXPERIMENTS.md §Perf): the hot path is the train step, and
+//! its cost is dominated by *data movement*, mirroring the paper's energy
+//! argument. Two step backends exist, selected by
+//! [`crate::config::ResidencyMode`] and unified under
+//! [`resident::StepDriver`]:
+//!
+//! * **resident** (default, [`resident::DeviceState`]): params, momenta
+//!   and the immutable feedback tensors live in `PjRtBuffer`s; each step
+//!   executes buffer-in/buffer-out and threads the output state buffers
+//!   into the next step's inputs. Per-step host traffic is the batch
+//!   upload plus a scalar tail download (loss, acc, sparsity) —
+//!   `4·(2 + n_feedback)` state bytes. The O(model) download happens only
+//!   at round/eval/checkpoint boundaries via `sync_to_host`.
+//! * **literal** ([`exec::TrainState`]): the legacy fallback and parity
+//!   oracle. Uploads the whole state as fresh literals every step and
+//!   downloads it all back: `4·(4·P + F)` + tail bytes per step, P/F =
+//!   param/feedback elements. Feedback literals are cached per store so
+//!   the fallback at least skips rebuilding the immutable tensors.
+//!
+//! `cargo bench --bench runtime_hotpath` measures both rows and emits the
+//! per-step state-transfer bytes next to the latencies
+//! (`BENCH_runtime.json`); `tests/residency.rs` pins bit-for-bit parity.
 
 pub mod exec;
+pub mod resident;
 
 use std::cell::RefCell;
 use std::collections::BTreeMap;
@@ -19,6 +38,7 @@ use crate::manifest::{ArtifactSpec, ModelSpec};
 use crate::tensor::{IntTensor, Tensor};
 
 pub use exec::{Executable, TrainOutputs, TrainState};
+pub use resident::{DeviceState, StepDriver, TransferStats};
 
 /// PJRT CPU client + compile cache.
 ///
@@ -43,6 +63,12 @@ impl Runtime {
 
     pub fn platform(&self) -> String {
         self.client.platform_name()
+    }
+
+    /// Handle to the underlying PJRT client (shared `Rc` internally);
+    /// the resident path clones it to upload buffers outside `execute`.
+    pub(crate) fn client(&self) -> &xla::PjRtClient {
+        &self.client
     }
 
     /// Load + compile an HLO-text artifact (cached by path).

@@ -1,0 +1,405 @@
+//! Buffer-resident training state — the L3 answer to the paper's
+//! data-movement argument.
+//!
+//! The literal path ([`TrainState`]) re-uploads every parameter, momentum
+//! and (immutable!) feedback tensor on each step and downloads the full
+//! updated state back, even though the training loop only consumes three
+//! scalars per step. [`DeviceState`] instead uploads the state to
+//! `xla::PjRtBuffer`s once, executes the train artifact buffer-in /
+//! buffer-out, threads the output buffers straight into the next step's
+//! inputs, and downloads only the scalar tail (loss / acc / sparsity).
+//! The host [`ParamStore`] becomes a lazily-synced view, refreshed via
+//! [`DeviceState::sync_to_host`] only at round boundaries, eval and
+//! checkpoint time — per-step O(model) transfers become per-round.
+//!
+//! [`StepDriver`] wraps both paths behind one interface so the trainer
+//! and the federated worker select a [`ResidencyMode`] without branching
+//! at every call site; the literal path stays available as a fallback and
+//! as the parity oracle (`tests/residency.rs`).
+
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+
+use super::exec::{Executable, TrainOutputs, TrainState};
+use super::{
+    int_tensor_to_literal, into_anyhow, literal_to_tensor, scalar_f32, scalar_i32,
+    tensor_to_literal, Runtime,
+};
+use crate::config::ResidencyMode;
+use crate::data::Batch;
+use crate::manifest::ModelSpec;
+use crate::params::ParamStore;
+use crate::tensor::Tensor;
+
+/// Host↔device traffic ledger, split by what moved. `state_*` counts
+/// training state (params / momenta / feedback / scalar outputs);
+/// `batch_up` counts the per-step inputs that exist on the host anyway
+/// (images, labels, lr, momentum, seed). The residency win is visible in
+/// `state_up + state_down` per step.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TransferStats {
+    /// training-state bytes uploaded host→device
+    pub state_up: u64,
+    /// training-state bytes downloaded device→host
+    pub state_down: u64,
+    /// batch + hyperparameter bytes uploaded host→device
+    pub batch_up: u64,
+    /// train steps executed while this ledger was live
+    pub steps: u64,
+}
+
+impl TransferStats {
+    /// Mean state bytes moved per step (the paper-relevant number).
+    pub fn state_bytes_per_step(&self) -> u64 {
+        if self.steps == 0 {
+            0
+        } else {
+            (self.state_up + self.state_down) / self.steps
+        }
+    }
+}
+
+fn tensor_bytes(t: &Tensor) -> u64 {
+    (t.len() * 4) as u64
+}
+
+fn upload(client: &xla::PjRtClient, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
+    client
+        .buffer_from_host_literal(None, lit)
+        .map_err(into_anyhow)
+}
+
+/// Device-resident replica of one model's training state.
+///
+/// Owns the `PjRtBuffer`s for params, momenta and the (never-mutated)
+/// feedback tensors. `step` executes the train artifact buffer-to-buffer;
+/// the only per-step downloads are the loss/acc/sparsity tuple tail.
+pub struct DeviceState {
+    exe: Rc<Executable>,
+    client: xla::PjRtClient,
+    params: Vec<xla::PjRtBuffer>,
+    momenta: Vec<xla::PjRtBuffer>,
+    feedback: Vec<xla::PjRtBuffer>,
+    /// element count per param tensor (transfer accounting)
+    param_elems: Vec<usize>,
+    n_feedback: usize,
+    /// step counter; fed to the artifact as the per-step RNG seed, exactly
+    /// like the literal path feeds `store.step`
+    step: u64,
+    /// device state has advanced past the last host sync
+    host_stale: bool,
+    stats: TransferStats,
+}
+
+impl DeviceState {
+    /// Upload `store`'s full state to the device. The store is the source
+    /// of truth exactly once, here (and again after `sync_to_host`).
+    pub fn new(
+        rt: &Runtime,
+        exe: Rc<Executable>,
+        model: &ModelSpec,
+        store: &ParamStore,
+    ) -> Result<Self> {
+        let want = 2 * model.params.len() + model.feedback.len() + 5;
+        if exe.inputs.len() != want {
+            bail!(
+                "artifact {} input arity {} != expected {want}",
+                exe.tag,
+                exe.inputs.len()
+            );
+        }
+        if store.params.len() != model.params.len()
+            || store.feedback.len() != model.feedback.len()
+        {
+            bail!(
+                "store has {}/{} param/feedback tensors, model {} wants {}/{}",
+                store.params.len(),
+                store.feedback.len(),
+                model.name,
+                model.params.len(),
+                model.feedback.len()
+            );
+        }
+        let client = rt.client().clone();
+        let mut stats = TransferStats::default();
+        let up_all = |ts: &[Tensor], stats: &mut TransferStats| -> Result<Vec<xla::PjRtBuffer>> {
+            ts.iter()
+                .map(|t| {
+                    stats.state_up += tensor_bytes(t);
+                    upload(&client, &tensor_to_literal(t)?)
+                })
+                .collect()
+        };
+        let params = up_all(&store.params, &mut stats)?;
+        let momenta = up_all(&store.momenta, &mut stats)?;
+        let feedback = up_all(&store.feedback, &mut stats)?;
+        Ok(Self {
+            exe,
+            param_elems: store.params.iter().map(Tensor::len).collect(),
+            n_feedback: store.feedback.len(),
+            step: store.step,
+            host_stale: false,
+            stats,
+            client,
+            params,
+            momenta,
+            feedback,
+        })
+    }
+
+    pub fn step_count(&self) -> u64 {
+        self.step
+    }
+
+    /// True when the device state has advanced past the last host sync.
+    pub fn host_stale(&self) -> bool {
+        self.host_stale
+    }
+
+    pub fn transfer_stats(&self) -> TransferStats {
+        self.stats
+    }
+
+    pub fn reset_transfer_stats(&mut self) {
+        self.stats = TransferStats::default();
+    }
+
+    /// One SGD step, entirely on the device. Output buffers replace the
+    /// input state buffers (the old ones drop, freeing device memory);
+    /// only loss/acc/sparsity cross back to the host.
+    pub fn step(&mut self, batch: &Batch, lr: f32, momentum: f32) -> Result<TrainOutputs> {
+        let images = upload(&self.client, &tensor_to_literal(&batch.images)?)?;
+        let labels = upload(&self.client, &int_tensor_to_literal(&batch.labels)?)?;
+        let lr_b = upload(&self.client, &scalar_f32(lr))?;
+        let mu_b = upload(&self.client, &scalar_f32(momentum))?;
+        let seed_b = upload(&self.client, &scalar_i32(self.step as i32))?;
+        self.stats.batch_up +=
+            tensor_bytes(&batch.images) + (batch.labels.data().len() * 4) as u64 + 12;
+
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(self.exe.inputs.len());
+        args.extend(self.params.iter());
+        args.extend(self.momenta.iter());
+        args.extend(self.feedback.iter());
+        args.extend([&images, &labels, &lr_b, &mu_b, &seed_b]);
+
+        let mut outs = self.exe.run_buffers(&args)?;
+        let np = self.params.len();
+        if outs.len() != 2 * np + 3 {
+            bail!(
+                "train step returned {} output buffers, expected {}",
+                outs.len(),
+                2 * np + 3
+            );
+        }
+        // do all fallible work (the scalar tail downloads) BEFORE
+        // committing the new state buffers, so an error leaves this state
+        // exactly where it was — same contract as the literal path, which
+        // leaves the store untouched when a step fails
+        let scalar = |b: xla::PjRtBuffer| -> Result<xla::Literal> {
+            b.to_literal_sync().map_err(into_anyhow)
+        };
+        let sparsity = scalar(outs.pop().unwrap())?
+            .to_vec::<f32>()
+            .map_err(into_anyhow)?;
+        let acc = scalar(outs.pop().unwrap())?
+            .get_first_element::<f32>()
+            .map_err(into_anyhow)?;
+        let loss = scalar(outs.pop().unwrap())?
+            .get_first_element::<f32>()
+            .map_err(into_anyhow)?;
+        // thread the new state into the next step's inputs — no host copy
+        let mut outs = outs.into_iter();
+        for p in self.params.iter_mut() {
+            *p = outs.next().unwrap();
+        }
+        for m in self.momenta.iter_mut() {
+            *m = outs.next().unwrap();
+        }
+        self.stats.state_down += (2 + sparsity.len()) as u64 * 4;
+        self.stats.steps += 1;
+        self.step += 1;
+        self.host_stale = true;
+        Ok(TrainOutputs {
+            loss,
+            acc,
+            sparsity,
+        })
+    }
+
+    /// Replace the device params (FedAvg broadcast / restored checkpoint).
+    /// Momenta and feedback stay resident — momenta are local state in the
+    /// federated deployment, feedback never changes.
+    pub fn load_params(&mut self, params: &[Tensor]) -> Result<()> {
+        if params.len() != self.params.len() {
+            bail!(
+                "load_params got {} tensors, device holds {}",
+                params.len(),
+                self.params.len()
+            );
+        }
+        for (slot, t) in self.params.iter_mut().zip(params) {
+            self.stats.state_up += tensor_bytes(t);
+            *slot = upload(&self.client, &tensor_to_literal(t)?)?;
+        }
+        self.host_stale = true;
+        Ok(())
+    }
+
+    /// Download params + momenta into the host store (round boundary /
+    /// eval / checkpoint). This is the only place the O(model) download
+    /// still happens — once per round instead of once per step.
+    pub fn sync_to_host(&mut self, store: &mut ParamStore) -> Result<()> {
+        if store.params.len() != self.params.len() {
+            bail!(
+                "sync_to_host: store has {} params, device {}",
+                store.params.len(),
+                self.params.len()
+            );
+        }
+        for (dst, src) in store
+            .params
+            .iter_mut()
+            .chain(store.momenta.iter_mut())
+            .zip(self.params.iter().chain(self.momenta.iter()))
+        {
+            *dst = literal_to_tensor(&src.to_literal_sync().map_err(into_anyhow)?)?;
+            self.stats.state_down += tensor_bytes(dst);
+        }
+        store.step = self.step;
+        self.host_stale = false;
+        Ok(())
+    }
+
+    /// State bytes the scalar tail costs per step — what the resident
+    /// path's `state_down` should measure at exactly.
+    pub fn scalar_tail_bytes(&self) -> u64 {
+        (2 + self.n_feedback) as u64 * 4
+    }
+
+    /// Total elements across the param tensors (accounting helpers).
+    pub fn param_elements(&self) -> usize {
+        self.param_elems.iter().sum()
+    }
+}
+
+/// One train-step backend: the legacy literal path or the device-resident
+/// path, behind a single interface so `Trainer` and the federated worker
+/// stay residency-agnostic.
+pub enum StepDriver {
+    Literal(TrainState),
+    Resident(DeviceState),
+}
+
+impl StepDriver {
+    pub fn new(
+        mode: ResidencyMode,
+        rt: &Runtime,
+        exe: Rc<Executable>,
+        model: &ModelSpec,
+        store: &ParamStore,
+    ) -> Result<Self> {
+        Ok(match mode {
+            ResidencyMode::Literal => StepDriver::Literal(TrainState::new(exe, model)?),
+            ResidencyMode::Resident => {
+                StepDriver::Resident(DeviceState::new(rt, exe, model, store)?)
+            }
+        })
+    }
+
+    pub fn mode(&self) -> ResidencyMode {
+        match self {
+            StepDriver::Literal(_) => ResidencyMode::Literal,
+            StepDriver::Resident(_) => ResidencyMode::Resident,
+        }
+    }
+
+    /// One SGD step. The literal path updates `store` in place; the
+    /// resident path leaves it stale until [`StepDriver::sync_to_host`].
+    pub fn step(
+        &mut self,
+        store: &mut ParamStore,
+        batch: &Batch,
+        lr: f32,
+        momentum: f32,
+    ) -> Result<TrainOutputs> {
+        match self {
+            StepDriver::Literal(st) => st.step(store, batch, lr, momentum),
+            StepDriver::Resident(ds) => ds.step(batch, lr, momentum),
+        }
+    }
+
+    /// Install a new parameter set (FedAvg broadcast). Consumes the
+    /// tensors so the literal path can move them into the store.
+    pub fn load_params(&mut self, store: &mut ParamStore, params: Vec<Tensor>) -> Result<()> {
+        match self {
+            StepDriver::Literal(_) => {
+                if params.len() != store.params.len() {
+                    bail!(
+                        "load_params got {} tensors, store holds {}",
+                        params.len(),
+                        store.params.len()
+                    );
+                }
+                store.params = params;
+                Ok(())
+            }
+            StepDriver::Resident(ds) => ds.load_params(&params),
+        }
+    }
+
+    /// Make `store` current. No-op on the literal path (it never goes
+    /// stale); O(model) download on the resident path.
+    pub fn sync_to_host(&mut self, store: &mut ParamStore) -> Result<()> {
+        match self {
+            StepDriver::Literal(_) => Ok(()),
+            StepDriver::Resident(ds) => ds.sync_to_host(store),
+        }
+    }
+
+    /// Steps executed so far (authoritative regardless of residency).
+    pub fn steps_done(&self, store: &ParamStore) -> u64 {
+        match self {
+            StepDriver::Literal(_) => store.step,
+            StepDriver::Resident(ds) => ds.step_count(),
+        }
+    }
+
+    pub fn transfer_stats(&self) -> TransferStats {
+        match self {
+            StepDriver::Literal(st) => st.transfer_stats(),
+            StepDriver::Resident(ds) => ds.transfer_stats(),
+        }
+    }
+}
+
+impl std::fmt::Debug for DeviceState {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("DeviceState")
+            .field("exe", &self.exe.tag)
+            .field("params", &self.params.len())
+            .field("momenta", &self.momenta.len())
+            .field("feedback", &self.n_feedback)
+            .field("step", &self.step)
+            .field("host_stale", &self.host_stale)
+            .field("stats", &self.stats)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_stats_per_step_math() {
+        let s = TransferStats {
+            state_up: 0,
+            state_down: 120,
+            batch_up: 999,
+            steps: 10,
+        };
+        assert_eq!(s.state_bytes_per_step(), 12);
+        assert_eq!(TransferStats::default().state_bytes_per_step(), 0);
+    }
+}

@@ -15,24 +15,39 @@ pub fn tau_from_rate(sigma: f64, prune_rate: f64) -> f64 {
     ndtri((1.0 + p) / 2.0) * sigma
 }
 
-/// eq. 3 applied on the host (verification / simulation only).
-pub fn stochastic_prune(delta: &[f32], tau: f64, rng: &mut Rng) -> Vec<f32> {
-    delta
-        .iter()
-        .map(|&d| {
-            let mag = d.abs() as f64;
-            if mag > tau {
-                d
+/// eq. 3 applied on the host into a caller-provided buffer — no per-call
+/// allocation, so hot loops (benches, repeated verification sweeps) can
+/// reuse one output buffer. Draws from `rng` in the same element order as
+/// [`stochastic_prune`], so both produce identical results for one seed.
+pub fn stochastic_prune_into(delta: &[f32], tau: f64, rng: &mut Rng, out: &mut [f32]) {
+    assert_eq!(
+        delta.len(),
+        out.len(),
+        "prune output buffer len {} != input {}",
+        out.len(),
+        delta.len()
+    );
+    for (o, &d) in out.iter_mut().zip(delta) {
+        let mag = d.abs() as f64;
+        *o = if mag > tau {
+            d
+        } else {
+            let r = rng.uniform();
+            if mag >= r * tau {
+                (tau as f32).copysign(d)
             } else {
-                let r = rng.uniform();
-                if mag >= r * tau {
-                    (tau as f32).copysign(d)
-                } else {
-                    0.0
-                }
+                0.0
             }
-        })
-        .collect()
+        };
+    }
+}
+
+/// eq. 3 applied on the host (verification / simulation only). Thin
+/// allocating wrapper over [`stochastic_prune_into`].
+pub fn stochastic_prune(delta: &[f32], tau: f64, rng: &mut Rng) -> Vec<f32> {
+    let mut out = vec![0.0; delta.len()];
+    stochastic_prune_into(delta, tau, rng, &mut out);
+    out
 }
 
 /// Expected *zero* fraction after pruning N(0,σ²) gradients at rate P.
@@ -149,6 +164,25 @@ mod tests {
         rng.fill_normal(&mut delta, 0.5);
         let z = expectation_drift_z(&delta, 0.9, 2);
         assert!(z.abs() < 4.0, "mean drifted: z = {z}");
+    }
+
+    #[test]
+    fn prune_into_matches_allocating_wrapper() {
+        let mut rng = Rng::new(9);
+        let mut delta = vec![0f32; 4096];
+        rng.fill_normal(&mut delta, 1.0);
+        let tau = tau_from_rate(1.0, 0.9);
+        let a = stochastic_prune(&delta, tau, &mut Rng::new(5));
+        let mut b = vec![0f32; delta.len()];
+        stochastic_prune_into(&delta, tau, &mut Rng::new(5), &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic]
+    fn prune_into_rejects_short_buffer() {
+        let mut out = vec![0f32; 2];
+        stochastic_prune_into(&[1.0, 2.0, 3.0], 1.0, &mut Rng::new(0), &mut out);
     }
 
     #[test]

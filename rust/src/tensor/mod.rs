@@ -126,6 +126,14 @@ impl Tensor {
         }
     }
 
+    /// alpha * self as a new tensor — single pass, no zero-fill.
+    pub fn scaled(&self, alpha: f32) -> Tensor {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|v| alpha * v).collect(),
+        }
+    }
+
     /// L2 norm.
     pub fn norm(&self) -> f64 {
         self.data.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt()
@@ -215,6 +223,10 @@ mod tests {
         assert_eq!(a.data(), &[2.0, 2.0, 2.0, 2.0]);
         a.scale(0.25);
         assert_eq!(a.data(), &[0.5, 0.5, 0.5, 0.5]);
+        let s = a.scaled(4.0);
+        assert_eq!(s.data(), &[2.0, 2.0, 2.0, 2.0]);
+        assert_eq!(a.data(), &[0.5, 0.5, 0.5, 0.5]); // source untouched
+        assert_eq!(s.shape(), a.shape());
     }
 
     #[test]

@@ -8,12 +8,12 @@ pub mod metrics;
 use anyhow::{bail, Context, Result};
 
 use crate::config::TrainConfig;
-use crate::data::batcher::{eval_batches, Batcher};
+use crate::data::batcher::{eval_batches, prefetch_scoped};
 use crate::data::Dataset;
 use crate::manifest::{Manifest, ModelSpec};
 use crate::params::ParamStore;
 use crate::runtime::exec::EvalState;
-use crate::runtime::{Runtime, TrainState};
+use crate::runtime::{Runtime, StepDriver};
 
 pub use metrics::{MetricsLog, StepRecord};
 
@@ -61,18 +61,25 @@ impl LrSchedule {
 }
 
 /// A bound single-device trainer.
+///
+/// With `cfg.residency == Resident` (the default) the training state
+/// lives on the device between steps and `store` is a lazily-synced
+/// view: it is refreshed (via [`Trainer::sync_store`]) before every
+/// eval, checkpoint, and at the end of [`Trainer::run`]. External
+/// readers of `store` mid-run must call `sync_store` first.
 pub struct Trainer {
     pub cfg: TrainConfig,
     pub model: ModelSpec,
     pub store: ParamStore,
-    train_state: TrainState,
+    driver: StepDriver,
     eval_state: EvalState,
     pub log: MetricsLog,
 }
 
 impl Trainer {
     /// Build from manifest + runtime: loads (compiles) the train artifact
-    /// for `cfg.mode` and the fwd artifact for eval.
+    /// for `cfg.mode` and the fwd artifact for eval, then binds the step
+    /// backend selected by `cfg.residency`.
     pub fn new(rt: &Runtime, manifest: &Manifest, cfg: TrainConfig) -> Result<Self> {
         let model = manifest.model(&cfg.model)?.clone();
         let tag = format!("train_{}", cfg.mode);
@@ -84,68 +91,94 @@ impl Trainer {
                 model.train_modes()
             )
         })?;
-        let train_state = TrainState::new(rt.load(art)?, &model)?;
-        let eval_state = EvalState::new(rt.load(model.artifact("fwd")?)?, &model)?;
         let store = ParamStore::init(&model, cfg.seed);
+        let driver = StepDriver::new(cfg.residency, rt, rt.load(art)?, &model, &store)?;
+        let eval_state = EvalState::new(rt.load(model.artifact("fwd")?)?, &model)?;
         Ok(Self {
             cfg,
             model,
             store,
-            train_state,
+            driver,
             eval_state,
             log: MetricsLog::default(),
         })
     }
 
-    /// Run `steps` steps over `train` (owned batcher), evaluating on
-    /// `test` every `eval_every`. Returns final eval accuracy.
+    /// Bring `store` up to date with the device state (no-op on the
+    /// literal path). Call before reading `store` mid-run.
+    pub fn sync_store(&mut self) -> Result<()> {
+        self.driver.sync_to_host(&mut self.store)
+    }
+
+    /// Steps executed so far, authoritative regardless of residency.
+    pub fn steps_done(&self) -> u64 {
+        self.driver.steps_done(&self.store)
+    }
+
+    /// Host↔device traffic of the step backend so far.
+    pub fn transfer_stats(&self) -> crate::runtime::TransferStats {
+        self.driver.transfer_stats()
+    }
+
+    /// Run `steps` steps over `train` (prefetched batcher: the next batch
+    /// is gathered on a background thread while the current step
+    /// executes), evaluating on `test` every `eval_every`. Returns final
+    /// eval accuracy.
     pub fn run(&mut self, train: &Dataset, test: &Dataset) -> Result<f64> {
         let sched = LrSchedule::from_config(&self.cfg)?;
-        let mut batcher = Batcher::new(train, self.model.batch, self.cfg.seed ^ 0xBA7C);
         let mut last_eval = 0.0;
-        for step in 0..self.cfg.steps {
-            let batch = batcher.next_batch();
-            let lr = sched.at(step) as f32;
-            let out = self
-                .train_state
-                .step(&mut self.store, &batch, lr, self.cfg.momentum as f32)?;
-            if !out.loss.is_finite() {
-                bail!("loss diverged to {} at step {step}", out.loss);
-            }
-            self.log.push(StepRecord {
-                step,
-                loss: out.loss as f64,
-                batch_acc: out.acc as f64,
-                lr: lr as f64,
-                sparsity: crate::util::stats::mean(&out.sparsity),
-                eval_acc: None,
-            });
-            if step % self.cfg.log_every == 0 {
-                log::info!(
-                    "[{}/{}] step {step:5} loss {:.4} acc {:.3} lr {:.4} sparsity {:.3}",
-                    self.model.name,
-                    self.cfg.mode,
-                    out.loss,
-                    out.acc,
-                    lr,
-                    crate::util::stats::mean(&out.sparsity),
-                );
-            }
-            if self.cfg.eval_every > 0
-                && (step + 1) % self.cfg.eval_every == 0
-            {
-                last_eval = self.evaluate(test)?;
-                if let Some(r) = self.log.records.last_mut() {
-                    r.eval_acc = Some(last_eval);
+        // scoped prefetch: borrows `train` (no clone); the receiver drops
+        // at the end of the closure, which unblocks + joins the producer
+        std::thread::scope(|scope| -> Result<()> {
+            let batches =
+                prefetch_scoped(scope, train, self.model.batch, self.cfg.seed ^ 0xBA7C, 2);
+            for step in 0..self.cfg.steps {
+                let batch = batches.recv().expect("prefetch thread died");
+                let lr = sched.at(step) as f32;
+                let out = self
+                    .driver
+                    .step(&mut self.store, &batch, lr, self.cfg.momentum as f32)?;
+                if !out.loss.is_finite() {
+                    bail!("loss diverged to {} at step {step}", out.loss);
                 }
-                log::info!(
-                    "[{}/{}] step {step:5} EVAL acc {:.4}",
-                    self.model.name,
-                    self.cfg.mode,
-                    last_eval
-                );
+                self.log.push(StepRecord {
+                    step,
+                    loss: out.loss as f64,
+                    batch_acc: out.acc as f64,
+                    lr: lr as f64,
+                    sparsity: crate::util::stats::mean(&out.sparsity),
+                    eval_acc: None,
+                });
+                if step % self.cfg.log_every == 0 {
+                    log::info!(
+                        "[{}/{}] step {step:5} loss {:.4} acc {:.3} lr {:.4} sparsity {:.3}",
+                        self.model.name,
+                        self.cfg.mode,
+                        out.loss,
+                        out.acc,
+                        lr,
+                        crate::util::stats::mean(&out.sparsity),
+                    );
+                }
+                if self.cfg.eval_every > 0
+                    && (step + 1) % self.cfg.eval_every == 0
+                {
+                    self.sync_store()?;
+                    last_eval = self.evaluate(test)?;
+                    if let Some(r) = self.log.records.last_mut() {
+                        r.eval_acc = Some(last_eval);
+                    }
+                    log::info!(
+                        "[{}/{}] step {step:5} EVAL acc {:.4}",
+                        self.model.name,
+                        self.cfg.mode,
+                        last_eval
+                    );
+                }
             }
-        }
+            Ok(())
+        })?;
+        self.sync_store()?;
         if self.cfg.eval_every == 0 || self.cfg.steps % self.cfg.eval_every != 0 {
             last_eval = self.evaluate(test)?;
         }
@@ -156,16 +189,18 @@ impl Trainer {
     }
 
     /// One externally-driven step (used by the Fig. 3 probe loop and the
-    /// bench harness; `run` is the batteries-included path).
+    /// bench harness; `run` is the batteries-included path). Does NOT
+    /// sync the host store in resident mode — call
+    /// [`Trainer::sync_store`] before reading `store`.
     pub fn manual_step(&mut self, batch: &crate::data::Batch, lr: f32) -> Result<()> {
         let out = self
-            .train_state
+            .driver
             .step(&mut self.store, batch, lr, self.cfg.momentum as f32)?;
         if !out.loss.is_finite() {
             bail!("loss diverged to {}", out.loss);
         }
         self.log.push(StepRecord {
-            step: self.store.step as usize - 1,
+            step: self.steps_done() as usize - 1,
             loss: out.loss as f64,
             batch_acc: out.acc as f64,
             lr: lr as f64,
@@ -175,7 +210,9 @@ impl Trainer {
         Ok(())
     }
 
-    /// Full-sweep top-1 accuracy on a dataset.
+    /// Full-sweep top-1 accuracy on a dataset. Reads the host `store` —
+    /// in resident mode, call [`Trainer::sync_store`] first (as `run`
+    /// does at its eval boundaries).
     pub fn evaluate(&self, ds: &Dataset) -> Result<f64> {
         let mut correct_weighted = 0.0;
         let mut total = 0usize;

@@ -1,0 +1,155 @@
+//! Resident-path parity tests: the device-resident step backend must be
+//! bit-for-bit identical to the literal path it replaces — same
+//! executable, same seeds, same batches, so the only difference is where
+//! the state lives between steps.
+//!
+//! Like the other artifact-backed suites, these skip (not fail) when
+//! `make artifacts` has not run.
+
+use efficientgrad::config::ResidencyMode;
+use efficientgrad::data::batcher::Batcher;
+use efficientgrad::data::synthetic::{generate, SynthConfig};
+use efficientgrad::manifest::Manifest;
+use efficientgrad::params::ParamStore;
+use efficientgrad::runtime::{DeviceState, Runtime, StepDriver, TrainState};
+
+fn manifest() -> Option<Manifest> {
+    Manifest::load(&efficientgrad::artifacts_dir()).ok()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match manifest() {
+            Some(m) => m,
+            None => {
+                eprintln!("SKIP: artifacts/ missing; run `make artifacts`");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn resident_matches_literal_bit_for_bit_after_10_steps() {
+    let m = require_artifacts!();
+    let rt = Runtime::cpu().unwrap();
+    let model = m.model("convnet_t").unwrap();
+    let exe = rt.load(model.artifact("train_efficientgrad").unwrap()).unwrap();
+
+    let mut lit_store = ParamStore::init(model, 21);
+    let mut res_store = lit_store.clone();
+    let literal = TrainState::new(exe.clone(), model).unwrap();
+    let mut resident = DeviceState::new(&rt, exe, model, &res_store).unwrap();
+
+    let ds = generate(&SynthConfig {
+        n: 64,
+        seed: 13,
+        ..Default::default()
+    });
+    // two independent batchers with one seed: identical batch sequences
+    let mut ba = Batcher::new(&ds, model.batch, 99);
+    let mut bb = Batcher::new(&ds, model.batch, 99);
+    for step in 0..10 {
+        let a = literal.step(&mut lit_store, &ba.next_batch(), 0.05, 0.9).unwrap();
+        let b = resident.step(&bb.next_batch(), 0.05, 0.9).unwrap();
+        // scalars must already agree every step (same artifact, same seed
+        // input — the step counter — on both paths)
+        assert_eq!(a.loss, b.loss, "loss diverged at step {step}");
+        assert_eq!(a.acc, b.acc, "acc diverged at step {step}");
+        assert_eq!(a.sparsity, b.sparsity, "sparsity diverged at step {step}");
+    }
+
+    assert!(resident.host_stale());
+    resident.sync_to_host(&mut res_store).unwrap();
+    assert!(!resident.host_stale());
+
+    assert_eq!(res_store.step, lit_store.step);
+    assert_eq!(res_store.params, lit_store.params, "params diverged");
+    assert_eq!(res_store.momenta, lit_store.momenta, "momenta diverged");
+    assert_eq!(res_store.feedback, lit_store.feedback); // never touched
+
+    // per-step state traffic: scalars only (the whole point)
+    let stats = resident.transfer_stats();
+    // 10 steps downloaded scalar tails + one full sync at the end
+    assert_eq!(
+        stats.state_down,
+        10 * resident.scalar_tail_bytes() + res_store.mutable_state_bytes()
+    );
+}
+
+#[test]
+fn device_state_checkpoint_roundtrip() {
+    let m = require_artifacts!();
+    let rt = Runtime::cpu().unwrap();
+    let model = m.model("convnet_t").unwrap();
+    let exe = rt.load(model.artifact("train_bp").unwrap()).unwrap();
+
+    let mut store = ParamStore::init(model, 31);
+    let mut dev = DeviceState::new(&rt, exe.clone(), model, &store).unwrap();
+    let ds = generate(&SynthConfig {
+        n: model.batch,
+        seed: 2,
+        ..Default::default()
+    });
+    let batch = ds.gather(&(0..model.batch as u32).collect::<Vec<_>>());
+    for _ in 0..3 {
+        dev.step(&batch, 0.05, 0.9).unwrap();
+    }
+
+    // sync -> checkpoint -> restore -> re-upload must resume identically
+    dev.sync_to_host(&mut store).unwrap();
+    assert_eq!(store.step, 3);
+    let path = std::env::temp_dir().join("effgrad_residency.ckpt");
+    store.save(&path).unwrap();
+    let restored = ParamStore::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    restored.check_compatible(model).unwrap();
+
+    let mut dev2 = DeviceState::new(&rt, exe, model, &restored).unwrap();
+    let a = dev.step(&batch, 0.05, 0.9).unwrap();
+    let b = dev2.step(&batch, 0.05, 0.9).unwrap();
+    assert_eq!(a.loss, b.loss);
+    assert_eq!(a.acc, b.acc);
+
+    let mut s1 = store.clone();
+    let mut s2 = restored;
+    dev.sync_to_host(&mut s1).unwrap();
+    dev2.sync_to_host(&mut s2).unwrap();
+    assert_eq!(s1.params, s2.params);
+    assert_eq!(s1.momenta, s2.momenta);
+    assert_eq!(s1.step, s2.step);
+}
+
+#[test]
+fn step_driver_broadcast_parity_across_modes() {
+    // one FedAvg-style round through StepDriver on both backends:
+    // load_params -> k steps -> sync must agree bit-for-bit
+    let m = require_artifacts!();
+    let rt = Runtime::cpu().unwrap();
+    let model = m.model("convnet_t").unwrap();
+    let exe = rt.load(model.artifact("train_efficientgrad").unwrap()).unwrap();
+
+    let broadcast = ParamStore::init(model, 77).params;
+    let ds = generate(&SynthConfig {
+        n: 64,
+        seed: 5,
+        ..Default::default()
+    });
+
+    let mut results = Vec::new();
+    for mode in [ResidencyMode::Literal, ResidencyMode::Resident] {
+        let mut store = ParamStore::init(model, 41);
+        let mut driver = StepDriver::new(mode, &rt, exe.clone(), model, &store).unwrap();
+        assert_eq!(driver.mode(), mode);
+        driver.load_params(&mut store, broadcast.clone()).unwrap();
+        let mut batcher = Batcher::new(&ds, model.batch, 7);
+        for _ in 0..4 {
+            driver.step(&mut store, &batcher.next_batch(), 0.05, 0.9).unwrap();
+        }
+        assert_eq!(driver.steps_done(&store), 4);
+        driver.sync_to_host(&mut store).unwrap();
+        results.push(store);
+    }
+    assert_eq!(results[0].params, results[1].params);
+    assert_eq!(results[0].momenta, results[1].momenta);
+}
