@@ -59,15 +59,16 @@ fn main() -> Result<()> {
     let summary = leader.run()?;
     leader.shutdown();
 
-    println!("\nround | mean loss | eval acc | sparsity | worker secs (sim)");
+    println!("\nround | mean loss | eval acc | sparsity | device KB | worker secs (sim)");
     for r in &summary.rounds {
         let times: Vec<String> = r.worker_secs.iter().map(|t| format!("{t:.2}")).collect();
         println!(
-            "{:5} | {:9.4} | {:8.4} | {:8.3} | [{}]",
+            "{:5} | {:9.4} | {:8.4} | {:8.3} | {:9.1} | [{}]",
             r.round,
             r.mean_loss,
             r.eval_acc,
             r.mean_sparsity,
+            r.device_bytes() as f64 / 1e3,
             times.join(", ")
         );
     }
@@ -78,6 +79,16 @@ fn main() -> Result<()> {
         summary.final_acc,
         summary.total_upload_bytes as f64 / 1e6,
         summary.total_download_bytes as f64 / 1e6
+    );
+    let dt = summary.total_device_transfer;
+    println!(
+        "device bus (fleet + leader eval): {:.2} MB state, {:.2} MB batches, \
+         {:.2} MB metrics over {} steps / {} evals (docs/TRANSFER_MODEL.md)",
+        (dt.state_up + dt.state_down) as f64 / 1e6,
+        dt.batch_up as f64 / 1e6,
+        dt.metrics_down as f64 / 1e6,
+        dt.steps,
+        dt.evals
     );
     anyhow::ensure!(
         summary.rounds.last().unwrap().mean_loss < summary.rounds[0].mean_loss,

@@ -1,23 +1,38 @@
-//! Bench: the L3 request-path hot loop — one train step through the PJRT
-//! executable on both step backends (literal round-trip vs
-//! device-resident buffers), plus eval-forward latency/throughput.
-//! The §Perf claim measured here mirrors the paper's data-movement
-//! argument: the resident path's per-step host transfer of *training
-//! state* must be scalars-only (loss/acc/sparsity = 4·(2+n_feedback)
-//! bytes), against the literal path's full-model round-trip, and its
-//! step latency must be no worse. Rows are also emitted to
-//! `BENCH_runtime.json` so the trajectory is tracked across PRs.
+//! Bench: the L3 request-path hot loop — train and eval steps through the
+//! PJRT executable on both residency backends (literal round-trip vs
+//! device-resident buffers), plus a mini federated run for the
+//! round-level byte ledger. The §Perf claim measured here mirrors the
+//! paper's data-movement argument:
+//!
+//! * the resident path's per-step host transfer of *training state* must
+//!   be scalars-only (loss/acc/sparsity = 4·(2+n_feedback) bytes),
+//!   against the literal path's full-model round-trip, and its step
+//!   latency must be no worse;
+//! * the resident eval paths must move **zero** state bytes per eval
+//!   (device-resident) or one params upload per param change (cached),
+//!   against the literal eval's 4·P upload per batch;
+//! * the federated rounds' `RoundReport` device-bus totals must equal
+//!   the sum of the per-worker `TransferStats` and match the formulas in
+//!   `docs/TRANSFER_MODEL.md`.
+//!
+//! Rows are also emitted to `BENCH_runtime.json` so the trajectory is
+//! tracked across PRs.
 //!
 //!     cargo bench --bench runtime_hotpath
 
 use std::time::Duration;
 
 use efficientgrad::benchlib::{bench, bench_default, fmt_ns, Report, Sample};
+use efficientgrad::config::{FedConfig, ResidencyMode, TrainConfig};
+use efficientgrad::coordinator::Leader;
 use efficientgrad::data::synthetic::{generate, SynthConfig};
 use efficientgrad::manifest::Manifest;
 use efficientgrad::params::ParamStore;
 use efficientgrad::runtime::exec::EvalState;
-use efficientgrad::runtime::{tensor_to_literal, DeviceState, Runtime, TrainState};
+use efficientgrad::runtime::{
+    literal_step_state_bytes, resident_step_state_bytes, tensor_to_literal, DeviceState, Runtime,
+    TrainState, TransferStats,
+};
 
 fn main() {
     let Ok(manifest) = Manifest::load(&efficientgrad::artifacts_dir()) else {
@@ -26,17 +41,26 @@ fn main() {
     };
     let rt = Runtime::cpu().expect("PJRT client");
     let mut rep = Report::new(
-        "L3 runtime hot path (literal vs device-resident step backends)",
+        "L3 runtime hot path (literal vs device-resident step + eval backends)",
         &["op", "mean", "p50", "p95", "per-image µs", "state B/step"],
     );
     let per_image = |s: &Sample, batch: usize| format!("{:.1}", s.mean_ns / 1e3 / batch as f64);
+    let timing_row = |rep: &mut Report, s: &Sample, per_img: String, state: String| {
+        rep.row(vec![
+            s.name.clone(),
+            fmt_ns(s.mean_ns),
+            fmt_ns(s.p50_ns),
+            fmt_ns(s.p95_ns),
+            per_img,
+            state,
+        ]);
+    };
 
     let mut convnet_s_means = (0.0, 0.0); // (literal, resident)
     for model_name in ["convnet_t", "convnet_s"] {
         let model = manifest.model(model_name).unwrap();
         let exe = rt.load(model.artifact("train_efficientgrad").unwrap()).unwrap();
-        let eval =
-            EvalState::new(rt.load(model.artifact("fwd").unwrap()).unwrap(), model).unwrap();
+        let fwd_exe = rt.load(model.artifact("fwd").unwrap()).unwrap();
         let ds = generate(&SynthConfig {
             n: model.batch,
             seed: 0,
@@ -57,18 +81,23 @@ fn main() {
             },
         );
         let lit_state_bytes = train.transfer_stats().state_bytes_per_step();
-        rep.row(vec![
-            s.name.clone(),
-            fmt_ns(s.mean_ns),
-            fmt_ns(s.p50_ns),
-            fmt_ns(s.p95_ns),
-            per_image(&s, model.batch),
-            lit_state_bytes.to_string(),
-        ]);
+        // the ledger must realize the documented formula exactly
+        assert_eq!(
+            lit_state_bytes,
+            literal_step_state_bytes(
+                store.param_elements(),
+                store.feedback.iter().map(|t| t.len()).sum(),
+                store.feedback.len(),
+            ),
+            "literal ledger drifted from the documented formula"
+        );
+        timing_row(&mut rep, &s, per_image(&s, model.batch), lit_state_bytes.to_string());
         let lit_mean = s.mean_ns;
 
         // -- resident path: state stays in PjRtBuffers; the host sees
-        //    only the scalar tail each step --
+        //    only the scalar tail each step. Input donation (default on)
+        //    releases the previous step's buffers before the tail
+        //    downloads --
         let res_store = ParamStore::init(model, 1);
         let mut dev = DeviceState::new(&rt, exe, model, &res_store).unwrap();
         for _ in 0..3 {
@@ -76,7 +105,7 @@ fn main() {
         }
         dev.reset_transfer_stats();
         let s = bench(
-            &format!("{model_name}: train step (resident)"),
+            &format!("{model_name}: train step (resident, donate)"),
             0, // already warmed; keep the ledger aligned with the iters
             30,
             Duration::from_secs(15),
@@ -92,44 +121,114 @@ fn main() {
             dev.scalar_tail_bytes(),
             "resident path leaked state transfers: {stats:?}"
         );
-        rep.row(vec![
-            s.name.clone(),
-            fmt_ns(s.mean_ns),
-            fmt_ns(s.p50_ns),
-            fmt_ns(s.p95_ns),
+        assert_eq!(
+            dev.scalar_tail_bytes(),
+            resident_step_state_bytes(res_store.feedback.len())
+        );
+        timing_row(&mut rep, &s, per_image(&s, model.batch), res_state_bytes.to_string());
+        let res_mean = s.mean_ns;
+
+        // donation off: identical transfers, previous-step buffers held
+        // through the tail downloads (the PR-1 error contract)
+        dev.set_donate_inputs(false);
+        dev.reset_transfer_stats();
+        let s = bench(
+            &format!("{model_name}: train step (resident, hold inputs)"),
+            1,
+            30,
+            Duration::from_secs(15),
+            || {
+                dev.step(&batch, 0.05, 0.9).unwrap();
+            },
+        );
+        assert_eq!(
+            dev.transfer_stats().state_bytes_per_step(),
+            dev.scalar_tail_bytes(),
+            "donation must not change the transfer ledger"
+        );
+        dev.set_donate_inputs(true);
+        timing_row(
+            &mut rep,
+            &s,
             per_image(&s, model.batch),
-            res_state_bytes.to_string(),
-        ]);
+            dev.scalar_tail_bytes().to_string(),
+        );
+
         println!(
             "{model_name}: state bytes/step {} -> {} ({}x less), step mean {} -> {}",
             lit_state_bytes,
             res_state_bytes,
             lit_state_bytes / res_state_bytes.max(1),
             fmt_ns(lit_mean),
-            fmt_ns(s.mean_ns),
+            fmt_ns(res_mean),
         );
         if model_name == "convnet_s" {
-            convnet_s_means = (lit_mean, s.mean_ns);
+            convnet_s_means = (lit_mean, res_mean);
         }
 
-        // -- eval forward (host store; unchanged by residency) --
+        // -- eval forward, literal: re-uploads all params every batch --
+        let eval_lit =
+            EvalState::new(&rt, fwd_exe.clone(), model, ResidencyMode::Literal).unwrap();
         let s = bench(
-            &format!("{model_name}: eval fwd"),
+            &format!("{model_name}: eval fwd (literal)"),
             3,
             30,
             Duration::from_secs(10),
             || {
-                eval.logits(&store, &batch.images).unwrap();
+                eval_lit.logits(&store, &batch.images).unwrap();
             },
         );
-        rep.row(vec![
-            s.name.clone(),
-            fmt_ns(s.mean_ns),
-            fmt_ns(s.p50_ns),
-            fmt_ns(s.p95_ns),
-            per_image(&s, model.batch),
-            "-".into(),
-        ]);
+        let lit_eval_bytes = eval_lit.transfer_stats().state_bytes_per_eval();
+        assert_eq!(
+            lit_eval_bytes,
+            (store.param_elements() * 4) as u64,
+            "literal eval should upload 4·P state bytes per batch"
+        );
+        timing_row(&mut rep, &s, per_image(&s, model.batch), lit_eval_bytes.to_string());
+
+        // -- eval forward, cached buffers: params uploaded once per
+        //    param change, zero state bytes per batch after that --
+        let eval_res =
+            EvalState::new(&rt, fwd_exe.clone(), model, ResidencyMode::Resident).unwrap();
+        eval_res.logits(&store, &batch.images).unwrap(); // warm the cache
+        eval_res.reset_transfer_stats();
+        let s = bench(
+            &format!("{model_name}: eval fwd (resident, cached)"),
+            0,
+            30,
+            Duration::from_secs(10),
+            || {
+                eval_res.logits(&store, &batch.images).unwrap();
+            },
+        );
+        let res_eval = eval_res.transfer_stats();
+        assert_eq!(
+            res_eval.state_up + res_eval.state_down,
+            0,
+            "cached eval leaked state transfers: {res_eval:?}"
+        );
+        timing_row(&mut rep, &s, per_image(&s, model.batch), "0".into());
+
+        // -- eval forward, device-resident: fwd runs off the training
+        //    param buffers — no upload at all, no sync beforehand --
+        dev.reset_transfer_stats();
+        let s = bench(
+            &format!("{model_name}: eval fwd (device-resident)"),
+            2,
+            30,
+            Duration::from_secs(10),
+            || {
+                dev.eval_logits(&fwd_exe, &batch.images).unwrap();
+            },
+        );
+        let dev_eval = dev.transfer_stats();
+        assert_eq!(
+            dev_eval.state_up + dev_eval.state_down,
+            0,
+            "device-resident eval leaked state transfers: {dev_eval:?}"
+        );
+        assert!(dev_eval.evals > 0 && dev_eval.metrics_down > 0);
+        timing_row(&mut rep, &s, per_image(&s, model.batch), "0".into());
 
         // host->literal conversion overhead (the Rust-side share)
         let s = bench_default(&format!("{model_name}: literals up (params)"), || {
@@ -137,15 +236,12 @@ fn main() {
                 std::hint::black_box(tensor_to_literal(t).unwrap());
             }
         });
-        rep.row(vec![
-            s.name.clone(),
-            fmt_ns(s.mean_ns),
-            fmt_ns(s.p50_ns),
-            fmt_ns(s.p95_ns),
-            "-".into(),
-            "-".into(),
-        ]);
+        timing_row(&mut rep, &s, "-".into(), "-".into());
     }
+
+    // -- federated mini-run: the per-round ledger end-to-end --
+    federated_rows(&rt, &manifest, &mut rep);
+
     rep.print();
     rep.save_csv(&efficientgrad::figures::reports_dir().join("runtime_hotpath.csv"))
         .unwrap();
@@ -160,5 +256,74 @@ fn main() {
         "resident step slower than literal on convnet_s: {} vs {}",
         fmt_ns(res),
         fmt_ns(lit)
+    );
+}
+
+/// Run 2 workers x 2 rounds of federated training and emit one row per
+/// round with the fleet device-bus bytes, asserting the `RoundReport`
+/// ledger matches the per-worker sum and the resident-path formulas.
+fn federated_rows(rt: &Runtime, manifest: &Manifest, rep: &mut Report) {
+    const WORKERS: usize = 2;
+    const ROUNDS: usize = 2;
+    const LOCAL_STEPS: usize = 3;
+    let cfg = FedConfig {
+        workers: WORKERS,
+        rounds: ROUNDS,
+        local_steps: LOCAL_STEPS,
+        iid: true,
+        straggler_prob: 0.0,
+        straggler_slowdown: 1.0,
+        train: TrainConfig {
+            model: "convnet_t".into(),
+            mode: "efficientgrad".into(),
+            train_examples: 256,
+            test_examples: 64,
+            difficulty: 0.4,
+            ..Default::default()
+        },
+    };
+    let model = manifest.model("convnet_t").unwrap();
+    let probe = ParamStore::init(model, 0);
+    let params_bytes = (probe.param_elements() * 4) as u64;
+    let tail = resident_step_state_bytes(probe.feedback.len());
+
+    let mut leader = Leader::new(rt, manifest, cfg).expect("leader");
+    let summary = leader.run().expect("federated run");
+    leader.shutdown();
+
+    for r in &summary.rounds {
+        let sum = r
+            .worker_transfer
+            .iter()
+            .fold(TransferStats::default(), |acc, &t| acc + t);
+        assert_eq!(r.device_transfer, sum, "round ledger != worker sum");
+        for t in &r.worker_transfer {
+            // resident round: params broadcast up, per-step tails +
+            // one mutable-state sync down — no O(model) per step
+            assert_eq!(t.steps as usize, LOCAL_STEPS);
+            assert_eq!(t.state_up, params_bytes);
+            assert_eq!(
+                t.state_down,
+                LOCAL_STEPS as u64 * tail + probe.mutable_state_bytes()
+            );
+        }
+        rep.row(vec![
+            format!(
+                "federated r{}: {} workers x {} steps (resident)",
+                r.round, WORKERS, LOCAL_STEPS
+            ),
+            format!("{:.2} s", r.wall_secs),
+            "-".into(),
+            "-".into(),
+            "-".into(),
+            format!("{}/round", r.device_bytes()),
+        ]);
+    }
+    let t = summary.total_device_transfer;
+    println!(
+        "federated: {} rounds moved {:.1} KB state + {:.1} KB metrics over the device bus",
+        summary.rounds.len(),
+        (t.state_up + t.state_down) as f64 / 1e3,
+        t.metrics_down as f64 / 1e3,
     );
 }

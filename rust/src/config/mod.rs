@@ -226,6 +226,14 @@ pub struct TrainConfig {
     pub checkpoint: Option<String>,
     /// step-backend selection: device-resident buffers vs literal path
     pub residency: ResidencyMode,
+    /// eval-backend selection (`train.eval_residency` /
+    /// `--eval-residency`). Defaults to mirroring `residency` when unset
+    /// in a config file. Resident eval with a resident step backend runs
+    /// the fwd artifact straight off the training param buffers (zero
+    /// state transfer); resident eval with a *literal* step backend
+    /// falls back to the fingerprint-cached param-buffer upload (one
+    /// `4·P` upload per param change instead of per eval batch).
+    pub eval_residency: ResidencyMode,
 }
 
 impl Default for TrainConfig {
@@ -245,6 +253,7 @@ impl Default for TrainConfig {
             log_every: 20,
             checkpoint: None,
             residency: ResidencyMode::default(),
+            eval_residency: ResidencyMode::default(),
         }
     }
 }
@@ -252,6 +261,13 @@ impl Default for TrainConfig {
 impl TrainConfig {
     pub fn from_table(t: &Table) -> Result<Self> {
         let d = Self::default();
+        let residency = t
+            .get("train.residency")
+            .and_then(Value::as_str)
+            .map(ResidencyMode::parse)
+            .transpose()
+            .context("train.residency")?
+            .unwrap_or(d.residency);
         Ok(Self {
             model: t.str_or("train.model", &d.model),
             mode: t.str_or("train.mode", &d.mode),
@@ -269,13 +285,16 @@ impl TrainConfig {
             // invalid values error (like lr_schedule / mode do): silently
             // falling back would hand resident-mode numbers to someone
             // who asked for the literal oracle
-            residency: t
-                .get("train.residency")
+            residency,
+            // unset eval residency follows the step residency, so a bare
+            // `--residency literal` run is literal end-to-end (oracle)
+            eval_residency: t
+                .get("train.eval_residency")
                 .and_then(Value::as_str)
                 .map(ResidencyMode::parse)
                 .transpose()
-                .context("train.residency")?
-                .unwrap_or(d.residency),
+                .context("train.eval_residency")?
+                .unwrap_or(residency),
         })
     }
 }
@@ -394,6 +413,29 @@ mod tests {
             TrainConfig::from_table(&t).unwrap().residency,
             ResidencyMode::Resident
         );
+    }
+
+    #[test]
+    fn eval_residency_mirrors_then_overrides() {
+        // unset eval residency follows the step residency…
+        let t = Table::parse("[train]\nresidency = \"literal\"").unwrap();
+        let c = TrainConfig::from_table(&t).unwrap();
+        assert_eq!(c.residency, ResidencyMode::Literal);
+        assert_eq!(c.eval_residency, ResidencyMode::Literal);
+        // …and an explicit value wins over the mirror
+        let t = Table::parse(
+            "[train]\nresidency = \"literal\"\neval_residency = \"resident\"",
+        )
+        .unwrap();
+        let c = TrainConfig::from_table(&t).unwrap();
+        assert_eq!(c.residency, ResidencyMode::Literal);
+        assert_eq!(c.eval_residency, ResidencyMode::Resident);
+        // invalid values error, like train.residency
+        let t = Table::parse("[train]\neval_residency = \"ram\"").unwrap();
+        assert!(TrainConfig::from_table(&t).is_err());
+        // fully unset: both default resident
+        let c = TrainConfig::from_table(&Table::default()).unwrap();
+        assert_eq!(c.eval_residency, ResidencyMode::Resident);
     }
 
     #[test]

@@ -11,6 +11,16 @@ pub fn fedavg(updates: &[&Vec<Tensor>]) -> Result<Vec<Tensor>> {
 }
 
 /// Examples-weighted FedAvg: global_i = Σ_k (n_k / n) · params_k,i.
+///
+/// ```
+/// use efficientgrad::coordinator::weighted_fedavg;
+/// use efficientgrad::tensor::Tensor;
+/// let a = vec![Tensor::new(vec![2], vec![0.0, 2.0])];
+/// let b = vec![Tensor::new(vec![2], vec![4.0, 6.0])];
+/// // worker b holds 3x the examples of worker a
+/// let global = weighted_fedavg(&[&a, &b], &[1.0, 3.0]).unwrap();
+/// assert_eq!(global[0].data(), &[3.0, 5.0]);
+/// ```
 pub fn weighted_fedavg(updates: &[&Vec<Tensor>], weights: &[f64]) -> Result<Vec<Tensor>> {
     if updates.is_empty() {
         bail!("no updates to aggregate");

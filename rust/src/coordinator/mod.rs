@@ -18,7 +18,13 @@
 //! params upload + one params/momenta download *per round*, not per
 //! step; the leader's network accounting (`RoundReport::upload_bytes`)
 //! is unchanged — residency moves bytes off the device bus, the
-//! federated uplink was already per-round.
+//! federated uplink was already per-round. Each round now also carries
+//! the device-bus ledger end-to-end: every worker reports its per-round
+//! [`TransferStats`], the leader sums them next to the FedAvg aggregate
+//! ([`RoundReport::device_transfer`]) and accounts its own eval sweep
+//! ([`RoundReport::leader_eval_transfer`]) — with resident eval the
+//! leader uploads the new global params once per round instead of once
+//! per test batch. Formulas: `docs/TRANSFER_MODEL.md`.
 
 pub mod fedavg;
 pub mod worker;
@@ -33,7 +39,7 @@ use crate::data::synthetic::{generate, SynthConfig};
 use crate::data::Dataset;
 use crate::manifest::Manifest;
 use crate::params::ParamStore;
-use crate::runtime::Runtime;
+use crate::runtime::{Runtime, TransferStats};
 use crate::util::rng::Rng;
 
 pub use fedavg::{fedavg, weighted_fedavg};
@@ -42,25 +48,53 @@ pub use worker::{WorkerHandle, WorkerReport, WorkerTask};
 /// Outcome of one federated round.
 #[derive(Clone, Debug)]
 pub struct RoundReport {
+    /// round index (0-based)
     pub round: usize,
+    /// mean of the workers' mean local-step losses
     pub mean_loss: f64,
+    /// mean realized gradient sparsity across workers
     pub mean_sparsity: f64,
     /// bytes shipped up (worker->leader) this round
     pub upload_bytes: u64,
+    /// bytes broadcast down (leader->worker) this round
     pub download_bytes: u64,
+    /// global-model accuracy on the leader's test set after aggregation
     pub eval_acc: f64,
+    /// leader-measured wall time for the whole round
     pub wall_secs: f64,
     /// per-worker simulated wall time (stragglers show here)
     pub worker_secs: Vec<f64>,
+    /// per-worker host↔device ledgers for the round, sorted by worker id
+    /// (broadcast upload + local steps + round-boundary sync)
+    pub worker_transfer: Vec<TransferStats>,
+    /// sum of `worker_transfer` — the round's fleet-wide device-bus
+    /// traffic, aggregated alongside the FedAvg params
+    pub device_transfer: TransferStats,
+    /// the leader's own eval-sweep ledger for this round
+    pub leader_eval_transfer: TransferStats,
+}
+
+impl RoundReport {
+    /// Every device-bus byte this round moved, fleet + leader eval.
+    pub fn device_bytes(&self) -> u64 {
+        self.device_transfer.total_bytes() + self.leader_eval_transfer.total_bytes()
+    }
 }
 
 /// Full run summary.
 #[derive(Clone, Debug)]
 pub struct FedSummary {
+    /// per-round reports in order
     pub rounds: Vec<RoundReport>,
+    /// last round's eval accuracy
     pub final_acc: f64,
+    /// total worker->leader network bytes across the run
     pub total_upload_bytes: u64,
+    /// total leader->worker network bytes across the run
     pub total_download_bytes: u64,
+    /// total device-bus ledger across the run (all workers' rounds plus
+    /// the leader's eval sweeps)
+    pub total_device_transfer: TransferStats,
 }
 
 /// The federated leader.
@@ -95,7 +129,10 @@ impl Leader {
             format!("mode {:?} not exported for {}", cfg.train.mode, model.name)
         })?;
         let eval_exe = rt.load(model.artifact("fwd")?)?;
-        let eval = crate::runtime::exec::EvalState::new(eval_exe, &model)?;
+        // resident eval uploads the post-FedAvg params once per round
+        // (fingerprint cache) instead of once per test batch
+        let eval =
+            crate::runtime::exec::EvalState::new(rt, eval_exe, &model, cfg.train.eval_residency)?;
 
         let workers = shards
             .into_iter()
@@ -166,7 +203,15 @@ impl Leader {
                 / reports.len() as f64;
             let mean_sparsity = reports.iter().map(|r| r.mean_sparsity).sum::<f64>()
                 / reports.len() as f64;
+            // per-worker device-bus ledgers, aggregated like the params
+            let worker_transfer: Vec<TransferStats> =
+                reports.iter().map(|r| r.transfer).collect();
+            let device_transfer = worker_transfer
+                .iter()
+                .fold(TransferStats::default(), |acc, &t| acc + t);
+            self.eval.reset_transfer_stats();
             let eval_acc = self.evaluate()?;
+            let leader_eval_transfer = self.eval.transfer_stats();
             let report = RoundReport {
                 round,
                 mean_loss,
@@ -176,9 +221,14 @@ impl Leader {
                 eval_acc,
                 wall_secs: t0.elapsed().as_secs_f64(),
                 worker_secs: reports.iter().map(|r| r.sim_secs).collect(),
+                worker_transfer,
+                device_transfer,
+                leader_eval_transfer,
             };
             log::info!(
-                "round {round:3} loss {mean_loss:.4} acc {eval_acc:.4} sparsity {mean_sparsity:.3} ({:.2}s)",
+                "round {round:3} loss {mean_loss:.4} acc {eval_acc:.4} sparsity {mean_sparsity:.3} \
+                 device {:.1} KB ({:.2}s)",
+                report.device_bytes() as f64 / 1e3,
                 report.wall_secs
             );
             rounds.push(report);
@@ -186,11 +236,15 @@ impl Leader {
         let final_acc = rounds.last().map(|r| r.eval_acc).unwrap_or(0.0);
         let total_upload_bytes = rounds.iter().map(|r| r.upload_bytes).sum();
         let total_download_bytes = rounds.iter().map(|r| r.download_bytes).sum();
+        let total_device_transfer = rounds.iter().fold(TransferStats::default(), |acc, r| {
+            acc + r.device_transfer + r.leader_eval_transfer
+        });
         Ok(FedSummary {
             rounds,
             final_acc,
             total_upload_bytes,
             total_download_bytes,
+            total_device_transfer,
         })
     }
 

@@ -25,7 +25,7 @@ use crate::data::batcher::Prefetcher;
 use crate::data::Dataset;
 use crate::manifest::{ArtifactSpec, ModelSpec};
 use crate::params::ParamStore;
-use crate::runtime::{Runtime, StepDriver};
+use crate::runtime::{Runtime, StepDriver, TransferStats};
 use crate::tensor::Tensor;
 
 /// One round's work order.
@@ -49,6 +49,9 @@ pub struct WorkerReport {
     pub mean_sparsity: f64,
     /// measured wall time x slowdown (what a real deployment would see)
     pub sim_secs: f64,
+    /// this worker's host↔device ledger for the round (reset at task
+    /// receipt, so it covers broadcast upload + local steps + host sync)
+    pub transfer: TransferStats,
 }
 
 enum Msg {
@@ -109,6 +112,10 @@ impl WorkerHandle {
                 let mut batcher = Prefetcher::new(shard, batch, cfg.seed ^ id as u64, 2);
                 while let Ok(Msg::Task(task)) = rx.recv() {
                     let t0 = Instant::now();
+                    // per-round ledger: everything from the broadcast
+                    // upload to the round-boundary sync lands in the
+                    // report's TransferStats
+                    driver.reset_transfer_stats();
                     if let Err(e) = driver.load_params(&mut store, task.params) {
                         log::error!("worker {id}: broadcast rejected: {e:#}");
                         continue;
@@ -156,6 +163,7 @@ impl WorkerHandle {
                         mean_loss: losses / n,
                         mean_sparsity: spars / n,
                         sim_secs: t0.elapsed().as_secs_f64() * task.slowdown,
+                        transfer: driver.transfer_stats(),
                     });
                 }
             })

@@ -14,6 +14,20 @@
 //!
 //! Python never runs on the request path: once `make artifacts` has been
 //! run, the `efficientgrad` binary is self-contained.
+//!
+//! The system treats the paper's data-movement argument as a measurable
+//! contract: every host↔device byte is ledgered
+//! ([`runtime::TransferStats`]), threaded through the federated layer
+//! ([`coordinator::RoundReport`]) and asserted in tests and benches.
+//! The normative byte model lives in `docs/TRANSFER_MODEL.md`; the
+//! repo-level quickstart in the root `README.md`.
+//!
+//! ```text
+//! python python/compile/aot.py --outdir artifacts   # export HLO
+//! cargo run --release -- train --model convnet_s    # single device
+//! cargo run --release -- federated --workers 4      # leader + workers
+//! cargo bench --bench runtime_hotpath               # transfer ledger
+//! ```
 
 pub mod accel;
 pub mod benchlib;

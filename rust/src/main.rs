@@ -37,6 +37,7 @@ fn common_flags() -> Vec<FlagSpec> {
         FlagSpec { name: "checkpoint", help: "save checkpoint here", takes_value: true, default: None },
         FlagSpec { name: "metrics-csv", help: "write per-step metrics CSV", takes_value: true, default: None },
         FlagSpec { name: "residency", help: "train-state residency (resident|literal)", takes_value: true, default: None },
+        FlagSpec { name: "eval-residency", help: "eval residency (resident|literal); defaults to --residency", takes_value: true, default: None },
     ]
 }
 
@@ -66,6 +67,9 @@ fn load_table(args: &Args) -> Result<Table> {
     }
     if let Some(v) = args.get_choice("residency", &["resident", "device", "literal", "host"])? {
         table.set("train.residency", Value::Str(v.into()));
+    }
+    if let Some(v) = args.get_choice("eval-residency", &["resident", "device", "literal", "host"])? {
+        table.set("train.eval_residency", Value::Str(v.into()));
     }
     Ok(table)
 }
@@ -122,11 +126,12 @@ fn cmd_train(raw: &[String]) -> Result<()> {
     let rt = Runtime::cpu()?;
     let manifest = Manifest::load(&efficientgrad::artifacts_dir())?;
     log::info!(
-        "training {} mode={} steps={} residency={} on {}",
+        "training {} mode={} steps={} residency={} eval-residency={} on {}",
         cfg.model,
         cfg.mode,
         cfg.steps,
         cfg.residency.as_str(),
+        cfg.eval_residency.as_str(),
         rt.platform()
     );
     let ds = generate(&SynthConfig {
@@ -143,6 +148,16 @@ fn cmd_train(raw: &[String]) -> Result<()> {
         trainer.log.trailing_loss(10).unwrap_or(f64::NAN),
         trainer.log.mean_sparsity(),
         trainer.log.records.len()
+    );
+    let ts = trainer.transfer_stats();
+    println!(
+        "device transfers: state {:.1} KB up / {:.1} KB down, metrics {:.1} KB down \
+         ({} steps, {} evals; see docs/TRANSFER_MODEL.md)",
+        ts.state_up as f64 / 1e3,
+        ts.state_down as f64 / 1e3,
+        ts.metrics_down as f64 / 1e3,
+        ts.steps,
+        ts.evals,
     );
     if let Some(path) = args.get("metrics-csv") {
         trainer.log.save_csv(std::path::Path::new(path))?;

@@ -13,17 +13,25 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, Context, Result};
 
 use super::resident::TransferStats;
-use super::{int_tensor_to_literal, into_anyhow, literal_to_tensor, tensor_to_literal};
+use super::{
+    int_tensor_to_literal, into_anyhow, literal_to_tensor, tensor_bytes, tensor_to_literal,
+    upload, Runtime,
+};
+use crate::config::ResidencyMode;
 use crate::data::Batch;
 use crate::manifest::{ArtifactSpec, ModelSpec};
 use crate::params::ParamStore;
-use crate::tensor::Tensor;
+use crate::tensor::{IntTensor, Tensor};
 
 /// A compiled HLO artifact.
 pub struct Executable {
+    /// manifest tag (`train_efficientgrad`, `fwd`, `probe`, …)
     pub tag: String,
+    /// HLO-text file this was compiled from
     pub file: PathBuf,
+    /// input names in artifact order (the layout contract with aot.py)
     pub inputs: Vec<String>,
+    /// flattened output-tuple element names
     pub outputs: Vec<String>,
     exe: xla::PjRtLoadedExecutable,
 }
@@ -104,7 +112,9 @@ impl Executable {
 /// literals only long enough to refresh the ParamStore).
 #[derive(Clone, Debug)]
 pub struct TrainOutputs {
+    /// batch cross-entropy loss
     pub loss: f32,
+    /// batch top-1 accuracy
     pub acc: f32,
     /// realized zero-fraction per feedback transport (EfficientGrad),
     /// empty/zeros for other modes
@@ -124,18 +134,50 @@ struct FeedbackCache {
     lits: Vec<xla::Literal>,
 }
 
-fn feedback_key(feedback: &[Tensor]) -> u64 {
+/// Cheap identity fingerprint for an **immutable** tensor list (the
+/// feedback literals, fixed after `ParamStore::init`): FNV over each
+/// tensor's data pointer, length and boundary values. Only store
+/// *identity* can change here, never content, so pointer + boundary
+/// catches a dropped store's allocation being reused by a new store.
+/// Do NOT use this for tensors that mutate — see [`tensors_content_key`].
+fn tensors_key(tensors: &[Tensor]) -> u64 {
     let mut h: u64 = 0xcbf2_9ce4_8422_2325; // FNV offset basis
     let mut mix = |v: u64| {
         h ^= v;
         h = h.wrapping_mul(0x0000_0100_0000_01b3);
     };
-    for t in feedback {
+    for t in tensors {
         mix(t.data().as_ptr() as u64);
         mix(t.len() as u64);
         if let (Some(a), Some(b)) = (t.data().first(), t.data().last()) {
             mix(a.to_bits() as u64);
             mix(b.to_bits() as u64);
+        }
+    }
+    h
+}
+
+/// Content fingerprint for a **mutable** tensor list (the eval param
+/// cache): FNV over every element's bits. The cheap pointer key is not
+/// sound for params — a training step frees the old tensor and a later
+/// allocation can land on the same address with matching boundary
+/// values (EfficientGrad leaves ~90% of deltas untouched), which would
+/// silently serve logits from stale parameters. Cost: one multiply-xor
+/// per element, paid on every eval batch including cache hits — linear
+/// in exactly the `4·P` bytes the literal path would *upload* per
+/// batch, and orders of magnitude below the forward pass it precedes,
+/// so the sound key stays cheaper than the fallback it replaces even at
+/// resnet18 scale (~11M params).
+fn tensors_content_key(tensors: &[Tensor]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325; // FNV offset basis
+    let mut mix = |v: u64| {
+        h ^= v;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    };
+    for t in tensors {
+        mix(t.len() as u64);
+        for &v in t.data() {
+            mix(v.to_bits() as u64);
         }
     }
     h
@@ -147,8 +189,11 @@ fn feedback_key(feedback: &[Tensor]) -> u64 {
 /// Input layout contract (aot.py): params…, momenta…, feedback…, images,
 /// labels, lr, mu, seed. Output: params'…, momenta'…, loss, acc, sparsity.
 pub struct TrainState {
+    /// the compiled train-step artifact
     pub exe: std::rc::Rc<Executable>,
+    /// number of parameter tensors (= momenta tensors)
     pub n_params: usize,
+    /// number of fixed feedback tensors
     pub n_feedback: usize,
     fb_cache: RefCell<FeedbackCache>,
     stats: Cell<TransferStats>,
@@ -199,7 +244,7 @@ impl TrainState {
         // immutable feedback: move the cached literals into the arg list,
         // restore them afterwards (no Clone on xla::Literal needed)
         let mut cache = self.fb_cache.borrow_mut();
-        let key = feedback_key(&store.feedback);
+        let key = tensors_key(&store.feedback);
         if cache.key != key || cache.lits.len() != store.feedback.len() {
             cache.lits = store
                 .feedback
@@ -259,14 +304,67 @@ impl TrainState {
     }
 }
 
+/// Host-side top-1 accuracy from a logits tensor (rows = batch).
+pub fn top1_accuracy(logits: &Tensor, labels: &IntTensor) -> f64 {
+    let preds = logits.argmax_rows();
+    let labels = labels.data();
+    if labels.is_empty() {
+        return 0.0;
+    }
+    let correct = preds
+        .iter()
+        .zip(labels)
+        .filter(|(&p, &l)| p as i32 == l)
+        .count();
+    correct as f64 / labels.len() as f64
+}
+
+/// Uploaded param buffers for the resident eval path, keyed by a
+/// full-content fingerprint ([`tensors_content_key`]) so they are
+/// re-uploaded exactly when the host params actually change — once per
+/// FedAvg round / sync, not once per eval batch.
+#[derive(Default)]
+struct EvalParamCache {
+    key: u64,
+    bufs: Vec<xla::PjRtBuffer>,
+}
+
 /// Forward/eval driver: (params…, images) -> logits.
+///
+/// Two backends behind one interface, selected by
+/// [`crate::config::TrainConfig::eval_residency`]:
+///
+/// * **resident**: params are uploaded to device buffers once per
+///   parameter *change* (fingerprint-keyed cache) and every logits call
+///   executes buffer-in/buffer-out — an eval sweep over many batches
+///   pays one `4·P` state upload total, plus per-batch images up and
+///   logits down.
+/// * **literal**: every call re-uploads the whole parameter set as
+///   literals (`4·P` state bytes per batch) — fallback + parity oracle.
+///
+/// Training with the resident step backend can skip even the one upload:
+/// [`super::resident::DeviceState::eval_logits`] feeds the fwd artifact
+/// from the already-resident training param buffers.
 pub struct EvalState {
+    /// the compiled fwd artifact `(params…, images) -> logits`
     pub exe: std::rc::Rc<Executable>,
+    /// number of parameter tensors the artifact consumes
     pub n_params: usize,
+    mode: ResidencyMode,
+    client: xla::PjRtClient,
+    cache: RefCell<EvalParamCache>,
+    stats: Cell<TransferStats>,
 }
 
 impl EvalState {
-    pub fn new(exe: std::rc::Rc<Executable>, model: &ModelSpec) -> Result<Self> {
+    /// Bind the fwd artifact. `mode` picks the literal or the
+    /// cached-buffer backend for [`EvalState::logits`].
+    pub fn new(
+        rt: &Runtime,
+        exe: std::rc::Rc<Executable>,
+        model: &ModelSpec,
+        mode: ResidencyMode,
+    ) -> Result<Self> {
         let want = model.params.len() + 1;
         if exe.inputs.len() != want {
             bail!("fwd artifact arity {} != {want}", exe.inputs.len());
@@ -274,49 +372,104 @@ impl EvalState {
         Ok(Self {
             exe,
             n_params: model.params.len(),
+            mode,
+            client: rt.client().clone(),
+            cache: RefCell::new(EvalParamCache::default()),
+            stats: Cell::new(TransferStats::default()),
         })
     }
 
+    /// Which backend [`EvalState::logits`] dispatches to.
+    pub fn residency(&self) -> ResidencyMode {
+        self.mode
+    }
+
+    /// Ledger of this eval driver's host↔device traffic.
+    pub fn transfer_stats(&self) -> TransferStats {
+        self.stats.get()
+    }
+
+    /// Zero the ledger (per-round accounting in the federated leader).
+    pub fn reset_transfer_stats(&self) {
+        self.stats.set(TransferStats::default());
+    }
+
+    /// Forward pass -> logits, via the backend selected at construction.
     pub fn logits(&self, store: &ParamStore, images: &Tensor) -> Result<Tensor> {
+        match self.mode {
+            ResidencyMode::Literal => self.logits_literal(store, images),
+            ResidencyMode::Resident => self.logits_resident(store, images),
+        }
+    }
+
+    fn logits_literal(&self, store: &ParamStore, images: &Tensor) -> Result<Tensor> {
         let mut args = Vec::with_capacity(self.n_params + 1);
         for t in &store.params {
             args.push(tensor_to_literal(t)?);
         }
         args.push(tensor_to_literal(images)?);
         let outs = self.exe.run(&args)?;
-        literal_to_tensor(&outs[0])
+        let logits = literal_to_tensor(&outs[0])?;
+        let mut stats = self.stats.get();
+        stats.state_up += (store.param_elements() * 4) as u64;
+        stats.batch_up += tensor_bytes(images);
+        stats.metrics_down += tensor_bytes(&logits);
+        stats.evals += 1;
+        self.stats.set(stats);
+        Ok(logits)
+    }
+
+    fn logits_resident(&self, store: &ParamStore, images: &Tensor) -> Result<Tensor> {
+        let mut stats = self.stats.get();
+        let mut cache = self.cache.borrow_mut();
+        let key = tensors_content_key(&store.params);
+        if cache.key != key || cache.bufs.len() != store.params.len() {
+            cache.bufs = store
+                .params
+                .iter()
+                .map(|t| {
+                    stats.state_up += tensor_bytes(t);
+                    upload(&self.client, &tensor_to_literal(t)?)
+                })
+                .collect::<Result<_>>()?;
+            cache.key = key;
+        }
+        let logits =
+            super::fwd_logits_from_buffers(&self.client, &self.exe, &cache.bufs, images, &mut stats)?;
+        self.stats.set(stats);
+        Ok(logits)
     }
 
     /// Top-1 accuracy on a batch.
     pub fn accuracy(&self, store: &ParamStore, batch: &Batch) -> Result<f64> {
         let logits = self.logits(store, &batch.images)?;
-        let preds = logits.argmax_rows();
-        let labels = batch.labels.data();
-        let correct = preds
-            .iter()
-            .zip(labels)
-            .filter(|(&p, &l)| p as i32 == l)
-            .count();
-        Ok(correct as f64 / labels.len() as f64)
+        Ok(top1_accuracy(&logits, &batch.labels))
     }
 }
 
 /// Fig. 3 probe driver: (params…, feedback…, images, labels, seed) ->
 /// (angles, stds, sparsity, hist, loss).
 pub struct ProbeState {
+    /// the compiled probe artifact
     pub exe: std::rc::Rc<Executable>,
+    /// number of parameter tensors
     pub n_params: usize,
+    /// number of fixed feedback tensors
     pub n_feedback: usize,
 }
 
+/// One probe execution's downloads (all Fig. 3 inputs).
 #[derive(Clone, Debug)]
 pub struct ProbeOutputs {
     /// cos angle between BP and EfficientGrad gradient per param tensor
     pub cos_angles: Vec<f32>,
+    /// per-tensor gradient standard deviations
     pub grad_stds: Vec<f32>,
+    /// realized zero-fraction across the pruned transports
     pub sparsity: f32,
     /// 64-bin normalized histogram of delta/sigma over [-4, 4] (Fig. 3a)
     pub hist: Vec<f32>,
+    /// batch loss at the probed point
     pub loss: f32,
 }
 

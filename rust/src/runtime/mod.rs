@@ -21,8 +21,26 @@
 //!   param/feedback elements. Feedback literals are cached per store so
 //!   the fallback at least skips rebuilding the immutable tensors.
 //!
-//! `cargo bench --bench runtime_hotpath` measures both rows and emits the
-//! per-step state-transfer bytes next to the latencies
+//! The same residency split now covers **evaluation**
+//! ([`crate::config::TrainConfig::eval_residency`]):
+//!
+//! * **device-resident eval** ([`resident::DeviceState::eval_logits`]):
+//!   the fwd artifact consumes the resident param `PjRtBuffer`s directly,
+//!   so a round-boundary evaluation moves *zero* state bytes — only the
+//!   batch upload and the logits tail (`4·B·C` bytes) cross the bus.
+//! * **cached-buffer eval** ([`exec::EvalState`] in resident mode): host
+//!   params are uploaded to device buffers once per parameter *change*
+//!   (not once per eval batch) — the federated leader's eval sweep pays
+//!   one `4·P` upload per round instead of one per test batch.
+//! * **literal eval** (the fallback/oracle): every logits call re-uploads
+//!   the whole parameter set as literals.
+//!
+//! The exact byte formulas for every row live in `docs/TRANSFER_MODEL.md`
+//! (kept in lockstep with the [`TransferStats`] ledger and doc-tested via
+//! [`literal_step_state_bytes`] / [`resident_step_state_bytes`]).
+//!
+//! `cargo bench --bench runtime_hotpath` measures all rows and emits the
+//! per-step/per-eval state-transfer bytes next to the latencies
 //! (`BENCH_runtime.json`); `tests/residency.rs` pins bit-for-bit parity.
 
 pub mod exec;
@@ -32,13 +50,15 @@ use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::rc::Rc;
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::manifest::{ArtifactSpec, ModelSpec};
 use crate::tensor::{IntTensor, Tensor};
 
-pub use exec::{Executable, TrainOutputs, TrainState};
-pub use resident::{DeviceState, StepDriver, TransferStats};
+pub use exec::{top1_accuracy, EvalState, Executable, TrainOutputs, TrainState};
+pub use resident::{
+    literal_step_state_bytes, resident_step_state_bytes, DeviceState, StepDriver, TransferStats,
+};
 
 /// PJRT CPU client + compile cache.
 ///
@@ -120,6 +140,45 @@ pub fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
 
 pub(crate) fn into_anyhow(e: xla::Error) -> anyhow::Error {
     anyhow!("{e}")
+}
+
+/// f32 byte size of a host tensor (transfer-ledger accounting).
+pub(crate) fn tensor_bytes(t: &Tensor) -> u64 {
+    (t.len() * 4) as u64
+}
+
+/// Upload one literal into a fresh device buffer (shared by the resident
+/// step path and the buffered eval path).
+pub(crate) fn upload(client: &xla::PjRtClient, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
+    client
+        .buffer_from_host_literal(None, lit)
+        .map_err(into_anyhow)
+}
+
+/// Run the fwd artifact `(params…, images) -> logits` from device param
+/// buffers: upload the image batch, execute buffer-in/buffer-out,
+/// download only the logits tail — and account it in `stats`. The one
+/// eval body shared by [`resident::DeviceState::eval_logits`] (training
+/// buffers) and [`exec::EvalState`]'s cached-buffer backend.
+pub(crate) fn fwd_logits_from_buffers(
+    client: &xla::PjRtClient,
+    fwd: &Executable,
+    params: &[xla::PjRtBuffer],
+    images: &Tensor,
+    stats: &mut TransferStats,
+) -> Result<Tensor> {
+    let img = upload(client, &tensor_to_literal(images)?)?;
+    stats.batch_up += tensor_bytes(images);
+    let mut args: Vec<&xla::PjRtBuffer> = params.iter().collect();
+    args.push(&img);
+    let mut outs = fwd.run_buffers(&args)?;
+    if outs.len() != 1 {
+        bail!("fwd returned {} output buffers, expected 1", outs.len());
+    }
+    let logits = literal_to_tensor(&outs.pop().unwrap().to_literal_sync().map_err(into_anyhow)?)?;
+    stats.metrics_down += tensor_bytes(&logits);
+    stats.evals += 1;
+    Ok(logits)
 }
 
 /// Quick self-check used by `efficientgrad doctor` and integration tests:

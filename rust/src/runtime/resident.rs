@@ -12,19 +12,30 @@
 //! [`DeviceState::sync_to_host`] only at round boundaries, eval and
 //! checkpoint time — per-step O(model) transfers become per-round.
 //!
+//! Evaluation rides the same buffers: [`DeviceState::eval_logits`] feeds
+//! the fwd artifact from the resident param `PjRtBuffer`s, so a
+//! round-boundary eval downloads only the logits tail instead of forcing
+//! an O(model) [`DeviceState::sync_to_host`] first. `sync_to_host` itself
+//! is now dirty-flag gated: when the device state has not advanced since
+//! the last sync (e.g. an eval already synced and a checkpoint follows),
+//! the download is skipped entirely.
+//!
 //! [`StepDriver`] wraps both paths behind one interface so the trainer
 //! and the federated worker select a [`ResidencyMode`] without branching
 //! at every call site; the literal path stays available as a fallback and
-//! as the parity oracle (`tests/residency.rs`).
+//! as the parity oracle (`tests/residency.rs`). The byte formulas the
+//! [`TransferStats`] ledger realizes are documented (and doc-tested) in
+//! [`literal_step_state_bytes`] / [`resident_step_state_bytes`], and
+//! prose-documented in `docs/TRANSFER_MODEL.md`.
 
 use std::rc::Rc;
 
 use anyhow::{bail, Result};
 
-use super::exec::{Executable, TrainOutputs, TrainState};
+use super::exec::{top1_accuracy, EvalState, Executable, TrainOutputs, TrainState};
 use super::{
-    int_tensor_to_literal, into_anyhow, literal_to_tensor, scalar_f32, scalar_i32,
-    tensor_to_literal, Runtime,
+    int_tensor_to_literal, into_anyhow, literal_to_tensor, scalar_f32, scalar_i32, tensor_bytes,
+    tensor_to_literal, upload, Runtime,
 };
 use crate::config::ResidencyMode;
 use crate::data::Batch;
@@ -35,8 +46,12 @@ use crate::tensor::Tensor;
 /// Host↔device traffic ledger, split by what moved. `state_*` counts
 /// training state (params / momenta / feedback / scalar outputs);
 /// `batch_up` counts the per-step inputs that exist on the host anyway
-/// (images, labels, lr, momentum, seed). The residency win is visible in
-/// `state_up + state_down` per step.
+/// (images, labels, lr, momentum, seed); `metrics_down` counts eval
+/// outputs (logits tails). The residency win is visible in
+/// `state_up + state_down` per step/eval.
+///
+/// Ledgers add: per-worker round ledgers are summed into the federated
+/// [`crate::coordinator::RoundReport`] with `+`.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct TransferStats {
     /// training-state bytes uploaded host→device
@@ -45,8 +60,12 @@ pub struct TransferStats {
     pub state_down: u64,
     /// batch + hyperparameter bytes uploaded host→device
     pub batch_up: u64,
+    /// evaluation-output bytes (logits tails) downloaded device→host
+    pub metrics_down: u64,
     /// train steps executed while this ledger was live
     pub steps: u64,
+    /// eval-forward executions recorded while this ledger was live
+    pub evals: u64,
 }
 
 impl TransferStats {
@@ -58,16 +77,106 @@ impl TransferStats {
             (self.state_up + self.state_down) / self.steps
         }
     }
+
+    /// Mean state bytes moved per eval execution. Meaningful on ledgers
+    /// that recorded only evals (an [`EvalState`], or a [`DeviceState`]
+    /// right after `reset_transfer_stats`); on a mixed ledger the state
+    /// bytes cannot be attributed to steps vs evals.
+    pub fn state_bytes_per_eval(&self) -> u64 {
+        if self.evals == 0 {
+            0
+        } else {
+            (self.state_up + self.state_down) / self.evals
+        }
+    }
+
+    /// Every byte this ledger saw cross the host↔device bus.
+    pub fn total_bytes(&self) -> u64 {
+        self.state_up + self.state_down + self.batch_up + self.metrics_down
+    }
 }
 
-fn tensor_bytes(t: &Tensor) -> u64 {
-    (t.len() * 4) as u64
+impl std::ops::AddAssign for TransferStats {
+    fn add_assign(&mut self, o: TransferStats) {
+        self.state_up += o.state_up;
+        self.state_down += o.state_down;
+        self.batch_up += o.batch_up;
+        self.metrics_down += o.metrics_down;
+        self.steps += o.steps;
+        self.evals += o.evals;
+    }
 }
 
-fn upload(client: &xla::PjRtClient, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
-    client
-        .buffer_from_host_literal(None, lit)
-        .map_err(into_anyhow)
+impl std::ops::Add for TransferStats {
+    type Output = TransferStats;
+
+    fn add(mut self, o: TransferStats) -> TransferStats {
+        self += o;
+        self
+    }
+}
+
+/// Predicted *state* bytes one **literal-path** train step moves across
+/// the host↔device bus, both directions: upload `4·(2P + F)` (params,
+/// momenta and feedback re-sent as literals) plus download `4·2P` (updated
+/// params and momenta) plus the scalar tail `4·(2 + n_feedback)` (loss,
+/// acc, per-transport sparsity). `param_elems` = P, `feedback_elems` = F,
+/// `n_feedback` = number of feedback tensors.
+///
+/// This is exactly what [`TrainState`]'s ledger measures per step:
+///
+/// ```
+/// use efficientgrad::runtime::literal_step_state_bytes;
+/// // toy model: P = 1_000 param elements, F = 400 feedback elements
+/// // spread over 2 feedback tensors
+/// let up = 4 * (2 * 1_000 + 400);
+/// let down = 4 * 2 * 1_000 + 4 * (2 + 2);
+/// assert_eq!(literal_step_state_bytes(1_000, 400, 2), (up + down) as u64);
+/// ```
+pub fn literal_step_state_bytes(
+    param_elems: usize,
+    feedback_elems: usize,
+    n_feedback: usize,
+) -> u64 {
+    let up = 4 * (2 * param_elems + feedback_elems);
+    let down = 4 * 2 * param_elems + 4 * (2 + n_feedback);
+    (up + down) as u64
+}
+
+/// Predicted *state* bytes one **resident-path** train step moves: the
+/// scalar tail only, `4·(2 + n_feedback)` — independent of model size,
+/// which is the whole point.
+///
+/// ```
+/// use efficientgrad::runtime::{literal_step_state_bytes, resident_step_state_bytes};
+/// assert_eq!(resident_step_state_bytes(5), 28); // loss + acc + 5 sparsities
+/// // residency turns O(model) per-step traffic into O(1):
+/// assert!(resident_step_state_bytes(5) < literal_step_state_bytes(42_000, 40_000, 5) / 10_000);
+/// ```
+pub fn resident_step_state_bytes(n_feedback: usize) -> u64 {
+    4 * (2 + n_feedback) as u64
+}
+
+/// Download the train step's scalar tail (loss / acc / sparsity buffers).
+fn read_tail(
+    loss_b: xla::PjRtBuffer,
+    acc_b: xla::PjRtBuffer,
+    sparsity_b: xla::PjRtBuffer,
+) -> Result<TrainOutputs> {
+    let scalar =
+        |b: xla::PjRtBuffer| -> Result<xla::Literal> { b.to_literal_sync().map_err(into_anyhow) };
+    let loss = scalar(loss_b)?
+        .get_first_element::<f32>()
+        .map_err(into_anyhow)?;
+    let acc = scalar(acc_b)?
+        .get_first_element::<f32>()
+        .map_err(into_anyhow)?;
+    let sparsity = scalar(sparsity_b)?.to_vec::<f32>().map_err(into_anyhow)?;
+    Ok(TrainOutputs {
+        loss,
+        acc,
+        sparsity,
+    })
 }
 
 /// Device-resident replica of one model's training state.
@@ -75,6 +184,8 @@ fn upload(client: &xla::PjRtClient, lit: &xla::Literal) -> Result<xla::PjRtBuffe
 /// Owns the `PjRtBuffer`s for params, momenta and the (never-mutated)
 /// feedback tensors. `step` executes the train artifact buffer-to-buffer;
 /// the only per-step downloads are the loss/acc/sparsity tuple tail.
+/// [`DeviceState::eval_logits`] runs the fwd artifact against the same
+/// resident param buffers, so evaluation never forces a host sync.
 pub struct DeviceState {
     exe: Rc<Executable>,
     client: xla::PjRtClient,
@@ -89,6 +200,9 @@ pub struct DeviceState {
     step: u64,
     /// device state has advanced past the last host sync
     host_stale: bool,
+    /// donate the previous step's state buffers (see
+    /// [`DeviceState::set_donate_inputs`])
+    donate_inputs: bool,
     stats: TransferStats,
 }
 
@@ -140,6 +254,7 @@ impl DeviceState {
             n_feedback: store.feedback.len(),
             step: store.step,
             host_stale: false,
+            donate_inputs: true,
             stats,
             client,
             params,
@@ -157,12 +272,61 @@ impl DeviceState {
         self.host_stale
     }
 
+    /// Ledger of host↔device traffic since construction or the last
+    /// [`DeviceState::reset_transfer_stats`].
     pub fn transfer_stats(&self) -> TransferStats {
         self.stats
     }
 
+    /// Zero the ledger (round-boundary accounting in the federated
+    /// worker; warmup exclusion in the benches).
     pub fn reset_transfer_stats(&mut self) {
         self.stats = TransferStats::default();
+    }
+
+    /// Eager input release — an application-level approximation of
+    /// buffer donation, default **on**. The `xla` crate exposes no PJRT
+    /// input-output aliasing, so true in-place donation (XLA writing the
+    /// step's outputs into the input allocations) is out of reach; what
+    /// this setting controls is how long the previous step's
+    /// param/momenta buffers outlive the execute call. With donation on
+    /// they are dropped as soon as the output buffers exist; with it off
+    /// they are held through the scalar-tail downloads. Either way the
+    /// old state is freed before `step` returns, so the steady-state
+    /// memory profile is the same — the donate setting shrinks the
+    /// two-copies window by the tail-download latency, nothing more
+    /// (the `runtime_hotpath` rows exist to keep that honest).
+    ///
+    /// The observable difference is the error contract: with donation
+    /// on, a failure while downloading the scalar tail leaves the state
+    /// already advanced to the new step (the step's outputs are lost but
+    /// the state is consistent); with donation off, any step error
+    /// leaves the state exactly where it was — the literal-path
+    /// contract. Both settings are bit-for-bit identical numerically
+    /// (`tests/residency.rs`).
+    pub fn set_donate_inputs(&mut self, donate: bool) {
+        self.donate_inputs = donate;
+    }
+
+    /// Current donation setting (see [`DeviceState::set_donate_inputs`]).
+    pub fn donate_inputs(&self) -> bool {
+        self.donate_inputs
+    }
+
+    /// Install the step's output buffers as the new resident state; the
+    /// previous state buffers drop here, returning their allocations to
+    /// the PJRT pool.
+    fn commit_state(&mut self, outs: Vec<xla::PjRtBuffer>) {
+        let mut outs = outs.into_iter();
+        for p in self.params.iter_mut() {
+            *p = outs.next().unwrap();
+        }
+        for m in self.momenta.iter_mut() {
+            *m = outs.next().unwrap();
+        }
+        self.stats.steps += 1;
+        self.step += 1;
+        self.host_stale = true;
     }
 
     /// One SGD step, entirely on the device. Output buffers replace the
@@ -192,39 +356,46 @@ impl DeviceState {
                 2 * np + 3
             );
         }
-        // do all fallible work (the scalar tail downloads) BEFORE
-        // committing the new state buffers, so an error leaves this state
-        // exactly where it was — same contract as the literal path, which
-        // leaves the store untouched when a step fails
-        let scalar = |b: xla::PjRtBuffer| -> Result<xla::Literal> {
-            b.to_literal_sync().map_err(into_anyhow)
+        let sparsity_b = outs.pop().unwrap();
+        let acc_b = outs.pop().unwrap();
+        let loss_b = outs.pop().unwrap();
+        // Donation on: old state buffers drop before the fallible tail
+        // downloads (state advances even if a download fails). Donation
+        // off: downloads first, so an error leaves this state exactly
+        // where it was. See `set_donate_inputs` for the full contract.
+        let out = if self.donate_inputs {
+            self.commit_state(outs);
+            read_tail(loss_b, acc_b, sparsity_b)?
+        } else {
+            let out = read_tail(loss_b, acc_b, sparsity_b)?;
+            self.commit_state(outs);
+            out
         };
-        let sparsity = scalar(outs.pop().unwrap())?
-            .to_vec::<f32>()
-            .map_err(into_anyhow)?;
-        let acc = scalar(outs.pop().unwrap())?
-            .get_first_element::<f32>()
-            .map_err(into_anyhow)?;
-        let loss = scalar(outs.pop().unwrap())?
-            .get_first_element::<f32>()
-            .map_err(into_anyhow)?;
-        // thread the new state into the next step's inputs — no host copy
-        let mut outs = outs.into_iter();
-        for p in self.params.iter_mut() {
-            *p = outs.next().unwrap();
+        self.stats.state_down += (2 + out.sparsity.len()) as u64 * 4;
+        Ok(out)
+    }
+
+    /// Device-resident evaluation: run the fwd artifact `(params…,
+    /// images) -> logits` directly against the resident param buffers.
+    /// Per call, the bus sees the batch upload plus the `4·B·C` logits
+    /// tail — **zero** training-state bytes, and no
+    /// [`DeviceState::sync_to_host`] beforehand.
+    pub fn eval_logits(&mut self, fwd: &Executable, images: &Tensor) -> Result<Tensor> {
+        if fwd.inputs.len() != self.params.len() + 1 {
+            bail!(
+                "fwd artifact {} input arity {} != params + images = {}",
+                fwd.tag,
+                fwd.inputs.len(),
+                self.params.len() + 1
+            );
         }
-        for m in self.momenta.iter_mut() {
-            *m = outs.next().unwrap();
-        }
-        self.stats.state_down += (2 + sparsity.len()) as u64 * 4;
-        self.stats.steps += 1;
-        self.step += 1;
-        self.host_stale = true;
-        Ok(TrainOutputs {
-            loss,
-            acc,
-            sparsity,
-        })
+        super::fwd_logits_from_buffers(&self.client, fwd, &self.params, images, &mut self.stats)
+    }
+
+    /// Top-1 accuracy of a device-resident eval on one batch.
+    pub fn eval_accuracy(&mut self, fwd: &Executable, batch: &Batch) -> Result<f64> {
+        let logits = self.eval_logits(fwd, &batch.images)?;
+        Ok(top1_accuracy(&logits, &batch.labels))
     }
 
     /// Replace the device params (FedAvg broadcast / restored checkpoint).
@@ -247,9 +418,20 @@ impl DeviceState {
     }
 
     /// Download params + momenta into the host store (round boundary /
-    /// eval / checkpoint). This is the only place the O(model) download
-    /// still happens — once per round instead of once per step.
+    /// checkpoint; eval no longer needs it — see
+    /// [`DeviceState::eval_logits`]). This is the only place the O(model)
+    /// download still happens — once per round instead of once per step.
+    ///
+    /// Dirty-flag gated: when the device state has not advanced since the
+    /// last sync (`host_stale() == false`), the download is skipped
+    /// entirely — `store` is assumed to be the same logical store this
+    /// state was constructed from or last synced into, so it is already
+    /// current. Back-to-back boundaries (eval-then-checkpoint) therefore
+    /// pay for one download, not two.
     pub fn sync_to_host(&mut self, store: &mut ParamStore) -> Result<()> {
+        if !self.host_stale {
+            return Ok(());
+        }
         if store.params.len() != self.params.len() {
             bail!(
                 "sync_to_host: store has {} params, device {}",
@@ -272,9 +454,10 @@ impl DeviceState {
     }
 
     /// State bytes the scalar tail costs per step — what the resident
-    /// path's `state_down` should measure at exactly.
+    /// path's `state_down` should measure at exactly (equals
+    /// [`resident_step_state_bytes`] for this model).
     pub fn scalar_tail_bytes(&self) -> u64 {
-        (2 + self.n_feedback) as u64 * 4
+        resident_step_state_bytes(self.n_feedback)
     }
 
     /// Total elements across the param tensors (accounting helpers).
@@ -365,10 +548,55 @@ impl StepDriver {
         }
     }
 
+    /// Evaluation logits through the step backend: the resident path
+    /// feeds `eval`'s fwd artifact from the device param buffers (zero
+    /// state transfer, no sync needed); the literal path delegates to
+    /// [`EvalState::logits`] over the host `store`.
+    pub fn eval_logits(
+        &mut self,
+        store: &ParamStore,
+        eval: &EvalState,
+        images: &Tensor,
+    ) -> Result<Tensor> {
+        match self {
+            StepDriver::Literal(_) => eval.logits(store, images),
+            StepDriver::Resident(ds) => ds.eval_logits(&eval.exe, images),
+        }
+    }
+
+    /// Top-1 accuracy on one batch via [`StepDriver::eval_logits`].
+    pub fn eval_accuracy(
+        &mut self,
+        store: &ParamStore,
+        eval: &EvalState,
+        batch: &Batch,
+    ) -> Result<f64> {
+        let logits = self.eval_logits(store, eval, &batch.images)?;
+        Ok(top1_accuracy(&logits, &batch.labels))
+    }
+
+    /// Ledger of the step backend's host↔device traffic.
     pub fn transfer_stats(&self) -> TransferStats {
         match self {
             StepDriver::Literal(st) => st.transfer_stats(),
             StepDriver::Resident(ds) => ds.transfer_stats(),
+        }
+    }
+
+    /// Zero the backend ledger (per-round accounting in the federated
+    /// worker).
+    pub fn reset_transfer_stats(&mut self) {
+        match self {
+            StepDriver::Literal(st) => st.reset_transfer_stats(),
+            StepDriver::Resident(ds) => ds.reset_transfer_stats(),
+        }
+    }
+
+    /// Toggle input-buffer donation on the resident backend (no-op on the
+    /// literal path) — see [`DeviceState::set_donate_inputs`].
+    pub fn set_donate_inputs(&mut self, donate: bool) {
+        if let StepDriver::Resident(ds) = self {
+            ds.set_donate_inputs(donate);
         }
     }
 }
@@ -398,8 +626,51 @@ mod tests {
             state_down: 120,
             batch_up: 999,
             steps: 10,
+            ..TransferStats::default()
         };
         assert_eq!(s.state_bytes_per_step(), 12);
         assert_eq!(TransferStats::default().state_bytes_per_step(), 0);
+        assert_eq!(TransferStats::default().state_bytes_per_eval(), 0);
+    }
+
+    #[test]
+    fn transfer_stats_add_is_fieldwise() {
+        let a = TransferStats {
+            state_up: 1,
+            state_down: 2,
+            batch_up: 3,
+            metrics_down: 4,
+            steps: 5,
+            evals: 6,
+        };
+        let mut b = TransferStats {
+            state_up: 10,
+            state_down: 20,
+            batch_up: 30,
+            metrics_down: 40,
+            steps: 50,
+            evals: 60,
+        };
+        let sum = a + b;
+        assert_eq!(sum.state_up, 11);
+        assert_eq!(sum.state_down, 22);
+        assert_eq!(sum.batch_up, 33);
+        assert_eq!(sum.metrics_down, 44);
+        assert_eq!(sum.steps, 55);
+        assert_eq!(sum.evals, 66);
+        assert_eq!(sum.total_bytes(), 11 + 22 + 33 + 44);
+        b += a;
+        assert_eq!(b, sum);
+        assert_eq!(a + TransferStats::default(), a);
+    }
+
+    #[test]
+    fn formula_helpers_match_ledger_shape() {
+        // the roadmap's convnet_s numbers: ~42k params, 5 feedback
+        // tensors — resident is model-size independent
+        assert_eq!(resident_step_state_bytes(5), 28);
+        let lit = literal_step_state_bytes(42_000, 40_000, 5);
+        assert_eq!(lit, 4 * (2 * 42_000 + 40_000) as u64 + 4 * 2 * 42_000 + 28);
+        assert!(lit / resident_step_state_bytes(5) > 10_000);
     }
 }

@@ -10,6 +10,14 @@ use crate::util::rng::Rng;
 use crate::util::stats::{ndtri, normal_cdf, std_dev, zero_fraction};
 
 /// eq. 5: τ = Φ⁻¹((1+P)/2) · σ.
+///
+/// ```
+/// // P = 0.9 puts the threshold at the normal 95th percentile
+/// let tau = efficientgrad::sparsity::tau_from_rate(1.0, 0.9);
+/// assert!((tau - 1.6448536269514722).abs() < 1e-7);
+/// // τ scales linearly with σ
+/// assert!((efficientgrad::sparsity::tau_from_rate(2.0, 0.9) - 2.0 * tau).abs() < 1e-9);
+/// ```
 pub fn tau_from_rate(sigma: f64, prune_rate: f64) -> f64 {
     let p = prune_rate.clamp(0.0, 0.999_999);
     ndtri((1.0 + p) / 2.0) * sigma
@@ -58,6 +66,17 @@ pub fn stochastic_prune(delta: &[f32], tau: f64, rng: &mut Rng) -> Vec<f32> {
 ///           = P − (2σ/τ)·(φ(0) − φ(τ/σ))     with φ the std normal pdf.
 /// This is what the accelerator simulator uses to discount backward-phase
 /// MACs and DRAM traffic when no measured sparsity is available.
+///
+/// ```
+/// use efficientgrad::sparsity::expected_zero_fraction;
+/// // stochastic promotion keeps realized zeros strictly below P
+/// // (in-band survivors are promoted with probability |δ|/τ)…
+/// let z = expected_zero_fraction(0.9);
+/// assert!(z < 0.9 && z > 0.5);
+/// // …and the fraction is monotone in the pruning rate
+/// assert!(expected_zero_fraction(0.5) < z);
+/// assert_eq!(expected_zero_fraction(0.0), 0.0);
+/// ```
 pub fn expected_zero_fraction(prune_rate: f64) -> f64 {
     let p = prune_rate.clamp(0.0, 0.999_999);
     if p == 0.0 {

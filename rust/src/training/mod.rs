@@ -7,13 +7,13 @@ pub mod metrics;
 
 use anyhow::{bail, Context, Result};
 
-use crate::config::TrainConfig;
+use crate::config::{ResidencyMode, TrainConfig};
 use crate::data::batcher::{eval_batches, prefetch_scoped};
 use crate::data::Dataset;
 use crate::manifest::{Manifest, ModelSpec};
 use crate::params::ParamStore;
 use crate::runtime::exec::EvalState;
-use crate::runtime::{Runtime, StepDriver};
+use crate::runtime::{Runtime, StepDriver, TransferStats};
 
 pub use metrics::{MetricsLog, StepRecord};
 
@@ -64,9 +64,13 @@ impl LrSchedule {
 ///
 /// With `cfg.residency == Resident` (the default) the training state
 /// lives on the device between steps and `store` is a lazily-synced
-/// view: it is refreshed (via [`Trainer::sync_store`]) before every
-/// eval, checkpoint, and at the end of [`Trainer::run`]. External
-/// readers of `store` mid-run must call `sync_store` first.
+/// view: it is refreshed (via [`Trainer::sync_store`]) before literal
+/// evals, checkpoints, and at the end of [`Trainer::run`]. With
+/// `cfg.eval_residency == Resident` too (the default), evaluation feeds
+/// the fwd artifact from the resident param buffers and never syncs —
+/// a training run's only O(model) download is the final checkpoint
+/// sync. External readers of `store` mid-run must call `sync_store`
+/// first.
 pub struct Trainer {
     pub cfg: TrainConfig,
     pub model: ModelSpec,
@@ -93,7 +97,8 @@ impl Trainer {
         })?;
         let store = ParamStore::init(&model, cfg.seed);
         let driver = StepDriver::new(cfg.residency, rt, rt.load(art)?, &model, &store)?;
-        let eval_state = EvalState::new(rt.load(model.artifact("fwd")?)?, &model)?;
+        let eval_state =
+            EvalState::new(rt, rt.load(model.artifact("fwd")?)?, &model, cfg.eval_residency)?;
         Ok(Self {
             cfg,
             model,
@@ -115,9 +120,11 @@ impl Trainer {
         self.driver.steps_done(&self.store)
     }
 
-    /// Host↔device traffic of the step backend so far.
-    pub fn transfer_stats(&self) -> crate::runtime::TransferStats {
-        self.driver.transfer_stats()
+    /// Combined host↔device traffic so far: the step backend's ledger
+    /// plus the eval driver's (device-resident evals land in the step
+    /// backend's ledger — they ride its buffers).
+    pub fn transfer_stats(&self) -> TransferStats {
+        self.driver.transfer_stats() + self.eval_state.transfer_stats()
     }
 
     /// Run `steps` steps over `train` (prefetched batcher: the next batch
@@ -163,7 +170,8 @@ impl Trainer {
                 if self.cfg.eval_every > 0
                     && (step + 1) % self.cfg.eval_every == 0
                 {
-                    self.sync_store()?;
+                    // evaluate() syncs the store itself only when the
+                    // eval path actually reads host params
                     last_eval = self.evaluate(test)?;
                     if let Some(r) = self.log.records.last_mut() {
                         r.eval_acc = Some(last_eval);
@@ -210,15 +218,30 @@ impl Trainer {
         Ok(())
     }
 
-    /// Full-sweep top-1 accuracy on a dataset. Reads the host `store` —
-    /// in resident mode, call [`Trainer::sync_store`] first (as `run`
-    /// does at its eval boundaries).
-    pub fn evaluate(&self, ds: &Dataset) -> Result<f64> {
+    /// Full-sweep top-1 accuracy on a dataset.
+    ///
+    /// With resident step *and* eval backends the sweep runs off the
+    /// device param buffers — zero state transfer, no store sync.
+    /// Otherwise the host store is brought current first (a no-op on
+    /// the literal step path) and the [`EvalState`] backend selected by
+    /// `cfg.eval_residency` evaluates from host params.
+    pub fn evaluate(&mut self, ds: &Dataset) -> Result<f64> {
+        let device_eval = self.cfg.eval_residency == ResidencyMode::Resident
+            && self.driver.mode() == ResidencyMode::Resident;
+        if !device_eval {
+            self.sync_store()?;
+        }
         let mut correct_weighted = 0.0;
         let mut total = 0usize;
         for idx in eval_batches(ds, self.model.batch) {
             let batch = ds.gather(&idx);
-            correct_weighted += self.eval_state.accuracy(&self.store, &batch)? * idx.len() as f64;
+            let acc = if device_eval {
+                self.driver
+                    .eval_accuracy(&self.store, &self.eval_state, &batch)?
+            } else {
+                self.eval_state.accuracy(&self.store, &batch)?
+            };
+            correct_weighted += acc * idx.len() as f64;
             total += idx.len();
         }
         if total == 0 {

@@ -4,7 +4,8 @@
 use efficientgrad::config::{FedConfig, TrainConfig};
 use efficientgrad::coordinator::Leader;
 use efficientgrad::manifest::Manifest;
-use efficientgrad::runtime::Runtime;
+use efficientgrad::params::ParamStore;
+use efficientgrad::runtime::{resident_step_state_bytes, Runtime, TransferStats};
 
 fn manifest() -> Option<Manifest> {
     Manifest::load(&efficientgrad::artifacts_dir()).ok()
@@ -52,6 +53,55 @@ fn federated_two_workers_improves_over_rounds() {
     let expect = (model.param_count * 4 * 2 * 4) as u64;
     assert_eq!(summary.total_upload_bytes, expect);
     assert_eq!(summary.total_download_bytes, expect);
+}
+
+#[test]
+fn round_report_ledger_matches_worker_transfer_sum() {
+    // the tentpole accounting claim: RoundReport's device-bus totals are
+    // exactly the fedavg-style aggregate of the per-worker TransferStats,
+    // and each resident worker's round moves params-up + per-step tails
+    // + one mutable-state sync down — never O(model) per step
+    let Some(m) = manifest() else {
+        eprintln!("SKIP: artifacts missing");
+        return;
+    };
+    let rt = Runtime::cpu().unwrap();
+    let cfg = small_cfg(2, 3);
+    let local_steps = cfg.local_steps as u64;
+    let mut leader = Leader::new(&rt, &m, cfg).unwrap();
+    let summary = leader.run().unwrap();
+    leader.shutdown();
+
+    let model = m.model("convnet_t").unwrap();
+    let probe = ParamStore::init(model, 0);
+    let params_bytes = (probe.param_elements() * 4) as u64;
+    let tail = resident_step_state_bytes(probe.feedback.len());
+
+    let mut fleet_total = TransferStats::default();
+    for r in &summary.rounds {
+        assert_eq!(r.worker_transfer.len(), 2);
+        let sum = r
+            .worker_transfer
+            .iter()
+            .fold(TransferStats::default(), |acc, &t| acc + t);
+        assert_eq!(r.device_transfer, sum, "round {} ledger != worker sum", r.round);
+        for (w, t) in r.worker_transfer.iter().enumerate() {
+            assert_eq!(t.steps, local_steps, "worker {w} step count");
+            assert_eq!(t.state_up, params_bytes, "worker {w} broadcast upload");
+            assert_eq!(
+                t.state_down,
+                local_steps * tail + probe.mutable_state_bytes(),
+                "worker {w} downloads must be tails + one sync"
+            );
+        }
+        // the leader's resident eval uploads the new global params once
+        // per round, regardless of how many test batches it sweeps
+        assert_eq!(r.leader_eval_transfer.state_up, params_bytes);
+        assert!(r.leader_eval_transfer.evals > 0);
+        fleet_total += r.device_transfer + r.leader_eval_transfer;
+    }
+    assert_eq!(summary.total_device_transfer, fleet_total);
+    assert_eq!(summary.total_device_transfer.steps, 2 * 3 * local_steps);
 }
 
 #[test]

@@ -115,7 +115,13 @@ fn eval_state_logits_shape_and_determinism() {
     let m = require_artifacts!();
     let rt = Runtime::cpu().unwrap();
     let model = m.model("convnet_t").unwrap();
-    let eval = EvalState::new(rt.load(model.artifact("fwd").unwrap()).unwrap(), model).unwrap();
+    let eval = EvalState::new(
+        &rt,
+        rt.load(model.artifact("fwd").unwrap()).unwrap(),
+        model,
+        efficientgrad::config::ResidencyMode::Literal,
+    )
+    .unwrap();
     let store = ParamStore::init(model, 2);
     let ds = generate(&SynthConfig {
         n: model.batch,

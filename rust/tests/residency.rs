@@ -11,7 +11,10 @@ use efficientgrad::data::batcher::Batcher;
 use efficientgrad::data::synthetic::{generate, SynthConfig};
 use efficientgrad::manifest::Manifest;
 use efficientgrad::params::ParamStore;
-use efficientgrad::runtime::{DeviceState, Runtime, StepDriver, TrainState};
+use efficientgrad::runtime::exec::EvalState;
+use efficientgrad::runtime::{
+    literal_step_state_bytes, DeviceState, Runtime, StepDriver, TrainState,
+};
 
 fn manifest() -> Option<Manifest> {
     Manifest::load(&efficientgrad::artifacts_dir()).ok()
@@ -75,6 +78,167 @@ fn resident_matches_literal_bit_for_bit_after_10_steps() {
         stats.state_down,
         10 * resident.scalar_tail_bytes() + res_store.mutable_state_bytes()
     );
+
+    // the literal oracle's ledger must realize the documented formula
+    // (docs/TRANSFER_MODEL.md): 10 x [4(2P+F) up + 4·2P + tail down]
+    let lit_stats = literal.transfer_stats();
+    assert_eq!(
+        lit_stats.state_up + lit_stats.state_down,
+        10 * literal_step_state_bytes(
+            lit_store.param_elements(),
+            lit_store.feedback.iter().map(|t| t.len()).sum(),
+            lit_store.feedback.len(),
+        )
+    );
+}
+
+#[test]
+fn resident_and_donation_settings_agree_bit_for_bit() {
+    // input-buffer donation only changes buffer lifetime, never numerics
+    let m = require_artifacts!();
+    let rt = Runtime::cpu().unwrap();
+    let model = m.model("convnet_t").unwrap();
+    let exe = rt.load(model.artifact("train_efficientgrad").unwrap()).unwrap();
+
+    let store = ParamStore::init(model, 61);
+    let mut donating = DeviceState::new(&rt, exe.clone(), model, &store).unwrap();
+    let mut holding = DeviceState::new(&rt, exe, model, &store).unwrap();
+    assert!(donating.donate_inputs()); // donation is the default
+    holding.set_donate_inputs(false);
+
+    let ds = generate(&SynthConfig {
+        n: 64,
+        seed: 17,
+        ..Default::default()
+    });
+    let mut ba = Batcher::new(&ds, model.batch, 3);
+    let mut bb = Batcher::new(&ds, model.batch, 3);
+    for step in 0..5 {
+        let a = donating.step(&ba.next_batch(), 0.05, 0.9).unwrap();
+        let b = holding.step(&bb.next_batch(), 0.05, 0.9).unwrap();
+        assert_eq!(a.loss, b.loss, "loss diverged at step {step}");
+        assert_eq!(a.sparsity, b.sparsity);
+    }
+    let mut sa = store.clone();
+    let mut sb = store;
+    donating.sync_to_host(&mut sa).unwrap();
+    holding.sync_to_host(&mut sb).unwrap();
+    assert_eq!(sa.params, sb.params);
+    assert_eq!(sa.momenta, sb.momenta);
+    // and both ledgers count the identical transfers
+    assert_eq!(donating.transfer_stats(), holding.transfer_stats());
+}
+
+#[test]
+fn resident_eval_matches_literal_eval_bit_for_bit() {
+    // the three eval paths (literal re-upload, cached param buffers,
+    // device-resident off the training buffers) must produce identical
+    // logits — residency only moves bytes, never values
+    let m = require_artifacts!();
+    let rt = Runtime::cpu().unwrap();
+    let model = m.model("convnet_t").unwrap();
+    let train_exe = rt.load(model.artifact("train_efficientgrad").unwrap()).unwrap();
+    let fwd_exe = rt.load(model.artifact("fwd").unwrap()).unwrap();
+
+    let mut store = ParamStore::init(model, 23);
+    let mut dev = DeviceState::new(&rt, train_exe, model, &store).unwrap();
+    let eval_lit = EvalState::new(&rt, fwd_exe.clone(), model, ResidencyMode::Literal).unwrap();
+    let eval_res = EvalState::new(&rt, fwd_exe.clone(), model, ResidencyMode::Resident).unwrap();
+
+    let ds = generate(&SynthConfig {
+        n: 64,
+        seed: 29,
+        ..Default::default()
+    });
+    let batch = ds.gather(&(0..model.batch as u32).collect::<Vec<_>>());
+
+    // at init the host store and device buffers hold the same params
+    let lit0 = eval_lit.logits(&store, &batch.images).unwrap();
+    let res0 = eval_res.logits(&store, &batch.images).unwrap();
+    let dev0 = dev.eval_logits(&fwd_exe, &batch.images).unwrap();
+    assert_eq!(lit0, res0, "cached eval diverged from literal at init");
+    assert_eq!(lit0, dev0, "device eval diverged from literal at init");
+
+    // train a few steps on the device, then compare WITHOUT syncing for
+    // the device path — that is the whole point — and against the
+    // literal oracle on a synced copy
+    let mut batcher = Batcher::new(&ds, model.batch, 11);
+    for _ in 0..4 {
+        dev.step(&batcher.next_batch(), 0.05, 0.9).unwrap();
+    }
+    let stats_before = dev.transfer_stats();
+    let dev_logits = dev.eval_logits(&fwd_exe, &batch.images).unwrap();
+    let stats_after = dev.transfer_stats();
+    // device-resident eval moved zero state bytes and one logits tail
+    assert_eq!(stats_after.state_up, stats_before.state_up);
+    assert_eq!(stats_after.state_down, stats_before.state_down);
+    assert_eq!(stats_after.evals, stats_before.evals + 1);
+    assert_eq!(
+        stats_after.metrics_down - stats_before.metrics_down,
+        (model.batch * model.num_classes * 4) as u64
+    );
+
+    dev.sync_to_host(&mut store).unwrap();
+    let lit_logits = eval_lit.logits(&store, &batch.images).unwrap();
+    let res_logits = eval_res.logits(&store, &batch.images).unwrap();
+    assert_eq!(lit_logits, dev_logits, "post-training device eval diverged");
+    assert_eq!(lit_logits, res_logits, "post-training cached eval diverged");
+
+    // accuracy helpers agree too
+    let a = eval_lit.accuracy(&store, &batch).unwrap();
+    let b = eval_res.accuracy(&store, &batch).unwrap();
+    let c = dev.eval_accuracy(&fwd_exe, &batch).unwrap();
+    assert_eq!(a, b);
+    assert_eq!(a, c);
+
+    // the cached path re-uploaded params exactly twice: init draw + the
+    // post-sync params (one fingerprint change), despite 3 logits calls
+    let res_stats = eval_res.transfer_stats();
+    assert_eq!(
+        res_stats.state_up,
+        2 * (store.param_elements() * 4) as u64,
+        "param-buffer cache re-uploaded more than once per param change"
+    );
+}
+
+#[test]
+fn sync_to_host_skips_download_when_clean() {
+    let m = require_artifacts!();
+    let rt = Runtime::cpu().unwrap();
+    let model = m.model("convnet_t").unwrap();
+    let exe = rt.load(model.artifact("train_bp").unwrap()).unwrap();
+
+    let mut store = ParamStore::init(model, 43);
+    let mut dev = DeviceState::new(&rt, exe, model, &store).unwrap();
+
+    // clean at construction: sync is a no-op, zero bytes downloaded
+    let before = dev.transfer_stats();
+    dev.sync_to_host(&mut store).unwrap();
+    assert_eq!(dev.transfer_stats(), before, "clean sync downloaded bytes");
+
+    let ds = generate(&SynthConfig {
+        n: model.batch,
+        seed: 2,
+        ..Default::default()
+    });
+    let batch = ds.gather(&(0..model.batch as u32).collect::<Vec<_>>());
+    dev.step(&batch, 0.05, 0.9).unwrap();
+    assert!(dev.host_stale());
+
+    // stale: this one pays the O(model) download…
+    dev.sync_to_host(&mut store).unwrap();
+    let after_real = dev.transfer_stats();
+    assert_eq!(
+        after_real.state_down - before.state_down,
+        dev.scalar_tail_bytes() + store.mutable_state_bytes()
+    );
+    // …and an immediate second sync (eval-then-checkpoint boundary) is
+    // free: the dirty flag short-circuits the download
+    let synced = store.clone();
+    dev.sync_to_host(&mut store).unwrap();
+    assert_eq!(dev.transfer_stats(), after_real);
+    assert_eq!(store.params, synced.params);
+    assert!(!dev.host_stale());
 }
 
 #[test]
