@@ -6,7 +6,7 @@
 
 MANIFEST := artifacts/manifest.json
 
-.PHONY: artifacts artifacts-full test bench clean-artifacts
+.PHONY: artifacts artifacts-full test bench bench-comm clean-artifacts
 
 $(MANIFEST):
 	python python/compile/aot.py --outdir artifacts
@@ -23,6 +23,11 @@ test: $(MANIFEST)
 
 bench: $(MANIFEST)
 	cd rust && cargo bench --bench runtime_hotpath
+
+# federated comm codec: wire bytes + encode latency per mode/rate.
+# Pure host math — needs no artifacts, so it runs anywhere (incl. CI).
+bench-comm:
+	cd rust && cargo bench --bench comm_bytes
 
 clean-artifacts:
 	rm -rf artifacts

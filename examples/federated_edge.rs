@@ -3,15 +3,18 @@
 //! A leader coordinates N edge workers (each with its own PJRT client,
 //! private data shard and EfficientGrad train loop), aggregating with
 //! examples-weighted FedAvg each round. Reports accuracy per round,
-//! communication volume, and per-worker (simulated) device time with an
-//! optional straggler injection.
+//! communication volume (with the pruned-delta comm modes —
+//! `--comm pruned|sign` — cutting the network tier by the survivor
+//! fraction), per-round network vs device-bus Joules, and per-worker
+//! (simulated) device time with optional straggler/dropout injection.
 //!
-//!     cargo run --release --example federated_edge [-- --workers 4 --rounds 6 --non-iid]
+//!     cargo run --release --example federated_edge [-- --workers 4 --rounds 6 --comm sign]
 
 use anyhow::Result;
 
+use efficientgrad::accel::{EnergyTable, LinkEnergy};
 use efficientgrad::cli::{Args, FlagSpec};
-use efficientgrad::config::{FedConfig, TrainConfig};
+use efficientgrad::config::{CommMode, FedConfig, TrainConfig};
 use efficientgrad::coordinator::Leader;
 use efficientgrad::manifest::Manifest;
 use efficientgrad::runtime::Runtime;
@@ -25,6 +28,9 @@ fn main() -> Result<()> {
         FlagSpec { name: "local-steps", help: "steps per round per worker", takes_value: true, default: Some("8") },
         FlagSpec { name: "non-iid", help: "label-skewed shards", takes_value: false, default: None },
         FlagSpec { name: "straggler-prob", help: "straggler probability", takes_value: true, default: Some("0.25") },
+        FlagSpec { name: "dropout-prob", help: "per-round worker dropout probability", takes_value: true, default: Some("0.0") },
+        FlagSpec { name: "comm", help: "network encoding (dense|pruned|sign)", takes_value: true, default: Some("sign") },
+        FlagSpec { name: "comm-rate", help: "comm pruning rate P", takes_value: true, default: Some("0.9") },
         FlagSpec { name: "model", help: "model", takes_value: true, default: Some("convnet_t") },
     ];
     let args = Args::parse(&raw, &specs)?;
@@ -36,6 +42,9 @@ fn main() -> Result<()> {
         iid: !args.get_bool("non-iid"),
         straggler_prob: args.get_f64("straggler-prob")?.unwrap(),
         straggler_slowdown: 4.0,
+        dropout_prob: args.get_f64("dropout-prob")?.unwrap(),
+        comm: CommMode::parse(args.get("comm").unwrap())?,
+        comm_rate: args.get_f64("comm-rate")?.unwrap(),
         train: TrainConfig {
             model: args.get("model").unwrap().to_string(),
             mode: "efficientgrad".into(),
@@ -44,13 +53,16 @@ fn main() -> Result<()> {
             ..Default::default()
         },
     };
+    cfg.validate()?; // shared range checks (comm_rate, dropout_prob)
 
     println!(
-        "== federated: {} workers x {} rounds x {} local steps ({} shards) ==",
+        "== federated: {} workers x {} rounds x {} local steps ({} shards, comm={} P={}) ==",
         cfg.workers,
         cfg.rounds,
         cfg.local_steps,
-        if cfg.iid { "IID" } else { "non-IID" }
+        if cfg.iid { "IID" } else { "non-IID" },
+        cfg.comm.as_str(),
+        cfg.comm_rate,
     );
 
     let rt = Runtime::cpu()?;
@@ -59,26 +71,40 @@ fn main() -> Result<()> {
     let summary = leader.run()?;
     leader.shutdown();
 
-    println!("\nround | mean loss | eval acc | sparsity | device KB | worker secs (sim)");
+    let energy = EnergyTable::smic14();
+    let link = LinkEnergy::wifi();
+    println!(
+        "\nround | mean loss | eval acc | net KB | net mJ | dev mJ | dropped | worker secs (sim)"
+    );
     for r in &summary.rounds {
         let times: Vec<String> = r.worker_secs.iter().map(|t| format!("{t:.2}")).collect();
         println!(
-            "{:5} | {:9.4} | {:8.4} | {:8.3} | {:9.1} | [{}]",
+            "{:5} | {:9.4} | {:8.4} | {:6.1} | {:6.2} | {:6.3} | {:7} | [{}]",
             r.round,
             r.mean_loss,
             r.eval_acc,
-            r.mean_sparsity,
-            r.device_bytes() as f64 / 1e3,
+            r.network_bytes() as f64 / 1e3,
+            r.network_joules(&link) * 1e3,
+            r.device_joules(&energy) * 1e3,
+            r.dropped.len(),
             times.join(", ")
         );
     }
     println!(
-        "\nfinal acc {:.4}; comms: {:.1} MB up + {:.1} MB down \
+        "\nfinal acc {:.4}; comms: {:.2} MB up + {:.2} MB down \
          (params only — EfficientGrad's fixed feedback B never travels: \
          it is re-derived from the shared seed on-device)",
         summary.final_acc,
         summary.total_upload_bytes as f64 / 1e6,
         summary.total_download_bytes as f64 / 1e6
+    );
+    let net_j: f64 = summary.rounds.iter().map(|r| r.network_joules(&link)).sum();
+    let dev_j: f64 = summary.rounds.iter().map(|r| r.device_joules(&energy)).sum();
+    println!(
+        "energy (measured ledgers): network {:.1} mJ vs device bus {:.2} mJ \
+         — the radio dominates, which is what the comm codec attacks",
+        net_j * 1e3,
+        dev_j * 1e3
     );
     let dt = summary.total_device_transfer;
     println!(

@@ -1,0 +1,168 @@
+//! Bench: the federated comm codec on the host — encode/decode
+//! throughput and wire bytes per mode/rate over an edge-CNN-shaped
+//! parameter set (~26k elements). Pure host math: runs (and asserts) without artifacts,
+//! so CI always accumulates these rows even where the PJRT-backed
+//! `runtime_hotpath` skips.
+//!
+//! Asserted here, mirroring `docs/TRANSFER_MODEL.md` §Network tier:
+//! * measured wire bytes equal the documented formulas applied to the
+//!   measured survivor counts (sparse exactly; sign per-tensor exactly);
+//! * at the paper's P=0.9, `sign` ships ≤ 1/5 of dense (steady state —
+//!   the ≥10× headline lands near 20×) and `pruned` ships less than
+//!   dense;
+//! * the error-feedback residual norm stays bounded across rounds.
+//!
+//!     cargo bench --bench comm_bytes        (make bench-comm)
+
+use efficientgrad::benchlib::{bench, fmt_ns, Report};
+use efficientgrad::comm::wire::{sign_tensor_bytes, sparse_tensor_bytes};
+use efficientgrad::comm::{DeltaCodec, ModelUpdate, TensorUpdate};
+use efficientgrad::config::CommMode;
+use efficientgrad::tensor::Tensor;
+use efficientgrad::util::rng::Rng;
+use std::time::Duration;
+
+/// Edge-CNN-shaped parameter set (a few conv kernels + scale/bias vecs
+/// + an fc head, ~26k elements) — sized like the small end of the
+/// repo's models, deliberately *not* labeled `convnet_s` (~42k), whose
+/// worked numbers live in `docs/TRANSFER_MODEL.md`.
+fn model_shapes() -> Vec<Vec<usize>> {
+    vec![
+        vec![3, 3, 3, 16],
+        vec![16],
+        vec![16],
+        vec![3, 3, 16, 32],
+        vec![32],
+        vec![32],
+        vec![32 * 8 * 8, 10],
+        vec![10],
+    ]
+}
+
+fn randn_like(shapes: &[Vec<usize>], sigma: f32, rng: &mut Rng) -> Vec<Tensor> {
+    shapes.iter().map(|s| Tensor::randn(s, sigma, rng)).collect()
+}
+
+fn main() {
+    let short = std::env::var_os("EFFICIENTGRAD_BENCH_SHORT").is_some();
+    let iters = if short { 10 } else { 40 };
+    let rounds = if short { 10 } else { 25 };
+    let shapes = model_shapes();
+    let elems: usize = shapes.iter().map(|s| s.iter().product::<usize>()).sum();
+    let dense_bytes = 4 * elems as u64;
+
+    let mut rep = Report::new(
+        "federated comm codec (pruned-delta wire formats, edge-CNN-shaped ~26k params)",
+        &["mode/rate", "encode mean", "p95", "wire B/round", "vs dense", "survivors"],
+    );
+
+    let mut rng = Rng::new(7);
+    let reference = randn_like(&shapes, 0.1, &mut rng);
+
+    for (mode, rate) in [
+        (CommMode::Dense, 0.0),
+        (CommMode::Pruned, 0.5),
+        (CommMode::Pruned, 0.9),
+        (CommMode::Pruned, 0.99),
+        (CommMode::Sign, 0.5),
+        (CommMode::Sign, 0.9),
+        (CommMode::Sign, 0.99),
+    ] {
+        // drive the codec to its error-feedback steady state over
+        // synthetic round deltas, then measure encode latency + bytes
+        let mut codec = DeltaCodec::new(mode, rate);
+        let mut delta_rng = Rng::new(11);
+        let mut prune_rng = Rng::new(13);
+        let mut local = reference.clone();
+        let mut update = None;
+        let mut wire_total = 0u64;
+        let mut surv_total = 0u64;
+        for _ in 0..rounds {
+            // a fresh round delta on top of the reference
+            for (l, r) in local.iter_mut().zip(&reference) {
+                let mut d = vec![0f32; r.len()];
+                delta_rng.fill_normal(&mut d, 0.02);
+                l.data_mut().copy_from_slice(r.data());
+                for (o, &dv) in l.data_mut().iter_mut().zip(&d) {
+                    *o += dv;
+                }
+            }
+            let u = codec.encode(&local, &reference, &mut prune_rng).unwrap();
+            wire_total += u.wire_bytes();
+            surv_total += u.survivors();
+            update = Some(u);
+        }
+        let wire = wire_total / rounds as u64;
+        let survivors = surv_total / rounds as u64;
+        let residual_after = codec.residual_norm();
+
+        // measured bytes == documented formulas on the last update
+        let last = update.unwrap();
+        match &last {
+            ModelUpdate::Dense(_) => assert_eq!(last.wire_bytes(), dense_bytes),
+            ModelUpdate::Delta(us) => {
+                let formula: u64 = us
+                    .iter()
+                    .map(|u| match u {
+                        TensorUpdate::Sparse(t) => sparse_tensor_bytes(t.nnz()),
+                        TensorUpdate::Sign(t) => {
+                            sign_tensor_bytes(t.elems as usize, t.nnz as usize)
+                        }
+                    })
+                    .sum();
+                assert_eq!(last.wire_bytes(), formula, "wire bytes drifted from formula");
+            }
+        }
+
+        // EF stability: residual bounded by a few σ·√n after many rounds
+        if mode != CommMode::Dense {
+            let bound = 8.0 * 0.02 * (elems as f64).sqrt();
+            assert!(
+                residual_after < bound,
+                "{mode:?}/{rate}: residual {residual_after} exceeded {bound}"
+            );
+        }
+
+        let s = bench(
+            &format!("encode {}/{rate}", mode.as_str()),
+            2,
+            iters,
+            Duration::from_secs(if short { 2 } else { 6 }),
+            || {
+                let mut c = DeltaCodec::new(mode, rate);
+                std::hint::black_box(
+                    c.encode(&local, &reference, &mut Rng::new(3)).unwrap(),
+                );
+            },
+        );
+        rep.row(vec![
+            format!("{}/{rate}", mode.as_str()),
+            fmt_ns(s.mean_ns),
+            fmt_ns(s.p95_ns),
+            wire.to_string(),
+            format!("{:.1}x", dense_bytes as f64 / wire as f64),
+            survivors.to_string(),
+        ]);
+
+        // the headline asserts at the paper's operating point
+        if rate == 0.9 {
+            match mode {
+                CommMode::Pruned => assert!(
+                    wire < dense_bytes,
+                    "pruned wire {wire} not below dense {dense_bytes}"
+                ),
+                CommMode::Sign => assert!(
+                    wire * 5 <= dense_bytes,
+                    "sign wire {wire} missed the 5x cut vs {dense_bytes}"
+                ),
+                CommMode::Dense => {}
+            }
+        }
+    }
+
+    rep.print();
+    rep.save_csv(&efficientgrad::figures::reports_dir().join("comm_bytes.csv"))
+        .unwrap();
+    rep.save_json(std::path::Path::new("BENCH_comm.json")).unwrap();
+    println!("json -> BENCH_comm.json");
+}

@@ -13,17 +13,23 @@
 //!   against the literal eval's 4·P upload per batch;
 //! * the federated rounds' `RoundReport` device-bus totals must equal
 //!   the sum of the per-worker `TransferStats` and match the formulas in
-//!   `docs/TRANSFER_MODEL.md`.
+//!   `docs/TRANSFER_MODEL.md`;
+//! * the federated *network* tier: per-round wire-byte rows for the
+//!   `dense` vs `pruned` vs `sign` comm modes, asserting measured bytes
+//!   equal the documented formulas and that the steady-state sign rows
+//!   cut ≥5× vs dense at the paper's P=0.9.
 //!
 //! Rows are also emitted to `BENCH_runtime.json` so the trajectory is
-//! tracked across PRs.
+//! tracked across PRs. Set `EFFICIENTGRAD_BENCH_SHORT=1` (CI) for a
+//! reduced iteration budget — same rows, same asserts, less wall time.
 //!
 //!     cargo bench --bench runtime_hotpath
 
 use std::time::Duration;
 
 use efficientgrad::benchlib::{bench, bench_default, fmt_ns, Report, Sample};
-use efficientgrad::config::{FedConfig, ResidencyMode, TrainConfig};
+use efficientgrad::comm::wire::{sign_model_bytes_envelope, sparse_model_bytes};
+use efficientgrad::config::{CommMode, FedConfig, ResidencyMode, TrainConfig};
 use efficientgrad::coordinator::Leader;
 use efficientgrad::data::synthetic::{generate, SynthConfig};
 use efficientgrad::manifest::Manifest;
@@ -34,12 +40,20 @@ use efficientgrad::runtime::{
     TrainState, TransferStats,
 };
 
+/// Reduced budget for CI (`EFFICIENTGRAD_BENCH_SHORT=1`).
+fn short_mode() -> bool {
+    std::env::var_os("EFFICIENTGRAD_BENCH_SHORT").is_some()
+}
+
 fn main() {
     let Ok(manifest) = Manifest::load(&efficientgrad::artifacts_dir()) else {
         eprintln!("SKIP: artifacts missing (run `make artifacts`)");
         return;
     };
     let rt = Runtime::cpu().expect("PJRT client");
+    let iters = if short_mode() { 8 } else { 30 };
+    let step_budget = Duration::from_secs(if short_mode() { 5 } else { 15 });
+    let eval_budget = Duration::from_secs(if short_mode() { 3 } else { 10 });
     let mut rep = Report::new(
         "L3 runtime hot path (literal vs device-resident step + eval backends)",
         &["op", "mean", "p50", "p95", "per-image µs", "state B/step"],
@@ -74,8 +88,8 @@ fn main() {
         let s = bench(
             &format!("{model_name}: train step (literal)"),
             3,
-            30,
-            Duration::from_secs(15),
+            iters,
+            step_budget,
             || {
                 train.step(&mut store, &batch, 0.05, 0.9).unwrap();
             },
@@ -107,8 +121,8 @@ fn main() {
         let s = bench(
             &format!("{model_name}: train step (resident, donate)"),
             0, // already warmed; keep the ledger aligned with the iters
-            30,
-            Duration::from_secs(15),
+            iters,
+            step_budget,
             || {
                 dev.step(&batch, 0.05, 0.9).unwrap();
             },
@@ -135,8 +149,8 @@ fn main() {
         let s = bench(
             &format!("{model_name}: train step (resident, hold inputs)"),
             1,
-            30,
-            Duration::from_secs(15),
+            iters,
+            step_budget,
             || {
                 dev.step(&batch, 0.05, 0.9).unwrap();
             },
@@ -172,8 +186,8 @@ fn main() {
         let s = bench(
             &format!("{model_name}: eval fwd (literal)"),
             3,
-            30,
-            Duration::from_secs(10),
+            iters,
+            eval_budget,
             || {
                 eval_lit.logits(&store, &batch.images).unwrap();
             },
@@ -195,8 +209,8 @@ fn main() {
         let s = bench(
             &format!("{model_name}: eval fwd (resident, cached)"),
             0,
-            30,
-            Duration::from_secs(10),
+            iters,
+            eval_budget,
             || {
                 eval_res.logits(&store, &batch.images).unwrap();
             },
@@ -215,8 +229,8 @@ fn main() {
         let s = bench(
             &format!("{model_name}: eval fwd (device-resident)"),
             2,
-            30,
-            Duration::from_secs(10),
+            iters,
+            eval_budget,
             || {
                 dev.eval_logits(&fwd_exe, &batch.images).unwrap();
             },
@@ -259,71 +273,155 @@ fn main() {
     );
 }
 
-/// Run 2 workers x 2 rounds of federated training and emit one row per
-/// round with the fleet device-bus bytes, asserting the `RoundReport`
-/// ledger matches the per-worker sum and the resident-path formulas.
+/// Run 2 workers x 3 rounds of federated training per comm mode (dense,
+/// pruned, sign at the paper's P=0.9) and emit one row per round with
+/// the fleet device-bus and network wire bytes, asserting:
+/// * the `RoundReport` device ledger equals the per-worker sum and the
+///   resident-path formulas (every mode — comm never touches the bus);
+/// * measured network bytes equal the `docs/TRANSFER_MODEL.md` §Network
+///   tier formulas applied to the measured survivor counts;
+/// * steady state (round 0's downlink is a dense snapshot by design):
+///   `pruned` ships fewer bytes than `dense`, and `sign` ships ≤ 1/5 of
+///   `dense` both directions combined.
 fn federated_rows(rt: &Runtime, manifest: &Manifest, rep: &mut Report) {
     const WORKERS: usize = 2;
-    const ROUNDS: usize = 2;
+    const ROUNDS: usize = 3;
     const LOCAL_STEPS: usize = 3;
-    let cfg = FedConfig {
-        workers: WORKERS,
-        rounds: ROUNDS,
-        local_steps: LOCAL_STEPS,
-        iid: true,
-        straggler_prob: 0.0,
-        straggler_slowdown: 1.0,
-        train: TrainConfig {
-            model: "convnet_t".into(),
-            mode: "efficientgrad".into(),
-            train_examples: 256,
-            test_examples: 64,
-            difficulty: 0.4,
-            ..Default::default()
-        },
-    };
     let model = manifest.model("convnet_t").unwrap();
     let probe = ParamStore::init(model, 0);
     let params_bytes = (probe.param_elements() * 4) as u64;
+    let n_tensors = probe.params.len() as u64;
     let tail = resident_step_state_bytes(probe.feedback.len());
 
-    let mut leader = Leader::new(rt, manifest, cfg).expect("leader");
-    let summary = leader.run().expect("federated run");
-    leader.shutdown();
+    // steady-state (rounds 1..) network totals per mode
+    let mut steady_net = [0u64; 3];
+    for (mode_idx, comm) in [CommMode::Dense, CommMode::Pruned, CommMode::Sign]
+        .into_iter()
+        .enumerate()
+    {
+        let cfg = FedConfig {
+            workers: WORKERS,
+            rounds: ROUNDS,
+            local_steps: LOCAL_STEPS,
+            iid: true,
+            straggler_prob: 0.0,
+            straggler_slowdown: 1.0,
+            dropout_prob: 0.0,
+            comm,
+            comm_rate: 0.9, // the paper's P
+            train: TrainConfig {
+                model: "convnet_t".into(),
+                mode: "efficientgrad".into(),
+                train_examples: 256,
+                test_examples: 64,
+                difficulty: 0.4,
+                ..Default::default()
+            },
+        };
+        let mut leader = Leader::new(rt, manifest, cfg).expect("leader");
+        let summary = leader.run().expect("federated run");
+        leader.shutdown();
 
-    for r in &summary.rounds {
-        let sum = r
-            .worker_transfer
-            .iter()
-            .fold(TransferStats::default(), |acc, &t| acc + t);
-        assert_eq!(r.device_transfer, sum, "round ledger != worker sum");
-        for t in &r.worker_transfer {
-            // resident round: params broadcast up, per-step tails +
-            // one mutable-state sync down — no O(model) per step
-            assert_eq!(t.steps as usize, LOCAL_STEPS);
-            assert_eq!(t.state_up, params_bytes);
-            assert_eq!(
-                t.state_down,
-                LOCAL_STEPS as u64 * tail + probe.mutable_state_bytes()
-            );
+        for r in &summary.rounds {
+            let sum = r
+                .worker_transfer
+                .iter()
+                .fold(TransferStats::default(), |acc, &t| acc + t);
+            assert_eq!(r.device_transfer, sum, "round ledger != worker sum");
+            for t in &r.worker_transfer {
+                // resident round: params broadcast up, per-step tails +
+                // one mutable-state sync down — no O(model) per step,
+                // and independent of the comm mode
+                assert_eq!(t.steps as usize, LOCAL_STEPS);
+                assert_eq!(t.state_up, params_bytes);
+                assert_eq!(
+                    t.state_down,
+                    LOCAL_STEPS as u64 * tail + probe.mutable_state_bytes()
+                );
+            }
+            // measured wire bytes == the documented formulas
+            match comm {
+                CommMode::Dense => {
+                    assert_eq!(r.upload_bytes, params_bytes * WORKERS as u64);
+                    assert_eq!(r.download_bytes, params_bytes * WORKERS as u64);
+                }
+                CommMode::Pruned => {
+                    assert_eq!(
+                        r.upload_bytes,
+                        sparse_model_bytes(r.uplink_survivors, WORKERS as u64 * n_tensors),
+                        "pruned uplink bytes != formula (round {})",
+                        r.round
+                    );
+                    if r.round > 0 {
+                        assert_eq!(
+                            r.download_bytes,
+                            sparse_model_bytes(
+                                r.downlink_survivors,
+                                WORKERS as u64 * n_tensors
+                            ),
+                            "pruned downlink bytes != formula (round {})",
+                            r.round
+                        );
+                    } else {
+                        // round 0 broadcasts dense snapshots by design
+                        assert_eq!(r.download_bytes, params_bytes * WORKERS as u64);
+                    }
+                }
+                CommMode::Sign => {
+                    let (lo, hi) =
+                        sign_model_bytes_envelope(probe.params.iter().map(|t| t.len()));
+                    let (lo, hi) = (lo * WORKERS as u64, hi * WORKERS as u64);
+                    assert!(
+                        (lo..=hi).contains(&r.upload_bytes),
+                        "sign uplink {} outside formula envelope [{lo}, {hi}]",
+                        r.upload_bytes
+                    );
+                }
+            }
+            if r.round > 0 {
+                steady_net[mode_idx] += r.network_bytes();
+            }
+            rep.row(vec![
+                format!(
+                    "federated r{} [{}]: {} workers x {} steps",
+                    r.round,
+                    comm.as_str(),
+                    WORKERS,
+                    LOCAL_STEPS
+                ),
+                format!("{:.2} s", r.wall_secs),
+                "-".into(),
+                "-".into(),
+                format!("net {} B", r.network_bytes()),
+                format!("{}/round", r.device_bytes()),
+            ]);
         }
-        rep.row(vec![
-            format!(
-                "federated r{}: {} workers x {} steps (resident)",
-                r.round, WORKERS, LOCAL_STEPS
-            ),
-            format!("{:.2} s", r.wall_secs),
-            "-".into(),
-            "-".into(),
-            "-".into(),
-            format!("{}/round", r.device_bytes()),
-        ]);
+        let t = summary.total_device_transfer;
+        println!(
+            "federated [{}]: {} rounds moved {:.1} KB over the wire \
+             ({:.1} KB state + {:.1} KB metrics over the device bus)",
+            comm.as_str(),
+            summary.rounds.len(),
+            (summary.total_upload_bytes + summary.total_download_bytes) as f64 / 1e3,
+            (t.state_up + t.state_down) as f64 / 1e3,
+            t.metrics_down as f64 / 1e3,
+        );
     }
-    let t = summary.total_device_transfer;
+
+    // the headline cuts at P=0.9, steady state
+    let [dense, pruned, sign] = steady_net;
     println!(
-        "federated: {} rounds moved {:.1} KB state + {:.1} KB metrics over the device bus",
-        summary.rounds.len(),
-        (t.state_up + t.state_down) as f64 / 1e3,
-        t.metrics_down as f64 / 1e3,
+        "steady-state net bytes/2 rounds: dense {dense}, pruned {pruned} ({:.2}x), \
+         sign {sign} ({:.1}x)",
+        dense as f64 / pruned as f64,
+        dense as f64 / sign as f64,
+    );
+    assert!(
+        pruned < dense,
+        "pruned comm did not cut wire bytes: {pruned} vs dense {dense}"
+    );
+    assert!(
+        sign * 5 <= dense,
+        "sign comm missed the 5x wire cut: {sign} vs dense {dense}"
     );
 }

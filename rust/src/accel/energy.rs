@@ -60,6 +60,65 @@ impl EnergyTable {
     }
 }
 
+impl EnergyTable {
+    /// Simulated Joules for `bytes` of *measured* host↔device traffic at
+    /// this table's DRAM energy point (per 2-byte word, like every other
+    /// DRAM entry). This is the bridge from the runtime's
+    /// [`crate::runtime::TransferStats`] ledger to the energy model: the
+    /// federated layer feeds the bytes it actually moved
+    /// ([`crate::coordinator::RoundReport::device_joules`]) instead of an
+    /// analytic byte estimate.
+    ///
+    /// ```
+    /// use efficientgrad::accel::energy::EnergyTable;
+    /// let t = EnergyTable::smic14();
+    /// // 1 MB of measured bus traffic = 500k words at dram_pj each
+    /// let j = t.bus_joules(1_000_000);
+    /// assert!((j - 500_000.0 * t.dram_pj * 1e-12).abs() < 1e-18);
+    /// assert_eq!(t.bus_joules(0), 0.0);
+    /// ```
+    pub fn bus_joules(&self, bytes: u64) -> f64 {
+        (bytes as f64 / 2.0) * self.dram_pj * 1e-12
+    }
+}
+
+/// Energy cost of the federated *network* link (leader↔worker radio),
+/// per byte. Orthogonal to [`EnergyTable`], which models the on-chip /
+/// DRAM hierarchy: shipping a byte off the device over Wi-Fi-class radio
+/// costs ~2 orders of magnitude more than a DRAM access — which is why
+/// compressing the model exchange (`comm = pruned|sign`) moves the
+/// fleet-energy needle more than any on-device optimization once the
+/// bus is quiet.
+#[derive(Clone, Copy, Debug)]
+pub struct LinkEnergy {
+    /// radio energy per byte shipped (either direction), in pJ
+    pub pj_per_byte: f64,
+}
+
+impl LinkEnergy {
+    /// Wi-Fi-class edge radio: ≈5 nJ/bit = 40 nJ/byte, the order of
+    /// magnitude 802.11n measurements report for transmit+receive energy
+    /// at edge power points.
+    pub fn wifi() -> Self {
+        Self {
+            pj_per_byte: 40_000.0,
+        }
+    }
+
+    /// Joules to move `bytes` over this link.
+    ///
+    /// ```
+    /// use efficientgrad::accel::energy::LinkEnergy;
+    /// let l = LinkEnergy::wifi();
+    /// // a dense convnet_s round: ~170 KB each way per worker
+    /// let j = l.joules(2 * 170_000);
+    /// assert!((j - 0.0136).abs() < 1e-6);
+    /// ```
+    pub fn joules(&self, bytes: u64) -> f64 {
+        self.pj_per_byte * bytes as f64 * 1e-12
+    }
+}
+
 /// Energy tally per component (pJ).
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct EnergyBreakdown {
@@ -115,6 +174,18 @@ mod tests {
         let old = EnergyTable::tsmc65();
         assert!(new.mac_pj < old.mac_pj);
         assert_eq!(new.dram_pj, old.dram_pj); // off-chip unscaled
+    }
+
+    #[test]
+    fn network_dwarfs_bus_per_byte() {
+        // the comm-compression motivation: a radio byte costs ~2 orders
+        // of magnitude more than a DRAM word access
+        let t = EnergyTable::smic14();
+        let l = LinkEnergy::wifi();
+        assert!(l.joules(1) / t.bus_joules(1) > 100.0);
+        // both scale linearly
+        assert!((l.joules(10) - 10.0 * l.joules(1)).abs() < 1e-18);
+        assert!((t.bus_joules(10) - 10.0 * t.bus_joules(1)).abs() < 1e-18);
     }
 
     #[test]

@@ -26,7 +26,7 @@ pub mod sim;
 pub mod workload;
 
 pub use config::AccelConfig;
-pub use energy::{EnergyBreakdown, EnergyTable};
+pub use energy::{EnergyBreakdown, EnergyTable, LinkEnergy};
 pub use report::{compare, ComparisonRow};
 pub use sim::{simulate_training, PhaseCost, SimResult, TrainingPhase};
 pub use workload::{resnet18_cifar, Workload};

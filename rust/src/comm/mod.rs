@@ -1,0 +1,39 @@
+//! Federated communication: pruned, sign-compressed model deltas.
+//!
+//! PRs 1–2 reduced the host↔device bus to scalars per step; after that,
+//! the dominant byte mover in the federated deployment is the *network*
+//! tier — the per-round exchange of dense fp32 models between leader and
+//! workers. This module applies the paper's own compression math to that
+//! exchange:
+//!
+//! * Workers ship **deltas** (`local − broadcast`), not snapshots.
+//! * Deltas are pruned with eq. 3 (`sparsity::stochastic_prune_into`,
+//!   τ from eq. 5 at the tensor's measured σ) under an **error-feedback
+//!   residual** ([`DeltaCodec`]) so pruned mass is carried into the next
+//!   round instead of lost — the compressed run tracks the dense run's
+//!   accuracy.
+//! * Survivors travel in a compact wire format ([`wire`]): u32 indices +
+//!   f32 values (`pruned`), or — mirroring the paper's sign-symmetric
+//!   trick — a presence bitmap + one sign bit per survivor + a shared
+//!   per-tensor magnitude (`sign`), which is where the ≥10× cut lives.
+//! * The leader never materializes per-worker dense tensors: FedAvg
+//!   grows a sparse-accumulate path
+//!   ([`crate::coordinator::weighted_sparse_fedavg`] over
+//!   [`crate::tensor::Tensor::axpy_sparse`]) folding each delta into the
+//!   global params in O(nnz), and the downlink broadcasts the global
+//!   delta through the same codec. The first round — and any worker that
+//!   missed a downlink — falls back to a dense snapshot.
+//!
+//! The motivation tracks the sparse-feedback / local-learning line
+//! (Crafton et al., arXiv:1903.02083) and communication-bound edge-
+//! cluster training (Rama et al., arXiv:2409.09083): both identify the
+//! dense update exchange as the scaling bottleneck. Byte formulas are
+//! normative in `docs/TRANSFER_MODEL.md` §Network tier, doc-tested in
+//! [`wire`], and asserted against the measured per-round ledger by
+//! `cargo bench --bench runtime_hotpath` and `--bench comm_bytes`.
+
+pub mod codec;
+pub mod wire;
+
+pub use codec::DeltaCodec;
+pub use wire::{ModelUpdate, SignTensor, SparseTensor, TensorUpdate};

@@ -1,0 +1,479 @@
+//! Wire formats for federated model exchange.
+//!
+//! Three encodings, one per [`crate::config::CommMode`]:
+//!
+//! * **dense** — the legacy format: every f32 of every param tensor,
+//!   `4·P` bytes. No header (matches the pre-comm accounting exactly).
+//! * **sparse** — pruned-delta survivors as `u32` element offsets +
+//!   `f32` values: `8 + 8·nnz` bytes per tensor.
+//! * **sign** — the paper's sign-symmetric trick applied to the wire:
+//!   a presence bitmap over all elements (1 bit each), one sign bit per
+//!   survivor, and a single shared per-tensor magnitude:
+//!   `12 + 4·⌈E/32⌉ + 4·⌈nnz/32⌉` bytes per tensor. This is the format
+//!   that survives eq. 3's stochastic promotion: promoted survivors all
+//!   sit at `±τ`, so a shared magnitude loses almost nothing while the
+//!   per-survivor cost drops from 8 bytes to ~1.25 bits + amortized
+//!   bitmap.
+//!
+//! The byte functions below are the *normative* size model
+//! (`docs/TRANSFER_MODEL.md` §Network tier); `wire_bytes()` on the
+//! structs computes sizes through them, so the ledger the federated
+//! leader reports is the documented formula by construction, and the
+//! doc-tests pin the arithmetic.
+//!
+//! Workers are threads in this simulation, so updates travel as these
+//! structs rather than a byte stream — but the bitmaps and sign planes
+//! are genuinely bit-packed (`Vec<u32>` words), and encode/decode are
+//! real, round-trip-tested transforms, so `wire_bytes()` is what a
+//! serialized message would actually cost.
+
+use anyhow::{bail, Result};
+
+use crate::tensor::Tensor;
+
+/// Per-tensor header of the sparse format: element count + nnz (u32 each).
+pub const SPARSE_TENSOR_HEADER_BYTES: u64 = 8;
+
+/// Per-tensor header of the sign format: element count + nnz (u32 each)
+/// + the shared f32 magnitude.
+pub const SIGN_TENSOR_HEADER_BYTES: u64 = 12;
+
+/// Wire bytes of one dense f32 tensor: `4·E`.
+///
+/// ```
+/// use efficientgrad::comm::wire::dense_tensor_bytes;
+/// assert_eq!(dense_tensor_bytes(42_000), 168_000);
+/// assert_eq!(dense_tensor_bytes(0), 0);
+/// ```
+pub fn dense_tensor_bytes(elems: usize) -> u64 {
+    4 * elems as u64
+}
+
+/// Wire bytes of one sparse tensor: `8 + 8·nnz` (header + u32 index +
+/// f32 value per survivor).
+///
+/// ```
+/// use efficientgrad::comm::wire::sparse_tensor_bytes;
+/// assert_eq!(sparse_tensor_bytes(0), 8); // header only
+/// assert_eq!(sparse_tensor_bytes(1_000), 8 + 8_000);
+/// ```
+pub fn sparse_tensor_bytes(nnz: usize) -> u64 {
+    SPARSE_TENSOR_HEADER_BYTES + 8 * nnz as u64
+}
+
+/// Wire bytes of one sign-magnitude tensor: `12 + 4·⌈E/32⌉ + 4·⌈nnz/32⌉`
+/// (header, presence bitmap over all `E` elements, one sign bit per
+/// survivor, both bit planes padded to u32 words).
+///
+/// ```
+/// use efficientgrad::comm::wire::{dense_tensor_bytes, sign_tensor_bytes};
+/// assert_eq!(sign_tensor_bytes(64, 0), 12 + 8);
+/// assert_eq!(sign_tensor_bytes(64, 33), 12 + 8 + 8);
+/// // ~42k elements at ~46% survivors (eq. 3 at P=0.9 on N(0,σ) deltas):
+/// // the presence+sign planes cost ~0.18 bytes/element vs 4 dense
+/// let sign = sign_tensor_bytes(42_000, 19_320);
+/// assert!(dense_tensor_bytes(42_000) / sign >= 20);
+/// ```
+pub fn sign_tensor_bytes(elems: usize, nnz: usize) -> u64 {
+    SIGN_TENSOR_HEADER_BYTES + 4 * elems.div_ceil(32) as u64 + 4 * nnz.div_ceil(32) as u64
+}
+
+/// Wire bytes of one sparse-mode model message given its total survivor
+/// count: `8·nnz + n_tensors·8`. The sparse per-tensor cost is linear in
+/// `nnz`, so (unlike sign mode) the model total *is* a function of the
+/// summed survivors — integration tests and benches assert measured
+/// sparse messages against this exactly.
+///
+/// ```
+/// use efficientgrad::comm::wire::{sparse_model_bytes, sparse_tensor_bytes};
+/// assert_eq!(sparse_model_bytes(100, 3),
+///            sparse_tensor_bytes(50) + sparse_tensor_bytes(30) + sparse_tensor_bytes(20));
+/// ```
+pub fn sparse_model_bytes(total_nnz: u64, n_tensors: u64) -> u64 {
+    8 * total_nnz + n_tensors * SPARSE_TENSOR_HEADER_BYTES
+}
+
+/// `[min, max]` wire bytes of one sign-mode model message over tensors
+/// of the given element counts: the empty (nnz = 0 everywhere) and full
+/// (nnz = E everywhere) envelopes of [`sign_tensor_bytes`]. The per-
+/// tensor `⌈nnz/32⌉` padding keeps the exact total from being a function
+/// of the *summed* survivors, so integration tests/benches pin measured
+/// sign messages inside this envelope (the per-tensor formula itself is
+/// pinned exactly by unit tests).
+///
+/// ```
+/// use efficientgrad::comm::wire::{sign_model_bytes_envelope, sign_tensor_bytes};
+/// let (lo, hi) = sign_model_bytes_envelope([64usize, 10].iter().copied());
+/// assert_eq!(lo, sign_tensor_bytes(64, 0) + sign_tensor_bytes(10, 0));
+/// assert_eq!(hi, sign_tensor_bytes(64, 64) + sign_tensor_bytes(10, 10));
+/// ```
+pub fn sign_model_bytes_envelope(tensor_elems: impl Iterator<Item = usize>) -> (u64, u64) {
+    tensor_elems.fold((0, 0), |(lo, hi), e| {
+        (lo + sign_tensor_bytes(e, 0), hi + sign_tensor_bytes(e, e))
+    })
+}
+
+/// Pruned-delta survivors of one tensor: `u32` element offsets (sorted,
+/// ascending — encode walks the buffer in order) + exact `f32` values.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparseTensor {
+    /// element count of the dense tensor this update applies to
+    pub elems: u32,
+    pub indices: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+impl SparseTensor {
+    /// Encode the nonzero coordinates of a (pruned) dense buffer.
+    pub fn encode(pruned: &[f32]) -> Self {
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        for (i, &v) in pruned.iter().enumerate() {
+            if v != 0.0 {
+                indices.push(i as u32);
+                values.push(v);
+            }
+        }
+        Self {
+            elems: pruned.len() as u32,
+            indices,
+            values,
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn wire_bytes(&self) -> u64 {
+        sparse_tensor_bytes(self.nnz())
+    }
+}
+
+/// Sign-magnitude survivors of one tensor: presence bitmap over all
+/// elements, one sign bit per survivor (1 = negative) in survivor order,
+/// and the shared magnitude (mean |value| of the survivors — the L2-best
+/// single scale for the sign plane).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SignTensor {
+    /// element count of the dense tensor this update applies to
+    pub elems: u32,
+    /// survivor count (redundant with the bitmap popcount; shipped so a
+    /// decoder can size buffers before touching the planes)
+    pub nnz: u32,
+    /// presence bitmap, bit `i % 32` of word `i / 32` set iff element
+    /// `i` survived
+    pub presence: Vec<u32>,
+    /// sign bits in survivor order, 1 = negative
+    pub signs: Vec<u32>,
+    /// shared decoded magnitude
+    pub magnitude: f32,
+}
+
+impl SignTensor {
+    /// Encode the nonzero coordinates of a (pruned) dense buffer as
+    /// presence + sign planes with a shared magnitude.
+    pub fn encode(pruned: &[f32]) -> Self {
+        let mut presence = vec![0u32; pruned.len().div_ceil(32)];
+        let mut signs = Vec::new();
+        let mut nnz = 0u32;
+        let mut mag_sum = 0.0f64;
+        for (i, &v) in pruned.iter().enumerate() {
+            if v != 0.0 {
+                presence[i / 32] |= 1 << (i % 32);
+                let j = nnz as usize;
+                if j % 32 == 0 {
+                    signs.push(0);
+                }
+                if v < 0.0 {
+                    signs[j / 32] |= 1 << (j % 32);
+                }
+                nnz += 1;
+                mag_sum += v.abs() as f64;
+            }
+        }
+        let magnitude = if nnz == 0 {
+            0.0
+        } else {
+            (mag_sum / nnz as f64) as f32
+        };
+        Self {
+            elems: pruned.len() as u32,
+            nnz,
+            presence,
+            signs,
+            magnitude,
+        }
+    }
+
+    pub fn wire_bytes(&self) -> u64 {
+        sign_tensor_bytes(self.elems as usize, self.nnz as usize)
+    }
+
+    /// Visit `(element_index, decoded_value)` for every survivor, in
+    /// index order. The decode primitive behind `axpy_into` and the
+    /// codec's residual update.
+    pub fn for_each_survivor(&self, mut f: impl FnMut(usize, f32)) {
+        let mut ordinal = 0usize;
+        for (w, &word) in self.presence.iter().enumerate() {
+            let mut bits = word;
+            while bits != 0 {
+                let b = bits.trailing_zeros() as usize;
+                bits &= bits - 1;
+                let idx = w * 32 + b;
+                let neg = (self.signs[ordinal / 32] >> (ordinal % 32)) & 1 == 1;
+                f(idx, if neg { -self.magnitude } else { self.magnitude });
+                ordinal += 1;
+            }
+        }
+        debug_assert_eq!(ordinal, self.nnz as usize);
+    }
+}
+
+/// One tensor's delta on the wire.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TensorUpdate {
+    Sparse(SparseTensor),
+    Sign(SignTensor),
+}
+
+impl TensorUpdate {
+    /// Element count of the dense tensor this update applies to.
+    pub fn elems(&self) -> usize {
+        match self {
+            TensorUpdate::Sparse(t) => t.elems as usize,
+            TensorUpdate::Sign(t) => t.elems as usize,
+        }
+    }
+
+    /// Survivor (nonzero) count.
+    pub fn survivors(&self) -> usize {
+        match self {
+            TensorUpdate::Sparse(t) => t.nnz(),
+            TensorUpdate::Sign(t) => t.nnz as usize,
+        }
+    }
+
+    pub fn wire_bytes(&self) -> u64 {
+        match self {
+            TensorUpdate::Sparse(t) => t.wire_bytes(),
+            TensorUpdate::Sign(t) => t.wire_bytes(),
+        }
+    }
+
+    /// `dst += alpha · decode(self)` in O(nnz) — the FedAvg accumulation
+    /// primitive. Panics (via [`Tensor::axpy_sparse`] / indexing) if the
+    /// update addresses elements outside `dst`.
+    pub fn axpy_into(&self, alpha: f32, dst: &mut Tensor) {
+        assert_eq!(
+            self.elems(),
+            dst.len(),
+            "update for {} elements applied to tensor of {}",
+            self.elems(),
+            dst.len()
+        );
+        match self {
+            TensorUpdate::Sparse(t) => dst.axpy_sparse(alpha, &t.indices, &t.values),
+            TensorUpdate::Sign(t) => {
+                let data = dst.data_mut();
+                t.for_each_survivor(|i, v| data[i] += alpha * v);
+            }
+        }
+    }
+
+    /// Decode to a dense buffer (tests / residual bookkeeping).
+    pub fn decode_dense(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.elems()];
+        match self {
+            TensorUpdate::Sparse(t) => {
+                for (&i, &v) in t.indices.iter().zip(&t.values) {
+                    out[i as usize] = v;
+                }
+            }
+            TensorUpdate::Sign(t) => t.for_each_survivor(|i, v| out[i] = v),
+        }
+        out
+    }
+}
+
+/// One full model exchange (uplink or downlink).
+#[derive(Clone, Debug, PartialEq)]
+pub enum ModelUpdate {
+    /// Full parameter snapshot — the legacy format, still used by
+    /// `comm = dense`, by the first round of every compressed run, and to
+    /// resync a worker that missed a downlink.
+    Dense(Vec<Tensor>),
+    /// Pruned delta, one [`TensorUpdate`] per param tensor in store order.
+    Delta(Vec<TensorUpdate>),
+}
+
+impl ModelUpdate {
+    /// Bytes this message occupies on the wire (normative formulas above;
+    /// the dense variant is headerless `4·P`, matching the pre-comm
+    /// network accounting bit for bit).
+    pub fn wire_bytes(&self) -> u64 {
+        match self {
+            ModelUpdate::Dense(ts) => ts.iter().map(|t| dense_tensor_bytes(t.len())).sum(),
+            ModelUpdate::Delta(us) => us.iter().map(TensorUpdate::wire_bytes).sum(),
+        }
+    }
+
+    /// Total survivors across tensors (0 for the dense variant — every
+    /// element travels, "survivor" is a delta-format notion).
+    pub fn survivors(&self) -> u64 {
+        match self {
+            ModelUpdate::Dense(_) => 0,
+            ModelUpdate::Delta(us) => us.iter().map(|u| u.survivors() as u64).sum(),
+        }
+    }
+
+    /// True for the dense-snapshot variant.
+    pub fn is_dense(&self) -> bool {
+        matches!(self, ModelUpdate::Dense(_))
+    }
+
+    /// Materialize this update into `params`: a dense snapshot replaces
+    /// them (an empty `params` bootstraps from any snapshot), a delta
+    /// accumulates into them (`alpha = 1`). Leader and workers apply
+    /// every *delta* downlink through this one function, which is what
+    /// keeps their reference replicas bit-identical; dense snapshots may
+    /// also move directly into a replica (the worker's dense-mode path
+    /// does, to skip the clone) — replacement has no float math, so the
+    /// lockstep guarantee is unaffected.
+    pub fn apply(&self, params: &mut Vec<Tensor>) -> Result<()> {
+        match self {
+            ModelUpdate::Dense(ts) => {
+                if !params.is_empty() && params.len() != ts.len() {
+                    bail!("dense update has {} tensors, store {}", ts.len(), params.len());
+                }
+                *params = ts.clone();
+            }
+            ModelUpdate::Delta(us) => {
+                if params.len() != us.len() {
+                    bail!("delta update has {} tensors, store {}", us.len(), params.len());
+                }
+                // validate everything before mutating anything: a
+                // half-applied delta would silently desync this replica
+                // from its peer
+                for (u, p) in us.iter().zip(params.iter()) {
+                    if u.elems() != p.len() {
+                        bail!("delta tensor sized {} applied to {}", u.elems(), p.len());
+                    }
+                }
+                for (u, p) in us.iter().zip(params.iter_mut()) {
+                    u.axpy_into(1.0, p);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sparse_encode_decode_roundtrip() {
+        let pruned = [0.0f32, 1.5, 0.0, -2.0, 0.0, 0.25];
+        let t = SparseTensor::encode(&pruned);
+        assert_eq!(t.nnz(), 3);
+        assert_eq!(t.indices, vec![1, 3, 5]);
+        assert_eq!(t.wire_bytes(), sparse_tensor_bytes(3));
+        let u = TensorUpdate::Sparse(t);
+        assert_eq!(u.decode_dense(), pruned.to_vec());
+    }
+
+    #[test]
+    fn sign_encode_preserves_support_and_signs() {
+        let pruned = [0.0f32, 2.0, 0.0, -2.0, 2.0];
+        let t = SignTensor::encode(&pruned);
+        assert_eq!(t.nnz, 3);
+        assert_eq!(t.magnitude, 2.0);
+        let decoded = TensorUpdate::Sign(t).decode_dense();
+        assert_eq!(decoded, pruned.to_vec()); // equal magnitudes: exact
+    }
+
+    #[test]
+    fn sign_shared_magnitude_is_mean_abs() {
+        let pruned = [1.0f32, -3.0, 0.0];
+        let t = SignTensor::encode(&pruned);
+        assert_eq!(t.magnitude, 2.0);
+        let decoded = TensorUpdate::Sign(t).decode_dense();
+        assert_eq!(decoded, vec![2.0, -2.0, 0.0]);
+    }
+
+    #[test]
+    fn sign_bit_planes_cross_word_boundaries() {
+        // 70 elements, all surviving, alternating signs: exercises both
+        // planes past one u32 word
+        let pruned: Vec<f32> = (0..70)
+            .map(|i| if i % 2 == 0 { 1.0 } else { -1.0 })
+            .collect();
+        let t = SignTensor::encode(&pruned);
+        assert_eq!(t.nnz, 70);
+        assert_eq!(t.presence.len(), 3);
+        assert_eq!(t.signs.len(), 3);
+        assert_eq!(t.wire_bytes(), sign_tensor_bytes(70, 70));
+        assert_eq!(TensorUpdate::Sign(t).decode_dense(), pruned);
+    }
+
+    #[test]
+    fn empty_and_full_sparsity_edges() {
+        // all-zero buffer: headers only, decode is all zeros
+        let z = [0.0f32; 40];
+        let s = SparseTensor::encode(&z);
+        assert_eq!(s.nnz(), 0);
+        assert_eq!(s.wire_bytes(), SPARSE_TENSOR_HEADER_BYTES);
+        let g = SignTensor::encode(&z);
+        assert_eq!(g.nnz, 0);
+        assert_eq!(g.magnitude, 0.0);
+        assert_eq!(TensorUpdate::Sign(g).decode_dense(), z.to_vec());
+        // zero-length tensor
+        let e = SparseTensor::encode(&[]);
+        assert_eq!(e.elems, 0);
+        assert_eq!(TensorUpdate::Sparse(e).decode_dense(), Vec::<f32>::new());
+    }
+
+    #[test]
+    fn axpy_into_accumulates_weighted() {
+        let mut dst = Tensor::ones(&[4]);
+        let u = TensorUpdate::Sparse(SparseTensor::encode(&[0.0, 2.0, 0.0, -4.0]));
+        u.axpy_into(0.5, &mut dst);
+        assert_eq!(dst.data(), &[1.0, 2.0, 1.0, -1.0]);
+    }
+
+    #[test]
+    fn model_update_apply_dense_and_delta() {
+        let mut params = vec![Tensor::zeros(&[3])];
+        let dense = ModelUpdate::Dense(vec![Tensor::full(&[3], 2.0)]);
+        dense.apply(&mut params).unwrap();
+        assert_eq!(params[0].data(), &[2.0, 2.0, 2.0]);
+        let delta =
+            ModelUpdate::Delta(vec![TensorUpdate::Sparse(SparseTensor::encode(&[0.0, 1.0, 0.0]))]);
+        delta.apply(&mut params).unwrap();
+        assert_eq!(params[0].data(), &[2.0, 3.0, 2.0]);
+        // shape mismatch is an error, not corruption
+        let bad = ModelUpdate::Delta(vec![TensorUpdate::Sparse(SparseTensor::encode(&[0.0]))]);
+        assert!(bad.apply(&mut params).is_err());
+        let bad_count = ModelUpdate::Delta(vec![]);
+        assert!(bad_count.apply(&mut params).is_err());
+    }
+
+    #[test]
+    fn wire_bytes_match_documented_formulas() {
+        let dense = ModelUpdate::Dense(vec![Tensor::zeros(&[10]), Tensor::zeros(&[5])]);
+        assert_eq!(dense.wire_bytes(), 4 * 15);
+        assert_eq!(dense.survivors(), 0);
+        let pruned = [1.0f32, 0.0, -1.0, 0.0, 0.0];
+        let delta = ModelUpdate::Delta(vec![
+            TensorUpdate::Sparse(SparseTensor::encode(&pruned)),
+            TensorUpdate::Sign(SignTensor::encode(&pruned)),
+        ]);
+        assert_eq!(
+            delta.wire_bytes(),
+            sparse_tensor_bytes(2) + sign_tensor_bytes(5, 2)
+        );
+        assert_eq!(delta.survivors(), 4);
+    }
+}

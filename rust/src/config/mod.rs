@@ -206,6 +206,41 @@ impl ResidencyMode {
     }
 }
 
+/// Federated network-tier encoding (see `comm` and
+/// `docs/TRANSFER_MODEL.md` §Network tier).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum CommMode {
+    /// Legacy dense fp32 snapshots both directions — bit-for-bit the
+    /// pre-comm exchange, and the accuracy/byte baseline.
+    #[default]
+    Dense,
+    /// Pruned deltas (eq. 3 + error feedback) as u32 indices + f32
+    /// values.
+    Pruned,
+    /// Pruned deltas as presence bitmap + sign bits + shared per-tensor
+    /// magnitude — the paper's sign-symmetric trick on the wire.
+    Sign,
+}
+
+impl CommMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "dense" => Ok(Self::Dense),
+            "pruned" | "sparse" => Ok(Self::Pruned),
+            "sign" => Ok(Self::Sign),
+            other => bail!("unknown comm mode {other:?} (want dense|pruned|sign)"),
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Self::Dense => "dense",
+            Self::Pruned => "pruned",
+            Self::Sign => "sign",
+        }
+    }
+}
+
 /// Training hyperparameters (defaults match the paper's CIFAR recipe,
 /// scaled to the synthetic workload).
 #[derive(Clone, Debug)]
@@ -310,6 +345,15 @@ pub struct FedConfig {
     pub straggler_prob: f64,
     /// simulated straggler slowdown factor
     pub straggler_slowdown: f64,
+    /// probability a worker is unreachable for a whole round (misses the
+    /// downlink and ships nothing; the leader re-weights FedAvg over the
+    /// rest and resyncs it with a dense snapshot next round)
+    pub dropout_prob: f64,
+    /// network-tier encoding (`federated.comm` / `--comm`)
+    pub comm: CommMode,
+    /// pruning rate for the compressed comm modes (`federated.comm_rate`
+    /// / `--comm-rate`); ignored by `comm = dense`
+    pub comm_rate: f64,
     pub train: TrainConfig,
 }
 
@@ -322,6 +366,11 @@ impl Default for FedConfig {
             iid: true,
             straggler_prob: 0.0,
             straggler_slowdown: 3.0,
+            dropout_prob: 0.0,
+            comm: CommMode::default(),
+            // the paper's P: comm pruning defaults to the same operating
+            // point as the gradient pruning
+            comm_rate: 0.9,
             train: TrainConfig::default(),
         }
     }
@@ -330,15 +379,38 @@ impl Default for FedConfig {
 impl FedConfig {
     pub fn from_table(t: &Table) -> Result<Self> {
         let d = Self::default();
-        Ok(Self {
+        let cfg = Self {
             workers: t.usize_or("federated.workers", d.workers),
             rounds: t.usize_or("federated.rounds", d.rounds),
             local_steps: t.usize_or("federated.local_steps", d.local_steps),
             iid: t.bool_or("federated.iid", d.iid),
             straggler_prob: t.f64_or("federated.straggler_prob", d.straggler_prob),
             straggler_slowdown: t.f64_or("federated.straggler_slowdown", d.straggler_slowdown),
+            dropout_prob: t.f64_or("federated.dropout_prob", d.dropout_prob),
+            comm: t
+                .get("federated.comm")
+                .and_then(Value::as_str)
+                .map(CommMode::parse)
+                .transpose()
+                .context("federated.comm")?
+                .unwrap_or(d.comm),
+            comm_rate: t.f64_or("federated.comm_rate", d.comm_rate),
             train: TrainConfig::from_table(t)?,
-        })
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Range checks shared by every entry point (config file, CLI
+    /// overrides, examples, `Leader::new`) — one normative copy.
+    pub fn validate(&self) -> Result<()> {
+        if !(0.0..1.0).contains(&self.comm_rate) {
+            bail!("comm_rate {} outside [0, 1)", self.comm_rate);
+        }
+        if !(0.0..=1.0).contains(&self.dropout_prob) {
+            bail!("dropout_prob {} outside [0, 1]", self.dropout_prob);
+        }
+        Ok(())
     }
 }
 
@@ -436,6 +508,32 @@ mod tests {
         // fully unset: both default resident
         let c = TrainConfig::from_table(&Table::default()).unwrap();
         assert_eq!(c.eval_residency, ResidencyMode::Resident);
+    }
+
+    #[test]
+    fn comm_mode_parsing_and_defaults() {
+        assert_eq!(CommMode::parse("dense").unwrap(), CommMode::Dense);
+        assert_eq!(CommMode::parse("pruned").unwrap(), CommMode::Pruned);
+        assert_eq!(CommMode::parse("sparse").unwrap(), CommMode::Pruned);
+        assert_eq!(CommMode::parse("sign").unwrap(), CommMode::Sign);
+        assert!(CommMode::parse("morse").is_err());
+        // unset: legacy dense exchange at the paper's P
+        let c = FedConfig::from_table(&Table::default()).unwrap();
+        assert_eq!(c.comm, CommMode::Dense);
+        assert_eq!(c.comm_rate, 0.9);
+        assert_eq!(c.dropout_prob, 0.0);
+        let t = Table::parse("[federated]\ncomm = \"sign\"\ncomm_rate = 0.5").unwrap();
+        let c = FedConfig::from_table(&t).unwrap();
+        assert_eq!(c.comm, CommMode::Sign);
+        assert_eq!(c.comm_rate, 0.5);
+        // invalid values error like residency does — a silently wrong
+        // comm mode would invalidate every byte row downstream
+        let t = Table::parse("[federated]\ncomm = \"morse\"").unwrap();
+        assert!(FedConfig::from_table(&t).is_err());
+        let t = Table::parse("[federated]\ncomm_rate = 1.5").unwrap();
+        assert!(FedConfig::from_table(&t).is_err());
+        let t = Table::parse("[federated]\ndropout_prob = -0.1").unwrap();
+        assert!(FedConfig::from_table(&t).is_err());
     }
 
     #[test]

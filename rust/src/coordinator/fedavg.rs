@@ -1,7 +1,15 @@
 //! FedAvg aggregation (McMahan et al. 2017 — the paper's reference [16]).
+//!
+//! Two paths: the dense mean over full parameter snapshots
+//! ([`weighted_fedavg`], the legacy exchange), and the sparse-accumulate
+//! path over pruned wire deltas ([`weighted_sparse_fedavg`]) — the leader
+//! folds each worker's surviving coordinates straight into the global
+//! params in O(nnz) per worker instead of decoding dense per-worker
+//! tensors.
 
 use anyhow::{bail, Result};
 
+use crate::comm::TensorUpdate;
 use crate::tensor::Tensor;
 
 /// Unweighted mean of parameter sets.
@@ -54,6 +62,62 @@ pub fn weighted_fedavg(updates: &[&Vec<Tensor>], weights: &[f64]) -> Result<Vec<
     Ok(out)
 }
 
+/// Delta FedAvg over pruned wire updates:
+/// `global_i = base_i + Σ_k (n_k / n) · decode(Δ_k)_i`.
+///
+/// `base` is the reference the workers trained from (each worker's
+/// `local_k = base + decode(Δ_k)` up to pruning error, which its codec
+/// carries as error-feedback residual), so this is exactly
+/// `Σ_k w_k · local_k` in expectation — the FedAvg semantic carried to
+/// the compressed wire. Cost: one O(P) copy of `base`, then O(nnz) per
+/// worker ([`Tensor::axpy_sparse`] underneath), never O(P·workers).
+///
+/// ```
+/// use efficientgrad::comm::{SparseTensor, TensorUpdate};
+/// use efficientgrad::coordinator::weighted_sparse_fedavg;
+/// use efficientgrad::tensor::Tensor;
+/// let base = vec![Tensor::new(vec![3], vec![1.0, 1.0, 1.0])];
+/// // worker a moved coord 0 by +2, worker b (3x the examples) coord 2 by -4
+/// let a = vec![TensorUpdate::Sparse(SparseTensor::encode(&[2.0, 0.0, 0.0]))];
+/// let b = vec![TensorUpdate::Sparse(SparseTensor::encode(&[0.0, 0.0, -4.0]))];
+/// let g = weighted_sparse_fedavg(&base, &[&a, &b], &[1.0, 3.0]).unwrap();
+/// assert_eq!(g[0].data(), &[1.5, 1.0, -2.0]);
+/// ```
+pub fn weighted_sparse_fedavg(
+    base: &[Tensor],
+    updates: &[&Vec<TensorUpdate>],
+    weights: &[f64],
+) -> Result<Vec<Tensor>> {
+    if updates.is_empty() {
+        bail!("no updates to aggregate");
+    }
+    if updates.len() != weights.len() {
+        bail!("{} updates vs {} weights", updates.len(), weights.len());
+    }
+    let total: f64 = weights.iter().sum();
+    if total <= 0.0 {
+        bail!("non-positive total weight");
+    }
+    let mut out: Vec<Tensor> = base.to_vec();
+    for (k, u) in updates.iter().enumerate() {
+        if u.len() != base.len() {
+            bail!("worker {k} sent {} delta tensors, expected {}", u.len(), base.len());
+        }
+        let alpha = (weights[k] / total) as f32;
+        for (acc, tu) in out.iter_mut().zip(u.iter()) {
+            if tu.elems() != acc.len() {
+                bail!(
+                    "worker {k}: delta sized {} vs tensor {}",
+                    tu.elems(),
+                    acc.len()
+                );
+            }
+            tu.axpy_into(alpha, acc);
+        }
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -91,6 +155,42 @@ mod tests {
         assert!(fedavg(&[&a, &c]).is_err());
         let empty: &[&Vec<Tensor>] = &[];
         assert!(fedavg(empty).is_err());
+    }
+
+    #[test]
+    fn sparse_fedavg_matches_dense_on_equivalent_inputs() {
+        use crate::comm::{SparseTensor, TensorUpdate};
+        // base + Δ_k == the dense snapshots handed to weighted_fedavg:
+        // both paths must agree to f32 rounding
+        let base = vec![t(&[1.0, -2.0, 0.5, 0.0])];
+        let d1 = [0.5f32, 0.0, -0.25, 0.0];
+        let d2 = [0.0f32, 1.0, 0.0, 2.0];
+        let weights = [2.0, 3.0];
+        let dense1 = vec![t(&[1.5, -2.0, 0.25, 0.0])];
+        let dense2 = vec![t(&[1.0, -1.0, 0.5, 2.0])];
+        let want = weighted_fedavg(&[&dense1, &dense2], &weights).unwrap();
+        let u1 = vec![TensorUpdate::Sparse(SparseTensor::encode(&d1))];
+        let u2 = vec![TensorUpdate::Sparse(SparseTensor::encode(&d2))];
+        let got = weighted_sparse_fedavg(&base, &[&u1, &u2], &weights).unwrap();
+        for (a, b) in want[0].data().iter().zip(got[0].data()) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn sparse_fedavg_rejects_mismatches() {
+        use crate::comm::{SparseTensor, TensorUpdate};
+        let base = vec![t(&[0.0, 0.0])];
+        let ok = vec![TensorUpdate::Sparse(SparseTensor::encode(&[1.0, 0.0]))];
+        let wrong_size = vec![TensorUpdate::Sparse(SparseTensor::encode(&[1.0]))];
+        let wrong_count: Vec<TensorUpdate> = vec![];
+        assert!(weighted_sparse_fedavg(&base, &[&ok], &[1.0]).is_ok());
+        assert!(weighted_sparse_fedavg(&base, &[&wrong_size], &[1.0]).is_err());
+        assert!(weighted_sparse_fedavg(&base, &[&wrong_count], &[1.0]).is_err());
+        assert!(weighted_sparse_fedavg(&base, &[&ok], &[]).is_err());
+        assert!(weighted_sparse_fedavg(&base, &[&ok], &[0.0]).is_err());
+        let none: &[&Vec<TensorUpdate>] = &[];
+        assert!(weighted_sparse_fedavg(&base, none, &[]).is_err());
     }
 
     #[test]

@@ -16,15 +16,24 @@
 //! Transfer model: with the default resident step backend
 //! (`runtime::resident`), each worker's host↔device traffic is one
 //! params upload + one params/momenta download *per round*, not per
-//! step; the leader's network accounting (`RoundReport::upload_bytes`)
-//! is unchanged — residency moves bytes off the device bus, the
-//! federated uplink was already per-round. Each round now also carries
-//! the device-bus ledger end-to-end: every worker reports its per-round
-//! [`TransferStats`], the leader sums them next to the FedAvg aggregate
-//! ([`RoundReport::device_transfer`]) and accounts its own eval sweep
-//! ([`RoundReport::leader_eval_transfer`]) — with resident eval the
-//! leader uploads the new global params once per round instead of once
-//! per test batch. Formulas: `docs/TRANSFER_MODEL.md`.
+//! step. Each round carries the device-bus ledger end-to-end: every
+//! worker reports its per-round [`TransferStats`], the leader sums them
+//! next to the FedAvg aggregate ([`RoundReport::device_transfer`]) and
+//! accounts its own eval sweep ([`RoundReport::leader_eval_transfer`]).
+//!
+//! The *network* tier ([`RoundReport::upload_bytes`] /
+//! [`RoundReport::download_bytes`]) is measured from the actual wire
+//! messages ([`crate::comm`]): with `comm = dense` both directions ship
+//! full `4·P` snapshots (the legacy exchange, bit for bit); with
+//! `comm = pruned|sign` workers uplink error-feedback pruned deltas, the
+//! leader folds them into the global params in O(nnz)
+//! ([`weighted_sparse_fedavg`]) and downlinks the global delta through
+//! the same codec — dense snapshots remain only for the first round and
+//! for resyncing workers that missed a downlink. Rounds degrade
+//! gracefully: a worker that goes silent (dropout injection, dispatch
+//! failure, failed step) is recorded in [`RoundReport::dropped`] and
+//! FedAvg re-weights over the reports that did arrive. Formulas:
+//! `docs/TRANSFER_MODEL.md`.
 
 pub mod fedavg;
 pub mod worker;
@@ -34,15 +43,18 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use crate::config::FedConfig;
+use crate::accel::energy::{EnergyTable, LinkEnergy};
+use crate::comm::{DeltaCodec, ModelUpdate, TensorUpdate};
+use crate::config::{CommMode, FedConfig};
 use crate::data::synthetic::{generate, SynthConfig};
 use crate::data::Dataset;
 use crate::manifest::Manifest;
 use crate::params::ParamStore;
 use crate::runtime::{Runtime, TransferStats};
+use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
-pub use fedavg::{fedavg, weighted_fedavg};
+pub use fedavg::{fedavg, weighted_fedavg, weighted_sparse_fedavg};
 pub use worker::{WorkerHandle, WorkerReport, WorkerTask};
 
 /// Outcome of one federated round.
@@ -50,14 +62,29 @@ pub use worker::{WorkerHandle, WorkerReport, WorkerTask};
 pub struct RoundReport {
     /// round index (0-based)
     pub round: usize,
-    /// mean of the workers' mean local-step losses
+    /// mean of the workers' mean local-step losses (0.0 on a round where
+    /// every worker dropped — see `dropped`/`worker_transfer`)
     pub mean_loss: f64,
     /// mean realized gradient sparsity across workers
     pub mean_sparsity: f64,
-    /// bytes shipped up (worker->leader) this round
+    /// measured wire bytes shipped up (worker->leader) this round
     pub upload_bytes: u64,
-    /// bytes broadcast down (leader->worker) this round
+    /// measured wire bytes broadcast down (leader->worker) this round
     pub download_bytes: u64,
+    /// workers the leader dispatched a task to this round
+    pub dispatched: usize,
+    /// worker ids that missed the round (offline at dispatch, dispatch
+    /// failure, or went silent mid-round); FedAvg re-weighted over the
+    /// rest, and offline workers resync from a dense snapshot next round
+    pub dropped: Vec<usize>,
+    /// downlink payloads that were dense snapshots (first round, resync,
+    /// or `comm = dense`); the rest were pruned deltas
+    pub dense_downlinks: usize,
+    /// surviving (nonzero) delta coordinates across all uplink messages
+    /// (0 in dense mode — every element travels)
+    pub uplink_survivors: u64,
+    /// surviving delta coordinates summed across downlink payloads
+    pub downlink_survivors: u64,
     /// global-model accuracy on the leader's test set after aggregation
     pub eval_acc: f64,
     /// leader-measured wall time for the whole round
@@ -78,6 +105,24 @@ impl RoundReport {
     /// Every device-bus byte this round moved, fleet + leader eval.
     pub fn device_bytes(&self) -> u64 {
         self.device_transfer.total_bytes() + self.leader_eval_transfer.total_bytes()
+    }
+
+    /// Every network byte this round moved, both directions.
+    pub fn network_bytes(&self) -> u64 {
+        self.upload_bytes + self.download_bytes
+    }
+
+    /// Simulated Joules of this round's *measured* device-bus traffic at
+    /// `table`'s DRAM energy point — the ledger feeds the energy model,
+    /// not an analytic byte estimate.
+    pub fn device_joules(&self, table: &EnergyTable) -> f64 {
+        table.bus_joules(self.device_bytes())
+    }
+
+    /// Simulated Joules of this round's measured network traffic over
+    /// `link` (reported next to [`RoundReport::device_joules`]).
+    pub fn network_joules(&self, link: &LinkEnergy) -> f64 {
+        link.joules(self.network_bytes())
     }
 }
 
@@ -101,6 +146,21 @@ pub struct FedSummary {
 pub struct Leader {
     cfg: FedConfig,
     global: ParamStore,
+    /// the params every in-sync worker holds — advanced only by applying
+    /// the same downlink updates the workers apply, so leader and worker
+    /// replicas stay bit-identical. Compressed modes only; `dense` ships
+    /// `global.params` snapshots directly.
+    reference: Vec<Tensor>,
+    /// per-worker: has it received every downlink so far? A worker that
+    /// misses one gets a dense snapshot (and is marked in-sync again).
+    in_sync: Vec<bool>,
+    /// the pruned global delta computed at the end of the previous round
+    /// (`None` before round 1: everyone starts from a dense snapshot)
+    pending_down: Option<ModelUpdate>,
+    /// downlink error-feedback codec (compressed modes): since every
+    /// aggregation rebases `global` on `reference`, the codec residual
+    /// is what carries un-shipped downlink mass into the next round
+    down_codec: DeltaCodec,
     workers: Vec<WorkerHandle>,
     test: Dataset,
     eval: crate::runtime::exec::EvalState,
@@ -114,6 +174,7 @@ impl Leader {
         if cfg.workers == 0 {
             bail!("need at least one worker");
         }
+        cfg.validate()?; // programmatic construction gets the same checks
         let model = manifest.model(&cfg.train.model)?.clone();
         let full = generate(&SynthConfig {
             n: cfg.train.train_examples + cfg.train.test_examples,
@@ -138,12 +199,24 @@ impl Leader {
             .into_iter()
             .enumerate()
             .map(|(i, shard)| {
-                WorkerHandle::spawn(i, shard, art.clone(), &model, cfg.train.clone())
+                WorkerHandle::spawn(
+                    i,
+                    shard,
+                    art.clone(),
+                    &model,
+                    cfg.train.clone(),
+                    cfg.comm,
+                    cfg.comm_rate,
+                )
             })
             .collect::<Result<Vec<_>>>()?;
 
         let global = ParamStore::init(&model, cfg.train.seed);
         Ok(Self {
+            reference: global.params.clone(),
+            in_sync: vec![false; cfg.workers],
+            pending_down: None,
+            down_codec: DeltaCodec::new(cfg.comm, cfg.comm_rate),
             cfg,
             global,
             workers,
@@ -153,56 +226,147 @@ impl Leader {
         })
     }
 
-    /// Bytes of one model broadcast (params only; momenta stay local,
-    /// feedback B is derived from the shared seed — a real EfficientGrad
-    /// deployment never ships B).
-    fn model_bytes(&self) -> u64 {
-        (self.global.param_elements() * 4) as u64
+    /// The aggregated global parameters (current as of the last round).
+    pub fn global_params(&self) -> &[Tensor] {
+        &self.global.params
     }
 
     /// Run all rounds.
     pub fn run(&mut self) -> Result<FedSummary> {
         let mut rounds = Vec::with_capacity(self.cfg.rounds);
         let mut straggler_rng = Rng::new(self.cfg.train.seed ^ 0x57AA);
+        let mut dropout_rng = Rng::new(self.cfg.train.seed ^ 0xD50F);
+        let mut downlink_rng = Rng::new(self.cfg.train.seed ^ 0xD0C0DE);
+        let energy = EnergyTable::smic14();
+        let link = LinkEnergy::wifi();
         for round in 0..self.cfg.rounds {
             let t0 = Instant::now();
-            // broadcast current global params
+            // broadcast: dense snapshots in dense mode; the pending
+            // global delta to in-sync workers otherwise (dense fallback
+            // for round 0 and resyncs)
             let (tx, rx) = mpsc::channel::<WorkerReport>();
-            let mut dispatched = 0usize;
+            let mut dispatched_ids = Vec::with_capacity(self.workers.len());
+            let mut dropped = Vec::new();
+            let mut download_bytes = 0u64;
+            let mut downlink_survivors = 0u64;
+            let mut dense_downlinks = 0usize;
             for w in &self.workers {
+                if dropout_rng.uniform() < self.cfg.dropout_prob {
+                    // unreachable this round: misses the downlink, ships
+                    // nothing — resync with a dense snapshot next round
+                    dropped.push(w.id);
+                    self.in_sync[w.id] = false;
+                    continue;
+                }
                 let slowdown = if straggler_rng.uniform() < self.cfg.straggler_prob {
                     self.cfg.straggler_slowdown
                 } else {
                     1.0
                 };
-                w.submit(WorkerTask {
+                let payload = if self.cfg.comm == CommMode::Dense {
+                    ModelUpdate::Dense(self.global.params.clone())
+                } else if self.in_sync[w.id] && self.pending_down.is_some() {
+                    self.pending_down.as_ref().unwrap().clone()
+                } else {
+                    self.in_sync[w.id] = true;
+                    ModelUpdate::Dense(self.reference.clone())
+                };
+                let (wire, survivors, is_dense) =
+                    (payload.wire_bytes(), payload.survivors(), payload.is_dense());
+                match w.submit(WorkerTask {
                     round,
-                    params: self.global.params.clone(),
+                    payload,
                     local_steps: self.cfg.local_steps,
                     slowdown,
                     reply: tx.clone(),
-                })?;
-                dispatched += 1;
+                }) {
+                    Ok(()) => {
+                        // ledger counts delivered messages only — a
+                        // dispatch failure ships nothing
+                        dispatched_ids.push(w.id);
+                        download_bytes += wire;
+                        downlink_survivors += survivors;
+                        if is_dense {
+                            dense_downlinks += 1;
+                        }
+                    }
+                    Err(e) => {
+                        log::warn!("round {round}: worker {} unreachable: {e:#}", w.id);
+                        dropped.push(w.id);
+                        self.in_sync[w.id] = false;
+                    }
+                }
             }
             drop(tx);
 
-            // gather
-            let mut reports = Vec::with_capacity(dispatched);
-            for _ in 0..dispatched {
-                reports.push(rx.recv().context("worker died mid-round")?);
-            }
+            // gather whatever arrives: a worker that fails its round
+            // drops its reply sender without sending, so the channel
+            // closes once every dispatched task is resolved
+            let mut reports: Vec<WorkerReport> = rx.iter().collect();
             reports.sort_by_key(|r| r.worker_id);
+            for &id in &dispatched_ids {
+                if !reports.iter().any(|r| r.worker_id == id) {
+                    // went silent mid-round. Usually a failed step/sync
+                    // (downlink already applied), but the failure may
+                    // also have been in the apply itself — we cannot
+                    // tell from here, so treat its replica as suspect
+                    // and resync it with a dense snapshot next round
+                    dropped.push(id);
+                    self.in_sync[id] = false;
+                }
+            }
+            dropped.sort_unstable();
+            if reports.is_empty() {
+                // a fleet-wide outage round: nothing to aggregate, the
+                // global model stands, and the dropout record tells the
+                // story — a long-running deployment must not die to it
+                log::warn!(
+                    "round {round}: every worker missed the round ({} dropped)",
+                    dropped.len()
+                );
+            }
 
-            // aggregate (examples-weighted FedAvg)
+            // aggregate (examples-weighted FedAvg over the survivors)
             let weights: Vec<f64> = reports.iter().map(|r| r.examples as f64).collect();
-            let updates: Vec<&Vec<crate::tensor::Tensor>> =
-                reports.iter().map(|r| &r.params).collect();
-            self.global.params = weighted_fedavg(&updates, &weights)?;
+            let upload_bytes: u64 = reports.iter().map(|r| r.update.wire_bytes()).sum();
+            let uplink_survivors: u64 = reports.iter().map(|r| r.update.survivors()).sum();
+            if !reports.is_empty() {
+                match self.cfg.comm {
+                    CommMode::Dense => {
+                        let updates = reports
+                            .iter()
+                            .map(|r| match &r.update {
+                                ModelUpdate::Dense(p) => Ok(p),
+                                ModelUpdate::Delta(_) => {
+                                    bail!("worker {} sent a delta in dense mode", r.worker_id)
+                                }
+                            })
+                            .collect::<Result<Vec<&Vec<Tensor>>>>()?;
+                        self.global.params = weighted_fedavg(&updates, &weights)?;
+                    }
+                    _ => {
+                        let updates = reports
+                            .iter()
+                            .map(|r| match &r.update {
+                                ModelUpdate::Delta(u) => Ok(u),
+                                ModelUpdate::Dense(_) => {
+                                    bail!("worker {} sent dense params in delta mode", r.worker_id)
+                                }
+                            })
+                            .collect::<Result<Vec<&Vec<TensorUpdate>>>>()?;
+                        // O(nnz) per worker on top of the reference copy
+                        // — the leader never materializes dense
+                        // per-worker tensors
+                        self.global.params =
+                            weighted_sparse_fedavg(&self.reference, &updates, &weights)?;
+                    }
+                }
+            }
 
-            let mean_loss = reports.iter().map(|r| r.mean_loss).sum::<f64>()
-                / reports.len() as f64;
-            let mean_sparsity = reports.iter().map(|r| r.mean_sparsity).sum::<f64>()
-                / reports.len() as f64;
+            let n_reports = reports.len().max(1) as f64;
+            let mean_loss = reports.iter().map(|r| r.mean_loss).sum::<f64>() / n_reports;
+            let mean_sparsity =
+                reports.iter().map(|r| r.mean_sparsity).sum::<f64>() / n_reports;
             // per-worker device-bus ledgers, aggregated like the params
             let worker_transfer: Vec<TransferStats> =
                 reports.iter().map(|r| r.transfer).collect();
@@ -212,12 +376,37 @@ impl Leader {
             self.eval.reset_transfer_stats();
             let eval_acc = self.evaluate()?;
             let leader_eval_transfer = self.eval.transfer_stats();
+
+            // next round's downlink: the global delta vs the workers'
+            // reference, through the same error-feedback codec as the
+            // uplink; the leader advances its reference replica by the
+            // *decoded* update, exactly like the workers will. The
+            // carried residual is load-bearing: aggregation *rebases*
+            // `global` on `reference` every round, so any downlink mass
+            // the codec failed to deliver would otherwise vanish from
+            // all state — the residual is the only thing that re-feeds
+            // it into the next round's delta
+            if self.cfg.comm != CommMode::Dense {
+                let update = self.down_codec.encode(
+                    &self.global.params,
+                    &self.reference,
+                    &mut downlink_rng,
+                )?;
+                update.apply(&mut self.reference)?;
+                self.pending_down = Some(update);
+            }
+
             let report = RoundReport {
                 round,
                 mean_loss,
                 mean_sparsity,
-                upload_bytes: self.model_bytes() * dispatched as u64,
-                download_bytes: self.model_bytes() * dispatched as u64,
+                upload_bytes,
+                download_bytes,
+                dispatched: dispatched_ids.len(),
+                dropped,
+                dense_downlinks,
+                uplink_survivors,
+                downlink_survivors,
                 eval_acc,
                 wall_secs: t0.elapsed().as_secs_f64(),
                 worker_secs: reports.iter().map(|r| r.sim_secs).collect(),
@@ -227,8 +416,12 @@ impl Leader {
             };
             log::info!(
                 "round {round:3} loss {mean_loss:.4} acc {eval_acc:.4} sparsity {mean_sparsity:.3} \
-                 device {:.1} KB ({:.2}s)",
+                 net {:.1} KB ({:.1} mJ) device {:.1} KB ({:.2} mJ) dropped {:?} ({:.2}s)",
+                report.network_bytes() as f64 / 1e3,
+                report.network_joules(&link) * 1e3,
                 report.device_bytes() as f64 / 1e3,
+                report.device_joules(&energy) * 1e3,
+                report.dropped,
                 report.wall_secs
             );
             rounds.push(report);

@@ -13,6 +13,15 @@
 //! the O(model) download happens once at the round boundary — the
 //! software analogue of the paper's on-chip-reuse argument. The literal
 //! path remains selectable as a fallback.
+//!
+//! The *network* tier is compressed independently
+//! ([`crate::config::CommMode`]): each worker keeps a `reference` replica
+//! of the params the leader believes it holds, advanced only by applying
+//! the leader's downlink [`ModelUpdate`]s — dense snapshots replace it,
+//! pruned deltas accumulate into it, so leader and worker replicas stay
+//! bit-identical. The uplink is the worker's own pruned delta
+//! (`local − reference`) through its error-feedback [`DeltaCodec`]; in
+//! `dense` mode both directions ship full snapshots exactly as before.
 
 use std::sync::mpsc::{self, Sender};
 use std::thread::JoinHandle;
@@ -20,18 +29,21 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use crate::config::TrainConfig;
+use crate::comm::{DeltaCodec, ModelUpdate};
+use crate::config::{CommMode, TrainConfig};
 use crate::data::batcher::Prefetcher;
 use crate::data::Dataset;
 use crate::manifest::{ArtifactSpec, ModelSpec};
 use crate::params::ParamStore;
 use crate::runtime::{Runtime, StepDriver, TransferStats};
-use crate::tensor::Tensor;
+use crate::util::rng::Rng;
 
 /// One round's work order.
 pub struct WorkerTask {
     pub round: usize,
-    pub params: Vec<Tensor>,
+    /// the downlink: a dense snapshot (first round / resync / `dense`
+    /// mode) or the pruned global delta
+    pub payload: ModelUpdate,
     pub local_steps: usize,
     /// straggler slowdown factor (1.0 = healthy)
     pub slowdown: f64,
@@ -43,7 +55,9 @@ pub struct WorkerTask {
 pub struct WorkerReport {
     pub worker_id: usize,
     pub round: usize,
-    pub params: Vec<Tensor>,
+    /// the uplink: dense params in `dense` mode, the worker's pruned
+    /// delta vs its reference otherwise
+    pub update: ModelUpdate,
     pub examples: usize,
     pub mean_loss: f64,
     pub mean_sparsity: f64,
@@ -78,6 +92,8 @@ impl WorkerHandle {
         train_art: ArtifactSpec,
         model: &ModelSpec,
         cfg: TrainConfig,
+        comm: CommMode,
+        comm_rate: f64,
     ) -> Result<Self> {
         let mut store = ParamStore::init(model, cfg.seed); // momenta + B local
         let batch = model.batch;
@@ -110,13 +126,52 @@ impl WorkerHandle {
                 // shard moves to the prefetch thread; gather/shuffle
                 // overlap with the train step
                 let mut batcher = Prefetcher::new(shard, batch, cfg.seed ^ id as u64, 2);
+                // the leader's view of this worker's params, advanced
+                // only by downlink payloads (kept bit-identical to the
+                // leader's reference replica), plus the uplink codec with
+                // its error-feedback residual
+                let mut reference: Vec<crate::tensor::Tensor> = Vec::new();
+                let mut codec = DeltaCodec::new(comm, comm_rate);
+                let uplink_rng = Rng::new(cfg.seed ^ 0x5EED_C0DE).fold_in(id as u64);
                 while let Ok(Msg::Task(task)) = rx.recv() {
                     let t0 = Instant::now();
                     // per-round ledger: everything from the broadcast
                     // upload to the round-boundary sync lands in the
                     // report's TransferStats
                     driver.reset_transfer_stats();
-                    if let Err(e) = driver.load_params(&mut store, task.params) {
+                    // materialize the downlink into the reference
+                    // replica, then hand the device its copy. In dense
+                    // *mode* no reference is kept at all — the snapshot
+                    // moves straight into load_params, exactly the
+                    // pre-comm path (zero extra O(model) copies)
+                    let device_params = match task.payload {
+                        ModelUpdate::Dense(p) => {
+                            // a snapshot erases whatever divergence the
+                            // carried residual described
+                            codec.reset_residual();
+                            if codec.mode() == CommMode::Dense {
+                                p
+                            } else {
+                                reference = p;
+                                reference.clone()
+                            }
+                        }
+                        u @ ModelUpdate::Delta(_) => {
+                            if reference.is_empty() {
+                                log::error!(
+                                    "worker {id}: delta downlink before any snapshot; \
+                                     skipping round"
+                                );
+                                continue;
+                            }
+                            if let Err(e) = u.apply(&mut reference) {
+                                log::error!("worker {id}: broadcast rejected: {e:#}");
+                                continue;
+                            }
+                            reference.clone()
+                        }
+                    };
+                    if let Err(e) = driver.load_params(&mut store, device_params) {
                         log::error!("worker {id}: broadcast rejected: {e:#}");
                         continue;
                     }
@@ -151,14 +206,30 @@ impl WorkerHandle {
                         }
                     }
                     if !ok {
-                        // drop the reply sender: leader sees a dead round
+                        // drop the reply sender: the leader aggregates
+                        // the reports that did arrive and records this
+                        // worker as dropped for the round
                         continue;
                     }
+                    // uplink: dense snapshot or pruned delta vs reference
+                    let update = match codec.mode() {
+                        CommMode::Dense => ModelUpdate::Dense(store.params.clone()),
+                        _ => {
+                            let mut rng = uplink_rng.fold_in(task.round as u64);
+                            match codec.encode(&store.params, &reference, &mut rng) {
+                                Ok(u) => u,
+                                Err(e) => {
+                                    log::error!("worker {id}: uplink encode failed: {e:#}");
+                                    continue;
+                                }
+                            }
+                        }
+                    };
                     let n = task.local_steps.max(1) as f64;
                     let _ = task.reply.send(WorkerReport {
                         worker_id: id,
                         round: task.round,
-                        params: store.params.clone(),
+                        update,
                         examples: shard_n,
                         mean_loss: losses / n,
                         mean_sparsity: spars / n,

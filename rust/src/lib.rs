@@ -9,8 +9,9 @@
 //!   AOT-lowered to HLO-text artifacts in `artifacts/`.
 //! * **L3 (this crate)**: the runtime system — PJRT execution
 //!   ([`runtime`]), single-device training ([`training`]), the federated
-//!   edge coordinator ([`coordinator`]), and the accelerator simulator
-//!   that reproduces the paper's hardware evaluation ([`accel`]).
+//!   edge coordinator ([`coordinator`]) with pruned-delta network
+//!   compression ([`comm`]), and the accelerator simulator that
+//!   reproduces the paper's hardware evaluation ([`accel`]).
 //!
 //! Python never runs on the request path: once `make artifacts` has been
 //! run, the `efficientgrad` binary is self-contained.
@@ -32,6 +33,7 @@
 pub mod accel;
 pub mod benchlib;
 pub mod cli;
+pub mod comm;
 pub mod config;
 pub mod coordinator;
 pub mod data;

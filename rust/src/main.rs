@@ -174,6 +174,9 @@ fn cmd_federated(raw: &[String]) -> Result<()> {
         FlagSpec { name: "local-steps", help: "local steps per round", takes_value: true, default: Some("10") },
         FlagSpec { name: "non-iid", help: "label-skewed shards", takes_value: false, default: None },
         FlagSpec { name: "straggler-prob", help: "per-round straggler probability", takes_value: true, default: Some("0.0") },
+        FlagSpec { name: "dropout-prob", help: "per-round worker dropout probability", takes_value: true, default: Some("0.0") },
+        FlagSpec { name: "comm", help: "network-tier encoding (dense|pruned|sign)", takes_value: true, default: None },
+        FlagSpec { name: "comm-rate", help: "comm pruning rate P (pruned|sign modes)", takes_value: true, default: None },
     ]);
     if raw.iter().any(|a| a == "--help") {
         println!("{}", render_help("efficientgrad", "federated", "Federated edge training", &specs));
@@ -197,18 +200,38 @@ fn cmd_federated(raw: &[String]) -> Result<()> {
     if let Some(v) = args.get_f64("straggler-prob")? {
         cfg.straggler_prob = v;
     }
+    if let Some(v) = args.get_f64("dropout-prob")? {
+        cfg.dropout_prob = v;
+    }
+    if let Some(v) = args.get_choice("comm", &["dense", "pruned", "sparse", "sign"])? {
+        cfg.comm = efficientgrad::config::CommMode::parse(v)?;
+    }
+    if let Some(v) = args.get_f64("comm-rate")? {
+        cfg.comm_rate = v;
+    }
+    cfg.validate()?; // one normative range check, config-file and CLI alike
 
     let rt = Runtime::cpu()?;
     let manifest = Manifest::load(&efficientgrad::artifacts_dir())?;
     let mut leader = coordinator::Leader::new(&rt, &manifest, cfg.clone())?;
     let summary = leader.run()?;
     leader.shutdown();
+    let link = efficientgrad::accel::LinkEnergy::wifi();
+    let net_joules: f64 = summary
+        .rounds
+        .iter()
+        .map(|r| r.network_joules(&link))
+        .sum();
     println!(
-        "federated done: final_acc={:.4} rounds={} upload={:.1} MB download={:.1} MB",
+        "federated done: final_acc={:.4} rounds={} comm={} upload={:.2} MB download={:.2} MB \
+         (net {:.1} mJ over the {:.0} nJ/B link)",
         summary.final_acc,
         summary.rounds.len(),
+        cfg.comm.as_str(),
         summary.total_upload_bytes as f64 / 1e6,
         summary.total_download_bytes as f64 / 1e6,
+        net_joules * 1e3,
+        link.pj_per_byte / 1e3,
     );
     Ok(())
 }

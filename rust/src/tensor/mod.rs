@@ -119,6 +119,28 @@ impl Tensor {
         }
     }
 
+    /// self[indices[j]] += alpha * values[j] — the sparse-accumulate
+    /// primitive behind the federated leader's pruned-delta FedAvg
+    /// (`coordinator::fedavg::weighted_sparse_fedavg`): folding a
+    /// worker's surviving delta coordinates straight into the global
+    /// params costs O(nnz), not O(P).
+    ///
+    /// Indices are element offsets into the row-major buffer; out-of-range
+    /// indices panic (a malformed wire update must not silently corrupt
+    /// the aggregate).
+    pub fn axpy_sparse(&mut self, alpha: f32, indices: &[u32], values: &[f32]) {
+        assert_eq!(
+            indices.len(),
+            values.len(),
+            "sparse axpy: {} indices vs {} values",
+            indices.len(),
+            values.len()
+        );
+        for (&i, &v) in indices.iter().zip(values) {
+            self.data[i as usize] += alpha * v;
+        }
+    }
+
     /// self *= alpha
     pub fn scale(&mut self, alpha: f32) {
         for a in self.data.iter_mut() {
@@ -227,6 +249,33 @@ mod tests {
         assert_eq!(s.data(), &[2.0, 2.0, 2.0, 2.0]);
         assert_eq!(a.data(), &[0.5, 0.5, 0.5, 0.5]); // source untouched
         assert_eq!(s.shape(), a.shape());
+    }
+
+    #[test]
+    fn axpy_sparse_touches_only_listed_coords() {
+        let mut a = Tensor::zeros(&[2, 3]);
+        a.axpy_sparse(2.0, &[0, 4], &[1.5, -3.0]);
+        assert_eq!(a.data(), &[3.0, 0.0, 0.0, 0.0, -6.0, 0.0]);
+        // accumulates on top of existing values, duplicates add
+        a.axpy_sparse(1.0, &[0, 0], &[1.0, 1.0]);
+        assert_eq!(a.data()[0], 5.0);
+        // empty update is a no-op
+        a.axpy_sparse(9.0, &[], &[]);
+        assert_eq!(a.data()[0], 5.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn axpy_sparse_rejects_out_of_range() {
+        let mut a = Tensor::zeros(&[2]);
+        a.axpy_sparse(1.0, &[2], &[1.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn axpy_sparse_rejects_length_mismatch() {
+        let mut a = Tensor::zeros(&[2]);
+        a.axpy_sparse(1.0, &[0, 1], &[1.0]);
     }
 
     #[test]

@@ -1,0 +1,306 @@
+//! Comm-subsystem invariants: wire-format round trips, byte-formula
+//! pins, and the error-feedback contract that makes pruned federated
+//! exchange track the dense exchange. Pure host math — runs everywhere,
+//! no artifacts needed.
+
+use efficientgrad::comm::wire::{
+    dense_tensor_bytes, sign_tensor_bytes, sparse_tensor_bytes, SPARSE_TENSOR_HEADER_BYTES,
+};
+use efficientgrad::comm::{DeltaCodec, ModelUpdate, SignTensor, SparseTensor, TensorUpdate};
+use efficientgrad::config::CommMode;
+use efficientgrad::tensor::Tensor;
+use efficientgrad::testing::{for_all, for_all2, F64In, NormalVec, UsizeIn};
+use efficientgrad::util::rng::Rng;
+
+fn t(v: &[f32]) -> Tensor {
+    Tensor::new(vec![v.len()], v.to_vec())
+}
+
+// ---------------------------------------------------------------------------
+// wire format: round trips + byte formulas over arbitrary inputs
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_sparse_roundtrip_arbitrary_buffers() {
+    for_all(
+        101,
+        &NormalVec {
+            max_len: 700,
+            sigma: 1.0,
+        },
+        64,
+        |v| {
+            // sparsify a copy at an arbitrary cutoff so nnz varies from
+            // 0 (full sparsity) to len (no sparsity)
+            let mut pruned = v.clone();
+            let cut = pruned[0].abs();
+            for x in pruned.iter_mut() {
+                if x.abs() < cut {
+                    *x = 0.0;
+                }
+            }
+            let s = SparseTensor::encode(&pruned);
+            if s.wire_bytes() != sparse_tensor_bytes(s.nnz()) {
+                return Err("sparse wire bytes != formula".into());
+            }
+            let u = TensorUpdate::Sparse(s);
+            if u.decode_dense() != pruned {
+                return Err("sparse decode != encoded buffer".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sign_roundtrip_preserves_support_signs_and_bytes() {
+    for_all(
+        102,
+        &NormalVec {
+            max_len: 700,
+            sigma: 2.0,
+        },
+        64,
+        |v| {
+            let mut pruned = v.clone();
+            let cut = pruned[pruned.len() / 2].abs();
+            for x in pruned.iter_mut() {
+                if x.abs() < cut {
+                    *x = 0.0;
+                }
+            }
+            let g = SignTensor::encode(&pruned);
+            let nnz = pruned.iter().filter(|&&x| x != 0.0).count();
+            if g.nnz as usize != nnz {
+                return Err(format!("nnz {} != {}", g.nnz, nnz));
+            }
+            if g.wire_bytes() != sign_tensor_bytes(pruned.len(), nnz) {
+                return Err("sign wire bytes != formula".into());
+            }
+            let decoded = TensorUpdate::Sign(g).decode_dense();
+            for (i, (&d, &p)) in decoded.iter().zip(&pruned).enumerate() {
+                if (p == 0.0) != (d == 0.0) {
+                    return Err(format!("support changed at {i}"));
+                }
+                if p != 0.0 && d.signum() != p.signum() {
+                    return Err(format!("sign flipped at {i}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sign_beats_sparse_beats_dense_at_high_sparsity() {
+    // at ≤ ~46% survivors (eq. 3 at P=0.9) the byte ordering that
+    // motivates the modes must hold for any tensor size
+    for_all2(103, &UsizeIn(64, 4096), &F64In(0.05, 0.46), 48, |&n, &frac| {
+        let nnz = ((n as f64) * frac) as usize;
+        let dense = dense_tensor_bytes(n);
+        let sparse = sparse_tensor_bytes(nnz);
+        let sign = sign_tensor_bytes(n, nnz);
+        if sign >= sparse && nnz > 8 {
+            return Err(format!("sign {sign} >= sparse {sparse} at n={n} nnz={nnz}"));
+        }
+        if sparse >= dense && frac < 0.4 {
+            return Err(format!("sparse {sparse} >= dense {dense} at n={n} nnz={nnz}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn sign_mode_hits_the_ten_x_wire_cut_at_paper_p() {
+    // the headline: at the paper's P=0.9 eq. 3 leaves ~46% survivors,
+    // and the sign format's ~1.25 bits/survivor (+bitmap) still cuts
+    // ≥10× vs dense f32 — the formula-level version of the bench assert
+    let n = 42_000; // convnet_s-scale tensor
+    let nnz = (n as f64 * 0.46) as usize;
+    assert!(dense_tensor_bytes(n) / sign_tensor_bytes(n, nnz) >= 10);
+    // the index+value format is bounded by its 8-byte survivors instead
+    assert!(sparse_tensor_bytes(nnz) < dense_tensor_bytes(n));
+}
+
+// ---------------------------------------------------------------------------
+// codec: dense equivalence at rate 0, EF identity, residual boundedness
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_rate_zero_codec_is_dense_equivalent() {
+    // τ = 0 ships every nonzero delta coordinate exactly: reference +
+    // decode == local bit for bit, and the residual stays empty
+    for_all(
+        104,
+        &NormalVec {
+            max_len: 512,
+            sigma: 0.5,
+        },
+        48,
+        |delta| {
+            // zero reference: delta == local exactly, so the round trip
+            // must be bit-for-bit (a nonzero reference only adds float
+            // rounding in `local - reference`, outside the codec's
+            // contract)
+            let reference = vec![Tensor::zeros(&[delta.len()])];
+            let local = vec![t(delta)];
+            let mut codec = DeltaCodec::new(CommMode::Pruned, 0.0);
+            let u = codec
+                .encode(&local, &reference, &mut Rng::new(7))
+                .map_err(|e| e.to_string())?;
+            let mut p = reference.clone();
+            u.apply(&mut p).map_err(|e| e.to_string())?;
+            if p != local {
+                return Err("rate-0 codec not dense-equivalent".into());
+            }
+            if codec.residual_norm() != 0.0 {
+                return Err(format!("rate-0 residual {}", codec.residual_norm()));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Drive `rounds` codec rounds over synthetic N(0, sigma) deltas and
+/// return the residual norm after each round.
+fn residual_trajectory(mode: CommMode, rate: f64, n: usize, rounds: usize) -> Vec<f64> {
+    let mut codec = DeltaCodec::new(mode, rate);
+    let mut data_rng = Rng::new(42);
+    let mut prune_rng = Rng::new(43);
+    let reference = vec![Tensor::zeros(&[n])];
+    let mut norms = Vec::with_capacity(rounds);
+    for _ in 0..rounds {
+        let mut delta = vec![0f32; n];
+        data_rng.fill_normal(&mut delta, 1.0);
+        let local = vec![t(&delta)];
+        codec.encode(&local, &reference, &mut prune_rng).unwrap();
+        norms.push(codec.residual_norm());
+    }
+    norms
+}
+
+#[test]
+fn residual_norm_stays_bounded_across_rounds() {
+    // error feedback is stable iff the carried residual settles instead
+    // of compounding: per-element residual magnitude is bounded by τ for
+    // the sparse format, so the norm should plateau at O(σ·√n)
+    let n = 4096;
+    for mode in [CommMode::Pruned, CommMode::Sign] {
+        let norms = residual_trajectory(mode, 0.9, n, 30);
+        let bound = 6.0 * (n as f64).sqrt(); // σ = 1; steady state ≈ 1.5·√n
+        for (round, &norm) in norms.iter().enumerate() {
+            assert!(
+                norm < bound,
+                "{mode:?}: residual norm {norm} exceeded {bound} at round {round}"
+            );
+        }
+        // no late-run growth: the last third is not meaningfully above
+        // the middle third
+        let mid: f64 = norms[10..20].iter().sum::<f64>() / 10.0;
+        let late: f64 = norms[20..30].iter().sum::<f64>() / 10.0;
+        assert!(
+            late < mid * 1.5,
+            "{mode:?}: residual growing: mid {mid} -> late {late}"
+        );
+    }
+}
+
+#[test]
+fn ef_identity_decoded_plus_residual_equals_delta() {
+    // the error-feedback identity: decode(update) + residual == delta +
+    // previous residual, per element, every round, both modes
+    for mode in [CommMode::Pruned, CommMode::Sign] {
+        let mut codec = DeltaCodec::new(mode, 0.9);
+        let mut data_rng = Rng::new(5);
+        let mut prune_rng = Rng::new(6);
+        let n = 512;
+        let reference = vec![Tensor::zeros(&[n])];
+        let mut carried = vec![0f64; n];
+        for round in 0..5 {
+            let mut delta = vec![0f32; n];
+            data_rng.fill_normal(&mut delta, 1.0);
+            let u = codec
+                .encode(&[t(&delta)], &reference, &mut prune_rng)
+                .unwrap();
+            let decoded = match &u {
+                ModelUpdate::Delta(us) => us[0].decode_dense(),
+                _ => panic!("expected delta"),
+            };
+            // recompute the residual the codec must now hold
+            for (c, (&d, &q)) in carried.iter_mut().zip(delta.iter().zip(&decoded)) {
+                *c += d as f64 - q as f64;
+            }
+            let want: f64 = carried.iter().map(|c| c * c).sum::<f64>().sqrt();
+            let got = codec.residual_norm();
+            assert!(
+                (want - got).abs() < 1e-3 * want.max(1.0),
+                "{mode:?} round {round}: residual {got} != reconstructed {want}"
+            );
+        }
+    }
+}
+
+#[test]
+fn codec_encode_is_deterministic_in_the_rng() {
+    let local = vec![t(&[0.3, -0.1, 0.8, 0.0, -2.0, 0.05])];
+    let reference = vec![Tensor::zeros(&[6])];
+    for mode in [CommMode::Pruned, CommMode::Sign] {
+        let mut a = DeltaCodec::new(mode, 0.9);
+        let mut b = DeltaCodec::new(mode, 0.9);
+        let ua = a.encode(&local, &reference, &mut Rng::new(11)).unwrap();
+        let ub = b.encode(&local, &reference, &mut Rng::new(11)).unwrap();
+        assert_eq!(ua, ub);
+    }
+}
+
+#[test]
+fn leader_and_worker_replicas_stay_bit_identical() {
+    // both endpoints apply the same decoded updates; after any number of
+    // compressed downlinks their references must agree bit for bit —
+    // this is the invariant that lets the leader skip dense resyncs for
+    // in-sync workers
+    let n = 256;
+    let mut leader_ref = vec![Tensor::zeros(&[n])];
+    let mut worker_ref = leader_ref.clone();
+    let mut codec = DeltaCodec::new(CommMode::Sign, 0.9);
+    let mut data_rng = Rng::new(21);
+    let mut prune_rng = Rng::new(22);
+    for _ in 0..8 {
+        // the leader's "global" wanders off the reference each round
+        let mut step = vec![0f32; n];
+        data_rng.fill_normal(&mut step, 0.1);
+        let global = vec![t(&leader_ref[0]
+            .data()
+            .iter()
+            .zip(&step)
+            .map(|(&a, &b)| a + b)
+            .collect::<Vec<f32>>())];
+        let u = codec.encode(&global, &leader_ref, &mut prune_rng).unwrap();
+        u.apply(&mut leader_ref).unwrap();
+        u.apply(&mut worker_ref).unwrap();
+        assert_eq!(leader_ref, worker_ref);
+    }
+}
+
+#[test]
+fn model_update_wire_bytes_sum_over_tensors() {
+    // multi-tensor updates sum the per-tensor formulas — what the
+    // leader's per-round ledger relies on
+    let a = [1.0f32, 0.0, -2.0];
+    let b = [0.0f32; 70];
+    let sparse = ModelUpdate::Delta(vec![
+        TensorUpdate::Sparse(SparseTensor::encode(&a)),
+        TensorUpdate::Sparse(SparseTensor::encode(&b)),
+    ]);
+    assert_eq!(
+        sparse.wire_bytes(),
+        sparse_tensor_bytes(2) + sparse_tensor_bytes(0)
+    );
+    assert_eq!(sparse.survivors(), 2);
+    assert_eq!(
+        ModelUpdate::Dense(vec![t(&a), t(&b)]).wire_bytes(),
+        dense_tensor_bytes(3) + dense_tensor_bytes(70)
+    );
+    // header constant is part of the documented model
+    assert_eq!(sparse_tensor_bytes(0), SPARSE_TENSOR_HEADER_BYTES);
+}

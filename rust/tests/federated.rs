@@ -1,7 +1,8 @@
 //! Integration tests for the federated coordinator (leader + workers over
 //! real PJRT executables; each worker brings up its own client).
 
-use efficientgrad::config::{FedConfig, TrainConfig};
+use efficientgrad::comm::wire::{sign_model_bytes_envelope, sparse_model_bytes};
+use efficientgrad::config::{CommMode, FedConfig, TrainConfig};
 use efficientgrad::coordinator::Leader;
 use efficientgrad::manifest::Manifest;
 use efficientgrad::params::ParamStore;
@@ -19,6 +20,9 @@ fn small_cfg(workers: usize, rounds: usize) -> FedConfig {
         iid: true,
         straggler_prob: 0.0,
         straggler_slowdown: 3.0,
+        dropout_prob: 0.0,
+        comm: CommMode::Dense,
+        comm_rate: 0.9,
         train: TrainConfig {
             model: "convnet_t".into(),
             mode: "efficientgrad".into(),
@@ -29,6 +33,18 @@ fn small_cfg(workers: usize, rounds: usize) -> FedConfig {
             ..Default::default()
         },
     }
+}
+
+fn run_to_summary(
+    rt: &Runtime,
+    m: &Manifest,
+    cfg: FedConfig,
+) -> (efficientgrad::coordinator::FedSummary, Vec<efficientgrad::tensor::Tensor>) {
+    let mut leader = Leader::new(rt, m, cfg).unwrap();
+    let summary = leader.run().unwrap();
+    let params = leader.global_params().to_vec();
+    leader.shutdown();
+    (summary, params)
 }
 
 #[test]
@@ -102,6 +118,178 @@ fn round_report_ledger_matches_worker_transfer_sum() {
     }
     assert_eq!(summary.total_device_transfer, fleet_total);
     assert_eq!(summary.total_device_transfer.steps, 2 * 3 * local_steps);
+}
+
+#[test]
+fn dense_comm_is_bit_for_bit_reproducible_with_legacy_bytes() {
+    // `comm = dense` IS the legacy exchange: same aggregation, same
+    // snapshot broadcasts, same 4·P·workers accounting both ways — and
+    // identical configs give identical global params, so the explicit
+    // mode pins the default
+    let Some(m) = manifest() else {
+        eprintln!("SKIP: artifacts missing");
+        return;
+    };
+    let rt = Runtime::cpu().unwrap();
+    let default_cfg = small_cfg(2, 3); // comm: Dense is the default
+    let mut explicit = small_cfg(2, 3);
+    explicit.comm = CommMode::Dense;
+    let (sum_a, params_a) = run_to_summary(&rt, &m, default_cfg);
+    let (sum_b, params_b) = run_to_summary(&rt, &m, explicit);
+    assert_eq!(params_a, params_b, "dense comm drifted from the default path");
+    assert_eq!(sum_a.final_acc, sum_b.final_acc);
+    assert_eq!(sum_a.total_upload_bytes, sum_b.total_upload_bytes);
+    let model = m.model("convnet_t").unwrap();
+    let expect = (model.param_count * 4 * 2 * 3) as u64;
+    assert_eq!(sum_a.total_upload_bytes, expect);
+    assert_eq!(sum_a.total_download_bytes, expect);
+    for r in &sum_a.rounds {
+        assert!(r.dropped.is_empty());
+        assert_eq!(r.dispatched, 2);
+        assert_eq!(r.dense_downlinks, 2); // dense mode: snapshots always
+        assert_eq!(r.uplink_survivors, 0); // survivor is a delta notion
+    }
+}
+
+#[test]
+fn pruned_comm_tracks_dense_accuracy_and_cuts_bytes() {
+    // the tentpole acceptance: ≥5 rounds of error-feedback pruned comm
+    // land within a pinned tolerance of the dense run's final accuracy,
+    // while the steady-state wire bytes match the documented formulas
+    let Some(m) = manifest() else {
+        eprintln!("SKIP: artifacts missing");
+        return;
+    };
+    let rt = Runtime::cpu().unwrap();
+    const ROUNDS: usize = 6;
+    let (dense, _) = run_to_summary(&rt, &m, small_cfg(2, ROUNDS));
+
+    let model = m.model("convnet_t").unwrap();
+    let probe = ParamStore::init(model, 0);
+    let n_tensors = probe.params.len() as u64;
+    let dense_model_bytes = (probe.param_elements() * 4) as u64;
+
+    for comm in [CommMode::Pruned, CommMode::Sign] {
+        let mut cfg = small_cfg(2, ROUNDS);
+        cfg.comm = comm;
+        let (sum, _) = run_to_summary(&rt, &m, cfg);
+        assert_eq!(sum.rounds.len(), ROUNDS);
+        // expectation preservation carried to the network tier: the
+        // compressed run's final accuracy stays within the pin
+        assert!(
+            (sum.final_acc - dense.final_acc).abs() <= 0.25,
+            "{comm:?}: final acc {} vs dense {}",
+            sum.final_acc,
+            dense.final_acc
+        );
+        // and it still learns on its own terms
+        let first = sum.rounds.first().unwrap().mean_loss;
+        let last = sum.rounds.last().unwrap().mean_loss;
+        assert!(last < first, "{comm:?}: no progress {first} -> {last}");
+
+        for r in &sum.rounds {
+            // round 0 resyncs everyone with a dense snapshot; after
+            // that every downlink is a delta
+            let expect_dense = if r.round == 0 { 2 } else { 0 };
+            assert_eq!(r.dense_downlinks, expect_dense, "{comm:?} round {}", r.round);
+            // uplinks are always deltas; measured bytes must equal the
+            // documented formulas applied to the measured survivors
+            match comm {
+                CommMode::Pruned => {
+                    assert_eq!(
+                        r.upload_bytes,
+                        sparse_model_bytes(r.uplink_survivors, 2 * n_tensors),
+                        "{comm:?} round {}: uplink bytes != formula",
+                        r.round
+                    );
+                    if r.round > 0 {
+                        assert_eq!(
+                            r.download_bytes,
+                            sparse_model_bytes(r.downlink_survivors, 2 * n_tensors),
+                            "{comm:?} round {}: downlink bytes != formula",
+                            r.round
+                        );
+                    } else {
+                        assert_eq!(r.download_bytes, 2 * dense_model_bytes);
+                    }
+                }
+                _ => {
+                    // measured sign messages sit inside the normative
+                    // envelope (per-tensor formula pinned in tests/comm.rs)
+                    let (lo, hi) =
+                        sign_model_bytes_envelope(probe.params.iter().map(|t| t.len()));
+                    let (lo, hi) = (lo * 2, hi * 2);
+                    assert!(
+                        (lo..=hi).contains(&r.upload_bytes),
+                        "{comm:?} round {}: uplink {} outside [{lo}, {hi}]",
+                        r.round,
+                        r.upload_bytes
+                    );
+                }
+            }
+        }
+        // the headline cut, steady state (round 0's downlink is a dense
+        // snapshot by design): sign ≤ 1/5 of dense, pruned strictly below
+        let steady_net: u64 = sum.rounds[1..]
+            .iter()
+            .map(|r| r.upload_bytes + r.download_bytes)
+            .sum();
+        let dense_net: u64 = dense.rounds[1..]
+            .iter()
+            .map(|r| r.upload_bytes + r.download_bytes)
+            .sum();
+        assert!(
+            steady_net < dense_net,
+            "{comm:?}: {steady_net} not below dense {dense_net}"
+        );
+        if comm == CommMode::Sign {
+            assert!(
+                steady_net * 5 <= dense_net,
+                "sign comm missed the 5x cut: {steady_net} vs dense {dense_net}"
+            );
+        }
+    }
+}
+
+#[test]
+fn partial_rounds_reweight_and_record_dropouts() {
+    // a worker that misses a round must not abort the run: the leader
+    // aggregates the reports that arrived, records the dropout, and
+    // resyncs the returning worker with a dense snapshot
+    let Some(m) = manifest() else {
+        eprintln!("SKIP: artifacts missing");
+        return;
+    };
+    let rt = Runtime::cpu().unwrap();
+    let mut cfg = small_cfg(3, 5);
+    cfg.comm = CommMode::Pruned;
+    cfg.dropout_prob = 0.4;
+    let (sum, _) = run_to_summary(&rt, &m, cfg);
+    assert_eq!(sum.rounds.len(), 5);
+    let total_dropped: usize = sum.rounds.iter().map(|r| r.dropped.len()).sum();
+    assert!(total_dropped > 0, "dropout injection produced no dropouts");
+    let mut resynced = 0usize;
+    for (i, r) in sum.rounds.iter().enumerate() {
+        // bookkeeping: every worker is either dropped or reported, and
+        // with injection-only dropouts the dispatch count is the rest
+        assert_eq!(r.dropped.len() + r.worker_transfer.len(), 3, "round {i}");
+        assert_eq!(r.dispatched, 3 - r.dropped.len(), "round {i}");
+        assert!(r.mean_loss.is_finite());
+        if i > 0 {
+            // dense downlinks after round 0 are exactly the resyncs:
+            // workers offline last round that came back online this round
+            let came_back = sum.rounds[i - 1]
+                .dropped
+                .iter()
+                .filter(|&&id| !r.dropped.contains(&id))
+                .count();
+            assert_eq!(r.dense_downlinks, came_back, "round {i}");
+            resynced += came_back;
+        }
+    }
+    assert!(resynced > 0, "no worker ever resynced from a snapshot");
+    // the run still learns despite the churn (10 classes, chance = 0.1)
+    assert!(sum.final_acc > 0.12, "final acc {}", sum.final_acc);
 }
 
 #[test]
