@@ -6,7 +6,7 @@
 
 MANIFEST := artifacts/manifest.json
 
-.PHONY: artifacts artifacts-full test bench bench-comm clean-artifacts
+.PHONY: artifacts artifacts-full test bench bench-comm bench-pruning clean-artifacts
 
 $(MANIFEST):
 	python python/compile/aot.py --outdir artifacts
@@ -28,6 +28,11 @@ bench: $(MANIFEST)
 # Pure host math — needs no artifacts, so it runs anywhere (incl. CI).
 bench-comm:
 	cd rust && cargo bench --bench comm_bytes
+
+# host pruning/fold kernels (eq. 3 variants, σ, axpy). The host-kernel
+# half needs no artifacts; the train-step half skips without them.
+bench-pruning:
+	cd rust && cargo bench --bench pruning_hotpath
 
 clean-artifacts:
 	rm -rf artifacts

@@ -32,6 +32,7 @@ fn main() -> Result<()> {
         FlagSpec { name: "comm", help: "network encoding (dense|pruned|sign)", takes_value: true, default: Some("sign") },
         FlagSpec { name: "comm-rate", help: "comm pruning rate P", takes_value: true, default: Some("0.9") },
         FlagSpec { name: "model", help: "model", takes_value: true, default: Some("convnet_t") },
+        FlagSpec { name: "pipeline", help: "pipelined leader schedule (off-thread eval + streaming aggregation)", takes_value: false, default: None },
     ];
     let args = Args::parse(&raw, &specs)?;
 
@@ -42,6 +43,8 @@ fn main() -> Result<()> {
         iid: !args.get_bool("non-iid"),
         straggler_prob: args.get_f64("straggler-prob")?.unwrap(),
         straggler_slowdown: 4.0,
+        straggler_sleep: false,
+        pipeline: args.get_bool("pipeline"),
         dropout_prob: args.get_f64("dropout-prob")?.unwrap(),
         comm: CommMode::parse(args.get("comm").unwrap())?,
         comm_rate: args.get_f64("comm-rate")?.unwrap(),

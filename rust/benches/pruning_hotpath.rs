@@ -1,11 +1,19 @@
 //! Bench: the gradient-pruning math on both sides of the stack —
-//! (a) the Rust host-side mirror (used by the simulator + verification)
-//! across tensor sizes, and (b) the pruning threshold's effect measured
-//! through the real AOT train step: efficientgrad's step vs signsym's
-//! (identical transport, no pruning) vs bp. On CPU-XLA the pruned step is
-//! NOT expected to be faster (dense kernels); the assertion is that the
-//! pruning overhead is bounded — the *hardware* win is quantified by the
-//! fig5b simulator bench.
+//! (a) the Rust host-side mirror (used by the simulator, the comm codec
+//! and verification) across tensor sizes, including the kernels the
+//! federated leader now chunks across the scoped-thread pool
+//! (`stochastic_prune_into_partitioned`, `std_dev`, `Tensor::axpy`),
+//! and (b) the pruning threshold's effect measured through the real AOT
+//! train step: efficientgrad's step vs signsym's (identical transport,
+//! no pruning) vs bp. On CPU-XLA the pruned step is NOT expected to be
+//! faster (dense kernels); the assertion is that the pruning overhead
+//! is bounded — the *hardware* win is quantified by the fig5b simulator
+//! bench.
+//!
+//! Host-kernel rows land in `BENCH_pruning.json` (tracked across PRs
+//! next to `BENCH_runtime.json` / `BENCH_comm.json`); set
+//! `EFFICIENTGRAD_BENCH_SHORT=1` (CI) for a reduced iteration budget —
+//! same rows, same asserts.
 //!
 //!     cargo bench --bench pruning_hotpath
 
@@ -17,48 +25,107 @@ use efficientgrad::manifest::Manifest;
 use efficientgrad::params::ParamStore;
 use efficientgrad::runtime::{Runtime, TrainState};
 use efficientgrad::sparsity;
+use efficientgrad::tensor::Tensor;
 use efficientgrad::util::rng::Rng;
+use efficientgrad::util::stats::{std_dev, zero_fraction};
+
+/// Reduced budget for CI (`EFFICIENTGRAD_BENCH_SHORT=1`).
+fn short_mode() -> bool {
+    std::env::var_os("EFFICIENTGRAD_BENCH_SHORT").is_some()
+}
 
 fn main() {
+    let iters = if short_mode() { 8 } else { 20 };
+    let budget = Duration::from_secs(if short_mode() { 2 } else { 5 });
     let mut rep = Report::new(
-        "Host-side pruning mirror (eq. 3 + eq. 5)",
-        &["n elements", "mean", "per-elem ns", "realized sparsity"],
+        "Host-side pruning mirror (eq. 3 + eq. 5) and leader hot kernels",
+        &["kernel", "mean", "per-elem ns", "realized sparsity"],
     );
     let mut rng = Rng::new(0);
-    for n in [1 << 12, 1 << 16, 1 << 20] {
+    let sizes: &[usize] = if short_mode() {
+        &[1 << 12, 1 << 20]
+    } else {
+        &[1 << 12, 1 << 16, 1 << 20]
+    };
+    for &n in sizes {
         let mut delta = vec![0f32; n];
         rng.fill_normal(&mut delta, 0.02);
-        let sigma = efficientgrad::util::stats::std_dev(&delta);
+        let sigma = std_dev(&delta);
         let tau = sparsity::tau_from_rate(sigma, 0.9);
         // in-place variant: one buffer reused across iterations, so the
         // bench times the pruning math, not the allocator
         let mut out = vec![0f32; n];
-        let s = bench(
-            &format!("prune n={n}"),
-            2,
-            20,
-            Duration::from_secs(5),
-            || {
-                let mut r = Rng::new(1);
-                sparsity::stochastic_prune_into(&delta, tau, &mut r, &mut out);
-            },
-        );
+        let s = bench(&format!("prune n={n}"), 2, iters, budget, || {
+            let mut r = Rng::new(1);
+            sparsity::stochastic_prune_into(&delta, tau, &mut r, &mut out);
+        });
         rep.row(vec![
-            n.to_string(),
+            s.name.clone(),
             fmt_ns(s.mean_ns),
             format!("{:.2}", s.mean_ns / n as f64),
-            format!("{:.3}", efficientgrad::util::stats::zero_fraction(&out)),
+            format!("{:.3}", zero_fraction(&out)),
+        ]);
+
+        // the deterministic-partition variant the comm codec runs: fixed
+        // chunks, per-chunk RNG streams, chunks across the thread pool —
+        // bit-identical output regardless of thread count
+        let base = Rng::new(1);
+        let s = bench(&format!("prune partitioned n={n}"), 2, iters, budget, || {
+            sparsity::stochastic_prune_into_partitioned(&delta, tau, &base, &mut out);
+        });
+        let mut again = vec![0f32; n];
+        sparsity::stochastic_prune_into_partitioned(&delta, tau, &base, &mut again);
+        assert_eq!(out, again, "partitioned prune must be reproducible");
+        rep.row(vec![
+            s.name.clone(),
+            fmt_ns(s.mean_ns),
+            format!("{:.2}", s.mean_ns / n as f64),
+            format!("{:.3}", zero_fraction(&out)),
         ]);
     }
-    rep.print();
+
+    // the leader-fold kernels this PR chunks across the pool, at the
+    // largest size (σ feeds eq. 5 on the codec path; axpy is the dense
+    // FedAvg accumulate)
+    let n = 1 << 20;
+    let mut big = vec![0f32; n];
+    rng.fill_normal(&mut big, 1.0);
+    let s = bench("std_dev n=1048576 (chunked)", 2, iters, budget, || {
+        std::hint::black_box(std_dev(&big));
+    });
+    rep.row(vec![
+        s.name.clone(),
+        fmt_ns(s.mean_ns),
+        format!("{:.2}", s.mean_ns / n as f64),
+        "-".into(),
+    ]);
+    let src = Tensor::new(vec![n], big.clone());
+    let mut acc = Tensor::zeros(&[n]);
+    let s = bench("tensor axpy n=1048576 (chunked)", 2, iters, budget, || {
+        acc.axpy(0.5, &src);
+    });
+    rep.row(vec![
+        s.name.clone(),
+        fmt_ns(s.mean_ns),
+        format!("{:.2}", s.mean_ns / n as f64),
+        "-".into(),
+    ]);
 
     // threshold math microbench
     let s = bench("tau_from_rate", 10, 1000, Duration::from_secs(2), || {
         std::hint::black_box(sparsity::tau_from_rate(0.02, 0.9));
     });
+    rep.row(vec![s.name.clone(), fmt_ns(s.mean_ns), "-".into(), "-".into()]);
     println!("tau_from_rate (ndtri): {}", fmt_ns(s.mean_ns));
 
-    // through the real artifacts
+    rep.print();
+    rep.save_csv(&efficientgrad::figures::reports_dir().join("pruning_hotpath.csv"))
+        .unwrap();
+    rep.save_json(std::path::Path::new("BENCH_pruning.json")).unwrap();
+    println!("json -> BENCH_pruning.json");
+
+    // through the real artifacts (skips without `make artifacts` — the
+    // host-kernel rows above are already saved either way)
     let Ok(manifest) = Manifest::load(&efficientgrad::artifacts_dir()) else {
         eprintln!("SKIP artifact half: run `make artifacts`");
         return;
@@ -75,6 +142,8 @@ fn main() {
         "Train-step latency by mode (convnet_s, CPU-XLA — see fig5b for the hardware claim)",
         &["mode", "mean", "p95"],
     );
+    let step_iters = if short_mode() { 8 } else { 25 };
+    let step_budget = Duration::from_secs(if short_mode() { 5 } else { 12 });
     let mut eg_mean = 0.0;
     let mut ss_mean = 0.0;
     for mode in ["bp", "signsym", "efficientgrad"] {
@@ -84,7 +153,7 @@ fn main() {
         )
         .unwrap();
         let mut store = ParamStore::init(model, 2);
-        let s = bench(mode, 3, 25, Duration::from_secs(12), || {
+        let s = bench(mode, 3, step_iters, step_budget, || {
             state.step(&mut store, &batch, 0.05, 0.9).unwrap();
         });
         if mode == "efficientgrad" {

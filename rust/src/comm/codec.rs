@@ -1,8 +1,9 @@
 //! Pruned-delta codec with error feedback.
 //!
 //! `encode` turns `local − reference` into a [`ModelUpdate`] by running
-//! the paper's eq. 3 (`sparsity::stochastic_prune_into`, τ from eq. 5's
-//! `tau_from_rate` at each tensor's measured σ) over the delta, then
+//! the paper's eq. 3 (`sparsity::stochastic_prune_into_partitioned`, τ
+//! from eq. 5's `tau_from_rate` at each tensor's measured σ) over the
+//! delta, then
 //! packing the survivors in the wire format selected by the
 //! [`CommMode`]. What pruning (and, in sign mode, magnitude sharing)
 //! throws away is *not lost*: the codec keeps a per-tensor **residual**
@@ -15,14 +16,22 @@
 //!
 //! Determinism: the caller provides the [`Rng`] for the stochastic
 //! promotion draws, seeded per (run seed, endpoint, round), so a
-//! federated run is reproducible bit for bit.
+//! federated run is reproducible bit for bit. Internally `encode`
+//! consumes exactly **one** draw from that stream per call and derives
+//! per-tensor / per-chunk child streams from it
+//! (`sparsity::stochastic_prune_into_partitioned`), which is what lets
+//! the O(P) hot loops — the delta+residual fold, the σ pass, the prune
+//! itself — chunk across the scoped-thread pool (`util::par`) while the
+//! output stays bit-identical for a given caller stream, independent of
+//! thread count.
 
 use anyhow::{bail, Result};
 
 use super::wire::{ModelUpdate, SignTensor, SparseTensor, TensorUpdate};
 use crate::config::CommMode;
-use crate::sparsity::{stochastic_prune_into, tau_from_rate};
+use crate::sparsity::{stochastic_prune_into_partitioned, tau_from_rate};
 use crate::tensor::Tensor;
+use crate::util::par;
 use crate::util::rng::Rng;
 use crate::util::stats::std_dev;
 
@@ -79,9 +88,18 @@ impl DeltaCodec {
                 local.len()
             );
         }
+        // one draw advances the caller's stream; every prune draw below
+        // derives from it through (tensor index, chunk index) fold-ins,
+        // so the partitioned parallel prune cannot depend on scheduling
+        let base = Rng::new(rng.next_u64());
         let mut updates = Vec::with_capacity(local.len());
         let mut pruned = Vec::new();
-        for ((l, r), res) in local.iter().zip(reference).zip(self.residual.iter_mut()) {
+        for (ti, ((l, r), res)) in local
+            .iter()
+            .zip(reference)
+            .zip(self.residual.iter_mut())
+            .enumerate()
+        {
             if l.shape() != r.shape() || l.len() != res.len() {
                 bail!(
                     "encode: shape mismatch {:?} vs {:?} (residual {})",
@@ -90,14 +108,17 @@ impl DeltaCodec {
                     res.len()
                 );
             }
-            // delta + carried error, in place in the residual buffer
-            for (e, (&a, &b)) in res.iter_mut().zip(l.data().iter().zip(r.data())) {
-                *e += a - b;
-            }
+            // delta + carried error, in place in the residual buffer —
+            // element-wise, chunked across the thread pool
+            par::for_each_chunk_triple(res, l.data(), r.data(), |_, e, a, b| {
+                for (x, (&av, &bv)) in e.iter_mut().zip(a.iter().zip(b)) {
+                    *x += av - bv;
+                }
+            });
             let sigma = std_dev(res);
             let tau = tau_from_rate(sigma, self.rate);
             pruned.resize(res.len(), 0.0);
-            stochastic_prune_into(res, tau, rng, &mut pruned);
+            stochastic_prune_into_partitioned(res, tau, &base.fold_in(ti as u64), &mut pruned);
             let update = match self.mode {
                 CommMode::Pruned => TensorUpdate::Sparse(SparseTensor::encode(&pruned)),
                 CommMode::Sign => TensorUpdate::Sign(SignTensor::encode(&pruned)),

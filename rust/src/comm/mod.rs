@@ -7,8 +7,9 @@
 //! exchange:
 //!
 //! * Workers ship **deltas** (`local − broadcast`), not snapshots.
-//! * Deltas are pruned with eq. 3 (`sparsity::stochastic_prune_into`,
-//!   τ from eq. 5 at the tensor's measured σ) under an **error-feedback
+//! * Deltas are pruned with eq. 3 (the deterministic-partition variant
+//!   `sparsity::stochastic_prune_into_partitioned` — chunk-parallel, τ
+//!   from eq. 5 at the tensor's measured σ) under an **error-feedback
 //!   residual** ([`DeltaCodec`]) so pruned mass is carried into the next
 //!   round instead of lost — the compressed run tracks the dense run's
 //!   accuracy.

@@ -281,6 +281,29 @@ impl TensorUpdate {
         }
     }
 
+    /// `dst[i] += alpha · decode(self)[i]` into an **f64** accumulator —
+    /// the precision the FedAvg fold now carries so that per-worker
+    /// contributions combine without f32 rounding drift
+    /// ([`crate::coordinator::weighted_sparse_fedavg`]). Same O(nnz)
+    /// walk and survivor order as [`TensorUpdate::axpy_into`].
+    pub fn axpy_into_f64(&self, alpha: f64, dst: &mut [f64]) {
+        assert_eq!(
+            self.elems(),
+            dst.len(),
+            "update for {} elements applied to accumulator of {}",
+            self.elems(),
+            dst.len()
+        );
+        match self {
+            TensorUpdate::Sparse(t) => {
+                for (&i, &v) in t.indices.iter().zip(&t.values) {
+                    dst[i as usize] += alpha * v as f64;
+                }
+            }
+            TensorUpdate::Sign(t) => t.for_each_survivor(|i, v| dst[i] += alpha * v as f64),
+        }
+    }
+
     /// Decode to a dense buffer (tests / residual bookkeeping).
     pub fn decode_dense(&self) -> Vec<f32> {
         let mut out = vec![0.0f32; self.elems()];

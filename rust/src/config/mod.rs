@@ -345,6 +345,21 @@ pub struct FedConfig {
     pub straggler_prob: f64,
     /// simulated straggler slowdown factor
     pub straggler_slowdown: f64,
+    /// wall-clock straggler injection: stragglers actually sleep
+    /// `(slowdown − 1)×` their work time instead of only reporting the
+    /// inflated simulated time. Off by default (tests stay fast); the
+    /// schedule benchmarks turn it on so pipelined-vs-sequential round
+    /// wall times see a real straggler.
+    pub straggler_sleep: bool,
+    /// leader round schedule (`federated.pipeline` / `--pipeline`):
+    /// `false` = the sequential oracle (barrier → decode+FedAvg → eval
+    /// sweep → downlink encode, all on the leader thread); `true` = the
+    /// pipelined schedule (per-report decode at arrival, eval on a
+    /// dedicated thread overlapping the next round, downlink encoded
+    /// while eval runs). The two are bit-identical in every result —
+    /// params, eval_acc, byte ledgers (`tests/federated.rs`) — and
+    /// differ only in wall time.
+    pub pipeline: bool,
     /// probability a worker is unreachable for a whole round (misses the
     /// downlink and ships nothing; the leader re-weights FedAvg over the
     /// rest and resyncs it with a dense snapshot next round)
@@ -366,6 +381,8 @@ impl Default for FedConfig {
             iid: true,
             straggler_prob: 0.0,
             straggler_slowdown: 3.0,
+            straggler_sleep: false,
+            pipeline: false,
             dropout_prob: 0.0,
             comm: CommMode::default(),
             // the paper's P: comm pruning defaults to the same operating
@@ -386,6 +403,8 @@ impl FedConfig {
             iid: t.bool_or("federated.iid", d.iid),
             straggler_prob: t.f64_or("federated.straggler_prob", d.straggler_prob),
             straggler_slowdown: t.f64_or("federated.straggler_slowdown", d.straggler_slowdown),
+            straggler_sleep: t.bool_or("federated.straggler_sleep", d.straggler_sleep),
+            pipeline: t.bool_or("federated.pipeline", d.pipeline),
             dropout_prob: t.f64_or("federated.dropout_prob", d.dropout_prob),
             comm: t
                 .get("federated.comm")
@@ -526,6 +545,15 @@ mod tests {
         let c = FedConfig::from_table(&t).unwrap();
         assert_eq!(c.comm, CommMode::Sign);
         assert_eq!(c.comm_rate, 0.5);
+        // schedule defaults to the sequential oracle; `pipeline = true`
+        // (and the wall-clock straggler knob) parse from [federated]
+        assert!(!c.pipeline);
+        assert!(!c.straggler_sleep);
+        let t =
+            Table::parse("[federated]\npipeline = true\nstraggler_sleep = true").unwrap();
+        let c = FedConfig::from_table(&t).unwrap();
+        assert!(c.pipeline);
+        assert!(c.straggler_sleep);
         // invalid values error like residency does — a silently wrong
         // comm mode would invalidate every byte row downstream
         let t = Table::parse("[federated]\ncomm = \"morse\"").unwrap();

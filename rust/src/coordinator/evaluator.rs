@@ -1,0 +1,176 @@
+//! Off-thread evaluator — the pipelined leader's eval stage.
+//!
+//! In the sequential schedule the leader's test-set sweep sits on the
+//! round-critical path: round wall time = slowest worker + decode +
+//! FedAvg + **a full eval sweep** + downlink encode. The evaluator moves
+//! that sweep onto its own thread: the leader ships each round's
+//! post-FedAvg parameter snapshot through a channel and immediately goes
+//! on to encode the downlink and dispatch round r+1, while accuracy
+//! computes concurrently with the next round's worker compute.
+//!
+//! The thread owns its own [`Runtime`] + [`EvalState`] — the `xla`
+//! crate's PJRT handles are not `Send`, so one `Runtime` per thread is
+//! the documented contract (`runtime/mod.rs`), exactly as the federated
+//! workers already do. The sweep body itself is
+//! [`EvalState::dataset_accuracy`], the same function the sequential
+//! leader calls, so the pipelined `eval_acc` and the leader-eval
+//! transfer ledger are bit-identical to the oracle's
+//! (`tests/federated.rs` pins it).
+//!
+//! Results are joined asynchronously: the leader drains whatever is
+//! ready at round-log time ([`Evaluator::drain_ready`]) and blocks for
+//! the stragglers only once, before building the `FedSummary`
+//! ([`Evaluator::wait_for`]).
+
+use std::sync::mpsc::{self, Receiver, Sender, TryRecvError};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::ResidencyMode;
+use crate::data::Dataset;
+use crate::manifest::{ArtifactSpec, ModelSpec};
+use crate::params::ParamStore;
+use crate::runtime::exec::EvalState;
+use crate::runtime::{Runtime, TransferStats};
+use crate::tensor::Tensor;
+
+/// One finished round evaluation, joined into its `RoundReport` by the
+/// leader.
+#[derive(Clone, Debug)]
+pub struct EvalOutcome {
+    /// the round whose post-FedAvg params were evaluated
+    pub round: usize,
+    /// global-model accuracy on the leader's test set
+    pub acc: f64,
+    /// the evaluator's host↔device ledger for this sweep (one `4·P`
+    /// param upload per round with resident eval, same as the oracle)
+    pub transfer: TransferStats,
+}
+
+struct EvalJob {
+    round: usize,
+    params: Vec<Tensor>,
+}
+
+/// Handle to the evaluator thread. Dropping it closes the job channel
+/// and joins the thread.
+pub struct Evaluator {
+    tx: Option<Sender<EvalJob>>,
+    rx: Receiver<Result<EvalOutcome, String>>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl Evaluator {
+    /// Spawn the evaluator thread: it brings up its own PJRT client,
+    /// compiles the fwd artifact, and owns `test`. Compile failures
+    /// surface through the ready handshake so `spawn` stays synchronous
+    /// and fallible (the `WorkerHandle::spawn` pattern).
+    pub fn spawn(
+        model: &ModelSpec,
+        fwd: ArtifactSpec,
+        eval_residency: ResidencyMode,
+        test: Dataset,
+        seed: u64,
+    ) -> Result<Self> {
+        let model = model.clone();
+        let (tx, job_rx) = mpsc::channel::<EvalJob>();
+        let (out_tx, rx) = mpsc::channel::<Result<EvalOutcome, String>>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let join = std::thread::Builder::new()
+            .name("leader-eval".into())
+            .spawn(move || {
+                let setup = (|| -> Result<(EvalState, ParamStore)> {
+                    let rt = Runtime::cpu()?;
+                    let exe = rt.load(&fwd)?;
+                    let eval = EvalState::new(&rt, exe, &model, eval_residency)?;
+                    // the store only lends its params/shape to the fwd
+                    // artifact; each job overwrites them with the round's
+                    // post-FedAvg snapshot
+                    Ok((eval, ParamStore::init(&model, seed)))
+                })();
+                let (eval, mut store) = match setup {
+                    Ok(v) => {
+                        let _ = ready_tx.send(Ok(()));
+                        v
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(job) = job_rx.recv() {
+                    store.params = job.params;
+                    eval.reset_transfer_stats();
+                    let out = eval
+                        .dataset_accuracy(&store, &test, model.batch)
+                        .map(|acc| EvalOutcome {
+                            round: job.round,
+                            acc,
+                            transfer: eval.transfer_stats(),
+                        })
+                        .map_err(|e| format!("{e:#}"));
+                    if out_tx.send(out).is_err() {
+                        return; // leader gone
+                    }
+                }
+            })
+            .map_err(|e| anyhow!("spawning evaluator thread: {e}"))?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("evaluator died during startup"))?
+            .map_err(|e| e.context("evaluator failed to compile fwd artifact"))?;
+        Ok(Self {
+            tx: Some(tx),
+            rx,
+            join: Some(join),
+        })
+    }
+
+    /// Queue one round's post-FedAvg snapshot (non-blocking; jobs are
+    /// evaluated FIFO).
+    pub fn submit(&self, round: usize, params: Vec<Tensor>) -> Result<()> {
+        self.tx
+            .as_ref()
+            .expect("evaluator channel open while handle lives")
+            .send(EvalJob { round, params })
+            .map_err(|_| anyhow!("evaluator channel closed"))
+    }
+
+    /// Every outcome that has finished so far — never blocks (round-log
+    /// time: join the latest available results into their reports).
+    pub fn drain_ready(&self) -> Result<Vec<EvalOutcome>> {
+        let mut out = Vec::new();
+        loop {
+            match self.rx.try_recv() {
+                Ok(Ok(o)) => out.push(o),
+                Ok(Err(e)) => return Err(anyhow!("evaluator: {e}")),
+                Err(TryRecvError::Empty | TryRecvError::Disconnected) => break,
+            }
+        }
+        Ok(out)
+    }
+
+    /// Block until `n` more outcomes arrive (run teardown: every
+    /// submitted round must be joined before the `FedSummary` is built).
+    pub fn wait_for(&self, n: usize) -> Result<Vec<EvalOutcome>> {
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            match self.rx.recv() {
+                Ok(Ok(o)) => out.push(o),
+                Ok(Err(e)) => return Err(anyhow!("evaluator: {e}")),
+                Err(_) => return Err(anyhow!("evaluator thread died with evals outstanding")),
+            }
+        }
+        Ok(out)
+    }
+}
+
+impl Drop for Evaluator {
+    fn drop(&mut self) {
+        self.tx.take(); // close the job channel so the thread exits
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}

@@ -1,16 +1,26 @@
 //! FedAvg aggregation (McMahan et al. 2017 — the paper's reference [16]).
 //!
-//! Two paths: the dense mean over full parameter snapshots
-//! ([`weighted_fedavg`], the legacy exchange), and the sparse-accumulate
-//! path over pruned wire deltas ([`weighted_sparse_fedavg`]) — the leader
-//! folds each worker's surviving coordinates straight into the global
-//! params in O(nnz) per worker instead of decoding dense per-worker
-//! tensors.
+//! Three layers:
+//!
+//! * the dense fold over full parameter snapshots ([`weighted_fedavg`],
+//!   the legacy exchange) and the sparse-accumulate fold over pruned
+//!   wire deltas ([`weighted_sparse_fedavg`]) — both now accumulate in
+//!   **f64** and chunk their O(P) passes across the scoped-thread pool
+//!   (`util::par`), so the fold is fast *and* bit-deterministic for a
+//!   given worker order;
+//! * [`StreamingAggregator`], the leader's order-insensitive front-end:
+//!   per-report decode work happens the moment a report arrives off the
+//!   channel, the final fold always runs in worker-id order — so the
+//!   aggregate is bit-identical no matter the arrival order, which is
+//!   what lets the pipelined leader schedule stay a bit-for-bit twin of
+//!   the sequential oracle.
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
-use crate::comm::TensorUpdate;
+use crate::comm::{ModelUpdate, SparseTensor, TensorUpdate};
+use crate::config::CommMode;
 use crate::tensor::Tensor;
+use crate::util::par;
 
 /// Unweighted mean of parameter sets.
 pub fn fedavg(updates: &[&Vec<Tensor>]) -> Result<Vec<Tensor>> {
@@ -18,7 +28,38 @@ pub fn fedavg(updates: &[&Vec<Tensor>]) -> Result<Vec<Tensor>> {
     weighted_fedavg(updates, &w)
 }
 
+fn check_weights(n_updates: usize, weights: &[f64]) -> Result<f64> {
+    if n_updates == 0 {
+        bail!("no updates to aggregate");
+    }
+    if n_updates != weights.len() {
+        bail!("{} updates vs {} weights", n_updates, weights.len());
+    }
+    let total: f64 = weights.iter().sum();
+    if total <= 0.0 {
+        bail!("non-positive total weight");
+    }
+    Ok(total)
+}
+
+/// Narrow an f64 accumulator into a fresh f32 tensor (chunk-parallel).
+fn narrow(shape: &[usize], acc: &[f64]) -> Tensor {
+    let mut data = vec![0.0f32; acc.len()];
+    par::for_each_chunk_pair(&mut data, acc, |_, o, s| {
+        for (d, &v) in o.iter_mut().zip(s) {
+            *d = v as f32;
+        }
+    });
+    Tensor::new(shape.to_vec(), data)
+}
+
 /// Examples-weighted FedAvg: global_i = Σ_k (n_k / n) · params_k,i.
+///
+/// Accumulates in f64, folding workers in the order given — the caller
+/// (the [`StreamingAggregator`]) fixes that order to worker id, which
+/// makes the result independent of report arrival order. Each worker's
+/// O(P) pass chunks across the thread pool; the arithmetic is
+/// element-wise, so the parallel fold is bit-identical to sequential.
 ///
 /// ```
 /// use efficientgrad::coordinator::weighted_fedavg;
@@ -30,34 +71,30 @@ pub fn fedavg(updates: &[&Vec<Tensor>]) -> Result<Vec<Tensor>> {
 /// assert_eq!(global[0].data(), &[3.0, 5.0]);
 /// ```
 pub fn weighted_fedavg(updates: &[&Vec<Tensor>], weights: &[f64]) -> Result<Vec<Tensor>> {
-    if updates.is_empty() {
-        bail!("no updates to aggregate");
-    }
-    if updates.len() != weights.len() {
-        bail!("{} updates vs {} weights", updates.len(), weights.len());
-    }
-    let total: f64 = weights.iter().sum();
-    if total <= 0.0 {
-        bail!("non-positive total weight");
-    }
+    let total = check_weights(updates.len(), weights)?;
     let n_tensors = updates[0].len();
     for (k, u) in updates.iter().enumerate() {
         if u.len() != n_tensors {
             bail!("worker {k} returned {} tensors, expected {n_tensors}", u.len());
         }
     }
-    // seed the accumulator with a scaled copy of the first update: one
-    // pass, no zero-fill + axpy double traversal
-    let alpha0 = (weights[0] / total) as f32;
-    let mut out: Vec<Tensor> = updates[0].iter().map(|t| t.scaled(alpha0)).collect();
-    for (k, u) in updates.iter().enumerate().skip(1) {
-        let alpha = (weights[k] / total) as f32;
-        for (acc, t) in out.iter_mut().zip(u.iter()) {
-            if acc.shape() != t.shape() {
-                bail!("worker {k}: shape mismatch {:?} vs {:?}", t.shape(), acc.shape());
+    let mut out = Vec::with_capacity(n_tensors);
+    for (ti, first) in updates[0].iter().enumerate() {
+        let shape = first.shape();
+        let mut acc = vec![0.0f64; first.len()];
+        for (k, u) in updates.iter().enumerate() {
+            let t = &u[ti];
+            if t.shape() != shape {
+                bail!("worker {k}: shape mismatch {:?} vs {:?}", t.shape(), shape);
             }
-            acc.axpy(alpha, t);
+            let alpha = weights[k] / total;
+            par::for_each_chunk_pair(&mut acc, t.data(), |_, a, s| {
+                for (x, &v) in a.iter_mut().zip(s) {
+                    *x += alpha * v as f64;
+                }
+            });
         }
+        out.push(narrow(shape, &acc));
     }
     Ok(out)
 }
@@ -69,8 +106,10 @@ pub fn weighted_fedavg(updates: &[&Vec<Tensor>], weights: &[f64]) -> Result<Vec<
 /// `local_k = base + decode(Δ_k)` up to pruning error, which its codec
 /// carries as error-feedback residual), so this is exactly
 /// `Σ_k w_k · local_k` in expectation — the FedAvg semantic carried to
-/// the compressed wire. Cost: one O(P) copy of `base`, then O(nnz) per
-/// worker ([`Tensor::axpy_sparse`] underneath), never O(P·workers).
+/// the compressed wire. Cost: one O(P) widen of `base` into the f64
+/// accumulator (chunk-parallel), then O(nnz) per worker
+/// ([`TensorUpdate::axpy_into_f64`]), never O(P·workers). Worker fold
+/// order is the caller's — fixed to worker id by the aggregator.
 ///
 /// ```
 /// use efficientgrad::comm::{SparseTensor, TensorUpdate};
@@ -88,39 +127,156 @@ pub fn weighted_sparse_fedavg(
     updates: &[&Vec<TensorUpdate>],
     weights: &[f64],
 ) -> Result<Vec<Tensor>> {
-    if updates.is_empty() {
-        bail!("no updates to aggregate");
-    }
-    if updates.len() != weights.len() {
-        bail!("{} updates vs {} weights", updates.len(), weights.len());
-    }
-    let total: f64 = weights.iter().sum();
-    if total <= 0.0 {
-        bail!("non-positive total weight");
-    }
-    let mut out: Vec<Tensor> = base.to_vec();
+    let total = check_weights(updates.len(), weights)?;
     for (k, u) in updates.iter().enumerate() {
         if u.len() != base.len() {
             bail!("worker {k} sent {} delta tensors, expected {}", u.len(), base.len());
         }
-        let alpha = (weights[k] / total) as f32;
-        for (acc, tu) in out.iter_mut().zip(u.iter()) {
-            if tu.elems() != acc.len() {
-                bail!(
-                    "worker {k}: delta sized {} vs tensor {}",
-                    tu.elems(),
-                    acc.len()
-                );
+    }
+    let mut out = Vec::with_capacity(base.len());
+    for (ti, b) in base.iter().enumerate() {
+        // widen base into the accumulator (chunk-parallel)
+        let mut acc = vec![0.0f64; b.len()];
+        par::for_each_chunk_pair(&mut acc, b.data(), |_, a, s| {
+            for (x, &v) in a.iter_mut().zip(s) {
+                *x = v as f64;
             }
-            tu.axpy_into(alpha, acc);
+        });
+        for (k, u) in updates.iter().enumerate() {
+            let tu = &u[ti];
+            if tu.elems() != b.len() {
+                bail!("worker {k}: delta sized {} vs tensor {}", tu.elems(), b.len());
+            }
+            tu.axpy_into_f64(weights[k] / total, &mut acc);
         }
+        out.push(narrow(b.shape(), &acc));
     }
     Ok(out)
+}
+
+/// Order-insensitive streaming front-end for the leader's aggregation.
+///
+/// [`StreamingAggregator::accept`] does the per-report work the moment a
+/// `WorkerReport` comes off the channel — comm-mode validation and, for
+/// `sign` updates, the O(E) bit-plane decode into explicit survivor
+/// lists — so a straggler delays only *its own* decode instead of
+/// serializing everyone's behind the barrier. [`StreamingAggregator::finish`]
+/// then folds the decoded slots in **worker-id order** through the f64
+/// fold above, making the aggregate bit-identical regardless of arrival
+/// order (pinned by the shuffled-arrival test below and by the
+/// pipelined-vs-sequential federated parity pin).
+pub struct StreamingAggregator {
+    comm: CommMode,
+    /// per worker id: (FedAvg weight, decoded update)
+    slots: Vec<Option<(f64, ModelUpdate)>>,
+}
+
+impl StreamingAggregator {
+    pub fn new(comm: CommMode, workers: usize) -> Self {
+        Self {
+            comm,
+            slots: (0..workers).map(|_| None).collect(),
+        }
+    }
+
+    /// Reports decoded so far.
+    pub fn accepted(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Decode one report now (arrival time). Mode mismatches and
+    /// duplicate reports are protocol errors.
+    pub fn accept(&mut self, worker_id: usize, weight: f64, update: ModelUpdate) -> Result<()> {
+        let slot = self
+            .slots
+            .get_mut(worker_id)
+            .ok_or_else(|| anyhow!("report from unknown worker {worker_id}"))?;
+        if slot.is_some() {
+            bail!("worker {worker_id} reported twice in one round");
+        }
+        let decoded = match (self.comm, update) {
+            (CommMode::Dense, u @ ModelUpdate::Dense(_)) => u,
+            (CommMode::Dense, ModelUpdate::Delta(_)) => {
+                bail!("worker {worker_id} sent a delta in dense mode")
+            }
+            (_, ModelUpdate::Dense(_)) => {
+                bail!("worker {worker_id} sent dense params in delta mode")
+            }
+            (_, ModelUpdate::Delta(us)) => {
+                ModelUpdate::Delta(us.into_iter().map(predecode).collect())
+            }
+        };
+        *slot = Some((weight, decoded));
+        Ok(())
+    }
+
+    /// Fold in worker-id order. `reference` is the base the delta modes
+    /// rebase on (ignored in dense mode). `Ok(None)` when no report
+    /// arrived (a fleet-wide outage round — the global model stands).
+    pub fn finish(self, reference: &[Tensor]) -> Result<Option<Vec<Tensor>>> {
+        let mut weights = Vec::new();
+        let mut ups = Vec::new();
+        for slot in self.slots {
+            if let Some((w, u)) = slot {
+                weights.push(w);
+                ups.push(u);
+            }
+        }
+        if ups.is_empty() {
+            return Ok(None);
+        }
+        match self.comm {
+            CommMode::Dense => {
+                let dense: Vec<&Vec<Tensor>> = ups
+                    .iter()
+                    .map(|u| match u {
+                        ModelUpdate::Dense(p) => p,
+                        ModelUpdate::Delta(_) => unreachable!("accept() validated the mode"),
+                    })
+                    .collect();
+                Ok(Some(weighted_fedavg(&dense, &weights)?))
+            }
+            _ => {
+                let deltas: Vec<&Vec<TensorUpdate>> = ups
+                    .iter()
+                    .map(|u| match u {
+                        ModelUpdate::Delta(d) => d,
+                        ModelUpdate::Dense(_) => unreachable!("accept() validated the mode"),
+                    })
+                    .collect();
+                Ok(Some(weighted_sparse_fedavg(reference, &deltas, &weights)?))
+            }
+        }
+    }
+}
+
+/// Arrival-time decode of one wire tensor: sign bit-planes unpack into
+/// explicit survivor (index, value) lists — the exact values and order
+/// `for_each_survivor` yields, so the later fold is unchanged math —
+/// while sparse updates are already in fold-ready form.
+fn predecode(u: TensorUpdate) -> TensorUpdate {
+    match u {
+        TensorUpdate::Sign(t) => {
+            let mut indices = Vec::with_capacity(t.nnz as usize);
+            let mut values = Vec::with_capacity(t.nnz as usize);
+            t.for_each_survivor(|i, v| {
+                indices.push(i as u32);
+                values.push(v);
+            });
+            TensorUpdate::Sparse(SparseTensor {
+                elems: t.elems,
+                indices,
+                values,
+            })
+        }
+        u => u,
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::comm::SignTensor;
     use crate::testing::{for_all, UsizeIn};
     use crate::util::rng::Rng;
 
@@ -159,7 +315,6 @@ mod tests {
 
     #[test]
     fn sparse_fedavg_matches_dense_on_equivalent_inputs() {
-        use crate::comm::{SparseTensor, TensorUpdate};
         // base + Δ_k == the dense snapshots handed to weighted_fedavg:
         // both paths must agree to f32 rounding
         let base = vec![t(&[1.0, -2.0, 0.5, 0.0])];
@@ -179,7 +334,6 @@ mod tests {
 
     #[test]
     fn sparse_fedavg_rejects_mismatches() {
-        use crate::comm::{SparseTensor, TensorUpdate};
         let base = vec![t(&[0.0, 0.0])];
         let ok = vec![TensorUpdate::Sparse(SparseTensor::encode(&[1.0, 0.0]))];
         let wrong_size = vec![TensorUpdate::Sparse(SparseTensor::encode(&[1.0]))];
@@ -241,5 +395,97 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    /// Build one worker's delta update from a dense pruned buffer, in
+    /// the given wire format.
+    fn delta_update(pruned: &[f32], sign: bool) -> ModelUpdate {
+        let tu = if sign {
+            TensorUpdate::Sign(SignTensor::encode(pruned))
+        } else {
+            TensorUpdate::Sparse(SparseTensor::encode(pruned))
+        };
+        ModelUpdate::Delta(vec![tu])
+    }
+
+    #[test]
+    fn streaming_aggregation_is_arrival_order_invariant() {
+        // the streaming-aggregation determinism claim: accept() order
+        // must not change a single bit of finish()'s fold — worker-id
+        // order is the only order that matters
+        let n = 67; // crosses a u32 bit-plane word in sign mode
+        let base: Vec<Tensor> = vec![t(&(0..n).map(|i| (i as f32).cos()).collect::<Vec<_>>())];
+        let mut rng = Rng::new(3);
+        let workers = 4usize;
+        let mut pruned: Vec<Vec<f32>> = Vec::new();
+        for _ in 0..workers {
+            let mut d = vec![0f32; n];
+            rng.fill_normal(&mut d, 0.1);
+            for (i, v) in d.iter_mut().enumerate() {
+                if i % 3 == 0 {
+                    *v = 0.0; // realistic sparsity
+                }
+            }
+            pruned.push(d);
+        }
+        let weights: Vec<f64> = (1..=workers).map(|w| w as f64).collect();
+        let arrivals: [[usize; 4]; 4] =
+            [[0, 1, 2, 3], [3, 2, 1, 0], [2, 0, 3, 1], [1, 3, 0, 2]];
+        for mode in [CommMode::Pruned, CommMode::Sign] {
+            let mk = |id: usize| delta_update(&pruned[id], mode == CommMode::Sign);
+            let mut reference: Option<Vec<Tensor>> = None;
+            for order in arrivals {
+                let mut agg = StreamingAggregator::new(mode, workers);
+                for id in order {
+                    agg.accept(id, weights[id], mk(id)).unwrap();
+                }
+                assert_eq!(agg.accepted(), workers);
+                let out = agg.finish(&base).unwrap().unwrap();
+                match &reference {
+                    None => reference = Some(out),
+                    Some(want) => assert_eq!(
+                        want, &out,
+                        "{mode:?}: arrival order {order:?} changed the fold"
+                    ),
+                }
+            }
+        }
+        // dense mode too (snapshots, partial fleet: worker 2 never reports)
+        let mut reference: Option<Vec<Tensor>> = None;
+        for order in [[0usize, 1, 3], [3, 1, 0], [1, 3, 0]] {
+            let mut agg = StreamingAggregator::new(CommMode::Dense, workers);
+            for id in order {
+                let mut snap = base[0].clone();
+                snap.axpy(1.0, &t(&pruned[id]));
+                agg.accept(id, weights[id], ModelUpdate::Dense(vec![snap])).unwrap();
+            }
+            let out = agg.finish(&base).unwrap().unwrap();
+            match &reference {
+                None => reference = Some(out),
+                Some(want) => assert_eq!(want, &out, "dense arrival {order:?} changed the fold"),
+            }
+        }
+    }
+
+    #[test]
+    fn streaming_aggregator_validates_protocol() {
+        let base = vec![t(&[0.0, 0.0])];
+        // delta in dense mode
+        let mut agg = StreamingAggregator::new(CommMode::Dense, 2);
+        assert!(agg.accept(0, 1.0, delta_update(&[1.0, 0.0], false)).is_err());
+        // dense in delta mode
+        let mut agg = StreamingAggregator::new(CommMode::Pruned, 2);
+        assert!(agg
+            .accept(0, 1.0, ModelUpdate::Dense(vec![t(&[1.0, 2.0])]))
+            .is_err());
+        // double report and unknown worker
+        let mut agg = StreamingAggregator::new(CommMode::Pruned, 2);
+        agg.accept(1, 1.0, delta_update(&[1.0, 0.0], false)).unwrap();
+        assert!(agg.accept(1, 1.0, delta_update(&[1.0, 0.0], false)).is_err());
+        assert!(agg.accept(5, 1.0, delta_update(&[1.0, 0.0], false)).is_err());
+        assert_eq!(agg.accepted(), 1);
+        // empty fold: no reports arrived → None, the global model stands
+        let empty = StreamingAggregator::new(CommMode::Pruned, 2);
+        assert!(empty.finish(&base).unwrap().is_none());
     }
 }

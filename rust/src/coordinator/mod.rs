@@ -13,6 +13,34 @@
 //! compiles its own executable — exactly like a fleet of edge devices,
 //! each with its own accelerator and its own ParamStore replica.
 //!
+//! ## Round schedules
+//!
+//! Two leader schedules, selected by `federated.pipeline` / `--pipeline`
+//! and **bit-identical in every result** (params, `eval_acc`, byte
+//! ledgers — pinned in `tests/federated.rs`); they differ only in wall
+//! time:
+//!
+//! * **sequential** (default, the oracle): barrier on every worker →
+//!   decode + FedAvg → full test-set eval sweep → downlink encode, all
+//!   serialized on the leader thread. Round wall time = slowest worker
+//!   + all leader work.
+//! * **pipelined**: each `WorkerReport` is decoded the moment it arrives
+//!   off the mpsc channel ([`fedavg::StreamingAggregator`] — a straggler
+//!   delays only its own decode), the final fold still runs in worker-id
+//!   order into f64 accumulators (arrival order cannot change a bit),
+//!   and the eval sweep moves to a dedicated [`evaluator::Evaluator`]
+//!   thread whose results join the reports asynchronously — the leader
+//!   encodes the downlink and dispatches round r+1 while accuracy
+//!   computes. [`RoundReport::leader_secs`] / [`RoundReport::worker_secs`]
+//!   split the round's wall time so the overlap is visible;
+//!   `runtime_hotpath` benches the two schedules against each other
+//!   under an injected straggler.
+//!
+//! The O(P) host loops both schedules share (FedAvg folds, codec
+//! delta/residual passes, eq. 3 comm pruning, σ) chunk across a scoped
+//! thread pool at fixed boundaries (`util::par`), which keeps them
+//! deterministic while using every core.
+//!
 //! Transfer model: with the default resident step backend
 //! (`runtime::resident`), each worker's host↔device traffic is one
 //! params upload + one params/momenta download *per round*, not per
@@ -32,29 +60,33 @@
 //! for resyncing workers that missed a downlink. Rounds degrade
 //! gracefully: a worker that goes silent (dropout injection, dispatch
 //! failure, failed step) is recorded in [`RoundReport::dropped`] and
-//! FedAvg re-weights over the reports that did arrive. Formulas:
-//! `docs/TRANSFER_MODEL.md`.
+//! FedAvg re-weights over the reports that did arrive; a fleet-wide
+//! outage round reports NaN means (skipped by the summary averages), not
+//! fake zeros. Formulas: `docs/TRANSFER_MODEL.md`.
 
+pub mod evaluator;
 pub mod fedavg;
 pub mod worker;
 
 use std::sync::mpsc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
 use crate::accel::energy::{EnergyTable, LinkEnergy};
-use crate::comm::{DeltaCodec, ModelUpdate, TensorUpdate};
+use crate::accel::{simulate_training, AccelConfig, Workload};
+use crate::comm::{DeltaCodec, ModelUpdate};
 use crate::config::{CommMode, FedConfig};
 use crate::data::synthetic::{generate, SynthConfig};
 use crate::data::Dataset;
-use crate::manifest::Manifest;
+use crate::manifest::{ArtifactSpec, Manifest, ModelSpec};
 use crate::params::ParamStore;
 use crate::runtime::{Runtime, TransferStats};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
-pub use fedavg::{fedavg, weighted_fedavg, weighted_sparse_fedavg};
+pub use evaluator::{EvalOutcome, Evaluator};
+pub use fedavg::{fedavg, weighted_fedavg, weighted_sparse_fedavg, StreamingAggregator};
 pub use worker::{WorkerHandle, WorkerReport, WorkerTask};
 
 /// Outcome of one federated round.
@@ -62,10 +94,13 @@ pub use worker::{WorkerHandle, WorkerReport, WorkerTask};
 pub struct RoundReport {
     /// round index (0-based)
     pub round: usize,
-    /// mean of the workers' mean local-step losses (0.0 on a round where
-    /// every worker dropped — see `dropped`/`worker_transfer`)
+    /// mean of the workers' mean local-step losses. **NaN** on a
+    /// fleet-wide outage round (no reports arrived — there is no
+    /// measurement, and a fake 0.0 would poison any averaged
+    /// trajectory); the [`FedSummary`] averages skip NaN rounds
     pub mean_loss: f64,
-    /// mean realized gradient sparsity across workers
+    /// mean realized gradient sparsity across workers (NaN on an outage
+    /// round, like `mean_loss`)
     pub mean_sparsity: f64,
     /// measured wire bytes shipped up (worker->leader) this round
     pub upload_bytes: u64,
@@ -85,10 +120,22 @@ pub struct RoundReport {
     pub uplink_survivors: u64,
     /// surviving delta coordinates summed across downlink payloads
     pub downlink_survivors: u64,
-    /// global-model accuracy on the leader's test set after aggregation
+    /// global-model accuracy on the leader's test set after aggregation.
+    /// Sequential schedule: computed inline. Pipelined: joined
+    /// asynchronously from the evaluator thread — NaN until joined, and
+    /// every round is joined by the time [`Leader::run`] returns its
+    /// [`FedSummary`]
     pub eval_acc: f64,
-    /// leader-measured wall time for the whole round
+    /// leader-measured wall time for the whole round (dispatch through
+    /// report construction; a pipelined round does not wait for its own
+    /// eval, which overlaps the next round)
     pub wall_secs: f64,
+    /// the slice of `wall_secs` the leader itself spent working —
+    /// report decode, FedAvg fold, eval sweep (sequential schedule
+    /// only) and downlink encode. The remainder of `wall_secs` is spent
+    /// waiting on workers; pipelining shrinks `leader_secs` by moving
+    /// eval off-thread and overlapping decode with the barrier
+    pub leader_secs: f64,
     /// per-worker simulated wall time (stragglers show here)
     pub worker_secs: Vec<f64>,
     /// per-worker host↔device ledgers for the round, sorted by worker id
@@ -97,7 +144,8 @@ pub struct RoundReport {
     /// sum of `worker_transfer` — the round's fleet-wide device-bus
     /// traffic, aggregated alongside the FedAvg params
     pub device_transfer: TransferStats,
-    /// the leader's own eval-sweep ledger for this round
+    /// the leader's own eval-sweep ledger for this round (pipelined:
+    /// joined with `eval_acc`)
     pub leader_eval_transfer: TransferStats,
 }
 
@@ -124,12 +172,30 @@ impl RoundReport {
     pub fn network_joules(&self, link: &LinkEnergy) -> f64 {
         link.joules(self.network_bytes())
     }
+
+    /// Simulated Joules of this round's *on-device training compute*:
+    /// one simulated training step of `workload` on `cfg` — with the
+    /// backward-phase sparsity gating driven by the round's **measured**
+    /// survivor fraction `1 − mean_sparsity` instead of the static
+    /// `expected_survivor_fraction(P)` — times the fleet's executed
+    /// steps this round (the sum of the worker ledgers' step counts).
+    /// 0.0 on an outage round: no steps ran, no compute was spent.
+    /// Reported per round next to [`RoundReport::device_joules`] /
+    /// [`RoundReport::network_joules`].
+    pub fn compute_joules(&self, cfg: &AccelConfig, workload: &Workload) -> f64 {
+        let steps: u64 = self.worker_transfer.iter().map(|t| t.steps).sum();
+        if steps == 0 || !self.mean_sparsity.is_finite() {
+            return 0.0;
+        }
+        let survivor = (1.0 - self.mean_sparsity).clamp(0.0, 1.0);
+        simulate_training(cfg, workload, survivor).total_energy_j() * steps as f64
+    }
 }
 
 /// Full run summary.
 #[derive(Clone, Debug)]
 pub struct FedSummary {
-    /// per-round reports in order
+    /// per-round reports in order (pipelined eval results all joined)
     pub rounds: Vec<RoundReport>,
     /// last round's eval accuracy
     pub final_acc: f64,
@@ -140,6 +206,64 @@ pub struct FedSummary {
     /// total device-bus ledger across the run (all workers' rounds plus
     /// the leader's eval sweeps)
     pub total_device_transfer: TransferStats,
+}
+
+impl FedSummary {
+    fn nan_mean(values: impl Iterator<Item = f64>) -> f64 {
+        let mut n = 0usize;
+        let mut sum = 0.0;
+        for v in values {
+            if v.is_finite() {
+                sum += v;
+                n += 1;
+            }
+        }
+        if n == 0 {
+            f64::NAN
+        } else {
+            sum / n as f64
+        }
+    }
+
+    /// Mean per-round loss over the rounds that measured one —
+    /// fleet-wide outage rounds carry NaN and are skipped, never
+    /// averaged in as zeros.
+    pub fn mean_round_loss(&self) -> f64 {
+        Self::nan_mean(self.rounds.iter().map(|r| r.mean_loss))
+    }
+
+    /// Mean realized gradient sparsity over the measured rounds (outage
+    /// rounds skipped, like [`FedSummary::mean_round_loss`]).
+    pub fn mean_round_sparsity(&self) -> f64 {
+        Self::nan_mean(self.rounds.iter().map(|r| r.mean_sparsity))
+    }
+}
+
+/// Per-report scalars captured at decode time, slotted by worker id so
+/// both schedules aggregate them in the same order regardless of when
+/// each report arrived (the update itself moves into the
+/// [`StreamingAggregator`]).
+#[derive(Clone, Copy)]
+struct ReportMeta {
+    mean_loss: f64,
+    mean_sparsity: f64,
+    sim_secs: f64,
+    transfer: TransferStats,
+    wire_bytes: u64,
+    survivors: u64,
+}
+
+impl ReportMeta {
+    fn of(r: &WorkerReport) -> Self {
+        Self {
+            mean_loss: r.mean_loss,
+            mean_sparsity: r.mean_sparsity,
+            sim_secs: r.sim_secs,
+            transfer: r.transfer,
+            wire_bytes: r.update.wire_bytes(),
+            survivors: r.update.survivors(),
+        }
+    }
 }
 
 /// The federated leader.
@@ -163,8 +287,18 @@ pub struct Leader {
     down_codec: DeltaCodec,
     workers: Vec<WorkerHandle>,
     test: Dataset,
-    eval: crate::runtime::exec::EvalState,
-    model_batch: usize,
+    /// the sequential schedule's eval driver. `None` under
+    /// `cfg.pipeline`: the evaluator thread owns the sweep there, and a
+    /// leader-side `EvalState` would only duplicate the fwd compile and
+    /// the resident param-buffer allocation
+    eval: Option<crate::runtime::exec::EvalState>,
+    /// model spec (batch, layers for the compute-energy workload, and
+    /// everything the pipelined evaluator thread needs to bring up its
+    /// own replica)
+    model: ModelSpec,
+    /// fwd artifact — compiled again by the evaluator thread in
+    /// pipelined mode (PJRT handles are not `Send`)
+    fwd_art: ArtifactSpec,
 }
 
 impl Leader {
@@ -189,11 +323,22 @@ impl Leader {
         let art = model.artifact(&tag).with_context(|| {
             format!("mode {:?} not exported for {}", cfg.train.mode, model.name)
         })?;
-        let eval_exe = rt.load(model.artifact("fwd")?)?;
+        let fwd_art = model.artifact("fwd")?.clone();
         // resident eval uploads the post-FedAvg params once per round
-        // (fingerprint cache) instead of once per test batch
-        let eval =
-            crate::runtime::exec::EvalState::new(rt, eval_exe, &model, cfg.train.eval_residency)?;
+        // (fingerprint cache) instead of once per test batch. Pipelined
+        // runs skip the leader-side driver entirely — the evaluator
+        // thread compiles its own (one Runtime per thread)
+        let eval = if cfg.pipeline {
+            None
+        } else {
+            let eval_exe = rt.load(&fwd_art)?;
+            Some(crate::runtime::exec::EvalState::new(
+                rt,
+                eval_exe,
+                &model,
+                cfg.train.eval_residency,
+            )?)
+        };
 
         let workers = shards
             .into_iter()
@@ -222,7 +367,8 @@ impl Leader {
             workers,
             test,
             eval,
-            model_batch: model.batch,
+            model,
+            fwd_art,
         })
     }
 
@@ -231,16 +377,40 @@ impl Leader {
         &self.global.params
     }
 
-    /// Run all rounds.
+    /// Run all rounds under the configured schedule (see the module docs
+    /// for the sequential-vs-pipelined timeline; results are identical).
     pub fn run(&mut self) -> Result<FedSummary> {
-        let mut rounds = Vec::with_capacity(self.cfg.rounds);
+        let mut rounds: Vec<RoundReport> = Vec::with_capacity(self.cfg.rounds);
         let mut straggler_rng = Rng::new(self.cfg.train.seed ^ 0x57AA);
         let mut dropout_rng = Rng::new(self.cfg.train.seed ^ 0xD50F);
         let mut downlink_rng = Rng::new(self.cfg.train.seed ^ 0xD0C0DE);
         let energy = EnergyTable::smic14();
         let link = LinkEnergy::wifi();
+        // measured-survivor compute energy: the accel simulator's
+        // backward-phase gating runs at each round's *realized* sparsity
+        // instead of the static expected_survivor_fraction(P)
+        let accel_cfg = crate::accel::config::efficientgrad();
+        let workload =
+            Workload::from_manifest(&self.model.name, &self.model.layers, self.model.batch);
+        // pipelined schedule: the eval sweep lives on its own thread
+        // (own Runtime — PJRT handles are not Send) and joins results
+        // asynchronously
+        let evaluator = if self.cfg.pipeline {
+            Some(Evaluator::spawn(
+                &self.model,
+                self.fwd_art.clone(),
+                self.cfg.train.eval_residency,
+                self.test.clone(),
+                self.cfg.train.seed,
+            )?)
+        } else {
+            None
+        };
+        let mut evals_pending = 0usize;
+
         for round in 0..self.cfg.rounds {
             let t0 = Instant::now();
+            let mut leader_busy = Duration::ZERO;
             // broadcast: dense snapshots in dense mode; the pending
             // global delta to in-sync workers otherwise (dense fallback
             // for round 0 and resyncs)
@@ -278,6 +448,7 @@ impl Leader {
                     payload,
                     local_steps: self.cfg.local_steps,
                     slowdown,
+                    sleep: self.cfg.straggler_sleep,
                     reply: tx.clone(),
                 }) {
                     Ok(()) => {
@@ -299,13 +470,40 @@ impl Leader {
             }
             drop(tx);
 
-            // gather whatever arrives: a worker that fails its round
-            // drops its reply sender without sending, so the channel
-            // closes once every dispatched task is resolved
-            let mut reports: Vec<WorkerReport> = rx.iter().collect();
-            reports.sort_by_key(|r| r.worker_id);
+            // gather: a worker that fails its round drops its reply
+            // sender without sending, so the channel closes once every
+            // dispatched task is resolved. Both schedules decode through
+            // the same StreamingAggregator; they differ only in *when*
+            // each report's decode runs.
+            let mut agg = StreamingAggregator::new(self.cfg.comm, self.workers.len());
+            let mut meta: Vec<Option<ReportMeta>> = vec![None; self.workers.len()];
+            if self.cfg.pipeline {
+                // streaming: decode each report the moment it arrives —
+                // a straggler delays only its own decode work
+                for r in rx.iter() {
+                    let t = Instant::now();
+                    let id = r.worker_id;
+                    let m = ReportMeta::of(&r);
+                    agg.accept(id, r.examples as f64, r.update)?;
+                    meta[id] = Some(m);
+                    leader_busy += t.elapsed();
+                }
+            } else {
+                // sequential oracle: barrier first, then decode in
+                // worker-id order — the reference schedule
+                let mut reports: Vec<WorkerReport> = rx.iter().collect();
+                let t = Instant::now();
+                reports.sort_by_key(|r| r.worker_id);
+                for r in reports {
+                    let id = r.worker_id;
+                    let m = ReportMeta::of(&r);
+                    agg.accept(id, r.examples as f64, r.update)?;
+                    meta[id] = Some(m);
+                }
+                leader_busy += t.elapsed();
+            }
             for &id in &dispatched_ids {
-                if !reports.iter().any(|r| r.worker_id == id) {
+                if meta[id].is_none() {
                     // went silent mid-round. Usually a failed step/sync
                     // (downlink already applied), but the failure may
                     // also have been in the apply itself — we cannot
@@ -316,7 +514,8 @@ impl Leader {
                 }
             }
             dropped.sort_unstable();
-            if reports.is_empty() {
+            let n_reports = meta.iter().flatten().count();
+            if n_reports == 0 {
                 // a fleet-wide outage round: nothing to aggregate, the
                 // global model stands, and the dropout record tells the
                 // story — a long-running deployment must not die to it
@@ -326,56 +525,52 @@ impl Leader {
                 );
             }
 
-            // aggregate (examples-weighted FedAvg over the survivors)
-            let weights: Vec<f64> = reports.iter().map(|r| r.examples as f64).collect();
-            let upload_bytes: u64 = reports.iter().map(|r| r.update.wire_bytes()).sum();
-            let uplink_survivors: u64 = reports.iter().map(|r| r.update.survivors()).sum();
-            if !reports.is_empty() {
-                match self.cfg.comm {
-                    CommMode::Dense => {
-                        let updates = reports
-                            .iter()
-                            .map(|r| match &r.update {
-                                ModelUpdate::Dense(p) => Ok(p),
-                                ModelUpdate::Delta(_) => {
-                                    bail!("worker {} sent a delta in dense mode", r.worker_id)
-                                }
-                            })
-                            .collect::<Result<Vec<&Vec<Tensor>>>>()?;
-                        self.global.params = weighted_fedavg(&updates, &weights)?;
-                    }
-                    _ => {
-                        let updates = reports
-                            .iter()
-                            .map(|r| match &r.update {
-                                ModelUpdate::Delta(u) => Ok(u),
-                                ModelUpdate::Dense(_) => {
-                                    bail!("worker {} sent dense params in delta mode", r.worker_id)
-                                }
-                            })
-                            .collect::<Result<Vec<&Vec<TensorUpdate>>>>()?;
-                        // O(nnz) per worker on top of the reference copy
-                        // — the leader never materializes dense
-                        // per-worker tensors
-                        self.global.params =
-                            weighted_sparse_fedavg(&self.reference, &updates, &weights)?;
-                    }
-                }
+            // aggregate: fold the decoded slots in worker-id order into
+            // f64 accumulators (examples-weighted FedAvg over the
+            // survivors; O(nnz) per worker in the compressed modes)
+            let t = Instant::now();
+            if let Some(params) = agg.finish(&self.reference)? {
+                self.global.params = params;
             }
-
-            let n_reports = reports.len().max(1) as f64;
-            let mean_loss = reports.iter().map(|r| r.mean_loss).sum::<f64>() / n_reports;
-            let mean_sparsity =
-                reports.iter().map(|r| r.mean_sparsity).sum::<f64>() / n_reports;
+            let upload_bytes: u64 = meta.iter().flatten().map(|m| m.wire_bytes).sum();
+            let uplink_survivors: u64 = meta.iter().flatten().map(|m| m.survivors).sum();
+            let (mean_loss, mean_sparsity) = if n_reports == 0 {
+                // no measurement exists — NaN, not a fake 0.0 that would
+                // poison any averaged trajectory (FedSummary skips NaN)
+                (f64::NAN, f64::NAN)
+            } else {
+                let n = n_reports as f64;
+                let loss: f64 = meta.iter().flatten().map(|m| m.mean_loss).sum();
+                let spars: f64 = meta.iter().flatten().map(|m| m.mean_sparsity).sum();
+                (loss / n, spars / n)
+            };
             // per-worker device-bus ledgers, aggregated like the params
             let worker_transfer: Vec<TransferStats> =
-                reports.iter().map(|r| r.transfer).collect();
+                meta.iter().flatten().map(|m| m.transfer).collect();
             let device_transfer = worker_transfer
                 .iter()
                 .fold(TransferStats::default(), |acc, &t| acc + t);
-            self.eval.reset_transfer_stats();
-            let eval_acc = self.evaluate()?;
-            let leader_eval_transfer = self.eval.transfer_stats();
+            let worker_secs: Vec<f64> = meta.iter().flatten().map(|m| m.sim_secs).collect();
+
+            // eval: inline on the sequential schedule; handed to the
+            // evaluator thread on the pipelined one (the snapshot clone
+            // is the handoff cost — the sweep overlaps round r+1)
+            let (eval_acc, leader_eval_transfer) = match &evaluator {
+                None => {
+                    let eval = self
+                        .eval
+                        .as_ref()
+                        .expect("sequential leader owns an EvalState");
+                    eval.reset_transfer_stats();
+                    let acc = eval.dataset_accuracy(&self.global, &self.test, self.model.batch)?;
+                    (acc, eval.transfer_stats())
+                }
+                Some(ev) => {
+                    ev.submit(round, self.global.params.clone())?;
+                    evals_pending += 1;
+                    (f64::NAN, TransferStats::default())
+                }
+            };
 
             // next round's downlink: the global delta vs the workers'
             // reference, through the same error-feedback codec as the
@@ -395,8 +590,9 @@ impl Leader {
                 update.apply(&mut self.reference)?;
                 self.pending_down = Some(update);
             }
+            leader_busy += t.elapsed();
 
-            let report = RoundReport {
+            let mut report = RoundReport {
                 round,
                 mean_loss,
                 mean_sparsity,
@@ -409,23 +605,66 @@ impl Leader {
                 downlink_survivors,
                 eval_acc,
                 wall_secs: t0.elapsed().as_secs_f64(),
-                worker_secs: reports.iter().map(|r| r.sim_secs).collect(),
+                leader_secs: leader_busy.as_secs_f64(),
+                worker_secs,
                 worker_transfer,
                 device_transfer,
                 leader_eval_transfer,
             };
+            // pipelined: join whatever eval results are ready by now
+            // (latest-available — this round's own eval may still be in
+            // flight; FedSummary joins the rest)
+            if let Some(ev) = &evaluator {
+                for o in ev.drain_ready()? {
+                    evals_pending -= 1;
+                    if o.round == round {
+                        report.eval_acc = o.acc;
+                        report.leader_eval_transfer = o.transfer;
+                    } else {
+                        rounds[o.round].eval_acc = o.acc;
+                        rounds[o.round].leader_eval_transfer = o.transfer;
+                    }
+                }
+            }
+            let (log_acc, acc_tag) = if report.eval_acc.is_finite() {
+                (report.eval_acc, "")
+            } else {
+                // newest joined accuracy, marked as trailing
+                (
+                    rounds
+                        .iter()
+                        .rev()
+                        .find(|r| r.eval_acc.is_finite())
+                        .map(|r| r.eval_acc)
+                        .unwrap_or(f64::NAN),
+                    "~",
+                )
+            };
             log::info!(
-                "round {round:3} loss {mean_loss:.4} acc {eval_acc:.4} sparsity {mean_sparsity:.3} \
-                 net {:.1} KB ({:.1} mJ) device {:.1} KB ({:.2} mJ) dropped {:?} ({:.2}s)",
+                "round {round:3} loss {mean_loss:.4} acc {log_acc:.4}{acc_tag} \
+                 sparsity {mean_sparsity:.3} net {:.1} KB ({:.1} mJ) device {:.1} KB \
+                 ({:.2} mJ) compute {:.1} mJ dropped {:?} ({:.2}s, leader {:.3}s)",
                 report.network_bytes() as f64 / 1e3,
                 report.network_joules(&link) * 1e3,
                 report.device_bytes() as f64 / 1e3,
                 report.device_joules(&energy) * 1e3,
+                report.compute_joules(&accel_cfg, &workload) * 1e3,
                 report.dropped,
-                report.wall_secs
+                report.wall_secs,
+                report.leader_secs,
             );
             rounds.push(report);
         }
+        // pipelined: every submitted round joins before the summary —
+        // all eval_acc values and leader-eval ledgers are final below
+        if let Some(ev) = &evaluator {
+            for o in ev.wait_for(evals_pending)? {
+                rounds[o.round].eval_acc = o.acc;
+                rounds[o.round].leader_eval_transfer = o.transfer;
+            }
+        }
+        drop(evaluator); // joins the eval thread
+
         let final_acc = rounds.last().map(|r| r.eval_acc).unwrap_or(0.0);
         let total_upload_bytes = rounds.iter().map(|r| r.upload_bytes).sum();
         let total_download_bytes = rounds.iter().map(|r| r.download_bytes).sum();
@@ -441,24 +680,81 @@ impl Leader {
         })
     }
 
-    fn evaluate(&self) -> Result<f64> {
-        let mut correct = 0.0;
-        let mut total = 0usize;
-        for idx in crate::data::batcher::eval_batches(&self.test, self.model_batch) {
-            let batch = self.test.gather(&idx);
-            correct += self.eval.accuracy(&self.global, &batch)? * idx.len() as f64;
-            total += idx.len();
-        }
-        if total == 0 {
-            bail!("test set smaller than one batch");
-        }
-        Ok(correct / total as f64)
-    }
-
     /// Graceful shutdown (joins worker threads).
     pub fn shutdown(self) {
         for w in self.workers {
             w.shutdown();
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stub_round(round: usize, loss: f64, sparsity: f64) -> RoundReport {
+        RoundReport {
+            round,
+            mean_loss: loss,
+            mean_sparsity: sparsity,
+            upload_bytes: 0,
+            download_bytes: 0,
+            dispatched: 0,
+            dropped: Vec::new(),
+            dense_downlinks: 0,
+            uplink_survivors: 0,
+            downlink_survivors: 0,
+            eval_acc: 0.0,
+            wall_secs: 0.0,
+            leader_secs: 0.0,
+            worker_secs: Vec::new(),
+            worker_transfer: Vec::new(),
+            device_transfer: TransferStats::default(),
+            leader_eval_transfer: TransferStats::default(),
+        }
+    }
+
+    #[test]
+    fn summary_averages_skip_outage_rounds() {
+        let s = FedSummary {
+            rounds: vec![
+                stub_round(0, 1.0, 0.5),
+                stub_round(1, f64::NAN, f64::NAN), // fleet-wide outage
+                stub_round(2, 3.0, 0.7),
+            ],
+            final_acc: 0.0,
+            total_upload_bytes: 0,
+            total_download_bytes: 0,
+            total_device_transfer: TransferStats::default(),
+        };
+        // the outage round is skipped, not averaged in as zeros
+        assert_eq!(s.mean_round_loss(), 2.0);
+        assert!((s.mean_round_sparsity() - 0.6).abs() < 1e-12);
+        let all_out = FedSummary {
+            rounds: vec![stub_round(0, f64::NAN, f64::NAN)],
+            ..s
+        };
+        assert!(all_out.mean_round_loss().is_nan());
+        assert!(all_out.mean_round_sparsity().is_nan());
+    }
+
+    #[test]
+    fn compute_joules_gates_on_measured_survivors() {
+        let cfg = crate::accel::config::efficientgrad();
+        let wl = crate::accel::resnet18_cifar(4);
+        let steps = TransferStats {
+            steps: 10,
+            ..TransferStats::default()
+        };
+        let mut sparse = stub_round(0, 1.0, 0.9); // 90% zeros measured
+        sparse.worker_transfer = vec![steps];
+        let mut dense = stub_round(0, 1.0, 0.0); // nothing pruned
+        dense.worker_transfer = vec![steps];
+        let js = sparse.compute_joules(&cfg, &wl);
+        let jd = dense.compute_joules(&cfg, &wl);
+        assert!(js > 0.0, "measured-survivor energy must be positive");
+        assert!(jd > js, "sparsity gating must discount compute: {jd} vs {js}");
+        // outage round: no steps ran, no compute spent
+        assert_eq!(stub_round(1, f64::NAN, f64::NAN).compute_joules(&cfg, &wl), 0.0);
     }
 }

@@ -47,6 +47,12 @@ pub struct WorkerTask {
     pub local_steps: usize,
     /// straggler slowdown factor (1.0 = healthy)
     pub slowdown: f64,
+    /// wall-clock straggler injection (`federated.straggler_sleep`):
+    /// actually hold the round for `(slowdown − 1)×` the measured work
+    /// time before replying, so schedule benchmarks see a real straggler
+    /// on the leader's clock. Off (the default), the slowdown is only
+    /// *reported* through `sim_secs` and tests stay fast.
+    pub sleep: bool,
     pub reply: mpsc::Sender<WorkerReport>,
 }
 
@@ -226,6 +232,17 @@ impl WorkerHandle {
                         }
                     };
                     let n = task.local_steps.max(1) as f64;
+                    // straggling: either genuinely hold the round on the
+                    // wall clock (sleep injection — the reply, and with
+                    // it the leader's barrier, waits) or only report the
+                    // inflated simulated time
+                    let sim_secs = if task.sleep && task.slowdown > 1.0 {
+                        let work = t0.elapsed();
+                        std::thread::sleep(work.mul_f64(task.slowdown - 1.0));
+                        t0.elapsed().as_secs_f64()
+                    } else {
+                        t0.elapsed().as_secs_f64() * task.slowdown
+                    };
                     let _ = task.reply.send(WorkerReport {
                         worker_id: id,
                         round: task.round,
@@ -233,7 +250,7 @@ impl WorkerHandle {
                         examples: shard_n,
                         mean_loss: losses / n,
                         mean_sparsity: spars / n,
-                        sim_secs: t0.elapsed().as_secs_f64() * task.slowdown,
+                        sim_secs,
                         transfer: driver.transfer_stats(),
                     });
                 }

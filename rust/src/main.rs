@@ -174,6 +174,8 @@ fn cmd_federated(raw: &[String]) -> Result<()> {
         FlagSpec { name: "local-steps", help: "local steps per round", takes_value: true, default: Some("10") },
         FlagSpec { name: "non-iid", help: "label-skewed shards", takes_value: false, default: None },
         FlagSpec { name: "straggler-prob", help: "per-round straggler probability", takes_value: true, default: Some("0.0") },
+        FlagSpec { name: "straggler-sleep", help: "stragglers hold the round on the wall clock (not just simulated time)", takes_value: false, default: None },
+        FlagSpec { name: "pipeline", help: "pipelined leader schedule: streaming aggregation + off-thread eval (results bit-identical to sequential)", takes_value: false, default: None },
         FlagSpec { name: "dropout-prob", help: "per-round worker dropout probability", takes_value: true, default: Some("0.0") },
         FlagSpec { name: "comm", help: "network-tier encoding (dense|pruned|sign)", takes_value: true, default: None },
         FlagSpec { name: "comm-rate", help: "comm pruning rate P (pruned|sign modes)", takes_value: true, default: None },
@@ -200,6 +202,12 @@ fn cmd_federated(raw: &[String]) -> Result<()> {
     if let Some(v) = args.get_f64("straggler-prob")? {
         cfg.straggler_prob = v;
     }
+    if args.get_bool("straggler-sleep") {
+        cfg.straggler_sleep = true;
+    }
+    if args.get_bool("pipeline") {
+        cfg.pipeline = true;
+    }
     if let Some(v) = args.get_f64("dropout-prob")? {
         cfg.dropout_prob = v;
     }
@@ -223,8 +231,9 @@ fn cmd_federated(raw: &[String]) -> Result<()> {
         .map(|r| r.network_joules(&link))
         .sum();
     println!(
-        "federated done: final_acc={:.4} rounds={} comm={} upload={:.2} MB download={:.2} MB \
-         (net {:.1} mJ over the {:.0} nJ/B link)",
+        "federated done [{} schedule]: final_acc={:.4} rounds={} comm={} upload={:.2} MB \
+         download={:.2} MB (net {:.1} mJ over the {:.0} nJ/B link)",
+        if cfg.pipeline { "pipelined" } else { "sequential" },
         summary.final_acc,
         summary.rounds.len(),
         cfg.comm.as_str(),

@@ -497,6 +497,31 @@ impl EvalState {
         let logits = self.logits(store, &batch.images)?;
         Ok(top1_accuracy(&logits, &batch.labels))
     }
+
+    /// Example-weighted top-1 accuracy over a whole dataset, swept in
+    /// `batch`-sized eval batches. This is the one eval-sweep body shared
+    /// by the sequential federated leader and the pipelined off-thread
+    /// evaluator (`coordinator::evaluator`), so both schedules run the
+    /// *same* sweep — same batching, same accumulation order — and their
+    /// `eval_acc` stays bit-identical.
+    pub fn dataset_accuracy(
+        &self,
+        store: &ParamStore,
+        ds: &crate::data::Dataset,
+        batch: usize,
+    ) -> Result<f64> {
+        let mut correct = 0.0;
+        let mut total = 0usize;
+        for idx in crate::data::batcher::eval_batches(ds, batch) {
+            let b = ds.gather(&idx);
+            correct += self.accuracy(store, &b)? * idx.len() as f64;
+            total += idx.len();
+        }
+        if total == 0 {
+            bail!("test set smaller than one batch");
+        }
+        Ok(correct / total as f64)
+    }
 }
 
 /// Fig. 3 probe driver: (params…, feedback…, images, labels, seed) ->

@@ -63,9 +63,11 @@ pub use resident::{
 /// PJRT CPU client + compile cache.
 ///
 /// NOT `Send`/`Sync`: the underlying `xla` crate wraps PJRT handles in
-/// `Rc`. Multi-threaded users (the federated coordinator) create one
-/// `Runtime` per thread — which also matches the deployment being
-/// modeled: every edge device owns its own accelerator instance.
+/// `Rc`. Multi-threaded users create one `Runtime` per thread — the
+/// federated workers (each edge device owns its own accelerator
+/// instance, exactly like the deployment being modeled) and the
+/// pipelined leader's evaluator thread
+/// (`coordinator::evaluator::Evaluator`) both follow this contract.
 pub struct Runtime {
     client: xla::PjRtClient,
     /// compile cache keyed by artifact path

@@ -35,6 +35,14 @@ pub fn stochastic_prune_into(delta: &[f32], tau: f64, rng: &mut Rng, out: &mut [
         out.len(),
         delta.len()
     );
+    prune_slice(delta, tau, rng, out);
+}
+
+/// The eq. 3 element loop over one slice, shared by the single-stream
+/// and partitioned variants. An element escapes the band outright when
+/// |δ| > τ; in-band elements are promoted to ±τ with probability |δ|/τ
+/// (one uniform draw each), else zeroed.
+fn prune_slice(delta: &[f32], tau: f64, rng: &mut Rng, out: &mut [f32]) {
     for (o, &d) in out.iter_mut().zip(delta) {
         let mag = d.abs() as f64;
         *o = if mag > tau {
@@ -48,6 +56,36 @@ pub fn stochastic_prune_into(delta: &[f32], tau: f64, rng: &mut Rng, out: &mut [
             }
         };
     }
+}
+
+/// Deterministic-partition variant of [`stochastic_prune_into`]: the
+/// buffer is split at the fixed [`crate::util::par::CHUNK`] boundaries,
+/// chunk `c` draws from its own child stream `base.fold_in(c)`, and the
+/// chunks run across the scoped-thread pool. Because both the partition
+/// and each chunk's stream depend only on element positions and `base`
+/// — never on thread count or scheduling — the output is bit-identical
+/// however many threads execute it (run it twice, or with
+/// `EFFICIENTGRAD_PAR_THREADS=1`, and compare). That property is what
+/// lets the federated comm codec prune big deltas on every core while
+/// the pipelined and sequential leader schedules stay bit-for-bit twins.
+///
+/// The draws are a *different* (equally valid) sampling of eq. 3 than
+/// the single-stream variant's — one conditional draw per in-band
+/// element, but from per-chunk streams — so outputs of the two variants
+/// differ element-wise while sharing every distributional property
+/// (expectation preservation, realized sparsity).
+pub fn stochastic_prune_into_partitioned(delta: &[f32], tau: f64, base: &Rng, out: &mut [f32]) {
+    assert_eq!(
+        delta.len(),
+        out.len(),
+        "prune output buffer len {} != input {}",
+        out.len(),
+        delta.len()
+    );
+    crate::util::par::for_each_chunk_pair(out, delta, |ci, o, d| {
+        let mut rng = base.fold_in(ci as u64);
+        prune_slice(d, tau, &mut rng, o);
+    });
 }
 
 /// eq. 3 applied on the host (verification / simulation only). Thin
@@ -202,6 +240,44 @@ mod tests {
     fn prune_into_rejects_short_buffer() {
         let mut out = vec![0f32; 2];
         stochastic_prune_into(&[1.0, 2.0, 3.0], 1.0, &mut Rng::new(0), &mut out);
+    }
+
+    #[test]
+    fn partitioned_prune_is_deterministic_and_distribution_faithful() {
+        let n = 2 * crate::util::par::CHUNK + 123; // spans the thread pool
+        let mut rng = Rng::new(8);
+        let mut delta = vec![0f32; n];
+        rng.fill_normal(&mut delta, 1.0);
+        let tau = tau_from_rate(std_dev(&delta), 0.9);
+        let base = Rng::new(77);
+        let mut a = vec![0f32; n];
+        let mut b = vec![0f32; n];
+        stochastic_prune_into_partitioned(&delta, tau, &base, &mut a);
+        stochastic_prune_into_partitioned(&delta, tau, &base, &mut b);
+        assert_eq!(a, b, "partitioned prune not reproducible");
+        // same eq. 3 semantics: out-of-band passthrough, in-band → ±τ|0
+        for (&d, &o) in delta.iter().zip(&a) {
+            if (d.abs() as f64) > tau {
+                assert_eq!(o, d);
+            } else {
+                assert!(o == 0.0 || (o.abs() as f64 - tau).abs() < 1e-6, "in-band {d} -> {o}");
+            }
+        }
+        // realized sparsity matches the closed form like the
+        // single-stream variant does
+        let measured = zero_fraction(&a);
+        let want = expected_zero_fraction(0.9);
+        assert!(
+            (measured - want).abs() < 0.02,
+            "partitioned sparsity {measured} vs expected {want}"
+        );
+        // chunks draw from independent streams: chunk 0 and chunk 1 must
+        // not produce identical promotion patterns on identical inputs
+        let flat = vec![0.5f32; 2 * crate::util::par::CHUNK];
+        let mut out = vec![0f32; flat.len()];
+        stochastic_prune_into_partitioned(&flat, 1.0, &base, &mut out);
+        let c = crate::util::par::CHUNK;
+        assert_ne!(&out[..c], &out[c..2 * c], "per-chunk streams collided");
     }
 
     #[test]

@@ -102,21 +102,31 @@ impl Tensor {
     }
 
     // -- in-place arithmetic used by FedAvg / metrics ----------------------
+    //
+    // The O(P) kernels below chunk across the scoped-thread pool in
+    // `util::par`. Every one is element-wise (or, for the sparse
+    // scatter, range-partitioned on sorted indices), so the parallel
+    // result is bit-identical to the sequential one — required by the
+    // pipelined-vs-sequential federated parity pin.
 
     /// self += other
     pub fn add_assign(&mut self, other: &Tensor) {
         assert_eq!(self.shape, other.shape);
-        for (a, b) in self.data.iter_mut().zip(&other.data) {
-            *a += *b;
-        }
+        crate::util::par::for_each_chunk_pair(&mut self.data, &other.data, |_, a, b| {
+            for (x, &y) in a.iter_mut().zip(b) {
+                *x += y;
+            }
+        });
     }
 
     /// self += alpha * other
     pub fn axpy(&mut self, alpha: f32, other: &Tensor) {
         assert_eq!(self.shape, other.shape);
-        for (a, b) in self.data.iter_mut().zip(&other.data) {
-            *a += alpha * *b;
-        }
+        crate::util::par::for_each_chunk_pair(&mut self.data, &other.data, |_, a, b| {
+            for (x, &y) in a.iter_mut().zip(b) {
+                *x += alpha * y;
+            }
+        });
     }
 
     /// self[indices[j]] += alpha * values[j] — the sparse-accumulate
@@ -128,6 +138,14 @@ impl Tensor {
     /// Indices are element offsets into the row-major buffer; out-of-range
     /// indices panic (a malformed wire update must not silently corrupt
     /// the aggregate).
+    ///
+    /// When the index list is sorted (the wire encoder always emits it
+    /// sorted) and both sides are big enough to matter, the scatter is
+    /// range-partitioned: each destination chunk is updated by exactly
+    /// the contiguous index subrange that lands in it, in the original
+    /// order — so the parallel scatter is bit-identical to the
+    /// sequential one (duplicates still accumulate in order). Unsorted
+    /// callers fall back to the sequential loop.
     pub fn axpy_sparse(&mut self, alpha: f32, indices: &[u32], values: &[f32]) {
         assert_eq!(
             indices.len(),
@@ -136,6 +154,38 @@ impl Tensor {
             indices.len(),
             values.len()
         );
+        let chunk = crate::util::par::CHUNK;
+        let sorted = indices.len() > chunk
+            && self.data.len() > chunk
+            && indices.windows(2).all(|w| w[0] <= w[1]);
+        if sorted {
+            // sorted ⇒ the max is last; check it up front so the
+            // parallel path panics on out-of-range exactly like the
+            // sequential indexing below would
+            if let Some(&last) = indices.last() {
+                assert!(
+                    (last as usize) < self.data.len(),
+                    "sparse axpy: index {last} out of range for {} elements",
+                    self.data.len()
+                );
+            }
+            let mut tasks: Vec<(&mut [f32], usize, &[u32], &[f32])> = Vec::new();
+            for (ci, dst) in self.data.chunks_mut(chunk).enumerate() {
+                let start = ci * chunk;
+                let end = start + dst.len();
+                let lo = indices.partition_point(|&i| (i as usize) < start);
+                let hi = indices.partition_point(|&i| (i as usize) < end);
+                if lo < hi {
+                    tasks.push((dst, start, &indices[lo..hi], &values[lo..hi]));
+                }
+            }
+            crate::util::par::run_tasks(tasks, |(dst, start, idx, vals)| {
+                for (&i, &v) in idx.iter().zip(vals) {
+                    dst[i as usize - start] += alpha * v;
+                }
+            });
+            return;
+        }
         for (&i, &v) in indices.iter().zip(values) {
             self.data[i as usize] += alpha * v;
         }
@@ -143,16 +193,25 @@ impl Tensor {
 
     /// self *= alpha
     pub fn scale(&mut self, alpha: f32) {
-        for a in self.data.iter_mut() {
-            *a *= alpha;
-        }
+        crate::util::par::for_each_chunk_mut(&mut self.data, |_, c| {
+            for a in c.iter_mut() {
+                *a *= alpha;
+            }
+        });
     }
 
-    /// alpha * self as a new tensor — single pass, no zero-fill.
+    /// alpha * self as a new tensor — single pass over the source, no
+    /// second zero-fill traversal (the allocation is zeroed by the OS).
     pub fn scaled(&self, alpha: f32) -> Tensor {
+        let mut data = vec![0.0f32; self.data.len()];
+        crate::util::par::for_each_chunk_pair(&mut data, &self.data, |_, o, s| {
+            for (d, &v) in o.iter_mut().zip(s) {
+                *d = alpha * v;
+            }
+        });
         Tensor {
             shape: self.shape.clone(),
-            data: self.data.iter().map(|v| alpha * v).collect(),
+            data,
         }
     }
 
@@ -269,6 +328,51 @@ mod tests {
     fn axpy_sparse_rejects_out_of_range() {
         let mut a = Tensor::zeros(&[2]);
         a.axpy_sparse(1.0, &[2], &[1.0]);
+    }
+
+    #[test]
+    fn parallel_kernels_match_sequential_reference() {
+        // past one par::CHUNK the kernels fan out across threads; the
+        // chunking must not change a single bit vs the plain loops
+        use crate::util::par::CHUNK;
+        let n = 2 * CHUNK + 77;
+        let mut rng = Rng::new(12);
+        let mut src = vec![0f32; n];
+        rng.fill_normal(&mut src, 1.0);
+        let src_t = Tensor::new(vec![n], src.clone());
+
+        let mut axpy_t = Tensor::ones(&[n]);
+        axpy_t.axpy(0.25, &src_t);
+        let mut scale_t = src_t.scaled(-1.5);
+        scale_t.scale(0.5);
+        for i in [0, 1, CHUNK - 1, CHUNK, 2 * CHUNK, n - 1] {
+            assert_eq!(axpy_t.data()[i], 1.0 + 0.25 * src[i]);
+            assert_eq!(scale_t.data()[i], 0.5 * (-1.5 * src[i]));
+        }
+
+        // sorted sparse scatter (range-partitioned path) vs a hand fold
+        let indices: Vec<u32> = (0..n as u32).step_by(2).collect();
+        assert!(indices.len() > CHUNK, "test must hit the parallel path");
+        let values: Vec<f32> = indices.iter().map(|&i| src[i as usize]).collect();
+        let mut par = Tensor::zeros(&[n]);
+        par.axpy_sparse(0.7, &indices, &values);
+        let mut seq = vec![0f32; n];
+        for (&i, &v) in indices.iter().zip(&values) {
+            seq[i as usize] += 0.7 * v;
+        }
+        assert_eq!(par.data(), &seq[..]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn axpy_sparse_parallel_path_rejects_out_of_range() {
+        use crate::util::par::CHUNK;
+        let n = CHUNK + 10;
+        let mut a = Tensor::zeros(&[2 * CHUNK]);
+        let indices: Vec<u32> = (CHUNK as u32..(CHUNK + n) as u32).collect();
+        let values = vec![1.0f32; n];
+        // sorted, long enough for the parallel path, last index out of range
+        a.axpy_sparse(1.0, &indices, &values);
     }
 
     #[test]

@@ -3,5 +3,6 @@
 
 pub mod json;
 pub mod logging;
+pub mod par;
 pub mod rng;
 pub mod stats;

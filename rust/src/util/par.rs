@@ -1,0 +1,225 @@
+//! Deterministic chunked parallelism for the coordinator's O(P) host
+//! loops (FedAvg folds, codec delta/residual passes, eq. 3 pruning,
+//! σ estimation).
+//!
+//! The contract every helper here upholds: **results are bit-identical
+//! regardless of thread count.** Work is split at *fixed* element
+//! boundaries ([`CHUNK`]), never at boundaries derived from the number
+//! of available cores, and reductions combine per-chunk partials in
+//! chunk order. A kernel parallelized through this module therefore
+//! produces exactly the same bytes on a 1-core CI runner and a 64-core
+//! workstation — which is what lets the pipelined federated leader stay
+//! a bit-for-bit twin of the sequential oracle (`tests/federated.rs`)
+//! while burning its hot loops on every core.
+//!
+//! Threads are plain `std::thread::scope` spawns (no pool kept alive —
+//! the loops this serves run for milliseconds per call, and a scoped
+//! spawn costs microseconds). Inputs at or below one [`CHUNK`] run
+//! inline on the caller's thread, so small models never pay a spawn.
+//! `EFFICIENTGRAD_PAR_THREADS` caps the worker count (set it to 1 to
+//! force sequential execution; the results must not — and do not —
+//! change).
+
+use std::sync::OnceLock;
+
+/// Fixed chunk length, in elements. Chunk *boundaries* are part of the
+/// numeric contract (reductions combine per-chunk partials in order and
+/// the partitioned pruner derives one RNG stream per chunk), so this is
+/// a constant, not a function of the machine.
+pub const CHUNK: usize = 1 << 16;
+
+/// Worker-thread cap: `EFFICIENTGRAD_PAR_THREADS` if set, else the
+/// available parallelism clamped to 8 (the leader's hot loops saturate
+/// memory bandwidth long before they saturate a big box).
+pub fn max_threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        if let Some(n) = std::env::var("EFFICIENTGRAD_PAR_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+        {
+            return n.max(1);
+        }
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(8)
+    })
+}
+
+/// Run `f` over every task, distributing tasks round-robin across up to
+/// [`max_threads`] scoped threads (inline when 0/1 tasks or 1 thread).
+/// Execution order across threads is unspecified — callers must hand in
+/// tasks whose effects are disjoint (the chunk helpers below do).
+pub fn run_tasks<T: Send>(tasks: Vec<T>, f: impl Fn(T) + Sync) {
+    let threads = max_threads().min(tasks.len());
+    if threads <= 1 {
+        for t in tasks {
+            f(t);
+        }
+        return;
+    }
+    let mut parts: Vec<Vec<T>> = (0..threads).map(|_| Vec::new()).collect();
+    for (i, t) in tasks.into_iter().enumerate() {
+        parts[i % threads].push(t);
+    }
+    let f = &f;
+    std::thread::scope(|s| {
+        for part in parts {
+            s.spawn(move || {
+                for t in part {
+                    f(t);
+                }
+            });
+        }
+    });
+}
+
+/// `f(chunk_index, chunk)` over fixed-size chunks of `data`, in
+/// parallel. Single-chunk inputs run inline.
+pub fn for_each_chunk_mut<T: Send>(data: &mut [T], f: impl Fn(usize, &mut [T]) + Sync) {
+    if data.is_empty() {
+        return;
+    }
+    if data.len() <= CHUNK {
+        f(0, data);
+        return;
+    }
+    let tasks: Vec<(usize, &mut [T])> = data.chunks_mut(CHUNK).enumerate().collect();
+    run_tasks(tasks, |(i, c)| f(i, c));
+}
+
+/// `f(chunk_index, dst_chunk, src_chunk)` over paired fixed-size chunks
+/// of two equal-length slices (the axpy/scaled shape).
+pub fn for_each_chunk_pair<A: Send, B: Sync>(
+    a: &mut [A],
+    b: &[B],
+    f: impl Fn(usize, &mut [A], &[B]) + Sync,
+) {
+    assert_eq!(a.len(), b.len(), "chunk pair: {} vs {}", a.len(), b.len());
+    if a.is_empty() {
+        return;
+    }
+    if a.len() <= CHUNK {
+        f(0, a, b);
+        return;
+    }
+    let tasks: Vec<(usize, (&mut [A], &[B]))> =
+        a.chunks_mut(CHUNK).zip(b.chunks(CHUNK)).enumerate().collect();
+    run_tasks(tasks, |(i, (ca, cb))| f(i, ca, cb));
+}
+
+/// `f(chunk_index, dst_chunk, src1_chunk, src2_chunk)` over three
+/// equal-length slices (the codec's `residual += local − reference`
+/// fold).
+pub fn for_each_chunk_triple<A: Send, B: Sync, C: Sync>(
+    a: &mut [A],
+    b: &[B],
+    c: &[C],
+    f: impl Fn(usize, &mut [A], &[B], &[C]) + Sync,
+) {
+    assert_eq!(a.len(), b.len(), "chunk triple: {} vs {}", a.len(), b.len());
+    assert_eq!(a.len(), c.len(), "chunk triple: {} vs {}", a.len(), c.len());
+    if a.is_empty() {
+        return;
+    }
+    if a.len() <= CHUNK {
+        f(0, a, b, c);
+        return;
+    }
+    let tasks: Vec<(usize, ((&mut [A], &[B]), &[C]))> = a
+        .chunks_mut(CHUNK)
+        .zip(b.chunks(CHUNK))
+        .zip(c.chunks(CHUNK))
+        .enumerate()
+        .collect();
+    run_tasks(tasks, |(i, ((ca, cb), cc))| f(i, ca, cb, cc));
+}
+
+/// Map every fixed-size chunk to a value, returning the per-chunk
+/// results **in chunk order** — the deterministic-reduction primitive
+/// (combine the returned partials in order and the total is independent
+/// of thread count).
+pub fn map_chunks<T: Sync, R: Send>(data: &[T], f: impl Fn(&[T]) -> R + Sync) -> Vec<R> {
+    if data.is_empty() {
+        return Vec::new();
+    }
+    if data.len() <= CHUNK {
+        return vec![f(data)];
+    }
+    let chunks: Vec<&[T]> = data.chunks(CHUNK).collect();
+    let mut out: Vec<Option<R>> = (0..chunks.len()).map(|_| None).collect();
+    let tasks: Vec<(&[T], &mut Option<R>)> = chunks.into_iter().zip(out.iter_mut()).collect();
+    run_tasks(tasks, |(c, slot)| *slot = Some(f(c)));
+    out.into_iter().map(|r| r.expect("chunk not mapped")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunk_mut_covers_every_element_once() {
+        let mut big = vec![0u32; CHUNK * 3 + 17];
+        for_each_chunk_mut(&mut big, |ci, c| {
+            for v in c.iter_mut() {
+                *v += 1 + ci as u32;
+            }
+        });
+        // chunk 0 got +1, chunk 1 +2, … — and nothing was touched twice
+        assert!(big[..CHUNK].iter().all(|&v| v == 1));
+        assert!(big[CHUNK..2 * CHUNK].iter().all(|&v| v == 2));
+        assert_eq!(big[3 * CHUNK], 4);
+        let mut empty: Vec<u32> = Vec::new();
+        for_each_chunk_mut(&mut empty, |_, _| panic!("empty input must not call f"));
+    }
+
+    #[test]
+    fn pair_and_triple_line_up_chunks() {
+        let n = CHUNK + 100;
+        let src: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let mut dst = vec![0f32; n];
+        for_each_chunk_pair(&mut dst, &src, |_, d, s| {
+            for (x, &y) in d.iter_mut().zip(s) {
+                *x = 2.0 * y;
+            }
+        });
+        assert_eq!(dst[0], 0.0);
+        assert_eq!(dst[n - 1], 2.0 * (n - 1) as f32);
+        let ones = vec![1f32; n];
+        let mut acc = vec![0f32; n];
+        for_each_chunk_triple(&mut acc, &dst, &ones, |_, a, b, c| {
+            for ((x, &y), &z) in a.iter_mut().zip(b).zip(c) {
+                *x = y - z;
+            }
+        });
+        assert_eq!(acc[n - 1], 2.0 * (n - 1) as f32 - 1.0);
+    }
+
+    #[test]
+    fn map_chunks_returns_partials_in_chunk_order() {
+        let data: Vec<f32> = (0..(2 * CHUNK + 5)).map(|i| i as f32).collect();
+        let lens = map_chunks(&data, |c| c.len());
+        assert_eq!(lens, vec![CHUNK, CHUNK, 5]);
+        // order-sensitive fingerprint: first element of each chunk
+        let firsts = map_chunks(&data, |c| c[0]);
+        assert_eq!(firsts, vec![0.0, CHUNK as f32, (2 * CHUNK) as f32]);
+        assert!(map_chunks(&Vec::<f32>::new(), |_| 0u8).is_empty());
+    }
+
+    #[test]
+    fn results_independent_of_task_distribution() {
+        // the determinism contract: a reduction over map_chunks partials
+        // combined in order gives the same bits as a plain sequential
+        // fold over the same chunk boundaries
+        let data: Vec<f32> = (0..(3 * CHUNK + 999)).map(|i| (i as f32).sin()).collect();
+        let par: f64 = map_chunks(&data, |c| c.iter().map(|&x| x as f64).sum::<f64>())
+            .iter()
+            .sum();
+        let seq: f64 = data
+            .chunks(CHUNK)
+            .map(|c| c.iter().map(|&x| x as f64).sum::<f64>())
+            .sum();
+        assert_eq!(par.to_bits(), seq.to_bits());
+    }
+}

@@ -3,20 +3,40 @@
 //! and Φ/Φ⁻¹ (the inverse normal CDF behind the paper's eq. 5).
 
 /// Mean of a slice (0.0 for empty).
+///
+/// Summation is chunked at the fixed [`crate::util::par::CHUNK`]
+/// boundary (per-chunk partials combined in chunk order), so the result
+/// is bit-identical whether the chunks run sequentially or in parallel;
+/// inputs at or below one chunk are the plain sequential sum.
 pub fn mean(xs: &[f32]) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
-    xs.iter().map(|&x| x as f64).sum::<f64>() / xs.len() as f64
+    if xs.len() <= crate::util::par::CHUNK {
+        // single chunk == the plain sum, bit for bit — and the per-step
+        // metrics path stays allocation-free
+        return xs.iter().map(|&x| x as f64).sum::<f64>() / xs.len() as f64;
+    }
+    let partials = crate::util::par::map_chunks(xs, |c| c.iter().map(|&x| x as f64).sum::<f64>());
+    partials.iter().sum::<f64>() / xs.len() as f64
 }
 
-/// Population standard deviation.
+/// Population standard deviation. Two chunked passes (see [`mean`] for
+/// the determinism contract); this is the σ of the paper's eq. 5, on the
+/// codec's per-tensor hot path, so big tensors run it on every core.
 pub fn std_dev(xs: &[f32]) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let m = mean(xs);
-    (xs.iter().map(|&x| (x as f64 - m).powi(2)).sum::<f64>() / xs.len() as f64).sqrt()
+    if xs.len() <= crate::util::par::CHUNK {
+        return (xs.iter().map(|&x| (x as f64 - m).powi(2)).sum::<f64>() / xs.len() as f64)
+            .sqrt();
+    }
+    let partials = crate::util::par::map_chunks(xs, |c| {
+        c.iter().map(|&x| (x as f64 - m).powi(2)).sum::<f64>()
+    });
+    (partials.iter().sum::<f64>() / xs.len() as f64).sqrt()
 }
 
 /// Fraction of exact zeros (realized pruning sparsity).
