@@ -33,6 +33,8 @@ fn main() -> Result<()> {
         FlagSpec { name: "comm-rate", help: "comm pruning rate P", takes_value: true, default: Some("0.9") },
         FlagSpec { name: "model", help: "model", takes_value: true, default: Some("convnet_t") },
         FlagSpec { name: "pipeline", help: "pipelined leader schedule (off-thread eval + streaming aggregation)", takes_value: false, default: None },
+        FlagSpec { name: "quorum", help: "fold at this fraction of dispatched reports (1.0 = full barrier)", takes_value: true, default: Some("1.0") },
+        FlagSpec { name: "max-chain", help: "chained-delta resync window (0 = dense resyncs)", takes_value: true, default: Some("0") },
     ];
     let args = Args::parse(&raw, &specs)?;
 
@@ -48,6 +50,8 @@ fn main() -> Result<()> {
         dropout_prob: args.get_f64("dropout-prob")?.unwrap(),
         comm: CommMode::parse(args.get("comm").unwrap())?,
         comm_rate: args.get_f64("comm-rate")?.unwrap(),
+        quorum: args.get_f64("quorum")?.unwrap(),
+        max_chain: args.get_usize("max-chain")?.unwrap(),
         train: TrainConfig {
             model: args.get("model").unwrap().to_string(),
             mode: "efficientgrad".into(),
@@ -55,17 +59,22 @@ fn main() -> Result<()> {
             test_examples: 256,
             ..Default::default()
         },
+        // comm pruner, staleness decay and pipeline depth at their
+        // documented defaults
+        ..FedConfig::default()
     };
-    cfg.validate()?; // shared range checks (comm_rate, dropout_prob)
+    cfg.validate()?; // shared range checks (comm_rate, dropout_prob, quorum)
 
     println!(
-        "== federated: {} workers x {} rounds x {} local steps ({} shards, comm={} P={}) ==",
+        "== federated: {} workers x {} rounds x {} local steps ({} shards, comm={} P={}, \
+         quorum={}) ==",
         cfg.workers,
         cfg.rounds,
         cfg.local_steps,
         if cfg.iid { "IID" } else { "non-IID" },
         cfg.comm.as_str(),
         cfg.comm_rate,
+        cfg.quorum,
     );
 
     let rt = Runtime::cpu()?;
@@ -77,12 +86,12 @@ fn main() -> Result<()> {
     let energy = EnergyTable::smic14();
     let link = LinkEnergy::wifi();
     println!(
-        "\nround | mean loss | eval acc | net KB | net mJ | dev mJ | dropped | worker secs (sim)"
+        "\nround | mean loss | eval acc | net KB | net mJ | dev mJ | dropped | late | worker secs (sim)"
     );
     for r in &summary.rounds {
         let times: Vec<String> = r.worker_secs.iter().map(|t| format!("{t:.2}")).collect();
         println!(
-            "{:5} | {:9.4} | {:8.4} | {:6.1} | {:6.2} | {:6.3} | {:7} | [{}]",
+            "{:5} | {:9.4} | {:8.4} | {:6.1} | {:6.2} | {:6.3} | {:7} | {:4} | [{}]",
             r.round,
             r.mean_loss,
             r.eval_acc,
@@ -90,7 +99,16 @@ fn main() -> Result<()> {
             r.network_joules(&link) * 1e3,
             r.device_joules(&energy) * 1e3,
             r.dropped.len(),
+            r.late_reports,
             times.join(", ")
+        );
+    }
+    let chained_total: usize = summary.rounds.iter().map(|r| r.chained_downlinks).sum();
+    if chained_total > 0 {
+        println!(
+            "{chained_total} resyncs rode chained deltas instead of dense snapshots \
+             (--max-chain {})",
+            cfg.max_chain
         );
     }
     println!(

@@ -17,7 +17,7 @@
 use efficientgrad::benchlib::{bench, fmt_ns, Report};
 use efficientgrad::comm::wire::{sign_tensor_bytes, sparse_tensor_bytes};
 use efficientgrad::comm::{DeltaCodec, ModelUpdate, TensorUpdate};
-use efficientgrad::config::CommMode;
+use efficientgrad::config::{CommMode, CommPruner};
 use efficientgrad::tensor::Tensor;
 use efficientgrad::util::rng::Rng;
 use std::time::Duration;
@@ -59,18 +59,24 @@ fn main() {
     let mut rng = Rng::new(7);
     let reference = randn_like(&shapes, 0.1, &mut rng);
 
-    for (mode, rate) in [
-        (CommMode::Dense, 0.0),
-        (CommMode::Pruned, 0.5),
-        (CommMode::Pruned, 0.9),
-        (CommMode::Pruned, 0.99),
-        (CommMode::Sign, 0.5),
-        (CommMode::Sign, 0.9),
-        (CommMode::Sign, 0.99),
+    // steady-state wire bytes at (Pruned, 0.9) per pruner — the top-k
+    // sharpening assert below compares them
+    let mut pruned_stochastic_wire = 0u64;
+    let mut pruned_topk_wire = 0u64;
+    for (mode, rate, pruner) in [
+        (CommMode::Dense, 0.0, CommPruner::Stochastic),
+        (CommMode::Pruned, 0.5, CommPruner::Stochastic),
+        (CommMode::Pruned, 0.9, CommPruner::Stochastic),
+        (CommMode::Pruned, 0.99, CommPruner::Stochastic),
+        (CommMode::Pruned, 0.9, CommPruner::TopK),
+        (CommMode::Sign, 0.5, CommPruner::Stochastic),
+        (CommMode::Sign, 0.9, CommPruner::Stochastic),
+        (CommMode::Sign, 0.9, CommPruner::TopK),
+        (CommMode::Sign, 0.99, CommPruner::Stochastic),
     ] {
         // drive the codec to its error-feedback steady state over
         // synthetic round deltas, then measure encode latency + bytes
-        let mut codec = DeltaCodec::new(mode, rate);
+        let mut codec = DeltaCodec::with_pruner(mode, rate, pruner);
         let mut delta_rng = Rng::new(11);
         let mut prune_rng = Rng::new(13);
         let mut local = reference.clone();
@@ -112,6 +118,7 @@ fn main() {
                     .sum();
                 assert_eq!(last.wire_bytes(), formula, "wire bytes drifted from formula");
             }
+            ModelUpdate::Chain(_) => unreachable!("encode never emits chains"),
         }
 
         // EF stability: residual bounded by a few σ·√n after many rounds
@@ -123,26 +130,36 @@ fn main() {
             );
         }
 
+        let tag = match pruner {
+            CommPruner::Stochastic => String::new(),
+            CommPruner::TopK => "/topk".into(),
+        };
         let s = bench(
-            &format!("encode {}/{rate}", mode.as_str()),
+            &format!("encode {}/{rate}{tag}", mode.as_str()),
             2,
             iters,
             Duration::from_secs(if short { 2 } else { 6 }),
             || {
-                let mut c = DeltaCodec::new(mode, rate);
+                let mut c = DeltaCodec::with_pruner(mode, rate, pruner);
                 std::hint::black_box(
                     c.encode(&local, &reference, &mut Rng::new(3)).unwrap(),
                 );
             },
         );
         rep.row(vec![
-            format!("{}/{rate}", mode.as_str()),
+            format!("{}/{rate}{tag}", mode.as_str()),
             fmt_ns(s.mean_ns),
             fmt_ns(s.p95_ns),
             wire.to_string(),
             format!("{:.1}x", dense_bytes as f64 / wire as f64),
             survivors.to_string(),
         ]);
+        if mode == CommMode::Pruned && rate == 0.9 {
+            match pruner {
+                CommPruner::Stochastic => pruned_stochastic_wire = wire,
+                CommPruner::TopK => pruned_topk_wire = wire,
+            }
+        }
 
         // the headline asserts at the paper's operating point
         if rate == 0.9 {
@@ -159,6 +176,19 @@ fn main() {
             }
         }
     }
+
+    // top-k sharpening (ROADMAP PR 3 follow-up): exact ⌈(1−P)·E⌉
+    // survivors vs eq. 3's ≈46% promotion floor — at P=0.9 the pruned
+    // format's wire must drop to well under half the stochastic row's
+    println!(
+        "pruned/0.9 wire: stochastic {pruned_stochastic_wire} B -> topk {pruned_topk_wire} B \
+         ({:.1}x sharper)",
+        pruned_stochastic_wire as f64 / pruned_topk_wire as f64
+    );
+    assert!(
+        pruned_topk_wire * 2 <= pruned_stochastic_wire,
+        "top-k failed to sharpen the pruned cut: {pruned_topk_wire} vs {pruned_stochastic_wire}"
+    );
 
     rep.print();
     rep.save_csv(&efficientgrad::figures::reports_dir().join("comm_bytes.csv"))

@@ -28,9 +28,11 @@
 use std::time::Duration;
 
 use efficientgrad::benchlib::{bench, bench_default, fmt_ns, Report, Sample};
-use efficientgrad::comm::wire::{sign_model_bytes_envelope, sparse_model_bytes};
+use efficientgrad::comm::wire::{chained_model_bytes, sign_model_bytes_envelope, sparse_model_bytes};
+use efficientgrad::comm::{DeltaCodec, ModelUpdate};
 use efficientgrad::config::{CommMode, FedConfig, ResidencyMode, TrainConfig};
 use efficientgrad::coordinator::Leader;
+use efficientgrad::util::rng::Rng;
 use efficientgrad::data::synthetic::{generate, SynthConfig};
 use efficientgrad::manifest::Manifest;
 use efficientgrad::params::ParamStore;
@@ -259,6 +261,10 @@ fn main() {
     // -- leader schedule: pipelined vs sequential round wall time --
     pipeline_rows(&rt, &manifest, &mut rep);
 
+    // -- elastic barrier: quorum vs full-barrier round wall time, and
+    //    the chained-downlink byte formula --
+    quorum_rows(&rt, &manifest, &mut rep);
+
     rep.print();
     rep.save_csv(&efficientgrad::figures::reports_dir().join("runtime_hotpath.csv"))
         .unwrap();
@@ -322,6 +328,7 @@ fn federated_rows(rt: &Runtime, manifest: &Manifest, rep: &mut Report) {
                 difficulty: 0.4,
                 ..Default::default()
             },
+            ..FedConfig::default() // full-barrier oracle knobs
         };
         let mut leader = Leader::new(rt, manifest, cfg).expect("leader");
         let summary = leader.run().expect("federated run");
@@ -465,6 +472,7 @@ fn pipeline_rows(rt: &Runtime, manifest: &Manifest, rep: &mut Report) {
             difficulty: 0.4,
             ..Default::default()
         },
+        ..FedConfig::default() // full-barrier oracle knobs
     };
     let run = |pipeline: bool| {
         let mut leader = Leader::new(rt, manifest, mk(pipeline)).expect("leader");
@@ -522,5 +530,168 @@ fn pipeline_rows(rt: &Runtime, manifest: &Manifest, rep: &mut Report) {
     assert!(
         pipe_mean <= seq_mean * 1.10,
         "pipelined rounds slower than sequential: {pipe_mean:.4}s vs {seq_mean:.4}s"
+    );
+}
+
+/// The elastic-barrier claim measured end to end: the same federated
+/// config — wall-clock straggler injection ON, so sleeping workers
+/// genuinely hold rounds — under the full barrier (`quorum = 1.0`, the
+/// oracle) and a quorum schedule (`quorum = 0.5`: with 2 workers the
+/// leader folds at the FIRST report and the other folds late with a λ^k
+/// discount). Asserts quorum-mode mean round wall time ≤ full-barrier
+/// mean, emits both rows plus the speedup into `BENCH_runtime.json` —
+/// and prices a real 3-link chained downlink against the dense resync
+/// it replaces, asserting the `8 + Σ link` formula from
+/// `docs/TRANSFER_MODEL.md` §Model versions & staleness.
+fn quorum_rows(rt: &Runtime, manifest: &Manifest, rep: &mut Report) {
+    let rounds = if short_mode() { 4 } else { 6 };
+    let mk = |quorum: f64| FedConfig {
+        workers: 2,
+        rounds,
+        local_steps: 3,
+        iid: true,
+        // most rounds have at least one sleeping straggler the quorum
+        // schedule does not wait for; identical seeds give both runs the
+        // identical straggler pattern
+        straggler_prob: 0.75,
+        straggler_slowdown: 2.0,
+        straggler_sleep: true,
+        pipeline: false,
+        dropout_prob: 0.0,
+        comm: CommMode::Sign,
+        comm_rate: 0.9,
+        quorum,
+        staleness_decay: 0.5,
+        pipeline_depth: 2,
+        max_chain: 3,
+        train: TrainConfig {
+            model: "convnet_t".into(),
+            mode: "efficientgrad".into(),
+            train_examples: 256,
+            test_examples: 64,
+            difficulty: 0.4,
+            ..Default::default()
+        },
+        ..FedConfig::default()
+    };
+    let run = |quorum: f64| {
+        let mut leader = Leader::new(rt, manifest, mk(quorum)).expect("leader");
+        let t0 = std::time::Instant::now();
+        let summary = leader.run().expect("federated run");
+        let total = t0.elapsed().as_secs_f64();
+        leader.shutdown();
+        (summary, total)
+    };
+    let (barrier, barrier_total) = run(1.0);
+    let (quorum, quorum_total) = run(0.5);
+
+    let mean_wall = |s: &efficientgrad::coordinator::FedSummary| {
+        s.rounds.iter().map(|r| r.wall_secs).sum::<f64>() / s.rounds.len() as f64
+    };
+    let (barrier_mean, quorum_mean) = (mean_wall(&barrier), mean_wall(&quorum));
+    let late_total: usize = quorum.rounds.iter().map(|r| r.late_reports).sum();
+    let mass_total: f64 = quorum.rounds.iter().map(|r| r.stale_weight_mass).sum();
+    for (label, s, total, extra) in [
+        ("full barrier", &barrier, barrier_total, String::new()),
+        (
+            "quorum 0.5",
+            &quorum,
+            quorum_total,
+            format!("{late_total} late (λ-mass {mass_total:.2})"),
+        ),
+    ] {
+        rep.row(vec![
+            format!("federated barrier [{label}]: {rounds} rounds, straggler 0.75x2.0"),
+            format!("{:.4} s/round", mean_wall(s)),
+            format!("total {total:.3} s"),
+            "-".into(),
+            extra,
+            "-".into(),
+        ]);
+    }
+    let speedup = barrier_mean / quorum_mean;
+    rep.row(vec![
+        "federated quorum speedup (mean round wall, barrier/quorum)".into(),
+        format!("{speedup:.2}x"),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+    ]);
+    println!(
+        "quorum schedule: {barrier_mean:.4} -> {quorum_mean:.4} s/round ({speedup:.2}x), \
+         {late_total} late reports folded"
+    );
+    // every stashed straggler from a non-final round must eventually
+    // fold (the pipeline depth forces resolution) — the quorum schedule
+    // must not silently lose reports
+    assert!(
+        late_total >= rounds.saturating_sub(2),
+        "quorum run folded only {late_total} late reports over {rounds} rounds"
+    );
+    // the adaptive-cutoff acceptance: skipping the barrier must not make
+    // rounds slower (and should cut ~the straggler sleep); 10% headroom
+    // for scheduler noise on shared CI runners
+    assert!(
+        quorum_mean <= barrier_mean * 1.10,
+        "quorum rounds slower than the full barrier: {quorum_mean:.4}s vs {barrier_mean:.4}s"
+    );
+
+    // -- chained downlink vs dense resync: price a real k=3 chain built
+    //    by the downlink codec over convnet_t-shaped deltas --
+    let model = manifest.model("convnet_t").unwrap();
+    let probe = ParamStore::init(model, 3);
+    let dense_resync = (probe.param_elements() * 4) as u64;
+    let mut codec = DeltaCodec::new(CommMode::Sign, 0.9);
+    let mut reference = probe.params.clone();
+    let mut drift_rng = Rng::new(17);
+    let mut prune_rng = Rng::new(18);
+    let mut links = Vec::new();
+    for _ in 0..3 {
+        let mut global = reference.clone();
+        for t in global.iter_mut() {
+            let mut d = vec![0f32; t.len()];
+            drift_rng.fill_normal(&mut d, 0.02); // a round-sized drift
+            for (o, &dv) in t.data_mut().iter_mut().zip(&d) {
+                *o += dv;
+            }
+        }
+        let u = codec.encode(&global, &reference, &mut prune_rng).unwrap();
+        u.apply(&mut reference).unwrap();
+        match u {
+            ModelUpdate::Delta(us) => links.push(us),
+            _ => unreachable!("compressed codec emits deltas"),
+        }
+    }
+    let chain = ModelUpdate::Chain(links.clone());
+    let formula = chained_model_bytes(
+        links
+            .iter()
+            .map(|us| us.iter().map(|u| u.wire_bytes()).sum::<u64>()),
+    );
+    assert_eq!(
+        chain.wire_bytes(),
+        formula,
+        "chained downlink bytes drifted from the documented 8 + Σ link formula"
+    );
+    assert!(
+        chain.wire_bytes() < dense_resync,
+        "k=3 sign chain {} B did not undercut the dense resync {} B",
+        chain.wire_bytes(),
+        dense_resync
+    );
+    rep.row(vec![
+        "chained downlink k=3 [sign, P=0.9] vs dense resync".into(),
+        format!("{} B", chain.wire_bytes()),
+        format!("dense {dense_resync} B"),
+        format!("{:.1}x", dense_resync as f64 / chain.wire_bytes() as f64),
+        format!("{} survivors", chain.survivors()),
+        "-".into(),
+    ]);
+    println!(
+        "chained downlink: k=3 chain {} B vs dense resync {} B ({:.1}x)",
+        chain.wire_bytes(),
+        dense_resync,
+        dense_resync as f64 / chain.wire_bytes() as f64
     );
 }

@@ -28,19 +28,24 @@
 use anyhow::{bail, Result};
 
 use super::wire::{ModelUpdate, SignTensor, SparseTensor, TensorUpdate};
-use crate::config::CommMode;
-use crate::sparsity::{stochastic_prune_into_partitioned, tau_from_rate};
+use crate::config::{CommMode, CommPruner};
+use crate::sparsity::{
+    stochastic_prune_into_partitioned, tau_from_rate, topk_keep_count, topk_prune_into,
+};
 use crate::tensor::Tensor;
 use crate::util::par;
 use crate::util::rng::Rng;
 use crate::util::stats::std_dev;
 
-/// One endpoint's encoder state: mode + rate + the error-feedback
-/// residuals. Each worker owns one (uplink); the leader owns one
-/// (downlink).
+/// One endpoint's encoder state: mode + rate + pruner + the
+/// error-feedback residuals. Each worker owns one (uplink); the leader
+/// owns one (downlink).
 pub struct DeltaCodec {
     mode: CommMode,
     rate: f64,
+    /// survivor selection: eq. 3 stochastic promotion (default) or
+    /// exact top-k by |δ| (`federated.comm_pruner = topk`)
+    pruner: CommPruner,
     /// per-tensor carried-over pruning error; empty until the first
     /// compressed encode
     residual: Vec<Vec<f32>>,
@@ -48,15 +53,24 @@ pub struct DeltaCodec {
 
 impl DeltaCodec {
     pub fn new(mode: CommMode, rate: f64) -> Self {
+        Self::with_pruner(mode, rate, CommPruner::Stochastic)
+    }
+
+    pub fn with_pruner(mode: CommMode, rate: f64, pruner: CommPruner) -> Self {
         Self {
             mode,
             rate,
+            pruner,
             residual: Vec::new(),
         }
     }
 
     pub fn mode(&self) -> CommMode {
         self.mode
+    }
+
+    pub fn pruner(&self) -> CommPruner {
+        self.pruner
     }
 
     /// Encode `local − reference` (+ carried residual) into a wire
@@ -115,10 +129,26 @@ impl DeltaCodec {
                     *x += av - bv;
                 }
             });
-            let sigma = std_dev(res);
-            let tau = tau_from_rate(sigma, self.rate);
             pruned.resize(res.len(), 0.0);
-            stochastic_prune_into_partitioned(res, tau, &base.fold_in(ti as u64), &mut pruned);
+            match self.pruner {
+                CommPruner::Stochastic => {
+                    let sigma = std_dev(res);
+                    let tau = tau_from_rate(sigma, self.rate);
+                    stochastic_prune_into_partitioned(
+                        res,
+                        tau,
+                        &base.fold_in(ti as u64),
+                        &mut pruned,
+                    );
+                }
+                // exact top-k by |δ|: deterministic (the caller's draw is
+                // still consumed above, so switching pruners never shifts
+                // any other consumer of the rng stream), and the survivor
+                // fraction is exactly 1−P instead of eq. 3's ≈46% floor
+                CommPruner::TopK => {
+                    topk_prune_into(res, topk_keep_count(res.len(), self.rate), &mut pruned);
+                }
+            }
             let update = match self.mode {
                 CommMode::Pruned => TensorUpdate::Sparse(SparseTensor::encode(&pruned)),
                 CommMode::Sign => TensorUpdate::Sign(SignTensor::encode(&pruned)),
@@ -215,6 +245,47 @@ mod tests {
             .map(|(&d, &q)| ((d - q) as f64).powi(2))
             .sum();
         assert!((c.residual_norm() - norm2.sqrt()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn topk_pruner_ships_exact_survivor_budget_with_ef_identity() {
+        let n = 40;
+        let mut c = DeltaCodec::with_pruner(CommMode::Pruned, 0.9, CommPruner::TopK);
+        assert_eq!(c.pruner(), CommPruner::TopK);
+        let mut vals = vec![0f32; n];
+        let mut rng = Rng::new(33);
+        rng.fill_normal(&mut vals, 1.0);
+        let local = vec![t(&vals)];
+        let reference = vec![Tensor::zeros(&[n])];
+        let u = c.encode(&local, &reference, &mut Rng::new(0)).unwrap();
+        // exactly ⌈(1−P)·E⌉ survivors — the sharpened budget, not eq. 3's
+        // stochastic ≈46%
+        assert_eq!(u.survivors(), 4);
+        let decoded = match &u {
+            ModelUpdate::Delta(us) => us[0].decode_dense(),
+            _ => panic!("expected delta"),
+        };
+        // survivors are the exact largest-|δ| coordinates, exact values
+        let mut mags: Vec<f32> = vals.iter().map(|v| v.abs()).collect();
+        mags.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let cutoff = mags[3];
+        for (&d, &q) in vals.iter().zip(&decoded) {
+            if q != 0.0 {
+                assert_eq!(q, d);
+                assert!(d.abs() >= cutoff);
+            }
+        }
+        // EF identity holds for this pruner too
+        let norm2: f64 = vals
+            .iter()
+            .zip(&decoded)
+            .map(|(&d, &q)| ((d - q) as f64).powi(2))
+            .sum();
+        assert!((c.residual_norm() - norm2.sqrt()).abs() < 1e-6);
+        // deterministic regardless of the rng handed in
+        let mut c2 = DeltaCodec::with_pruner(CommMode::Pruned, 0.9, CommPruner::TopK);
+        let u2 = c2.encode(&local, &reference, &mut Rng::new(999)).unwrap();
+        assert_eq!(u, u2, "top-k must not depend on the caller's rng");
     }
 
     #[test]

@@ -22,8 +22,16 @@
 //!   ([`crate::coordinator::weighted_sparse_fedavg`] over
 //!   [`crate::tensor::Tensor::axpy_sparse`]) folding each delta into the
 //!   global params in O(nnz), and the downlink broadcasts the global
-//!   delta through the same codec. The first round — and any worker that
-//!   missed a downlink — falls back to a dense snapshot.
+//!   delta through the same codec. The first round falls back to a dense
+//!   snapshot; a worker that missed `k ≤ federated.max_chain` downlinks
+//!   is resynced with the **chain** of the retained per-round deltas
+//!   ([`ModelUpdate::Chain`] — bit-identical to catching every round,
+//!   `8 + Σ link` bytes instead of dense `4·P`), dense only beyond the
+//!   retained window.
+//! * Survivor selection is pluggable ([`crate::config::CommPruner`]):
+//!   eq. 3 stochastic promotion (default, unbiased, ≈46% survivors at
+//!   P=0.9) or exact top-k by |δ| (`topk` — exactly `1−P` survivors,
+//!   bias carried by the error-feedback residual).
 //!
 //! The motivation tracks the sparse-feedback / local-learning line
 //! (Crafton et al., arXiv:1903.02083) and communication-bound edge-

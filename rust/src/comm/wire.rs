@@ -38,6 +38,12 @@ pub const SPARSE_TENSOR_HEADER_BYTES: u64 = 8;
 /// + the shared f32 magnitude.
 pub const SIGN_TENSOR_HEADER_BYTES: u64 = 12;
 
+/// Per-message header of a chained downlink: base version + link count
+/// (u32 each). The links themselves are ordinary per-round delta
+/// payloads, so a chain costs exactly the header plus what the receiver
+/// would have paid had it caught every round's downlink individually.
+pub const CHAIN_HEADER_BYTES: u64 = 8;
+
 /// Wire bytes of one dense f32 tensor: `4·E`.
 ///
 /// ```
@@ -111,6 +117,23 @@ pub fn sign_model_bytes_envelope(tensor_elems: impl Iterator<Item = usize>) -> (
     tensor_elems.fold((0, 0), |(lo, hi), e| {
         (lo + sign_tensor_bytes(e, 0), hi + sign_tensor_bytes(e, e))
     })
+}
+
+/// Wire bytes of a chained downlink over per-link payload sizes:
+/// `8 + Σ link_bytes` — the normative formula for resyncing a worker
+/// `k` versions behind from the `k` retained per-round deltas
+/// (`docs/TRANSFER_MODEL.md` §Model versions). Against a dense resync's
+/// `4·P`, a chain wins whenever the retained deltas are sparse enough —
+/// at the paper's P=0.9 in sign mode, ~k·0.18·P̃ bytes vs 4·P̃ dense
+/// (P̃ = param elements).
+///
+/// ```
+/// use efficientgrad::comm::wire::{chained_model_bytes, CHAIN_HEADER_BYTES};
+/// assert_eq!(chained_model_bytes([100u64, 250].into_iter()), 8 + 350);
+/// assert_eq!(chained_model_bytes(std::iter::empty()), CHAIN_HEADER_BYTES);
+/// ```
+pub fn chained_model_bytes(link_bytes: impl Iterator<Item = u64>) -> u64 {
+    CHAIN_HEADER_BYTES + link_bytes.sum::<u64>()
 }
 
 /// Pruned-delta survivors of one tensor: `u32` element offsets (sorted,
@@ -328,6 +351,13 @@ pub enum ModelUpdate {
     Dense(Vec<Tensor>),
     /// Pruned delta, one [`TensorUpdate`] per param tensor in store order.
     Delta(Vec<TensorUpdate>),
+    /// Chained downlink: the retained per-round deltas a worker missed,
+    /// oldest first. Applying the chain replays exactly the per-round
+    /// downlinks (same float ops, same order), so the receiver's replica
+    /// lands bit-identical to a peer that caught every round — at
+    /// `8 + Σ link` wire bytes ([`chained_model_bytes`]) instead of a
+    /// dense `4·P` resync. Downlink-only; never a valid uplink.
+    Chain(Vec<Vec<TensorUpdate>>),
 }
 
 impl ModelUpdate {
@@ -338,21 +368,37 @@ impl ModelUpdate {
         match self {
             ModelUpdate::Dense(ts) => ts.iter().map(|t| dense_tensor_bytes(t.len())).sum(),
             ModelUpdate::Delta(us) => us.iter().map(TensorUpdate::wire_bytes).sum(),
+            ModelUpdate::Chain(links) => chained_model_bytes(
+                links
+                    .iter()
+                    .map(|us| us.iter().map(TensorUpdate::wire_bytes).sum()),
+            ),
         }
     }
 
     /// Total survivors across tensors (0 for the dense variant — every
-    /// element travels, "survivor" is a delta-format notion).
+    /// element travels, "survivor" is a delta-format notion; a chain
+    /// sums its links).
     pub fn survivors(&self) -> u64 {
         match self {
             ModelUpdate::Dense(_) => 0,
             ModelUpdate::Delta(us) => us.iter().map(|u| u.survivors() as u64).sum(),
+            ModelUpdate::Chain(links) => links
+                .iter()
+                .flat_map(|us| us.iter())
+                .map(|u| u.survivors() as u64)
+                .sum(),
         }
     }
 
     /// True for the dense-snapshot variant.
     pub fn is_dense(&self) -> bool {
         matches!(self, ModelUpdate::Dense(_))
+    }
+
+    /// True for the chained-downlink variant.
+    pub fn is_chain(&self) -> bool {
+        matches!(self, ModelUpdate::Chain(_))
     }
 
     /// Materialize this update into `params`: a dense snapshot replaces
@@ -372,23 +418,44 @@ impl ModelUpdate {
                 *params = ts.clone();
             }
             ModelUpdate::Delta(us) => {
-                if params.len() != us.len() {
-                    bail!("delta update has {} tensors, store {}", us.len(), params.len());
+                validate_delta(us, params)?;
+                apply_delta(us, params);
+            }
+            ModelUpdate::Chain(links) => {
+                // validate every link before mutating anything: a chain
+                // that fails halfway would leave the replica at an
+                // intermediate version its peer has no record of
+                for us in links {
+                    validate_delta(us, params)?;
                 }
-                // validate everything before mutating anything: a
-                // half-applied delta would silently desync this replica
-                // from its peer
-                for (u, p) in us.iter().zip(params.iter()) {
-                    if u.elems() != p.len() {
-                        bail!("delta tensor sized {} applied to {}", u.elems(), p.len());
-                    }
-                }
-                for (u, p) in us.iter().zip(params.iter_mut()) {
-                    u.axpy_into(1.0, p);
+                // oldest first — exactly the per-round downlink replay
+                for us in links {
+                    apply_delta(us, params);
                 }
             }
         }
         Ok(())
+    }
+}
+
+/// Shape-check one per-round delta against the replica it would mutate
+/// (a half-applied delta would silently desync the replica from its
+/// peer, so callers validate everything before touching anything).
+fn validate_delta(us: &[TensorUpdate], params: &[Tensor]) -> Result<()> {
+    if params.len() != us.len() {
+        bail!("delta update has {} tensors, store {}", us.len(), params.len());
+    }
+    for (u, p) in us.iter().zip(params.iter()) {
+        if u.elems() != p.len() {
+            bail!("delta tensor sized {} applied to {}", u.elems(), p.len());
+        }
+    }
+    Ok(())
+}
+
+fn apply_delta(us: &[TensorUpdate], params: &mut [Tensor]) {
+    for (u, p) in us.iter().zip(params.iter_mut()) {
+        u.axpy_into(1.0, p);
     }
 }
 
@@ -481,6 +548,38 @@ mod tests {
         assert!(bad.apply(&mut params).is_err());
         let bad_count = ModelUpdate::Delta(vec![]);
         assert!(bad_count.apply(&mut params).is_err());
+    }
+
+    #[test]
+    fn chain_applies_links_in_order_and_prices_the_header() {
+        let mut params = vec![Tensor::zeros(&[3])];
+        let l1 = vec![TensorUpdate::Sparse(SparseTensor::encode(&[1.0, 0.0, 0.0]))];
+        let l2 = vec![TensorUpdate::Sparse(SparseTensor::encode(&[0.0, 2.0, -1.0]))];
+        let chain = ModelUpdate::Chain(vec![l1.clone(), l2.clone()]);
+        assert!(chain.is_chain() && !chain.is_dense());
+        // bytes: the documented formula — header + each link priced as
+        // the per-round delta it replays
+        assert_eq!(
+            chain.wire_bytes(),
+            chained_model_bytes(
+                [sparse_tensor_bytes(1), sparse_tensor_bytes(2)].into_iter()
+            )
+        );
+        assert_eq!(chain.survivors(), 3);
+        chain.apply(&mut params).unwrap();
+        // == applying l1 then l2 individually
+        let mut replay = vec![Tensor::zeros(&[3])];
+        ModelUpdate::Delta(l1).apply(&mut replay).unwrap();
+        ModelUpdate::Delta(l2).apply(&mut replay).unwrap();
+        assert_eq!(params, replay);
+        // a bad link anywhere rejects the whole chain without mutating
+        let before = params.clone();
+        let bad = ModelUpdate::Chain(vec![
+            vec![TensorUpdate::Sparse(SparseTensor::encode(&[1.0, 0.0, 0.0]))],
+            vec![TensorUpdate::Sparse(SparseTensor::encode(&[1.0]))], // wrong size
+        ]);
+        assert!(bad.apply(&mut params).is_err());
+        assert_eq!(params, before, "failed chain must not half-apply");
     }
 
     #[test]

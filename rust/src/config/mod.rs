@@ -241,6 +241,39 @@ impl CommMode {
     }
 }
 
+/// How the comm codec selects delta survivors
+/// (`federated.comm_pruner` / `--comm-pruner`); ignored by
+/// `comm = dense`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum CommPruner {
+    /// eq. 3 stochastic promotion at τ from eq. 5 — unbiased, but its
+    /// in-band promotions leave ≈46% survivors at P=0.9.
+    #[default]
+    Stochastic,
+    /// exact top-k by |δ| per tensor: keeps exactly `⌈(1−P)·E⌉`
+    /// coordinates with their exact values. Biased (error feedback
+    /// carries the tail), but the survivor fraction is exactly `1−P` —
+    /// sharper than eq. 3's promotion floor.
+    TopK,
+}
+
+impl CommPruner {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "stochastic" => Ok(Self::Stochastic),
+            "topk" | "top-k" => Ok(Self::TopK),
+            other => bail!("unknown comm pruner {other:?} (want stochastic|topk)"),
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Self::Stochastic => "stochastic",
+            Self::TopK => "topk",
+        }
+    }
+}
+
 /// Training hyperparameters (defaults match the paper's CIFAR recipe,
 /// scaled to the synthetic workload).
 #[derive(Clone, Debug)]
@@ -259,6 +292,14 @@ pub struct TrainConfig {
     pub eval_every: usize,
     pub log_every: usize,
     pub checkpoint: Option<String>,
+    /// periodic mid-run checkpointing (`train.checkpoint_every_steps` /
+    /// `--checkpoint-every-steps`): every N steps the trainer brings the
+    /// host store current (`sync_to_host`, dirty-flag gated — a clean
+    /// device state skips the O(model) download) and rewrites the
+    /// checkpoint file, so a killed run loses at most N steps. 0 (the
+    /// default) keeps the end-of-run-only behavior. Requires
+    /// `checkpoint` to be set; ignored otherwise.
+    pub checkpoint_every_steps: usize,
     /// step-backend selection: device-resident buffers vs literal path
     pub residency: ResidencyMode,
     /// eval-backend selection (`train.eval_residency` /
@@ -287,6 +328,7 @@ impl Default for TrainConfig {
             eval_every: 100,
             log_every: 20,
             checkpoint: None,
+            checkpoint_every_steps: 0,
             residency: ResidencyMode::default(),
             eval_residency: ResidencyMode::default(),
         }
@@ -317,6 +359,8 @@ impl TrainConfig {
             eval_every: t.usize_or("train.eval_every", d.eval_every),
             log_every: t.usize_or("train.log_every", d.log_every),
             checkpoint: t.get("train.checkpoint").and_then(Value::as_str).map(String::from),
+            checkpoint_every_steps: t
+                .usize_or("train.checkpoint_every_steps", d.checkpoint_every_steps),
             // invalid values error (like lr_schedule / mode do): silently
             // falling back would hand resident-mode numbers to someone
             // who asked for the literal oracle
@@ -369,6 +413,36 @@ pub struct FedConfig {
     /// pruning rate for the compressed comm modes (`federated.comm_rate`
     /// / `--comm-rate`); ignored by `comm = dense`
     pub comm_rate: f64,
+    /// survivor selection for the compressed comm modes
+    /// (`federated.comm_pruner` / `--comm-pruner`)
+    pub comm_pruner: CommPruner,
+    /// aggregation quorum (`federated.quorum` / `--quorum`, in (0, 1]):
+    /// the leader folds round r as soon as `⌈quorum·dispatched⌉` reports
+    /// have arrived and dispatches round r+1 against the new version
+    /// while the stragglers are still in flight. 1.0 (the default) is
+    /// the full barrier — bit-for-bit today's schedules.
+    pub quorum: f64,
+    /// staleness decay λ (`federated.staleness_decay`, in [0, 1]): a
+    /// straggler report based on a model k versions old folds into the
+    /// round it arrives in with weight `examples · λ^k`. λ = 1 weights
+    /// late reports like fresh ones; λ = 0 discards them. Unused at
+    /// `quorum = 1.0` (no report is ever late).
+    pub staleness_decay: f64,
+    /// maximum rounds in flight (`federated.pipeline_depth` /
+    /// `--pipeline-depth`, ≥ 1): a quorum round's stragglers may stay
+    /// outstanding for up to `pipeline_depth` rounds before the leader
+    /// blocks on them, bounding late-report staleness at
+    /// `k ≤ pipeline_depth`. Irrelevant at `quorum = 1.0` (every round
+    /// resolves at its own barrier).
+    pub pipeline_depth: usize,
+    /// chained-downlink window (`federated.max_chain` / `--max-chain`):
+    /// a worker whose replica is `k ≤ max_chain` versions behind is
+    /// resynced with the *chain* of the k retained per-round deltas
+    /// (bit-identical to having received each round's downlink, and the
+    /// worker's error-feedback residual survives) instead of a dense
+    /// `4·P` snapshot. 0 (the default) keeps dense resyncs — today's
+    /// behavior. Only meaningful for the compressed comm modes.
+    pub max_chain: usize,
     pub train: TrainConfig,
 }
 
@@ -388,6 +462,15 @@ impl Default for FedConfig {
             // the paper's P: comm pruning defaults to the same operating
             // point as the gradient pruning
             comm_rate: 0.9,
+            comm_pruner: CommPruner::default(),
+            quorum: 1.0,
+            // a late report one version old still carries half a fresh
+            // report's weight; only consulted when quorum < 1.0
+            staleness_decay: 0.5,
+            // allow one round of stragglers in flight once a quorum is
+            // configured; inert at the default quorum = 1.0
+            pipeline_depth: 2,
+            max_chain: 0,
             train: TrainConfig::default(),
         }
     }
@@ -414,6 +497,17 @@ impl FedConfig {
                 .context("federated.comm")?
                 .unwrap_or(d.comm),
             comm_rate: t.f64_or("federated.comm_rate", d.comm_rate),
+            comm_pruner: t
+                .get("federated.comm_pruner")
+                .and_then(Value::as_str)
+                .map(CommPruner::parse)
+                .transpose()
+                .context("federated.comm_pruner")?
+                .unwrap_or(d.comm_pruner),
+            quorum: t.f64_or("federated.quorum", d.quorum),
+            staleness_decay: t.f64_or("federated.staleness_decay", d.staleness_decay),
+            pipeline_depth: t.usize_or("federated.pipeline_depth", d.pipeline_depth),
+            max_chain: t.usize_or("federated.max_chain", d.max_chain),
             train: TrainConfig::from_table(t)?,
         };
         cfg.validate()?;
@@ -428,6 +522,15 @@ impl FedConfig {
         }
         if !(0.0..=1.0).contains(&self.dropout_prob) {
             bail!("dropout_prob {} outside [0, 1]", self.dropout_prob);
+        }
+        if !(self.quorum > 0.0 && self.quorum <= 1.0) {
+            bail!("quorum {} outside (0, 1]", self.quorum);
+        }
+        if !(0.0..=1.0).contains(&self.staleness_decay) {
+            bail!("staleness_decay {} outside [0, 1]", self.staleness_decay);
+        }
+        if self.pipeline_depth == 0 {
+            bail!("pipeline_depth must be at least 1");
         }
         Ok(())
     }
@@ -562,6 +665,58 @@ mod tests {
         assert!(FedConfig::from_table(&t).is_err());
         let t = Table::parse("[federated]\ndropout_prob = -0.1").unwrap();
         assert!(FedConfig::from_table(&t).is_err());
+    }
+
+    #[test]
+    fn quorum_staleness_and_chain_parsing() {
+        // unset: the full-barrier oracle schedule
+        let c = FedConfig::from_table(&Table::default()).unwrap();
+        assert_eq!(c.quorum, 1.0);
+        assert_eq!(c.staleness_decay, 0.5);
+        assert_eq!(c.pipeline_depth, 2);
+        assert_eq!(c.max_chain, 0);
+        assert_eq!(c.comm_pruner, CommPruner::Stochastic);
+        let t = Table::parse(
+            "[federated]\nquorum = 0.5\nstaleness_decay = 0.9\n\
+             pipeline_depth = 3\nmax_chain = 4\ncomm_pruner = \"topk\"",
+        )
+        .unwrap();
+        let c = FedConfig::from_table(&t).unwrap();
+        assert_eq!(c.quorum, 0.5);
+        assert_eq!(c.staleness_decay, 0.9);
+        assert_eq!(c.pipeline_depth, 3);
+        assert_eq!(c.max_chain, 4);
+        assert_eq!(c.comm_pruner, CommPruner::TopK);
+        // out-of-range / unknown values error, not silently clamp — a
+        // wrong quorum would quietly change the round semantics
+        for bad in [
+            "[federated]\nquorum = 0.0",
+            "[federated]\nquorum = 1.5",
+            "[federated]\nstaleness_decay = -0.1",
+            "[federated]\nstaleness_decay = 1.5",
+            "[federated]\npipeline_depth = 0",
+            "[federated]\ncomm_pruner = \"magnitude\"",
+        ] {
+            assert!(
+                FedConfig::from_table(&Table::parse(bad).unwrap()).is_err(),
+                "accepted {bad:?}"
+            );
+        }
+        assert_eq!(CommPruner::parse("top-k").unwrap(), CommPruner::TopK);
+        assert_eq!(CommPruner::TopK.as_str(), "topk");
+    }
+
+    #[test]
+    fn checkpoint_every_steps_parses_with_default_off() {
+        let c = TrainConfig::from_table(&Table::default()).unwrap();
+        assert_eq!(c.checkpoint_every_steps, 0);
+        let t = Table::parse(
+            "[train]\ncheckpoint = \"/tmp/ck.bin\"\ncheckpoint_every_steps = 25",
+        )
+        .unwrap();
+        let c = TrainConfig::from_table(&t).unwrap();
+        assert_eq!(c.checkpoint_every_steps, 25);
+        assert_eq!(c.checkpoint.as_deref(), Some("/tmp/ck.bin"));
     }
 
     #[test]

@@ -10,12 +10,18 @@
 //!   given worker order;
 //! * [`StreamingAggregator`], the leader's order-insensitive front-end:
 //!   per-report decode work happens the moment a report arrives off the
-//!   channel, the final fold always runs in worker-id order — so the
-//!   aggregate is bit-identical no matter the arrival order, which is
-//!   what lets the pipelined leader schedule stay a bit-for-bit twin of
-//!   the sequential oracle.
+//!   channel, the final fold always runs in **(version, worker-id)**
+//!   order — so the aggregate is bit-identical no matter the arrival
+//!   order, which is what lets the pipelined leader schedule stay a
+//!   bit-for-bit twin of the sequential oracle, and what keeps the
+//!   quorum schedule's late-report folds deterministic for any given
+//!   fold membership. A full-barrier round has a single version, so the
+//!   fold order degenerates to worker-id order — exactly the pre-quorum
+//!   behavior.
 
-use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
 
 use crate::comm::{ModelUpdate, SparseTensor, TensorUpdate};
 use crate::config::CommMode;
@@ -161,66 +167,88 @@ pub fn weighted_sparse_fedavg(
 /// `sign` updates, the O(E) bit-plane decode into explicit survivor
 /// lists — so a straggler delays only *its own* decode instead of
 /// serializing everyone's behind the barrier. [`StreamingAggregator::finish`]
-/// then folds the decoded slots in **worker-id order** through the f64
-/// fold above, making the aggregate bit-identical regardless of arrival
-/// order (pinned by the shuffled-arrival test below and by the
-/// pipelined-vs-sequential federated parity pin).
+/// then folds the decoded slots in **(version, worker-id) order**
+/// through the f64 fold above, making the aggregate bit-identical
+/// regardless of arrival order (pinned by the shuffled-arrival test
+/// below and by the pipelined-vs-sequential federated parity pin).
+///
+/// Slots are keyed by the model version a report was computed against,
+/// so one fold can mix a round's fresh reports with stragglers' late
+/// reports from earlier versions: the leader hands a late report a
+/// staleness-discounted weight (`examples · λ^k`), and the fold itself
+/// neither knows nor cares when anything arrived. Under a full barrier
+/// every slot shares one version and the fold order degenerates to
+/// worker-id order — the pre-quorum behavior, bit for bit.
 pub struct StreamingAggregator {
     comm: CommMode,
-    /// per worker id: (FedAvg weight, decoded update)
-    slots: Vec<Option<(f64, ModelUpdate)>>,
+    workers: usize,
+    /// (base version, worker id) -> (FedAvg weight, decoded update);
+    /// BTreeMap iteration order IS the fold order
+    slots: BTreeMap<(u64, usize), (f64, ModelUpdate)>,
 }
 
 impl StreamingAggregator {
     pub fn new(comm: CommMode, workers: usize) -> Self {
         Self {
             comm,
-            slots: (0..workers).map(|_| None).collect(),
+            workers,
+            slots: BTreeMap::new(),
         }
     }
 
     /// Reports decoded so far.
     pub fn accepted(&self) -> usize {
-        self.slots.iter().filter(|s| s.is_some()).count()
+        self.slots.len()
     }
 
-    /// Decode one report now (arrival time). Mode mismatches and
-    /// duplicate reports are protocol errors.
-    pub fn accept(&mut self, worker_id: usize, weight: f64, update: ModelUpdate) -> Result<()> {
-        let slot = self
-            .slots
-            .get_mut(worker_id)
-            .ok_or_else(|| anyhow!("report from unknown worker {worker_id}"))?;
-        if slot.is_some() {
-            bail!("worker {worker_id} reported twice in one round");
+    /// Decode one report now (arrival time). `version` is the model
+    /// version the report's update was computed against
+    /// (`WorkerReport::base_version`). Mode mismatches, chained uplinks
+    /// and duplicate (version, worker) reports are protocol errors.
+    pub fn accept(
+        &mut self,
+        version: u64,
+        worker_id: usize,
+        weight: f64,
+        update: ModelUpdate,
+    ) -> Result<()> {
+        if worker_id >= self.workers {
+            bail!("report from unknown worker {worker_id}");
+        }
+        if self.slots.contains_key(&(version, worker_id)) {
+            bail!("worker {worker_id} reported twice against version {version}");
         }
         let decoded = match (self.comm, update) {
             (CommMode::Dense, u @ ModelUpdate::Dense(_)) => u,
-            (CommMode::Dense, ModelUpdate::Delta(_)) => {
-                bail!("worker {worker_id} sent a delta in dense mode")
+            (CommMode::Dense, _) => {
+                bail!("worker {worker_id} sent a non-snapshot update in dense mode")
             }
             (_, ModelUpdate::Dense(_)) => {
                 bail!("worker {worker_id} sent dense params in delta mode")
+            }
+            (_, ModelUpdate::Chain(_)) => {
+                bail!("worker {worker_id} sent a chained update on the uplink")
             }
             (_, ModelUpdate::Delta(us)) => {
                 ModelUpdate::Delta(us.into_iter().map(predecode).collect())
             }
         };
-        *slot = Some((weight, decoded));
+        self.slots.insert((version, worker_id), (weight, decoded));
         Ok(())
     }
 
-    /// Fold in worker-id order. `reference` is the base the delta modes
-    /// rebase on (ignored in dense mode). `Ok(None)` when no report
-    /// arrived (a fleet-wide outage round — the global model stands).
+    /// Fold in (version, worker-id) order. `reference` is the base the
+    /// delta modes rebase on (ignored in dense mode) — the *current*
+    /// version's params; stale deltas fold onto it too, which is the
+    /// bounded-staleness approximation the λ^k weight discounts.
+    /// `Ok(None)` when no report arrived (a fleet-wide outage round —
+    /// the global model stands).
     pub fn finish(self, reference: &[Tensor]) -> Result<Option<Vec<Tensor>>> {
         let mut weights = Vec::new();
         let mut ups = Vec::new();
-        for slot in self.slots {
-            if let Some((w, u)) = slot {
-                weights.push(w);
-                ups.push(u);
-            }
+        for (_, (w, u)) in self.slots {
+            weights.push(w);
+            ups.push(u);
         }
         if ups.is_empty() {
             return Ok(None);
@@ -231,7 +259,7 @@ impl StreamingAggregator {
                     .iter()
                     .map(|u| match u {
                         ModelUpdate::Dense(p) => p,
-                        ModelUpdate::Delta(_) => unreachable!("accept() validated the mode"),
+                        _ => unreachable!("accept() validated the mode"),
                     })
                     .collect();
                 Ok(Some(weighted_fedavg(&dense, &weights)?))
@@ -241,7 +269,7 @@ impl StreamingAggregator {
                     .iter()
                     .map(|u| match u {
                         ModelUpdate::Delta(d) => d,
-                        ModelUpdate::Dense(_) => unreachable!("accept() validated the mode"),
+                        _ => unreachable!("accept() validated the mode"),
                     })
                     .collect();
                 Ok(Some(weighted_sparse_fedavg(reference, &deltas, &weights)?))
@@ -437,7 +465,7 @@ mod tests {
             for order in arrivals {
                 let mut agg = StreamingAggregator::new(mode, workers);
                 for id in order {
-                    agg.accept(id, weights[id], mk(id)).unwrap();
+                    agg.accept(7, id, weights[id], mk(id)).unwrap();
                 }
                 assert_eq!(agg.accepted(), workers);
                 let out = agg.finish(&base).unwrap().unwrap();
@@ -457,7 +485,7 @@ mod tests {
             for id in order {
                 let mut snap = base[0].clone();
                 snap.axpy(1.0, &t(&pruned[id]));
-                agg.accept(id, weights[id], ModelUpdate::Dense(vec![snap])).unwrap();
+                agg.accept(7, id, weights[id], ModelUpdate::Dense(vec![snap])).unwrap();
             }
             let out = agg.finish(&base).unwrap().unwrap();
             match &reference {
@@ -468,22 +496,109 @@ mod tests {
     }
 
     #[test]
+    fn mixed_version_fold_is_arrival_order_invariant() {
+        // the quorum schedule's determinism claim: a fold mixing fresh
+        // reports with earlier-version late reports is keyed on
+        // (version, worker-id), so any arrival interleaving produces the
+        // same bits
+        let base = vec![t(&[0.5, -1.0, 2.0, 0.0, 0.25])];
+        let deltas: [&[f32]; 3] = [
+            &[0.1, 0.0, -0.2, 0.0, 0.0],
+            &[0.0, 0.3, 0.0, 0.0, -0.1],
+            &[0.2, 0.0, 0.0, 0.4, 0.0],
+        ];
+        // worker 2's report is one version stale (version 4 vs 5)
+        let entries = [(5u64, 0usize, 2.0), (5, 1, 3.0), (4, 2, 0.5)];
+        let mut want: Option<Vec<Tensor>> = None;
+        for order in [[0usize, 1, 2], [2, 1, 0], [1, 2, 0]] {
+            let mut agg = StreamingAggregator::new(CommMode::Pruned, 3);
+            for i in order {
+                let (v, id, w) = entries[i];
+                agg.accept(v, id, w, delta_update(deltas[id], false)).unwrap();
+            }
+            let out = agg.finish(&base).unwrap().unwrap();
+            match &want {
+                None => want = Some(out),
+                Some(w) => assert_eq!(w, &out, "mixed-version arrival {order:?} changed bits"),
+            }
+        }
+    }
+
+    #[test]
+    fn late_report_with_unit_decay_equals_the_synchronous_fold() {
+        // the bounded-staleness acceptance pin: a straggler report folded
+        // one round late with λ = 1 carries exactly its synchronous
+        // weight, so the fold is bit-identical to the one that would have
+        // happened had the report made the barrier. (The fold base is the
+        // same in both runs here, as it is for a quorum round whose
+        // straggler missed only the cutoff, not a version.)
+        let base = vec![t(&[1.0, 0.0, -0.5, 3.0])];
+        let fresh: &[f32] = &[0.5, 0.0, 0.0, -0.25];
+        let late: &[f32] = &[0.0, 1.0, 0.5, 0.0];
+        let (w_fresh, examples_late) = (2.0, 3.0);
+        let lambda: f64 = 1.0;
+
+        // synchronous oracle: both reports made the barrier at version 9
+        let mut sync = StreamingAggregator::new(CommMode::Pruned, 2);
+        sync.accept(9, 0, w_fresh, delta_update(fresh, false)).unwrap();
+        sync.accept(9, 1, examples_late, delta_update(late, false)).unwrap();
+        let sync_out = sync.finish(&base).unwrap().unwrap();
+
+        // quorum schedule: worker 1's report arrives a round late and is
+        // folded with weight examples · λ^1 at the same base
+        let mut stale = StreamingAggregator::new(CommMode::Pruned, 2);
+        stale.accept(9, 0, w_fresh, delta_update(fresh, false)).unwrap();
+        stale
+            .accept(8, 1, examples_late * lambda, delta_update(late, false))
+            .unwrap();
+        let stale_out = stale.finish(&base).unwrap().unwrap();
+        assert_eq!(sync_out, stale_out, "λ=1 late fold diverged from synchronous");
+
+        // λ < 1 discounts: the late delta's contribution shrinks toward
+        // the fresh-only fold
+        let mut discounted = StreamingAggregator::new(CommMode::Pruned, 2);
+        discounted.accept(9, 0, w_fresh, delta_update(fresh, false)).unwrap();
+        discounted
+            .accept(8, 1, examples_late * 0.25, delta_update(late, false))
+            .unwrap();
+        let disc_out = discounted.finish(&base).unwrap().unwrap();
+        assert_ne!(sync_out, disc_out);
+        // coordinate 1 moves only through the late delta: the discounted
+        // fold must pull it closer to the base than the full-weight fold
+        let full = sync_out[0].data()[1] - base[0].data()[1];
+        let disc = disc_out[0].data()[1] - base[0].data()[1];
+        assert!(disc.abs() < full.abs(), "discount did not shrink: {disc} vs {full}");
+    }
+
+    #[test]
     fn streaming_aggregator_validates_protocol() {
         let base = vec![t(&[0.0, 0.0])];
         // delta in dense mode
         let mut agg = StreamingAggregator::new(CommMode::Dense, 2);
-        assert!(agg.accept(0, 1.0, delta_update(&[1.0, 0.0], false)).is_err());
+        assert!(agg.accept(0, 0, 1.0, delta_update(&[1.0, 0.0], false)).is_err());
         // dense in delta mode
         let mut agg = StreamingAggregator::new(CommMode::Pruned, 2);
         assert!(agg
-            .accept(0, 1.0, ModelUpdate::Dense(vec![t(&[1.0, 2.0])]))
+            .accept(0, 0, 1.0, ModelUpdate::Dense(vec![t(&[1.0, 2.0])]))
             .is_err());
+        // a chained update is downlink-only — never a valid uplink
+        let mut agg = StreamingAggregator::new(CommMode::Pruned, 2);
+        let chain = ModelUpdate::Chain(vec![vec![TensorUpdate::Sparse(
+            SparseTensor::encode(&[1.0, 0.0]),
+        )]]);
+        assert!(agg.accept(0, 0, 1.0, chain.clone()).is_err());
+        let mut agg = StreamingAggregator::new(CommMode::Dense, 2);
+        assert!(agg.accept(0, 0, 1.0, chain).is_err());
         // double report and unknown worker
         let mut agg = StreamingAggregator::new(CommMode::Pruned, 2);
-        agg.accept(1, 1.0, delta_update(&[1.0, 0.0], false)).unwrap();
-        assert!(agg.accept(1, 1.0, delta_update(&[1.0, 0.0], false)).is_err());
-        assert!(agg.accept(5, 1.0, delta_update(&[1.0, 0.0], false)).is_err());
+        agg.accept(0, 1, 1.0, delta_update(&[1.0, 0.0], false)).unwrap();
+        assert!(agg.accept(0, 1, 1.0, delta_update(&[1.0, 0.0], false)).is_err());
+        assert!(agg.accept(0, 5, 1.0, delta_update(&[1.0, 0.0], false)).is_err());
         assert_eq!(agg.accepted(), 1);
+        // …but the same worker reporting against two *different* versions
+        // is legal — that is exactly a late report joining a fresh one
+        agg.accept(1, 1, 0.5, delta_update(&[0.0, 1.0], false)).unwrap();
+        assert_eq!(agg.accepted(), 2);
         // empty fold: no reports arrived → None, the global model stands
         let empty = StreamingAggregator::new(CommMode::Pruned, 2);
         assert!(empty.finish(&base).unwrap().is_none());

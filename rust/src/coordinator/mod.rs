@@ -26,15 +26,47 @@
 //!   + all leader work.
 //! * **pipelined**: each `WorkerReport` is decoded the moment it arrives
 //!   off the mpsc channel ([`fedavg::StreamingAggregator`] — a straggler
-//!   delays only its own decode), the final fold still runs in worker-id
-//!   order into f64 accumulators (arrival order cannot change a bit),
-//!   and the eval sweep moves to a dedicated [`evaluator::Evaluator`]
-//!   thread whose results join the reports asynchronously — the leader
-//!   encodes the downlink and dispatches round r+1 while accuracy
-//!   computes. [`RoundReport::leader_secs`] / [`RoundReport::worker_secs`]
+//!   delays only its own decode), the final fold still runs in
+//!   (version, worker-id) order into f64 accumulators (arrival order
+//!   cannot change a bit), and the eval sweep moves to a dedicated
+//!   [`evaluator::Evaluator`] thread whose results join the reports
+//!   asynchronously — the leader encodes the downlink and dispatches
+//!   round r+1 while accuracy computes.
+//!   [`RoundReport::leader_secs`] / [`RoundReport::worker_secs`]
 //!   split the round's wall time so the overlap is visible;
 //!   `runtime_hotpath` benches the two schedules against each other
 //!   under an injected straggler.
+//!
+//! Orthogonally to both, the round *barrier* itself is elastic
+//! (`federated.quorum` / `--quorum`, default 1.0 = the full barrier,
+//! bit-for-bit today's behavior — see `docs/TRANSFER_MODEL.md` §Model
+//! versions & staleness):
+//!
+//! * **Versioned references.** The leader retains a bounded ring of
+//!   [`versions::ModelVersion`] snapshots (version id + reference params
+//!   + the encoded per-round delta); every task and report is tagged
+//!   with the version it was computed against.
+//! * **Quorum rounds.** At `quorum < 1.0` the leader folds as soon as
+//!   `⌈quorum·dispatched⌉` reports arrive and dispatches round r+1
+//!   against the new version while round r's stragglers are still in
+//!   flight (pipeline depth ≥ 2); a straggler's report is folded into
+//!   the round it arrives in with staleness weight `examples · λ^k`
+//!   (`federated.staleness_decay`, k = versions behind), and
+//!   `federated.pipeline_depth` bounds how many rounds may stay in
+//!   flight — and with it the worst-case staleness k. Fold order is
+//!   keyed on (version, worker-id), never arrival, so any given fold
+//!   membership produces the same bits.
+//! * **Chained downlinks.** A worker whose replica is `k ≤
+//!   federated.max_chain` versions behind (a dropout that came back) is
+//!   resynced with the *chain* of the retained per-round deltas —
+//!   bit-identical to catching every downlink, `8 + Σ link` wire bytes
+//!   instead of a dense `4·P` snapshot, and its error-feedback residual
+//!   survives (a dense resync resets it).
+//! * **Encode/eval overlap.** The O(P) downlink encode runs on its own
+//!   thread between the fold and the next dispatch, overlapping the
+//!   eval sweep (sequential) or the eval handoff (pipelined); the
+//!   caller's RNG draw is taken on the leader thread in round order, so
+//!   the encoded bits are identical to the serial schedule's.
 //!
 //! The O(P) host loops both schedules share (FedAvg folds, codec
 //! delta/residual passes, eq. 3 comm pruning, σ) chunk across a scoped
@@ -66,12 +98,14 @@
 
 pub mod evaluator;
 pub mod fedavg;
+pub mod versions;
 pub mod worker;
 
 use std::sync::mpsc;
+use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::accel::energy::{EnergyTable, LinkEnergy};
 use crate::accel::{simulate_training, AccelConfig, Workload};
@@ -87,13 +121,18 @@ use crate::util::rng::Rng;
 
 pub use evaluator::{EvalOutcome, Evaluator};
 pub use fedavg::{fedavg, weighted_fedavg, weighted_sparse_fedavg, StreamingAggregator};
-pub use worker::{WorkerHandle, WorkerReport, WorkerTask};
+pub use versions::{ModelVersion, VersionRing};
+pub use worker::{CommSetup, WorkerHandle, WorkerReport, WorkerTask};
 
 /// Outcome of one federated round.
 #[derive(Clone, Debug)]
 pub struct RoundReport {
     /// round index (0-based)
     pub round: usize,
+    /// the model version this round's fold produced (round r dispatches
+    /// against version r and folds version r+1; version 0 is the shared
+    /// init)
+    pub version: u64,
     /// mean of the workers' mean local-step losses. **NaN** on a
     /// fleet-wide outage round (no reports arrived — there is no
     /// measurement, and a fake 0.0 would poison any averaged
@@ -108,13 +147,31 @@ pub struct RoundReport {
     pub download_bytes: u64,
     /// workers the leader dispatched a task to this round
     pub dispatched: usize,
-    /// worker ids that missed the round (offline at dispatch, dispatch
+    /// worker ids that missed a round (offline at dispatch, dispatch
     /// failure, or went silent mid-round); FedAvg re-weighted over the
-    /// rest, and offline workers resync from a dense snapshot next round
+    /// rest. Under a quorum schedule a silent worker is recorded in the
+    /// round the leader *learns* of it (its stashed straggler channel
+    /// disconnecting), which may be after the round it failed in.
+    /// Offline workers resync next dispatch — chained if within the
+    /// `max_chain` window, dense beyond it
     pub dropped: Vec<usize>,
-    /// downlink payloads that were dense snapshots (first round, resync,
-    /// or `comm = dense`); the rest were pruned deltas
+    /// downlink payloads that were dense snapshots (first round, resync
+    /// beyond the chain window, or `comm = dense`); the rest were pruned
+    /// deltas or chains
     pub dense_downlinks: usize,
+    /// downlink payloads that were chained deltas — workers
+    /// `2 ..= max_chain` versions behind replaying the rounds they
+    /// missed instead of paying a dense resync
+    pub chained_downlinks: usize,
+    /// straggler reports from earlier rounds folded into THIS round's
+    /// FedAvg (quorum < 1.0 only; λ = 0 discards arrive-but-unfolded).
+    /// Their wire bytes, device ledgers and loss/sparsity means land in
+    /// this round's accounting — arrival-time bookkeeping
+    pub late_reports: usize,
+    /// Σ λ^k over the folded late reports: the fresh-report weight mass
+    /// the stragglers retained after staleness discounting (equals
+    /// `late_reports` at λ = 1, 0.0 when none folded)
+    pub stale_weight_mass: f64,
     /// surviving (nonzero) delta coordinates across all uplink messages
     /// (0 in dense mode — every element travels)
     pub uplink_survivors: u64,
@@ -131,10 +188,12 @@ pub struct RoundReport {
     /// eval, which overlaps the next round)
     pub wall_secs: f64,
     /// the slice of `wall_secs` the leader itself spent working —
-    /// report decode, FedAvg fold, eval sweep (sequential schedule
-    /// only) and downlink encode. The remainder of `wall_secs` is spent
-    /// waiting on workers; pipelining shrinks `leader_secs` by moving
-    /// eval off-thread and overlapping decode with the barrier
+    /// report decode, FedAvg fold, and the eval sweep (sequential
+    /// schedule only). The downlink encode runs on its own thread
+    /// overlapping the eval, so only its spawn/join shows here. The
+    /// remainder of `wall_secs` is spent waiting on workers; pipelining
+    /// shrinks `leader_secs` by moving eval off-thread and overlapping
+    /// decode with the barrier
     pub leader_secs: f64,
     /// per-worker simulated wall time (stragglers show here)
     pub worker_secs: Vec<f64>,
@@ -266,25 +325,47 @@ impl ReportMeta {
     }
 }
 
+/// One quorum round still awaiting straggler reports: the round's reply
+/// channel plus the dispatched workers that had not reported when the
+/// round closed at its quorum. Resolved by later rounds — arrivals fold
+/// late with a staleness weight, a disconnect with reports still
+/// outstanding means those workers failed mid-round.
+struct InFlightRound {
+    round: usize,
+    rx: mpsc::Receiver<WorkerReport>,
+    /// dispatched workers that had not reported at the quorum cutoff
+    /// (each report carries its own `base_version` tag for the
+    /// staleness weight)
+    outstanding: Vec<usize>,
+}
+
+/// What the off-thread downlink encode hands back at join: the codec
+/// (with its residual advanced), the encoded update, and the reference
+/// params the update advances the head to.
+type EncodeResult = Result<(DeltaCodec, ModelUpdate, Vec<Tensor>)>;
+
 /// The federated leader.
 pub struct Leader {
     cfg: FedConfig,
     global: ParamStore,
-    /// the params every in-sync worker holds — advanced only by applying
+    /// bounded ring of version-tagged reference snapshots. The head is
+    /// the params every current worker holds — advanced only by applying
     /// the same downlink updates the workers apply, so leader and worker
-    /// replicas stay bit-identical. Compressed modes only; `dense` ships
-    /// `global.params` snapshots directly.
-    reference: Vec<Tensor>,
-    /// per-worker: has it received every downlink so far? A worker that
-    /// misses one gets a dense snapshot (and is marked in-sync again).
-    in_sync: Vec<bool>,
-    /// the pruned global delta computed at the end of the previous round
-    /// (`None` before round 1: everyone starts from a dense snapshot)
-    pending_down: Option<ModelUpdate>,
+    /// replicas stay bit-identical; retained predecessors (and their
+    /// per-round deltas) are what chained downlinks replay. Dense mode
+    /// pushes snapshot-only versions so version tagging is uniform.
+    ring: VersionRing,
+    /// per-worker replica version: `Some(v)` = the worker holds
+    /// reference version v (stale is fine — chain or resync at next
+    /// dispatch); `None` = unknown/diverged (never dispatched, went
+    /// silent mid-round, or dispatch failed) → dense resync
+    worker_version: Vec<Option<u64>>,
     /// downlink error-feedback codec (compressed modes): since every
-    /// aggregation rebases `global` on `reference`, the codec residual
-    /// is what carries un-shipped downlink mass into the next round
-    down_codec: DeltaCodec,
+    /// aggregation rebases `global` on the reference head, the codec
+    /// residual is what carries un-shipped downlink mass into the next
+    /// round. `None` only while an encode is in flight on the overlap
+    /// thread (the thread owns it and hands it back at join).
+    down_codec: Option<DeltaCodec>,
     workers: Vec<WorkerHandle>,
     test: Dataset,
     /// the sequential schedule's eval driver. `None` under
@@ -350,18 +431,28 @@ impl Leader {
                     art.clone(),
                     &model,
                     cfg.train.clone(),
-                    cfg.comm,
-                    cfg.comm_rate,
+                    worker::CommSetup {
+                        mode: cfg.comm,
+                        rate: cfg.comm_rate,
+                        pruner: cfg.comm_pruner,
+                    },
                 )
             })
             .collect::<Result<Vec<_>>>()?;
 
         let global = ParamStore::init(&model, cfg.train.seed);
+        // retain enough history to chain a worker max_chain versions
+        // behind (the chain needs the newest max_chain deltas, each
+        // carried by its version entry, plus the head itself)
+        let ring_cap = cfg.max_chain.max(1) + 1;
         Ok(Self {
-            reference: global.params.clone(),
-            in_sync: vec![false; cfg.workers],
-            pending_down: None,
-            down_codec: DeltaCodec::new(cfg.comm, cfg.comm_rate),
+            ring: VersionRing::new(ring_cap, global.params.clone()),
+            worker_version: vec![None; cfg.workers],
+            down_codec: Some(DeltaCodec::with_pruner(
+                cfg.comm,
+                cfg.comm_rate,
+                cfg.comm_pruner,
+            )),
             cfg,
             global,
             workers,
@@ -375,6 +466,56 @@ impl Leader {
     /// The aggregated global parameters (current as of the last round).
     pub fn global_params(&self) -> &[Tensor] {
         &self.global.params
+    }
+
+    /// The version-tagged reference ring (telemetry / tests).
+    pub fn versions(&self) -> &VersionRing {
+        &self.ring
+    }
+
+    /// Choose worker `id`'s downlink for the version at the ring head:
+    /// dense snapshots in dense mode; otherwise the per-round delta for
+    /// a replica one version behind, a chain of the retained deltas for
+    /// one `2 ..= max_chain` behind, and a dense resync beyond that (or
+    /// when the replica state is unknown — never dispatched, silent
+    /// failure, or the needed history was evicted from the ring).
+    fn downlink_payload(&self, id: usize) -> ModelUpdate {
+        if self.cfg.comm == CommMode::Dense {
+            return ModelUpdate::Dense(self.global.params.clone());
+        }
+        let head = self.ring.head();
+        match self.worker_version[id] {
+            Some(v) if head.version == v + 1 => match &head.delta {
+                Some(us) => ModelUpdate::Delta(us.clone()),
+                None => ModelUpdate::Dense(head.params.clone()),
+            },
+            Some(v)
+                if v < head.version && (head.version - v) as usize <= self.cfg.max_chain =>
+            {
+                // replays the missed rounds bit-identically; falls back
+                // to a snapshot if any link left the ring
+                self.ring
+                    .chain_from(v)
+                    .unwrap_or_else(|| ModelUpdate::Dense(head.params.clone()))
+            }
+            _ => ModelUpdate::Dense(head.params.clone()),
+        }
+    }
+
+    /// Join an off-thread downlink encode: restore the codec (its
+    /// residual advanced by the encode) and push the version the encode
+    /// produced onto the reference ring.
+    fn join_encode(&mut self, handle: JoinHandle<EncodeResult>) -> Result<()> {
+        let (codec, update, next_ref) = handle
+            .join()
+            .map_err(|_| anyhow!("downlink encode thread panicked"))??;
+        self.down_codec = Some(codec);
+        let delta = match update {
+            ModelUpdate::Delta(us) => Some(us),
+            _ => None,
+        };
+        self.ring.push(next_ref, delta);
+        Ok(())
     }
 
     /// Run all rounds under the configured schedule (see the module docs
@@ -407,25 +548,47 @@ impl Leader {
             None
         };
         let mut evals_pending = 0usize;
+        // downlink encode in flight on its own thread: spawned after
+        // each fold (overlapping the eval), joined right before the next
+        // dispatch needs its output
+        let mut enc_pending: Option<JoinHandle<EncodeResult>> = None;
+        // quorum rounds whose stragglers are still in flight
+        let mut inbox: Vec<InFlightRound> = Vec::new();
 
         for round in 0..self.cfg.rounds {
             let t0 = Instant::now();
             let mut leader_busy = Duration::ZERO;
-            // broadcast: dense snapshots in dense mode; the pending
-            // global delta to in-sync workers otherwise (dense fallback
-            // for round 0 and resyncs)
+
+            // advance the reference ring to the version this round
+            // trains against: join the previous round's off-thread
+            // encode (compressed modes) or snapshot the global (dense).
+            // Round 0 trains the genesis version.
+            let t = Instant::now();
+            if let Some(handle) = enc_pending.take() {
+                self.join_encode(handle)?;
+            } else if self.cfg.comm == CommMode::Dense && round > 0 {
+                self.ring.push(self.global.params.clone(), None);
+            }
+            let base_version = self.ring.head_version();
+            leader_busy += t.elapsed();
+
+            // broadcast: dense snapshots in dense mode; otherwise the
+            // per-round delta / retained-delta chain / dense resync that
+            // each worker's replica version calls for
             let (tx, rx) = mpsc::channel::<WorkerReport>();
             let mut dispatched_ids = Vec::with_capacity(self.workers.len());
             let mut dropped = Vec::new();
             let mut download_bytes = 0u64;
             let mut downlink_survivors = 0u64;
             let mut dense_downlinks = 0usize;
+            let mut chained_downlinks = 0usize;
             for w in &self.workers {
                 if dropout_rng.uniform() < self.cfg.dropout_prob {
                     // unreachable this round: misses the downlink, ships
-                    // nothing — resync with a dense snapshot next round
+                    // nothing. Its replica is intact, only *stale* — the
+                    // next dispatch chains it forward if it is within the
+                    // max_chain window, dense resync beyond it
                     dropped.push(w.id);
-                    self.in_sync[w.id] = false;
                     continue;
                 }
                 let slowdown = if straggler_rng.uniform() < self.cfg.straggler_prob {
@@ -433,18 +596,16 @@ impl Leader {
                 } else {
                     1.0
                 };
-                let payload = if self.cfg.comm == CommMode::Dense {
-                    ModelUpdate::Dense(self.global.params.clone())
-                } else if self.in_sync[w.id] && self.pending_down.is_some() {
-                    self.pending_down.as_ref().unwrap().clone()
-                } else {
-                    self.in_sync[w.id] = true;
-                    ModelUpdate::Dense(self.reference.clone())
-                };
-                let (wire, survivors, is_dense) =
-                    (payload.wire_bytes(), payload.survivors(), payload.is_dense());
+                let payload = self.downlink_payload(w.id);
+                let (wire, survivors, is_dense, is_chain) = (
+                    payload.wire_bytes(),
+                    payload.survivors(),
+                    payload.is_dense(),
+                    payload.is_chain(),
+                );
                 match w.submit(WorkerTask {
                     round,
+                    version: base_version,
                     payload,
                     local_steps: self.cfg.local_steps,
                     slowdown,
@@ -455,16 +616,20 @@ impl Leader {
                         // ledger counts delivered messages only — a
                         // dispatch failure ships nothing
                         dispatched_ids.push(w.id);
+                        self.worker_version[w.id] = Some(base_version);
                         download_bytes += wire;
                         downlink_survivors += survivors;
                         if is_dense {
                             dense_downlinks += 1;
                         }
+                        if is_chain {
+                            chained_downlinks += 1;
+                        }
                     }
                     Err(e) => {
                         log::warn!("round {round}: worker {} unreachable: {e:#}", w.id);
                         dropped.push(w.id);
-                        self.in_sync[w.id] = false;
+                        self.worker_version[w.id] = None;
                     }
                 }
             }
@@ -472,49 +637,196 @@ impl Leader {
 
             // gather: a worker that fails its round drops its reply
             // sender without sending, so the channel closes once every
-            // dispatched task is resolved. Both schedules decode through
-            // the same StreamingAggregator; they differ only in *when*
-            // each report's decode runs.
+            // dispatched task is resolved. At quorum = 1.0 that close is
+            // the only exit (the full barrier — today's oracle); at
+            // quorum < 1.0 the leader stops once ⌈quorum·dispatched⌉
+            // reports are in and stashes the round's channel for the
+            // stragglers. Both schedules decode through the same
+            // StreamingAggregator; they differ only in *when* each
+            // report's decode runs.
+            let quorum_needed = if self.cfg.quorum >= 1.0 {
+                dispatched_ids.len()
+            } else {
+                ((self.cfg.quorum * dispatched_ids.len() as f64).ceil() as usize)
+                    .clamp(usize::from(!dispatched_ids.is_empty()), dispatched_ids.len())
+            };
             let mut agg = StreamingAggregator::new(self.cfg.comm, self.workers.len());
             let mut meta: Vec<Option<ReportMeta>> = vec![None; self.workers.len()];
+            let mut received = 0usize;
+            let mut channel_closed = false;
             if self.cfg.pipeline {
                 // streaming: decode each report the moment it arrives —
                 // a straggler delays only its own decode work
-                for r in rx.iter() {
-                    let t = Instant::now();
-                    let id = r.worker_id;
-                    let m = ReportMeta::of(&r);
-                    agg.accept(id, r.examples as f64, r.update)?;
-                    meta[id] = Some(m);
-                    leader_busy += t.elapsed();
+                while received < quorum_needed {
+                    match rx.recv() {
+                        Ok(r) => {
+                            let t = Instant::now();
+                            let id = r.worker_id;
+                            let m = ReportMeta::of(&r);
+                            agg.accept(r.base_version, id, r.examples as f64, r.update)?;
+                            meta[id] = Some(m);
+                            received += 1;
+                            leader_busy += t.elapsed();
+                        }
+                        Err(_) => {
+                            channel_closed = true;
+                            break;
+                        }
+                    }
                 }
             } else {
-                // sequential oracle: barrier first, then decode in
-                // worker-id order — the reference schedule
-                let mut reports: Vec<WorkerReport> = rx.iter().collect();
+                // sequential oracle: barrier (full or quorum) first,
+                // then decode in worker-id order — the reference
+                // schedule
+                let mut reports: Vec<WorkerReport> = Vec::with_capacity(quorum_needed);
+                while received < quorum_needed {
+                    match rx.recv() {
+                        Ok(r) => {
+                            reports.push(r);
+                            received += 1;
+                        }
+                        Err(_) => {
+                            channel_closed = true;
+                            break;
+                        }
+                    }
+                }
                 let t = Instant::now();
                 reports.sort_by_key(|r| r.worker_id);
                 for r in reports {
                     let id = r.worker_id;
                     let m = ReportMeta::of(&r);
-                    agg.accept(id, r.examples as f64, r.update)?;
+                    agg.accept(r.base_version, id, r.examples as f64, r.update)?;
                     meta[id] = Some(m);
                 }
                 leader_busy += t.elapsed();
             }
-            for &id in &dispatched_ids {
-                if meta[id].is_none() {
-                    // went silent mid-round. Usually a failed step/sync
-                    // (downlink already applied), but the failure may
-                    // also have been in the apply itself — we cannot
-                    // tell from here, so treat its replica as suspect
-                    // and resync it with a dense snapshot next round
-                    dropped.push(id);
-                    self.in_sync[id] = false;
+            if channel_closed {
+                for &id in &dispatched_ids {
+                    if meta[id].is_none() {
+                        // went silent mid-round. Usually a failed
+                        // step/sync (downlink already applied), but the
+                        // failure may also have been in the apply itself
+                        // — we cannot tell from here, so treat its
+                        // replica as suspect and dense-resync it
+                        dropped.push(id);
+                        self.worker_version[id] = None;
+                    }
                 }
+            } else if received < dispatched_ids.len() {
+                // quorum cutoff: the rest are stragglers, not failures —
+                // keep the round's channel and fold their reports into a
+                // later round with a staleness discount
+                let outstanding: Vec<usize> = dispatched_ids
+                    .iter()
+                    .copied()
+                    .filter(|&id| meta[id].is_none())
+                    .collect();
+                inbox.push(InFlightRound {
+                    round,
+                    rx,
+                    outstanding,
+                });
             }
+
+            // late straggler reports: fold what has arrived, blocking on
+            // rounds older than the pipeline depth — which bounds the
+            // worst-case staleness at k ≤ pipeline_depth — each weighted
+            // examples · λ^k. Which round a late report lands in depends
+            // on when it arrives (this is genuinely asynchronous); the
+            // fold for any given membership is deterministic because the
+            // aggregator keys on (version, worker-id), never arrival.
+            // Only per-report decode time lands in leader_busy — a
+            // blocking wait on an overdue straggler is time spent
+            // waiting on workers, which leader_secs must not claim.
+            let mut late_busy = Duration::ZERO;
+            let mut late_meta: Vec<(u64, usize, ReportMeta)> = Vec::new();
+            let mut late_reports = 0usize;
+            let mut stale_weight_mass = 0.0f64;
+            let mut inbox_err: Option<anyhow::Error> = None;
+            {
+                let depth = self.cfg.pipeline_depth;
+                let lambda = self.cfg.staleness_decay;
+                let worker_version = &mut self.worker_version;
+                let agg = &mut agg;
+                let dropped = &mut dropped;
+                inbox.retain_mut(|inflight| {
+                    if inflight.round == round {
+                        // stashed moments ago by THIS round's quorum
+                        // cutoff: its stragglers fold no earlier than
+                        // next round (k ≥ 1 by construction)
+                        return true;
+                    }
+                    let overdue = inflight.round + depth <= round;
+                    loop {
+                        let msg = if overdue {
+                            inflight
+                                .rx
+                                .recv()
+                                .map_err(|_| mpsc::TryRecvError::Disconnected)
+                        } else {
+                            inflight.rx.try_recv()
+                        };
+                        match msg {
+                            Ok(r) => {
+                                let t = Instant::now();
+                                let id = r.worker_id;
+                                inflight.outstanding.retain(|&o| o != id);
+                                let k = base_version.saturating_sub(r.base_version).max(1);
+                                let weight = lambda.powi(k as i32);
+                                if weight > 0.0 {
+                                    let m = ReportMeta::of(&r);
+                                    if let Err(e) = agg.accept(
+                                        r.base_version,
+                                        id,
+                                        r.examples as f64 * weight,
+                                        r.update,
+                                    ) {
+                                        inbox_err = Some(e);
+                                        return false;
+                                    }
+                                    late_meta.push((r.base_version, id, m));
+                                    late_reports += 1;
+                                    stale_weight_mass += weight;
+                                    late_busy += t.elapsed();
+                                } else {
+                                    // λ = 0: the report resolves the
+                                    // straggler but is too stale to fold
+                                    log::debug!(
+                                        "round {round}: discarding fully-stale report \
+                                         from worker {id} (k = {k})"
+                                    );
+                                }
+                                if inflight.outstanding.is_empty() {
+                                    return false;
+                                }
+                            }
+                            Err(mpsc::TryRecvError::Empty) => return true,
+                            Err(mpsc::TryRecvError::Disconnected) => {
+                                // the round's tasks all resolved but these
+                                // workers never reported: failed mid-round
+                                for &id in &inflight.outstanding {
+                                    dropped.push(id);
+                                    worker_version[id] = None;
+                                }
+                                return false;
+                            }
+                        }
+                    }
+                });
+            }
+            if let Some(e) = inbox_err {
+                return Err(e);
+            }
+            // fold key order, so the ledger sums below are deterministic
+            // for a given membership
+            late_meta.sort_by_key(|&(v, id, _)| (v, id));
+            leader_busy += late_busy;
+
             dropped.sort_unstable();
-            let n_reports = meta.iter().flatten().count();
+            dropped.dedup();
+            let n_fresh = meta.iter().flatten().count();
+            let n_reports = n_fresh + late_reports;
             if n_reports == 0 {
                 // a fleet-wide outage round: nothing to aggregate, the
                 // global model stands, and the dropout record tells the
@@ -525,36 +837,81 @@ impl Leader {
                 );
             }
 
-            // aggregate: fold the decoded slots in worker-id order into
-            // f64 accumulators (examples-weighted FedAvg over the
-            // survivors; O(nnz) per worker in the compressed modes)
+            // aggregate: fold the decoded slots in (version, worker-id)
+            // order into f64 accumulators (examples-weighted FedAvg over
+            // the survivors, stale reports λ^k-discounted; O(nnz) per
+            // worker in the compressed modes)
             let t = Instant::now();
-            if let Some(params) = agg.finish(&self.reference)? {
+            if let Some(params) = agg.finish(&self.ring.head().params)? {
                 self.global.params = params;
             }
-            let upload_bytes: u64 = meta.iter().flatten().map(|m| m.wire_bytes).sum();
-            let uplink_survivors: u64 = meta.iter().flatten().map(|m| m.survivors).sum();
+            // per-round scalars and ledgers: fresh reports in worker-id
+            // order, then late reports in (version, id) order — arrival-
+            // time accounting (a late report's bytes and device ledger
+            // land in the round that folded it)
+            let folded = || {
+                let fresh = meta.iter().flatten();
+                fresh.chain(late_meta.iter().map(|(_, _, m)| m))
+            };
+            let upload_bytes: u64 = folded().map(|m| m.wire_bytes).sum();
+            let uplink_survivors: u64 = folded().map(|m| m.survivors).sum();
             let (mean_loss, mean_sparsity) = if n_reports == 0 {
                 // no measurement exists — NaN, not a fake 0.0 that would
                 // poison any averaged trajectory (FedSummary skips NaN)
                 (f64::NAN, f64::NAN)
             } else {
                 let n = n_reports as f64;
-                let loss: f64 = meta.iter().flatten().map(|m| m.mean_loss).sum();
-                let spars: f64 = meta.iter().flatten().map(|m| m.mean_sparsity).sum();
+                let loss: f64 = folded().map(|m| m.mean_loss).sum();
+                let spars: f64 = folded().map(|m| m.mean_sparsity).sum();
                 (loss / n, spars / n)
             };
             // per-worker device-bus ledgers, aggregated like the params
-            let worker_transfer: Vec<TransferStats> =
-                meta.iter().flatten().map(|m| m.transfer).collect();
+            let worker_transfer: Vec<TransferStats> = folded().map(|m| m.transfer).collect();
             let device_transfer = worker_transfer
                 .iter()
                 .fold(TransferStats::default(), |acc, &t| acc + t);
-            let worker_secs: Vec<f64> = meta.iter().flatten().map(|m| m.sim_secs).collect();
+            let worker_secs: Vec<f64> = folded().map(|m| m.sim_secs).collect();
 
-            // eval: inline on the sequential schedule; handed to the
-            // evaluator thread on the pipelined one (the snapshot clone
-            // is the handoff cost — the sweep overlaps round r+1)
+            // next round's downlink, off-thread: the global delta vs the
+            // reference head, through the same error-feedback codec as
+            // the uplink; the thread advances the reference by the
+            // *decoded* update, exactly like the workers will. The
+            // carried residual is load-bearing: aggregation *rebases*
+            // `global` on the reference every round, so any downlink
+            // mass the codec failed to deliver would otherwise vanish
+            // from all state — the residual is the only thing that
+            // re-feeds it into the next round's delta. The encode
+            // overlaps the eval below; its RNG position is taken here,
+            // on the leader thread, in round order, so the encoded bits
+            // match the serial schedule's exactly.
+            if self.cfg.comm != CommMode::Dense {
+                let mut codec = self
+                    .down_codec
+                    .take()
+                    .expect("downlink codec home between encodes");
+                let global = self.global.params.clone();
+                let reference = self.ring.head().params.clone();
+                let mut rng = downlink_rng.clone();
+                let _ = downlink_rng.next_u64(); // the thread consumes exactly this draw
+                enc_pending = Some(
+                    std::thread::Builder::new()
+                        .name("downlink-encode".into())
+                        .spawn(move || -> EncodeResult {
+                            let update = codec.encode(&global, &reference, &mut rng)?;
+                            let mut next_ref = reference;
+                            update.apply(&mut next_ref)?;
+                            Ok((codec, update, next_ref))
+                        })
+                        .map_err(|e| anyhow!("spawning downlink encode: {e}"))?,
+                );
+            }
+            leader_busy += t.elapsed();
+
+            // eval: inline on the sequential schedule (the encode thread
+            // overlaps this sweep); handed to the evaluator thread on
+            // the pipelined one (the snapshot clone is the handoff cost
+            // — the sweep overlaps round r+1)
+            let t = Instant::now();
             let (eval_acc, leader_eval_transfer) = match &evaluator {
                 None => {
                     let eval = self
@@ -571,29 +928,11 @@ impl Leader {
                     (f64::NAN, TransferStats::default())
                 }
             };
-
-            // next round's downlink: the global delta vs the workers'
-            // reference, through the same error-feedback codec as the
-            // uplink; the leader advances its reference replica by the
-            // *decoded* update, exactly like the workers will. The
-            // carried residual is load-bearing: aggregation *rebases*
-            // `global` on `reference` every round, so any downlink mass
-            // the codec failed to deliver would otherwise vanish from
-            // all state — the residual is the only thing that re-feeds
-            // it into the next round's delta
-            if self.cfg.comm != CommMode::Dense {
-                let update = self.down_codec.encode(
-                    &self.global.params,
-                    &self.reference,
-                    &mut downlink_rng,
-                )?;
-                update.apply(&mut self.reference)?;
-                self.pending_down = Some(update);
-            }
             leader_busy += t.elapsed();
 
             let mut report = RoundReport {
                 round,
+                version: base_version + 1,
                 mean_loss,
                 mean_sparsity,
                 upload_bytes,
@@ -601,6 +940,9 @@ impl Leader {
                 dispatched: dispatched_ids.len(),
                 dropped,
                 dense_downlinks,
+                chained_downlinks,
+                late_reports,
+                stale_weight_mass,
                 uplink_survivors,
                 downlink_survivors,
                 eval_acc,
@@ -641,20 +983,35 @@ impl Leader {
                 )
             };
             log::info!(
-                "round {round:3} loss {mean_loss:.4} acc {log_acc:.4}{acc_tag} \
+                "round {round:3} v{} loss {mean_loss:.4} acc {log_acc:.4}{acc_tag} \
                  sparsity {mean_sparsity:.3} net {:.1} KB ({:.1} mJ) device {:.1} KB \
-                 ({:.2} mJ) compute {:.1} mJ dropped {:?} ({:.2}s, leader {:.3}s)",
+                 ({:.2} mJ) compute {:.1} mJ dropped {:?} late {} ({:.2}s, leader {:.3}s)",
+                report.version,
                 report.network_bytes() as f64 / 1e3,
                 report.network_joules(&link) * 1e3,
                 report.device_bytes() as f64 / 1e3,
                 report.device_joules(&energy) * 1e3,
                 report.compute_joules(&accel_cfg, &workload) * 1e3,
                 report.dropped,
+                report.late_reports,
                 report.wall_secs,
                 report.leader_secs,
             );
             rounds.push(report);
         }
+        // the final round's encode has no recipient, but joining it
+        // keeps the codec residual and ring head consistent (and
+        // surfaces any encode error instead of swallowing it)
+        if let Some(handle) = enc_pending.take() {
+            self.join_encode(handle)?;
+        }
+        // quorum teardown: stragglers still in flight at run end have no
+        // later round to fold into — their reports are dropped on the
+        // floor (the workers' sends fail silently and the threads idle
+        // until shutdown), exactly what a real deployment tearing down
+        // mid-round would do
+        drop(inbox);
+
         // pipelined: every submitted round joins before the summary —
         // all eval_acc values and leader-eval ledgers are final below
         if let Some(ev) = &evaluator {
@@ -695,6 +1052,7 @@ mod tests {
     fn stub_round(round: usize, loss: f64, sparsity: f64) -> RoundReport {
         RoundReport {
             round,
+            version: round as u64 + 1,
             mean_loss: loss,
             mean_sparsity: sparsity,
             upload_bytes: 0,
@@ -702,6 +1060,9 @@ mod tests {
             dispatched: 0,
             dropped: Vec::new(),
             dense_downlinks: 0,
+            chained_downlinks: 0,
+            late_reports: 0,
+            stale_weight_mass: 0.0,
             uplink_survivors: 0,
             downlink_survivors: 0,
             eval_acc: 0.0,

@@ -1,0 +1,212 @@
+//! Version-tagged model references — the bounded ring behind the elastic
+//! round schedule.
+//!
+//! The leader used to hold a single un-versioned `reference` replica, so
+//! every worker had to be exactly one downlink behind (or pay a dense
+//! resync), and a round could not close until every replica agreed. The
+//! [`VersionRing`] generalizes that to a bounded history: each federated
+//! round's fold produces a new [`ModelVersion`] — a version id, the
+//! reference parameters workers at that version hold, and the encoded
+//! per-round delta that advanced the previous version to it. With the
+//! ring in hand:
+//!
+//! * every wire message is tagged with the version it was computed
+//!   against (`WorkerTask::version` / `WorkerReport::base_version`), so
+//!   a straggler's late report can be folded with the right staleness
+//!   weight instead of being discarded;
+//! * a worker `k ≤ max_chain` versions behind is resynced with
+//!   [`VersionRing::chain_from`] — the *chain* of the retained per-round
+//!   deltas, which replays exactly the downlinks it missed (same float
+//!   ops, same order, so its replica lands bit-identical to an always-on
+//!   peer's) at `8 + Σ link` wire bytes instead of a dense `4·P`
+//!   snapshot (`docs/TRANSFER_MODEL.md` §Model versions & staleness).
+//!
+//! The ring is bounded: pushing past capacity evicts the oldest version,
+//! after which workers that far behind fall back to a dense resync —
+//! memory stays O(cap · P) no matter how long the run.
+
+use std::collections::VecDeque;
+
+use crate::comm::{ModelUpdate, TensorUpdate};
+use crate::tensor::Tensor;
+
+/// One retained snapshot of the reference trajectory.
+#[derive(Clone, Debug)]
+pub struct ModelVersion {
+    /// version id: 0 is the genesis (init params); round r's fold
+    /// produces version r+1
+    pub version: u64,
+    /// the reference params a worker at this version holds (the
+    /// codec-decoded trajectory — *not* the leader's raw FedAvg output,
+    /// whose un-shipped mass lives in the downlink codec's residual)
+    pub params: Vec<Tensor>,
+    /// the per-round delta that advanced `version − 1` to this version
+    /// (`None` for the genesis, and for every version of a dense-comm
+    /// run, where snapshots travel instead of deltas)
+    pub delta: Option<Vec<TensorUpdate>>,
+}
+
+/// Bounded ring of [`ModelVersion`]s, newest last.
+pub struct VersionRing {
+    versions: VecDeque<ModelVersion>,
+    cap: usize,
+}
+
+impl VersionRing {
+    /// Start the ring at the genesis version 0 holding `params`.
+    /// `cap` ≥ 2 versions are retained (the head plus at least one
+    /// predecessor).
+    pub fn new(cap: usize, params: Vec<Tensor>) -> Self {
+        let mut versions = VecDeque::with_capacity(cap.max(2));
+        versions.push_back(ModelVersion {
+            version: 0,
+            params,
+            delta: None,
+        });
+        Self {
+            versions,
+            cap: cap.max(2),
+        }
+    }
+
+    /// The newest version.
+    pub fn head(&self) -> &ModelVersion {
+        self.versions.back().expect("ring is never empty")
+    }
+
+    pub fn head_version(&self) -> u64 {
+        self.head().version
+    }
+
+    /// Number of versions currently retained.
+    pub fn retained(&self) -> usize {
+        self.versions.len()
+    }
+
+    /// Look up a retained version by id.
+    pub fn get(&self, version: u64) -> Option<&ModelVersion> {
+        let oldest = self.versions.front()?.version;
+        if version < oldest || version > self.head_version() {
+            return None;
+        }
+        self.versions.get((version - oldest) as usize)
+    }
+
+    /// Append the next version (id `head + 1`), evicting the oldest
+    /// beyond capacity. `delta` is the encoded per-round downlink that
+    /// advanced the previous head to `params` (None in dense mode).
+    /// Returns the new version id.
+    pub fn push(&mut self, params: Vec<Tensor>, delta: Option<Vec<TensorUpdate>>) -> u64 {
+        let version = self.head_version() + 1;
+        self.versions.push_back(ModelVersion {
+            version,
+            params,
+            delta,
+        });
+        while self.versions.len() > self.cap {
+            self.versions.pop_front();
+        }
+        version
+    }
+
+    /// The chained downlink that brings a replica at version `base` up
+    /// to the head: the retained per-round deltas `base+1 ..= head`,
+    /// oldest first. `None` when the chain cannot be built — `base` is
+    /// the head already, a needed version was evicted, or any link in
+    /// the window has no delta (dense-comm rounds) — in which case the
+    /// caller falls back to a dense resync.
+    pub fn chain_from(&self, base: u64) -> Option<ModelUpdate> {
+        let head = self.head_version();
+        if base >= head {
+            return None;
+        }
+        let links: Option<Vec<Vec<TensorUpdate>>> = (base + 1..=head)
+            .map(|v| self.get(v).and_then(|mv| mv.delta.clone()))
+            .collect();
+        Some(ModelUpdate::Chain(links?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::wire::{chained_model_bytes, SparseTensor};
+
+    fn t(v: &[f32]) -> Tensor {
+        Tensor::new(vec![v.len()], v.to_vec())
+    }
+
+    fn delta(v: &[f32]) -> Vec<TensorUpdate> {
+        vec![TensorUpdate::Sparse(SparseTensor::encode(v))]
+    }
+
+    /// Push `n` sparse deltas onto a genesis-zero ring, advancing the
+    /// params by each delta like the leader does.
+    fn ring_with(n: usize, cap: usize) -> VersionRing {
+        let mut ring = VersionRing::new(cap, vec![Tensor::zeros(&[3])]);
+        for i in 0..n {
+            let d = delta(&[i as f32 + 1.0, 0.0, -(i as f32) - 1.0]);
+            let mut params = ring.head().params.clone();
+            ModelUpdate::Chain(vec![d.clone()]).apply(&mut params).unwrap();
+            ring.push(params, Some(d));
+        }
+        ring
+    }
+
+    #[test]
+    fn ring_retains_a_bounded_window() {
+        let ring = ring_with(5, 3);
+        assert_eq!(ring.head_version(), 5);
+        assert_eq!(ring.retained(), 3);
+        assert!(ring.get(2).is_none(), "evicted version must be gone");
+        assert!(ring.get(3).is_some());
+        assert!(ring.get(6).is_none());
+        assert_eq!(ring.get(5).unwrap().version, 5);
+    }
+
+    #[test]
+    fn chain_from_replays_to_bit_identical_params_for_k_1_2_3() {
+        // the chained-downlink ≡ dense-resync param-parity pin: a worker
+        // k ∈ {1, 2, 3} versions behind that applies the chain must land
+        // on EXACTLY the head's reference params — the same floats a
+        // dense resync would have shipped
+        let ring = ring_with(3, 4);
+        for k in 1..=3u64 {
+            let base = ring.head_version() - k;
+            let mut replica = ring.get(base).unwrap().params.clone();
+            let chain = ring.chain_from(base).unwrap();
+            // bytes follow the documented formula: header + Σ links
+            let want_bytes = chained_model_bytes((base + 1..=ring.head_version()).map(|v| {
+                ring.get(v)
+                    .unwrap()
+                    .delta
+                    .as_ref()
+                    .unwrap()
+                    .iter()
+                    .map(|u| u.wire_bytes())
+                    .sum()
+            }));
+            assert_eq!(chain.wire_bytes(), want_bytes, "k={k}");
+            chain.apply(&mut replica).unwrap();
+            assert_eq!(
+                replica,
+                ring.head().params,
+                "k={k}: chain replay diverged from the dense-resync params"
+            );
+        }
+    }
+
+    #[test]
+    fn chain_from_refuses_when_history_is_missing() {
+        // current replica: nothing to chain
+        let ring = ring_with(3, 4);
+        assert!(ring.chain_from(3).is_none());
+        // evicted base: the window moved past it
+        let ring = ring_with(5, 3);
+        assert!(ring.chain_from(1).is_none());
+        // dense-mode history (no deltas retained): chain unavailable
+        let mut ring = VersionRing::new(4, vec![t(&[0.0])]);
+        ring.push(vec![t(&[1.0])], None);
+        assert!(ring.chain_from(0).is_none());
+    }
+}

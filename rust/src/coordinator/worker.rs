@@ -18,10 +18,14 @@
 //! ([`crate::config::CommMode`]): each worker keeps a `reference` replica
 //! of the params the leader believes it holds, advanced only by applying
 //! the leader's downlink [`ModelUpdate`]s — dense snapshots replace it,
-//! pruned deltas accumulate into it, so leader and worker replicas stay
-//! bit-identical. The uplink is the worker's own pruned delta
-//! (`local − reference`) through its error-feedback [`DeltaCodec`]; in
-//! `dense` mode both directions ship full snapshots exactly as before.
+//! pruned deltas accumulate into it, and chained deltas replay the
+//! per-round downlinks a dropped round made it miss — so leader and
+//! worker replicas stay bit-identical. The uplink is the worker's own
+//! pruned delta (`local − reference`) through its error-feedback
+//! [`DeltaCodec`], tagged with the model version it was computed against
+//! ([`WorkerReport::base_version`]) so the quorum leader can fold it
+//! late with the right staleness weight; in `dense` mode both directions
+//! ship full snapshots exactly as before.
 
 use std::sync::mpsc::{self, Sender};
 use std::thread::JoinHandle;
@@ -30,7 +34,7 @@ use std::time::Instant;
 use anyhow::{anyhow, Result};
 
 use crate::comm::{DeltaCodec, ModelUpdate};
-use crate::config::{CommMode, TrainConfig};
+use crate::config::{CommMode, CommPruner, TrainConfig};
 use crate::data::batcher::Prefetcher;
 use crate::data::Dataset;
 use crate::manifest::{ArtifactSpec, ModelSpec};
@@ -38,11 +42,28 @@ use crate::params::ParamStore;
 use crate::runtime::{Runtime, StepDriver, TransferStats};
 use crate::util::rng::Rng;
 
+/// Network-tier settings a worker's uplink codec is built from (one
+/// bundle so the spawn signature stays readable).
+#[derive(Clone, Copy)]
+pub struct CommSetup {
+    pub mode: CommMode,
+    pub rate: f64,
+    pub pruner: CommPruner,
+}
+
 /// One round's work order.
 pub struct WorkerTask {
     pub round: usize,
-    /// the downlink: a dense snapshot (first round / resync / `dense`
-    /// mode) or the pruned global delta
+    /// the model version this task's payload brings the worker to — the
+    /// version its uplink will be computed against. Tags the round's
+    /// wire exchange so the leader can fold a late report with the right
+    /// staleness weight.
+    pub version: u64,
+    /// the downlink: a dense snapshot (first round / resync beyond the
+    /// retained window / `dense` mode), the pruned global delta, or a
+    /// chain of the retained per-round deltas (a worker ≤ `max_chain`
+    /// versions behind — replays the missed downlinks bit-identically
+    /// and keeps the error-feedback residual alive)
     pub payload: ModelUpdate,
     pub local_steps: usize,
     /// straggler slowdown factor (1.0 = healthy)
@@ -61,6 +82,10 @@ pub struct WorkerTask {
 pub struct WorkerReport {
     pub worker_id: usize,
     pub round: usize,
+    /// the model version `update` was computed against
+    /// (= [`WorkerTask::version`]); the leader's staleness weight for a
+    /// late fold is `λ^(current − base_version)`
+    pub base_version: u64,
     /// the uplink: dense params in `dense` mode, the worker's pruned
     /// delta vs its reference otherwise
     pub update: ModelUpdate,
@@ -98,8 +123,7 @@ impl WorkerHandle {
         train_art: ArtifactSpec,
         model: &ModelSpec,
         cfg: TrainConfig,
-        comm: CommMode,
-        comm_rate: f64,
+        comm: CommSetup,
     ) -> Result<Self> {
         let mut store = ParamStore::init(model, cfg.seed); // momenta + B local
         let batch = model.batch;
@@ -137,7 +161,7 @@ impl WorkerHandle {
                 // leader's reference replica), plus the uplink codec with
                 // its error-feedback residual
                 let mut reference: Vec<crate::tensor::Tensor> = Vec::new();
-                let mut codec = DeltaCodec::new(comm, comm_rate);
+                let mut codec = DeltaCodec::with_pruner(comm.mode, comm.rate, comm.pruner);
                 let uplink_rng = Rng::new(cfg.seed ^ 0x5EED_C0DE).fold_in(id as u64);
                 while let Ok(Msg::Task(task)) = rx.recv() {
                     let t0 = Instant::now();
@@ -162,7 +186,13 @@ impl WorkerHandle {
                                 reference.clone()
                             }
                         }
-                        u @ ModelUpdate::Delta(_) => {
+                        // a chain replays the missed per-round deltas in
+                        // order — same float ops an always-on peer ran, so
+                        // the replica lands bit-identical and the carried
+                        // EF residual stays valid (no reset, unlike a
+                        // dense resync which erases the divergence the
+                        // residual described)
+                        u @ (ModelUpdate::Delta(_) | ModelUpdate::Chain(_)) => {
                             if reference.is_empty() {
                                 log::error!(
                                     "worker {id}: delta downlink before any snapshot; \
@@ -171,6 +201,14 @@ impl WorkerHandle {
                                 continue;
                             }
                             if let Err(e) = u.apply(&mut reference) {
+                                // the replica is now an unknown number of
+                                // versions behind whatever the leader will
+                                // dispatch next (it may already have queued
+                                // further deltas under pipeline depth > 1)
+                                // — poison it so every delta is rejected
+                                // until a dense snapshot resyncs us
+                                reference.clear();
+                                codec.reset_residual();
                                 log::error!("worker {id}: broadcast rejected: {e:#}");
                                 continue;
                             }
@@ -246,6 +284,7 @@ impl WorkerHandle {
                     let _ = task.reply.send(WorkerReport {
                         worker_id: id,
                         round: task.round,
+                        base_version: task.version,
                         update,
                         examples: shard_n,
                         mean_loss: losses / n,

@@ -35,6 +35,7 @@ fn common_flags() -> Vec<FlagSpec> {
         FlagSpec { name: "lr", help: "learning rate", takes_value: true, default: None },
         FlagSpec { name: "seed", help: "seed", takes_value: true, default: None },
         FlagSpec { name: "checkpoint", help: "save checkpoint here", takes_value: true, default: None },
+        FlagSpec { name: "checkpoint-every-steps", help: "also rewrite the checkpoint every N steps mid-run (0 = end only)", takes_value: true, default: None },
         FlagSpec { name: "metrics-csv", help: "write per-step metrics CSV", takes_value: true, default: None },
         FlagSpec { name: "residency", help: "train-state residency (resident|literal)", takes_value: true, default: None },
         FlagSpec { name: "eval-residency", help: "eval residency (resident|literal); defaults to --residency", takes_value: true, default: None },
@@ -64,6 +65,9 @@ fn load_table(args: &Args) -> Result<Table> {
     }
     if let Some(v) = args.get("checkpoint") {
         table.set("train.checkpoint", Value::Str(v.into()));
+    }
+    if let Some(v) = args.get_usize("checkpoint-every-steps")? {
+        table.set("train.checkpoint_every_steps", Value::Int(v as i64));
     }
     if let Some(v) = args.get_choice("residency", &["resident", "device", "literal", "host"])? {
         table.set("train.residency", Value::Str(v.into()));
@@ -179,6 +183,11 @@ fn cmd_federated(raw: &[String]) -> Result<()> {
         FlagSpec { name: "dropout-prob", help: "per-round worker dropout probability", takes_value: true, default: Some("0.0") },
         FlagSpec { name: "comm", help: "network-tier encoding (dense|pruned|sign)", takes_value: true, default: None },
         FlagSpec { name: "comm-rate", help: "comm pruning rate P (pruned|sign modes)", takes_value: true, default: None },
+        FlagSpec { name: "comm-pruner", help: "delta survivor selection (stochastic|topk)", takes_value: true, default: None },
+        FlagSpec { name: "quorum", help: "fold a round once this fraction of dispatched reports arrived (1.0 = full barrier); stragglers fold late with a staleness discount", takes_value: true, default: None },
+        FlagSpec { name: "staleness-decay", help: "late-report weight decay λ (weight = examples·λ^k, k = versions behind; 0 discards)", takes_value: true, default: None },
+        FlagSpec { name: "pipeline-depth", help: "max rounds in flight under a quorum (bounds late-report staleness)", takes_value: true, default: None },
+        FlagSpec { name: "max-chain", help: "resync workers up to k versions behind with chained deltas instead of dense snapshots (0 = always dense)", takes_value: true, default: None },
     ]);
     if raw.iter().any(|a| a == "--help") {
         println!("{}", render_help("efficientgrad", "federated", "Federated edge training", &specs));
@@ -217,6 +226,21 @@ fn cmd_federated(raw: &[String]) -> Result<()> {
     if let Some(v) = args.get_f64("comm-rate")? {
         cfg.comm_rate = v;
     }
+    if let Some(v) = args.get_choice("comm-pruner", &["stochastic", "topk", "top-k"])? {
+        cfg.comm_pruner = efficientgrad::config::CommPruner::parse(v)?;
+    }
+    if let Some(v) = args.get_f64("quorum")? {
+        cfg.quorum = v;
+    }
+    if let Some(v) = args.get_f64("staleness-decay")? {
+        cfg.staleness_decay = v;
+    }
+    if let Some(v) = args.get_usize("pipeline-depth")? {
+        cfg.pipeline_depth = v;
+    }
+    if let Some(v) = args.get_usize("max-chain")? {
+        cfg.max_chain = v;
+    }
     cfg.validate()?; // one normative range check, config-file and CLI alike
 
     let rt = Runtime::cpu()?;
@@ -230,6 +254,15 @@ fn cmd_federated(raw: &[String]) -> Result<()> {
         .iter()
         .map(|r| r.network_joules(&link))
         .sum();
+    let late_total: usize = summary.rounds.iter().map(|r| r.late_reports).sum();
+    let chained_total: usize = summary.rounds.iter().map(|r| r.chained_downlinks).sum();
+    if cfg.quorum < 1.0 || chained_total > 0 {
+        println!(
+            "elastic schedule: quorum {:.2}, {} late reports folded (λ={}), \
+             {} chained downlinks",
+            cfg.quorum, late_total, cfg.staleness_decay, chained_total
+        );
+    }
     println!(
         "federated done [{} schedule]: final_acc={:.4} rounds={} comm={} upload={:.2} MB \
          download={:.2} MB (net {:.1} mJ over the {:.0} nJ/B link)",

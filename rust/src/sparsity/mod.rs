@@ -96,6 +96,62 @@ pub fn stochastic_prune(delta: &[f32], tau: f64, rng: &mut Rng) -> Vec<f32> {
     out
 }
 
+/// Survivors the top-k comm pruner keeps at rate `P` over `len`
+/// elements: `⌈(1−P)·len⌉`, at least 1 for a non-empty tensor — the
+/// *exact* survivor fraction `1−P`, against eq. 3's stochastic
+/// promotion which floors out near 46% survivors at P = 0.9.
+///
+/// ```
+/// use efficientgrad::sparsity::topk_keep_count;
+/// assert_eq!(topk_keep_count(1000, 0.9), 100);
+/// assert_eq!(topk_keep_count(1000, 0.999), 1);  // never empty
+/// assert_eq!(topk_keep_count(10, 0.0), 10);     // rate 0 keeps all
+/// assert_eq!(topk_keep_count(0, 0.9), 0);
+/// ```
+pub fn topk_keep_count(len: usize, rate: f64) -> usize {
+    if len == 0 {
+        return 0;
+    }
+    let k = ((1.0 - rate.clamp(0.0, 1.0)) * len as f64).ceil() as usize;
+    k.clamp(1, len)
+}
+
+/// Exact top-k magnitude pruning into a caller-provided buffer: the `k`
+/// coordinates of largest |δ| keep their exact values, everything else
+/// zeroes. Fully deterministic — no RNG, and ties break toward the
+/// lower element index — so the comm codec's partitioned-thread
+/// determinism story holds trivially for this pruner. O(n) selection
+/// (`select_nth_unstable_by`), not a sort.
+pub fn topk_prune_into(delta: &[f32], k: usize, out: &mut [f32]) {
+    assert_eq!(
+        delta.len(),
+        out.len(),
+        "prune output buffer len {} != input {}",
+        out.len(),
+        delta.len()
+    );
+    if k >= delta.len() {
+        out.copy_from_slice(delta);
+        return;
+    }
+    out.fill(0.0);
+    if k == 0 {
+        return;
+    }
+    let mut idx: Vec<u32> = (0..delta.len() as u32).collect();
+    idx.select_nth_unstable_by(k - 1, |&a, &b| {
+        let (ma, mb) = (delta[a as usize].abs(), delta[b as usize].abs());
+        // descending magnitude; NaNs (diverged deltas) sort last; equal
+        // magnitudes break toward the lower index — total, deterministic
+        mb.partial_cmp(&ma)
+            .unwrap_or_else(|| ma.is_nan().cmp(&mb.is_nan()))
+            .then(a.cmp(&b))
+    });
+    for &i in &idx[..k] {
+        out[i as usize] = delta[i as usize];
+    }
+}
+
 /// Expected *zero* fraction after pruning N(0,σ²) gradients at rate P.
 ///
 /// Band mass below τ is P (eq. 4); within the band an element of
@@ -278,6 +334,48 @@ mod tests {
         stochastic_prune_into_partitioned(&flat, 1.0, &base, &mut out);
         let c = crate::util::par::CHUNK;
         assert_ne!(&out[..c], &out[c..2 * c], "per-chunk streams collided");
+    }
+
+    #[test]
+    fn topk_keeps_exactly_the_largest_magnitudes() {
+        let delta = [0.1f32, -5.0, 0.0, 2.0, -0.3, 4.0];
+        let mut out = vec![0f32; delta.len()];
+        topk_prune_into(&delta, 3, &mut out);
+        assert_eq!(out, vec![0.0, -5.0, 0.0, 2.0, 0.0, 4.0]);
+        // k >= len passes everything through untouched
+        topk_prune_into(&delta, 6, &mut out);
+        assert_eq!(out, delta.to_vec());
+        topk_prune_into(&delta, 0, &mut out);
+        assert_eq!(out, vec![0.0; 6]);
+    }
+
+    #[test]
+    fn topk_ties_break_deterministically_by_index() {
+        let delta = [1.0f32, -1.0, 1.0, -1.0];
+        let mut out = vec![0f32; 4];
+        topk_prune_into(&delta, 2, &mut out);
+        // equal magnitudes: the lower indices win, every run
+        assert_eq!(out, vec![1.0, -1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn topk_survivor_fraction_is_exactly_one_minus_p() {
+        let mut rng = Rng::new(17);
+        let mut delta = vec![0f32; 10_000];
+        rng.fill_normal(&mut delta, 1.0);
+        let k = topk_keep_count(delta.len(), 0.9);
+        assert_eq!(k, 1000);
+        let mut out = vec![0f32; delta.len()];
+        topk_prune_into(&delta, k, &mut out);
+        let nnz = out.iter().filter(|&&v| v != 0.0).count();
+        assert_eq!(nnz, k, "top-k survivor count must be exact");
+        // the whole point: far below eq. 3's ≈46% promotion floor
+        assert!((nnz as f64 / delta.len() as f64) < expected_survivor_fraction(0.9) / 2.0);
+        // and the kept values are exact (no ±τ quantization): every
+        // survivor equals its input coordinate
+        for (&d, &o) in delta.iter().zip(&out) {
+            assert!(o == 0.0 || o == d);
+        }
     }
 
     #[test]

@@ -167,6 +167,7 @@ impl Trainer {
                         crate::util::stats::mean(&out.sparsity),
                     );
                 }
+                self.periodic_checkpoint(step)?;
                 if self.cfg.eval_every > 0
                     && (step + 1) % self.cfg.eval_every == 0
                 {
@@ -194,6 +195,32 @@ impl Trainer {
             self.store.save(std::path::Path::new(path))?;
         }
         Ok(last_eval)
+    }
+
+    /// Periodic mid-run checkpointing (`train.checkpoint_every_steps`):
+    /// after step `step` (0-based), if the cadence lands and a
+    /// checkpoint path is configured, bring the host store current and
+    /// rewrite the checkpoint, so a killed run loses at most N steps.
+    /// The sync rides the dirty flag — on the literal path (store never
+    /// stale) it is free, on the resident path it is the O(model)
+    /// download the cadence explicitly opts into. Returns whether a
+    /// checkpoint was written.
+    pub fn periodic_checkpoint(&mut self, step: usize) -> Result<bool> {
+        // cadence check first: this runs every step of the hot loop
+        let every = self.cfg.checkpoint_every_steps;
+        if every == 0 || (step + 1) % every != 0 {
+            return Ok(false);
+        }
+        let Some(path) = self.cfg.checkpoint.clone() else {
+            return Ok(false);
+        };
+        self.sync_store()?;
+        self.store.save(std::path::Path::new(&path))?;
+        log::debug!(
+            "checkpoint @ step {} -> {path} (periodic, every {every})",
+            step + 1
+        );
+        Ok(true)
     }
 
     /// One externally-driven step (used by the Fig. 3 probe loop and the

@@ -2,7 +2,7 @@
 //! real PJRT executables; each worker brings up its own client).
 
 use efficientgrad::comm::wire::{sign_model_bytes_envelope, sparse_model_bytes};
-use efficientgrad::config::{CommMode, FedConfig, TrainConfig};
+use efficientgrad::config::{CommMode, CommPruner, FedConfig, TrainConfig};
 use efficientgrad::coordinator::Leader;
 use efficientgrad::manifest::Manifest;
 use efficientgrad::params::ParamStore;
@@ -34,6 +34,9 @@ fn small_cfg(workers: usize, rounds: usize) -> FedConfig {
             lr: 0.05,
             ..Default::default()
         },
+        // quorum 1.0 (full barrier), stochastic pruner, max_chain 0 —
+        // the oracle knobs
+        ..FedConfig::default()
     }
 }
 
@@ -399,6 +402,239 @@ fn outage_rounds_report_nan_and_are_skipped_by_summary() {
     let model = m.model("convnet_t").unwrap();
     let init = ParamStore::init(model, small_cfg(2, 3).train.seed);
     assert_eq!(params, init.params);
+}
+
+#[test]
+fn full_barrier_quorum_is_bit_for_bit_the_oracle() {
+    // the versioned-round acceptance pin: quorum = 1.0 with
+    // pipeline_depth = 1 (and an explicitly non-default λ, which must be
+    // inert — no report is ever late at a full barrier) reproduces the
+    // default schedule bit for bit over ≥5 rounds with dropout AND
+    // straggler injection — params, eval accs, every ledger
+    let Some(m) = manifest() else {
+        eprintln!("SKIP: artifacts missing");
+        return;
+    };
+    let rt = Runtime::cpu().unwrap();
+    let mut base = small_cfg(3, 5);
+    base.comm = CommMode::Sign;
+    base.dropout_prob = 0.3;
+    base.straggler_prob = 0.5;
+    let mut explicit = base.clone();
+    explicit.quorum = 1.0;
+    explicit.pipeline_depth = 1;
+    explicit.max_chain = 0;
+    explicit.staleness_decay = 0.9; // consulted only below quorum 1.0
+    let (a, params_a) = run_to_summary(&rt, &m, base);
+    let (b, params_b) = run_to_summary(&rt, &m, explicit);
+    assert_eq!(params_a, params_b, "oracle knobs changed the params");
+    assert_eq!(a.rounds.len(), b.rounds.len());
+    for (x, y) in a.rounds.iter().zip(&b.rounds) {
+        assert_eq!(x.eval_acc.to_bits(), y.eval_acc.to_bits(), "round {}", x.round);
+        assert_eq!(x.upload_bytes, y.upload_bytes, "round {}", x.round);
+        assert_eq!(x.download_bytes, y.download_bytes, "round {}", x.round);
+        assert_eq!(x.dropped, y.dropped, "round {}", x.round);
+        assert_eq!(x.dense_downlinks, y.dense_downlinks, "round {}", x.round);
+        // the elastic-schedule machinery must be provably idle at a full
+        // barrier, and every round advances exactly one version
+        for r in [x, y] {
+            assert_eq!(r.late_reports, 0, "round {}", r.round);
+            assert_eq!(r.stale_weight_mass, 0.0, "round {}", r.round);
+            assert_eq!(r.chained_downlinks, 0, "round {}", r.round);
+            assert_eq!(r.version, r.round as u64 + 1, "round {}", r.round);
+        }
+    }
+    assert_eq!(a.final_acc.to_bits(), b.final_acc.to_bits());
+    assert_eq!(a.total_upload_bytes, b.total_upload_bytes);
+    assert_eq!(a.total_download_bytes, b.total_download_bytes);
+    assert_eq!(a.total_device_transfer, b.total_device_transfer);
+}
+
+#[test]
+fn quorum_rounds_fold_stragglers_late_and_still_learn() {
+    // quorum = 0.5 over 3 healthy workers: every round closes after
+    // ⌈0.5·3⌉ = 2 reports, the third is stashed and folded into a later
+    // round as a late report. λ = 1 keeps a late report's full weight
+    // (the synchronous-fold equivalence is pinned at the unit level in
+    // coordinator::fedavg); stale_weight_mass must then equal the late
+    // count exactly.
+    let Some(m) = manifest() else {
+        eprintln!("SKIP: artifacts missing");
+        return;
+    };
+    let rt = Runtime::cpu().unwrap();
+    const ROUNDS: usize = 6;
+    let mut cfg = small_cfg(3, ROUNDS);
+    cfg.quorum = 0.5;
+    cfg.staleness_decay = 1.0;
+    cfg.pipeline_depth = 2;
+    let (sum, _) = run_to_summary(&rt, &m, cfg);
+    assert_eq!(sum.rounds.len(), ROUNDS);
+    let mut total_late = 0usize;
+    let mut total_folded = 0usize;
+    for r in &sum.rounds {
+        assert_eq!(r.dispatched, 3, "round {}", r.round);
+        assert!(r.dropped.is_empty(), "round {}: healthy workers dropped", r.round);
+        // every round folds exactly its quorum of fresh reports plus
+        // whatever stragglers landed; ledgers follow arrival accounting
+        assert_eq!(
+            r.worker_transfer.len(),
+            2 + r.late_reports,
+            "round {}: ledger entries != fresh + late",
+            r.round
+        );
+        assert!(
+            (r.stale_weight_mass - r.late_reports as f64).abs() < 1e-12,
+            "round {}: λ=1 mass {} != late count {}",
+            r.round,
+            r.stale_weight_mass,
+            r.late_reports
+        );
+        assert!(r.mean_loss.is_finite());
+        assert!(r.eval_acc.is_finite());
+        total_late += r.late_reports;
+        total_folded += r.worker_transfer.len();
+    }
+    // each round stashes exactly one straggler; all but the final
+    // rounds' stragglers (bounded by the pipeline depth) fold late
+    assert!(
+        total_late >= ROUNDS - 2,
+        "late folding barely exercised: {total_late} late reports"
+    );
+    assert!(
+        total_folded >= 3 * ROUNDS - 2,
+        "lost reports: {total_folded} folded of {} dispatched",
+        3 * ROUNDS
+    );
+    // the run still learns at chance-beating accuracy (10 classes)
+    assert!(sum.final_acc > 0.12, "final acc {}", sum.final_acc);
+}
+
+#[test]
+fn chained_downlinks_replace_dense_resyncs_within_the_window() {
+    // twin runs under identical dropout injection (same seeds → same
+    // draw sequence), differing only in max_chain: every comeback that
+    // the max_chain=0 run resynced with a dense 4·P snapshot must ride a
+    // chained delta in the max_chain=3 run (k = 2 fits the window; a
+    // worker's FIRST dispatch is dense in both runs), and the chain is
+    // cheaper on the wire in sign mode
+    let Some(m) = manifest() else {
+        eprintln!("SKIP: artifacts missing");
+        return;
+    };
+    let rt = Runtime::cpu().unwrap();
+    const ROUNDS: usize = 6;
+    let mk = |max_chain: usize| {
+        let mut cfg = small_cfg(3, ROUNDS);
+        cfg.comm = CommMode::Sign;
+        cfg.dropout_prob = 0.4;
+        cfg.max_chain = max_chain;
+        cfg
+    };
+    let (dense_resync, _) = run_to_summary(&rt, &m, mk(0));
+    let (chained, _) = run_to_summary(&rt, &m, mk(3));
+    let total_chained: usize = chained.rounds.iter().map(|r| r.chained_downlinks).sum();
+    assert!(
+        total_chained > 0,
+        "dropout injection produced no chained resyncs (seed drift?)"
+    );
+    for (d, c) in dense_resync.rounds.iter().zip(&chained.rounds) {
+        // identical injection: the same workers were reachable
+        assert_eq!(d.dispatched, c.dispatched, "round {}", d.round);
+        assert_eq!(d.dropped, c.dropped, "round {}", d.round);
+        // bookkeeping: every resync is dense or chained, totals agree
+        assert_eq!(
+            c.dense_downlinks + c.chained_downlinks,
+            d.dense_downlinks,
+            "round {}: resyncs went missing",
+            d.round
+        );
+        assert_eq!(c.version, d.version, "round {}", d.round);
+    }
+    // up to the first chained round the two runs are bit-identical (the
+    // only divergence is the resync payload), so that round's downlink
+    // ledger is directly comparable — the chain must undercut the dense
+    // snapshot it replaced
+    let first = chained
+        .rounds
+        .iter()
+        .position(|r| r.chained_downlinks > 0)
+        .unwrap();
+    for i in 0..first {
+        assert_eq!(
+            chained.rounds[i].download_bytes, dense_resync.rounds[i].download_bytes,
+            "round {i}: runs diverged before the first chain"
+        );
+    }
+    assert!(
+        chained.rounds[first].download_bytes < dense_resync.rounds[first].download_bytes,
+        "round {first}: chain {} B did not undercut dense resync {} B",
+        chained.rounds[first].download_bytes,
+        dense_resync.rounds[first].download_bytes
+    );
+    // both runs still learn through the churn
+    assert!(chained.final_acc > 0.12, "final acc {}", chained.final_acc);
+}
+
+#[test]
+fn topk_comm_pruner_sharpens_the_pruned_cut() {
+    // the eq. 3 stochastic pruner floors out at ≈46% survivors at P=0.9;
+    // exact top-k ships exactly (1−P) = 10% — the uplink ledger must
+    // show the sharper cut, at comparable accuracy (error feedback
+    // carries the bias)
+    let Some(m) = manifest() else {
+        eprintln!("SKIP: artifacts missing");
+        return;
+    };
+    let rt = Runtime::cpu().unwrap();
+    const ROUNDS: usize = 6;
+    let mut stoch = small_cfg(2, ROUNDS);
+    stoch.comm = CommMode::Pruned;
+    let mut topk = stoch.clone();
+    topk.comm_pruner = CommPruner::TopK;
+    let (s, _) = run_to_summary(&rt, &m, stoch);
+    let (t, _) = run_to_summary(&rt, &m, topk);
+    let s_up: u64 = s.rounds.iter().map(|r| r.upload_bytes).sum();
+    let t_up: u64 = t.rounds.iter().map(|r| r.upload_bytes).sum();
+    // ~10% vs ~46% survivors: at least a 2x sharper uplink
+    assert!(
+        t_up * 2 <= s_up,
+        "top-k uplink {t_up} B not ≤ half of stochastic {s_up} B"
+    );
+    // survivor budget is exact: ⌈0.1·E⌉ per tensor per worker per round
+    let model = m.model("convnet_t").unwrap();
+    let probe = ParamStore::init(model, 0);
+    let budget: u64 = probe
+        .params
+        .iter()
+        .map(|p| ((p.len() as f64) * 0.1).ceil() as u64)
+        .sum();
+    for r in &t.rounds {
+        // the budget is a hard ceiling; a selected coordinate can only
+        // go missing if its delta is exactly 0.0 (encode ships nonzeros),
+        // so the floor is tight
+        assert!(
+            r.uplink_survivors <= 2 * budget,
+            "round {}: top-k overshot the budget: {} > {}",
+            r.round,
+            r.uplink_survivors,
+            2 * budget
+        );
+        assert!(
+            r.uplink_survivors * 10 >= 2 * budget * 9,
+            "round {}: top-k shipped {} of budget {}",
+            r.round,
+            r.uplink_survivors,
+            2 * budget
+        );
+    }
+    // and accuracy stays in the same regime as the stochastic run
+    assert!(
+        (t.final_acc - s.final_acc).abs() <= 0.3,
+        "top-k acc {} vs stochastic {}",
+        t.final_acc,
+        s.final_acc
+    );
 }
 
 #[test]

@@ -212,6 +212,54 @@ fn trainer_end_to_end_short_run_beats_chance() {
 }
 
 #[test]
+fn periodic_checkpoint_persists_mid_run_state() {
+    // train.checkpoint_every_steps: a killed run must find a checkpoint
+    // at most N steps old. Drive manual steps (no run() completion —
+    // that is the point: the final save never happens) and check the
+    // cadence writes a loadable, step-stamped checkpoint whose params
+    // match the synced device state.
+    let m = require_artifacts!();
+    let rt = Runtime::cpu().unwrap();
+    let path = std::env::temp_dir().join("effgrad_periodic.ckpt");
+    std::fs::remove_file(&path).ok();
+    let cfg = TrainConfig {
+        model: "convnet_t".into(),
+        mode: "efficientgrad".into(),
+        steps: 10,
+        train_examples: 128,
+        test_examples: 64,
+        difficulty: 0.4,
+        log_every: 1000,
+        checkpoint: Some(path.to_string_lossy().into_owned()),
+        checkpoint_every_steps: 2,
+        ..Default::default()
+    };
+    let ds = generate(&SynthConfig {
+        n: cfg.train_examples,
+        difficulty: cfg.difficulty as f32,
+        seed: cfg.seed,
+        ..Default::default()
+    });
+    let mut trainer = Trainer::new(&rt, &m, cfg).unwrap();
+    let mut batcher = Batcher::new(&ds, m.model("convnet_t").unwrap().batch, 3);
+
+    // off-cadence step: nothing written yet
+    trainer.manual_step(&batcher.next_batch(), 0.05).unwrap();
+    assert!(!trainer.periodic_checkpoint(0).unwrap());
+    assert!(!path.exists(), "checkpoint written off-cadence");
+    // second step lands on the cadence
+    trainer.manual_step(&batcher.next_batch(), 0.05).unwrap();
+    assert!(trainer.periodic_checkpoint(1).unwrap());
+    let restored = ParamStore::load(&path).unwrap();
+    assert_eq!(restored.step, 2, "checkpoint must carry the step count");
+    // the checkpoint is the synced mid-run state, bit for bit
+    trainer.sync_store().unwrap();
+    assert_eq!(restored.params, trainer.store.params);
+    assert_eq!(restored.momenta, trainer.store.momenta);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
 fn checkpoint_roundtrip_through_runtime() {
     let m = require_artifacts!();
     let rt = Runtime::cpu().unwrap();
