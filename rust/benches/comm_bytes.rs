@@ -15,8 +15,9 @@
 //!     cargo bench --bench comm_bytes        (make bench-comm)
 
 use efficientgrad::benchlib::{bench, fmt_ns, Report};
+use efficientgrad::comm::envelope::{encode_update, FRAME_HEADER_BYTES};
 use efficientgrad::comm::wire::{sign_tensor_bytes, sparse_tensor_bytes};
-use efficientgrad::comm::{DeltaCodec, ModelUpdate, TensorUpdate};
+use efficientgrad::comm::{DeltaCodec, Frame, FrameKind, ModelUpdate, TensorUpdate};
 use efficientgrad::config::{CommMode, CommPruner};
 use efficientgrad::tensor::Tensor;
 use efficientgrad::util::rng::Rng;
@@ -189,6 +190,27 @@ fn main() {
         pruned_topk_wire * 2 <= pruned_stochastic_wire,
         "top-k failed to sharpen the pruned cut: {pruned_topk_wire} vs {pruned_stochastic_wire}"
     );
+
+    // integrity envelope (docs/TRANSFER_MODEL.md §Integrity & recovery):
+    // sealing a payload adds a flat FRAME_HEADER_BYTES of header —
+    // magic, schema version, kind, length, FNV-1a checksum — so the
+    // integrity tax per round is 24 B × frames, independent of P
+    let payload = encode_update(&ModelUpdate::Dense(reference.clone()));
+    let sealed = Frame::seal(FrameKind::Update, &payload);
+    assert_eq!(
+        sealed.wire_bytes(),
+        payload.len() as u64 + FRAME_HEADER_BYTES,
+        "envelope overhead drifted from the documented flat header"
+    );
+    assert!(sealed.open().is_ok(), "a clean seal must verify");
+    rep.row(vec![
+        "envelope/frame".into(),
+        "-".into(),
+        "-".into(),
+        FRAME_HEADER_BYTES.to_string(),
+        format!("{:.4}x", FRAME_HEADER_BYTES as f64 / dense_bytes as f64),
+        "-".into(),
+    ]);
 
     rep.print();
     rep.save_csv(&efficientgrad::figures::reports_dir().join("comm_bytes.csv"))

@@ -103,28 +103,23 @@ impl Report {
         println!();
     }
 
-    /// Also persist as CSV next to the bench output.
-    pub fn save_csv(&self, path: &std::path::Path) -> std::io::Result<()> {
-        if let Some(dir) = path.parent() {
-            std::fs::create_dir_all(dir)?;
-        }
+    /// Also persist as CSV next to the bench output (atomic write, so a
+    /// killed bench never leaves a torn report behind).
+    pub fn save_csv(&self, path: &std::path::Path) -> anyhow::Result<()> {
         let mut out = self.headers.join(",") + "\n";
         for r in &self.rows {
             out.push_str(&r.join(","));
             out.push('\n');
         }
-        std::fs::write(path, out)
+        crate::util::fs::atomic_write(path, out.as_bytes())
     }
 
     /// Machine-readable twin of `print`/`save_csv`:
     /// `{"title": ..., "headers": [...], "rows": [{header: cell, ...}]}`.
     /// Benches write these (e.g. `BENCH_runtime.json`) so the perf
     /// trajectory of a hot path can be diffed across PRs.
-    pub fn save_json(&self, path: &std::path::Path) -> std::io::Result<()> {
+    pub fn save_json(&self, path: &std::path::Path) -> anyhow::Result<()> {
         use crate::util::json::{arr, obj, s, Json};
-        if let Some(dir) = path.parent() {
-            std::fs::create_dir_all(dir)?;
-        }
         let rows = arr(self.rows.iter().map(|r| {
             Json::Obj(
                 self.headers
@@ -139,7 +134,7 @@ impl Report {
             ("headers", arr(self.headers.iter().map(|h| s(h)))),
             ("rows", rows),
         ]);
-        std::fs::write(path, format!("{j}\n"))
+        crate::util::fs::atomic_write(path, format!("{j}\n").as_bytes())
     }
 }
 

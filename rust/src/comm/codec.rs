@@ -187,6 +187,18 @@ impl DeltaCodec {
     pub fn reset_residual(&mut self) {
         self.residual.clear();
     }
+
+    /// The carried per-tensor residual, for run-store persistence
+    /// (empty until the first compressed encode).
+    pub fn residual(&self) -> &[Vec<f32>] {
+        &self.residual
+    }
+
+    /// Restore a persisted residual — the crash/resume counterpart of
+    /// [`DeltaCodec::residual`]. An empty vec is the fresh-codec state.
+    pub fn set_residual(&mut self, residual: Vec<Vec<f32>>) {
+        self.residual = residual;
+    }
 }
 
 #[cfg(test)]

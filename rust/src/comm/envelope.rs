@@ -1,0 +1,558 @@
+//! Integrity-checked framing for the federated channel.
+//!
+//! Workers are threads in this simulation, so PR 3's wire formats travel
+//! as structs; this module is the missing byte layer under them — the
+//! piece a real transport (ROADMAP item 1, "coordinator as a service")
+//! would put on the socket, and the piece the fault-injection harness
+//! ([`crate::faults`]) needs so a flipped bit is *detected and rejected*
+//! instead of silently folded into the global model.
+//!
+//! Every `ModelUpdate` / `WorkerReport` payload is sealed into a
+//! [`Frame`]: a fixed 24-byte header (magic, schema version, payload
+//! kind, payload length, FNV-1a-64 checksum) followed by the serialized
+//! payload. [`Frame::open`] verifies all five fields before a caller
+//! ever sees payload bytes; corrupt, truncated, duplicated-length or
+//! wrong-schema frames come back as errors, never as updates. A
+//! single-byte flip anywhere in a frame is always caught: FNV-1a's
+//! per-byte step `h ← (h ⊕ b)·prime` is injective in `h`, so two
+//! payloads differing in one byte can never collide, and header flips
+//! fail the magic/version/length checks directly.
+//!
+//! Envelope overhead is a flat [`FRAME_HEADER_BYTES`] = 24 bytes per
+//! frame, independent of payload size (`docs/TRANSFER_MODEL.md`
+//! §Integrity & recovery):
+//!
+//! ```
+//! use efficientgrad::comm::envelope::{Frame, FrameKind, FRAME_HEADER_BYTES};
+//! assert_eq!(FRAME_HEADER_BYTES, 24);
+//! let empty = Frame::seal(FrameKind::Nack, &[]);
+//! assert_eq!(empty.wire_bytes(), FRAME_HEADER_BYTES);
+//! let framed = Frame::seal(FrameKind::Report, &[7u8; 1000]);
+//! assert_eq!(framed.wire_bytes(), 1000 + FRAME_HEADER_BYTES);
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use crate::comm::wire::{ModelUpdate, SignTensor, SparseTensor, TensorUpdate};
+use crate::tensor::Tensor;
+
+/// Wire schema version sealed into every frame. Bump on any layout
+/// change to `encode_update` / the report encoding; old decoders then
+/// reject new frames outright instead of misparsing them.
+pub const SCHEMA_VERSION: u16 = 1;
+
+/// Fixed per-frame envelope overhead in bytes: 4 magic + 2 version +
+/// 2 kind + 8 payload length + 8 checksum.
+pub const FRAME_HEADER_BYTES: u64 = 24;
+
+const MAGIC: &[u8; 4] = b"EGFR";
+
+/// FNV-1a 64-bit over a byte slice — the per-payload digest. Chosen for
+/// the same reason the params checkpoint hand-rolls its footer: zero
+/// dependencies, one multiply per byte, and guaranteed detection of any
+/// single-byte corruption (each step is injective in the running hash).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// What a frame's payload claims to be. Sealed into the header so a
+/// report can never be misparsed as an update (or vice versa).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameKind {
+    /// Downlink: a serialized [`ModelUpdate`].
+    Update = 1,
+    /// Uplink: a serialized `WorkerReport`.
+    Report = 2,
+    /// Uplink: worker could not open/apply its downlink; empty payload.
+    Nack = 3,
+}
+
+impl FrameKind {
+    fn from_u16(v: u16) -> Result<Self> {
+        Ok(match v {
+            1 => FrameKind::Update,
+            2 => FrameKind::Report,
+            3 => FrameKind::Nack,
+            other => bail!("unknown frame kind {other}"),
+        })
+    }
+}
+
+/// One sealed message: header + payload, as the bytes a socket would
+/// carry. Mutable access to the raw bytes exists so the fault harness
+/// can corrupt frames exactly where a radio would.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Frame(Vec<u8>);
+
+impl Frame {
+    /// Seal a payload: compute length + checksum, prepend the header.
+    pub fn seal(kind: FrameKind, payload: &[u8]) -> Self {
+        let mut buf = Vec::with_capacity(FRAME_HEADER_BYTES as usize + payload.len());
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&SCHEMA_VERSION.to_le_bytes());
+        buf.extend_from_slice(&(kind as u16).to_le_bytes());
+        buf.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        buf.extend_from_slice(&fnv1a64(payload).to_le_bytes());
+        buf.extend_from_slice(payload);
+        Frame(buf)
+    }
+
+    /// Verify magic, schema version, kind, length and checksum; return
+    /// the payload only if all five hold. This is the *only* way payload
+    /// bytes leave a frame — there is no unchecked accessor.
+    pub fn open(&self) -> Result<(FrameKind, &[u8])> {
+        let b = &self.0;
+        if b.len() < FRAME_HEADER_BYTES as usize {
+            bail!("frame truncated: {} bytes < {}-byte header", b.len(), FRAME_HEADER_BYTES);
+        }
+        if &b[0..4] != MAGIC {
+            bail!("bad frame magic {:02x?}", &b[0..4]);
+        }
+        let version = u16::from_le_bytes([b[4], b[5]]);
+        if version != SCHEMA_VERSION {
+            bail!("frame schema v{version}, this build speaks v{SCHEMA_VERSION}");
+        }
+        let kind = FrameKind::from_u16(u16::from_le_bytes([b[6], b[7]]))?;
+        let len = u64::from_le_bytes(b[8..16].try_into().unwrap());
+        let payload = &b[FRAME_HEADER_BYTES as usize..];
+        if len != payload.len() as u64 {
+            bail!("frame length field {len} != payload {} bytes", payload.len());
+        }
+        let want = u64::from_le_bytes(b[16..24].try_into().unwrap());
+        let got = fnv1a64(payload);
+        if want != got {
+            bail!("frame checksum mismatch: header {want:#018x}, payload {got:#018x}");
+        }
+        Ok((kind, payload))
+    }
+
+    /// Total bytes on the wire (header + payload).
+    pub fn wire_bytes(&self) -> u64 {
+        self.0.len() as u64
+    }
+
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.0
+    }
+
+    /// Raw byte access for the fault harness — corruption happens on
+    /// the sealed bytes, exactly where a flaky link would flip them.
+    pub fn bytes_mut(&mut self) -> &mut Vec<u8> {
+        &mut self.0
+    }
+}
+
+/// Little-endian payload serializer (the counterpart of [`ByteReader`]).
+#[derive(Default)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// f32 by raw bits — bit-preserving through the roundtrip (NaN
+    /// payloads included, which the fold-boundary finiteness check then
+    /// rejects *after* an honest decode).
+    pub fn put_f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Checked little-endian payload reader: every read is bounds-checked
+/// and every collection length is validated against the bytes actually
+/// remaining *before* allocation, so a forged length field can neither
+/// panic the decoder nor make it balloon memory.
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            bail!("payload truncated: wanted {n} bytes, {} left", self.remaining());
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn get_u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn get_u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn get_u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn get_f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn get_f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Read `n` u32s after checking `4·n` bytes remain.
+    pub fn get_u32s(&mut self, n: usize) -> Result<Vec<u32>> {
+        let raw = self.take(4 * n)?;
+        Ok(raw.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    /// Read `n` f32s after checking `4·n` bytes remain.
+    pub fn get_f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        let raw = self.take(4 * n)?;
+        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    /// Fail if payload bytes remain — trailing garbage is a schema
+    /// violation, not padding.
+    pub fn finish(&self) -> Result<()> {
+        if self.remaining() != 0 {
+            bail!("{} trailing bytes after payload", self.remaining());
+        }
+        Ok(())
+    }
+}
+
+const UPDATE_DENSE: u8 = 0;
+const UPDATE_DELTA: u8 = 1;
+const UPDATE_CHAIN: u8 = 2;
+const TU_SPARSE: u8 = 0;
+const TU_SIGN: u8 = 1;
+
+/// Serialize a [`ModelUpdate`] payload (the downlink body; uplink delta
+/// reports embed the same delta encoding inside the report payload).
+pub fn encode_update(u: &ModelUpdate) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    write_update(&mut w, u);
+    w.into_bytes()
+}
+
+pub(crate) fn write_update(w: &mut ByteWriter, u: &ModelUpdate) {
+    match u {
+        ModelUpdate::Dense(ts) => {
+            w.put_u8(UPDATE_DENSE);
+            w.put_u32(ts.len() as u32);
+            for t in ts {
+                w.put_u32(t.shape().len() as u32);
+                for &d in t.shape() {
+                    w.put_u32(d as u32);
+                }
+                for &v in t.data() {
+                    w.put_f32(v);
+                }
+            }
+        }
+        ModelUpdate::Delta(us) => {
+            w.put_u8(UPDATE_DELTA);
+            write_delta(w, us);
+        }
+        ModelUpdate::Chain(links) => {
+            w.put_u8(UPDATE_CHAIN);
+            w.put_u32(links.len() as u32);
+            for us in links {
+                write_delta(w, us);
+            }
+        }
+    }
+}
+
+fn write_delta(w: &mut ByteWriter, us: &[TensorUpdate]) {
+    w.put_u32(us.len() as u32);
+    for u in us {
+        match u {
+            TensorUpdate::Sparse(t) => {
+                w.put_u8(TU_SPARSE);
+                w.put_u32(t.elems);
+                w.put_u32(t.indices.len() as u32);
+                for &i in &t.indices {
+                    w.put_u32(i);
+                }
+                for &v in &t.values {
+                    w.put_f32(v);
+                }
+            }
+            TensorUpdate::Sign(t) => {
+                w.put_u8(TU_SIGN);
+                w.put_u32(t.elems);
+                w.put_u32(t.nnz);
+                w.put_f32(t.magnitude);
+                for &p in &t.presence {
+                    w.put_u32(p);
+                }
+                for &s in &t.signs {
+                    w.put_u32(s);
+                }
+            }
+        }
+    }
+}
+
+/// Decode a [`ModelUpdate`] payload, validating every structural
+/// invariant the apply path relies on (index bounds, bitmap popcounts,
+/// tensor shapes) so a decoded update can never panic downstream.
+pub fn decode_update(payload: &[u8]) -> Result<ModelUpdate> {
+    let mut r = ByteReader::new(payload);
+    let u = read_update(&mut r)?;
+    r.finish()?;
+    Ok(u)
+}
+
+pub(crate) fn read_update(r: &mut ByteReader) -> Result<ModelUpdate> {
+    Ok(match r.get_u8().context("update tag")? {
+        UPDATE_DENSE => {
+            let n = r.get_u32()? as usize;
+            let mut ts = Vec::with_capacity(n.min(r.remaining()));
+            for _ in 0..n {
+                let rank = r.get_u32()? as usize;
+                if rank > 8 {
+                    bail!("dense tensor rank {rank} exceeds limit 8");
+                }
+                let mut shape = Vec::with_capacity(rank);
+                let mut elems: usize = 1;
+                for _ in 0..rank {
+                    let d = r.get_u32()? as usize;
+                    elems = elems
+                        .checked_mul(d)
+                        .filter(|&e| e <= r.remaining())
+                        .context("dense tensor shape overflows payload")?;
+                    shape.push(d);
+                }
+                let data = r.get_f32s(elems)?;
+                ts.push(Tensor::new(shape, data));
+            }
+            ModelUpdate::Dense(ts)
+        }
+        UPDATE_DELTA => ModelUpdate::Delta(read_delta(r)?),
+        UPDATE_CHAIN => {
+            let links = r.get_u32()? as usize;
+            if links > r.remaining() {
+                bail!("chain claims {links} links in {} bytes", r.remaining());
+            }
+            let mut out = Vec::with_capacity(links);
+            for _ in 0..links {
+                out.push(read_delta(r)?);
+            }
+            ModelUpdate::Chain(out)
+        }
+        other => bail!("unknown update tag {other}"),
+    })
+}
+
+fn read_delta(r: &mut ByteReader) -> Result<Vec<TensorUpdate>> {
+    let n = r.get_u32()? as usize;
+    if n > r.remaining() {
+        bail!("delta claims {n} tensors in {} bytes", r.remaining());
+    }
+    let mut us = Vec::with_capacity(n);
+    for _ in 0..n {
+        us.push(match r.get_u8().context("tensor update tag")? {
+            TU_SPARSE => {
+                let elems = r.get_u32()?;
+                let nnz = r.get_u32()? as usize;
+                if nnz > elems as usize {
+                    bail!("sparse tensor nnz {nnz} > elems {elems}");
+                }
+                let indices = r.get_u32s(nnz)?;
+                let values = r.get_f32s(nnz)?;
+                if let Some(&bad) = indices.iter().find(|&&i| i >= elems) {
+                    bail!("sparse index {bad} out of bounds for {elems} elements");
+                }
+                TensorUpdate::Sparse(SparseTensor { elems, indices, values })
+            }
+            TU_SIGN => {
+                let elems = r.get_u32()?;
+                let nnz = r.get_u32()?;
+                let magnitude = r.get_f32()?;
+                if nnz > elems {
+                    bail!("sign tensor nnz {nnz} > elems {elems}");
+                }
+                let presence = r.get_u32s((elems as usize).div_ceil(32))?;
+                let signs = r.get_u32s((nnz as usize).div_ceil(32))?;
+                let pop: u32 = presence.iter().map(|w| w.count_ones()).sum();
+                if pop != nnz {
+                    bail!("sign bitmap popcount {pop} != nnz {nnz}");
+                }
+                if let Some(last) = presence.last() {
+                    let tail = elems as usize % 32;
+                    if tail != 0 && (last >> tail) != 0 {
+                        bail!("sign bitmap sets bits past element {elems}");
+                    }
+                }
+                TensorUpdate::Sign(SignTensor { elems, nnz, presence, signs, magnitude })
+            }
+            other => bail!("unknown tensor update tag {other}"),
+        });
+    }
+    Ok(us)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_updates() -> Vec<ModelUpdate> {
+        let pruned = [1.0f32, 0.0, -2.0, 0.0, 0.5, 0.0, 0.0];
+        let delta = vec![
+            TensorUpdate::Sparse(SparseTensor::encode(&pruned)),
+            TensorUpdate::Sign(SignTensor::encode(&pruned)),
+        ];
+        vec![
+            ModelUpdate::Dense(vec![
+                Tensor::new(vec![2, 3], vec![1.0, -2.0, 3.5, 0.0, 4.25, -0.5]),
+                Tensor::new(vec![4], vec![9.0, 8.0, 7.0, 6.0]),
+            ]),
+            ModelUpdate::Delta(delta.clone()),
+            ModelUpdate::Chain(vec![delta.clone(), delta]),
+        ]
+    }
+
+    #[test]
+    fn update_roundtrips_all_variants() {
+        for u in sample_updates() {
+            let bytes = encode_update(&u);
+            let back = decode_update(&bytes).unwrap();
+            assert_eq!(back, u);
+        }
+    }
+
+    #[test]
+    fn seal_open_roundtrip_and_kinds() {
+        for (kind, payload) in [
+            (FrameKind::Update, vec![1u8, 2, 3]),
+            (FrameKind::Report, vec![]),
+            (FrameKind::Nack, vec![0xFF; 100]),
+        ] {
+            let f = Frame::seal(kind, &payload);
+            let (k, p) = f.open().unwrap();
+            assert_eq!(k, kind);
+            assert_eq!(p, &payload[..]);
+            assert_eq!(f.wire_bytes(), payload.len() as u64 + FRAME_HEADER_BYTES);
+        }
+    }
+
+    #[test]
+    fn every_single_byte_flip_is_detected() {
+        let payload = encode_update(&sample_updates()[1]);
+        let clean = Frame::seal(FrameKind::Update, &payload);
+        assert!(clean.open().is_ok());
+        for pos in 0..clean.as_bytes().len() {
+            let mut f = clean.clone();
+            f.bytes_mut()[pos] ^= 0xA5;
+            assert!(f.open().is_err(), "flip at byte {pos} went undetected");
+        }
+    }
+
+    #[test]
+    fn every_truncation_is_detected() {
+        let f = Frame::seal(FrameKind::Report, &[9u8; 37]);
+        for keep in 0..f.as_bytes().len() {
+            let mut t = f.clone();
+            t.bytes_mut().truncate(keep);
+            assert!(t.open().is_err(), "truncation to {keep} bytes went undetected");
+        }
+    }
+
+    #[test]
+    fn wrong_schema_version_rejected() {
+        let mut f = Frame::seal(FrameKind::Update, &[1, 2, 3]);
+        let v = (SCHEMA_VERSION + 1).to_le_bytes();
+        f.bytes_mut()[4] = v[0];
+        f.bytes_mut()[5] = v[1];
+        let err = f.open().unwrap_err().to_string();
+        assert!(err.contains("schema"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn forged_lengths_never_panic_or_balloon() {
+        // nnz far beyond the bytes present: decode must error cleanly
+        let mut w = ByteWriter::new();
+        w.put_u8(1); // delta
+        w.put_u32(1); // one tensor
+        w.put_u8(0); // sparse
+        w.put_u32(1000);
+        w.put_u32(u32::MAX); // forged nnz
+        assert!(decode_update(&w.into_bytes()).is_err());
+        // sparse index out of bounds
+        let mut w = ByteWriter::new();
+        w.put_u8(1);
+        w.put_u32(1);
+        w.put_u8(0);
+        w.put_u32(4); // elems
+        w.put_u32(1); // nnz
+        w.put_u32(4); // index == elems: out of bounds
+        w.put_f32(1.0);
+        assert!(decode_update(&w.into_bytes()).is_err());
+        // sign popcount disagreeing with nnz
+        let mut w = ByteWriter::new();
+        w.put_u8(1);
+        w.put_u32(1);
+        w.put_u8(1);
+        w.put_u32(32); // elems
+        w.put_u32(2); // nnz
+        w.put_f32(1.0);
+        w.put_u32(0b111); // popcount 3 != 2
+        w.put_u32(0);
+        assert!(decode_update(&w.into_bytes()).is_err());
+        // trailing garbage
+        let mut bytes = encode_update(&sample_updates()[0]);
+        bytes.push(0);
+        assert!(decode_update(&bytes).is_err());
+    }
+
+    #[test]
+    fn f32_bits_survive_the_roundtrip() {
+        let u = ModelUpdate::Dense(vec![Tensor::new(
+            vec![3],
+            vec![f32::NAN, f32::INFINITY, -0.0],
+        )]);
+        let back = decode_update(&encode_update(&u)).unwrap();
+        let ModelUpdate::Dense(ts) = back else { panic!() };
+        let bits: Vec<u32> = ts[0].data().iter().map(|v| v.to_bits()).collect();
+        assert_eq!(
+            bits,
+            vec![f32::NAN.to_bits(), f32::INFINITY.to_bits(), (-0.0f32).to_bits()]
+        );
+    }
+}

@@ -41,8 +41,17 @@
 //! [`wire`], and asserted against the measured per-round ledger by
 //! `cargo bench --bench runtime_hotpath` and `--bench comm_bytes`.
 
+//! PR 6 adds the byte layer under the structs: every update/report is
+//! sealed into an integrity-checked [`envelope::Frame`] (24-byte header:
+//! magic, schema version, kind, length, FNV-1a-64 checksum) at the
+//! channel boundary, so corruption injected by [`crate::faults`] — or a
+//! real flaky link, once a socket transport lands — is detected and
+//! rejected, never folded.
+
 pub mod codec;
+pub mod envelope;
 pub mod wire;
 
 pub use codec::DeltaCodec;
+pub use envelope::{Frame, FrameKind};
 pub use wire::{ModelUpdate, SignTensor, SparseTensor, TensorUpdate};

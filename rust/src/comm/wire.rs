@@ -327,6 +327,17 @@ impl TensorUpdate {
         }
     }
 
+    /// Whether every shipped value is finite. A NaN/Inf survivor in an
+    /// otherwise well-formed update would fold straight into the global
+    /// model; the leader rejects such reports at the fold boundary
+    /// (`RoundReport::rejected_reports`).
+    pub fn all_finite(&self) -> bool {
+        match self {
+            TensorUpdate::Sparse(t) => t.values.iter().all(|v| v.is_finite()),
+            TensorUpdate::Sign(t) => t.magnitude.is_finite(),
+        }
+    }
+
     /// Decode to a dense buffer (tests / residual bookkeeping).
     pub fn decode_dense(&self) -> Vec<f32> {
         let mut out = vec![0.0f32; self.elems()];
@@ -394,6 +405,18 @@ impl ModelUpdate {
     /// True for the dense-snapshot variant.
     pub fn is_dense(&self) -> bool {
         matches!(self, ModelUpdate::Dense(_))
+    }
+
+    /// Whether every value in the message is finite (see
+    /// [`TensorUpdate::all_finite`]).
+    pub fn all_finite(&self) -> bool {
+        match self {
+            ModelUpdate::Dense(ts) => ts.iter().all(|t| t.data().iter().all(|v| v.is_finite())),
+            ModelUpdate::Delta(us) => us.iter().all(TensorUpdate::all_finite),
+            ModelUpdate::Chain(links) => links
+                .iter()
+                .all(|us| us.iter().all(TensorUpdate::all_finite)),
+        }
     }
 
     /// True for the chained-downlink variant.
@@ -580,6 +603,24 @@ mod tests {
         ]);
         assert!(bad.apply(&mut params).is_err());
         assert_eq!(params, before, "failed chain must not half-apply");
+    }
+
+    #[test]
+    fn all_finite_flags_nan_and_inf_payloads() {
+        let ok = ModelUpdate::Delta(vec![TensorUpdate::Sparse(SparseTensor::encode(&[1.0, 0.0]))]);
+        assert!(ok.all_finite());
+        let nan_sparse = ModelUpdate::Delta(vec![TensorUpdate::Sparse(SparseTensor {
+            elems: 2,
+            indices: vec![0],
+            values: vec![f32::NAN],
+        })]);
+        assert!(!nan_sparse.all_finite());
+        let mut sign = SignTensor::encode(&[1.0, -1.0]);
+        sign.magnitude = f32::INFINITY;
+        assert!(!ModelUpdate::Delta(vec![TensorUpdate::Sign(sign.clone())]).all_finite());
+        assert!(!ModelUpdate::Chain(vec![vec![TensorUpdate::Sign(sign)]]).all_finite());
+        let dense = ModelUpdate::Dense(vec![Tensor::new(vec![2], vec![0.0, f32::NAN])]);
+        assert!(!dense.all_finite());
     }
 
     #[test]

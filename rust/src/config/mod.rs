@@ -443,6 +443,19 @@ pub struct FedConfig {
     /// `4·P` snapshot. 0 (the default) keeps dense resyncs — today's
     /// behavior. Only meaningful for the compressed comm modes.
     pub max_chain: usize,
+    /// deterministic fault injection (`federated.faults` / `--faults`,
+    /// a [`crate::faults::FaultPlan`] spec string such as
+    /// `"corrupt=0.05,crash=0.02,seed=7"`). `None` — and a plan whose
+    /// every knob is zero — leaves the channel untouched, bit-for-bit.
+    pub faults: Option<crate::faults::FaultPlan>,
+    /// durable run store directory (`federated.run_store` /
+    /// `--run-store`): after each round the leader persists a
+    /// content-addressed snapshot (manifest + param/momenta/residual
+    /// blobs) it can resume from after a crash.
+    pub run_store: Option<String>,
+    /// resume from `run_store` instead of starting fresh
+    /// (`federated.resume` / `--resume`); requires `run_store`
+    pub resume: bool,
     pub train: TrainConfig,
 }
 
@@ -471,6 +484,9 @@ impl Default for FedConfig {
             // configured; inert at the default quorum = 1.0
             pipeline_depth: 2,
             max_chain: 0,
+            faults: None,
+            run_store: None,
+            resume: false,
             train: TrainConfig::default(),
         }
     }
@@ -508,6 +524,14 @@ impl FedConfig {
             staleness_decay: t.f64_or("federated.staleness_decay", d.staleness_decay),
             pipeline_depth: t.usize_or("federated.pipeline_depth", d.pipeline_depth),
             max_chain: t.usize_or("federated.max_chain", d.max_chain),
+            faults: t
+                .get("federated.faults")
+                .and_then(Value::as_str)
+                .map(str::parse)
+                .transpose()
+                .context("federated.faults")?,
+            run_store: t.get("federated.run_store").and_then(Value::as_str).map(String::from),
+            resume: t.bool_or("federated.resume", d.resume),
             train: TrainConfig::from_table(t)?,
         };
         cfg.validate()?;
@@ -531,6 +555,9 @@ impl FedConfig {
         }
         if self.pipeline_depth == 0 {
             bail!("pipeline_depth must be at least 1");
+        }
+        if self.resume && self.run_store.is_none() {
+            bail!("federated.resume needs federated.run_store (nowhere to resume from)");
         }
         Ok(())
     }
@@ -704,6 +731,33 @@ mod tests {
         }
         assert_eq!(CommPruner::parse("top-k").unwrap(), CommPruner::TopK);
         assert_eq!(CommPruner::TopK.as_str(), "topk");
+    }
+
+    #[test]
+    fn faults_and_run_store_parsing() {
+        // unset: no chaos, no store, fresh start
+        let c = FedConfig::from_table(&Table::default()).unwrap();
+        assert!(c.faults.is_none());
+        assert!(c.run_store.is_none());
+        assert!(!c.resume);
+        let t = Table::parse(
+            "[federated]\nfaults = \"corrupt=0.05,kill=2,seed=7\"\n\
+             run_store = \"/tmp/run\"\nresume = true",
+        )
+        .unwrap();
+        let c = FedConfig::from_table(&t).unwrap();
+        let plan = c.faults.unwrap();
+        assert_eq!(plan.corrupt, 0.05);
+        assert_eq!(plan.kill_round, Some(2));
+        assert_eq!(plan.seed, 7);
+        assert_eq!(c.run_store.as_deref(), Some("/tmp/run"));
+        assert!(c.resume);
+        // bad specs error at parse, not at round 40
+        let t = Table::parse("[federated]\nfaults = \"corrupt=1.5\"").unwrap();
+        assert!(FedConfig::from_table(&t).is_err());
+        // resume without a store is a config error
+        let t = Table::parse("[federated]\nresume = true").unwrap();
+        assert!(FedConfig::from_table(&t).is_err());
     }
 
     #[test]

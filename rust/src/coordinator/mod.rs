@@ -18,17 +18,15 @@
 //! Two leader schedules, selected by `federated.pipeline` / `--pipeline`
 //! and **bit-identical in every result** (params, `eval_acc`, byte
 //! ledgers — pinned in `tests/federated.rs`); they differ only in wall
-//! time:
+//! time. Both drain the same frame-at-arrival collection loop (the fold
+//! is keyed on (version, worker-id), never arrival, so any given fold
+//! membership produces the same bits regardless of decode timing); the
+//! flag moves exactly one thing:
 //!
-//! * **sequential** (default, the oracle): barrier on every worker →
-//!   decode + FedAvg → full test-set eval sweep → downlink encode, all
-//!   serialized on the leader thread. Round wall time = slowest worker
-//!   + all leader work.
-//! * **pipelined**: each `WorkerReport` is decoded the moment it arrives
-//!   off the mpsc channel ([`fedavg::StreamingAggregator`] — a straggler
-//!   delays only its own decode), the final fold still runs in
-//!   (version, worker-id) order into f64 accumulators (arrival order
-//!   cannot change a bit), and the eval sweep moves to a dedicated
+//! * **sequential** (default, the oracle): the full test-set eval sweep
+//!   runs inline on the leader thread after each fold. Round wall time =
+//!   slowest worker + all leader work.
+//! * **pipelined**: the eval sweep moves to a dedicated
 //!   [`evaluator::Evaluator`] thread whose results join the reports
 //!   asynchronously — the leader encodes the downlink and dispatches
 //!   round r+1 while accuracy computes.
@@ -53,9 +51,7 @@
 //!   the round it arrives in with staleness weight `examples · λ^k`
 //!   (`federated.staleness_decay`, k = versions behind), and
 //!   `federated.pipeline_depth` bounds how many rounds may stay in
-//!   flight — and with it the worst-case staleness k. Fold order is
-//!   keyed on (version, worker-id), never arrival, so any given fold
-//!   membership produces the same bits.
+//!   flight — and with it the worst-case staleness k.
 //! * **Chained downlinks.** A worker whose replica is `k ≤
 //!   federated.max_chain` versions behind (a dropout that came back) is
 //!   resynced with the *chain* of the retained per-round deltas —
@@ -67,6 +63,45 @@
 //!   eval sweep (sequential) or the eval handoff (pipelined); the
 //!   caller's RNG draw is taken on the leader thread in round order, so
 //!   the encoded bits are identical to the serial schedule's.
+//!
+//! ## Integrity, faults, and durability
+//!
+//! Every wire exchange travels inside an integrity-checked envelope
+//! ([`crate::comm::envelope`]): a [`Frame`] carries magic, schema
+//! version, payload kind, length, and an FNV-1a checksum, and a frame
+//! that fails any of those checks is *rejected, never applied* — on
+//! either end of the link. Detection escalates deterministically:
+//!
+//! * **Corrupt uplink** (bad envelope, undecodable report, a report
+//!   whose sealed `worker_id` contradicts its transport address, or a
+//!   duplicate delivery): the frame is quarantined and counted in
+//!   [`RoundReport::corrupt_frames`]; if that leaves the worker
+//!   unreported, it is recorded in [`RoundReport::dropped`] and its
+//!   replica marked unknown → dense resync at next dispatch.
+//! * **Non-finite content** in a well-formed report (NaN/Inf delta
+//!   values or metrics): rejected at the fold boundary and counted in
+//!   [`RoundReport::rejected_reports`] — the wire was intact, so the
+//!   worker's replica version tag stands.
+//! * **Corrupt downlink**: the worker poisons its replica and replies
+//!   [`FrameKind::Nack`]; the leader answers with ONE dense retry
+//!   ([`RoundReport::downlink_retries`]), and a second rejection
+//!   quarantines the worker until next round's dense resync.
+//! * **Silence** (crash injection, device failure): the round's reply
+//!   channel disconnecting is the signal; the worker is dropped for the
+//!   round and dense-resynced when it comes back.
+//!
+//! All of it is drivable by a seeded, exactly-reproducible
+//! [`crate::faults::FaultPlan`] (`federated.faults` / `--faults`), whose
+//! decisions are pure functions of (site, round, worker, attempt) on
+//! dedicated RNG streams — an all-zero plan is byte-identical to no
+//! plan. For durability, `federated.run_store` persists a
+//! content-addressed [`runstore::RunState`] (global params, version
+//! ring, codec residual, every worker's [`worker::WorkerSnapshot`], and
+//! all three leader RNG states) after every round; `--resume` restores
+//! it and continues bit-for-bit against the uninterrupted run (pinned at
+//! `quorum = 1.0` — in-flight stragglers at a kill point have no channel
+//! to survive in). `FaultPlan::kill_round` halts the coordinator right
+//! after a persist, which is how the kill/resume pin is exercised.
 //!
 //! The O(P) host loops both schedules share (FedAvg folds, codec
 //! delta/residual passes, eq. 3 comm pruning, σ) chunk across a scoped
@@ -89,18 +124,21 @@
 //! leader folds them into the global params in O(nnz)
 //! ([`weighted_sparse_fedavg`]) and downlinks the global delta through
 //! the same codec — dense snapshots remain only for the first round and
-//! for resyncing workers that missed a downlink. Rounds degrade
-//! gracefully: a worker that goes silent (dropout injection, dispatch
-//! failure, failed step) is recorded in [`RoundReport::dropped`] and
+//! for resyncing workers that missed a downlink. The envelope's flat
+//! per-frame overhead is ledgered separately
+//! ([`RoundReport::envelope_bytes`]). Rounds degrade gracefully: a
+//! worker that goes silent is recorded in [`RoundReport::dropped`] and
 //! FedAvg re-weights over the reports that did arrive; a fleet-wide
 //! outage round reports NaN means (skipped by the summary averages), not
 //! fake zeros. Formulas: `docs/TRANSFER_MODEL.md`.
 
 pub mod evaluator;
 pub mod fedavg;
+pub mod runstore;
 pub mod versions;
 pub mod worker;
 
+use std::path::Path;
 use std::sync::mpsc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -109,10 +147,12 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::accel::energy::{EnergyTable, LinkEnergy};
 use crate::accel::{simulate_training, AccelConfig, Workload};
-use crate::comm::{DeltaCodec, ModelUpdate};
+use crate::comm::envelope::{encode_update, FRAME_HEADER_BYTES};
+use crate::comm::{DeltaCodec, Frame, FrameKind, ModelUpdate};
 use crate::config::{CommMode, FedConfig};
 use crate::data::synthetic::{generate, SynthConfig};
 use crate::data::Dataset;
+use crate::faults::FaultPlan;
 use crate::manifest::{ArtifactSpec, Manifest, ModelSpec};
 use crate::params::ParamStore;
 use crate::runtime::{Runtime, TransferStats};
@@ -122,7 +162,7 @@ use crate::util::rng::Rng;
 pub use evaluator::{EvalOutcome, Evaluator};
 pub use fedavg::{fedavg, weighted_fedavg, weighted_sparse_fedavg, StreamingAggregator};
 pub use versions::{ModelVersion, VersionRing};
-pub use worker::{CommSetup, WorkerHandle, WorkerReport, WorkerTask};
+pub use worker::{CommSetup, WorkerHandle, WorkerReport, WorkerSnapshot, WorkerTask};
 
 /// Outcome of one federated round.
 #[derive(Clone, Debug)]
@@ -145,19 +185,42 @@ pub struct RoundReport {
     pub upload_bytes: u64,
     /// measured wire bytes broadcast down (leader->worker) this round
     pub download_bytes: u64,
+    /// envelope overhead this round: the flat 24-byte frame header times
+    /// every frame the leader sent or received (tasks, retries, reports,
+    /// nacks — including duplicates and quarantined frames; a late frame
+    /// lands in the round that read it). Ledgered separately from the
+    /// payload bytes so the integrity tax is visible
+    pub envelope_bytes: u64,
     /// workers the leader dispatched a task to this round
     pub dispatched: usize,
     /// worker ids that missed a round (offline at dispatch, dispatch
-    /// failure, or went silent mid-round); FedAvg re-weighted over the
-    /// rest. Under a quorum schedule a silent worker is recorded in the
-    /// round the leader *learns* of it (its stashed straggler channel
-    /// disconnecting), which may be after the round it failed in.
-    /// Offline workers resync next dispatch — chained if within the
-    /// `max_chain` window, dense beyond it
+    /// failure, went silent mid-round, or quarantined by an integrity
+    /// check); FedAvg re-weighted over the rest. Under a quorum schedule
+    /// a silent worker is recorded in the round the leader *learns* of
+    /// it (its stashed straggler channel disconnecting), which may be
+    /// after the round it failed in. Offline workers resync next
+    /// dispatch — chained if within the `max_chain` window, dense
+    /// beyond it
     pub dropped: Vec<usize>,
+    /// frames this round that failed an integrity check and were
+    /// quarantined instead of applied: bad envelope (checksum, magic,
+    /// schema, length), undecodable payload, wrong-direction kind, a
+    /// sealed `worker_id` contradicting the transport address, or a
+    /// duplicate delivery
+    pub corrupt_frames: usize,
+    /// well-formed reports rejected at the fold boundary for non-finite
+    /// content (NaN/Inf delta values or metrics). Counted separately
+    /// from `corrupt_frames` because the wire was intact: the sender's
+    /// replica is still version-consistent, so it keeps its version tag
+    /// and is NOT dense-resynced — only its gradient was discarded
+    pub rejected_reports: usize,
+    /// dense retry downlinks sent in answer to worker Nacks this round.
+    /// Bounded at one per worker per round: a second rejection
+    /// quarantines the worker until next round's dense resync
+    pub downlink_retries: usize,
     /// downlink payloads that were dense snapshots (first round, resync
-    /// beyond the chain window, or `comm = dense`); the rest were pruned
-    /// deltas or chains
+    /// beyond the chain window, nack retries, or `comm = dense`); the
+    /// rest were pruned deltas or chains
     pub dense_downlinks: usize,
     /// downlink payloads that were chained deltas — workers
     /// `2 ..= max_chain` versions behind replaying the rounds they
@@ -214,9 +277,10 @@ impl RoundReport {
         self.device_transfer.total_bytes() + self.leader_eval_transfer.total_bytes()
     }
 
-    /// Every network byte this round moved, both directions.
+    /// Every network byte this round moved, both directions (payloads +
+    /// envelope overhead).
     pub fn network_bytes(&self) -> u64 {
-        self.upload_bytes + self.download_bytes
+        self.upload_bytes + self.download_bytes + self.envelope_bytes
     }
 
     /// Simulated Joules of this round's *measured* device-bus traffic at
@@ -254,7 +318,9 @@ impl RoundReport {
 /// Full run summary.
 #[derive(Clone, Debug)]
 pub struct FedSummary {
-    /// per-round reports in order (pipelined eval results all joined)
+    /// per-round reports in order (pipelined eval results all joined).
+    /// A resumed run reports only the rounds it ran (`round` indices
+    /// continue from the persisted state)
     pub rounds: Vec<RoundReport>,
     /// last round's eval accuracy
     pub final_acc: f64,
@@ -299,7 +365,7 @@ impl FedSummary {
 }
 
 /// Per-report scalars captured at decode time, slotted by worker id so
-/// both schedules aggregate them in the same order regardless of when
+/// every schedule aggregates them in the same order regardless of when
 /// each report arrived (the update itself moves into the
 /// [`StreamingAggregator`]).
 #[derive(Clone, Copy)]
@@ -325,6 +391,204 @@ impl ReportMeta {
     }
 }
 
+/// One round's mutable collection state: which dispatched workers have
+/// resolved (reported, been rejected, or been quarantined), the
+/// streaming fold, and the integrity/byte counters the round report
+/// publishes. Lives on the stack of one `run()` round; [`handle_frame`]
+/// advances it one frame at a time.
+struct Gather {
+    /// per-worker: this round's exchange is settled (accepted report,
+    /// rejected report, or quarantine) — indexed by worker id
+    resolved: Vec<bool>,
+    /// per-worker: a dense retry was already sent this round (the
+    /// escalation ladder allows exactly one)
+    retried: Vec<bool>,
+    /// accepted (folded) fresh reports
+    received: usize,
+    corrupt_frames: usize,
+    rejected_reports: usize,
+    downlink_retries: usize,
+    envelope_bytes: u64,
+    download_bytes: u64,
+    dense_downlinks: usize,
+    agg: StreamingAggregator,
+    meta: Vec<Option<ReportMeta>>,
+    dropped: Vec<usize>,
+}
+
+impl Gather {
+    fn new(mode: CommMode, n_workers: usize) -> Self {
+        Self {
+            resolved: vec![false; n_workers],
+            retried: vec![false; n_workers],
+            received: 0,
+            corrupt_frames: 0,
+            rejected_reports: 0,
+            downlink_retries: 0,
+            envelope_bytes: 0,
+            download_bytes: 0,
+            dense_downlinks: 0,
+            agg: StreamingAggregator::new(mode, n_workers),
+            meta: vec![None; n_workers],
+            dropped: Vec::new(),
+        }
+    }
+
+    /// Write a worker off for the round: dropped from the fold, replica
+    /// unknown → dense resync at next dispatch. No-op if its exchange
+    /// already settled (then the offending frame was a duplicate and the
+    /// settled outcome stands).
+    fn quarantine(&mut self, wid: usize, worker_version: &mut [Option<u64>]) {
+        if !self.resolved[wid] {
+            self.resolved[wid] = true;
+            self.dropped.push(wid);
+            worker_version[wid] = None;
+        }
+    }
+}
+
+/// Process one uplink frame for the current round. Returns the reply
+/// channel of a dense retry when the frame was a first Nack — the caller
+/// drains it to resolution before touching the main channel again (the
+/// `retried` latch makes the nested calls terminal, so recursion depth
+/// is bounded at one).
+#[allow(clippy::too_many_arguments)]
+fn handle_frame(
+    g: &mut Gather,
+    worker_version: &mut [Option<u64>],
+    workers: &[WorkerHandle],
+    plan: &FaultPlan,
+    head_params: &[Tensor],
+    round: usize,
+    base_version: u64,
+    local_steps: usize,
+    wid: usize,
+    frame: Frame,
+) -> Result<Option<mpsc::Receiver<(usize, Frame)>>> {
+    g.envelope_bytes += FRAME_HEADER_BYTES;
+    let (kind, payload) = match frame.open() {
+        Ok(x) => x,
+        Err(e) => {
+            log::warn!("round {round}: corrupt frame from worker {wid} quarantined: {e:#}");
+            g.corrupt_frames += 1;
+            g.quarantine(wid, worker_version);
+            return Ok(None);
+        }
+    };
+    match kind {
+        // an Update frame is downlink-only; on the uplink it is a
+        // protocol violation, not a report
+        FrameKind::Update => {
+            log::warn!("round {round}: worker {wid} sent an Update frame on the uplink");
+            g.corrupt_frames += 1;
+            g.quarantine(wid, worker_version);
+            Ok(None)
+        }
+        FrameKind::Nack => {
+            if g.resolved[wid] {
+                // a nack after the exchange settled — spurious
+                g.corrupt_frames += 1;
+                return Ok(None);
+            }
+            if g.retried[wid] {
+                // the dense retry was rejected too: give up for the
+                // round, dense-resync at next dispatch
+                log::warn!(
+                    "round {round}: worker {wid} rejected the dense retry — quarantined"
+                );
+                g.resolved[wid] = true;
+                g.dropped.push(wid);
+                worker_version[wid] = None;
+                return Ok(None);
+            }
+            // escalation step 1: answer the nack with a dense snapshot
+            // of the reference head on a fresh reply channel. The
+            // retry's slowdown/sleep are fixed at healthy — straggler
+            // injection is timing-only and already drawn for the round.
+            g.retried[wid] = true;
+            g.downlink_retries += 1;
+            let payload = ModelUpdate::Dense(head_params.to_vec());
+            g.download_bytes += payload.wire_bytes();
+            g.dense_downlinks += 1;
+            g.envelope_bytes += FRAME_HEADER_BYTES;
+            let mut retry = Frame::seal(FrameKind::Update, &encode_update(&payload));
+            if let Some(f) = plan.downlink(round, wid, 1) {
+                plan.mutate(&mut retry, f, round, wid, 1);
+            }
+            let (rtx, rrx) = mpsc::channel();
+            match workers[wid].submit(WorkerTask {
+                round,
+                version: base_version,
+                frame: retry,
+                local_steps,
+                slowdown: 1.0,
+                sleep: false,
+                reply: rtx,
+            }) {
+                Ok(()) => Ok(Some(rrx)),
+                Err(e) => {
+                    log::warn!("round {round}: retry dispatch to worker {wid} failed: {e:#}");
+                    g.resolved[wid] = true;
+                    g.dropped.push(wid);
+                    worker_version[wid] = None;
+                    Ok(None)
+                }
+            }
+        }
+        FrameKind::Report => {
+            let r = match WorkerReport::decode(payload) {
+                Ok(r) => r,
+                Err(e) => {
+                    log::warn!(
+                        "round {round}: undecodable report from worker {wid} quarantined: {e:#}"
+                    );
+                    g.corrupt_frames += 1;
+                    g.quarantine(wid, worker_version);
+                    return Ok(None);
+                }
+            };
+            if g.resolved[wid] {
+                // duplicate delivery of a settled exchange
+                g.corrupt_frames += 1;
+                return Ok(None);
+            }
+            if r.worker_id != wid {
+                // the sealed report contradicts its transport address —
+                // something forged or misrouted the frame
+                log::warn!(
+                    "round {round}: report sealed for worker {} arrived from worker {wid}",
+                    r.worker_id
+                );
+                g.corrupt_frames += 1;
+                g.quarantine(wid, worker_version);
+                return Ok(None);
+            }
+            if !(r.update.all_finite() && r.mean_loss.is_finite() && r.mean_sparsity.is_finite())
+            {
+                // intact wire, poisoned content: folding a NaN would
+                // destroy the global model. The worker's replica is
+                // still version-consistent, so no resync — only its
+                // contribution is discarded.
+                log::warn!(
+                    "round {round}: rejecting non-finite report from worker {wid} \
+                     (loss {}, sparsity {})",
+                    r.mean_loss,
+                    r.mean_sparsity
+                );
+                g.rejected_reports += 1;
+                g.resolved[wid] = true;
+                return Ok(None);
+            }
+            let m = ReportMeta::of(&r);
+            g.agg.accept(r.base_version, wid, r.examples as f64, r.update)?;
+            g.meta[wid] = Some(m);
+            g.received += 1;
+            g.resolved[wid] = true;
+            Ok(None)
+        }
+    }
+}
+
 /// One quorum round still awaiting straggler reports: the round's reply
 /// channel plus the dispatched workers that had not reported when the
 /// round closed at its quorum. Resolved by later rounds — arrivals fold
@@ -332,7 +596,7 @@ impl ReportMeta {
 /// outstanding means those workers failed mid-round.
 struct InFlightRound {
     round: usize,
-    rx: mpsc::Receiver<WorkerReport>,
+    rx: mpsc::Receiver<(usize, Frame)>,
     /// dispatched workers that had not reported at the quorum cutoff
     /// (each report carries its own `base_version` tag for the
     /// staleness weight)
@@ -358,7 +622,7 @@ pub struct Leader {
     /// per-worker replica version: `Some(v)` = the worker holds
     /// reference version v (stale is fine — chain or resync at next
     /// dispatch); `None` = unknown/diverged (never dispatched, went
-    /// silent mid-round, or dispatch failed) → dense resync
+    /// silent mid-round, quarantined, or dispatch failed) → dense resync
     worker_version: Vec<Option<u64>>,
     /// downlink error-feedback codec (compressed modes): since every
     /// aggregation rebases `global` on the reference head, the codec
@@ -380,11 +644,21 @@ pub struct Leader {
     /// fwd artifact — compiled again by the evaluator thread in
     /// pipelined mode (PJRT handles are not `Send`)
     fwd_art: ArtifactSpec,
+    /// first round `run()` will execute: 0 on a fresh run, persisted
+    /// round + 1 after a resume
+    start_round: usize,
+    /// leader RNG streams restored from the run store (consumed by the
+    /// next `run()`); `None` = fresh streams from the seed
+    rng_states: Option<runstore::RngStates>,
 }
 
 impl Leader {
     /// Build leader + workers. Shards the synthetic dataset across
-    /// workers (IID or label-skewed per config).
+    /// workers (IID or label-skewed per config). With `cfg.resume`, the
+    /// persisted state in `cfg.run_store` is restored before the first
+    /// round — global params, version ring, codec residual, every
+    /// worker's snapshot, and the leader RNG streams — after verifying
+    /// the store was written by a run with an identical core config.
     pub fn new(rt: &Runtime, manifest: &Manifest, cfg: FedConfig) -> Result<Self> {
         if cfg.workers == 0 {
             bail!("need at least one worker");
@@ -436,6 +710,7 @@ impl Leader {
                         rate: cfg.comm_rate,
                         pruner: cfg.comm_pruner,
                     },
+                    cfg.faults.clone(),
                 )
             })
             .collect::<Result<Vec<_>>>()?;
@@ -445,7 +720,7 @@ impl Leader {
         // behind (the chain needs the newest max_chain deltas, each
         // carried by its version entry, plus the head itself)
         let ring_cap = cfg.max_chain.max(1) + 1;
-        Ok(Self {
+        let mut this = Self {
             ring: VersionRing::new(ring_cap, global.params.clone()),
             worker_version: vec![None; cfg.workers],
             down_codec: Some(DeltaCodec::with_pruner(
@@ -460,7 +735,19 @@ impl Leader {
             eval,
             model,
             fwd_art,
-        })
+            start_round: 0,
+            rng_states: None,
+        };
+        if this.cfg.resume {
+            let dir = this
+                .cfg
+                .run_store
+                .clone()
+                .ok_or_else(|| anyhow!("--resume requires federated.run_store"))?;
+            this.restore(Path::new(&dir))
+                .with_context(|| format!("resuming from run store {dir}"))?;
+        }
+        Ok(this)
     }
 
     /// The aggregated global parameters (current as of the last round).
@@ -473,12 +760,80 @@ impl Leader {
         &self.ring
     }
 
+    /// Install a persisted [`runstore::RunState`]: refuses a store whose
+    /// config hash or worker count disagrees with this leader (resuming
+    /// under different hyperparameters would silently produce a
+    /// trajectory neither run describes).
+    fn restore(&mut self, dir: &Path) -> Result<()> {
+        let state = runstore::load(dir)?;
+        let expect = runstore::config_hash(&self.cfg);
+        if state.config_hash != expect {
+            bail!(
+                "run store was written under a different config \
+                 (hash {:016x}, this run {expect:016x})",
+                state.config_hash
+            );
+        }
+        if state.workers.len() != self.workers.len() {
+            bail!(
+                "run store has {} workers, this run {}",
+                state.workers.len(),
+                self.workers.len()
+            );
+        }
+        self.global.params = state.global;
+        self.ring = VersionRing::from_versions(self.cfg.max_chain.max(1) + 1, state.versions)?;
+        if let Some(c) = self.down_codec.as_mut() {
+            c.set_residual(state.down_residual);
+        }
+        for (i, p) in state.workers.iter().enumerate() {
+            self.worker_version[i] = p.version;
+            self.workers[i].restore(p.snap.clone())?;
+        }
+        self.rng_states = Some(state.rng);
+        self.start_round = state.round + 1;
+        log::info!(
+            "resumed from {dir:?}: round {} done, continuing at {}",
+            state.round,
+            self.start_round
+        );
+        Ok(())
+    }
+
+    /// Persist the leader's cross-round state after `round` completed:
+    /// every worker's snapshot (blocks behind any still-running task),
+    /// the global params, version ring, downlink residual, and the
+    /// passed-in RNG states.
+    fn persist(&self, dir: &Path, round: usize, rng: runstore::RngStates) -> Result<()> {
+        let mut workers = Vec::with_capacity(self.workers.len());
+        for w in &self.workers {
+            workers.push(runstore::WorkerPersist {
+                version: self.worker_version[w.id],
+                snap: w.capture()?,
+            });
+        }
+        let state = runstore::RunState {
+            config_hash: runstore::config_hash(&self.cfg),
+            round,
+            rng,
+            global: self.global.params.clone(),
+            versions: self.ring.iter().cloned().collect(),
+            down_residual: self
+                .down_codec
+                .as_ref()
+                .map(|c| c.residual().to_vec())
+                .unwrap_or_default(),
+            workers,
+        };
+        runstore::save(dir, &state)
+    }
+
     /// Choose worker `id`'s downlink for the version at the ring head:
     /// dense snapshots in dense mode; otherwise the per-round delta for
     /// a replica one version behind, a chain of the retained deltas for
     /// one `2 ..= max_chain` behind, and a dense resync beyond that (or
     /// when the replica state is unknown — never dispatched, silent
-    /// failure, or the needed history was evicted from the ring).
+    /// failure, quarantine, or the needed history was evicted).
     fn downlink_payload(&self, id: usize) -> ModelUpdate {
         if self.cfg.comm == CommMode::Dense {
             return ModelUpdate::Dense(self.global.params.clone());
@@ -521,10 +876,26 @@ impl Leader {
     /// Run all rounds under the configured schedule (see the module docs
     /// for the sequential-vs-pipelined timeline; results are identical).
     pub fn run(&mut self) -> Result<FedSummary> {
-        let mut rounds: Vec<RoundReport> = Vec::with_capacity(self.cfg.rounds);
-        let mut straggler_rng = Rng::new(self.cfg.train.seed ^ 0x57AA);
-        let mut dropout_rng = Rng::new(self.cfg.train.seed ^ 0xD50F);
-        let mut downlink_rng = Rng::new(self.cfg.train.seed ^ 0xD0C0DE);
+        let start_round = self.start_round;
+        let run_store = self.cfg.run_store.clone();
+        let plan = self.cfg.faults.clone().unwrap_or_default();
+        let mut rounds: Vec<RoundReport> =
+            Vec::with_capacity(self.cfg.rounds.saturating_sub(start_round));
+        // resumed streams continue exactly where the persisted run's
+        // left off; fresh runs derive them from the seed as always
+        let (mut straggler_rng, mut dropout_rng, mut downlink_rng) =
+            match self.rng_states.take() {
+                Some(s) => (
+                    Rng::from_state(s.straggler),
+                    Rng::from_state(s.dropout),
+                    Rng::from_state(s.downlink),
+                ),
+                None => (
+                    Rng::new(self.cfg.train.seed ^ 0x57AA),
+                    Rng::new(self.cfg.train.seed ^ 0xD50F),
+                    Rng::new(self.cfg.train.seed ^ 0xD0C0DE),
+                ),
+            };
         let energy = EnergyTable::smic14();
         let link = LinkEnergy::wifi();
         // measured-survivor compute energy: the accel simulator's
@@ -549,38 +920,26 @@ impl Leader {
         };
         let mut evals_pending = 0usize;
         // downlink encode in flight on its own thread: spawned after
-        // each fold (overlapping the eval), joined right before the next
-        // dispatch needs its output
+        // each fold (overlapping the eval), joined at the round's end
+        // when the ring advances
         let mut enc_pending: Option<JoinHandle<EncodeResult>> = None;
         // quorum rounds whose stragglers are still in flight
         let mut inbox: Vec<InFlightRound> = Vec::new();
 
-        for round in 0..self.cfg.rounds {
+        for round in start_round..self.cfg.rounds {
             let t0 = Instant::now();
             let mut leader_busy = Duration::ZERO;
-
-            // advance the reference ring to the version this round
-            // trains against: join the previous round's off-thread
-            // encode (compressed modes) or snapshot the global (dense).
-            // Round 0 trains the genesis version.
-            let t = Instant::now();
-            if let Some(handle) = enc_pending.take() {
-                self.join_encode(handle)?;
-            } else if self.cfg.comm == CommMode::Dense && round > 0 {
-                self.ring.push(self.global.params.clone(), None);
-            }
             let base_version = self.ring.head_version();
-            leader_busy += t.elapsed();
 
             // broadcast: dense snapshots in dense mode; otherwise the
             // per-round delta / retained-delta chain / dense resync that
-            // each worker's replica version calls for
-            let (tx, rx) = mpsc::channel::<WorkerReport>();
+            // each worker's replica version calls for — each payload
+            // sealed in an integrity-checked frame (and possibly damaged
+            // right after, if the fault plan says this downlink fails)
+            let (tx, rx) = mpsc::channel::<(usize, Frame)>();
+            let mut g = Gather::new(self.cfg.comm, self.workers.len());
             let mut dispatched_ids = Vec::with_capacity(self.workers.len());
-            let mut dropped = Vec::new();
-            let mut download_bytes = 0u64;
             let mut downlink_survivors = 0u64;
-            let mut dense_downlinks = 0usize;
             let mut chained_downlinks = 0usize;
             for w in &self.workers {
                 if dropout_rng.uniform() < self.cfg.dropout_prob {
@@ -588,7 +947,7 @@ impl Leader {
                     // nothing. Its replica is intact, only *stale* — the
                     // next dispatch chains it forward if it is within the
                     // max_chain window, dense resync beyond it
-                    dropped.push(w.id);
+                    g.dropped.push(w.id);
                     continue;
                 }
                 let slowdown = if straggler_rng.uniform() < self.cfg.straggler_prob {
@@ -603,10 +962,14 @@ impl Leader {
                     payload.is_dense(),
                     payload.is_chain(),
                 );
+                let mut frame = Frame::seal(FrameKind::Update, &encode_update(&payload));
+                if let Some(f) = plan.downlink(round, w.id, 0) {
+                    plan.mutate(&mut frame, f, round, w.id, 0);
+                }
                 match w.submit(WorkerTask {
                     round,
                     version: base_version,
-                    payload,
+                    frame,
                     local_steps: self.cfg.local_steps,
                     slowdown,
                     sleep: self.cfg.straggler_sleep,
@@ -617,10 +980,11 @@ impl Leader {
                         // dispatch failure ships nothing
                         dispatched_ids.push(w.id);
                         self.worker_version[w.id] = Some(base_version);
-                        download_bytes += wire;
+                        g.download_bytes += wire;
+                        g.envelope_bytes += FRAME_HEADER_BYTES;
                         downlink_survivors += survivors;
                         if is_dense {
-                            dense_downlinks += 1;
+                            g.dense_downlinks += 1;
                         }
                         if is_chain {
                             chained_downlinks += 1;
@@ -628,201 +992,309 @@ impl Leader {
                     }
                     Err(e) => {
                         log::warn!("round {round}: worker {} unreachable: {e:#}", w.id);
-                        dropped.push(w.id);
+                        g.dropped.push(w.id);
                         self.worker_version[w.id] = None;
                     }
                 }
             }
             drop(tx);
 
-            // gather: a worker that fails its round drops its reply
-            // sender without sending, so the channel closes once every
-            // dispatched task is resolved. At quorum = 1.0 that close is
-            // the only exit (the full barrier — today's oracle); at
-            // quorum < 1.0 the leader stops once ⌈quorum·dispatched⌉
-            // reports are in and stashes the round's channel for the
-            // stragglers. Both schedules decode through the same
-            // StreamingAggregator; they differ only in *when* each
-            // report's decode runs.
+            // gather: one frame at a time through handle_frame — accept,
+            // reject, quarantine, or answer a nack with a dense retry
+            // whose fresh channel is drained to resolution inline. A
+            // worker that fails its round drops its reply sender without
+            // sending, so the channel closes once every dispatched task
+            // is resolved. At quorum = 1.0 that close is the only exit
+            // (the full barrier — today's oracle — and it drains
+            // duplicate frames deterministically); at quorum < 1.0 the
+            // leader stops once ⌈quorum·dispatched⌉ reports are in and
+            // stashes the round's channel for the stragglers.
             let quorum_needed = if self.cfg.quorum >= 1.0 {
                 dispatched_ids.len()
             } else {
                 ((self.cfg.quorum * dispatched_ids.len() as f64).ceil() as usize)
                     .clamp(usize::from(!dispatched_ids.is_empty()), dispatched_ids.len())
             };
-            let mut agg = StreamingAggregator::new(self.cfg.comm, self.workers.len());
-            let mut meta: Vec<Option<ReportMeta>> = vec![None; self.workers.len()];
-            let mut received = 0usize;
+            let full_barrier = self.cfg.quorum >= 1.0;
             let mut channel_closed = false;
-            if self.cfg.pipeline {
-                // streaming: decode each report the moment it arrives —
-                // a straggler delays only its own decode work
-                while received < quorum_needed {
-                    match rx.recv() {
-                        Ok(r) => {
-                            let t = Instant::now();
-                            let id = r.worker_id;
-                            let m = ReportMeta::of(&r);
-                            agg.accept(r.base_version, id, r.examples as f64, r.update)?;
-                            meta[id] = Some(m);
-                            received += 1;
-                            leader_busy += t.elapsed();
-                        }
-                        Err(_) => {
-                            channel_closed = true;
-                            break;
-                        }
-                    }
-                }
-            } else {
-                // sequential oracle: barrier (full or quorum) first,
-                // then decode in worker-id order — the reference
-                // schedule
-                let mut reports: Vec<WorkerReport> = Vec::with_capacity(quorum_needed);
-                while received < quorum_needed {
-                    match rx.recv() {
-                        Ok(r) => {
-                            reports.push(r);
-                            received += 1;
-                        }
-                        Err(_) => {
-                            channel_closed = true;
-                            break;
-                        }
-                    }
-                }
-                let t = Instant::now();
-                reports.sort_by_key(|r| r.worker_id);
-                for r in reports {
-                    let id = r.worker_id;
-                    let m = ReportMeta::of(&r);
-                    agg.accept(r.base_version, id, r.examples as f64, r.update)?;
-                    meta[id] = Some(m);
-                }
-                leader_busy += t.elapsed();
-            }
-            if channel_closed {
-                for &id in &dispatched_ids {
-                    if meta[id].is_none() {
-                        // went silent mid-round. Usually a failed
-                        // step/sync (downlink already applied), but the
-                        // failure may also have been in the apply itself
-                        // — we cannot tell from here, so treat its
-                        // replica as suspect and dense-resync it
-                        dropped.push(id);
-                        self.worker_version[id] = None;
-                    }
-                }
-            } else if received < dispatched_ids.len() {
-                // quorum cutoff: the rest are stragglers, not failures —
-                // keep the round's channel and fold their reports into a
-                // later round with a staleness discount
-                let outstanding: Vec<usize> = dispatched_ids
-                    .iter()
-                    .copied()
-                    .filter(|&id| meta[id].is_none())
-                    .collect();
-                inbox.push(InFlightRound {
-                    round,
-                    rx,
-                    outstanding,
-                });
-            }
-
-            // late straggler reports: fold what has arrived, blocking on
-            // rounds older than the pipeline depth — which bounds the
-            // worst-case staleness at k ≤ pipeline_depth — each weighted
-            // examples · λ^k. Which round a late report lands in depends
-            // on when it arrives (this is genuinely asynchronous); the
-            // fold for any given membership is deterministic because the
-            // aggregator keys on (version, worker-id), never arrival.
-            // Only per-report decode time lands in leader_busy — a
-            // blocking wait on an overdue straggler is time spent
-            // waiting on workers, which leader_secs must not claim.
+            let local_steps = self.cfg.local_steps;
             let mut late_busy = Duration::ZERO;
             let mut late_meta: Vec<(u64, usize, ReportMeta)> = Vec::new();
             let mut late_reports = 0usize;
             let mut stale_weight_mass = 0.0f64;
-            let mut inbox_err: Option<anyhow::Error> = None;
             {
-                let depth = self.cfg.pipeline_depth;
-                let lambda = self.cfg.staleness_decay;
+                let workers = &self.workers;
                 let worker_version = &mut self.worker_version;
-                let agg = &mut agg;
-                let dropped = &mut dropped;
-                inbox.retain_mut(|inflight| {
-                    if inflight.round == round {
-                        // stashed moments ago by THIS round's quorum
-                        // cutoff: its stragglers fold no earlier than
-                        // next round (k ≥ 1 by construction)
-                        return true;
+                let head_params: &[Tensor] = &self.ring.head().params;
+                while full_barrier || g.received < quorum_needed {
+                    match rx.recv() {
+                        Ok((wid, frame)) => {
+                            if wid >= workers.len() {
+                                g.corrupt_frames += 1;
+                                continue;
+                            }
+                            let t = Instant::now();
+                            let retry_rx = handle_frame(
+                                &mut g,
+                                worker_version,
+                                workers,
+                                &plan,
+                                head_params,
+                                round,
+                                base_version,
+                                local_steps,
+                                wid,
+                                frame,
+                            )?;
+                            leader_busy += t.elapsed();
+                            if let Some(rrx) = retry_rx {
+                                // drain the retry channel to resolution
+                                // before touching the main channel again
+                                // (the retried latch makes these calls
+                                // terminal — no nested retries)
+                                while let Ok((rwid, rframe)) = rrx.recv() {
+                                    let t = Instant::now();
+                                    handle_frame(
+                                        &mut g,
+                                        worker_version,
+                                        workers,
+                                        &plan,
+                                        head_params,
+                                        round,
+                                        base_version,
+                                        local_steps,
+                                        rwid,
+                                        rframe,
+                                    )?;
+                                    leader_busy += t.elapsed();
+                                }
+                                if !g.resolved[wid] {
+                                    // silent during the retry (crash
+                                    // injection / device failure)
+                                    g.resolved[wid] = true;
+                                    g.dropped.push(wid);
+                                    worker_version[wid] = None;
+                                }
+                            }
+                        }
+                        Err(_) => {
+                            channel_closed = true;
+                            break;
+                        }
                     }
-                    let overdue = inflight.round + depth <= round;
-                    loop {
-                        let msg = if overdue {
-                            inflight
-                                .rx
-                                .recv()
-                                .map_err(|_| mpsc::TryRecvError::Disconnected)
-                        } else {
-                            inflight.rx.try_recv()
-                        };
-                        match msg {
-                            Ok(r) => {
-                                let t = Instant::now();
-                                let id = r.worker_id;
-                                inflight.outstanding.retain(|&o| o != id);
-                                let k = base_version.saturating_sub(r.base_version).max(1);
-                                let weight = lambda.powi(k as i32);
-                                if weight > 0.0 {
-                                    let m = ReportMeta::of(&r);
-                                    if let Err(e) = agg.accept(
-                                        r.base_version,
-                                        id,
-                                        r.examples as f64 * weight,
-                                        r.update,
-                                    ) {
-                                        inbox_err = Some(e);
+                }
+                if channel_closed {
+                    for &id in &dispatched_ids {
+                        if !g.resolved[id] {
+                            // went silent mid-round: failed step/sync,
+                            // crash injection, or a rejected downlink it
+                            // never even nacked — the replica state is
+                            // unknowable from here, dense-resync it
+                            g.resolved[id] = true;
+                            g.dropped.push(id);
+                            worker_version[id] = None;
+                        }
+                    }
+                } else if g.received < dispatched_ids.len() {
+                    // quorum cutoff: the unresolved rest are stragglers,
+                    // not failures — keep the round's channel and fold
+                    // their reports into a later round with a staleness
+                    // discount
+                    let outstanding: Vec<usize> = dispatched_ids
+                        .iter()
+                        .copied()
+                        .filter(|&id| !g.resolved[id])
+                        .collect();
+                    if !outstanding.is_empty() {
+                        inbox.push(InFlightRound {
+                            round,
+                            rx,
+                            outstanding,
+                        });
+                    }
+                }
+
+                // late straggler frames: same integrity gauntlet as fresh
+                // ones (envelope, decode, address, finiteness), then fold
+                // what passed — blocking on rounds older than the
+                // pipeline depth — each weighted examples · λ^k. Which
+                // round a late report lands in depends on when it arrives
+                // (this is genuinely asynchronous); the fold for any
+                // given membership is deterministic because the
+                // aggregator keys on (version, worker-id), never arrival.
+                // Only per-frame work lands in leader_busy — a blocking
+                // wait on an overdue straggler is time spent waiting on
+                // workers, which leader_secs must not claim. A late Nack
+                // gets no retry: the round it rejected is long folded, so
+                // the worker is quarantined until next dispatch.
+                let mut inbox_err: Option<anyhow::Error> = None;
+                {
+                    let depth = self.cfg.pipeline_depth;
+                    let lambda = self.cfg.staleness_decay;
+                    let g = &mut g;
+                    inbox.retain_mut(|inflight| {
+                        if inflight.round == round {
+                            // stashed moments ago by THIS round's quorum
+                            // cutoff: its stragglers fold no earlier than
+                            // next round (k ≥ 1 by construction)
+                            return true;
+                        }
+                        let overdue = inflight.round + depth <= round;
+                        loop {
+                            let msg = if overdue {
+                                inflight
+                                    .rx
+                                    .recv()
+                                    .map_err(|_| mpsc::TryRecvError::Disconnected)
+                            } else {
+                                inflight.rx.try_recv()
+                            };
+                            match msg {
+                                Ok((wid, frame)) => {
+                                    let t = Instant::now();
+                                    g.envelope_bytes += FRAME_HEADER_BYTES;
+                                    if !inflight.outstanding.contains(&wid) {
+                                        // duplicate or misrouted frame on
+                                        // a settled slot
+                                        g.corrupt_frames += 1;
+                                        late_busy += t.elapsed();
+                                        continue;
+                                    }
+                                    let mut bad = false;
+                                    match frame.open() {
+                                        Err(e) => {
+                                            log::warn!(
+                                                "round {round}: corrupt late frame from \
+                                                 worker {wid} quarantined: {e:#}"
+                                            );
+                                            g.corrupt_frames += 1;
+                                            bad = true;
+                                        }
+                                        Ok((FrameKind::Update, _)) => {
+                                            g.corrupt_frames += 1;
+                                            bad = true;
+                                        }
+                                        Ok((FrameKind::Nack, _)) => {
+                                            log::warn!(
+                                                "round {round}: late nack from worker \
+                                                 {wid} — quarantined until next dispatch"
+                                            );
+                                            bad = true;
+                                        }
+                                        Ok((FrameKind::Report, payload)) => {
+                                            match WorkerReport::decode(payload) {
+                                                Err(e) => {
+                                                    log::warn!(
+                                                        "round {round}: undecodable late \
+                                                         report from worker {wid}: {e:#}"
+                                                    );
+                                                    g.corrupt_frames += 1;
+                                                    bad = true;
+                                                }
+                                                Ok(r) if r.worker_id != wid => {
+                                                    g.corrupt_frames += 1;
+                                                    bad = true;
+                                                }
+                                                Ok(r)
+                                                    if !(r.update.all_finite()
+                                                        && r.mean_loss.is_finite()
+                                                        && r.mean_sparsity.is_finite()) =>
+                                                {
+                                                    // intact wire — the
+                                                    // version tag stands,
+                                                    // no resync
+                                                    g.rejected_reports += 1;
+                                                    inflight
+                                                        .outstanding
+                                                        .retain(|&o| o != wid);
+                                                }
+                                                Ok(r) => {
+                                                    inflight
+                                                        .outstanding
+                                                        .retain(|&o| o != wid);
+                                                    let k = base_version
+                                                        .saturating_sub(r.base_version)
+                                                        .max(1);
+                                                    let weight = lambda.powi(k as i32);
+                                                    if weight > 0.0 {
+                                                        let m = ReportMeta::of(&r);
+                                                        if let Err(e) = g.agg.accept(
+                                                            r.base_version,
+                                                            wid,
+                                                            r.examples as f64 * weight,
+                                                            r.update,
+                                                        ) {
+                                                            inbox_err = Some(e);
+                                                            return false;
+                                                        }
+                                                        late_meta.push((
+                                                            r.base_version,
+                                                            wid,
+                                                            m,
+                                                        ));
+                                                        late_reports += 1;
+                                                        stale_weight_mass += weight;
+                                                    } else {
+                                                        // λ = 0: resolves
+                                                        // the straggler,
+                                                        // too stale to
+                                                        // fold
+                                                        log::debug!(
+                                                            "round {round}: discarding \
+                                                             fully-stale report from \
+                                                             worker {wid} (k = {k})"
+                                                        );
+                                                    }
+                                                }
+                                            }
+                                        }
+                                    }
+                                    if bad {
+                                        inflight.outstanding.retain(|&o| o != wid);
+                                        g.dropped.push(wid);
+                                        worker_version[wid] = None;
+                                    }
+                                    late_busy += t.elapsed();
+                                    if inflight.outstanding.is_empty() {
                                         return false;
                                     }
-                                    late_meta.push((r.base_version, id, m));
-                                    late_reports += 1;
-                                    stale_weight_mass += weight;
-                                    late_busy += t.elapsed();
-                                } else {
-                                    // λ = 0: the report resolves the
-                                    // straggler but is too stale to fold
-                                    log::debug!(
-                                        "round {round}: discarding fully-stale report \
-                                         from worker {id} (k = {k})"
-                                    );
                                 }
-                                if inflight.outstanding.is_empty() {
+                                Err(mpsc::TryRecvError::Empty) => return true,
+                                Err(mpsc::TryRecvError::Disconnected) => {
+                                    // the round's tasks all resolved but
+                                    // these workers never reported:
+                                    // failed mid-round
+                                    for &id in &inflight.outstanding {
+                                        g.dropped.push(id);
+                                        worker_version[id] = None;
+                                    }
                                     return false;
                                 }
                             }
-                            Err(mpsc::TryRecvError::Empty) => return true,
-                            Err(mpsc::TryRecvError::Disconnected) => {
-                                // the round's tasks all resolved but these
-                                // workers never reported: failed mid-round
-                                for &id in &inflight.outstanding {
-                                    dropped.push(id);
-                                    worker_version[id] = None;
-                                }
-                                return false;
-                            }
                         }
-                    }
-                });
-            }
-            if let Some(e) = inbox_err {
-                return Err(e);
+                    });
+                }
+                if let Some(e) = inbox_err {
+                    return Err(e);
+                }
             }
             // fold key order, so the ledger sums below are deterministic
             // for a given membership
             late_meta.sort_by_key(|&(v, id, _)| (v, id));
             leader_busy += late_busy;
 
+            let Gather {
+                mut agg,
+                meta,
+                mut dropped,
+                corrupt_frames,
+                rejected_reports,
+                downlink_retries,
+                envelope_bytes,
+                download_bytes,
+                dense_downlinks,
+                ..
+            } = g;
             dropped.sort_unstable();
             dropped.dedup();
             let n_fresh = meta.iter().flatten().count();
@@ -937,8 +1409,12 @@ impl Leader {
                 mean_sparsity,
                 upload_bytes,
                 download_bytes,
+                envelope_bytes,
                 dispatched: dispatched_ids.len(),
                 dropped,
+                corrupt_frames,
+                rejected_reports,
+                downlink_retries,
                 dense_downlinks,
                 chained_downlinks,
                 late_reports,
@@ -963,8 +1439,8 @@ impl Leader {
                         report.eval_acc = o.acc;
                         report.leader_eval_transfer = o.transfer;
                     } else {
-                        rounds[o.round].eval_acc = o.acc;
-                        rounds[o.round].leader_eval_transfer = o.transfer;
+                        rounds[o.round - start_round].eval_acc = o.acc;
+                        rounds[o.round - start_round].leader_eval_transfer = o.transfer;
                     }
                 }
             }
@@ -998,12 +1474,39 @@ impl Leader {
                 report.leader_secs,
             );
             rounds.push(report);
-        }
-        // the final round's encode has no recipient, but joining it
-        // keeps the codec residual and ring head consistent (and
-        // surfaces any encode error instead of swallowing it)
-        if let Some(handle) = enc_pending.take() {
-            self.join_encode(handle)?;
+
+            // advance the reference ring to the version the next round
+            // trains against: join the off-thread encode (compressed
+            // modes — it overlapped the eval above) or snapshot the
+            // global (dense). Runs on the final round too, so persisted
+            // state always has the codec residual home and the ring head
+            // at the folded version.
+            if let Some(handle) = enc_pending.take() {
+                self.join_encode(handle)?;
+            } else if self.cfg.comm == CommMode::Dense {
+                self.ring.push(self.global.params.clone(), None);
+            }
+
+            // durability: persist a resumable snapshot at the round
+            // boundary (worker capture blocks behind any straggler task
+            // still running — allowed; the resume pin is scoped to
+            // quorum = 1.0, where the round left nothing in flight)
+            if let Some(dir) = &run_store {
+                let rng = runstore::RngStates {
+                    dropout: dropout_rng.state(),
+                    straggler: straggler_rng.state(),
+                    downlink: downlink_rng.state(),
+                };
+                self.persist(Path::new(dir), round, rng)
+                    .with_context(|| format!("persisting run state to {dir}"))?;
+            }
+
+            // coordinator kill injection: halt right after the persist —
+            // exactly the crash the resume path must recover from
+            if plan.kill_round == Some(round) {
+                log::warn!("round {round}: coordinator kill point — halting run");
+                break;
+            }
         }
         // quorum teardown: stragglers still in flight at run end have no
         // later round to fold into — their reports are dropped on the
@@ -1016,8 +1519,8 @@ impl Leader {
         // all eval_acc values and leader-eval ledgers are final below
         if let Some(ev) = &evaluator {
             for o in ev.wait_for(evals_pending)? {
-                rounds[o.round].eval_acc = o.acc;
-                rounds[o.round].leader_eval_transfer = o.transfer;
+                rounds[o.round - start_round].eval_acc = o.acc;
+                rounds[o.round - start_round].leader_eval_transfer = o.transfer;
             }
         }
         drop(evaluator); // joins the eval thread
@@ -1057,8 +1560,12 @@ mod tests {
             mean_sparsity: sparsity,
             upload_bytes: 0,
             download_bytes: 0,
+            envelope_bytes: 0,
             dispatched: 0,
             dropped: Vec::new(),
+            corrupt_frames: 0,
+            rejected_reports: 0,
+            downlink_retries: 0,
             dense_downlinks: 0,
             chained_downlinks: 0,
             late_reports: 0,
@@ -1117,5 +1624,101 @@ mod tests {
         assert!(jd > js, "sparsity gating must discount compute: {jd} vs {js}");
         // outage round: no steps ran, no compute spent
         assert_eq!(stub_round(1, f64::NAN, f64::NAN).compute_joules(&cfg, &wl), 0.0);
+    }
+
+    // --- handle_frame: the per-frame integrity state machine. The Nack
+    // arm needs a live worker to dispatch a retry to, so these tests
+    // exercise the other arms (the retry/escalation path is covered
+    // end-to-end in tests/federated.rs, artifact-gated).
+
+    fn stub_report(worker_id: usize) -> WorkerReport {
+        WorkerReport {
+            worker_id,
+            round: 0,
+            base_version: 0,
+            update: ModelUpdate::Dense(vec![]),
+            examples: 8,
+            mean_loss: 0.5,
+            mean_sparsity: 0.25,
+            sim_secs: 0.0,
+            transfer: TransferStats::default(),
+        }
+    }
+
+    fn feed(
+        g: &mut Gather,
+        wv: &mut [Option<u64>],
+        wid: usize,
+        frame: Frame,
+    ) -> Result<Option<mpsc::Receiver<(usize, Frame)>>> {
+        let plan = FaultPlan::default();
+        handle_frame(g, wv, &[], &plan, &[], 0, 0, 1, wid, frame)
+    }
+
+    #[test]
+    fn corrupt_frame_is_quarantined_not_applied() {
+        let mut g = Gather::new(CommMode::Dense, 2);
+        let mut wv = vec![Some(0u64); 2];
+        let mut frame = Frame::seal(FrameKind::Report, &stub_report(0).encode());
+        let n = frame.as_bytes().len();
+        frame.bytes_mut()[n - 1] ^= 0xA5; // payload damage
+        feed(&mut g, &mut wv, 0, frame).unwrap();
+        assert_eq!(g.corrupt_frames, 1);
+        assert_eq!(g.received, 0);
+        assert_eq!(g.dropped, vec![0]);
+        assert_eq!(wv[0], None, "quarantine forgets the replica version");
+        assert_eq!(wv[1], Some(0), "other workers untouched");
+        assert_eq!(g.envelope_bytes, FRAME_HEADER_BYTES);
+    }
+
+    #[test]
+    fn wrong_kind_and_misaddressed_frames_are_quarantined() {
+        let mut g = Gather::new(CommMode::Dense, 3);
+        let mut wv = vec![Some(0u64); 3];
+        // an Update frame has no business on the uplink
+        let up = Frame::seal(FrameKind::Update, &encode_update(&ModelUpdate::Dense(vec![])));
+        feed(&mut g, &mut wv, 1, up).unwrap();
+        assert_eq!((g.corrupt_frames, wv[1]), (1, None));
+        // a sealed report contradicting its transport address
+        let forged = Frame::seal(FrameKind::Report, &stub_report(0).encode());
+        feed(&mut g, &mut wv, 2, forged).unwrap();
+        assert_eq!((g.corrupt_frames, wv[2]), (2, None));
+        assert_eq!(g.received, 0);
+        let mut dropped = g.dropped.clone();
+        dropped.sort_unstable();
+        assert_eq!(dropped, vec![1, 2]);
+    }
+
+    #[test]
+    fn non_finite_reports_reject_without_resync() {
+        let mut g = Gather::new(CommMode::Dense, 1);
+        let mut wv = vec![Some(3u64)];
+        let mut r = stub_report(0);
+        r.mean_loss = f64::NAN;
+        feed(&mut g, &mut wv, 0, Frame::seal(FrameKind::Report, &r.encode())).unwrap();
+        assert_eq!(g.rejected_reports, 1);
+        assert_eq!(g.corrupt_frames, 0, "the wire was intact");
+        assert_eq!(g.received, 0, "a rejected report never folds");
+        assert!(g.dropped.is_empty(), "rejection is not a drop");
+        assert!(g.resolved[0], "the exchange is settled");
+        assert_eq!(wv[0], Some(3), "replica version tag stands — no dense resync");
+    }
+
+    #[test]
+    fn duplicate_delivery_counts_but_keeps_first_outcome() {
+        let mut g = Gather::new(CommMode::Dense, 1);
+        let mut wv = vec![Some(0u64)];
+        let frame = Frame::seal(FrameKind::Report, &stub_report(0).encode());
+        feed(&mut g, &mut wv, 0, frame.clone()).unwrap();
+        assert_eq!((g.received, g.corrupt_frames), (1, 0));
+        feed(&mut g, &mut wv, 0, frame).unwrap();
+        assert_eq!(g.received, 1, "the duplicate must not fold twice");
+        assert_eq!(g.corrupt_frames, 1);
+        assert!(g.dropped.is_empty(), "first outcome stands");
+        assert_eq!(wv[0], Some(0));
+        // a spurious nack after settlement is counted the same way
+        feed(&mut g, &mut wv, 0, Frame::seal(FrameKind::Nack, &[])).unwrap();
+        assert_eq!(g.corrupt_frames, 2);
+        assert_eq!(g.envelope_bytes, 3 * FRAME_HEADER_BYTES);
     }
 }

@@ -1,0 +1,568 @@
+//! Durable, content-addressed run store for crash/resume.
+//!
+//! After every federated round the leader persists its whole cross-round
+//! state here; `--resume` restores it and the run continues **bit for
+//! bit** against the uninterrupted trajectory (pinned in
+//! `tests/federated.rs` at `quorum = 1.0`). Layout:
+//!
+//! ```text
+//! <dir>/manifest.json        # atomic (temp + rename), human-readable
+//! <dir>/objects/<hash>.bin   # content-addressed blobs, FNV-1a-64 named
+//! ```
+//!
+//! The manifest holds structure (round index, config hash, RNG states,
+//! tensor shapes) and references every bulk payload by the FNV-1a-64 hex
+//! hash of its bytes. Content addressing buys two things: **dedup**
+//! (version-ring snapshots share most tensors round over round, and an
+//! unchanged tensor is the same object file) and **self-verification** —
+//! [`load`] rehashes every object it reads and refuses to resume from a
+//! store whose contents do not match their names, so a torn or corrupted
+//! store fails loudly instead of resuming a trajectory nobody ran. The
+//! manifest itself is written atomically, so a coordinator killed
+//! mid-persist leaves the previous round's manifest intact (at worst
+//! plus some orphaned-but-valid objects).
+//!
+//! Two invariants callers rely on:
+//!
+//! * [`RunState::config_hash`] digests every *trajectory-affecting*
+//!   config field (see [`config_hash`]); [`crate::coordinator::Leader`]
+//!   refuses to resume under a different hash. Timing-only knobs
+//!   (`pipeline`, `straggler_sleep`) and the fault/durability plumbing
+//!   itself (`faults`, `run_store`, `resume`) are deliberately excluded
+//!   — resuming a killed run *with* `--resume` added, or replaying it
+//!   under the pipelined schedule, is exactly the point.
+//! * All 64-bit values that can exceed 2^53 (the config hash, the four
+//!   xoshiro256++ state words per RNG stream, object names) are stored
+//!   as hex **strings**: the manifest parser carries numbers as f64,
+//!   which would silently round them.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::comm::envelope::{decode_update, encode_update, fnv1a64};
+use crate::comm::ModelUpdate;
+use crate::config::FedConfig;
+use crate::coordinator::worker::WorkerSnapshot;
+use crate::coordinator::ModelVersion;
+use crate::tensor::Tensor;
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// The three leader RNG streams, captured mid-sequence so a resumed run
+/// draws exactly what the uninterrupted run would have drawn next.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RngStates {
+    pub dropout: [u64; 4],
+    pub straggler: [u64; 4],
+    pub downlink: [u64; 4],
+}
+
+/// One worker's persisted state: the leader's version tag for its
+/// replica plus the worker-side snapshot.
+#[derive(Clone, Debug)]
+pub struct WorkerPersist {
+    /// `None` = replica unknown (quarantined / never synced) — the
+    /// resumed leader dense-resyncs it, same as the uninterrupted run
+    pub version: Option<u64>,
+    pub snap: WorkerSnapshot,
+}
+
+/// Everything `Leader::run` needs to continue a run mid-flight.
+#[derive(Clone, Debug)]
+pub struct RunState {
+    /// digest of the trajectory-affecting config (see [`config_hash`])
+    pub config_hash: u64,
+    /// last completed round; the resumed run starts at `round + 1`
+    pub round: usize,
+    pub rng: RngStates,
+    /// the post-fold global params
+    pub global: Vec<Tensor>,
+    /// the version ring, oldest first (contiguous ids ending at the
+    /// reference head the next round dispatches against)
+    pub versions: Vec<ModelVersion>,
+    /// the downlink codec's error-feedback residual (empty = fresh /
+    /// dense mode)
+    pub down_residual: Vec<Vec<f32>>,
+    /// per worker, in id order
+    pub workers: Vec<WorkerPersist>,
+}
+
+const SCHEMA: f64 = 1.0;
+
+/// FNV-1a-64 digest of every config field that shapes the training
+/// trajectory (bits of params, RNG draws, fold membership). Timing-only
+/// fields — `pipeline`, `straggler_sleep` — and the fault/durability
+/// plumbing (`faults`, `run_store`, `resume`) are excluded on purpose:
+/// they change wall clocks and failure injection, never the math a
+/// resumed run must reproduce.
+pub fn config_hash(cfg: &FedConfig) -> u64 {
+    let t = &cfg.train;
+    let canon = format!(
+        "workers={} rounds={} local_steps={} iid={} straggler_prob={} \
+         straggler_slowdown={} dropout_prob={} comm={:?} comm_rate={} comm_pruner={:?} \
+         quorum={} staleness_decay={} pipeline_depth={} max_chain={} model={} mode={:?} \
+         lr={} momentum={} seed={} train_examples={} test_examples={} difficulty={} \
+         residency={:?} eval_residency={:?}",
+        cfg.workers,
+        cfg.rounds,
+        cfg.local_steps,
+        cfg.iid,
+        cfg.straggler_prob,
+        cfg.straggler_slowdown,
+        cfg.dropout_prob,
+        cfg.comm,
+        cfg.comm_rate,
+        cfg.comm_pruner,
+        cfg.quorum,
+        cfg.staleness_decay,
+        cfg.pipeline_depth,
+        cfg.max_chain,
+        t.model,
+        t.mode,
+        t.lr,
+        t.momentum,
+        t.seed,
+        t.train_examples,
+        t.test_examples,
+        t.difficulty,
+        t.residency,
+        t.eval_residency,
+    );
+    fnv1a64(canon.as_bytes())
+}
+
+fn hex(v: u64) -> Json {
+    s(&format!("{v:016x}"))
+}
+
+fn from_hex(j: Option<&Json>, what: &str) -> Result<u64> {
+    let text = j
+        .and_then(Json::as_str)
+        .with_context(|| format!("{what}: expected a hex string"))?;
+    u64::from_str_radix(text, 16).with_context(|| format!("{what}: bad hex {text:?}"))
+}
+
+/// Store `bytes` under its own hash; an already-present object is
+/// trusted as-is (same hash, same content — that is the whole point).
+fn put_blob(dir: &Path, bytes: &[u8]) -> Result<String> {
+    let name = format!("{:016x}", fnv1a64(bytes));
+    let path = dir.join("objects").join(format!("{name}.bin"));
+    if !path.exists() {
+        crate::util::fs::atomic_write(&path, bytes)
+            .with_context(|| format!("writing object {name}"))?;
+    }
+    Ok(name)
+}
+
+/// Read an object and verify its content still hashes to its name — a
+/// flipped bit anywhere in the store refuses the resume instead of
+/// silently forking the trajectory.
+fn get_blob(dir: &Path, name: &str) -> Result<Vec<u8>> {
+    let path = dir.join("objects").join(format!("{name}.bin"));
+    let bytes =
+        std::fs::read(&path).with_context(|| format!("reading object {}", path.display()))?;
+    let actual = format!("{:016x}", fnv1a64(&bytes));
+    if actual != name {
+        bail!("object {name} is corrupt: content hashes to {actual}");
+    }
+    Ok(bytes)
+}
+
+fn f32s_to_bytes(data: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(data.len() * 4);
+    for v in data {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+fn f32s_from_bytes(bytes: &[u8]) -> Result<Vec<f32>> {
+    if bytes.len() % 4 != 0 {
+        bail!("blob length {} is not a multiple of 4", bytes.len());
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+fn tensor_ref(dir: &Path, t: &Tensor) -> Result<Json> {
+    Ok(obj(vec![
+        ("shape", arr(t.shape().iter().map(|&d| num(d as f64)))),
+        ("object", s(&put_blob(dir, &f32s_to_bytes(t.data()))?)),
+    ]))
+}
+
+fn tensor_load(dir: &Path, j: &Json) -> Result<Tensor> {
+    let shape: Vec<usize> = j
+        .get("shape")
+        .and_then(Json::as_arr)
+        .context("tensor: missing shape")?
+        .iter()
+        .map(|d| d.as_usize().context("tensor: bad dim"))
+        .collect::<Result<_>>()?;
+    let name = j
+        .get("object")
+        .and_then(Json::as_str)
+        .context("tensor: missing object")?;
+    let data = f32s_from_bytes(&get_blob(dir, name)?)?;
+    let elems: usize = shape.iter().product();
+    if data.len() != elems {
+        bail!(
+            "tensor object {name} holds {} values, shape {shape:?} wants {elems}",
+            data.len()
+        );
+    }
+    Ok(Tensor::new(shape, data))
+}
+
+fn tensors_ref(dir: &Path, ts: &[Tensor]) -> Result<Json> {
+    let mut out = Vec::with_capacity(ts.len());
+    for t in ts {
+        out.push(tensor_ref(dir, t)?);
+    }
+    Ok(Json::Arr(out))
+}
+
+fn tensors_load(dir: &Path, j: Option<&Json>, what: &str) -> Result<Vec<Tensor>> {
+    j.and_then(Json::as_arr)
+        .with_context(|| format!("{what}: missing tensor list"))?
+        .iter()
+        .map(|t| tensor_load(dir, t))
+        .collect()
+}
+
+fn residual_ref(dir: &Path, residual: &[Vec<f32>]) -> Result<Json> {
+    let mut out = Vec::with_capacity(residual.len());
+    for r in residual {
+        out.push(s(&put_blob(dir, &f32s_to_bytes(r))?));
+    }
+    Ok(Json::Arr(out))
+}
+
+fn residual_load(dir: &Path, j: Option<&Json>, what: &str) -> Result<Vec<Vec<f32>>> {
+    j.and_then(Json::as_arr)
+        .with_context(|| format!("{what}: missing residual list"))?
+        .iter()
+        .map(|e| {
+            let name = e.as_str().with_context(|| format!("{what}: bad residual ref"))?;
+            f32s_from_bytes(&get_blob(dir, name)?)
+        })
+        .collect()
+}
+
+fn rng_ref(state: &[u64; 4]) -> Json {
+    arr(state.iter().map(|&w| hex(w)))
+}
+
+fn rng_load(j: Option<&Json>, what: &str) -> Result<[u64; 4]> {
+    let words = j
+        .and_then(Json::as_arr)
+        .with_context(|| format!("{what}: missing rng state"))?;
+    if words.len() != 4 {
+        bail!("{what}: rng state has {} words, wanted 4", words.len());
+    }
+    let mut out = [0u64; 4];
+    for (o, w) in out.iter_mut().zip(words) {
+        *o = from_hex(Some(w), what)?;
+    }
+    Ok(out)
+}
+
+/// Persist `state` into `dir` (created if needed). The manifest write is
+/// atomic and last, so every state a reader can observe is complete.
+pub fn save(dir: &Path, state: &RunState) -> Result<()> {
+    std::fs::create_dir_all(dir.join("objects"))
+        .with_context(|| format!("creating run store {}", dir.display()))?;
+
+    let mut versions = Vec::with_capacity(state.versions.len());
+    for v in &state.versions {
+        let mut fields = vec![
+            ("version", num(v.version as f64)),
+            ("params", tensors_ref(dir, &v.params)?),
+        ];
+        if let Some(links) = &v.delta {
+            // reuse the wire encoding — same bytes, same validation
+            let blob = encode_update(&ModelUpdate::Delta(links.clone()));
+            fields.push(("delta", s(&put_blob(dir, &blob)?)));
+        }
+        versions.push(obj(fields));
+    }
+
+    let mut workers = Vec::with_capacity(state.workers.len());
+    for w in &state.workers {
+        workers.push(obj(vec![
+            (
+                "version",
+                match w.version {
+                    Some(v) => num(v as f64),
+                    None => Json::Null,
+                },
+            ),
+            ("batches_drawn", num(w.snap.batches_drawn as f64)),
+            ("step", num(w.snap.step as f64)),
+            ("reference", tensors_ref(dir, &w.snap.reference)?),
+            ("momenta", tensors_ref(dir, &w.snap.momenta)?),
+            ("residual", residual_ref(dir, &w.snap.residual)?),
+        ]));
+    }
+
+    let manifest = obj(vec![
+        ("schema", num(SCHEMA)),
+        ("config_hash", hex(state.config_hash)),
+        ("round", num(state.round as f64)),
+        (
+            "rng",
+            obj(vec![
+                ("dropout", rng_ref(&state.rng.dropout)),
+                ("straggler", rng_ref(&state.rng.straggler)),
+                ("downlink", rng_ref(&state.rng.downlink)),
+            ]),
+        ),
+        ("global", tensors_ref(dir, &state.global)?),
+        ("versions", Json::Arr(versions)),
+        ("down_residual", residual_ref(dir, &state.down_residual)?),
+        ("workers", Json::Arr(workers)),
+    ]);
+    crate::util::fs::atomic_write(&dir.join("manifest.json"), format!("{manifest}\n").as_bytes())
+        .context("writing run-store manifest")
+}
+
+/// Load and fully verify a persisted run state. Every object read is
+/// re-hashed against its name; any mismatch, truncation, or schema
+/// surprise refuses the resume.
+pub fn load(dir: &Path) -> Result<RunState> {
+    let text = std::fs::read_to_string(dir.join("manifest.json"))
+        .with_context(|| format!("reading run-store manifest in {}", dir.display()))?;
+    let m = Json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("run-store manifest is not valid JSON: {e:?}"))?;
+    let schema = m.get("schema").and_then(Json::as_f64).context("missing schema")?;
+    if schema != SCHEMA {
+        bail!("run-store schema {schema} unsupported (this build reads {SCHEMA})");
+    }
+    let config_hash = from_hex(m.get("config_hash"), "config_hash")?;
+    let round = m.get("round").and_then(Json::as_usize).context("missing round")?;
+    let rng_obj = m.get("rng").context("missing rng")?;
+    let rng = RngStates {
+        dropout: rng_load(rng_obj.get("dropout"), "rng.dropout")?,
+        straggler: rng_load(rng_obj.get("straggler"), "rng.straggler")?,
+        downlink: rng_load(rng_obj.get("downlink"), "rng.downlink")?,
+    };
+    let global = tensors_load(dir, m.get("global"), "global")?;
+
+    let mut versions = Vec::new();
+    for v in m.get("versions").and_then(Json::as_arr).context("missing versions")?.iter() {
+        let version = v
+            .get("version")
+            .and_then(Json::as_f64)
+            .context("version: missing id")? as u64;
+        let params = tensors_load(dir, v.get("params"), "version params")?;
+        let delta = match v.get("delta") {
+            None => None,
+            Some(d) => {
+                let name = d.as_str().context("version: bad delta ref")?;
+                match decode_update(&get_blob(dir, name)?)? {
+                    ModelUpdate::Delta(links) => Some(links),
+                    other => bail!(
+                        "version delta object {name} decoded to {other:?}, wanted a delta"
+                    ),
+                }
+            }
+        };
+        versions.push(ModelVersion {
+            version,
+            params,
+            delta,
+        });
+    }
+
+    let down_residual = residual_load(dir, m.get("down_residual"), "down_residual")?;
+
+    let mut workers = Vec::new();
+    for w in m.get("workers").and_then(Json::as_arr).context("missing workers")?.iter() {
+        let version = match w.get("version") {
+            Some(Json::Null) | None => None,
+            Some(v) => Some(v.as_f64().context("worker: bad version")? as u64),
+        };
+        workers.push(WorkerPersist {
+            version,
+            snap: WorkerSnapshot {
+                reference: tensors_load(dir, w.get("reference"), "worker reference")?,
+                residual: residual_load(dir, w.get("residual"), "worker residual")?,
+                batches_drawn: w
+                    .get("batches_drawn")
+                    .and_then(Json::as_f64)
+                    .context("worker: missing batches_drawn")? as u64,
+                momenta: tensors_load(dir, w.get("momenta"), "worker momenta")?,
+                step: w.get("step").and_then(Json::as_f64).context("worker: missing step")?
+                    as u64,
+            },
+        });
+    }
+
+    Ok(RunState {
+        config_hash,
+        round,
+        rng,
+        global,
+        versions,
+        down_residual,
+        workers,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::wire::{SparseTensor, TensorUpdate};
+
+    fn tdir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("effgrad_runstore_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn sample_state() -> RunState {
+        let t0 = Tensor::new(vec![2, 2], vec![1.0, -2.5, 0.0, 4.0]);
+        let t1 = Tensor::new(vec![3], vec![0.5, 0.25, -0.125]);
+        let pruned = [0.0f32, 1.5, 0.0];
+        RunState {
+            config_hash: 0xDEAD_BEEF_CAFE_F00D, // deliberately > 2^53
+            round: 7,
+            rng: RngStates {
+                dropout: [u64::MAX, 1, 2, 3],
+                straggler: [4, 5, 6, u64::MAX - 1],
+                downlink: [8, 9, 10, 11],
+            },
+            global: vec![t0.clone(), t1.clone()],
+            versions: vec![
+                ModelVersion {
+                    version: 6,
+                    params: vec![t0.clone(), t1.clone()],
+                    delta: None,
+                },
+                ModelVersion {
+                    version: 7,
+                    params: vec![t1.clone(), t0.clone()],
+                    delta: Some(vec![TensorUpdate::Sparse(SparseTensor::encode(&pruned))]),
+                },
+            ],
+            down_residual: vec![vec![0.125, -0.5], vec![]],
+            workers: vec![
+                WorkerPersist {
+                    version: Some(7),
+                    snap: WorkerSnapshot {
+                        reference: vec![t0.clone()],
+                        residual: vec![vec![1.0, 0.0, -1.0, 0.5]],
+                        batches_drawn: 42,
+                        momenta: vec![t1.clone()],
+                        step: 42,
+                    },
+                },
+                WorkerPersist {
+                    version: None, // quarantined at the kill point
+                    snap: WorkerSnapshot {
+                        reference: Vec::new(),
+                        residual: Vec::new(),
+                        batches_drawn: 0,
+                        momenta: vec![t0],
+                        step: 0,
+                    },
+                },
+            ],
+        }
+    }
+
+    fn assert_states_equal(a: &RunState, b: &RunState) {
+        assert_eq!(a.config_hash, b.config_hash);
+        assert_eq!(a.round, b.round);
+        assert_eq!(a.rng, b.rng);
+        assert_eq!(a.global, b.global);
+        assert_eq!(a.versions.len(), b.versions.len());
+        for (x, y) in a.versions.iter().zip(&b.versions) {
+            assert_eq!(x.version, y.version);
+            assert_eq!(x.params, y.params);
+            assert_eq!(x.delta, y.delta);
+        }
+        assert_eq!(a.down_residual, b.down_residual);
+        assert_eq!(a.workers.len(), b.workers.len());
+        for (x, y) in a.workers.iter().zip(&b.workers) {
+            assert_eq!(x.version, y.version);
+            assert_eq!(x.snap.reference, y.snap.reference);
+            assert_eq!(x.snap.residual, y.snap.residual);
+            assert_eq!(x.snap.batches_drawn, y.snap.batches_drawn);
+            assert_eq!(x.snap.momenta, y.snap.momenta);
+            assert_eq!(x.snap.step, y.snap.step);
+        }
+    }
+
+    #[test]
+    fn roundtrips_bit_for_bit() {
+        let dir = tdir("roundtrip");
+        let state = sample_state();
+        save(&dir, &state).unwrap();
+        let back = load(&dir).unwrap();
+        assert_states_equal(&state, &back);
+        // saving again is idempotent: identical content, identical names
+        let objects = || {
+            let mut names: Vec<_> = std::fs::read_dir(dir.join("objects"))
+                .unwrap()
+                .map(|e| e.unwrap().file_name())
+                .collect();
+            names.sort();
+            names
+        };
+        let before = objects();
+        save(&dir, &state).unwrap();
+        assert_eq!(before, objects());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_objects_refuse_to_load() {
+        let dir = tdir("corrupt");
+        save(&dir, &sample_state()).unwrap();
+        // flip one byte in one object: the resume must fail loudly
+        let victim = std::fs::read_dir(dir.join("objects"))
+            .unwrap()
+            .map(|e| e.unwrap().path())
+            .find(|p| std::fs::metadata(p).unwrap().len() > 0)
+            .unwrap();
+        let mut bytes = std::fs::read(&victim).unwrap();
+        bytes[0] ^= 0xA5;
+        std::fs::write(&victim, &bytes).unwrap();
+        let err = load(&dir).unwrap_err().to_string();
+        assert!(err.contains("corrupt"), "unexpected error: {err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn truncated_manifest_refuses_to_load() {
+        let dir = tdir("torn");
+        save(&dir, &sample_state()).unwrap();
+        let mpath = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&mpath).unwrap();
+        std::fs::write(&mpath, &text[..text.len() / 2]).unwrap();
+        assert!(load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn config_hash_ignores_timing_only_knobs() {
+        let base = FedConfig::default();
+        let h = config_hash(&base);
+        let mut timing = base.clone();
+        timing.pipeline = !timing.pipeline;
+        timing.straggler_sleep = !timing.straggler_sleep;
+        timing.run_store = Some("/tmp/x".into());
+        timing.resume = true;
+        timing.faults = Some("corrupt=0.5,seed=9".parse().unwrap());
+        assert_eq!(h, config_hash(&timing), "timing/fault knobs must not fork the hash");
+        let mut different = base.clone();
+        different.rounds += 1;
+        assert_ne!(h, config_hash(&different));
+        let mut reseeded = base;
+        reseeded.train.seed ^= 1;
+        assert_ne!(h, config_hash(&reseeded));
+    }
+}

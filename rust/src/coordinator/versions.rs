@@ -109,6 +109,38 @@ impl VersionRing {
         version
     }
 
+    /// Iterate the retained versions oldest first — the run store
+    /// persists exactly this window so a resumed coordinator can keep
+    /// serving chained downlinks.
+    pub fn iter(&self) -> impl Iterator<Item = &ModelVersion> {
+        self.versions.iter()
+    }
+
+    /// Rebuild a ring from persisted versions (oldest first, contiguous
+    /// ids). The crash/resume counterpart of [`VersionRing::iter`].
+    pub fn from_versions(cap: usize, versions: Vec<ModelVersion>) -> anyhow::Result<Self> {
+        if versions.is_empty() {
+            anyhow::bail!("run store holds no model versions");
+        }
+        for w in versions.windows(2) {
+            if w[1].version != w[0].version + 1 {
+                anyhow::bail!(
+                    "run store versions not contiguous: {} then {}",
+                    w[0].version,
+                    w[1].version
+                );
+            }
+        }
+        let cap = cap.max(2);
+        if versions.len() > cap {
+            anyhow::bail!("run store holds {} versions, ring capacity {cap}", versions.len());
+        }
+        Ok(Self {
+            versions: versions.into(),
+            cap,
+        })
+    }
+
     /// The chained downlink that brings a replica at version `base` up
     /// to the head: the retained per-round deltas `base+1 ..= head`,
     /// oldest first. `None` when the chain cannot be built — `base` is
@@ -194,6 +226,25 @@ mod tests {
                 "k={k}: chain replay diverged from the dense-resync params"
             );
         }
+    }
+
+    #[test]
+    fn iter_and_from_versions_roundtrip_the_window() {
+        let ring = ring_with(4, 3);
+        let persisted: Vec<ModelVersion> = ring.iter().cloned().collect();
+        assert_eq!(persisted.len(), 3);
+        let rebuilt = VersionRing::from_versions(3, persisted).unwrap();
+        assert_eq!(rebuilt.head_version(), ring.head_version());
+        assert_eq!(rebuilt.head().params, ring.head().params);
+        assert_eq!(
+            rebuilt.chain_from(2).unwrap().wire_bytes(),
+            ring.chain_from(2).unwrap().wire_bytes()
+        );
+        // a gap in the ids is a torn store, not a ring
+        let mut gappy: Vec<ModelVersion> = ring.iter().cloned().collect();
+        gappy.remove(1);
+        assert!(VersionRing::from_versions(3, gappy).is_err());
+        assert!(VersionRing::from_versions(3, Vec::new()).is_err());
     }
 
     #[test]

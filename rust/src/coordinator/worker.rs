@@ -26,20 +26,37 @@
 //! ([`WorkerReport::base_version`]) so the quorum leader can fold it
 //! late with the right staleness weight; in `dense` mode both directions
 //! ship full snapshots exactly as before.
+//!
+//! Both directions travel as sealed [`Frame`]s (magic, schema version,
+//! length, FNV-1a checksum — [`crate::comm::envelope`]). A downlink frame
+//! that fails its checks, or an update that fails to apply, is *rejected,
+//! never applied*: the worker poisons its replica (clears the reference
+//! and the error-feedback residual) and replies with a
+//! [`FrameKind::Nack`] so the leader can retry with a dense snapshot and,
+//! failing that, dense-resync next round. A [`crate::faults::FaultPlan`]
+//! injects chaos at the same boundary a real radio or process would fail:
+//! uplink frames can be corrupted, truncated, duplicated or reordered at
+//! send, and a crash-at-step-`k` decision makes the worker run exactly
+//! `k` steps and go silent — no report, no nack, its state written off
+//! until the next dense resync (a simulated device reboot).
 
+use std::rc::Rc;
 use std::sync::mpsc::{self, Sender};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
-use crate::comm::{DeltaCodec, ModelUpdate};
+use crate::comm::envelope::{decode_update, read_update, write_update, ByteReader, ByteWriter};
+use crate::comm::{DeltaCodec, Frame, FrameKind, ModelUpdate};
 use crate::config::{CommMode, CommPruner, TrainConfig};
 use crate::data::batcher::Prefetcher;
 use crate::data::Dataset;
+use crate::faults::{FaultPlan, WireFault};
 use crate::manifest::{ArtifactSpec, ModelSpec};
 use crate::params::ParamStore;
-use crate::runtime::{Runtime, StepDriver, TransferStats};
+use crate::runtime::{Executable, Runtime, StepDriver, TransferStats};
+use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
 /// Network-tier settings a worker's uplink codec is built from (one
@@ -59,12 +76,13 @@ pub struct WorkerTask {
     /// wire exchange so the leader can fold a late report with the right
     /// staleness weight.
     pub version: u64,
-    /// the downlink: a dense snapshot (first round / resync beyond the
-    /// retained window / `dense` mode), the pruned global delta, or a
-    /// chain of the retained per-round deltas (a worker ≤ `max_chain`
-    /// versions behind — replays the missed downlinks bit-identically
-    /// and keeps the error-feedback residual alive)
-    pub payload: ModelUpdate,
+    /// the downlink, sealed: a serialized [`ModelUpdate`] — dense
+    /// snapshot (first round / resync beyond the retained window /
+    /// `dense` mode), pruned global delta, or chain of retained
+    /// per-round deltas — inside an integrity-checked [`Frame`]. The
+    /// worker opens and decodes it itself; a frame that fails any check
+    /// is nacked, never applied.
+    pub frame: Frame,
     pub local_steps: usize,
     /// straggler slowdown factor (1.0 = healthy)
     pub slowdown: f64,
@@ -74,7 +92,11 @@ pub struct WorkerTask {
     /// on the leader's clock. Off (the default), the slowdown is only
     /// *reported* through `sim_secs` and tests stay fast.
     pub sleep: bool,
-    pub reply: mpsc::Sender<WorkerReport>,
+    /// uplink transport: `(worker id, sealed frame)`. The id rides
+    /// outside the seal — it is channel addressing, not payload — and
+    /// the leader cross-checks it against the sealed report's own
+    /// `worker_id` before folding.
+    pub reply: mpsc::Sender<(usize, Frame)>,
 }
 
 /// One round's result.
@@ -99,8 +121,100 @@ pub struct WorkerReport {
     pub transfer: TransferStats,
 }
 
+impl WorkerReport {
+    /// Serialize into a [`FrameKind::Report`] payload: the scalar fields
+    /// little-endian, then the update through the shared
+    /// [`crate::comm::envelope`] encoding.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.put_u32(self.worker_id as u32);
+        w.put_u32(self.round as u32);
+        w.put_u64(self.base_version);
+        w.put_u64(self.examples as u64);
+        w.put_f64(self.mean_loss);
+        w.put_f64(self.mean_sparsity);
+        w.put_f64(self.sim_secs);
+        let t = &self.transfer;
+        for v in [t.state_up, t.state_down, t.batch_up, t.metrics_down, t.steps, t.evals] {
+            w.put_u64(v);
+        }
+        write_update(&mut w, &self.update);
+        w.into_bytes()
+    }
+
+    /// Decode a report payload (after [`Frame::open`] verified the
+    /// envelope). Every length and index inside is re-validated; NaN
+    /// scalars decode honestly and are rejected at the fold boundary,
+    /// not here.
+    pub fn decode(payload: &[u8]) -> Result<Self> {
+        let mut r = ByteReader::new(payload);
+        let worker_id = r.get_u32()? as usize;
+        let round = r.get_u32()? as usize;
+        let base_version = r.get_u64()?;
+        let examples = r.get_u64()? as usize;
+        let mean_loss = r.get_f64()?;
+        let mean_sparsity = r.get_f64()?;
+        let sim_secs = r.get_f64()?;
+        let transfer = TransferStats {
+            state_up: r.get_u64()?,
+            state_down: r.get_u64()?,
+            batch_up: r.get_u64()?,
+            metrics_down: r.get_u64()?,
+            steps: r.get_u64()?,
+            evals: r.get_u64()?,
+        };
+        let update = read_update(&mut r)?;
+        r.finish()?;
+        Ok(Self {
+            worker_id,
+            round,
+            base_version,
+            update,
+            examples,
+            mean_loss,
+            mean_sparsity,
+            sim_secs,
+            transfer,
+        })
+    }
+}
+
+/// Everything a worker's cross-round state amounts to, for the durable
+/// run store: the network-tier replica (reference + error-feedback
+/// residual), the device-tier training state that persists across rounds
+/// (momenta + step counter — params are overwritten by every downlink,
+/// so they need no capture), and the batcher position. Restoring a
+/// snapshot into a fresh worker reproduces the uninterrupted run
+/// bit-for-bit.
+#[derive(Clone, Debug)]
+pub struct WorkerSnapshot {
+    /// the downlink-advanced reference replica (empty = never synced /
+    /// poisoned — the next dispatch dense-resyncs)
+    pub reference: Vec<Tensor>,
+    /// the uplink codec's error-feedback residual (empty = fresh)
+    pub residual: Vec<Vec<f32>>,
+    /// batches drawn from the prefetcher so far — a restored worker
+    /// fast-forwards its batcher to this position
+    pub batches_drawn: u64,
+    /// momentum buffers (device-resident across rounds, so they are
+    /// state the downlink does NOT carry)
+    pub momenta: Vec<Tensor>,
+    /// device step counter (drives the per-step dropconnect RNG seed)
+    pub step: u64,
+}
+
 enum Msg {
     Task(WorkerTask),
+    /// Sync the device state down and send back a [`WorkerSnapshot`]
+    /// (run-store persistence at a round boundary).
+    Capture(mpsc::Sender<WorkerSnapshot>),
+    /// Install a persisted snapshot (resume): momenta + step go into the
+    /// store *before* the step driver is rebuilt, the reference/residual
+    /// replace the replica, and the batcher fast-forwards.
+    Restore {
+        snap: Box<WorkerSnapshot>,
+        ack: mpsc::Sender<Result<()>>,
+    },
     Stop,
 }
 
@@ -116,7 +230,9 @@ impl WorkerHandle {
     /// so the thread creates its *own* PJRT client and compiles the train
     /// artifact itself — exactly like a real edge device bringing up its
     /// own accelerator. Compile failures surface through the `ready`
-    /// handshake so `spawn` stays synchronous and fallible.
+    /// handshake so `spawn` stays synchronous and fallible. `faults`
+    /// carries the run's chaos schedule (uplink wire faults and
+    /// crash-at-step-k fire worker-side); `None` is the clean channel.
     pub fn spawn(
         id: usize,
         shard: Dataset,
@@ -124,6 +240,7 @@ impl WorkerHandle {
         model: &ModelSpec,
         cfg: TrainConfig,
         comm: CommSetup,
+        faults: Option<FaultPlan>,
     ) -> Result<Self> {
         let mut store = ParamStore::init(model, cfg.seed); // momenta + B local
         let batch = model.batch;
@@ -140,13 +257,19 @@ impl WorkerHandle {
         let join = std::thread::Builder::new()
             .name(format!("edge-worker-{id}"))
             .spawn(move || {
-                let mut driver = match (|| -> Result<StepDriver> {
+                // runtime + executable stay alive in thread scope so a
+                // Restore can rebuild the step driver against them
+                let built = (|| -> Result<(Runtime, Rc<Executable>, StepDriver)> {
                     let rt = Runtime::cpu()?;
-                    StepDriver::new(cfg.residency, &rt, rt.load(&train_art)?, &model, &store)
-                })() {
-                    Ok(d) => {
+                    let exe = rt.load(&train_art)?;
+                    let driver =
+                        StepDriver::new(cfg.residency, &rt, exe.clone(), &model, &store)?;
+                    Ok((rt, exe, driver))
+                })();
+                let (rt, exe, mut driver) = match built {
+                    Ok(x) => {
                         let _ = ready_tx.send(Ok(()));
-                        d
+                        x
                     }
                     Err(e) => {
                         let _ = ready_tx.send(Err(e));
@@ -156,25 +279,114 @@ impl WorkerHandle {
                 // shard moves to the prefetch thread; gather/shuffle
                 // overlap with the train step
                 let mut batcher = Prefetcher::new(shard, batch, cfg.seed ^ id as u64, 2);
+                let mut batches_drawn: u64 = 0;
                 // the leader's view of this worker's params, advanced
                 // only by downlink payloads (kept bit-identical to the
                 // leader's reference replica), plus the uplink codec with
                 // its error-feedback residual
-                let mut reference: Vec<crate::tensor::Tensor> = Vec::new();
+                let mut reference: Vec<Tensor> = Vec::new();
                 let mut codec = DeltaCodec::with_pruner(comm.mode, comm.rate, comm.pruner);
                 let uplink_rng = Rng::new(cfg.seed ^ 0x5EED_C0DE).fold_in(id as u64);
-                while let Ok(Msg::Task(task)) = rx.recv() {
+                // an absent plan is the all-zero plan: decisions are
+                // pure functions of (site, round, worker), so the zero
+                // plan never fires and never perturbs any RNG stream
+                let plan = faults.unwrap_or_default();
+                loop {
+                    let task = match rx.recv() {
+                        Ok(Msg::Task(task)) => task,
+                        Ok(Msg::Capture(reply)) => {
+                            // bring the host store current first (dirty-
+                            // gated: free right after a round's sync,
+                            // and correct right after a crash, whose
+                            // advanced momenta the snapshot must carry)
+                            match driver.sync_to_host(&mut store) {
+                                Ok(()) => {
+                                    let _ = reply.send(WorkerSnapshot {
+                                        reference: reference.clone(),
+                                        residual: codec.residual().to_vec(),
+                                        batches_drawn,
+                                        momenta: store.momenta.clone(),
+                                        step: store.step,
+                                    });
+                                }
+                                // dropping `reply` unsent surfaces the
+                                // failure as a leader-side recv error
+                                Err(e) => {
+                                    log::error!("worker {id}: capture sync failed: {e:#}")
+                                }
+                            }
+                            continue;
+                        }
+                        Ok(Msg::Restore { snap, ack }) => {
+                            let result = (|| -> Result<()> {
+                                let snap = *snap;
+                                if snap.batches_drawn < batches_drawn {
+                                    bail!(
+                                        "worker {id}: cannot rewind batcher from \
+                                         {batches_drawn} to {}",
+                                        snap.batches_drawn
+                                    );
+                                }
+                                // momenta + step land in the store BEFORE
+                                // the driver rebuild: DeviceState::new
+                                // uploads them and seeds the device step
+                                // counter (per-step RNG) from store.step
+                                store.momenta = snap.momenta;
+                                store.step = snap.step;
+                                driver = StepDriver::new(
+                                    cfg.residency,
+                                    &rt,
+                                    exe.clone(),
+                                    &model,
+                                    &store,
+                                )?;
+                                reference = snap.reference;
+                                codec.set_residual(snap.residual);
+                                for _ in batches_drawn..snap.batches_drawn {
+                                    let _ = batcher.next_batch();
+                                }
+                                batches_drawn = snap.batches_drawn;
+                                Ok(())
+                            })();
+                            let _ = ack.send(result);
+                            continue;
+                        }
+                        Ok(Msg::Stop) | Err(_) => break,
+                    };
                     let t0 = Instant::now();
                     // per-round ledger: everything from the broadcast
                     // upload to the round-boundary sync lands in the
                     // report's TransferStats
                     driver.reset_transfer_stats();
+                    // open the seal: magic, schema version, kind, length
+                    // and checksum must all hold before any payload byte
+                    // is parsed. A frame that fails — corrupted or
+                    // truncated in flight — is rejected, never applied.
+                    let opened = task.frame.open().and_then(|(kind, payload)| {
+                        if kind != FrameKind::Update {
+                            bail!("downlink frame kind {kind:?}, wanted Update");
+                        }
+                        decode_update(payload)
+                    });
+                    let update = match opened {
+                        Ok(u) => u,
+                        Err(e) => {
+                            // the replica may or may not have missed real
+                            // state — poison it and nack; the leader
+                            // retries with a dense snapshot
+                            log::error!("worker {id}: downlink rejected: {e:#}");
+                            reference.clear();
+                            codec.reset_residual();
+                            let _ = task.reply.send((id, Frame::seal(FrameKind::Nack, &[])));
+                            continue;
+                        }
+                    };
                     // materialize the downlink into the reference
                     // replica, then hand the device its copy. In dense
                     // *mode* no reference is kept at all — the snapshot
                     // moves straight into load_params, exactly the
                     // pre-comm path (zero extra O(model) copies)
-                    let device_params = match task.payload {
+                    let device_params = match update {
                         ModelUpdate::Dense(p) => {
                             // a snapshot erases whatever divergence the
                             // carried residual described
@@ -194,22 +406,27 @@ impl WorkerHandle {
                         // residual described)
                         u @ (ModelUpdate::Delta(_) | ModelUpdate::Chain(_)) => {
                             if reference.is_empty() {
+                                // nothing to apply a delta to — nack so
+                                // the leader sends the dense snapshot
+                                // this replica actually needs
                                 log::error!(
-                                    "worker {id}: delta downlink before any snapshot; \
-                                     skipping round"
+                                    "worker {id}: delta downlink before any snapshot"
                                 );
+                                let _ =
+                                    task.reply.send((id, Frame::seal(FrameKind::Nack, &[])));
                                 continue;
                             }
                             if let Err(e) = u.apply(&mut reference) {
                                 // the replica is now an unknown number of
                                 // versions behind whatever the leader will
-                                // dispatch next (it may already have queued
-                                // further deltas under pipeline depth > 1)
-                                // — poison it so every delta is rejected
-                                // until a dense snapshot resyncs us
+                                // dispatch next — poison it so every delta
+                                // is rejected until a dense snapshot
+                                // resyncs us
                                 reference.clear();
                                 codec.reset_residual();
                                 log::error!("worker {id}: broadcast rejected: {e:#}");
+                                let _ =
+                                    task.reply.send((id, Frame::seal(FrameKind::Nack, &[])));
                                 continue;
                             }
                             reference.clone()
@@ -219,11 +436,18 @@ impl WorkerHandle {
                         log::error!("worker {id}: broadcast rejected: {e:#}");
                         continue;
                     }
+                    // crash injection: the device dies after exactly k
+                    // local steps — it still consumed k batches and its
+                    // device momenta advanced, but nothing is synced or
+                    // reported. Silence is the only leader-visible signal.
+                    let crash_at = plan.crash_point(task.round, id, task.local_steps);
+                    let steps_to_run = crash_at.unwrap_or(task.local_steps);
                     let mut losses = 0.0;
                     let mut spars = 0.0;
                     let mut ok = true;
-                    for _ in 0..task.local_steps {
+                    for _ in 0..steps_to_run {
                         let batch = batcher.next_batch();
+                        batches_drawn += 1;
                         match driver.step(
                             &mut store,
                             &batch,
@@ -240,6 +464,14 @@ impl WorkerHandle {
                                 break;
                             }
                         }
+                    }
+                    if crash_at.is_some() {
+                        // simulated reboot: whatever the device held is
+                        // written off; poison the replica so the next
+                        // dispatch dense-resyncs it
+                        reference.clear();
+                        codec.reset_residual();
+                        continue;
                     }
                     // round boundary: the one place the resident path
                     // downloads the O(model) state
@@ -281,7 +513,7 @@ impl WorkerHandle {
                     } else {
                         t0.elapsed().as_secs_f64() * task.slowdown
                     };
-                    let _ = task.reply.send(WorkerReport {
+                    let report = WorkerReport {
                         worker_id: id,
                         round: task.round,
                         base_version: task.version,
@@ -291,7 +523,30 @@ impl WorkerHandle {
                         mean_sparsity: spars / n,
                         sim_secs,
                         transfer: driver.transfer_stats(),
-                    });
+                    };
+                    let mut frame = Frame::seal(FrameKind::Report, &report.encode());
+                    // uplink wire faults fire at send — after the seal,
+                    // exactly where a radio would damage the bytes
+                    match plan.uplink(task.round, id) {
+                        Some(f @ (WireFault::Corrupt | WireFault::Truncate)) => {
+                            plan.mutate(&mut frame, f, task.round, id, 0);
+                            let _ = task.reply.send((id, frame));
+                        }
+                        Some(WireFault::Duplicate) => {
+                            let _ = task.reply.send((id, frame.clone()));
+                            let _ = task.reply.send((id, frame));
+                        }
+                        Some(WireFault::Reorder) => {
+                            // a real delay, so the frame genuinely races
+                            // the other workers' sends
+                            let ms = plan.reorder_delay_ms(task.round, id);
+                            std::thread::sleep(Duration::from_millis(ms));
+                            let _ = task.reply.send((id, frame));
+                        }
+                        None => {
+                            let _ = task.reply.send((id, frame));
+                        }
+                    }
                 }
             })
             .map_err(|e| anyhow!("spawning worker {id}: {e}"))?;
@@ -312,6 +567,32 @@ impl WorkerHandle {
             .map_err(|_| anyhow!("worker {} channel closed", self.id))
     }
 
+    /// Round-boundary snapshot for the run store: syncs the worker's
+    /// device state down and returns its cross-round state. Blocks
+    /// behind any queued tasks (the snapshot is taken *between* rounds).
+    pub fn capture(&self) -> Result<WorkerSnapshot> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Capture(reply))
+            .map_err(|_| anyhow!("worker {} channel closed", self.id))?;
+        rx.recv()
+            .map_err(|_| anyhow!("worker {}: capture failed (state not syncable)", self.id))
+    }
+
+    /// Install a persisted snapshot (resume). Queued ahead of the first
+    /// task by mpsc ordering; errors propagate through the ack.
+    pub fn restore(&self, snap: WorkerSnapshot) -> Result<()> {
+        let (ack, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Restore {
+                snap: Box::new(snap),
+                ack,
+            })
+            .map_err(|_| anyhow!("worker {} channel closed", self.id))?;
+        rx.recv()
+            .map_err(|_| anyhow!("worker {} died during restore", self.id))?
+    }
+
     pub fn shutdown(mut self) {
         let _ = self.tx.send(Msg::Stop);
         if let Some(j) = self.join.take() {
@@ -326,5 +607,74 @@ impl Drop for WorkerHandle {
         if let Some(j) = self.join.take() {
             let _ = j.join();
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::wire::{SignTensor, SparseTensor, TensorUpdate};
+
+    fn sample_report(update: ModelUpdate) -> WorkerReport {
+        WorkerReport {
+            worker_id: 3,
+            round: 7,
+            base_version: 41,
+            update,
+            examples: 512,
+            mean_loss: 1.25,
+            mean_sparsity: 0.875,
+            sim_secs: 0.03125,
+            transfer: TransferStats {
+                state_up: 1,
+                state_down: 2,
+                batch_up: 3,
+                metrics_down: 4,
+                steps: 5,
+                evals: 6,
+            },
+        }
+    }
+
+    #[test]
+    fn report_roundtrips_through_the_wire_encoding() {
+        let pruned = [0.0f32, 2.0, 0.0, -1.5];
+        for update in [
+            ModelUpdate::Dense(vec![Tensor::new(vec![2, 2], vec![1.0, -2.0, 0.5, 4.0])]),
+            ModelUpdate::Delta(vec![
+                TensorUpdate::Sparse(SparseTensor::encode(&pruned)),
+                TensorUpdate::Sign(SignTensor::encode(&pruned)),
+            ]),
+        ] {
+            let r = sample_report(update);
+            let back = WorkerReport::decode(&r.encode()).unwrap();
+            assert_eq!(back.worker_id, r.worker_id);
+            assert_eq!(back.round, r.round);
+            assert_eq!(back.base_version, r.base_version);
+            assert_eq!(back.update, r.update);
+            assert_eq!(back.examples, r.examples);
+            assert_eq!(back.mean_loss, r.mean_loss);
+            assert_eq!(back.mean_sparsity, r.mean_sparsity);
+            assert_eq!(back.sim_secs, r.sim_secs);
+            assert_eq!(back.transfer, r.transfer);
+        }
+    }
+
+    #[test]
+    fn report_decode_rejects_damage() {
+        let r = sample_report(ModelUpdate::Dense(vec![Tensor::new(vec![2], vec![1.0, 2.0])]));
+        let bytes = r.encode();
+        // truncation at any scalar boundary errors cleanly
+        assert!(WorkerReport::decode(&bytes[..bytes.len() - 1]).is_err());
+        assert!(WorkerReport::decode(&bytes[..10]).is_err());
+        // trailing garbage is a schema violation
+        let mut padded = bytes.clone();
+        padded.push(0);
+        assert!(WorkerReport::decode(&padded).is_err());
+        // NaN scalars decode honestly — the fold boundary rejects them
+        let mut nan = r.clone();
+        nan.mean_loss = f64::NAN;
+        let back = WorkerReport::decode(&nan.encode()).unwrap();
+        assert!(back.mean_loss.is_nan());
     }
 }

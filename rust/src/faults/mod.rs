@@ -1,0 +1,387 @@
+//! Deterministic fault injection for the federated channel.
+//!
+//! A [`FaultPlan`] is a *pure function* from `(fault site, round,
+//! worker, attempt)` to a decision, derived from its own seed via
+//! stateless child streams ([`crate::util::rng::Rng::fold_in`]). No
+//! plan decision ever advances a shared generator, so: (a) the same
+//! plan replays the same chaos bit-for-bit, run after run; (b) an
+//! all-zero plan is behaviorally *identical* to no plan — the training
+//! RNG streams (dropout, straggler, pruning) never see a different
+//! draw sequence; and (c) enabling one fault class never shifts the
+//! decisions of another.
+//!
+//! Injection sites (all at the channel boundary, where a real radio
+//! or process would fail):
+//!
+//! * **uplink** (worker → leader, per report): corrupt one byte,
+//!   truncate, duplicate the frame, or reorder (delay) it;
+//! * **downlink** (leader → worker, per attempt): corrupt or truncate
+//!   the sealed update frame — the initial send and the retry draw
+//!   independent decisions;
+//! * **crash-at-step-k** (worker): the device dies after `k` local
+//!   steps — no report, no nack, just silence;
+//! * **kill-at-round-r** (coordinator): the leader process stops after
+//!   persisting round `r`, for crash/resume drills against the run
+//!   store.
+//!
+//! Configured via `federated.faults` / `--faults`, e.g.
+//! `"corrupt=0.05,truncate=0.01,dup=0.02,reorder=0.1,crash=0.02,kill=3,seed=7"`.
+//! The `force_*` fields are test hooks that target an exact
+//! (round, worker) — they are not parseable from config and default
+//! empty.
+
+use anyhow::{bail, Context, Result};
+
+use crate::comm::envelope::Frame;
+use crate::util::rng::Rng;
+
+/// One wire-level fault decision.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireFault {
+    /// Flip one byte of the sealed frame.
+    Corrupt,
+    /// Cut the frame short.
+    Truncate,
+    /// Send the frame twice (uplink only).
+    Duplicate,
+    /// Delay the frame so it arrives out of order (uplink only).
+    Reorder,
+}
+
+const SITE_UP_CORRUPT: u64 = 1;
+const SITE_UP_TRUNCATE: u64 = 2;
+const SITE_UP_DUPLICATE: u64 = 3;
+const SITE_UP_REORDER: u64 = 4;
+const SITE_DOWN_CORRUPT: u64 = 5;
+const SITE_DOWN_TRUNCATE: u64 = 6;
+const SITE_CRASH: u64 = 7;
+const SITE_MUTATE: u64 = 8;
+
+/// Seeded, stateless chaos schedule. See the module docs for the
+/// determinism contract.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultPlan {
+    /// per-report probability of a one-byte uplink corruption
+    pub corrupt: f64,
+    /// per-report probability of an uplink truncation
+    pub truncate: f64,
+    /// per-report probability of a duplicated uplink frame
+    pub duplicate: f64,
+    /// per-report probability of a reordered (delayed) uplink frame
+    pub reorder: f64,
+    /// per-dispatch probability a worker crashes mid-round
+    pub crash: f64,
+    /// coordinator stops after persisting this round
+    pub kill_round: Option<usize>,
+    /// chaos seed — independent of the training seed
+    pub seed: u64,
+    /// test hook: always corrupt the downlink frame for these exact
+    /// `(round, worker, attempt)` triples (attempt 0 = initial send,
+    /// 1 = retry)
+    pub force_downlink_corrupt: Vec<(usize, usize, usize)>,
+    /// test hook: worker crashes after exactly `k` steps at these
+    /// `(round, worker, k)` triples
+    pub force_crash: Vec<(usize, usize, usize)>,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        Self {
+            corrupt: 0.0,
+            truncate: 0.0,
+            duplicate: 0.0,
+            reorder: 0.0,
+            crash: 0.0,
+            kill_round: None,
+            seed: 0,
+            force_downlink_corrupt: Vec::new(),
+            force_crash: Vec::new(),
+        }
+    }
+}
+
+impl FaultPlan {
+    /// Whether this plan can ever inject anything. An inactive plan is
+    /// exactly equivalent to `None` (and the coordinator treats it so).
+    pub fn is_active(&self) -> bool {
+        self.corrupt > 0.0
+            || self.truncate > 0.0
+            || self.duplicate > 0.0
+            || self.reorder > 0.0
+            || self.crash > 0.0
+            || self.kill_round.is_some()
+            || !self.force_downlink_corrupt.is_empty()
+            || !self.force_crash.is_empty()
+    }
+
+    /// The child stream for one decision — keyed by every coordinate,
+    /// shared with nothing.
+    fn stream(&self, site: u64, round: usize, worker: usize, attempt: usize) -> Rng {
+        Rng::new(self.seed ^ 0xFA17)
+            .fold_in(site)
+            .fold_in(round as u64)
+            .fold_in(worker as u64)
+            .fold_in(attempt as u64)
+    }
+
+    fn hit(&self, site: u64, round: usize, worker: usize, attempt: usize, p: f64) -> bool {
+        p > 0.0 && self.stream(site, round, worker, attempt).uniform() < p
+    }
+
+    /// Fault decision for worker `worker`'s report frame in `round`.
+    /// Classes are checked in a fixed order (corrupt, truncate,
+    /// duplicate, reorder) and at most one fires per report.
+    pub fn uplink(&self, round: usize, worker: usize) -> Option<WireFault> {
+        if self.hit(SITE_UP_CORRUPT, round, worker, 0, self.corrupt) {
+            Some(WireFault::Corrupt)
+        } else if self.hit(SITE_UP_TRUNCATE, round, worker, 0, self.truncate) {
+            Some(WireFault::Truncate)
+        } else if self.hit(SITE_UP_DUPLICATE, round, worker, 0, self.duplicate) {
+            Some(WireFault::Duplicate)
+        } else if self.hit(SITE_UP_REORDER, round, worker, 0, self.reorder) {
+            Some(WireFault::Reorder)
+        } else {
+            None
+        }
+    }
+
+    /// Fault decision for the update frame sent to `worker` in `round`;
+    /// `attempt` 0 is the scheduled downlink, 1 the retry after a nack.
+    pub fn downlink(&self, round: usize, worker: usize, attempt: usize) -> Option<WireFault> {
+        if self.force_downlink_corrupt.contains(&(round, worker, attempt)) {
+            Some(WireFault::Corrupt)
+        } else if self.hit(SITE_DOWN_CORRUPT, round, worker, attempt, self.corrupt) {
+            Some(WireFault::Corrupt)
+        } else if self.hit(SITE_DOWN_TRUNCATE, round, worker, attempt, self.truncate) {
+            Some(WireFault::Truncate)
+        } else {
+            None
+        }
+    }
+
+    /// If worker `worker` crashes in `round`, the number of local steps
+    /// it completes before dying (`0..local_steps`).
+    pub fn crash_point(&self, round: usize, worker: usize, local_steps: usize) -> Option<usize> {
+        if let Some(&(_, _, k)) = self
+            .force_crash
+            .iter()
+            .find(|&&(r, w, _)| r == round && w == worker)
+        {
+            return Some(k.min(local_steps));
+        }
+        if !self.hit(SITE_CRASH, round, worker, 0, self.crash) {
+            return None;
+        }
+        let mut rng = self.stream(SITE_CRASH, round, worker, 1);
+        Some(rng.below(local_steps.max(1) as u64) as usize)
+    }
+
+    /// Deterministic delay for a reordered uplink frame.
+    pub fn reorder_delay_ms(&self, round: usize, worker: usize) -> u64 {
+        let mut rng = self.stream(SITE_UP_REORDER, round, worker, 1);
+        1 + rng.below(20)
+    }
+
+    /// Damage a sealed frame in place per the decision. `Duplicate` and
+    /// `Reorder` are transport behaviors (the sender handles them) and
+    /// leave the bytes alone.
+    pub fn mutate(
+        &self,
+        frame: &mut Frame,
+        fault: WireFault,
+        round: usize,
+        worker: usize,
+        attempt: usize,
+    ) {
+        let mut rng = self.stream(SITE_MUTATE, round, worker, attempt);
+        let bytes = frame.bytes_mut();
+        match fault {
+            WireFault::Corrupt => {
+                let pos = rng.below(bytes.len() as u64) as usize;
+                bytes[pos] ^= 0xA5;
+            }
+            WireFault::Truncate => {
+                let keep = rng.below(bytes.len() as u64) as usize;
+                bytes.truncate(keep);
+            }
+            WireFault::Duplicate | WireFault::Reorder => {}
+        }
+    }
+}
+
+impl std::str::FromStr for FaultPlan {
+    type Err = anyhow::Error;
+
+    /// Parse `"key=value,..."` with keys `corrupt`, `truncate`, `dup`,
+    /// `reorder`, `crash` (probabilities in `[0,1]`), `kill` (round
+    /// index) and `seed`.
+    fn from_str(s: &str) -> Result<Self> {
+        let mut plan = FaultPlan::default();
+        for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (key, value) = part
+                .split_once('=')
+                .with_context(|| format!("fault spec {part:?} is not key=value"))?;
+            let (key, value) = (key.trim(), value.trim());
+            let prob = |field: &mut f64| -> Result<()> {
+                let p: f64 = value.parse().with_context(|| format!("fault {key}={value:?}"))?;
+                if !(0.0..=1.0).contains(&p) {
+                    bail!("fault probability {key}={p} outside [0, 1]");
+                }
+                *field = p;
+                Ok(())
+            };
+            match key {
+                "corrupt" => prob(&mut plan.corrupt)?,
+                "truncate" => prob(&mut plan.truncate)?,
+                "dup" => prob(&mut plan.duplicate)?,
+                "reorder" => prob(&mut plan.reorder)?,
+                "crash" => prob(&mut plan.crash)?,
+                "kill" => {
+                    plan.kill_round =
+                        Some(value.parse().with_context(|| format!("fault kill={value:?}"))?)
+                }
+                "seed" => {
+                    plan.seed = value.parse().with_context(|| format!("fault seed={value:?}"))?
+                }
+                other => bail!("unknown fault key {other:?}"),
+            }
+        }
+        Ok(plan)
+    }
+}
+
+impl std::fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "corrupt={},truncate={},dup={},reorder={},crash={}",
+            self.corrupt, self.truncate, self.duplicate, self.reorder, self.crash
+        )?;
+        if let Some(r) = self.kill_round {
+            write!(f, ",kill={r}")?;
+        }
+        write!(f, ",seed={}", self.seed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::envelope::FrameKind;
+
+    #[test]
+    fn parse_full_spec_and_defaults() {
+        let spec = "corrupt=0.05, truncate=0.01,dup=0.02,reorder=0.1,crash=0.02,kill=3,seed=7";
+        let p: FaultPlan = spec.parse().unwrap();
+        assert_eq!(p.corrupt, 0.05);
+        assert_eq!(p.truncate, 0.01);
+        assert_eq!(p.duplicate, 0.02);
+        assert_eq!(p.reorder, 0.1);
+        assert_eq!(p.crash, 0.02);
+        assert_eq!(p.kill_round, Some(3));
+        assert_eq!(p.seed, 7);
+        let d: FaultPlan = "crash=1".parse().unwrap();
+        assert_eq!(d.corrupt, 0.0);
+        assert_eq!(d.kill_round, None);
+        assert!(d.is_active());
+        assert!(!FaultPlan::default().is_active());
+    }
+
+    #[test]
+    fn parse_rejects_bad_specs() {
+        for bad in [
+            "corrupt",        // not key=value
+            "warp=0.5",       // unknown key
+            "corrupt=1.5",    // out of range
+            "corrupt=-0.1",   // out of range
+            "kill=soon",      // not a round index
+            "seed=minus-one", // not a u64
+        ] {
+            assert!(bad.parse::<FaultPlan>().is_err(), "{bad:?} parsed");
+        }
+    }
+
+    #[test]
+    fn display_parse_roundtrip() {
+        let p: FaultPlan = "corrupt=0.05,crash=0.02,kill=3,seed=7".parse().unwrap();
+        let back: FaultPlan = p.to_string().parse().unwrap();
+        assert_eq!(back, p);
+    }
+
+    #[test]
+    fn decisions_are_deterministic_and_independent() {
+        let p: FaultPlan = "corrupt=0.5,truncate=0.2,dup=0.2,reorder=0.2,crash=0.5,seed=11"
+            .parse()
+            .unwrap();
+        let q = p.clone();
+        let (mut some, mut none) = (0, 0);
+        for round in 0..50 {
+            for worker in 0..4 {
+                assert_eq!(p.uplink(round, worker), q.uplink(round, worker));
+                assert_eq!(p.downlink(round, worker, 0), q.downlink(round, worker, 0));
+                assert_eq!(p.crash_point(round, worker, 20), q.crash_point(round, worker, 20));
+                match p.uplink(round, worker) {
+                    Some(_) => some += 1,
+                    None => none += 1,
+                }
+                if let Some(k) = p.crash_point(round, worker, 20) {
+                    assert!(k < 20);
+                }
+            }
+        }
+        assert!(some > 0 && none > 0, "decisions never varied: {some}/{none}");
+        // attempts draw independently: the retry is not doomed to repeat
+        // the initial send's decision everywhere
+        let differs = (0..200).any(|r| p.downlink(r, 0, 0) != p.downlink(r, 0, 1));
+        assert!(differs, "attempt index never changed a downlink decision");
+    }
+
+    #[test]
+    fn zero_plan_never_fires() {
+        let p = FaultPlan::default();
+        for round in 0..50 {
+            for worker in 0..4 {
+                assert_eq!(p.uplink(round, worker), None);
+                assert_eq!(p.downlink(round, worker, 0), None);
+                assert_eq!(p.crash_point(round, worker, 20), None);
+            }
+        }
+    }
+
+    #[test]
+    fn forced_hooks_override_probabilities() {
+        let plan = FaultPlan {
+            force_downlink_corrupt: vec![(2, 1, 0), (2, 1, 1)],
+            force_crash: vec![(3, 0, 5)],
+            ..FaultPlan::default()
+        };
+        assert_eq!(plan.downlink(2, 1, 0), Some(WireFault::Corrupt));
+        assert_eq!(plan.downlink(2, 1, 1), Some(WireFault::Corrupt));
+        assert_eq!(plan.downlink(2, 0, 0), None);
+        assert_eq!(plan.crash_point(3, 0, 20), Some(5));
+        assert_eq!(plan.crash_point(3, 0, 3), Some(3), "crash point clamps to local steps");
+        assert_eq!(plan.crash_point(3, 1, 20), None);
+        assert!(plan.is_active());
+    }
+
+    #[test]
+    fn mutations_break_the_seal() {
+        let plan = FaultPlan { seed: 9, ..FaultPlan::default() };
+        let clean = Frame::seal(FrameKind::Report, &[42u8; 64]);
+        assert!(clean.open().is_ok());
+        let mut corrupted = clean.clone();
+        plan.mutate(&mut corrupted, WireFault::Corrupt, 0, 0, 0);
+        assert!(corrupted.open().is_err());
+        let mut truncated = clean.clone();
+        plan.mutate(&mut truncated, WireFault::Truncate, 0, 0, 0);
+        assert!(truncated.open().is_err());
+        // deterministic damage
+        let mut again = clean.clone();
+        plan.mutate(&mut again, WireFault::Corrupt, 0, 0, 0);
+        assert_eq!(again, corrupted);
+        // transport-level faults leave bytes alone
+        let mut dup = clean.clone();
+        plan.mutate(&mut dup, WireFault::Duplicate, 0, 0, 0);
+        assert_eq!(dup, clean);
+    }
+}

@@ -37,6 +37,7 @@ pub mod comm;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod faults;
 pub mod figures;
 pub mod manifest;
 pub mod params;

@@ -188,6 +188,9 @@ fn cmd_federated(raw: &[String]) -> Result<()> {
         FlagSpec { name: "staleness-decay", help: "late-report weight decay λ (weight = examples·λ^k, k = versions behind; 0 discards)", takes_value: true, default: None },
         FlagSpec { name: "pipeline-depth", help: "max rounds in flight under a quorum (bounds late-report staleness)", takes_value: true, default: None },
         FlagSpec { name: "max-chain", help: "resync workers up to k versions behind with chained deltas instead of dense snapshots (0 = always dense)", takes_value: true, default: None },
+        FlagSpec { name: "faults", help: "deterministic fault injection, e.g. \"corrupt=0.05,truncate=0.01,dup=0.02,reorder=0.1,crash=0.02,kill=3,seed=7\"", takes_value: true, default: None },
+        FlagSpec { name: "run-store", help: "durable run store directory: persist a resumable snapshot after every round", takes_value: true, default: None },
+        FlagSpec { name: "resume", help: "resume from --run-store instead of starting fresh", takes_value: false, default: None },
     ]);
     if raw.iter().any(|a| a == "--help") {
         println!("{}", render_help("efficientgrad", "federated", "Federated edge training", &specs));
@@ -241,6 +244,15 @@ fn cmd_federated(raw: &[String]) -> Result<()> {
     if let Some(v) = args.get_usize("max-chain")? {
         cfg.max_chain = v;
     }
+    if let Some(v) = args.get("faults") {
+        cfg.faults = Some(v.parse()?);
+    }
+    if let Some(v) = args.get("run-store") {
+        cfg.run_store = Some(v.into());
+    }
+    if args.get_bool("resume") {
+        cfg.resume = true;
+    }
     cfg.validate()?; // one normative range check, config-file and CLI alike
 
     let rt = Runtime::cpu()?;
@@ -256,6 +268,16 @@ fn cmd_federated(raw: &[String]) -> Result<()> {
         .sum();
     let late_total: usize = summary.rounds.iter().map(|r| r.late_reports).sum();
     let chained_total: usize = summary.rounds.iter().map(|r| r.chained_downlinks).sum();
+    let corrupt_total: usize = summary.rounds.iter().map(|r| r.corrupt_frames).sum();
+    let rejected_total: usize = summary.rounds.iter().map(|r| r.rejected_reports).sum();
+    let retries_total: usize = summary.rounds.iter().map(|r| r.downlink_retries).sum();
+    if cfg.faults.as_ref().is_some_and(|p| p.is_active()) {
+        println!(
+            "integrity: {corrupt_total} corrupt frames quarantined, {rejected_total} reports \
+             rejected, {retries_total} downlink retries ({} rounds completed)",
+            summary.rounds.len()
+        );
+    }
     if cfg.quorum < 1.0 || chained_total > 0 {
         println!(
             "elastic schedule: quorum {:.2}, {} late reports folded (λ={}), \

@@ -2,7 +2,7 @@
 //! owned by the Rust coordinator, initialized from the manifest's init
 //! specs, checkpointable to a simple length-prefixed binary format.
 
-use std::io::{Read, Write};
+use std::io::Read;
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
@@ -111,26 +111,27 @@ impl ParamStore {
 
     const MAGIC: &'static [u8; 8] = b"EFFGRAD1";
 
+    /// Serialize then write via [`crate::util::fs::atomic_write`], so a
+    /// crash mid-save leaves the previous checkpoint intact instead of a
+    /// torn prefix.
     pub fn save(&self, path: &Path) -> Result<()> {
-        let mut f = std::io::BufWriter::new(
-            std::fs::File::create(path).with_context(|| format!("create {path:?}"))?,
-        );
-        f.write_all(Self::MAGIC)?;
-        f.write_all(&self.step.to_le_bytes())?;
+        let mut out = Vec::with_capacity(16 + self.state_bytes() as usize);
+        out.extend_from_slice(Self::MAGIC);
+        out.extend_from_slice(&self.step.to_le_bytes());
         for section in [&self.params, &self.momenta, &self.feedback] {
-            f.write_all(&(section.len() as u64).to_le_bytes())?;
+            out.extend_from_slice(&(section.len() as u64).to_le_bytes());
             for t in section {
-                f.write_all(&(t.shape().len() as u64).to_le_bytes())?;
+                out.extend_from_slice(&(t.shape().len() as u64).to_le_bytes());
                 for &d in t.shape() {
-                    f.write_all(&(d as u64).to_le_bytes())?;
+                    out.extend_from_slice(&(d as u64).to_le_bytes());
                 }
-                f.write_all(&(t.len() as u64).to_le_bytes())?;
+                out.extend_from_slice(&(t.len() as u64).to_le_bytes());
                 for &v in t.data() {
-                    f.write_all(&v.to_le_bytes())?;
+                    out.extend_from_slice(&v.to_le_bytes());
                 }
             }
         }
-        Ok(())
+        crate::util::fs::atomic_write(path, &out).with_context(|| format!("checkpoint {path:?}"))
     }
 
     pub fn load(path: &Path) -> Result<Self> {

@@ -66,10 +66,7 @@ impl MetricsLog {
             .collect()
     }
 
-    pub fn save_csv(&self, path: &Path) -> std::io::Result<()> {
-        if let Some(dir) = path.parent() {
-            std::fs::create_dir_all(dir)?;
-        }
+    pub fn save_csv(&self, path: &Path) -> anyhow::Result<()> {
         let mut out = String::from("step,loss,batch_acc,lr,sparsity,eval_acc\n");
         for r in &self.records {
             out.push_str(&format!(
@@ -82,7 +79,7 @@ impl MetricsLog {
                 r.eval_acc.map(|v| format!("{v:.4}")).unwrap_or_default()
             ));
         }
-        std::fs::write(path, out)
+        crate::util::fs::atomic_write(path, out.as_bytes())
     }
 }
 

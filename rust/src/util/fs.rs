@@ -1,0 +1,70 @@
+//! Atomic file writes: stage into a temp sibling, then `rename` into
+//! place. On POSIX the rename is atomic within a filesystem, so readers
+//! (and a resume after a mid-write kill) see either the old file or the
+//! complete new one — never a torn prefix. Every checkpoint, manifest
+//! and bench-report write in the repo routes through here.
+
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Temp sibling used while staging: `<name>.tmp.<pid>` next to the
+/// target, so the final `rename` never crosses a filesystem boundary.
+fn tmp_sibling(path: &Path) -> PathBuf {
+    let mut name = path.file_name().unwrap_or_default().to_os_string();
+    name.push(format!(".tmp.{}", std::process::id()));
+    path.with_file_name(name)
+}
+
+/// Write `bytes` to `path` atomically (temp sibling + rename), creating
+/// parent directories as needed.
+pub fn atomic_write(path: &Path, bytes: &[u8]) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating {}", parent.display()))?;
+        }
+    }
+    let tmp = tmp_sibling(path);
+    std::fs::write(&tmp, bytes).with_context(|| format!("writing {}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} -> {}", tmp.display(), path.display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("effgrad_fs_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn writes_and_overwrites_without_leftovers() {
+        let dir = tmpdir("rw");
+        let path = dir.join("nested/report.json");
+        atomic_write(&path, b"one").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"one");
+        atomic_write(&path, b"two-longer").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"two-longer");
+        // no staging files left behind
+        let leftovers: Vec<_> = std::fs::read_dir(path.parent().unwrap())
+            .unwrap()
+            .map(|e| e.unwrap().file_name())
+            .filter(|n| n.to_string_lossy().contains(".tmp."))
+            .collect();
+        assert!(leftovers.is_empty(), "staging leftovers: {leftovers:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn bare_filename_has_no_parent_to_create() {
+        // path with an empty parent component must not try create_dir_all("")
+        let cwd_file = tmpdir("bare").join("x.bin");
+        atomic_write(&cwd_file, &[1, 2, 3]).unwrap();
+        assert_eq!(std::fs::read(&cwd_file).unwrap(), vec![1, 2, 3]);
+        let _ = std::fs::remove_dir_all(cwd_file.parent().unwrap());
+    }
+}

@@ -4,6 +4,7 @@
 use efficientgrad::comm::wire::{sign_model_bytes_envelope, sparse_model_bytes};
 use efficientgrad::config::{CommMode, CommPruner, FedConfig, TrainConfig};
 use efficientgrad::coordinator::Leader;
+use efficientgrad::faults::FaultPlan;
 use efficientgrad::manifest::Manifest;
 use efficientgrad::params::ParamStore;
 use efficientgrad::runtime::{resident_step_state_bytes, Runtime, TransferStats};
@@ -681,4 +682,215 @@ fn stragglers_show_in_worker_times_not_results() {
     let t_fast: f64 = without.rounds[0].worker_secs.iter().sum();
     assert!(t_slow > t_fast * 2.0, "straggler time {t_slow} vs {t_fast}");
     assert!((with_stragglers.final_acc - without.final_acc).abs() < 0.5);
+}
+
+#[test]
+fn zero_fault_plan_is_bit_for_bit_no_plan() {
+    // the fault subsystem's determinism contract: a plan whose every
+    // probability is zero must be *behaviorally identical* to no plan —
+    // same params, same eval accs, same payload AND envelope ledgers —
+    // because plan decisions live on their own RNG streams and an
+    // unfired decision perturbs nothing
+    let Some(m) = manifest() else {
+        eprintln!("SKIP: artifacts missing");
+        return;
+    };
+    let rt = Runtime::cpu().unwrap();
+    let mut cfg = small_cfg(2, 4);
+    cfg.comm = CommMode::Pruned;
+    let (clean, clean_params) = run_to_summary(&rt, &m, cfg.clone());
+    cfg.faults = Some("seed=99".parse().unwrap()); // every knob zero
+    let (zeroed, zeroed_params) = run_to_summary(&rt, &m, cfg);
+    assert_eq!(clean_params, zeroed_params, "a zero plan moved the params");
+    assert_eq!(clean.rounds.len(), zeroed.rounds.len());
+    for (a, b) in clean.rounds.iter().zip(&zeroed.rounds) {
+        let r = a.round;
+        assert_eq!(a.eval_acc.to_bits(), b.eval_acc.to_bits(), "round {r}");
+        assert_eq!(a.mean_loss.to_bits(), b.mean_loss.to_bits(), "round {r}");
+        assert_eq!(a.upload_bytes, b.upload_bytes, "round {r}");
+        assert_eq!(a.download_bytes, b.download_bytes, "round {r}");
+        assert_eq!(a.envelope_bytes, b.envelope_bytes, "round {r}");
+        // nothing fired, nothing was detected
+        for x in [a, b] {
+            assert_eq!(x.corrupt_frames, 0, "round {r}");
+            assert_eq!(x.rejected_reports, 0, "round {r}");
+            assert_eq!(x.downlink_retries, 0, "round {r}");
+        }
+        // envelope accounting on a clean 2-worker round: one sealed task
+        // down + one sealed report up per worker, 24 B of header each
+        assert_eq!(a.envelope_bytes, 2 * 2 * 24, "round {r}");
+    }
+}
+
+#[test]
+fn nacked_downlink_retries_dense_and_the_worker_survives() {
+    // escalation step 1: a corrupt downlink is rejected worker-side
+    // (never applied), nacked, and answered with ONE dense retry — the
+    // worker completes the round and is not dropped
+    let Some(m) = manifest() else {
+        eprintln!("SKIP: artifacts missing");
+        return;
+    };
+    let rt = Runtime::cpu().unwrap();
+    let mut cfg = small_cfg(2, 4);
+    cfg.comm = CommMode::Pruned;
+    cfg.faults = Some(FaultPlan {
+        force_downlink_corrupt: vec![(1, 0, 0)], // round 1, worker 0, initial send
+        ..FaultPlan::default()
+    });
+    let (sum, _) = run_to_summary(&rt, &m, cfg);
+    for r in &sum.rounds {
+        assert!(r.dropped.is_empty(), "round {}: a nacked worker was dropped", r.round);
+        assert_eq!(r.worker_transfer.len(), 2, "round {}: a report went missing", r.round);
+        assert_eq!(r.corrupt_frames, 0, "round {}: nacks are not corruption", r.round);
+        if r.round == 1 {
+            assert_eq!(r.downlink_retries, 1, "the nack must draw exactly one retry");
+            // steady-state round, so the only dense downlink is the retry
+            assert_eq!(r.dense_downlinks, 1);
+        } else {
+            assert_eq!(r.downlink_retries, 0, "round {}", r.round);
+        }
+    }
+    assert!(sum.final_acc.is_finite());
+}
+
+#[test]
+fn double_corruption_quarantines_then_dense_resyncs() {
+    // escalation step 2: when the dense retry is corrupted too, the
+    // worker is written off for the round (dropped, replica unknown) and
+    // the next round's dispatch dense-resyncs it
+    let Some(m) = manifest() else {
+        eprintln!("SKIP: artifacts missing");
+        return;
+    };
+    let rt = Runtime::cpu().unwrap();
+    let mut cfg = small_cfg(2, 4);
+    cfg.comm = CommMode::Pruned;
+    cfg.faults = Some(FaultPlan {
+        force_downlink_corrupt: vec![(1, 0, 0), (1, 0, 1)], // initial send AND retry
+        ..FaultPlan::default()
+    });
+    let (sum, _) = run_to_summary(&rt, &m, cfg);
+    let r1 = &sum.rounds[1];
+    assert_eq!(r1.downlink_retries, 1, "the ladder allows exactly one retry");
+    assert_eq!(r1.dropped, vec![0], "the double-corrupted worker must be quarantined");
+    assert_eq!(r1.worker_transfer.len(), 1, "only the healthy worker folds");
+    let r2 = &sum.rounds[2];
+    assert!(r2.dropped.is_empty(), "the quarantined worker must come back");
+    assert_eq!(r2.dense_downlinks, 1, "the comeback must ride a dense resync");
+    assert_eq!(r2.worker_transfer.len(), 2);
+    assert!(sum.final_acc.is_finite());
+}
+
+#[test]
+fn poisoned_and_crashed_workers_recover_on_identical_trajectories() {
+    // the poisoned-replica pin: a worker that poisons its replica (both
+    // downlink attempts corrupted) and a worker that crashes at step 0
+    // leave *identical* model state behind — neither stepped, both are
+    // quarantined for the round and dense-resynced — so twin runs must
+    // reproduce each other's params and eval accs bit for bit (only the
+    // wire ledgers differ: the poisoned run paid for a retry)
+    let Some(m) = manifest() else {
+        eprintln!("SKIP: artifacts missing");
+        return;
+    };
+    let rt = Runtime::cpu().unwrap();
+    let mut base = small_cfg(3, 4);
+    base.comm = CommMode::Pruned;
+    let mut poisoned = base.clone();
+    poisoned.faults = Some(FaultPlan {
+        force_downlink_corrupt: vec![(1, 0, 0), (1, 0, 1)],
+        ..FaultPlan::default()
+    });
+    let mut crashed = base;
+    crashed.faults = Some(FaultPlan {
+        force_crash: vec![(1, 0, 0)], // dies before its first local step
+        ..FaultPlan::default()
+    });
+    let (p, p_params) = run_to_summary(&rt, &m, poisoned);
+    let (c, c_params) = run_to_summary(&rt, &m, crashed);
+    assert_eq!(p_params, c_params, "recovery paths diverged the model");
+    assert_eq!(p.rounds.len(), c.rounds.len());
+    for (a, b) in p.rounds.iter().zip(&c.rounds) {
+        let r = a.round;
+        assert_eq!(a.eval_acc.to_bits(), b.eval_acc.to_bits(), "round {r}");
+        assert_eq!(a.mean_loss.to_bits(), b.mean_loss.to_bits(), "round {r}");
+        assert_eq!(a.dropped, b.dropped, "round {r}");
+    }
+    // both runs wrote worker 0 off in round 1 — by different detectors
+    assert_eq!(p.rounds[1].dropped, vec![0]);
+    assert_eq!(p.rounds[1].downlink_retries, 1, "poison path: nack → retry → give up");
+    assert_eq!(c.rounds[1].downlink_retries, 0, "crash path: silence, no nack");
+    // and both resynced it the same way next round
+    assert_eq!(p.rounds[2].dense_downlinks, 1);
+    assert_eq!(c.rounds[2].dense_downlinks, 1);
+}
+
+#[test]
+fn kill_and_resume_reproduces_the_uninterrupted_run() {
+    // the durability pin: kill the coordinator after round 1, resume
+    // from the run store, and the stitched run must be bit-for-bit the
+    // uninterrupted one — params, per-round eval accs, payload ledgers
+    let Some(m) = manifest() else {
+        eprintln!("SKIP: artifacts missing");
+        return;
+    };
+    let rt = Runtime::cpu().unwrap();
+    let dir = std::env::temp_dir().join(format!("effgrad_fed_resume_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut base = small_cfg(3, 4);
+    base.comm = CommMode::Pruned;
+
+    let (x, x_params) = run_to_summary(&rt, &m, base.clone());
+    assert_eq!(x.rounds.len(), 4);
+
+    let mut killed = base.clone();
+    killed.run_store = Some(dir.to_string_lossy().into_owned());
+    killed.faults = Some(FaultPlan {
+        kill_round: Some(1),
+        ..FaultPlan::default()
+    });
+    let (y1, _) = run_to_summary(&rt, &m, killed);
+    assert_eq!(y1.rounds.len(), 2, "the kill must halt the run after round 1");
+
+    let mut resumed = base;
+    resumed.run_store = Some(dir.to_string_lossy().into_owned());
+    resumed.resume = true;
+    let (y2, y_params) = run_to_summary(&rt, &m, resumed);
+    assert_eq!(y2.rounds.len(), 2, "the resume must run exactly rounds 2 and 3");
+    assert_eq!(y2.rounds[0].round, 2);
+
+    // the headline: identical final model, bit for bit
+    assert_eq!(x_params, y_params, "resume forked the trajectory");
+    // every round of the stitched run matches its uninterrupted twin
+    let stitched = y1.rounds.iter().chain(&y2.rounds);
+    for (a, b) in x.rounds.iter().zip(stitched) {
+        let r = a.round;
+        assert_eq!(r, b.round);
+        assert_eq!(a.eval_acc.to_bits(), b.eval_acc.to_bits(), "round {r}: eval");
+        assert_eq!(a.mean_loss.to_bits(), b.mean_loss.to_bits(), "round {r}: loss");
+        assert_eq!(a.upload_bytes, b.upload_bytes, "round {r}: uplink ledger");
+        assert_eq!(a.download_bytes, b.download_bytes, "round {r}: downlink ledger");
+        assert_eq!(a.dense_downlinks, b.dense_downlinks, "round {r}");
+        assert_eq!(a.uplink_survivors, b.uplink_survivors, "round {r}");
+    }
+    assert_eq!(
+        x.total_upload_bytes,
+        y1.total_upload_bytes + y2.total_upload_bytes,
+        "uplink bytes must be conserved across the kill"
+    );
+    assert_eq!(
+        x.total_download_bytes,
+        y1.total_download_bytes + y2.total_download_bytes
+    );
+    // resuming under a different core config must refuse, not fork
+    let mut wrong = small_cfg(3, 5); // rounds differ → different hash
+    wrong.comm = CommMode::Pruned;
+    wrong.run_store = Some(dir.to_string_lossy().into_owned());
+    wrong.resume = true;
+    assert!(
+        Leader::new(&rt, &m, wrong).is_err(),
+        "resume accepted a store written under a different config"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
 }
