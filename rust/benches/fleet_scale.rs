@@ -1,0 +1,403 @@
+//! Bench: fleet scale — cohort-sampled federated rounds over 1k / 10k /
+//! 100k in-process [`LiteWorker`]s, flat and two-tier aggregation.
+//!
+//! The fleet claim measured here: one process hosts 100k workers because
+//! live O(model) state scales with the workers actually *sampled* (the
+//! cohort), not the fleet size — unsampled workers hold an empty (or
+//! `Arc`-shared) replica. Every round is protocol-real end to end:
+//! sealed downlink [`Frame`]s, the worker-side open/validate/apply path,
+//! error-feedback [`DeltaCodec`] uplinks, sealed report frames, and a
+//! [`Hierarchy`] fold (edge aggregators absorbed into the root). Only
+//! the training inside each worker is synthetic drift.
+//!
+//! Rows emitted (and merged into `BENCH_runtime.json`, which
+//! `runtime_hotpath` SKIPs without artifacts — in CI this bench is the
+//! file's writer):
+//! * `fleet round` — mean round wall time + rounds/sec per (N, m, g),
+//!   with the live-replica byte count in the state column;
+//! * `fleet agg throughput` — reports/sec through accept+finish, flat vs
+//!   two-tier;
+//! * `fleet resync` — `Arc`-shared dense resyncs/sec across the whole
+//!   fleet (one params allocation for all N workers).
+//!
+//! Asserts: every round folds exactly the cohort; live replicas stay
+//! ≤ rounds·m (« N at 100k); a two-tier fold of a real cohort's reports
+//! is bit-identical to the flat fold. No PJRT artifacts needed — this
+//! bench always runs. `EFFICIENTGRAD_BENCH_SHORT=1` (CI) shrinks rounds
+//! and iterations, same rows, same asserts.
+//!
+//!     cargo bench --bench fleet_scale
+
+use std::sync::mpsc;
+use std::time::Duration;
+
+use efficientgrad::benchlib::{bench, fmt_ns, Report};
+use efficientgrad::comm::envelope::encode_update;
+use efficientgrad::comm::{Frame, FrameKind, ModelUpdate};
+use efficientgrad::config::{CommMode, CommPruner};
+use efficientgrad::coordinator::{CommSetup, Hierarchy, LiteWorker, Worker, WorkerReport, WorkerTask};
+use efficientgrad::tensor::Tensor;
+use efficientgrad::util::json::{arr, Json};
+use efficientgrad::util::rng::Rng;
+
+/// Model size per lite worker (one tensor, 4·P = 16 KB dense) — big
+/// enough that an all-synced 100k fleet would need ~1.6 GB, so the
+/// cohort-bounded live set is the only way the bench fits.
+const P: usize = 4096;
+const SEED: u64 = 42;
+const HEADERS: [&str; 6] = ["op", "mean", "p50", "p95", "per-image µs", "state B/step"];
+
+fn short_mode() -> bool {
+    std::env::var_os("EFFICIENTGRAD_BENCH_SHORT").is_some()
+}
+
+fn comm() -> CommSetup {
+    CommSetup {
+        mode: CommMode::Pruned,
+        rate: 0.1,
+        pruner: CommPruner::Stochastic,
+    }
+}
+
+fn initial_params() -> Vec<Tensor> {
+    let mut rng = Rng::new(SEED);
+    let mut data = vec![0f32; P];
+    rng.fill_normal(&mut data, 0.5);
+    vec![Tensor::new(vec![P], data)]
+}
+
+/// One protocol-real round: sample a cohort (the leader's `--sample-m`
+/// draw, same dedicated stream), dense-downlink the head to each member
+/// through a sealed frame, gather + decode the sealed reports, fold
+/// through a `g`-edge [`Hierarchy`]. Returns (reports folded, tier
+/// uplink bytes).
+fn fleet_round(
+    workers: &mut [LiteWorker],
+    head: &mut Vec<Tensor>,
+    round: usize,
+    sample_rng: &mut Rng,
+    m: usize,
+    g: usize,
+) -> (usize, u64) {
+    let n = workers.len();
+    let mut cohort: Vec<usize> = sample_rng
+        .permutation(n)
+        .into_iter()
+        .take(m)
+        .map(|i| i as usize)
+        .collect();
+    cohort.sort_unstable();
+    // one seal per round; each task carries a cheap clone of the frame
+    let frame = Frame::seal(FrameKind::Update, &encode_update(&ModelUpdate::Dense(head.clone())));
+    let (tx, rx) = mpsc::channel();
+    for &wid in &cohort {
+        workers[wid]
+            .submit(WorkerTask {
+                round,
+                version: round as u64 + 1,
+                frame: frame.clone(),
+                local_steps: 2,
+                slowdown: 1.0,
+                sleep: false,
+                reply: tx.clone(),
+            })
+            .unwrap();
+    }
+    drop(tx);
+    let mut h = Hierarchy::new(CommMode::Pruned, n, g);
+    while let Ok((wid, f)) = rx.recv() {
+        let (kind, payload) = f.open().unwrap();
+        assert_eq!(kind, FrameKind::Report, "lite worker {wid} nacked");
+        let r = WorkerReport::decode(payload).unwrap();
+        assert_eq!(r.worker_id, wid);
+        h.accept(r.base_version, r.worker_id, r.examples as f64, r.update)
+            .unwrap();
+    }
+    let folded = h.accepted();
+    let (params, stats) = h.finish(head).unwrap();
+    if let Some(p) = params {
+        *head = p;
+    }
+    (folded, stats.tier_upload_bytes)
+}
+
+/// Gather one real cohort's decoded reports, then fold them flat and
+/// through 8 edges — the end-to-end twin of the `hierarchy` unit pin:
+/// the bits must match on reports a live fleet actually produced.
+fn parity_guard() {
+    let n = 1_000;
+    let m = 64;
+    let mut workers: Vec<LiteWorker> = (0..n).map(|i| LiteWorker::new(i, SEED, comm())).collect();
+    let head = initial_params();
+    let frame = Frame::seal(FrameKind::Update, &encode_update(&ModelUpdate::Dense(head.clone())));
+    let (tx, rx) = mpsc::channel();
+    let mut sample_rng = Rng::new(SEED ^ 0xC0807);
+    let cohort: Vec<usize> = sample_rng
+        .permutation(n)
+        .into_iter()
+        .take(m)
+        .map(|i| i as usize)
+        .collect();
+    for &wid in &cohort {
+        workers[wid]
+            .submit(WorkerTask {
+                round: 0,
+                version: 1,
+                frame: frame.clone(),
+                local_steps: 2,
+                slowdown: 1.0,
+                sleep: false,
+                reply: tx.clone(),
+            })
+            .unwrap();
+    }
+    drop(tx);
+    let mut reports = Vec::new();
+    while let Ok((_, f)) = rx.recv() {
+        let (_, payload) = f.open().unwrap();
+        reports.push(WorkerReport::decode(payload).unwrap());
+    }
+    assert_eq!(reports.len(), m);
+    let fold = |g: usize| {
+        let mut h = Hierarchy::new(CommMode::Pruned, n, g);
+        for r in &reports {
+            h.accept(r.base_version, r.worker_id, r.examples as f64, r.update.clone())
+                .unwrap();
+        }
+        h.finish(&head).unwrap().0.unwrap()
+    };
+    assert_eq!(fold(1), fold(8), "two-tier fold diverged from flat on live reports");
+    println!("parity guard: 8-edge fold of {m} live reports == flat fold, bit for bit");
+}
+
+/// Merge this bench's rows into `BENCH_runtime.json`. `runtime_hotpath`
+/// owns the file when artifacts exist (it rewrites it wholesale and runs
+/// first); this bench appends — replacing any of its own rows from a
+/// prior run — so both sets survive locally, and in artifact-less CI the
+/// file still exists for upload.
+fn save_merged(path: &std::path::Path, title: &str, rows: &[Vec<String>]) -> anyhow::Result<()> {
+    let fresh_rows: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            Json::Obj(
+                HEADERS
+                    .iter()
+                    .map(|h| h.to_string())
+                    .zip(r.iter().map(|c| Json::Str(c.clone())))
+                    .collect(),
+            )
+        })
+        .collect();
+    let merged = match std::fs::read_to_string(path).ok().and_then(|t| Json::parse(&t).ok()) {
+        Some(existing) => {
+            let mut rows: Vec<Json> = existing
+                .get("rows")
+                .and_then(Json::as_arr)
+                .unwrap_or(&[])
+                .iter()
+                .filter(|row| {
+                    !row.get("op")
+                        .and_then(Json::as_str)
+                        .is_some_and(|op| op.starts_with("fleet "))
+                })
+                .cloned()
+                .collect();
+            rows.extend(fresh_rows);
+            let mut obj = std::collections::BTreeMap::new();
+            obj.insert(
+                "title".to_string(),
+                existing.get("title").cloned().unwrap_or(Json::Str(title.to_string())),
+            );
+            obj.insert(
+                "headers".to_string(),
+                arr(HEADERS.iter().map(|h| Json::Str(h.to_string()))),
+            );
+            obj.insert("rows".to_string(), arr(rows));
+            Json::Obj(obj)
+        }
+        None => {
+            let mut obj = std::collections::BTreeMap::new();
+            obj.insert("title".to_string(), Json::Str(title.to_string()));
+            obj.insert(
+                "headers".to_string(),
+                arr(HEADERS.iter().map(|h| Json::Str(h.to_string()))),
+            );
+            obj.insert("rows".to_string(), arr(fresh_rows));
+            Json::Obj(obj)
+        }
+    };
+    efficientgrad::util::fs::atomic_write(path, format!("{merged}\n").as_bytes())
+}
+
+fn main() {
+    let short = short_mode();
+    let rounds = if short { 2 } else { 5 };
+    let title = "fleet scale (cohort-sampled rounds over LiteWorkers, flat vs two-tier)";
+    let mut rep = Report::new(title, &HEADERS);
+    let mut json_rows: Vec<Vec<String>> = Vec::new();
+    let mut emit = |rep: &mut Report, rows: &mut Vec<Vec<String>>, row: Vec<String>| {
+        rep.row(row.clone());
+        rows.push(row);
+    };
+
+    parity_guard();
+
+    // -- cohort-sampled rounds at fleet scale --
+    for &n in &[1_000usize, 10_000, 100_000] {
+        let tiers: &[usize] = if n == 100_000 { &[1, 16] } else { &[1] };
+        for &g in tiers {
+            let mut workers: Vec<LiteWorker> =
+                (0..n).map(|i| LiteWorker::new(i, SEED, comm())).collect();
+            let mut head = initial_params();
+            let mut sample_rng = Rng::new(SEED ^ 0xC0807);
+            let m = 256.min(n / 2);
+            let mut round = 0usize;
+            let mut tier_bytes = 0u64;
+            let s = bench(
+                &format!("fleet round: N={n} m={m} g={g}"),
+                0,
+                rounds,
+                Duration::from_secs(60),
+                || {
+                    let (folded, tb) =
+                        fleet_round(&mut workers, &mut head, round, &mut sample_rng, m, g);
+                    assert_eq!(folded, m, "round folded {folded} of {m} cohort reports");
+                    round += 1;
+                    tier_bytes += tb;
+                },
+            );
+            assert!(head[0].data().iter().all(|v| v.is_finite()));
+            if g > 1 {
+                assert!(tier_bytes > 0, "two-tier rounds must price edge uplinks");
+            }
+            // the memory-bound claim: live O(model) replicas are the
+            // sampled set, not the fleet
+            let live = workers.iter().filter(|w| w.synced()).count();
+            assert!(
+                live <= round * m,
+                "{live} live replicas exceeds the {round}x{m} sampled bound"
+            );
+            if n == 100_000 {
+                assert!(live * 10 < n, "live set {live} not « fleet {n}");
+            }
+            emit(
+                &mut rep,
+                &mut json_rows,
+                vec![
+                    format!("fleet round: N={n} m={m} g={g}"),
+                    fmt_ns(s.mean_ns),
+                    fmt_ns(s.p50_ns),
+                    fmt_ns(s.p95_ns),
+                    format!("{:.2} rounds/s", s.throughput(1.0)),
+                    format!("{} live ({} B)", live, live * P * 4),
+                ],
+            );
+            println!(
+                "fleet N={n} m={m} g={g}: {:.2} rounds/s, {live} live replicas after {round} rounds",
+                s.throughput(1.0)
+            );
+        }
+    }
+
+    // -- aggregator throughput: accept+finish over one cohort's reports,
+    //    flat vs two-tier (same decoded updates each iteration) --
+    {
+        let n = 10_000;
+        let m = 256;
+        let mut workers: Vec<LiteWorker> =
+            (0..n).map(|i| LiteWorker::new(i, SEED, comm())).collect();
+        let head = initial_params();
+        let frame =
+            Frame::seal(FrameKind::Update, &encode_update(&ModelUpdate::Dense(head.clone())));
+        let (tx, rx) = mpsc::channel();
+        for wid in 0..m {
+            workers[wid]
+                .submit(WorkerTask {
+                    round: 0,
+                    version: 1,
+                    frame: frame.clone(),
+                    local_steps: 2,
+                    slowdown: 1.0,
+                    sleep: false,
+                    reply: tx.clone(),
+                })
+                .unwrap();
+        }
+        drop(tx);
+        let mut reports = Vec::new();
+        while let Ok((_, f)) = rx.recv() {
+            reports.push(WorkerReport::decode(f.open().unwrap().1).unwrap());
+        }
+        assert_eq!(reports.len(), m);
+        let iters = if short { 3 } else { 10 };
+        for g in [1usize, 16] {
+            let s = bench(
+                &format!("fleet agg throughput: m={m} g={g}"),
+                1,
+                iters,
+                Duration::from_secs(30),
+                || {
+                    let mut h = Hierarchy::new(CommMode::Pruned, n, g);
+                    for r in &reports {
+                        h.accept(r.base_version, r.worker_id, r.examples as f64, r.update.clone())
+                            .unwrap();
+                    }
+                    let (params, _) = h.finish(&head).unwrap();
+                    std::hint::black_box(params);
+                },
+            );
+            emit(
+                &mut rep,
+                &mut json_rows,
+                vec![
+                    format!("fleet agg throughput: m={m} g={g}"),
+                    fmt_ns(s.mean_ns),
+                    fmt_ns(s.p50_ns),
+                    fmt_ns(s.p95_ns),
+                    format!("{:.0} reports/s", s.throughput(m as f64)),
+                    "-".into(),
+                ],
+            );
+            println!("agg throughput m={m} g={g}: {:.0} reports/s", s.throughput(m as f64));
+        }
+    }
+
+    // -- Arc-shared dense resync: the whole fleet lands on one version
+    //    with ONE params allocation --
+    {
+        let n = 100_000;
+        let mut workers: Vec<LiteWorker> =
+            (0..n).map(|i| LiteWorker::new(i, SEED, comm())).collect();
+        let cache = std::sync::Arc::new(initial_params());
+        let s = bench(
+            &format!("fleet resync (shared Arc): N={n}"),
+            1,
+            if short { 3 } else { 8 },
+            Duration::from_secs(30),
+            || {
+                for w in workers.iter_mut() {
+                    w.resync_shared(cache.clone());
+                }
+            },
+        );
+        assert_eq!(std::sync::Arc::strong_count(&cache), n + 1, "resync copied params");
+        assert!(workers.iter().all(LiteWorker::synced));
+        emit(
+            &mut rep,
+            &mut json_rows,
+            vec![
+                format!("fleet resync (shared Arc): N={n}"),
+                fmt_ns(s.mean_ns),
+                fmt_ns(s.p50_ns),
+                fmt_ns(s.p95_ns),
+                format!("{:.2e} workers/s", s.throughput(n as f64)),
+                format!("{} B shared", P * 4),
+            ],
+        );
+        println!("shared resync: {n} workers on one {}-byte replica", P * 4);
+    }
+
+    rep.print();
+    save_merged(std::path::Path::new("BENCH_runtime.json"), title, &json_rows).unwrap();
+    println!("json -> BENCH_runtime.json (merged)");
+}

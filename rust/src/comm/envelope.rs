@@ -542,6 +542,98 @@ mod tests {
     }
 
     #[test]
+    fn prop_multi_byte_damage_never_panics_or_silently_accepts() {
+        // the single-flip test above is exhaustive; this is the seeded
+        // random extension to MULTI-byte damage: any number of random
+        // xor-flips anywhere in a sealed frame must either be rejected
+        // or — when the flips happen to cancel exactly — open to the
+        // identical (kind, payload). "Accepted but different" is the one
+        // forbidden outcome.
+        use crate::testing::{default_cases, for_all, UsizeIn};
+        let kinds = [FrameKind::Update, FrameKind::Report, FrameKind::Nack];
+        for_all(0xE57A11, &UsizeIn(0, u32::MAX as usize), default_cases(), |&s| {
+            let mut rng = crate::util::rng::Rng::new(s as u64 ^ 0xDA4A6E);
+            let len = rng.below(300) as usize;
+            let mut payload = vec![0u8; len];
+            for b in payload.iter_mut() {
+                *b = rng.next_u64() as u8;
+            }
+            let kind = kinds[rng.below(3) as usize];
+            let clean = Frame::seal(kind, &payload);
+            let mut f = clean.clone();
+            let flips = 1 + rng.below(8);
+            for _ in 0..flips {
+                let pos = rng.below(f.as_bytes().len() as u64) as usize;
+                let mask = (rng.next_u64() as u8) | 1; // never a no-op flip
+                f.bytes_mut()[pos] ^= mask;
+            }
+            let net_change = f.as_bytes() != clean.as_bytes();
+            match f.open() {
+                Err(_) => Ok(()),
+                Ok((k, p)) if k == kind && p == &payload[..] && !net_change => Ok(()),
+                Ok((k, p)) => Err(format!(
+                    "damaged frame accepted: kind {k:?}, {} payload bytes (was {kind:?}, {len})",
+                    p.len()
+                )),
+            }
+        });
+    }
+
+    #[test]
+    fn prop_random_truncation_is_always_rejected() {
+        // any strict prefix of a sealed frame must fail open() — the
+        // length field (or the header-size floor) catches every cut
+        use crate::testing::{default_cases, for_all, UsizeIn};
+        for_all(0x7C47, &UsizeIn(0, u32::MAX as usize), default_cases(), |&s| {
+            let mut rng = crate::util::rng::Rng::new(s as u64 ^ 0x7C47);
+            let len = rng.below(200) as usize;
+            let mut payload = vec![0u8; len];
+            for b in payload.iter_mut() {
+                *b = rng.next_u64() as u8;
+            }
+            let f = Frame::seal(FrameKind::Report, &payload);
+            let keep = rng.below(f.as_bytes().len() as u64) as usize;
+            let mut t = f.clone();
+            t.bytes_mut().truncate(keep);
+            match t.open() {
+                Err(_) => Ok(()),
+                Ok(_) => Err(format!("truncation to {keep} bytes accepted")),
+            }
+        });
+    }
+
+    #[test]
+    fn prop_decode_update_never_panics() {
+        // decode_update sits *inside* the seal, so it sees only
+        // checksum-clean bytes in production — but the decoder itself
+        // must still be total: random garbage and randomly mutated valid
+        // encodings return Err (or a valid value), never panic and never
+        // balloon allocation on forged lengths
+        use crate::testing::{default_cases, for_all, UsizeIn};
+        for_all(0xDEC0DE, &UsizeIn(0, u32::MAX as usize), default_cases(), |&s| {
+            let mut rng = crate::util::rng::Rng::new(s as u64 ^ 0xDEC0DE);
+            // pure garbage
+            let len = rng.below(400) as usize;
+            let mut bytes = vec![0u8; len];
+            for b in bytes.iter_mut() {
+                *b = rng.next_u64() as u8;
+            }
+            let _ = decode_update(&bytes);
+            // a valid encoding with random byte damage
+            let updates = sample_updates();
+            let mut enc = encode_update(&updates[rng.below(updates.len() as u64) as usize]);
+            if !enc.is_empty() {
+                for _ in 0..=rng.below(6) {
+                    let pos = rng.below(enc.len() as u64) as usize;
+                    enc[pos] ^= (rng.next_u64() as u8) | 1;
+                }
+            }
+            let _ = decode_update(&enc);
+            Ok(())
+        });
+    }
+
+    #[test]
     fn f32_bits_survive_the_roundtrip() {
         let u = ModelUpdate::Dense(vec![Tensor::new(
             vec![3],

@@ -136,6 +136,31 @@ pub fn chained_model_bytes(link_bytes: impl Iterator<Item = u64>) -> u64 {
     CHAIN_HEADER_BYTES + link_bytes.sum::<u64>()
 }
 
+/// Edge→root uplink bytes of one two-tier round: each *active* edge
+/// aggregator (one that heard from ≥ 1 worker) seals ONE pre-folded
+/// sparse delta whose support is the union of its cohort slice's
+/// survivors, so the tier costs
+/// `Σ_e (sparse_model_bytes(nnz_e, T) + 24)` — O(nnz) per tier plus the
+/// flat 24 B frame envelope per edge, never O(P·edges)
+/// (`docs/TRANSFER_MODEL.md` §Fleet tier). Silent edges ship nothing
+/// and cost nothing.
+///
+/// ```
+/// use efficientgrad::comm::wire::{fleet_tier_bytes, sparse_model_bytes};
+/// use efficientgrad::comm::envelope::FRAME_HEADER_BYTES;
+/// // two active edges over a 3-tensor model, 50 and 20 union-survivors
+/// assert_eq!(fleet_tier_bytes(3, [50u64, 20].into_iter()),
+///            sparse_model_bytes(50, 3) + sparse_model_bytes(20, 3)
+///                + 2 * FRAME_HEADER_BYTES);
+/// // a round where every edge was silent ships no tier traffic at all
+/// assert_eq!(fleet_tier_bytes(3, std::iter::empty()), 0);
+/// ```
+pub fn fleet_tier_bytes(n_tensors: u64, edge_nnz: impl Iterator<Item = u64>) -> u64 {
+    edge_nnz
+        .map(|nnz| sparse_model_bytes(nnz, n_tensors) + crate::comm::envelope::FRAME_HEADER_BYTES)
+        .sum()
+}
+
 /// Pruned-delta survivors of one tensor: `u32` element offsets (sorted,
 /// ascending — encode walks the buffer in order) + exact `f32` values.
 #[derive(Clone, Debug, PartialEq)]

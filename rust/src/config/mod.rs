@@ -443,6 +443,24 @@ pub struct FedConfig {
     /// `4·P` snapshot. 0 (the default) keeps dense resyncs — today's
     /// behavior. Only meaningful for the compressed comm modes.
     pub max_chain: usize,
+    /// per-round cohort size (`federated.sample_m` / `--sample-m`): each
+    /// round the leader draws `sample_m` of the `workers` registered
+    /// workers from a dedicated seeded RNG stream and dispatches only to
+    /// them; the rest sit the round out and resync later (chained when
+    /// `k ≤ max_chain`, dense otherwise). 0 (the default) — and
+    /// `sample_m = workers` — disables sampling: every worker is
+    /// dispatched every round, bit-for-bit today's behavior.
+    pub sample_m: usize,
+    /// edge aggregator count (`federated.aggregators` / `--aggregators`):
+    /// `> 1` folds each round in two tiers — workers are statically
+    /// partitioned across `aggregators` edge aggregators, each edge
+    /// pre-folds its slice into one sparse delta uplinked to the root
+    /// (O(nnz) per tier), and the root folds `aggregators`-wide. The
+    /// fold result is bit-identical to the flat path (the root merges
+    /// the edges' slots and runs the one global (version, worker)-ordered
+    /// fold); only the wire/ledger shape changes. 0 or 1 (the default)
+    /// keeps the flat single-aggregator path.
+    pub aggregators: usize,
     /// deterministic fault injection (`federated.faults` / `--faults`,
     /// a [`crate::faults::FaultPlan`] spec string such as
     /// `"corrupt=0.05,crash=0.02,seed=7"`). `None` — and a plan whose
@@ -484,6 +502,8 @@ impl Default for FedConfig {
             // configured; inert at the default quorum = 1.0
             pipeline_depth: 2,
             max_chain: 0,
+            sample_m: 0,
+            aggregators: 0,
             faults: None,
             run_store: None,
             resume: false,
@@ -524,6 +544,8 @@ impl FedConfig {
             staleness_decay: t.f64_or("federated.staleness_decay", d.staleness_decay),
             pipeline_depth: t.usize_or("federated.pipeline_depth", d.pipeline_depth),
             max_chain: t.usize_or("federated.max_chain", d.max_chain),
+            sample_m: t.usize_or("federated.sample_m", d.sample_m),
+            aggregators: t.usize_or("federated.aggregators", d.aggregators),
             faults: t
                 .get("federated.faults")
                 .and_then(Value::as_str)
@@ -555,6 +577,12 @@ impl FedConfig {
         }
         if self.pipeline_depth == 0 {
             bail!("pipeline_depth must be at least 1");
+        }
+        if self.sample_m > self.workers {
+            bail!("sample_m {} exceeds workers {}", self.sample_m, self.workers);
+        }
+        if self.aggregators > self.workers {
+            bail!("aggregators {} exceeds workers {}", self.aggregators, self.workers);
         }
         if self.resume && self.run_store.is_none() {
             bail!("federated.resume needs federated.run_store (nowhere to resume from)");
@@ -731,6 +759,29 @@ mod tests {
         }
         assert_eq!(CommPruner::parse("top-k").unwrap(), CommPruner::TopK);
         assert_eq!(CommPruner::TopK.as_str(), "topk");
+    }
+
+    #[test]
+    fn sampling_and_hierarchy_parsing() {
+        // unset: no cohort sampling, flat single-tier aggregation
+        let c = FedConfig::from_table(&Table::default()).unwrap();
+        assert_eq!(c.sample_m, 0);
+        assert_eq!(c.aggregators, 0);
+        let t = Table::parse("[federated]\nworkers = 16\nsample_m = 4\naggregators = 2").unwrap();
+        let c = FedConfig::from_table(&t).unwrap();
+        assert_eq!(c.sample_m, 4);
+        assert_eq!(c.aggregators, 2);
+        // a cohort (or edge tier) wider than the fleet is a config
+        // error, not a silent clamp
+        for bad in [
+            "[federated]\nworkers = 4\nsample_m = 5",
+            "[federated]\nworkers = 4\naggregators = 5",
+        ] {
+            assert!(
+                FedConfig::from_table(&Table::parse(bad).unwrap()).is_err(),
+                "accepted {bad:?}"
+            );
+        }
     }
 
     #[test]

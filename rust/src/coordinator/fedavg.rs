@@ -237,6 +237,97 @@ impl StreamingAggregator {
         Ok(())
     }
 
+    /// Merge another aggregator's decoded slots into this one — the
+    /// root tier's half of the two-tier fold. The edges did the
+    /// per-report decode work ([`StreamingAggregator::accept`]); the
+    /// root absorbs their slots and runs the ONE global
+    /// (version, worker-id)-ordered fold, so a two-tier round's
+    /// aggregate is bit-identical to the flat path by construction —
+    /// the floats are summed in exactly the same order, regardless of
+    /// how workers were partitioned across edges.
+    pub fn absorb(&mut self, other: StreamingAggregator) -> Result<()> {
+        if other.comm != self.comm {
+            bail!("absorbing an edge aggregator in {:?} mode into {:?}", other.comm, self.comm);
+        }
+        if other.workers != self.workers {
+            bail!(
+                "absorbing an edge sized for {} workers into one sized for {}",
+                other.workers,
+                self.workers
+            );
+        }
+        for (key, slot) in other.slots {
+            if self.slots.contains_key(&key) {
+                bail!("worker {} reported twice against version {} (edge overlap)", key.1, key.0);
+            }
+            self.slots.insert(key, slot);
+        }
+        Ok(())
+    }
+
+    /// The edge tier's wire artifact: this aggregator's slots folded
+    /// into ONE update — the weighted average of its cohort slice — plus
+    /// the total FedAvg weight the root needs to re-weight it. In the
+    /// delta modes the artifact is the *sparse* delta `folded − reference`
+    /// (support = the union of the slice's survivors, O(nnz) on the
+    /// wire); in dense mode it is a full snapshot. `Ok(None)` when the
+    /// edge heard from nobody this round.
+    ///
+    /// This is what an edge uplinks to the root (`RoundReport`'s tier
+    /// ledger prices exactly these bytes). The root's *fold* does not
+    /// consume it — it absorbs the edge's slots instead
+    /// ([`StreamingAggregator::absorb`]), which is what keeps two-tier
+    /// rounds bit-identical to flat ones; re-folding the pre-averaged
+    /// artifacts would reorder the f64 sums.
+    pub fn prefold(&self, reference: &[Tensor]) -> Result<Option<(f64, ModelUpdate)>> {
+        if self.slots.is_empty() {
+            return Ok(None);
+        }
+        let mut weights = Vec::with_capacity(self.slots.len());
+        let mut ups = Vec::with_capacity(self.slots.len());
+        for (w, u) in self.slots.values() {
+            weights.push(*w);
+            ups.push(u);
+        }
+        let total: f64 = weights.iter().sum();
+        match self.comm {
+            CommMode::Dense => {
+                let dense: Vec<&Vec<Tensor>> = ups
+                    .iter()
+                    .map(|u| match u {
+                        ModelUpdate::Dense(p) => p,
+                        _ => unreachable!("accept() validated the mode"),
+                    })
+                    .collect();
+                Ok(Some((total, ModelUpdate::Dense(weighted_fedavg(&dense, &weights)?))))
+            }
+            _ => {
+                let deltas: Vec<&Vec<TensorUpdate>> = ups
+                    .iter()
+                    .map(|u| match u {
+                        ModelUpdate::Delta(d) => d,
+                        _ => unreachable!("accept() validated the mode"),
+                    })
+                    .collect();
+                let folded = weighted_sparse_fedavg(reference, &deltas, &weights)?;
+                let delta = folded
+                    .iter()
+                    .zip(reference)
+                    .map(|(f, r)| {
+                        let diff: Vec<f32> = f
+                            .data()
+                            .iter()
+                            .zip(r.data())
+                            .map(|(&a, &b)| a - b)
+                            .collect();
+                        TensorUpdate::Sparse(SparseTensor::encode(&diff))
+                    })
+                    .collect();
+                Ok(Some((total, ModelUpdate::Delta(delta))))
+            }
+        }
+    }
+
     /// Fold in (version, worker-id) order. `reference` is the base the
     /// delta modes rebase on (ignored in dense mode) — the *current*
     /// version's params; stale deltas fold onto it too, which is the
@@ -602,5 +693,119 @@ mod tests {
         // empty fold: no reports arrived → None, the global model stands
         let empty = StreamingAggregator::new(CommMode::Pruned, 2);
         assert!(empty.finish(&base).unwrap().is_none());
+    }
+
+    #[test]
+    fn absorbed_edges_fold_bit_identical_to_flat() {
+        // the two-tier parity claim at the aggregator level: however the
+        // workers are partitioned across edge aggregators, absorbing the
+        // edges into a root and folding produces EXACTLY the flat fold's
+        // bits — the slots reunite under the one global BTreeMap order
+        let n = 41;
+        let base: Vec<Tensor> = vec![t(&(0..n).map(|i| (i as f32).sin()).collect::<Vec<_>>())];
+        let mut rng = Rng::new(9);
+        let workers = 6usize;
+        let mut pruned: Vec<Vec<f32>> = Vec::new();
+        for _ in 0..workers {
+            let mut d = vec![0f32; n];
+            rng.fill_normal(&mut d, 0.1);
+            for (i, v) in d.iter_mut().enumerate() {
+                if i % 2 == 0 {
+                    *v = 0.0;
+                }
+            }
+            pruned.push(d);
+        }
+        let weights: Vec<f64> = (1..=workers).map(|w| w as f64).collect();
+        for mode in [CommMode::Pruned, CommMode::Sign] {
+            let mk = |id: usize| delta_update(&pruned[id], mode == CommMode::Sign);
+            let mut flat = StreamingAggregator::new(mode, workers);
+            for id in 0..workers {
+                // worker 5's report is one version stale, like a quorum round
+                let v = if id == 5 { 6 } else { 7 };
+                flat.accept(v, id, weights[id], mk(id)).unwrap();
+            }
+            let want = flat.finish(&base).unwrap().unwrap();
+            // three different partitions, including an uneven one
+            for partition in [vec![vec![0, 1, 2], vec![3, 4, 5]],
+                vec![vec![0, 3], vec![1, 4], vec![2, 5]],
+                vec![vec![0], vec![1, 2, 3, 4, 5]]]
+            {
+                let mut root = StreamingAggregator::new(mode, workers);
+                for edge_ids in &partition {
+                    let mut edge = StreamingAggregator::new(mode, workers);
+                    for &id in edge_ids {
+                        let v = if id == 5 { 6 } else { 7 };
+                        edge.accept(v, id, weights[id], mk(id)).unwrap();
+                    }
+                    root.absorb(edge).unwrap();
+                }
+                assert_eq!(root.accepted(), workers);
+                let got = root.finish(&base).unwrap().unwrap();
+                assert_eq!(want, got, "{mode:?}: partition {partition:?} changed the fold");
+            }
+        }
+    }
+
+    #[test]
+    fn absorb_validates_protocol() {
+        let mk = || delta_update(&[1.0, 0.0], false);
+        // overlapping slots: the same (version, worker) on two edges is
+        // a routing bug, not a mergeable state
+        let mut a = StreamingAggregator::new(CommMode::Pruned, 2);
+        a.accept(0, 0, 1.0, mk()).unwrap();
+        let mut b = StreamingAggregator::new(CommMode::Pruned, 2);
+        b.accept(0, 0, 1.0, mk()).unwrap();
+        assert!(a.absorb(b).is_err());
+        // comm-mode and fleet-size mismatches refuse
+        let mut a = StreamingAggregator::new(CommMode::Pruned, 2);
+        assert!(a.absorb(StreamingAggregator::new(CommMode::Sign, 2)).is_err());
+        assert!(a.absorb(StreamingAggregator::new(CommMode::Pruned, 3)).is_err());
+        // disjoint slots merge
+        let mut b = StreamingAggregator::new(CommMode::Pruned, 2);
+        b.accept(0, 1, 1.0, mk()).unwrap();
+        a.accept(0, 0, 1.0, mk()).unwrap();
+        a.absorb(b).unwrap();
+        assert_eq!(a.accepted(), 2);
+    }
+
+    #[test]
+    fn prefold_is_the_edges_weighted_average() {
+        // the edge wire artifact: prefold's sparse delta applied to the
+        // reference must equal the edge's own finish() fold, its support
+        // the union of the slice's survivors
+        let base = vec![t(&[1.0, -1.0, 0.5, 0.0, 2.0])];
+        let d0: &[f32] = &[0.5, 0.0, -0.25, 0.0, 0.0];
+        let d1: &[f32] = &[0.0, 0.0, 1.0, 0.0, -0.5];
+        let mut edge = StreamingAggregator::new(CommMode::Pruned, 2);
+        edge.accept(3, 0, 2.0, delta_update(d0, false)).unwrap();
+        edge.accept(3, 1, 6.0, delta_update(d1, false)).unwrap();
+        let (total, artifact) = edge.prefold(&base).unwrap().unwrap();
+        assert_eq!(total, 8.0);
+        let ModelUpdate::Delta(tus) = &artifact else {
+            panic!("delta-mode prefold must ship a delta, got {artifact:?}");
+        };
+        let TensorUpdate::Sparse(sp) = &tus[0] else {
+            panic!("prefold artifact must be sparse on the wire");
+        };
+        // support ⊆ union of survivors (coords 0, 2, 4) — never index 1 or 3
+        assert!(sp.indices.iter().all(|&i| [0, 2, 4].contains(&(i as usize))));
+        let mut rebuilt = base.clone();
+        artifact.apply(&mut rebuilt).unwrap();
+        let want = edge.finish(&base).unwrap().unwrap();
+        for (a, b) in want[0].data().iter().zip(rebuilt[0].data()) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+        // an edge that heard from nobody ships nothing
+        let empty = StreamingAggregator::new(CommMode::Pruned, 2);
+        assert!(empty.prefold(&base).unwrap().is_none());
+        // dense mode prefolds a full snapshot
+        let mut dense = StreamingAggregator::new(CommMode::Dense, 2);
+        dense
+            .accept(0, 0, 1.0, ModelUpdate::Dense(vec![t(&[2.0, 4.0])]))
+            .unwrap();
+        let (w, up) = dense.prefold(&[]).unwrap().unwrap();
+        assert_eq!(w, 1.0);
+        assert!(matches!(up, ModelUpdate::Dense(_)));
     }
 }

@@ -1,0 +1,252 @@
+//! Two-tier aggregation — the fleet tier between workers and the root.
+//!
+//! A flat round funnels every report into one [`StreamingAggregator`];
+//! past a few thousand workers that single funnel is the bottleneck (and
+//! on a real deployment, a single ingest point). `federated.aggregators`
+//! (`--aggregators`) > 1 splits the fleet into that many **edge
+//! aggregators**: each worker's report lands at its statically assigned
+//! edge ([`Hierarchy::edge_of`] — contiguous worker-id slices, fixed for
+//! the whole run so late reports and duplicates route consistently), the
+//! edge does the per-report decode work, and at fold time each active
+//! edge uplinks ONE pre-folded sparse delta to the root — the union of
+//! its slice's survivors, O(nnz) per tier
+//! (`docs/TRANSFER_MODEL.md` §Fleet tier), never O(P·edges). The root
+//! fold is `aggregators`-wide instead of fleet-wide.
+//!
+//! **Bit parity.** The acceptance pin demands a two-tier round be
+//! bit-identical to the flat path. Re-folding the edges' pre-averaged
+//! artifacts would not be: f64 addition is non-associative, so grouping
+//! the sum by edge changes low bits. The root therefore folds by
+//! **absorbing the edges' decoded slots**
+//! ([`StreamingAggregator::absorb`]) and running the single global
+//! (version, worker-id)-ordered fold — the same floats in the same
+//! order as flat, bit-identical by construction, for ANY partition. The
+//! pre-folded artifact is still computed and sealed for real — it is
+//! the tier's *wire* message, and [`TierStats`] prices exactly those
+//! sealed bytes — mirroring the repo's standing simulation contract:
+//! structs travel in-process, `wire_bytes()` is the cost model.
+
+use anyhow::Result;
+
+use crate::comm::envelope::{encode_update, Frame, FrameKind};
+use crate::comm::ModelUpdate;
+use crate::config::CommMode;
+use crate::coordinator::fedavg::StreamingAggregator;
+use crate::tensor::Tensor;
+
+/// Per-round ledger of the edge→root tier (all zero on flat rounds).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TierStats {
+    /// edges that heard from ≥ 1 worker and uplinked a pre-folded delta
+    pub active_edges: usize,
+    /// sealed wire bytes of those uplinks (payload + 24 B envelope each),
+    /// following [`crate::comm::wire::fleet_tier_bytes`]
+    pub tier_upload_bytes: u64,
+}
+
+/// The leader's aggregation front-end: `aggregators` edge
+/// [`StreamingAggregator`]s plus the root that absorbs them. With 0 or 1
+/// edges this *is* the flat path — one aggregator, no tier traffic, the
+/// exact pre-fleet behavior.
+pub struct Hierarchy {
+    comm: CommMode,
+    workers: usize,
+    edges: Vec<StreamingAggregator>,
+}
+
+impl Hierarchy {
+    /// `aggregators` is clamped to `[1, workers]` (0 means flat).
+    pub fn new(comm: CommMode, workers: usize, aggregators: usize) -> Self {
+        let g = aggregators.clamp(1, workers.max(1));
+        Self {
+            comm,
+            workers,
+            edges: (0..g).map(|_| StreamingAggregator::new(comm, workers)).collect(),
+        }
+    }
+
+    /// Number of edge aggregators (1 = flat).
+    pub fn edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// The static partition: worker `wid` always reports to edge
+    /// `wid·g/n` — contiguous, near-equal slices, independent of which
+    /// cohort was sampled this round, so a straggler's late report from
+    /// two rounds ago still lands at the same edge.
+    pub fn edge_of(&self, wid: usize) -> usize {
+        (wid * self.edges.len()) / self.workers.max(1)
+    }
+
+    /// Route one report to its edge and decode it there (arrival time) —
+    /// same validation, same error surface as the flat
+    /// [`StreamingAggregator::accept`].
+    pub fn accept(
+        &mut self,
+        version: u64,
+        worker_id: usize,
+        weight: f64,
+        update: ModelUpdate,
+    ) -> Result<()> {
+        if worker_id >= self.workers {
+            anyhow::bail!("report from unknown worker {worker_id}");
+        }
+        let e = self.edge_of(worker_id);
+        self.edges[e].accept(version, worker_id, weight, update)
+    }
+
+    /// Reports decoded so far, across all edges.
+    pub fn accepted(&self) -> usize {
+        self.edges.iter().map(StreamingAggregator::accepted).sum()
+    }
+
+    /// Close the round. On a two-tier round (> 1 edge), each active edge
+    /// first seals its pre-folded uplink artifact — the real bytes the
+    /// [`TierStats`] ledger prices — then the root absorbs every edge's
+    /// slots and runs the one global fold. `None` params = fleet-wide
+    /// outage, the global model stands (and no edge uplinked anything).
+    pub fn finish(self, reference: &[Tensor]) -> Result<(Option<Vec<Tensor>>, TierStats)> {
+        let mut stats = TierStats::default();
+        let two_tier = self.edges.len() > 1;
+        let mut root = StreamingAggregator::new(self.comm, self.workers);
+        for edge in self.edges {
+            if two_tier {
+                if let Some((_weight, artifact)) = edge.prefold(reference)? {
+                    let frame = Frame::seal(FrameKind::Report, &encode_update(&artifact));
+                    stats.active_edges += 1;
+                    stats.tier_upload_bytes += frame.wire_bytes();
+                }
+            }
+            root.absorb(edge)?;
+        }
+        Ok((root.finish(reference)?, stats))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::wire::{fleet_tier_bytes, SparseTensor, TensorUpdate};
+    use crate::util::rng::Rng;
+
+    fn t(v: &[f32]) -> Tensor {
+        Tensor::new(vec![v.len()], v.to_vec())
+    }
+
+    fn delta(pruned: &[f32]) -> ModelUpdate {
+        ModelUpdate::Delta(vec![TensorUpdate::Sparse(SparseTensor::encode(pruned))])
+    }
+
+    /// Deterministic per-worker pruned deltas over `n` coords.
+    fn fleet_deltas(workers: usize, n: usize) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(21);
+        (0..workers)
+            .map(|_| {
+                let mut d = vec![0f32; n];
+                rng.fill_normal(&mut d, 0.1);
+                for (i, v) in d.iter_mut().enumerate() {
+                    if i % 3 != 0 {
+                        *v = 0.0;
+                    }
+                }
+                d
+            })
+            .collect()
+    }
+
+    #[test]
+    fn edge_assignment_is_a_static_contiguous_partition() {
+        let h = Hierarchy::new(CommMode::Pruned, 10, 3);
+        assert_eq!(h.edges(), 3);
+        // every worker maps to exactly one in-range edge, non-decreasing
+        // in wid (contiguous slices), and every edge is non-empty
+        let mut seen = vec![0usize; 3];
+        let mut last = 0;
+        for wid in 0..10 {
+            let e = h.edge_of(wid);
+            assert!(e < 3);
+            assert!(e >= last, "partition not contiguous at wid {wid}");
+            last = e;
+            seen[e] += 1;
+        }
+        assert!(seen.iter().all(|&c| c > 0), "empty edge in {seen:?}");
+        // degenerate shapes stay sane
+        assert_eq!(Hierarchy::new(CommMode::Pruned, 4, 0).edges(), 1);
+        assert_eq!(Hierarchy::new(CommMode::Pruned, 4, 9).edges(), 4);
+        assert_eq!(Hierarchy::new(CommMode::Pruned, 0, 0).edges(), 1);
+    }
+
+    #[test]
+    fn two_tier_fold_is_bit_identical_to_flat_for_any_edge_count() {
+        let workers = 12;
+        let n = 53;
+        let base = vec![t(&(0..n).map(|i| (i as f32 * 0.3).cos()).collect::<Vec<_>>())];
+        let deltas = fleet_deltas(workers, n);
+        let fold = |aggregators: usize| {
+            let mut h = Hierarchy::new(CommMode::Pruned, workers, aggregators);
+            for wid in 0..workers {
+                h.accept(4, wid, (wid + 1) as f64, delta(&deltas[wid])).unwrap();
+            }
+            h.finish(&base).unwrap()
+        };
+        let (flat, flat_stats) = fold(1);
+        let flat = flat.unwrap();
+        assert_eq!(flat_stats, TierStats::default(), "flat rounds ship no tier traffic");
+        for g in [2, 3, 5, 12] {
+            let (tiered, stats) = fold(g);
+            assert_eq!(flat, tiered.unwrap(), "{g} edges changed the fold bits");
+            assert_eq!(stats.active_edges, g);
+            assert!(stats.tier_upload_bytes > 0);
+        }
+    }
+
+    #[test]
+    fn tier_bytes_follow_the_documented_formula() {
+        let workers = 6;
+        let n = 40;
+        let base = vec![t(&vec![0.5f32; n])];
+        let deltas = fleet_deltas(workers, n);
+        let mut h = Hierarchy::new(CommMode::Pruned, workers, 3);
+        for wid in 0..workers {
+            h.accept(0, wid, 1.0, delta(&deltas[wid])).unwrap();
+        }
+        // predicted union-survivor count per edge: a coordinate is in an
+        // edge's artifact iff some slice member shipped it (weighted sums
+        // of same-sign-free normals never cancel to exact 0.0 here)
+        let per_edge_nnz: Vec<u64> = (0..3)
+            .map(|e| {
+                (0..n)
+                    .filter(|&i| {
+                        (0..workers)
+                            .any(|w| (w * 3) / workers == e && deltas[w][i] != 0.0)
+                    })
+                    .count() as u64
+            })
+            .collect();
+        let (_, stats) = h.finish(&base).unwrap();
+        assert_eq!(
+            stats.tier_upload_bytes,
+            fleet_tier_bytes(1, per_edge_nnz.into_iter()),
+            "tier ledger diverged from docs/TRANSFER_MODEL.md §Fleet tier"
+        );
+    }
+
+    #[test]
+    fn silent_edges_ship_nothing() {
+        let base = vec![t(&[0.0, 0.0, 0.0])];
+        // only edge 0's slice reports
+        let mut h = Hierarchy::new(CommMode::Pruned, 4, 2);
+        h.accept(0, 0, 1.0, delta(&[1.0, 0.0, 0.0])).unwrap();
+        let (params, stats) = h.finish(&base).unwrap();
+        assert!(params.is_some());
+        assert_eq!(stats.active_edges, 1);
+        // a fleet-wide outage folds nothing and prices nothing
+        let h = Hierarchy::new(CommMode::Pruned, 4, 2);
+        let (params, stats) = h.finish(&base).unwrap();
+        assert!(params.is_none());
+        assert_eq!(stats, TierStats::default());
+        // routing still validates worker ids
+        let mut h = Hierarchy::new(CommMode::Pruned, 4, 2);
+        assert!(h.accept(0, 7, 1.0, delta(&[1.0, 0.0, 0.0])).is_err());
+    }
+}

@@ -134,6 +134,7 @@
 
 pub mod evaluator;
 pub mod fedavg;
+pub mod hierarchy;
 pub mod runstore;
 pub mod versions;
 pub mod worker;
@@ -161,8 +162,11 @@ use crate::util::rng::Rng;
 
 pub use evaluator::{EvalOutcome, Evaluator};
 pub use fedavg::{fedavg, weighted_fedavg, weighted_sparse_fedavg, StreamingAggregator};
+pub use hierarchy::{Hierarchy, TierStats};
 pub use versions::{ModelVersion, VersionRing};
-pub use worker::{CommSetup, WorkerHandle, WorkerReport, WorkerSnapshot, WorkerTask};
+pub use worker::{
+    CommSetup, LiteWorker, Worker, WorkerHandle, WorkerReport, WorkerSnapshot, WorkerTask,
+};
 
 /// Outcome of one federated round.
 #[derive(Clone, Debug)]
@@ -226,6 +230,18 @@ pub struct RoundReport {
     /// `2 ..= max_chain` versions behind replaying the rounds they
     /// missed instead of paying a dense resync
     pub chained_downlinks: usize,
+    /// the sampled cohort this round dispatched to, ascending worker
+    /// ids, when cohort sampling is active (`0 < sample_m < workers`);
+    /// empty otherwise — every registered worker was eligible, today's
+    /// pre-fleet behavior
+    pub cohort: Vec<usize>,
+    /// edge aggregators the fold ran through (1 = the flat path)
+    pub aggregators: usize,
+    /// edge→root tier uplink bytes this round: each active edge's sealed
+    /// pre-folded sparse delta (`docs/TRANSFER_MODEL.md` §Fleet tier,
+    /// [`crate::comm::wire::fleet_tier_bytes`]). 0 on flat rounds —
+    /// there is no tier to cross
+    pub tier_upload_bytes: u64,
     /// straggler reports from earlier rounds folded into THIS round's
     /// FedAvg (quorum < 1.0 only; λ = 0 discards arrive-but-unfolded).
     /// Their wire bytes, device ledgers and loss/sparsity means land in
@@ -278,9 +294,10 @@ impl RoundReport {
     }
 
     /// Every network byte this round moved, both directions (payloads +
-    /// envelope overhead).
+    /// envelope overhead), including the edge→root tier's uplinks on
+    /// two-tier rounds.
     pub fn network_bytes(&self) -> u64 {
-        self.upload_bytes + self.download_bytes + self.envelope_bytes
+        self.upload_bytes + self.download_bytes + self.envelope_bytes + self.tier_upload_bytes
     }
 
     /// Simulated Joules of this round's *measured* device-bus traffic at
@@ -411,13 +428,15 @@ struct Gather {
     envelope_bytes: u64,
     download_bytes: u64,
     dense_downlinks: usize,
-    agg: StreamingAggregator,
+    /// the aggregation front-end: flat (1 edge) or two-tier — either
+    /// way, [`handle_frame`] routes reports through the same `accept`
+    agg: Hierarchy,
     meta: Vec<Option<ReportMeta>>,
     dropped: Vec<usize>,
 }
 
 impl Gather {
-    fn new(mode: CommMode, n_workers: usize) -> Self {
+    fn new(mode: CommMode, n_workers: usize, aggregators: usize) -> Self {
         Self {
             resolved: vec![false; n_workers],
             retried: vec![false; n_workers],
@@ -428,7 +447,7 @@ impl Gather {
             envelope_bytes: 0,
             download_bytes: 0,
             dense_downlinks: 0,
-            agg: StreamingAggregator::new(mode, n_workers),
+            agg: Hierarchy::new(mode, n_workers, aggregators),
             meta: vec![None; n_workers],
             dropped: Vec::new(),
         }
@@ -883,17 +902,21 @@ impl Leader {
             Vec::with_capacity(self.cfg.rounds.saturating_sub(start_round));
         // resumed streams continue exactly where the persisted run's
         // left off; fresh runs derive them from the seed as always
-        let (mut straggler_rng, mut dropout_rng, mut downlink_rng) =
+        let (mut straggler_rng, mut dropout_rng, mut downlink_rng, mut sample_rng) =
             match self.rng_states.take() {
                 Some(s) => (
                     Rng::from_state(s.straggler),
                     Rng::from_state(s.dropout),
                     Rng::from_state(s.downlink),
+                    Rng::from_state(s.sample),
                 ),
                 None => (
                     Rng::new(self.cfg.train.seed ^ 0x57AA),
                     Rng::new(self.cfg.train.seed ^ 0xD50F),
                     Rng::new(self.cfg.train.seed ^ 0xD0C0DE),
+                    // cohort sampling; consumed ONLY when 0 < m < n, so
+                    // unsampled runs never touch it
+                    Rng::new(self.cfg.train.seed ^ 0xC0807),
                 ),
             };
         let energy = EnergyTable::smic14();
@@ -937,11 +960,35 @@ impl Leader {
             // sealed in an integrity-checked frame (and possibly damaged
             // right after, if the fault plan says this downlink fails)
             let (tx, rx) = mpsc::channel::<(usize, Frame)>();
-            let mut g = Gather::new(self.cfg.comm, self.workers.len());
+            let mut g = Gather::new(self.cfg.comm, self.workers.len(), self.cfg.aggregators);
             let mut dispatched_ids = Vec::with_capacity(self.workers.len());
             let mut downlink_survivors = 0u64;
             let mut chained_downlinks = 0usize;
-            for w in &self.workers {
+            // cohort: 0 < sample_m < n draws m worker ids per round from
+            // the dedicated sample stream (sorted ascending, so the
+            // dropout/straggler/downlink draws below happen in the same
+            // id order as a full round). sample_m ∈ {0, n} takes the
+            // full-fleet path untouched — the sample stream is never
+            // consumed, bit-for-bit the pre-fleet behavior. Unsampled
+            // workers just sit the round out with their replica intact:
+            // the next cohort that includes them chains them forward
+            // (`k ≤ max_chain`) or dense-resyncs beyond the window.
+            let n = self.workers.len();
+            let sampling = self.cfg.sample_m > 0 && self.cfg.sample_m < n;
+            let cohort: Vec<usize> = if sampling {
+                let mut ids: Vec<usize> = sample_rng
+                    .permutation(n)
+                    .into_iter()
+                    .take(self.cfg.sample_m)
+                    .map(|i| i as usize)
+                    .collect();
+                ids.sort_unstable();
+                ids
+            } else {
+                (0..n).collect()
+            };
+            for &wid in &cohort {
+                let w = &self.workers[wid];
                 if dropout_rng.uniform() < self.cfg.dropout_prob {
                     // unreachable this round: misses the downlink, ships
                     // nothing. Its replica is intact, only *stale* — the
@@ -1284,7 +1331,7 @@ impl Leader {
             leader_busy += late_busy;
 
             let Gather {
-                mut agg,
+                agg,
                 meta,
                 mut dropped,
                 corrupt_frames,
@@ -1314,7 +1361,9 @@ impl Leader {
             // the survivors, stale reports λ^k-discounted; O(nnz) per
             // worker in the compressed modes)
             let t = Instant::now();
-            if let Some(params) = agg.finish(&self.ring.head().params)? {
+            let n_aggregators = agg.edges();
+            let (folded_params, tier) = agg.finish(&self.ring.head().params)?;
+            if let Some(params) = folded_params {
                 self.global.params = params;
             }
             // per-round scalars and ledgers: fresh reports in worker-id
@@ -1417,6 +1466,9 @@ impl Leader {
                 downlink_retries,
                 dense_downlinks,
                 chained_downlinks,
+                cohort: if sampling { cohort } else { Vec::new() },
+                aggregators: n_aggregators,
+                tier_upload_bytes: tier.tier_upload_bytes,
                 late_reports,
                 stale_weight_mass,
                 uplink_survivors,
@@ -1496,6 +1548,7 @@ impl Leader {
                     dropout: dropout_rng.state(),
                     straggler: straggler_rng.state(),
                     downlink: downlink_rng.state(),
+                    sample: sample_rng.state(),
                 };
                 self.persist(Path::new(dir), round, rng)
                     .with_context(|| format!("persisting run state to {dir}"))?;
@@ -1568,6 +1621,9 @@ mod tests {
             downlink_retries: 0,
             dense_downlinks: 0,
             chained_downlinks: 0,
+            cohort: Vec::new(),
+            aggregators: 1,
+            tier_upload_bytes: 0,
             late_reports: 0,
             stale_weight_mass: 0.0,
             uplink_survivors: 0,
@@ -1657,7 +1713,7 @@ mod tests {
 
     #[test]
     fn corrupt_frame_is_quarantined_not_applied() {
-        let mut g = Gather::new(CommMode::Dense, 2);
+        let mut g = Gather::new(CommMode::Dense, 2, 1);
         let mut wv = vec![Some(0u64); 2];
         let mut frame = Frame::seal(FrameKind::Report, &stub_report(0).encode());
         let n = frame.as_bytes().len();
@@ -1673,7 +1729,7 @@ mod tests {
 
     #[test]
     fn wrong_kind_and_misaddressed_frames_are_quarantined() {
-        let mut g = Gather::new(CommMode::Dense, 3);
+        let mut g = Gather::new(CommMode::Dense, 3, 1);
         let mut wv = vec![Some(0u64); 3];
         // an Update frame has no business on the uplink
         let up = Frame::seal(FrameKind::Update, &encode_update(&ModelUpdate::Dense(vec![])));
@@ -1691,7 +1747,7 @@ mod tests {
 
     #[test]
     fn non_finite_reports_reject_without_resync() {
-        let mut g = Gather::new(CommMode::Dense, 1);
+        let mut g = Gather::new(CommMode::Dense, 1, 1);
         let mut wv = vec![Some(3u64)];
         let mut r = stub_report(0);
         r.mean_loss = f64::NAN;
@@ -1706,7 +1762,7 @@ mod tests {
 
     #[test]
     fn duplicate_delivery_counts_but_keeps_first_outcome() {
-        let mut g = Gather::new(CommMode::Dense, 1);
+        let mut g = Gather::new(CommMode::Dense, 1, 1);
         let mut wv = vec![Some(0u64)];
         let frame = Frame::seal(FrameKind::Report, &stub_report(0).encode());
         feed(&mut g, &mut wv, 0, frame.clone()).unwrap();

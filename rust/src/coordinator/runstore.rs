@@ -48,13 +48,15 @@ use crate::coordinator::ModelVersion;
 use crate::tensor::Tensor;
 use crate::util::json::{arr, num, obj, s, Json};
 
-/// The three leader RNG streams, captured mid-sequence so a resumed run
+/// The four leader RNG streams, captured mid-sequence so a resumed run
 /// draws exactly what the uninterrupted run would have drawn next.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct RngStates {
     pub dropout: [u64; 4],
     pub straggler: [u64; 4],
     pub downlink: [u64; 4],
+    /// cohort-sampling stream; advanced only when `0 < sample_m < workers`
+    pub sample: [u64; 4],
 }
 
 /// One worker's persisted state: the leader's version tag for its
@@ -100,7 +102,8 @@ pub fn config_hash(cfg: &FedConfig) -> u64 {
     let canon = format!(
         "workers={} rounds={} local_steps={} iid={} straggler_prob={} \
          straggler_slowdown={} dropout_prob={} comm={:?} comm_rate={} comm_pruner={:?} \
-         quorum={} staleness_decay={} pipeline_depth={} max_chain={} model={} mode={:?} \
+         quorum={} staleness_decay={} pipeline_depth={} max_chain={} sample_m={} \
+         aggregators={} model={} mode={:?} \
          lr={} momentum={} seed={} train_examples={} test_examples={} difficulty={} \
          residency={:?} eval_residency={:?}",
         cfg.workers,
@@ -117,6 +120,8 @@ pub fn config_hash(cfg: &FedConfig) -> u64 {
         cfg.staleness_decay,
         cfg.pipeline_depth,
         cfg.max_chain,
+        cfg.sample_m,
+        cfg.aggregators,
         t.model,
         t.mode,
         t.lr,
@@ -317,6 +322,7 @@ pub fn save(dir: &Path, state: &RunState) -> Result<()> {
                 ("dropout", rng_ref(&state.rng.dropout)),
                 ("straggler", rng_ref(&state.rng.straggler)),
                 ("downlink", rng_ref(&state.rng.downlink)),
+                ("sample", rng_ref(&state.rng.sample)),
             ]),
         ),
         ("global", tensors_ref(dir, &state.global)?),
@@ -347,6 +353,7 @@ pub fn load(dir: &Path) -> Result<RunState> {
         dropout: rng_load(rng_obj.get("dropout"), "rng.dropout")?,
         straggler: rng_load(rng_obj.get("straggler"), "rng.straggler")?,
         downlink: rng_load(rng_obj.get("downlink"), "rng.downlink")?,
+        sample: rng_load(rng_obj.get("sample"), "rng.sample")?,
     };
     let global = tensors_load(dir, m.get("global"), "global")?;
 
@@ -433,6 +440,7 @@ mod tests {
                 dropout: [u64::MAX, 1, 2, 3],
                 straggler: [4, 5, 6, u64::MAX - 1],
                 downlink: [8, 9, 10, 11],
+                sample: [12, 13, u64::MAX - 2, 15],
             },
             global: vec![t0.clone(), t1.clone()],
             versions: vec![
@@ -547,6 +555,102 @@ mod tests {
         std::fs::remove_dir_all(&dir).ok();
     }
 
+    /// A randomized [`RunState`]: extreme u64s in the hex-string fields,
+    /// random tensor shapes, optional deltas, quarantined workers.
+    fn random_state(rng: &mut crate::util::rng::Rng) -> RunState {
+        let mut tensor = |rng: &mut crate::util::rng::Rng| {
+            let n = 1 + rng.below(8) as usize;
+            let mut data = vec![0f32; n];
+            rng.fill_normal(&mut data, 1.0);
+            Tensor::new(vec![n], data)
+        };
+        let mut rng_words = |rng: &mut crate::util::rng::Rng| {
+            // bias towards > 2^53 so f64 rounding in the manifest parser
+            // would be caught
+            [
+                rng.next_u64() | (1 << 60),
+                rng.next_u64(),
+                rng.next_u64(),
+                rng.next_u64(),
+            ]
+        };
+        let base_version = rng.below(1000) as u64;
+        let n_versions = 1 + rng.below(3) as usize;
+        let versions = (0..n_versions)
+            .map(|i| {
+                let delta = (rng.uniform() < 0.5).then(|| {
+                    let n = 1 + rng.below(6) as usize;
+                    let mut vals = vec![0f32; n];
+                    rng.fill_normal(&mut vals, 1.0);
+                    vec![TensorUpdate::Sparse(SparseTensor::encode(&vals))]
+                });
+                ModelVersion {
+                    version: base_version + i as u64,
+                    params: vec![tensor(rng)],
+                    delta,
+                }
+            })
+            .collect();
+        let workers = (0..1 + rng.below(3) as usize)
+            .map(|_| WorkerPersist {
+                version: (rng.uniform() < 0.75).then(|| rng.below(1000) as u64),
+                snap: WorkerSnapshot {
+                    reference: vec![tensor(rng)],
+                    residual: vec![(0..rng.below(5)).map(|_| rng.uniform() as f32).collect()],
+                    batches_drawn: rng.next_u64() >> 8,
+                    momenta: vec![tensor(rng)],
+                    step: rng.next_u64() >> 8,
+                },
+            })
+            .collect();
+        RunState {
+            config_hash: rng.next_u64() | (1 << 60),
+            round: rng.below(10_000) as usize,
+            rng: RngStates {
+                dropout: rng_words(rng),
+                straggler: rng_words(rng),
+                downlink: rng_words(rng),
+                sample: rng_words(rng),
+            },
+            global: vec![tensor(rng), tensor(rng)],
+            versions,
+            down_residual: vec![(0..rng.below(5)).map(|_| rng.uniform() as f32).collect()],
+            workers,
+        }
+    }
+
+    #[test]
+    fn capture_restore_capture_is_a_fixed_point() {
+        // the round-trip property: save → load → save must reproduce the
+        // manifest text and the object set byte-for-byte, for random
+        // states including hex-u64 fields above 2^53. Any drift here
+        // means a resumed run persists a different store than the run it
+        // resumed — the next resume would fork.
+        let mut rng = crate::util::rng::Rng::new(0xC5);
+        for case in 0..crate::testing::default_cases() {
+            let dir_a = tdir(&format!("fixa{case}"));
+            let dir_b = tdir(&format!("fixb{case}"));
+            let state = random_state(&mut rng);
+            save(&dir_a, &state).unwrap();
+            let restored = load(&dir_a).unwrap();
+            assert_states_equal(&state, &restored);
+            save(&dir_b, &restored).unwrap();
+            let manifest = |d: &Path| std::fs::read_to_string(d.join("manifest.json")).unwrap();
+            assert_eq!(manifest(&dir_a), manifest(&dir_b), "case {case}: manifests diverged");
+            let objects = |d: &Path| {
+                let mut names: Vec<_> = std::fs::read_dir(d.join("objects"))
+                    .unwrap()
+                    .map(|e| e.unwrap().file_name())
+                    .collect();
+                names.sort();
+                names
+            };
+            assert_eq!(objects(&dir_a), objects(&dir_b), "case {case}: object sets diverged");
+            std::fs::remove_dir_all(&dir_a).ok();
+            std::fs::remove_dir_all(&dir_b).ok();
+        }
+    }
+
     #[test]
     fn config_hash_ignores_timing_only_knobs() {
         let base = FedConfig::default();
@@ -561,8 +665,16 @@ mod tests {
         let mut different = base.clone();
         different.rounds += 1;
         assert_ne!(h, config_hash(&different));
-        let mut reseeded = base;
+        let mut reseeded = base.clone();
         reseeded.train.seed ^= 1;
         assert_ne!(h, config_hash(&reseeded));
+        // fleet-tier knobs shape fold membership and RNG draws — they
+        // must fork the hash
+        let mut sampled = base.clone();
+        sampled.sample_m = 2;
+        assert_ne!(h, config_hash(&sampled));
+        let mut tiered = base;
+        tiered.aggregators = 2;
+        assert_ne!(h, config_hash(&tiered));
     }
 }

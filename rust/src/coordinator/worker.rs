@@ -610,6 +610,245 @@ impl Drop for WorkerHandle {
     }
 }
 
+/// The leader-facing surface every worker implementation speaks: sealed
+/// [`Frame`] tasks in, sealed report frames out on `task.reply`, and
+/// snapshot capture/restore at round boundaries. Two implementations
+/// exist — the thread-per-device [`WorkerHandle`] (real PJRT training)
+/// and the in-process [`LiteWorker`] (fleet-scale simulation) — and a
+/// driver written against this trait runs unchanged on either.
+pub trait Worker {
+    fn id(&self) -> usize;
+    /// Hand the worker one round's work order. The report lands on
+    /// `task.reply` — asynchronously for a threaded worker, before
+    /// `submit` returns for a [`LiteWorker`].
+    fn submit(&mut self, task: WorkerTask) -> Result<()>;
+    /// Round-boundary snapshot of the worker's cross-round state.
+    fn capture(&mut self) -> Result<WorkerSnapshot>;
+    /// Install a persisted snapshot (resume).
+    fn restore(&mut self, snap: WorkerSnapshot) -> Result<()>;
+    fn shutdown(self)
+    where
+        Self: Sized;
+}
+
+impl Worker for WorkerHandle {
+    fn id(&self) -> usize {
+        self.id
+    }
+    fn submit(&mut self, task: WorkerTask) -> Result<()> {
+        WorkerHandle::submit(self, task)
+    }
+    fn capture(&mut self) -> Result<WorkerSnapshot> {
+        WorkerHandle::capture(self)
+    }
+    fn restore(&mut self, snap: WorkerSnapshot) -> Result<()> {
+        WorkerHandle::restore(self, snap)
+    }
+    fn shutdown(self) {
+        WorkerHandle::shutdown(self)
+    }
+}
+
+/// Nominal shard size a [`LiteWorker`] reports — the fedavg weight every
+/// lite worker folds with (uniform fleet).
+const LITE_SHARD_N: usize = 64;
+
+/// A memory-bounded stand-in for a full edge worker: no thread, no PJRT
+/// client, no data shard — just the *protocol* state machine, so one
+/// process can host 100k of them. Everything wire-facing is the real
+/// thing: downlink frames are opened and validated by the same
+/// [`Frame`] checks, bad frames poison the replica and nack, deltas and
+/// chains apply through [`ModelUpdate::apply`], and the uplink goes
+/// through the worker's own error-feedback [`DeltaCodec`] with the real
+/// per-round RNG derivation (`seed ^ 0x5EED_C0DE`, folded by id and
+/// round). Only the training itself is synthetic: instead of running
+/// local steps, the worker perturbs its replica with a deterministic
+/// pruned-gradient-shaped drift (a pure function of `(seed, id, round)`,
+/// so capture/restore reproduces the trajectory exactly like the real
+/// worker's).
+///
+/// Memory: the reference replica is `Arc`-shared — a fleet resynced to
+/// the same model version via [`LiteWorker::resync_shared`] holds ONE
+/// copy of those params, and a delta downlink clones on write. Live
+/// O(model) state (materialized params + codec residual) therefore
+/// scales with the workers actually *sampled*, not the fleet size.
+pub struct LiteWorker {
+    id: usize,
+    /// downlink-advanced reference replica, shared across same-version
+    /// workers (empty = never synced / poisoned → nack until dense resync)
+    reference: std::sync::Arc<Vec<Tensor>>,
+    codec: DeltaCodec,
+    /// uplink keep-rate (drives the synthetic drift's nonzero fraction)
+    rate: f64,
+    batches_drawn: u64,
+    /// uplink codec RNG base — same derivation as the threaded worker
+    uplink_rng: Rng,
+    /// synthetic-drift RNG base (lite-only stream, disjoint from every
+    /// leader and worker stream)
+    drift_rng: Rng,
+}
+
+impl LiteWorker {
+    pub fn new(id: usize, seed: u64, comm: CommSetup) -> Self {
+        Self {
+            id,
+            reference: std::sync::Arc::new(Vec::new()),
+            codec: DeltaCodec::with_pruner(comm.mode, comm.rate, comm.pruner),
+            rate: comm.rate,
+            batches_drawn: 0,
+            uplink_rng: Rng::new(seed ^ 0x5EED_C0DE).fold_in(id as u64),
+            drift_rng: Rng::new(seed ^ 0xF1EE7).fold_in(id as u64),
+        }
+    }
+
+    /// Dense-resync to a cached model version *without copying*: the
+    /// fleet driver keeps one `Arc<Vec<Tensor>>` per retained version
+    /// and hands every same-version worker the same allocation. The
+    /// error-feedback residual resets exactly as on a dense downlink.
+    pub fn resync_shared(&mut self, params: std::sync::Arc<Vec<Tensor>>) {
+        self.codec.reset_residual();
+        self.reference = params;
+    }
+
+    /// True once this worker holds a usable replica (dense-synced and
+    /// not poisoned since).
+    pub fn synced(&self) -> bool {
+        !self.reference.is_empty()
+    }
+
+    fn poison(&mut self) {
+        self.reference = std::sync::Arc::new(Vec::new());
+        self.codec.reset_residual();
+    }
+
+    fn nack(&self, task: &WorkerTask) {
+        let _ = task.reply.send((self.id, Frame::seal(FrameKind::Nack, &[])));
+    }
+}
+
+impl Worker for LiteWorker {
+    fn id(&self) -> usize {
+        self.id
+    }
+
+    /// The whole round, synchronously: open the downlink seal, advance
+    /// the replica, drift, encode the uplink, reply. Mirrors the
+    /// threaded worker's control flow decision-for-decision (nack on bad
+    /// frame / delta-before-snapshot / failed apply; dense resets the
+    /// residual; chains replay without a reset).
+    fn submit(&mut self, task: WorkerTask) -> Result<()> {
+        let update = match task
+            .frame
+            .open()
+            .and_then(|(kind, payload)| {
+                if kind != FrameKind::Update {
+                    bail!("downlink frame kind {kind:?}, wanted Update");
+                }
+                decode_update(payload)
+            }) {
+            Ok(u) => u,
+            Err(_) => {
+                self.poison();
+                self.nack(&task);
+                return Ok(());
+            }
+        };
+        match update {
+            ModelUpdate::Dense(p) => {
+                self.codec.reset_residual();
+                self.reference = std::sync::Arc::new(p);
+            }
+            u @ (ModelUpdate::Delta(_) | ModelUpdate::Chain(_)) => {
+                if self.reference.is_empty() {
+                    self.nack(&task);
+                    return Ok(());
+                }
+                // clone-on-write: a shared replica is copied out of the
+                // version cache only when this worker actually diverges
+                let params = std::sync::Arc::make_mut(&mut self.reference);
+                if u.apply(params).is_err() {
+                    self.poison();
+                    self.nack(&task);
+                    return Ok(());
+                }
+            }
+        }
+        // synthetic local training: a pruned-gradient-shaped drift —
+        // only a codec-rate-sized fraction of coordinates move, each by
+        // a small uniform step. Pure function of (seed, id, round).
+        let keep = match self.codec.mode() {
+            CommMode::Dense => 1.0,
+            _ => self.rate.clamp(0.01, 1.0),
+        };
+        let mut rng = self.drift_rng.fold_in(task.round as u64);
+        let mut local: Vec<Tensor> = (*self.reference).clone();
+        for t in &mut local {
+            for v in t.data_mut() {
+                if rng.uniform() < keep {
+                    *v += rng.uniform_in(-0.01, 0.01) as f32;
+                }
+            }
+        }
+        self.batches_drawn += task.local_steps as u64;
+        let update = match self.codec.mode() {
+            CommMode::Dense => ModelUpdate::Dense(local),
+            _ => {
+                let mut rng = self.uplink_rng.fold_in(task.round as u64);
+                match self.codec.encode(&local, &self.reference, &mut rng) {
+                    Ok(u) => u,
+                    Err(_) => {
+                        self.nack(&task);
+                        return Ok(());
+                    }
+                }
+            }
+        };
+        let report = WorkerReport {
+            worker_id: self.id,
+            round: task.round,
+            base_version: task.version,
+            update,
+            examples: LITE_SHARD_N,
+            mean_loss: 1.0 / (1.0 + task.round as f64),
+            mean_sparsity: 1.0 - keep,
+            sim_secs: task.slowdown * task.local_steps as f64 * 1e-3,
+            transfer: TransferStats {
+                state_up: 0,
+                state_down: 0,
+                batch_up: 0,
+                metrics_down: 0,
+                steps: task.local_steps as u64,
+                evals: 0,
+            },
+        };
+        let _ = task
+            .reply
+            .send((self.id, Frame::seal(FrameKind::Report, &report.encode())));
+        Ok(())
+    }
+
+    fn capture(&mut self) -> Result<WorkerSnapshot> {
+        Ok(WorkerSnapshot {
+            reference: (*self.reference).clone(),
+            residual: self.codec.residual().to_vec(),
+            batches_drawn: self.batches_drawn,
+            // no device tier: nothing survives a round outside the
+            // replica + residual
+            momenta: Vec::new(),
+            step: 0,
+        })
+    }
+
+    fn restore(&mut self, snap: WorkerSnapshot) -> Result<()> {
+        self.reference = std::sync::Arc::new(snap.reference);
+        self.codec.set_residual(snap.residual);
+        self.batches_drawn = snap.batches_drawn;
+        Ok(())
+    }
+
+    fn shutdown(self) {}
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -658,6 +897,160 @@ mod tests {
             assert_eq!(back.sim_secs, r.sim_secs);
             assert_eq!(back.transfer, r.transfer);
         }
+    }
+
+    fn lite_setup() -> CommSetup {
+        CommSetup {
+            mode: CommMode::Pruned,
+            rate: 0.3,
+            pruner: CommPruner::Stochastic,
+        }
+    }
+
+    fn lite_round(
+        w: &mut LiteWorker,
+        round: usize,
+        version: u64,
+        update: &ModelUpdate,
+    ) -> Frame {
+        let (tx, rx) = mpsc::channel();
+        let frame = Frame::seal(FrameKind::Update, &crate::comm::envelope::encode_update(update));
+        Worker::submit(
+            w,
+            WorkerTask {
+                round,
+                version,
+                frame,
+                local_steps: 3,
+                slowdown: 1.0,
+                sleep: false,
+                reply: tx,
+            },
+        )
+        .unwrap();
+        let (id, frame) = rx.recv().unwrap();
+        assert_eq!(id, w.id());
+        frame
+    }
+
+    fn params() -> Vec<Tensor> {
+        vec![Tensor::new(vec![6], vec![0.5, -0.25, 1.0, 0.0, -1.5, 2.0])]
+    }
+
+    #[test]
+    fn lite_worker_speaks_the_wire_protocol() {
+        let mut w = LiteWorker::new(3, 7, lite_setup());
+        assert!(!w.synced());
+        let frame = lite_round(&mut w, 0, 1, &ModelUpdate::Dense(params()));
+        let (kind, payload) = frame.open().unwrap();
+        assert_eq!(kind, FrameKind::Report);
+        let report = WorkerReport::decode(payload).unwrap();
+        assert_eq!(report.worker_id, 3);
+        assert_eq!(report.round, 0);
+        assert_eq!(report.base_version, 1);
+        assert_eq!(report.examples, LITE_SHARD_N);
+        assert_eq!(report.transfer.steps, 3);
+        // pruned mode uplinks a delta vs the replica, applicable in place
+        assert!(matches!(report.update, ModelUpdate::Delta(_)));
+        let mut replica = params();
+        report.update.apply(&mut replica).unwrap();
+        assert!(replica[0].data().iter().all(|v| v.is_finite()));
+        // a pruned *downlink* delta advances the same replica state
+        let delta = ModelUpdate::Delta(vec![TensorUpdate::Sparse(SparseTensor::encode(&[
+            0.0, 0.1, 0.0, 0.0, -0.2, 0.0,
+        ]))]);
+        let frame = lite_round(&mut w, 1, 2, &delta);
+        let (_, payload) = frame.open().unwrap();
+        let r2 = WorkerReport::decode(payload).unwrap();
+        assert_eq!(r2.base_version, 2);
+        assert!(w.synced());
+    }
+
+    #[test]
+    fn lite_worker_trajectory_is_deterministic_and_restorable() {
+        let setup = lite_setup();
+        let delta = ModelUpdate::Delta(vec![TensorUpdate::Sparse(SparseTensor::encode(&[
+            0.0, 0.1, 0.0, 0.0, -0.2, 0.0,
+        ]))]);
+        let mut a = LiteWorker::new(5, 11, setup);
+        let mut b = LiteWorker::new(5, 11, setup);
+        let fa = lite_round(&mut a, 0, 1, &ModelUpdate::Dense(params()));
+        let fb = lite_round(&mut b, 0, 1, &ModelUpdate::Dense(params()));
+        assert_eq!(fa.as_bytes(), fb.as_bytes(), "same (seed, id) diverged");
+        // capture at the round boundary, restore into a fresh worker,
+        // and the continuation is bit-identical to the uninterrupted one
+        let snap = Worker::capture(&mut a).unwrap();
+        let mut c = LiteWorker::new(5, 11, setup);
+        Worker::restore(&mut c, snap).unwrap();
+        let fa = lite_round(&mut a, 1, 2, &delta);
+        let fc = lite_round(&mut c, 1, 2, &delta);
+        assert_eq!(fa.as_bytes(), fc.as_bytes(), "restore broke the trajectory");
+        // a different worker id yields a different uplink
+        let mut d = LiteWorker::new(6, 11, setup);
+        let fd = lite_round(&mut d, 0, 1, &ModelUpdate::Dense(params()));
+        assert_ne!(fb.as_bytes(), fd.as_bytes());
+    }
+
+    #[test]
+    fn lite_worker_nacks_and_poisons_like_the_real_one() {
+        let mut w = LiteWorker::new(0, 3, lite_setup());
+        let delta = ModelUpdate::Delta(vec![TensorUpdate::Sparse(SparseTensor::encode(&[
+            0.1, 0.0, 0.0, 0.0, 0.0, 0.0,
+        ]))]);
+        // delta before any snapshot: nothing to apply it to
+        let frame = lite_round(&mut w, 0, 1, &delta);
+        assert_eq!(frame.open().unwrap().0, FrameKind::Nack);
+        // sync, then corrupt the next downlink in flight — the seal
+        // catches it, the replica poisons, and a valid delta still nacks
+        // until a dense resync
+        lite_round(&mut w, 1, 2, &ModelUpdate::Dense(params()));
+        assert!(w.synced());
+        let (tx, rx) = mpsc::channel();
+        let mut bad = Frame::seal(
+            FrameKind::Update,
+            &crate::comm::envelope::encode_update(&delta),
+        );
+        let n = bad.as_bytes().len();
+        bad.bytes_mut()[n / 2] ^= 0x40;
+        Worker::submit(
+            &mut w,
+            WorkerTask {
+                round: 2,
+                version: 3,
+                frame: bad,
+                local_steps: 3,
+                slowdown: 1.0,
+                sleep: false,
+                reply: tx,
+            },
+        )
+        .unwrap();
+        assert_eq!(rx.recv().unwrap().1.open().unwrap().0, FrameKind::Nack);
+        assert!(!w.synced());
+        let frame = lite_round(&mut w, 3, 3, &delta);
+        assert_eq!(frame.open().unwrap().0, FrameKind::Nack);
+        let frame = lite_round(&mut w, 4, 4, &ModelUpdate::Dense(params()));
+        assert_eq!(frame.open().unwrap().0, FrameKind::Report);
+    }
+
+    #[test]
+    fn shared_replicas_clone_on_write() {
+        let cache = std::sync::Arc::new(params());
+        let mut a = LiteWorker::new(0, 9, lite_setup());
+        let mut b = LiteWorker::new(1, 9, lite_setup());
+        a.resync_shared(cache.clone());
+        b.resync_shared(cache.clone());
+        // one allocation for the whole same-version cohort
+        assert_eq!(std::sync::Arc::strong_count(&cache), 3);
+        assert!(a.synced() && b.synced());
+        // a delta downlink makes worker `a` diverge: it clones out of
+        // the cache, the cache itself stays untouched
+        let delta = ModelUpdate::Delta(vec![TensorUpdate::Sparse(SparseTensor::encode(&[
+            0.3, 0.0, 0.0, 0.0, 0.0, 0.0,
+        ]))]);
+        lite_round(&mut a, 0, 1, &delta);
+        assert_eq!(std::sync::Arc::strong_count(&cache), 2);
+        assert_eq!(cache[0].data(), params()[0].data());
     }
 
     #[test]

@@ -188,6 +188,8 @@ fn cmd_federated(raw: &[String]) -> Result<()> {
         FlagSpec { name: "staleness-decay", help: "late-report weight decay λ (weight = examples·λ^k, k = versions behind; 0 discards)", takes_value: true, default: None },
         FlagSpec { name: "pipeline-depth", help: "max rounds in flight under a quorum (bounds late-report staleness)", takes_value: true, default: None },
         FlagSpec { name: "max-chain", help: "resync workers up to k versions behind with chained deltas instead of dense snapshots (0 = always dense)", takes_value: true, default: None },
+        FlagSpec { name: "sample-m", help: "per-round cohort size: dispatch to m seeded-sampled workers instead of all (0 = everyone)", takes_value: true, default: None },
+        FlagSpec { name: "aggregators", help: "edge aggregator count for two-tier folding (0|1 = flat single aggregator)", takes_value: true, default: None },
         FlagSpec { name: "faults", help: "deterministic fault injection, e.g. \"corrupt=0.05,truncate=0.01,dup=0.02,reorder=0.1,crash=0.02,kill=3,seed=7\"", takes_value: true, default: None },
         FlagSpec { name: "run-store", help: "durable run store directory: persist a resumable snapshot after every round", takes_value: true, default: None },
         FlagSpec { name: "resume", help: "resume from --run-store instead of starting fresh", takes_value: false, default: None },
@@ -243,6 +245,12 @@ fn cmd_federated(raw: &[String]) -> Result<()> {
     }
     if let Some(v) = args.get_usize("max-chain")? {
         cfg.max_chain = v;
+    }
+    if let Some(v) = args.get_usize("sample-m")? {
+        cfg.sample_m = v;
+    }
+    if let Some(v) = args.get_usize("aggregators")? {
+        cfg.aggregators = v;
     }
     if let Some(v) = args.get("faults") {
         cfg.faults = Some(v.parse()?);

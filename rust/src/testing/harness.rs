@@ -1,0 +1,341 @@
+//! Twin-run harness: run a federated config end to end, then pin one
+//! run against another **bit for bit**.
+//!
+//! Half the coordinator's acceptance criteria share one shape: "knob X
+//! must not change the result" — pipelining, full-barrier quorum, a
+//! zero fault plan, kill/resume, `sample_m = N`, two-tier aggregation.
+//! Each such pin is twin runs plus a field-by-field comparison, and the
+//! comparison is where regressions hide: a hand-rolled pin that forgets
+//! to compare a ledger silently stops guarding it. This module owns the
+//! boilerplate once: [`run`] wraps the leader lifecycle, and
+//! [`assert_twin_parity`] compares *every* field of a family so a pin
+//! opts ledger families in or out ([`Parity`]) instead of enumerating
+//! fields.
+//!
+//! Float comparisons use `to_bits()` — parity here means the identical
+//! f64, not "close enough"; byte ledgers and schedules compare with
+//! `==`. The `wire` family deliberately EXCLUDES the fleet-tier fields
+//! (`aggregators`, `tier_upload_bytes`): the two-tier acceptance pin
+//! runs flat vs tiered twins whose tier ledgers *must* differ while
+//! every PR-6-era ledger stays identical — tier fields are asserted
+//! against the `docs/TRANSFER_MODEL.md` §Fleet tier formula separately.
+
+use anyhow::Result;
+
+use crate::config::FedConfig;
+use crate::coordinator::{FedSummary, Leader, RoundReport};
+use crate::manifest::Manifest;
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+
+/// One finished federated run: the summary plus the leader's final
+/// global params (captured before shutdown).
+pub struct TwinRun {
+    pub summary: FedSummary,
+    pub params: Vec<Tensor>,
+}
+
+/// The leader lifecycle boilerplate every integration pin repeats:
+/// build, run, capture the global params, shut the fleet down.
+pub fn run(rt: &Runtime, m: &Manifest, cfg: FedConfig) -> Result<TwinRun> {
+    let mut leader = Leader::new(rt, m, cfg)?;
+    let summary = leader.run()?;
+    let params = leader.global_params().to_vec();
+    leader.shutdown();
+    Ok(TwinRun { summary, params })
+}
+
+/// Which ledger families a twin pin compares. Families exist because
+/// some twins legitimately differ in one dimension — e.g. the
+/// poisoned-vs-crashed pin demands identical trajectories but *different*
+/// wire ledgers (one run paid for a retry) — and the pin should opt that
+/// family out, not hand-enumerate the rest.
+#[derive(Clone, Copy)]
+pub struct Parity {
+    /// final global params, element-exact
+    pub params: bool,
+    /// per-round `mean_loss`/`mean_sparsity`/`eval_acc` + `final_acc`,
+    /// compared by `f64::to_bits`
+    pub metrics: bool,
+    /// payload + envelope byte ledgers, survivor counts, run totals —
+    /// the PR-6-era wire surface (fleet-tier fields excluded, see the
+    /// module docs)
+    pub wire: bool,
+    /// dispatch bookkeeping: versions, cohorts, dropouts, resyncs
+    /// (dense + chained), retries, late folds, fault counters
+    pub schedule: bool,
+    /// host↔device transfer ledgers (per worker, per round, totals)
+    pub device: bool,
+}
+
+impl Parity {
+    /// Every family — the default for "knob X is a pure no-op" pins.
+    pub fn full() -> Self {
+        Self {
+            params: true,
+            metrics: true,
+            wire: true,
+            schedule: true,
+            device: true,
+        }
+    }
+
+    /// Model trajectory only (params + metrics) — for twins that take
+    /// deliberately different wire/schedule paths to the same state.
+    pub fn trajectory() -> Self {
+        Self {
+            params: true,
+            metrics: true,
+            wire: false,
+            schedule: false,
+            device: false,
+        }
+    }
+}
+
+/// Pin run `b` against run `a` under the given families. `label` names
+/// the pin in failure messages.
+pub fn assert_twin_parity(label: &str, a: &TwinRun, b: &TwinRun, p: Parity) {
+    if p.params {
+        assert_eq!(a.params, b.params, "{label}: global params diverged");
+    }
+    assert_eq!(
+        a.summary.rounds.len(),
+        b.summary.rounds.len(),
+        "{label}: round counts differ"
+    );
+    assert_round_parity(label, &a.summary.rounds, &b.summary.rounds, p);
+    if p.metrics {
+        assert_eq!(
+            a.summary.final_acc.to_bits(),
+            b.summary.final_acc.to_bits(),
+            "{label}: final_acc {} vs {}",
+            a.summary.final_acc,
+            b.summary.final_acc
+        );
+    }
+    if p.wire {
+        assert_eq!(
+            a.summary.total_upload_bytes, b.summary.total_upload_bytes,
+            "{label}: total uplink ledger"
+        );
+        assert_eq!(
+            a.summary.total_download_bytes, b.summary.total_download_bytes,
+            "{label}: total downlink ledger"
+        );
+    }
+    if p.device {
+        assert_eq!(
+            a.summary.total_device_transfer, b.summary.total_device_transfer,
+            "{label}: total device ledger"
+        );
+    }
+}
+
+/// Round-by-round comparison over any two equally long round sequences.
+/// Exposed separately so stitched runs (kill + resume) can chain their
+/// segments against the uninterrupted twin.
+pub fn assert_round_parity<'a, A, B>(label: &str, a: A, b: B, p: Parity)
+where
+    A: IntoIterator<Item = &'a RoundReport>,
+    B: IntoIterator<Item = &'a RoundReport>,
+{
+    let mut ia = a.into_iter();
+    let mut ib = b.into_iter();
+    loop {
+        let (x, y) = match (ia.next(), ib.next()) {
+            (Some(x), Some(y)) => (x, y),
+            (None, None) => break,
+            _ => panic!("{label}: round sequences have different lengths"),
+        };
+        let r = x.round;
+        assert_eq!(r, y.round, "{label}: round index mismatch");
+        if p.metrics {
+            assert_eq!(
+                x.eval_acc.to_bits(),
+                y.eval_acc.to_bits(),
+                "{label} round {r}: eval_acc {} vs {}",
+                x.eval_acc,
+                y.eval_acc
+            );
+            assert_eq!(
+                x.mean_loss.to_bits(),
+                y.mean_loss.to_bits(),
+                "{label} round {r}: mean_loss"
+            );
+            assert_eq!(
+                x.mean_sparsity.to_bits(),
+                y.mean_sparsity.to_bits(),
+                "{label} round {r}: mean_sparsity"
+            );
+        }
+        if p.wire {
+            assert_eq!(x.upload_bytes, y.upload_bytes, "{label} round {r}: uplink bytes");
+            assert_eq!(
+                x.download_bytes, y.download_bytes,
+                "{label} round {r}: downlink bytes"
+            );
+            assert_eq!(
+                x.envelope_bytes, y.envelope_bytes,
+                "{label} round {r}: envelope bytes"
+            );
+            assert_eq!(
+                x.uplink_survivors, y.uplink_survivors,
+                "{label} round {r}: uplink survivors"
+            );
+            assert_eq!(
+                x.downlink_survivors, y.downlink_survivors,
+                "{label} round {r}: downlink survivors"
+            );
+        }
+        if p.schedule {
+            assert_eq!(x.version, y.version, "{label} round {r}: model version");
+            assert_eq!(x.dispatched, y.dispatched, "{label} round {r}: dispatched");
+            assert_eq!(x.cohort, y.cohort, "{label} round {r}: cohort");
+            assert_eq!(x.dropped, y.dropped, "{label} round {r}: dropouts");
+            assert_eq!(
+                x.dense_downlinks, y.dense_downlinks,
+                "{label} round {r}: dense resyncs"
+            );
+            assert_eq!(
+                x.chained_downlinks, y.chained_downlinks,
+                "{label} round {r}: chained resyncs"
+            );
+            assert_eq!(
+                x.downlink_retries, y.downlink_retries,
+                "{label} round {r}: retries"
+            );
+            assert_eq!(x.late_reports, y.late_reports, "{label} round {r}: late folds");
+            assert_eq!(
+                x.stale_weight_mass.to_bits(),
+                y.stale_weight_mass.to_bits(),
+                "{label} round {r}: stale mass"
+            );
+            assert_eq!(
+                x.corrupt_frames, y.corrupt_frames,
+                "{label} round {r}: corrupt frames"
+            );
+            assert_eq!(
+                x.rejected_reports, y.rejected_reports,
+                "{label} round {r}: rejected reports"
+            );
+        }
+        if p.device {
+            assert_eq!(
+                x.worker_transfer, y.worker_transfer,
+                "{label} round {r}: per-worker device ledger"
+            );
+            assert_eq!(
+                x.device_transfer, y.device_transfer,
+                "{label} round {r}: round device ledger"
+            );
+            assert_eq!(
+                x.leader_eval_transfer, y.leader_eval_transfer,
+                "{label} round {r}: leader eval ledger"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::TransferStats;
+
+    fn round(r: usize) -> RoundReport {
+        RoundReport {
+            round: r,
+            version: r as u64 + 1,
+            mean_loss: 1.5 - r as f64 * 0.1,
+            mean_sparsity: 0.875,
+            upload_bytes: 1000 + r as u64,
+            download_bytes: 900,
+            envelope_bytes: 96,
+            dispatched: 2,
+            dropped: Vec::new(),
+            corrupt_frames: 0,
+            rejected_reports: 0,
+            downlink_retries: 0,
+            dense_downlinks: if r == 0 { 2 } else { 0 },
+            chained_downlinks: 0,
+            cohort: Vec::new(),
+            aggregators: 1,
+            tier_upload_bytes: 0,
+            late_reports: 0,
+            stale_weight_mass: 0.0,
+            uplink_survivors: 37,
+            downlink_survivors: 12,
+            eval_acc: 0.25 + r as f64 * 0.05,
+            wall_secs: 0.5,
+            leader_secs: 0.1,
+            worker_secs: vec![0.2, 0.3],
+            worker_transfer: vec![TransferStats::default(); 2],
+            device_transfer: TransferStats::default(),
+            leader_eval_transfer: TransferStats::default(),
+        }
+    }
+
+    #[test]
+    fn parity_passes_on_identical_rounds_and_ignores_timing() {
+        let mut a = round(1);
+        let mut b = round(1);
+        // wall-clock fields are noise, never part of any family
+        a.wall_secs = 0.1;
+        b.wall_secs = 9.9;
+        a.leader_secs = 0.01;
+        b.leader_secs = 0.5;
+        let (va, vb) = (vec![a], vec![b]);
+        assert_round_parity("timing", &va, &vb, Parity::full());
+    }
+
+    #[test]
+    #[should_panic(expected = "uplink bytes")]
+    fn parity_catches_a_wire_drift() {
+        let a = round(2);
+        let mut b = round(2);
+        b.upload_bytes += 1;
+        let (va, vb) = (vec![a], vec![b]);
+        assert_round_parity("wire", &va, &vb, Parity::full());
+    }
+
+    #[test]
+    fn families_opt_out() {
+        let a = round(0);
+        let mut b = round(0);
+        b.upload_bytes += 8; // wire drifts...
+        let (va, vb) = (vec![a], vec![b]);
+        // ...but a trajectory-only pin does not care
+        assert_round_parity("traj", &va, &vb, Parity::trajectory());
+    }
+
+    #[test]
+    #[should_panic(expected = "different lengths")]
+    fn parity_catches_length_mismatch() {
+        let va = vec![round(0), round(1)];
+        let vb = vec![round(0)];
+        assert_round_parity("len", &va, &vb, Parity::full());
+    }
+
+    #[test]
+    #[should_panic(expected = "cohort")]
+    fn parity_catches_a_cohort_drift() {
+        let a = round(3);
+        let mut b = round(3);
+        b.cohort = vec![1, 2];
+        let (va, vb) = (vec![a], vec![b]);
+        assert_round_parity("cohort", &va, &vb, Parity::full());
+    }
+
+    #[test]
+    fn tier_fields_are_not_in_the_wire_family() {
+        // the two-tier acceptance pin depends on this: tiered vs flat
+        // twins must pass a full-parity check even though their tier
+        // ledgers differ
+        let a = round(4);
+        let mut b = round(4);
+        b.aggregators = 4;
+        b.tier_upload_bytes = 4096;
+        let (va, vb) = (vec![a], vec![b]);
+        assert_round_parity("tier", &va, &vb, Parity::full());
+    }
+}

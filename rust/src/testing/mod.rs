@@ -5,6 +5,8 @@
 
 use crate::util::rng::Rng;
 
+pub mod harness;
+
 /// Number of cases per property (override with EFFICIENTGRAD_PROP_CASES).
 pub fn default_cases() -> usize {
     std::env::var("EFFICIENTGRAD_PROP_CASES")

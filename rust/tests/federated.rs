@@ -8,6 +8,7 @@ use efficientgrad::faults::FaultPlan;
 use efficientgrad::manifest::Manifest;
 use efficientgrad::params::ParamStore;
 use efficientgrad::runtime::{resident_step_state_bytes, Runtime, TransferStats};
+use efficientgrad::testing::harness::{self, assert_round_parity, assert_twin_parity, Parity};
 
 fn manifest() -> Option<Manifest> {
     Manifest::load(&efficientgrad::artifacts_dir()).ok()
@@ -41,16 +42,15 @@ fn small_cfg(workers: usize, rounds: usize) -> FedConfig {
     }
 }
 
+// Every integration run goes through the shared twin-run harness
+// (testing::harness); tests that only need the pieces unpack them here.
 fn run_to_summary(
     rt: &Runtime,
     m: &Manifest,
     cfg: FedConfig,
 ) -> (efficientgrad::coordinator::FedSummary, Vec<efficientgrad::tensor::Tensor>) {
-    let mut leader = Leader::new(rt, m, cfg).unwrap();
-    let summary = leader.run().unwrap();
-    let params = leader.global_params().to_vec();
-    leader.shutdown();
-    (summary, params)
+    let t = harness::run(rt, m, cfg).unwrap();
+    (t.summary, t.params)
 }
 
 #[test]
@@ -323,50 +323,15 @@ fn pipelined_matches_sequential_bit_for_bit() {
         cfg.comm = comm;
         cfg.dropout_prob = 0.3;
         cfg.straggler_prob = 0.5;
-        let (seq, seq_params) = run_to_summary(&rt, &m, cfg.clone());
+        let seq = harness::run(&rt, &m, cfg.clone()).unwrap();
         cfg.pipeline = true;
-        let (pipe, pipe_params) = run_to_summary(&rt, &m, cfg);
-
-        assert_eq!(seq_params, pipe_params, "{comm:?}: global params diverged");
-        assert_eq!(seq.rounds.len(), pipe.rounds.len());
+        let pipe = harness::run(&rt, &m, cfg).unwrap();
         // injection must actually have fired, or the test proves little
         assert!(
-            seq.rounds.iter().any(|r| !r.dropped.is_empty()),
+            seq.summary.rounds.iter().any(|r| !r.dropped.is_empty()),
             "{comm:?}: dropout injection produced no dropouts"
         );
-        for (a, b) in seq.rounds.iter().zip(&pipe.rounds) {
-            let r = a.round;
-            assert_eq!(
-                a.eval_acc.to_bits(),
-                b.eval_acc.to_bits(),
-                "{comm:?} round {r}: eval_acc {} vs {}",
-                a.eval_acc,
-                b.eval_acc
-            );
-            assert_eq!(a.mean_loss.to_bits(), b.mean_loss.to_bits(), "{comm:?} round {r}");
-            assert_eq!(
-                a.mean_sparsity.to_bits(),
-                b.mean_sparsity.to_bits(),
-                "{comm:?} round {r}"
-            );
-            assert_eq!(a.upload_bytes, b.upload_bytes, "{comm:?} round {r}: uplink ledger");
-            assert_eq!(a.download_bytes, b.download_bytes, "{comm:?} round {r}: downlink");
-            assert_eq!(a.uplink_survivors, b.uplink_survivors, "{comm:?} round {r}");
-            assert_eq!(a.downlink_survivors, b.downlink_survivors, "{comm:?} round {r}");
-            assert_eq!(a.dispatched, b.dispatched, "{comm:?} round {r}");
-            assert_eq!(a.dropped, b.dropped, "{comm:?} round {r}");
-            assert_eq!(a.dense_downlinks, b.dense_downlinks, "{comm:?} round {r}");
-            assert_eq!(a.worker_transfer, b.worker_transfer, "{comm:?} round {r}: device");
-            assert_eq!(a.device_transfer, b.device_transfer, "{comm:?} round {r}");
-            assert_eq!(
-                a.leader_eval_transfer, b.leader_eval_transfer,
-                "{comm:?} round {r}: leader eval ledger"
-            );
-        }
-        assert_eq!(seq.final_acc.to_bits(), pipe.final_acc.to_bits(), "{comm:?}");
-        assert_eq!(seq.total_upload_bytes, pipe.total_upload_bytes, "{comm:?}");
-        assert_eq!(seq.total_download_bytes, pipe.total_download_bytes, "{comm:?}");
-        assert_eq!(seq.total_device_transfer, pipe.total_device_transfer, "{comm:?}");
+        assert_twin_parity(&format!("pipelined {comm:?}"), &seq, &pipe, Parity::full());
     }
 }
 
@@ -426,29 +391,17 @@ fn full_barrier_quorum_is_bit_for_bit_the_oracle() {
     explicit.pipeline_depth = 1;
     explicit.max_chain = 0;
     explicit.staleness_decay = 0.9; // consulted only below quorum 1.0
-    let (a, params_a) = run_to_summary(&rt, &m, base);
-    let (b, params_b) = run_to_summary(&rt, &m, explicit);
-    assert_eq!(params_a, params_b, "oracle knobs changed the params");
-    assert_eq!(a.rounds.len(), b.rounds.len());
-    for (x, y) in a.rounds.iter().zip(&b.rounds) {
-        assert_eq!(x.eval_acc.to_bits(), y.eval_acc.to_bits(), "round {}", x.round);
-        assert_eq!(x.upload_bytes, y.upload_bytes, "round {}", x.round);
-        assert_eq!(x.download_bytes, y.download_bytes, "round {}", x.round);
-        assert_eq!(x.dropped, y.dropped, "round {}", x.round);
-        assert_eq!(x.dense_downlinks, y.dense_downlinks, "round {}", x.round);
-        // the elastic-schedule machinery must be provably idle at a full
-        // barrier, and every round advances exactly one version
-        for r in [x, y] {
-            assert_eq!(r.late_reports, 0, "round {}", r.round);
-            assert_eq!(r.stale_weight_mass, 0.0, "round {}", r.round);
-            assert_eq!(r.chained_downlinks, 0, "round {}", r.round);
-            assert_eq!(r.version, r.round as u64 + 1, "round {}", r.round);
-        }
+    let a = harness::run(&rt, &m, base).unwrap();
+    let b = harness::run(&rt, &m, explicit).unwrap();
+    assert_twin_parity("full-barrier quorum", &a, &b, Parity::full());
+    // the elastic-schedule machinery must be provably idle at a full
+    // barrier, and every round advances exactly one version
+    for r in a.summary.rounds.iter().chain(&b.summary.rounds) {
+        assert_eq!(r.late_reports, 0, "round {}", r.round);
+        assert_eq!(r.stale_weight_mass, 0.0, "round {}", r.round);
+        assert_eq!(r.chained_downlinks, 0, "round {}", r.round);
+        assert_eq!(r.version, r.round as u64 + 1, "round {}", r.round);
     }
-    assert_eq!(a.final_acc.to_bits(), b.final_acc.to_bits());
-    assert_eq!(a.total_upload_bytes, b.total_upload_bytes);
-    assert_eq!(a.total_download_bytes, b.total_download_bytes);
-    assert_eq!(a.total_device_transfer, b.total_device_transfer);
 }
 
 #[test]
@@ -698,27 +651,18 @@ fn zero_fault_plan_is_bit_for_bit_no_plan() {
     let rt = Runtime::cpu().unwrap();
     let mut cfg = small_cfg(2, 4);
     cfg.comm = CommMode::Pruned;
-    let (clean, clean_params) = run_to_summary(&rt, &m, cfg.clone());
+    let clean = harness::run(&rt, &m, cfg.clone()).unwrap();
     cfg.faults = Some("seed=99".parse().unwrap()); // every knob zero
-    let (zeroed, zeroed_params) = run_to_summary(&rt, &m, cfg);
-    assert_eq!(clean_params, zeroed_params, "a zero plan moved the params");
-    assert_eq!(clean.rounds.len(), zeroed.rounds.len());
-    for (a, b) in clean.rounds.iter().zip(&zeroed.rounds) {
-        let r = a.round;
-        assert_eq!(a.eval_acc.to_bits(), b.eval_acc.to_bits(), "round {r}");
-        assert_eq!(a.mean_loss.to_bits(), b.mean_loss.to_bits(), "round {r}");
-        assert_eq!(a.upload_bytes, b.upload_bytes, "round {r}");
-        assert_eq!(a.download_bytes, b.download_bytes, "round {r}");
-        assert_eq!(a.envelope_bytes, b.envelope_bytes, "round {r}");
+    let zeroed = harness::run(&rt, &m, cfg).unwrap();
+    assert_twin_parity("zero fault plan", &clean, &zeroed, Parity::full());
+    for r in clean.summary.rounds.iter().chain(&zeroed.summary.rounds) {
         // nothing fired, nothing was detected
-        for x in [a, b] {
-            assert_eq!(x.corrupt_frames, 0, "round {r}");
-            assert_eq!(x.rejected_reports, 0, "round {r}");
-            assert_eq!(x.downlink_retries, 0, "round {r}");
-        }
+        assert_eq!(r.corrupt_frames, 0, "round {}", r.round);
+        assert_eq!(r.rejected_reports, 0, "round {}", r.round);
+        assert_eq!(r.downlink_retries, 0, "round {}", r.round);
         // envelope accounting on a clean 2-worker round: one sealed task
         // down + one sealed report up per worker, 24 B of header each
-        assert_eq!(a.envelope_bytes, 2 * 2 * 24, "round {r}");
+        assert_eq!(r.envelope_bytes, 2 * 2 * 24, "round {}", r.round);
     }
 }
 
@@ -807,23 +751,27 @@ fn poisoned_and_crashed_workers_recover_on_identical_trajectories() {
         force_crash: vec![(1, 0, 0)], // dies before its first local step
         ..FaultPlan::default()
     });
-    let (p, p_params) = run_to_summary(&rt, &m, poisoned);
-    let (c, c_params) = run_to_summary(&rt, &m, crashed);
-    assert_eq!(p_params, c_params, "recovery paths diverged the model");
-    assert_eq!(p.rounds.len(), c.rounds.len());
-    for (a, b) in p.rounds.iter().zip(&c.rounds) {
-        let r = a.round;
-        assert_eq!(a.eval_acc.to_bits(), b.eval_acc.to_bits(), "round {r}");
-        assert_eq!(a.mean_loss.to_bits(), b.mean_loss.to_bits(), "round {r}");
-        assert_eq!(a.dropped, b.dropped, "round {r}");
+    let p = harness::run(&rt, &m, poisoned).unwrap();
+    let c = harness::run(&rt, &m, crashed).unwrap();
+    // identical trajectories on deliberately different wire/schedule
+    // paths — exactly what the trajectory family pins
+    assert_twin_parity("poisoned vs crashed", &p, &c, Parity::trajectory());
+    for (a, b) in p.summary.rounds.iter().zip(&c.summary.rounds) {
+        assert_eq!(a.dropped, b.dropped, "round {}", a.round);
     }
     // both runs wrote worker 0 off in round 1 — by different detectors
-    assert_eq!(p.rounds[1].dropped, vec![0]);
-    assert_eq!(p.rounds[1].downlink_retries, 1, "poison path: nack → retry → give up");
-    assert_eq!(c.rounds[1].downlink_retries, 0, "crash path: silence, no nack");
+    assert_eq!(p.summary.rounds[1].dropped, vec![0]);
+    assert_eq!(
+        p.summary.rounds[1].downlink_retries, 1,
+        "poison path: nack → retry → give up"
+    );
+    assert_eq!(
+        c.summary.rounds[1].downlink_retries, 0,
+        "crash path: silence, no nack"
+    );
     // and both resynced it the same way next round
-    assert_eq!(p.rounds[2].dense_downlinks, 1);
-    assert_eq!(c.rounds[2].dense_downlinks, 1);
+    assert_eq!(p.summary.rounds[2].dense_downlinks, 1);
+    assert_eq!(c.summary.rounds[2].dense_downlinks, 1);
 }
 
 #[test]
@@ -841,8 +789,8 @@ fn kill_and_resume_reproduces_the_uninterrupted_run() {
     let mut base = small_cfg(3, 4);
     base.comm = CommMode::Pruned;
 
-    let (x, x_params) = run_to_summary(&rt, &m, base.clone());
-    assert_eq!(x.rounds.len(), 4);
+    let x = harness::run(&rt, &m, base.clone()).unwrap();
+    assert_eq!(x.summary.rounds.len(), 4);
 
     let mut killed = base.clone();
     killed.run_store = Some(dir.to_string_lossy().into_owned());
@@ -850,38 +798,34 @@ fn kill_and_resume_reproduces_the_uninterrupted_run() {
         kill_round: Some(1),
         ..FaultPlan::default()
     });
-    let (y1, _) = run_to_summary(&rt, &m, killed);
-    assert_eq!(y1.rounds.len(), 2, "the kill must halt the run after round 1");
+    let y1 = harness::run(&rt, &m, killed).unwrap();
+    assert_eq!(y1.summary.rounds.len(), 2, "the kill must halt the run after round 1");
 
     let mut resumed = base;
     resumed.run_store = Some(dir.to_string_lossy().into_owned());
     resumed.resume = true;
-    let (y2, y_params) = run_to_summary(&rt, &m, resumed);
-    assert_eq!(y2.rounds.len(), 2, "the resume must run exactly rounds 2 and 3");
-    assert_eq!(y2.rounds[0].round, 2);
+    let y2 = harness::run(&rt, &m, resumed).unwrap();
+    assert_eq!(y2.summary.rounds.len(), 2, "the resume must run exactly rounds 2 and 3");
+    assert_eq!(y2.summary.rounds[0].round, 2);
 
     // the headline: identical final model, bit for bit
-    assert_eq!(x_params, y_params, "resume forked the trajectory");
-    // every round of the stitched run matches its uninterrupted twin
-    let stitched = y1.rounds.iter().chain(&y2.rounds);
-    for (a, b) in x.rounds.iter().zip(stitched) {
-        let r = a.round;
-        assert_eq!(r, b.round);
-        assert_eq!(a.eval_acc.to_bits(), b.eval_acc.to_bits(), "round {r}: eval");
-        assert_eq!(a.mean_loss.to_bits(), b.mean_loss.to_bits(), "round {r}: loss");
-        assert_eq!(a.upload_bytes, b.upload_bytes, "round {r}: uplink ledger");
-        assert_eq!(a.download_bytes, b.download_bytes, "round {r}: downlink ledger");
-        assert_eq!(a.dense_downlinks, b.dense_downlinks, "round {r}");
-        assert_eq!(a.uplink_survivors, b.uplink_survivors, "round {r}");
-    }
+    assert_eq!(x.params, y2.params, "resume forked the trajectory");
+    // every round of the stitched run matches its uninterrupted twin, at
+    // FULL families — every ledger, schedule, and device field
+    assert_round_parity(
+        "kill/resume",
+        &x.summary.rounds,
+        y1.summary.rounds.iter().chain(&y2.summary.rounds),
+        Parity::full(),
+    );
     assert_eq!(
-        x.total_upload_bytes,
-        y1.total_upload_bytes + y2.total_upload_bytes,
+        x.summary.total_upload_bytes,
+        y1.summary.total_upload_bytes + y2.summary.total_upload_bytes,
         "uplink bytes must be conserved across the kill"
     );
     assert_eq!(
-        x.total_download_bytes,
-        y1.total_download_bytes + y2.total_download_bytes
+        x.summary.total_download_bytes,
+        y1.summary.total_download_bytes + y2.summary.total_download_bytes
     );
     // resuming under a different core config must refuse, not fork
     let mut wrong = small_cfg(3, 5); // rounds differ → different hash
@@ -891,6 +835,183 @@ fn kill_and_resume_reproduces_the_uninterrupted_run() {
     assert!(
         Leader::new(&rt, &m, wrong).is_err(),
         "resume accepted a store written under a different config"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn two_tier_aggregation_is_bit_for_bit_the_flat_path() {
+    // the fleet-tier acceptance pin: with quorum 1.0, λ = 1, and
+    // sample_m = N (every knob at its oracle setting, all stated
+    // explicitly), routing reports through 2 edge aggregators instead of
+    // folding flat must be a pure no-op — params, eval accs, and every
+    // PR-6-era byte ledger bit for bit, under live dropout AND straggler
+    // injection. Only the tier ledger itself may (must) differ: the
+    // tiered run prices its edge→root prefolds, the flat run ships none.
+    let Some(m) = manifest() else {
+        eprintln!("SKIP: artifacts missing");
+        return;
+    };
+    let rt = Runtime::cpu().unwrap();
+    let mut base = small_cfg(3, 5);
+    base.comm = CommMode::Pruned;
+    base.quorum = 1.0;
+    base.staleness_decay = 1.0; // λ = 1, explicit
+    base.sample_m = 3; // = N, explicit: the literal full-fleet path
+    base.dropout_prob = 0.3;
+    base.straggler_prob = 0.5;
+    let mut tiered = base.clone();
+    tiered.aggregators = 2;
+    let flat = harness::run(&rt, &m, base).unwrap();
+    let two_tier = harness::run(&rt, &m, tiered).unwrap();
+    // injection must actually have fired, or the test proves little
+    assert!(
+        flat.summary.rounds.iter().any(|r| !r.dropped.is_empty()),
+        "dropout injection produced no dropouts"
+    );
+    assert_twin_parity("two-tier vs flat", &flat, &two_tier, Parity::full());
+    // the tier ledger is the one permitted difference, and it must say
+    // what actually happened: the flat run never opened an edge tier,
+    // the tiered run shipped a priced prefold whenever anything folded
+    for r in &flat.summary.rounds {
+        assert_eq!(r.aggregators, 1, "round {}: flat run grew a tier", r.round);
+        assert_eq!(r.tier_upload_bytes, 0, "round {}: flat run priced a tier", r.round);
+    }
+    for r in &two_tier.summary.rounds {
+        assert_eq!(r.aggregators, 2, "round {}", r.round);
+        if r.worker_transfer.is_empty() {
+            // fleet-wide outage: no reports, no prefolds to ship
+            assert_eq!(r.tier_upload_bytes, 0, "round {}: outage priced a tier", r.round);
+        } else {
+            assert!(
+                r.tier_upload_bytes > 0,
+                "round {}: edge→root prefolds went unpriced",
+                r.round
+            );
+        }
+    }
+}
+
+#[test]
+fn sampled_cohorts_are_deterministic_and_schedule_independent() {
+    // cohort sampling's determinism pins: (1) the pipelined leader draws
+    // the exact cohort sequence the sequential oracle draws — full
+    // parity, cohorts included (the schedule family compares them);
+    // (2) the sample stream is its own RNG stream, so turning fault
+    // knobs on (which consume the dropout/straggler streams) must not
+    // move a single cohort.
+    let Some(m) = manifest() else {
+        eprintln!("SKIP: artifacts missing");
+        return;
+    };
+    let rt = Runtime::cpu().unwrap();
+    let mut cfg = small_cfg(4, 5);
+    cfg.comm = CommMode::Pruned;
+    cfg.sample_m = 2;
+    let seq = harness::run(&rt, &m, cfg.clone()).unwrap();
+    let mut piped = cfg.clone();
+    piped.pipeline = true;
+    let pipe = harness::run(&rt, &m, piped).unwrap();
+    assert_twin_parity("sampled sequential vs pipelined", &seq, &pipe, Parity::full());
+    for r in &seq.summary.rounds {
+        assert_eq!(r.cohort.len(), 2, "round {}: cohort size", r.round);
+        assert!(
+            r.cohort.windows(2).all(|w| w[0] < w[1]),
+            "round {}: cohort {:?} not strictly ascending",
+            r.round,
+            r.cohort
+        );
+        assert!(r.cohort.iter().all(|&w| w < 4), "round {}: unknown worker", r.round);
+        // no churn injected: everyone sampled is dispatched
+        assert_eq!(r.dispatched, 2, "round {}", r.round);
+        assert!(r.dropped.is_empty(), "round {}", r.round);
+    }
+    // the sampler must actually resample: 5 draws of 2-of-4 freezing on
+    // one cohort means the stream is not advancing
+    let distinct: std::collections::BTreeSet<_> =
+        seq.summary.rounds.iter().map(|r| r.cohort.clone()).collect();
+    assert!(distinct.len() > 1, "sampler froze on {:?}", seq.summary.rounds[0].cohort);
+    // stream disjointness: fault knobs draw on their own streams
+    let mut churned = cfg;
+    churned.dropout_prob = 0.4;
+    churned.straggler_prob = 0.5;
+    let c = harness::run(&rt, &m, churned).unwrap();
+    for (a, b) in seq.summary.rounds.iter().zip(&c.summary.rounds) {
+        assert_eq!(
+            a.cohort, b.cohort,
+            "round {}: dropout/straggler draws moved the cohort",
+            a.round
+        );
+    }
+}
+
+#[test]
+fn sample_m_off_and_full_fleet_are_bit_for_bit() {
+    // sample_m = 0 (the default: sampling off) and sample_m = N (an
+    // explicit full fleet) both take the literal pre-fleet dispatch path:
+    // the sample stream is never consumed, the cohort field stays empty,
+    // and the runs are bit-for-bit twins across every family
+    let Some(m) = manifest() else {
+        eprintln!("SKIP: artifacts missing");
+        return;
+    };
+    let rt = Runtime::cpu().unwrap();
+    let mut off = small_cfg(3, 4);
+    off.comm = CommMode::Sign;
+    let mut full = off.clone();
+    full.sample_m = 3;
+    let a = harness::run(&rt, &m, off).unwrap();
+    let b = harness::run(&rt, &m, full).unwrap();
+    assert_twin_parity("sample_m off vs = N", &a, &b, Parity::full());
+    for r in a.summary.rounds.iter().chain(&b.summary.rounds) {
+        assert!(r.cohort.is_empty(), "round {}: full fleet reported a cohort", r.round);
+        assert_eq!(r.dispatched, 3, "round {}", r.round);
+    }
+}
+
+#[test]
+fn sampled_kill_and_resume_reproduces_the_cohort_sequence() {
+    // the sample stream's durability pin: the run store persists the
+    // cohort RNG state alongside the fault streams, so a kill after
+    // round 1 and a resume must redraw rounds 2–3's cohorts exactly —
+    // if resume re-derived the stream from the seed, the stitched run's
+    // cohorts (and everything downstream) would fork here
+    let Some(m) = manifest() else {
+        eprintln!("SKIP: artifacts missing");
+        return;
+    };
+    let rt = Runtime::cpu().unwrap();
+    let dir =
+        std::env::temp_dir().join(format!("effgrad_fed_sampled_resume_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut base = small_cfg(3, 4);
+    base.comm = CommMode::Pruned;
+    base.sample_m = 2;
+
+    let x = harness::run(&rt, &m, base.clone()).unwrap();
+    let mut killed = base.clone();
+    killed.run_store = Some(dir.to_string_lossy().into_owned());
+    killed.faults = Some(FaultPlan {
+        kill_round: Some(1),
+        ..FaultPlan::default()
+    });
+    let y1 = harness::run(&rt, &m, killed).unwrap();
+    assert_eq!(y1.summary.rounds.len(), 2, "the kill must halt the run after round 1");
+    let mut resumed = base;
+    resumed.run_store = Some(dir.to_string_lossy().into_owned());
+    resumed.resume = true;
+    let y2 = harness::run(&rt, &m, resumed).unwrap();
+    assert_eq!(y2.summary.rounds.len(), 2);
+
+    assert_eq!(x.params, y2.params, "sampled resume forked the trajectory");
+    for r in x.summary.rounds.iter() {
+        assert_eq!(r.cohort.len(), 2, "round {}: cohort size", r.round);
+    }
+    assert_round_parity(
+        "sampled kill/resume",
+        &x.summary.rounds,
+        y1.summary.rounds.iter().chain(&y2.summary.rounds),
+        Parity::full(),
     );
     let _ = std::fs::remove_dir_all(&dir);
 }
