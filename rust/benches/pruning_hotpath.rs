@@ -19,7 +19,8 @@
 
 use std::time::Duration;
 
-use efficientgrad::benchlib::{bench, fmt_ns, Report};
+use efficientgrad::benchlib::{bench, fmt_ns, Report, Sample};
+use efficientgrad::comm::{SignTensor, TensorUpdate};
 use efficientgrad::data::synthetic::{generate, SynthConfig};
 use efficientgrad::manifest::Manifest;
 use efficientgrad::params::ParamStore;
@@ -27,11 +28,68 @@ use efficientgrad::runtime::{Runtime, TrainState};
 use efficientgrad::sparsity;
 use efficientgrad::tensor::Tensor;
 use efficientgrad::util::rng::Rng;
+use efficientgrad::util::simd;
 use efficientgrad::util::stats::{std_dev, zero_fraction};
 
 /// Reduced budget for CI (`EFFICIENTGRAD_BENCH_SHORT=1`).
 fn short_mode() -> bool {
     std::env::var_os("EFFICIENTGRAD_BENCH_SHORT").is_some()
+}
+
+/// Time one kernel down both dispatch paths: scalar oracle first
+/// (force flag on), then whatever `simd::active()` selects. Without the
+/// `simd` feature (or on a host without AVX2) both columns time the
+/// same scalar code — the matrix says so in its title.
+fn matrix_pair<F: FnMut()>(
+    name: &str,
+    iters: usize,
+    budget: Duration,
+    mut f: F,
+) -> (Sample, Sample) {
+    simd::force_scalar(true);
+    let s = bench(&format!("{name} [scalar]"), 2, iters, budget, &mut f);
+    simd::force_scalar(false);
+    let v = bench(&format!("{name} [simd]"), 2, iters, budget, &mut f);
+    (s, v)
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Append the kernel-matrix rows (their own header set) to the JSON
+/// report `save_json` just wrote, keeping the host-kernel rows — same
+/// merge idiom as `fleet_scale`'s `BENCH_runtime.json` rows.
+fn merge_rows_into_json(
+    path: &std::path::Path,
+    headers: &[&str],
+    rows: &[Vec<String>],
+) -> anyhow::Result<()> {
+    use efficientgrad::util::json::{arr, Json};
+    let text = std::fs::read_to_string(path)?;
+    let existing = Json::parse(&text)?;
+    let mut out_rows: Vec<Json> = existing
+        .get("rows")
+        .and_then(Json::as_arr)
+        .unwrap_or(&[])
+        .to_vec();
+    out_rows.extend(rows.iter().map(|r| {
+        Json::Obj(
+            headers
+                .iter()
+                .map(|h| h.to_string())
+                .zip(r.iter().map(|c| Json::Str(c.clone())))
+                .collect(),
+        )
+    }));
+    let mut o = std::collections::BTreeMap::new();
+    for key in ["title", "headers"] {
+        if let Some(v) = existing.get(key) {
+            o.insert(key.to_string(), v.clone());
+        }
+    }
+    o.insert("rows".to_string(), arr(out_rows));
+    efficientgrad::util::fs::atomic_write(path, format!("{}\n", Json::Obj(o)).as_bytes())
 }
 
 fn main() {
@@ -123,6 +181,145 @@ fn main() {
         .unwrap();
     rep.save_json(std::path::Path::new("BENCH_pruning.json")).unwrap();
     println!("json -> BENCH_pruning.json");
+
+    // ------------------------------------------------------------------
+    // SIMD kernel matrix: scalar vs vectorized columns at n = one
+    // `util::par` CHUNK (1<<16), the inline no-thread-spawn path, so the
+    // columns time the kernel and nothing else. Outputs are asserted
+    // bit-identical before anything is trusted, and with the feature
+    // active the three tentpole kernels must clear the 2x elements/sec
+    // floor — asserted, not just printed.
+    // ------------------------------------------------------------------
+    let kn = 1 << 16;
+    let simd_on = cfg!(feature = "simd") && simd::available();
+    let mut kd = vec![0f32; kn];
+    rng.fill_normal(&mut kd, 0.02);
+    let ktau = sparsity::tau_from_rate(std_dev(&kd), 0.9);
+    let kbase = Rng::new(5);
+    let mut kpruned = vec![0f32; kn];
+    sparsity::stochastic_prune_into_partitioned(&kd, ktau, &kbase, &mut kpruned);
+    let kup = TensorUpdate::Sign(SignTensor::encode(&kpruned));
+
+    // parity gate: both dispatch paths must agree bit for bit on every
+    // kernel the matrix times (the e2e twin pin lives in tests/federated)
+    {
+        let run = |force: bool| {
+            simd::force_scalar(force);
+            let mut ax = kd.clone();
+            simd::axpy(&mut ax, 0.5, &kpruned);
+            let mut pr = vec![0f32; kn];
+            sparsity::stochastic_prune_into_partitioned(&kd, ktau, &kbase, &mut pr);
+            let enc = SignTensor::encode(&pr);
+            let mut acc = vec![0f64; kn];
+            kup.axpy_into_f64(0.25, &mut acc);
+            let mut dec = vec![0f32; kn];
+            kup.decode_into(&mut dec);
+            simd::force_scalar(false);
+            (bits(&ax), bits(&pr), enc, acc, bits(&dec))
+        };
+        let (ax_s, pr_s, enc_s, acc_s, dec_s) = run(true);
+        let (ax_v, pr_v, enc_v, acc_v, dec_v) = run(false);
+        assert_eq!(ax_s, ax_v, "axpy: scalar and simd paths disagree");
+        assert_eq!(pr_s, pr_v, "threshold pass: scalar and simd paths disagree");
+        assert_eq!(
+            (&enc_s.presence, &enc_s.signs, enc_s.nnz, enc_s.magnitude.to_bits()),
+            (&enc_v.presence, &enc_v.signs, enc_v.nnz, enc_v.magnitude.to_bits()),
+            "sign encode: scalar and simd paths disagree"
+        );
+        let acc_s: Vec<u64> = acc_s.iter().map(|x| x.to_bits()).collect();
+        let acc_v: Vec<u64> = acc_v.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(acc_s, acc_v, "sign fold axpy f64: scalar and simd paths disagree");
+        assert_eq!(dec_s, dec_v, "sign decode: scalar and simd paths disagree");
+        println!("kernel matrix parity: scalar == simd bit for bit on all timed kernels");
+    }
+
+    const MATRIX_HEADERS: [&str; 6] =
+        ["kernel", "scalar", "simd", "scalar Melem/s", "simd Melem/s", "speedup"];
+    let mut matrix = Report::new(
+        &format!(
+            "SIMD kernel matrix, n={kn} ({})",
+            if simd_on { "simd active" } else { "simd unavailable: both columns scalar" }
+        ),
+        &MATRIX_HEADERS,
+    );
+    let mut matrix_rows: Vec<Vec<String>> = Vec::new();
+    let mut speedups: Vec<(&str, f64)> = Vec::new();
+    {
+        let mut emit = |name: &str, s: &Sample, v: &Sample| {
+            let speedup = s.mean_ns / v.mean_ns;
+            let row = vec![
+                format!("matrix {name}"),
+                fmt_ns(s.mean_ns),
+                fmt_ns(v.mean_ns),
+                format!("{:.0}", s.throughput(kn as f64) / 1e6),
+                format!("{:.0}", v.throughput(kn as f64) / 1e6),
+                format!("{speedup:.2}x"),
+            ];
+            matrix.row(row.clone());
+            matrix_rows.push(row);
+            speedup
+        };
+
+        // dense f32 axpy: memory-bound and already autovectorized by the
+        // compiler on the scalar path — a column for honesty, no floor
+        let mut dst = kd.clone();
+        let (s, v) = matrix_pair("axpy f32", iters, budget, || {
+            simd::axpy(&mut dst, 0.5, &kpruned);
+        });
+        emit("axpy f32 (dense)", &s, &v);
+
+        // the leader's O(nnz) fold of a sign update into the f64
+        // accumulator — the per-worker per-round aggregation kernel
+        let mut acc = vec![0f64; kn];
+        let (s, v) = matrix_pair("fold axpy sign->f64", iters, budget, || {
+            kup.axpy_into_f64(0.25, &mut acc);
+        });
+        speedups.push(("fold axpy sign->f64", emit("fold axpy (sign->f64)", &s, &v)));
+
+        // eq. 3 threshold/survivor-select pass, the codec's per-tensor
+        // prune (deterministic partitioned variant)
+        let mut out = vec![0f32; kn];
+        let (s, v) = matrix_pair("threshold pass", iters, budget, || {
+            sparsity::stochastic_prune_into_partitioned(&kd, ktau, &kbase, &mut out);
+        });
+        speedups.push(("threshold pass", emit("threshold pass (eq. 3 partitioned)", &s, &v)));
+
+        // sign bit-plane encode: word-at-a-time movemask pack vs the old
+        // per-element bit pushes
+        let (s, v) = matrix_pair("sign encode", iters, budget, || {
+            std::hint::black_box(SignTensor::encode(&kpruned));
+        });
+        speedups.push(("sign encode", emit("sign encode (bit-planes)", &s, &v)));
+
+        // sign bit-plane decode into a dense buffer (no floor: the
+        // scalar walk is already cheap next to the encode)
+        let mut dec = vec![0f32; kn];
+        let (s, v) = matrix_pair("sign decode", iters, budget, || {
+            kup.decode_into(&mut dec);
+        });
+        emit("sign decode (bit-planes)", &s, &v);
+    }
+    matrix.print();
+    matrix
+        .save_csv(&efficientgrad::figures::reports_dir().join("pruning_kernel_matrix.csv"))
+        .unwrap();
+    merge_rows_into_json(std::path::Path::new("BENCH_pruning.json"), &MATRIX_HEADERS, &matrix_rows)
+        .unwrap();
+    println!("json -> BENCH_pruning.json (kernel matrix merged)");
+
+    // the acceptance floor: with the feature compiled in and the host
+    // able to run it, the tentpole kernels must be >= 2x elements/sec
+    if simd_on {
+        for (name, speedup) in &speedups {
+            assert!(
+                *speedup >= 2.0,
+                "{name}: simd speedup {speedup:.2}x below the 2x acceptance floor"
+            );
+        }
+        println!("simd acceptance floor: all three tentpole kernels >= 2x");
+    } else {
+        println!("simd inactive: kernel matrix recorded, 2x floor not enforced");
+    }
 
     // through the real artifacts (skips without `make artifacts` — the
     // host-kernel rows above are already saved either way)

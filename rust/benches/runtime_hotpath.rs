@@ -17,7 +17,12 @@
 //! * the federated *network* tier: per-round wire-byte rows for the
 //!   `dense` vs `pruned` vs `sign` comm modes, asserting measured bytes
 //!   equal the documented formulas and that the steady-state sign rows
-//!   cut ≥5× vs dense at the paper's P=0.9.
+//!   cut ≥5× vs dense at the paper's P=0.9;
+//! * allocator traffic on the codec hot path: a counting global
+//!   allocator prices `DeltaCodec::encode`'s steady-state allocs/round,
+//!   asserting the reusable prune scratch keeps it below the dense
+//!   buffer the old code allocated every round (host-only rows — they
+//!   run and print even without artifacts).
 //!
 //! Rows are also emitted to `BENCH_runtime.json` so the trajectory is
 //! tracked across PRs. Set `EFFICIENTGRAD_BENCH_SHORT=1` (CI) for a
@@ -25,6 +30,8 @@
 //!
 //!     cargo bench --bench runtime_hotpath
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
 use efficientgrad::benchlib::{bench, bench_default, fmt_ns, Report, Sample};
@@ -41,13 +48,106 @@ use efficientgrad::runtime::{
     literal_step_state_bytes, resident_step_state_bytes, tensor_to_literal, DeviceState, Runtime,
     TrainState, TransferStats,
 };
+use efficientgrad::tensor::Tensor;
+
+/// Counting wrapper over the system allocator: prices allocator traffic
+/// on the codec hot path without changing allocation behavior.
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static COUNTING_ALLOC: CountingAlloc = CountingAlloc;
 
 /// Reduced budget for CI (`EFFICIENTGRAD_BENCH_SHORT=1`).
 fn short_mode() -> bool {
     std::env::var_os("EFFICIENTGRAD_BENCH_SHORT").is_some()
 }
 
+/// Steady-state allocator traffic of `DeltaCodec::encode`: warm two
+/// rounds (residual + scratch size themselves there), then measure. The
+/// scratch-reuse claim is asserted, not just printed: in sign mode a
+/// round's allocations are the wire planes and bookkeeping — a fraction
+/// of the dense-size prune buffer the codec used to allocate per round.
+/// Synthetic host-only tensors (each ≤ one `util::par` CHUNK, so the
+/// encode runs inline and the counter sees only the codec).
+fn codec_alloc_rows() -> Vec<Vec<String>> {
+    const SHAPES: [usize; 3] = [1 << 16, 1 << 12, 300];
+    let elems: usize = SHAPES.iter().sum();
+    let dense_bytes = 4 * elems as u64;
+    let mut rows = Vec::new();
+    for comm in [CommMode::Sign, CommMode::Pruned] {
+        let mut codec = DeltaCodec::new(comm, 0.9);
+        let reference: Vec<Tensor> = SHAPES.iter().map(|&n| Tensor::zeros(&[n])).collect();
+        let mut local = reference.clone();
+        let mut data_rng = Rng::new(71);
+        let mut prune_rng = Rng::new(72);
+        let mut round = |codec: &mut DeltaCodec, local: &mut Vec<Tensor>| {
+            for t in local.iter_mut() {
+                data_rng.fill_normal(t.data_mut(), 0.02);
+            }
+            std::hint::black_box(codec.encode(local, &reference, &mut prune_rng).unwrap());
+        };
+        for _ in 0..2 {
+            round(&mut codec, &mut local);
+        }
+        const ROUNDS: u64 = 20;
+        let calls0 = ALLOC_CALLS.load(Ordering::Relaxed);
+        let bytes0 = ALLOC_BYTES.load(Ordering::Relaxed);
+        for _ in 0..ROUNDS {
+            round(&mut codec, &mut local);
+        }
+        let calls = (ALLOC_CALLS.load(Ordering::Relaxed) - calls0) / ROUNDS;
+        let bytes = (ALLOC_BYTES.load(Ordering::Relaxed) - bytes0) / ROUNDS;
+        println!(
+            "codec alloc/round [{}]: {calls} allocs, {bytes} B (dense prune buffer was {dense_bytes} B)",
+            comm.as_str()
+        );
+        if comm == CommMode::Sign {
+            // sign planes are ~E/8 + nnz/8 bytes; with the prune scratch
+            // reused, a steady-state round must stay well under the
+            // dense-size buffer the pre-scratch codec allocated per round
+            assert!(
+                bytes < dense_bytes / 2,
+                "sign encode allocates {bytes} B/round — scratch reuse regressed \
+                 (dense buffer is {dense_bytes} B)"
+            );
+        }
+        rows.push(vec![
+            format!("codec alloc/round [{}]: P=0.9, {} tensors ({elems} elems)", comm.as_str(), SHAPES.len()),
+            format!("{calls} allocs/round"),
+            format!("{bytes} B/round"),
+            "-".into(),
+            "-".into(),
+            format!("dense buffer {dense_bytes} B"),
+        ]);
+    }
+    rows
+}
+
 fn main() {
+    // host-only: runs (and asserts) before the artifact gate so the
+    // allocator rows exist on every platform
+    let alloc_rows = codec_alloc_rows();
     let Ok(manifest) = Manifest::load(&efficientgrad::artifacts_dir()) else {
         eprintln!("SKIP: artifacts missing (run `make artifacts`)");
         return;
@@ -60,6 +160,9 @@ fn main() {
         "L3 runtime hot path (literal vs device-resident step + eval backends)",
         &["op", "mean", "p50", "p95", "per-image µs", "state B/step"],
     );
+    for row in alloc_rows {
+        rep.row(row);
+    }
     let per_image = |s: &Sample, batch: usize| format!("{:.1}", s.mean_ns / 1e3 / batch as f64);
     let timing_row = |rep: &mut Report, s: &Sample, per_img: String, state: String| {
         rep.row(vec![

@@ -49,6 +49,10 @@ pub struct DeltaCodec {
     /// per-tensor carried-over pruning error; empty until the first
     /// compressed encode
     residual: Vec<Vec<f32>>,
+    /// reusable prune-output scratch, grown once to the largest tensor
+    /// and reused every round — per-round encode allocates nothing
+    /// dense-sized (pinned by the allocs/round row in `runtime_hotpath`)
+    scratch: Vec<f32>,
 }
 
 impl DeltaCodec {
@@ -62,6 +66,7 @@ impl DeltaCodec {
             rate,
             pruner,
             residual: Vec::new(),
+            scratch: Vec::new(),
         }
     }
 
@@ -107,7 +112,6 @@ impl DeltaCodec {
         // so the partitioned parallel prune cannot depend on scheduling
         let base = Rng::new(rng.next_u64());
         let mut updates = Vec::with_capacity(local.len());
-        let mut pruned = Vec::new();
         for (ti, ((l, r), res)) in local
             .iter()
             .zip(reference)
@@ -123,13 +127,15 @@ impl DeltaCodec {
                 );
             }
             // delta + carried error, in place in the residual buffer —
-            // element-wise, chunked across the thread pool
+            // element-wise, chunked across the thread pool, vectorized
+            // per chunk under `simd`
             par::for_each_chunk_triple(res, l.data(), r.data(), |_, e, a, b| {
-                for (x, (&av, &bv)) in e.iter_mut().zip(a.iter().zip(b)) {
-                    *x += av - bv;
-                }
+                crate::util::simd::fold_delta(e, a, b)
             });
-            pruned.resize(res.len(), 0.0);
+            // the prune output lands in the codec's reusable scratch:
+            // both pruners overwrite every element, so stale content from
+            // a previous (even larger) tensor never leaks through
+            self.scratch.resize(res.len(), 0.0);
             match self.pruner {
                 CommPruner::Stochastic => {
                     let sigma = std_dev(res);
@@ -138,7 +144,7 @@ impl DeltaCodec {
                         res,
                         tau,
                         &base.fold_in(ti as u64),
-                        &mut pruned,
+                        &mut self.scratch,
                     );
                 }
                 // exact top-k by |δ|: deterministic (the caller's draw is
@@ -146,12 +152,12 @@ impl DeltaCodec {
                 // any other consumer of the rng stream), and the survivor
                 // fraction is exactly 1−P instead of eq. 3's ≈46% floor
                 CommPruner::TopK => {
-                    topk_prune_into(res, topk_keep_count(res.len(), self.rate), &mut pruned);
+                    topk_prune_into(res, topk_keep_count(res.len(), self.rate), &mut self.scratch);
                 }
             }
             let update = match self.mode {
-                CommMode::Pruned => TensorUpdate::Sparse(SparseTensor::encode(&pruned)),
-                CommMode::Sign => TensorUpdate::Sign(SignTensor::encode(&pruned)),
+                CommMode::Pruned => TensorUpdate::Sparse(SparseTensor::encode(&self.scratch)),
+                CommMode::Sign => TensorUpdate::Sign(SignTensor::encode(&self.scratch)),
                 CommMode::Dense => unreachable!("handled above"),
             };
             // residual = (delta + old residual) − decode(update); for the
@@ -163,7 +169,9 @@ impl DeltaCodec {
                         res[i as usize] -= v;
                     }
                 }
-                TensorUpdate::Sign(t) => t.for_each_survivor(|i, v| res[i] -= v),
+                // x + (−1)·v ≡ x − v bit for bit; the fold dispatches to
+                // the vectorized sign kernel under `simd`
+                TensorUpdate::Sign(t) => t.axpy_into_slice(-1.0, res),
             }
             updates.push(update);
         }

@@ -176,6 +176,15 @@ impl SparseTensor {
     pub fn encode(pruned: &[f32]) -> Self {
         let mut indices = Vec::new();
         let mut values = Vec::new();
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        if crate::util::simd::active() {
+            crate::util::simd::sparse_encode_into(pruned, &mut indices, &mut values);
+            return Self {
+                elems: pruned.len() as u32,
+                indices,
+                values,
+            };
+        }
         for (i, &v) in pruned.iter().enumerate() {
             if v != 0.0 {
                 indices.push(i as u32);
@@ -221,11 +230,26 @@ pub struct SignTensor {
 impl SignTensor {
     /// Encode the nonzero coordinates of a (pruned) dense buffer as
     /// presence + sign planes with a shared magnitude.
+    ///
+    /// Under `--features simd` the planes are built a word at a time
+    /// (movemask-style: 32 lanes per u32, BMI2 `pext` sign compaction);
+    /// [`SignTensor::encode_scalar`] is the bit-for-bit oracle the vector
+    /// path is pinned against.
     pub fn encode(pruned: &[f32]) -> Self {
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        if crate::util::simd::active() {
+            let (presence, signs, nnz) = crate::util::simd::sign_encode_planes(pruned);
+            return Self::assemble(pruned, presence, signs, nnz);
+        }
+        Self::encode_scalar(pruned)
+    }
+
+    /// The scalar oracle: per-element plane pushes, exactly the loop the
+    /// word-at-a-time encoder must reproduce bit for bit.
+    pub(crate) fn encode_scalar(pruned: &[f32]) -> Self {
         let mut presence = vec![0u32; pruned.len().div_ceil(32)];
         let mut signs = Vec::new();
         let mut nnz = 0u32;
-        let mut mag_sum = 0.0f64;
         for (i, &v) in pruned.iter().enumerate() {
             if v != 0.0 {
                 presence[i / 32] |= 1 << (i % 32);
@@ -237,13 +261,20 @@ impl SignTensor {
                     signs[j / 32] |= 1 << (j % 32);
                 }
                 nnz += 1;
-                mag_sum += v.abs() as f64;
             }
         }
+        Self::assemble(pruned, presence, signs, nnz)
+    }
+
+    /// Shared magnitude + header assembly. Mean |survivor| is computed as
+    /// the striped Σ|x| over *all* elements (non-survivors are exactly
+    /// ±0.0 and contribute +0.0), so scalar and simd builds — and both
+    /// encode paths — produce identical magnitude bytes.
+    fn assemble(pruned: &[f32], presence: Vec<u32>, signs: Vec<u32>, nnz: u32) -> Self {
         let magnitude = if nnz == 0 {
             0.0
         } else {
-            (mag_sum / nnz as f64) as f32
+            (crate::util::simd::abs_sum_striped(pruned) / nnz as f64) as f32
         };
         Self {
             elems: pruned.len() as u32,
@@ -256,6 +287,21 @@ impl SignTensor {
 
     pub fn wire_bytes(&self) -> u64 {
         sign_tensor_bytes(self.elems as usize, self.nnz as usize)
+    }
+
+    /// `dst[i] += alpha · value` over survivors, non-survivor lanes
+    /// untouched — the slice-level sign fold shared by
+    /// [`TensorUpdate::axpy_into`] and the codec's residual update
+    /// (`alpha = −1`: `x + (−1)·v` is bit-identical to `x − v`).
+    /// Dispatches to the word-at-a-time AVX2 fold under `--features
+    /// simd`; the [`SignTensor::for_each_survivor`] walk is the oracle.
+    pub fn axpy_into_slice(&self, alpha: f32, dst: &mut [f32]) {
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        if crate::util::simd::active() {
+            crate::util::simd::sign_axpy_f32(&self.presence, &self.signs, self.magnitude, alpha, dst);
+            return;
+        }
+        self.for_each_survivor(|i, v| dst[i] += alpha * v);
     }
 
     /// Visit `(element_index, decoded_value)` for every survivor, in
@@ -322,10 +368,7 @@ impl TensorUpdate {
         );
         match self {
             TensorUpdate::Sparse(t) => dst.axpy_sparse(alpha, &t.indices, &t.values),
-            TensorUpdate::Sign(t) => {
-                let data = dst.data_mut();
-                t.for_each_survivor(|i, v| data[i] += alpha * v);
-            }
+            TensorUpdate::Sign(t) => t.axpy_into_slice(alpha, dst.data_mut()),
         }
     }
 
@@ -348,7 +391,14 @@ impl TensorUpdate {
                     dst[i as usize] += alpha * v as f64;
                 }
             }
-            TensorUpdate::Sign(t) => t.for_each_survivor(|i, v| dst[i] += alpha * v as f64),
+            TensorUpdate::Sign(t) => {
+                #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+                if crate::util::simd::active() {
+                    crate::util::simd::sign_axpy_f64(&t.presence, &t.signs, t.magnitude, alpha, dst);
+                    return;
+                }
+                t.for_each_survivor(|i, v| dst[i] += alpha * v as f64)
+            }
         }
     }
 
@@ -363,18 +413,44 @@ impl TensorUpdate {
         }
     }
 
-    /// Decode to a dense buffer (tests / residual bookkeeping).
+    /// Decode to a dense buffer (tests / residual bookkeeping). Allocates;
+    /// per-round paths should hold a scratch buffer and use
+    /// [`TensorUpdate::decode_into`] instead.
     pub fn decode_dense(&self) -> Vec<f32> {
         let mut out = vec![0.0f32; self.elems()];
+        self.decode_into(&mut out);
+        out
+    }
+
+    /// Decode into a caller-provided dense scratch, overwriting every lane
+    /// (`out.len()` must equal `self.elems()`). This is the allocation-free
+    /// decode the leader threads one reusable buffer through instead of
+    /// allocating a dense-size `Vec` per worker per round.
+    pub fn decode_into(&self, out: &mut [f32]) {
+        assert_eq!(
+            self.elems(),
+            out.len(),
+            "update for {} elements decoded into scratch of {}",
+            self.elems(),
+            out.len()
+        );
         match self {
             TensorUpdate::Sparse(t) => {
+                out.fill(0.0);
                 for (&i, &v) in t.indices.iter().zip(&t.values) {
                     out[i as usize] = v;
                 }
             }
-            TensorUpdate::Sign(t) => t.for_each_survivor(|i, v| out[i] = v),
+            TensorUpdate::Sign(t) => {
+                #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+                if crate::util::simd::active() {
+                    crate::util::simd::sign_decode_into(&t.presence, &t.signs, t.magnitude, out);
+                    return;
+                }
+                out.fill(0.0);
+                t.for_each_survivor(|i, v| out[i] = v);
+            }
         }
-        out
     }
 }
 

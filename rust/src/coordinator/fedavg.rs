@@ -48,14 +48,11 @@ fn check_weights(n_updates: usize, weights: &[f64]) -> Result<f64> {
     Ok(total)
 }
 
-/// Narrow an f64 accumulator into a fresh f32 tensor (chunk-parallel).
+/// Narrow an f64 accumulator into a fresh f32 tensor (chunk-parallel,
+/// vectorized per chunk under `simd`).
 fn narrow(shape: &[usize], acc: &[f64]) -> Tensor {
     let mut data = vec![0.0f32; acc.len()];
-    par::for_each_chunk_pair(&mut data, acc, |_, o, s| {
-        for (d, &v) in o.iter_mut().zip(s) {
-            *d = v as f32;
-        }
-    });
+    par::for_each_chunk_pair(&mut data, acc, |_, o, s| crate::util::simd::narrow(o, s));
     Tensor::new(shape.to_vec(), data)
 }
 
@@ -95,9 +92,7 @@ pub fn weighted_fedavg(updates: &[&Vec<Tensor>], weights: &[f64]) -> Result<Vec<
             }
             let alpha = weights[k] / total;
             par::for_each_chunk_pair(&mut acc, t.data(), |_, a, s| {
-                for (x, &v) in a.iter_mut().zip(s) {
-                    *x += alpha * v as f64;
-                }
+                crate::util::simd::axpy_widen(a, alpha, s)
             });
         }
         out.push(narrow(shape, &acc));
@@ -141,13 +136,10 @@ pub fn weighted_sparse_fedavg(
     }
     let mut out = Vec::with_capacity(base.len());
     for (ti, b) in base.iter().enumerate() {
-        // widen base into the accumulator (chunk-parallel)
+        // widen base into the accumulator (chunk-parallel, vectorized
+        // per chunk under `simd`)
         let mut acc = vec![0.0f64; b.len()];
-        par::for_each_chunk_pair(&mut acc, b.data(), |_, a, s| {
-            for (x, &v) in a.iter_mut().zip(s) {
-                *x = v as f64;
-            }
-        });
+        par::for_each_chunk_pair(&mut acc, b.data(), |_, a, s| crate::util::simd::widen(a, s));
         for (k, u) in updates.iter().enumerate() {
             let tu = &u[ti];
             if tu.elems() != b.len() {
@@ -310,19 +302,19 @@ impl StreamingAggregator {
                     })
                     .collect();
                 let folded = weighted_sparse_fedavg(reference, &deltas, &weights)?;
-                let delta = folded
-                    .iter()
-                    .zip(reference)
-                    .map(|(f, r)| {
-                        let diff: Vec<f32> = f
-                            .data()
-                            .iter()
-                            .zip(r.data())
-                            .map(|(&a, &b)| a - b)
-                            .collect();
-                        TensorUpdate::Sparse(SparseTensor::encode(&diff))
-                    })
-                    .collect();
+                // one diff buffer reused across tensors: a prefolding
+                // edge runs this every round, so the O(P) temporary is
+                // sized once instead of collected per tensor
+                let mut diff: Vec<f32> = Vec::new();
+                let mut delta = Vec::with_capacity(folded.len());
+                for (f, r) in folded.iter().zip(reference) {
+                    diff.clear();
+                    diff.resize(f.len(), 0.0);
+                    par::for_each_chunk_triple(&mut diff, f.data(), r.data(), |_, e, a, b| {
+                        crate::util::simd::fold_delta(e, a, b)
+                    });
+                    delta.push(TensorUpdate::Sparse(SparseTensor::encode(&diff)));
+                }
                 Ok(Some((total, ModelUpdate::Delta(delta))))
             }
         }
@@ -372,7 +364,13 @@ impl StreamingAggregator {
 /// Arrival-time decode of one wire tensor: sign bit-planes unpack into
 /// explicit survivor (index, value) lists — the exact values and order
 /// `for_each_survivor` yields, so the later fold is unchanged math —
-/// while sparse updates are already in fold-ready form.
+/// while sparse updates are already in fold-ready form. This stays
+/// scalar even under `simd`: it runs once per report at arrival time,
+/// off the fold's critical path, and its output is a sparse survivor
+/// list whose fold is an in-order scatter — the shape that cannot
+/// vectorize without conflict detection (see `Tensor::axpy_sparse`).
+/// Callers folding raw `Sign` updates (no predecode) do hit the
+/// vectorized `util::simd::sign_axpy_f64` plane kernel instead.
 fn predecode(u: TensorUpdate) -> TensorUpdate {
     match u {
         TensorUpdate::Sign(t) => {

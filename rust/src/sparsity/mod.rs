@@ -39,10 +39,23 @@ pub fn stochastic_prune_into(delta: &[f32], tau: f64, rng: &mut Rng, out: &mut [
 }
 
 /// The eq. 3 element loop over one slice, shared by the single-stream
-/// and partitioned variants. An element escapes the band outright when
-/// |δ| > τ; in-band elements are promoted to ±τ with probability |δ|/τ
-/// (one uniform draw each), else zeroed.
+/// and partitioned variants. Dispatches to the AVX2 kernel under
+/// `--features simd` (τ ≥ 0 only — eq. 5 guarantees it; the vector
+/// promotion ORs the sign bit onto τ); [`prune_slice_scalar`] stays the
+/// bit-for-bit oracle, draw order included.
 fn prune_slice(delta: &[f32], tau: f64, rng: &mut Rng, out: &mut [f32]) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if tau >= 0.0 && crate::util::simd::active() {
+        crate::util::simd::prune_slice_vector(delta, tau, rng, out);
+        return;
+    }
+    prune_slice_scalar(delta, tau, rng, out);
+}
+
+/// eq. 3, scalar: an element escapes the band outright when |δ| > τ;
+/// in-band elements are promoted to ±τ with probability |δ|/τ (one
+/// uniform draw each, in element order), else zeroed.
+pub(crate) fn prune_slice_scalar(delta: &[f32], tau: f64, rng: &mut Rng, out: &mut [f32]) {
     for (o, &d) in out.iter_mut().zip(delta) {
         let mag = d.abs() as f64;
         *o = if mag > tau {
@@ -138,9 +151,14 @@ pub fn topk_prune_into(delta: &[f32], k: usize, out: &mut [f32]) {
     if k == 0 {
         return;
     }
+    // |δ| keys computed once up front (vectorized under `simd`) so the
+    // O(n) selection compares ready-made magnitudes instead of taking
+    // abs twice per comparison — identical key values, identical result
+    let mut keys = vec![0f32; delta.len()];
+    crate::util::simd::abs_into(&mut keys, delta);
     let mut idx: Vec<u32> = (0..delta.len() as u32).collect();
     idx.select_nth_unstable_by(k - 1, |&a, &b| {
-        let (ma, mb) = (delta[a as usize].abs(), delta[b as usize].abs());
+        let (ma, mb) = (keys[a as usize], keys[b as usize]);
         // descending magnitude; NaNs (diverged deltas) sort last; equal
         // magnitudes break toward the lower index — total, deterministic
         mb.partial_cmp(&ma)

@@ -104,7 +104,9 @@ impl Tensor {
     // -- in-place arithmetic used by FedAvg / metrics ----------------------
     //
     // The O(P) kernels below chunk across the scoped-thread pool in
-    // `util::par`. Every one is element-wise (or, for the sparse
+    // `util::par`, with the per-chunk loop routed through `util::simd`
+    // (AVX2 under `--features simd`, scalar otherwise — pinned
+    // bit-identical). Every one is element-wise (or, for the sparse
     // scatter, range-partitioned on sorted indices), so the parallel
     // result is bit-identical to the sequential one — required by the
     // pipelined-vs-sequential federated parity pin.
@@ -113,9 +115,7 @@ impl Tensor {
     pub fn add_assign(&mut self, other: &Tensor) {
         assert_eq!(self.shape, other.shape);
         crate::util::par::for_each_chunk_pair(&mut self.data, &other.data, |_, a, b| {
-            for (x, &y) in a.iter_mut().zip(b) {
-                *x += y;
-            }
+            crate::util::simd::add_assign(a, b)
         });
     }
 
@@ -123,9 +123,7 @@ impl Tensor {
     pub fn axpy(&mut self, alpha: f32, other: &Tensor) {
         assert_eq!(self.shape, other.shape);
         crate::util::par::for_each_chunk_pair(&mut self.data, &other.data, |_, a, b| {
-            for (x, &y) in a.iter_mut().zip(b) {
-                *x += alpha * y;
-            }
+            crate::util::simd::axpy(a, alpha, b)
         });
     }
 
@@ -180,6 +178,11 @@ impl Tensor {
                 }
             }
             crate::util::par::run_tasks(tasks, |(dst, start, idx, vals)| {
+                // the scatter stays scalar even under `simd`: duplicates
+                // must accumulate in index order, which a gathered vector
+                // add can't honor without AVX-512 conflict detection —
+                // the sign-plane fold (`util::simd::sign_axpy_*`) is the
+                // vectorized O(nnz) fold on the leader's hot path
                 for (&i, &v) in idx.iter().zip(vals) {
                     dst[i as usize - start] += alpha * v;
                 }
@@ -194,9 +197,7 @@ impl Tensor {
     /// self *= alpha
     pub fn scale(&mut self, alpha: f32) {
         crate::util::par::for_each_chunk_mut(&mut self.data, |_, c| {
-            for a in c.iter_mut() {
-                *a *= alpha;
-            }
+            crate::util::simd::scale(c, alpha)
         });
     }
 
@@ -205,14 +206,24 @@ impl Tensor {
     pub fn scaled(&self, alpha: f32) -> Tensor {
         let mut data = vec![0.0f32; self.data.len()];
         crate::util::par::for_each_chunk_pair(&mut data, &self.data, |_, o, s| {
-            for (d, &v) in o.iter_mut().zip(s) {
-                *d = alpha * v;
-            }
+            crate::util::simd::scaled(o, alpha, s)
         });
         Tensor {
             shape: self.shape.clone(),
             data,
         }
+    }
+
+    /// Mean of the elements ([`crate::util::stats::mean`]: striped,
+    /// chunk-deterministic, simd-dispatched).
+    pub fn mean(&self) -> f64 {
+        crate::util::stats::mean(&self.data)
+    }
+
+    /// Population std-dev of the elements
+    /// ([`crate::util::stats::std_dev`]: one fused striped pass).
+    pub fn std_dev(&self) -> f64 {
+        crate::util::stats::std_dev(&self.data)
     }
 
     /// L2 norm.

@@ -6,4 +6,5 @@ pub mod json;
 pub mod logging;
 pub mod par;
 pub mod rng;
+pub mod simd;
 pub mod stats;

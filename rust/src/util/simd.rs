@@ -1,0 +1,1253 @@
+//! Vectorized host kernels with a scalar bit-for-bit oracle.
+//!
+//! Every hot loop in the coordinator path (FedAvg folds, the eq. 3 threshold
+//! pass, the sign bit-plane codec) funnels through this module. The scalar
+//! implementations here are the *normative* definitions; the AVX2/BMI2 paths
+//! (compiled only under `--features simd` on x86_64, selected only when the
+//! CPU reports avx2+bmi2+popcnt at runtime) are pinned bit-for-bit against
+//! them by the unit tests at the bottom of this file and by the federated
+//! twin-run pin in `tests/federated.rs`.
+//!
+//! Why bit parity is achievable at all:
+//!
+//! * Elementwise kernels (`add_assign`, `axpy`, `scale`, `scaled`,
+//!   `fold_delta`, `widen`, `narrow`, …) do the same IEEE ops per lane in the
+//!   same order — a vector lane add is the same rounding as a scalar add. We
+//!   never use FMA intrinsics: fused multiply-add rounds once where the
+//!   scalar path rounds twice, which would change bits.
+//! * Reductions are defined as *lane-striped* sums: `STRIPE` (= 8) f64
+//!   accumulators, element `i` folding into accumulator `i % STRIPE`, lanes
+//!   combined sequentially at the end. The scalar path implements exactly
+//!   this shape, so the AVX2 path (two 4×f64 accumulators) produces the same
+//!   bits. `util::par`'s fixed `CHUNK` boundaries then make the whole-tensor
+//!   result independent of thread count, simd or not.
+//! * The eq. 3 prune kernel consumes `Rng::uniform()` draws serially in
+//!   element order (one draw per in-band element) even on the vector path,
+//!   leaving the generator in an identical state.
+//! * The sign bit-plane codec builds the same words: `presence` bit iff
+//!   `v != 0.0` (true for NaN, false for ±0.0), sign bit iff `v < 0.0`
+//!   (false for NaN) — `_CMP_NEQ_UQ` / `_CMP_LT_OQ` have exactly those
+//!   semantics, and BMI2 `pext`/`pdep` reproduce the survivor-order bit
+//!   compaction of the scalar push loop.
+//!
+//! Dispatch is per-call: `active()` is an atomic load plus a cached cpuid
+//! check, cheap enough to sit inside per-chunk closures. `force_scalar(true)`
+//! pins the oracle path for twin runs and benches; the `EFFICIENTGRAD_SIMD=0`
+//! environment variable is a field kill-switch.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// Number of f64 accumulator lanes in the striped reductions. Fixed by the
+/// wire/ledger contract — changing it changes every σ and magnitude byte.
+pub const STRIPE: usize = 8;
+
+static FORCE_SCALAR: AtomicBool = AtomicBool::new(false);
+
+/// Test/bench override: route every dispatching kernel to the scalar oracle.
+/// Global (affects concurrent callers); that is safe precisely because the
+/// two paths are pinned bit-identical — if the flag is observable in any
+/// output, a parity test has already failed.
+pub fn force_scalar(on: bool) {
+    FORCE_SCALAR.store(on, Ordering::SeqCst);
+}
+
+/// True when the vector kernels are compiled into this build at all.
+pub fn compiled() -> bool {
+    cfg!(all(feature = "simd", target_arch = "x86_64"))
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+fn detected() -> bool {
+    static CAPS: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *CAPS.get_or_init(|| {
+        is_x86_feature_detected!("avx2")
+            && is_x86_feature_detected!("bmi2")
+            && is_x86_feature_detected!("popcnt")
+    })
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+fn env_enabled() -> bool {
+    static ENV: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *ENV.get_or_init(|| std::env::var("EFFICIENTGRAD_SIMD").map_or(true, |v| v != "0"))
+}
+
+/// True when vector kernels are compiled AND the CPU supports them
+/// (ignores `force_scalar` and the environment kill-switch).
+pub fn available() -> bool {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        detected()
+    }
+    #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+    {
+        false
+    }
+}
+
+/// True when the next dispatching kernel call will take the vector path.
+pub fn active() -> bool {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        detected() && env_enabled() && !FORCE_SCALAR.load(Ordering::Relaxed)
+    }
+    #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+    {
+        false
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Elementwise kernels (dispatching). Identical per-lane IEEE ops both paths.
+// ---------------------------------------------------------------------------
+
+/// `dst[i] += src[i]`.
+pub fn add_assign(dst: &mut [f32], src: &[f32]) {
+    debug_assert_eq!(dst.len(), src.len());
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if active() {
+        // SAFETY: active() verified avx2/bmi2/popcnt support.
+        unsafe { x86::add_assign_avx2(dst, src) };
+        return;
+    }
+    add_assign_scalar(dst, src)
+}
+
+fn add_assign_scalar(dst: &mut [f32], src: &[f32]) {
+    for (x, &y) in dst.iter_mut().zip(src) {
+        *x += y;
+    }
+}
+
+/// `dst[i] += alpha * src[i]` (mul then add — two roundings, never FMA).
+pub fn axpy(dst: &mut [f32], alpha: f32, src: &[f32]) {
+    debug_assert_eq!(dst.len(), src.len());
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if active() {
+        // SAFETY: active() verified avx2/bmi2/popcnt support.
+        unsafe { x86::axpy_avx2(dst, alpha, src) };
+        return;
+    }
+    axpy_scalar(dst, alpha, src)
+}
+
+fn axpy_scalar(dst: &mut [f32], alpha: f32, src: &[f32]) {
+    for (x, &y) in dst.iter_mut().zip(src) {
+        *x += alpha * y;
+    }
+}
+
+/// `dst[i] *= alpha`.
+pub fn scale(dst: &mut [f32], alpha: f32) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if active() {
+        // SAFETY: active() verified avx2/bmi2/popcnt support.
+        unsafe { x86::scale_avx2(dst, alpha) };
+        return;
+    }
+    scale_scalar(dst, alpha)
+}
+
+fn scale_scalar(dst: &mut [f32], alpha: f32) {
+    for x in dst.iter_mut() {
+        *x *= alpha;
+    }
+}
+
+/// `dst[i] = alpha * src[i]`.
+pub fn scaled(dst: &mut [f32], alpha: f32, src: &[f32]) {
+    debug_assert_eq!(dst.len(), src.len());
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if active() {
+        // SAFETY: active() verified avx2/bmi2/popcnt support.
+        unsafe { x86::scaled_avx2(dst, alpha, src) };
+        return;
+    }
+    scaled_scalar(dst, alpha, src)
+}
+
+fn scaled_scalar(dst: &mut [f32], alpha: f32, src: &[f32]) {
+    for (d, &v) in dst.iter_mut().zip(src) {
+        *d = alpha * v;
+    }
+}
+
+/// Residual fold: `res[i] += local[i] - reference[i]` (sub then add).
+pub fn fold_delta(res: &mut [f32], local: &[f32], reference: &[f32]) {
+    debug_assert_eq!(res.len(), local.len());
+    debug_assert_eq!(res.len(), reference.len());
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if active() {
+        // SAFETY: active() verified avx2/bmi2/popcnt support.
+        unsafe { x86::fold_delta_avx2(res, local, reference) };
+        return;
+    }
+    fold_delta_scalar(res, local, reference)
+}
+
+fn fold_delta_scalar(res: &mut [f32], local: &[f32], reference: &[f32]) {
+    for (x, (&a, &b)) in res.iter_mut().zip(local.iter().zip(reference)) {
+        *x += a - b;
+    }
+}
+
+/// `dst[i] = src[i].abs()` (clears the sign bit, NaN included — same as
+/// `f32::abs`).
+pub fn abs_into(dst: &mut [f32], src: &[f32]) {
+    debug_assert_eq!(dst.len(), src.len());
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if active() {
+        // SAFETY: active() verified avx2/bmi2/popcnt support.
+        unsafe { x86::abs_into_avx2(dst, src) };
+        return;
+    }
+    abs_into_scalar(dst, src)
+}
+
+fn abs_into_scalar(dst: &mut [f32], src: &[f32]) {
+    for (d, &v) in dst.iter_mut().zip(src) {
+        *d = v.abs();
+    }
+}
+
+/// `dst[i] = src[i] as f64` (exact widening).
+pub fn widen(dst: &mut [f64], src: &[f32]) {
+    debug_assert_eq!(dst.len(), src.len());
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if active() {
+        // SAFETY: active() verified avx2/bmi2/popcnt support.
+        unsafe { x86::widen_avx2(dst, src) };
+        return;
+    }
+    widen_scalar(dst, src)
+}
+
+fn widen_scalar(dst: &mut [f64], src: &[f32]) {
+    for (d, &v) in dst.iter_mut().zip(src) {
+        *d = v as f64;
+    }
+}
+
+/// `dst[i] += alpha * (src[i] as f64)` — the f64 FedAvg accumulator fold.
+pub fn axpy_widen(dst: &mut [f64], alpha: f64, src: &[f32]) {
+    debug_assert_eq!(dst.len(), src.len());
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if active() {
+        // SAFETY: active() verified avx2/bmi2/popcnt support.
+        unsafe { x86::axpy_widen_avx2(dst, alpha, src) };
+        return;
+    }
+    axpy_widen_scalar(dst, alpha, src)
+}
+
+fn axpy_widen_scalar(dst: &mut [f64], alpha: f64, src: &[f32]) {
+    for (x, &v) in dst.iter_mut().zip(src) {
+        *x += alpha * v as f64;
+    }
+}
+
+/// `dst[i] = src[i] as f32` (round-to-nearest-even, same as `vcvtpd2ps`).
+pub fn narrow(dst: &mut [f32], src: &[f64]) {
+    debug_assert_eq!(dst.len(), src.len());
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if active() {
+        // SAFETY: active() verified avx2/bmi2/popcnt support.
+        unsafe { x86::narrow_avx2(dst, src) };
+        return;
+    }
+    narrow_scalar(dst, src)
+}
+
+fn narrow_scalar(dst: &mut [f32], src: &[f64]) {
+    for (d, &v) in dst.iter_mut().zip(src) {
+        *d = v as f32;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Striped reductions. Element i folds into lane i % STRIPE (as f64); lanes
+// are combined sequentially. Both paths implement exactly this shape.
+// ---------------------------------------------------------------------------
+
+fn fold_lanes(acc: &[f64; STRIPE]) -> f64 {
+    let mut s = 0.0;
+    for &a in acc {
+        s += a;
+    }
+    s
+}
+
+/// Striped Σ xᵢ in f64.
+pub fn sum_striped(xs: &[f32]) -> f64 {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if active() {
+        // SAFETY: active() verified avx2/bmi2/popcnt support.
+        return unsafe { x86::sum_striped_avx2(xs) };
+    }
+    sum_striped_scalar(xs)
+}
+
+fn sum_striped_scalar(xs: &[f32]) -> f64 {
+    let mut acc = [0.0f64; STRIPE];
+    for (i, &x) in xs.iter().enumerate() {
+        acc[i % STRIPE] += x as f64;
+    }
+    fold_lanes(&acc)
+}
+
+/// Striped (Σ xᵢ, Σ xᵢ²) in one pass — the fused `std_dev` kernel.
+pub fn sum_sumsq_striped(xs: &[f32]) -> (f64, f64) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if active() {
+        // SAFETY: active() verified avx2/bmi2/popcnt support.
+        return unsafe { x86::sum_sumsq_striped_avx2(xs) };
+    }
+    sum_sumsq_striped_scalar(xs)
+}
+
+fn sum_sumsq_striped_scalar(xs: &[f32]) -> (f64, f64) {
+    let mut sums = [0.0f64; STRIPE];
+    let mut sqs = [0.0f64; STRIPE];
+    for (i, &x) in xs.iter().enumerate() {
+        let xd = x as f64;
+        sums[i % STRIPE] += xd;
+        sqs[i % STRIPE] += xd * xd;
+    }
+    (fold_lanes(&sums), fold_lanes(&sqs))
+}
+
+/// Striped Σ |xᵢ| in f64 — the shared-magnitude kernel of the sign codec.
+pub fn abs_sum_striped(xs: &[f32]) -> f64 {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if active() {
+        // SAFETY: active() verified avx2/bmi2/popcnt support.
+        return unsafe { x86::abs_sum_striped_avx2(xs) };
+    }
+    abs_sum_striped_scalar(xs)
+}
+
+fn abs_sum_striped_scalar(xs: &[f32]) -> f64 {
+    let mut acc = [0.0f64; STRIPE];
+    for (i, &x) in xs.iter().enumerate() {
+        acc[i % STRIPE] += x.abs() as f64;
+    }
+    fold_lanes(&acc)
+}
+
+// ---------------------------------------------------------------------------
+// Vector-only entry points (cfg-gated). Callers gate on `active()`; the
+// scalar oracles for these kernels live at their call sites (`sparsity` for
+// the eq. 3 loop, `comm::wire` for the bit-plane codec) so the normative
+// definitions stay next to the math they implement.
+// ---------------------------------------------------------------------------
+
+/// Vector eq. 3 threshold pass over one chunk. Draw-order and rng-state
+/// identical to `sparsity`'s scalar loop. Requires `tau >= 0` (guaranteed by
+/// `tau_from_rate`).
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+pub fn prune_slice_vector(delta: &[f32], tau: f64, rng: &mut crate::util::rng::Rng, out: &mut [f32]) {
+    debug_assert!(available());
+    debug_assert!(tau >= 0.0);
+    // SAFETY: caller gated on active(); available() re-checked above.
+    unsafe { x86::prune_avx2(delta, tau, rng, out) }
+}
+
+/// Vector sign bit-plane encode: returns `(presence, signs, nnz)` with the
+/// exact words/ordering of the scalar push loop in `comm::wire`.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+pub fn sign_encode_planes(pruned: &[f32]) -> (Vec<u32>, Vec<u32>, u32) {
+    debug_assert!(available());
+    // SAFETY: caller gated on active(); available() re-checked above.
+    unsafe { x86::sign_encode_planes_avx2(pruned) }
+}
+
+/// Vector sparse encode: appends survivor `(index, value)` pairs in element
+/// order, identical to the scalar `v != 0.0` push loop.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+pub fn sparse_encode_into(pruned: &[f32], indices: &mut Vec<u32>, values: &mut Vec<f32>) {
+    debug_assert!(available());
+    // SAFETY: caller gated on active(); available() re-checked above.
+    unsafe { x86::sparse_encode_avx2(pruned, indices, values) }
+}
+
+/// Vector dense decode of a sign tensor: survivor lanes get `±magnitude`,
+/// everything else `+0.0` — same bits as the scalar survivor walk over a
+/// zeroed buffer.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+pub fn sign_decode_into(presence: &[u32], signs: &[u32], magnitude: f32, out: &mut [f32]) {
+    debug_assert!(available());
+    // SAFETY: caller gated on active(); available() re-checked above.
+    unsafe { x86::sign_decode_into_avx2(presence, signs, magnitude, out) }
+}
+
+/// Vector sign fold: `dst[i] += alpha * (±magnitude)` on survivor lanes,
+/// non-survivor lanes left untouched (blend, not add-zero — preserves `-0.0`
+/// and NaN payloads exactly like the scalar survivor walk).
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+pub fn sign_axpy_f32(presence: &[u32], signs: &[u32], magnitude: f32, alpha: f32, dst: &mut [f32]) {
+    debug_assert!(available());
+    // SAFETY: caller gated on active(); available() re-checked above.
+    unsafe { x86::sign_axpy_f32_avx2(presence, signs, magnitude, alpha, dst) }
+}
+
+/// Vector sign fold into an f64 accumulator:
+/// `dst[i] += alpha * ((±magnitude) as f64)` on survivor lanes.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+pub fn sign_axpy_f64(presence: &[u32], signs: &[u32], magnitude: f32, alpha: f64, dst: &mut [f64]) {
+    debug_assert!(available());
+    // SAFETY: caller gated on active(); available() re-checked above.
+    unsafe { x86::sign_axpy_f64_avx2(presence, signs, magnitude, alpha, dst) }
+}
+
+// ---------------------------------------------------------------------------
+// AVX2/BMI2 implementations.
+// ---------------------------------------------------------------------------
+
+// Safety contract for every fn below: caller must have verified avx2 + bmi2 +
+// popcnt at runtime (`available()`); slice arguments carry their own bounds
+// and all raw-pointer arithmetic stays inside them.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+#[allow(clippy::missing_safety_doc)]
+mod x86 {
+    use core::arch::x86_64::*;
+
+    use crate::util::rng::Rng;
+
+    #[target_feature(enable = "avx2,bmi2,popcnt")]
+    pub(super) unsafe fn add_assign_avx2(dst: &mut [f32], src: &[f32]) {
+        let n = dst.len();
+        let mut i = 0;
+        while i + 8 <= n {
+            let a = _mm256_loadu_ps(dst.as_ptr().add(i));
+            let b = _mm256_loadu_ps(src.as_ptr().add(i));
+            _mm256_storeu_ps(dst.as_mut_ptr().add(i), _mm256_add_ps(a, b));
+            i += 8;
+        }
+        while i < n {
+            *dst.get_unchecked_mut(i) += *src.get_unchecked(i);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2,bmi2,popcnt")]
+    pub(super) unsafe fn axpy_avx2(dst: &mut [f32], alpha: f32, src: &[f32]) {
+        let n = dst.len();
+        let av = _mm256_set1_ps(alpha);
+        let mut i = 0;
+        while i + 8 <= n {
+            let d = _mm256_loadu_ps(dst.as_ptr().add(i));
+            let s = _mm256_loadu_ps(src.as_ptr().add(i));
+            // mul then add: two roundings, matching the scalar `d + alpha*s`
+            let r = _mm256_add_ps(d, _mm256_mul_ps(av, s));
+            _mm256_storeu_ps(dst.as_mut_ptr().add(i), r);
+            i += 8;
+        }
+        while i < n {
+            *dst.get_unchecked_mut(i) += alpha * *src.get_unchecked(i);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2,bmi2,popcnt")]
+    pub(super) unsafe fn scale_avx2(dst: &mut [f32], alpha: f32) {
+        let n = dst.len();
+        let av = _mm256_set1_ps(alpha);
+        let mut i = 0;
+        while i + 8 <= n {
+            let d = _mm256_loadu_ps(dst.as_ptr().add(i));
+            _mm256_storeu_ps(dst.as_mut_ptr().add(i), _mm256_mul_ps(d, av));
+            i += 8;
+        }
+        while i < n {
+            *dst.get_unchecked_mut(i) *= alpha;
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2,bmi2,popcnt")]
+    pub(super) unsafe fn scaled_avx2(dst: &mut [f32], alpha: f32, src: &[f32]) {
+        let n = dst.len();
+        let av = _mm256_set1_ps(alpha);
+        let mut i = 0;
+        while i + 8 <= n {
+            let s = _mm256_loadu_ps(src.as_ptr().add(i));
+            _mm256_storeu_ps(dst.as_mut_ptr().add(i), _mm256_mul_ps(av, s));
+            i += 8;
+        }
+        while i < n {
+            *dst.get_unchecked_mut(i) = alpha * *src.get_unchecked(i);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2,bmi2,popcnt")]
+    pub(super) unsafe fn fold_delta_avx2(res: &mut [f32], local: &[f32], reference: &[f32]) {
+        let n = res.len();
+        let mut i = 0;
+        while i + 8 <= n {
+            let r = _mm256_loadu_ps(res.as_ptr().add(i));
+            let a = _mm256_loadu_ps(local.as_ptr().add(i));
+            let b = _mm256_loadu_ps(reference.as_ptr().add(i));
+            // sub then add, matching the scalar `r + (a - b)`
+            let out = _mm256_add_ps(r, _mm256_sub_ps(a, b));
+            _mm256_storeu_ps(res.as_mut_ptr().add(i), out);
+            i += 8;
+        }
+        while i < n {
+            *res.get_unchecked_mut(i) += *local.get_unchecked(i) - *reference.get_unchecked(i);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2,bmi2,popcnt")]
+    pub(super) unsafe fn abs_into_avx2(dst: &mut [f32], src: &[f32]) {
+        let n = dst.len();
+        let mask = _mm256_castsi256_ps(_mm256_set1_epi32(0x7fff_ffff));
+        let mut i = 0;
+        while i + 8 <= n {
+            let s = _mm256_loadu_ps(src.as_ptr().add(i));
+            _mm256_storeu_ps(dst.as_mut_ptr().add(i), _mm256_and_ps(s, mask));
+            i += 8;
+        }
+        while i < n {
+            *dst.get_unchecked_mut(i) = src.get_unchecked(i).abs();
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2,bmi2,popcnt")]
+    pub(super) unsafe fn widen_avx2(dst: &mut [f64], src: &[f32]) {
+        let n = dst.len();
+        let mut i = 0;
+        while i + 4 <= n {
+            let s = _mm_loadu_ps(src.as_ptr().add(i));
+            _mm256_storeu_pd(dst.as_mut_ptr().add(i), _mm256_cvtps_pd(s));
+            i += 4;
+        }
+        while i < n {
+            *dst.get_unchecked_mut(i) = *src.get_unchecked(i) as f64;
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2,bmi2,popcnt")]
+    pub(super) unsafe fn axpy_widen_avx2(dst: &mut [f64], alpha: f64, src: &[f32]) {
+        let n = dst.len();
+        let av = _mm256_set1_pd(alpha);
+        let mut i = 0;
+        while i + 4 <= n {
+            let s = _mm256_cvtps_pd(_mm_loadu_ps(src.as_ptr().add(i)));
+            let d = _mm256_loadu_pd(dst.as_ptr().add(i));
+            let r = _mm256_add_pd(d, _mm256_mul_pd(av, s));
+            _mm256_storeu_pd(dst.as_mut_ptr().add(i), r);
+            i += 4;
+        }
+        while i < n {
+            *dst.get_unchecked_mut(i) += alpha * *src.get_unchecked(i) as f64;
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2,bmi2,popcnt")]
+    pub(super) unsafe fn narrow_avx2(dst: &mut [f32], src: &[f64]) {
+        let n = dst.len();
+        let mut i = 0;
+        while i + 4 <= n {
+            let s = _mm256_loadu_pd(src.as_ptr().add(i));
+            _mm_storeu_ps(dst.as_mut_ptr().add(i), _mm256_cvtpd_ps(s));
+            i += 4;
+        }
+        while i < n {
+            *dst.get_unchecked_mut(i) = *src.get_unchecked(i) as f32;
+            i += 1;
+        }
+    }
+
+    // -- striped reductions -------------------------------------------------
+
+    // One 8-wide f32 load splits into lanes 0..4 (low half) and 4..8 (high
+    // half); `_mm256_cvtps_pd` preserves element order, so vector lane j of
+    // (lo,hi) is exactly striped accumulator j of the scalar definition.
+
+    #[target_feature(enable = "avx2,bmi2,popcnt")]
+    pub(super) unsafe fn sum_striped_avx2(xs: &[f32]) -> f64 {
+        let n = xs.len();
+        let mut lo = _mm256_setzero_pd();
+        let mut hi = _mm256_setzero_pd();
+        let mut i = 0;
+        while i + 8 <= n {
+            let v = _mm256_loadu_ps(xs.as_ptr().add(i));
+            lo = _mm256_add_pd(lo, _mm256_cvtps_pd(_mm256_castps256_ps128(v)));
+            hi = _mm256_add_pd(hi, _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(v)));
+            i += 8;
+        }
+        let mut acc = [0.0f64; super::STRIPE];
+        _mm256_storeu_pd(acc.as_mut_ptr(), lo);
+        _mm256_storeu_pd(acc.as_mut_ptr().add(4), hi);
+        while i < n {
+            acc[i % super::STRIPE] += *xs.get_unchecked(i) as f64;
+            i += 1;
+        }
+        super::fold_lanes(&acc)
+    }
+
+    #[target_feature(enable = "avx2,bmi2,popcnt")]
+    pub(super) unsafe fn sum_sumsq_striped_avx2(xs: &[f32]) -> (f64, f64) {
+        let n = xs.len();
+        let mut slo = _mm256_setzero_pd();
+        let mut shi = _mm256_setzero_pd();
+        let mut qlo = _mm256_setzero_pd();
+        let mut qhi = _mm256_setzero_pd();
+        let mut i = 0;
+        while i + 8 <= n {
+            let v = _mm256_loadu_ps(xs.as_ptr().add(i));
+            let a = _mm256_cvtps_pd(_mm256_castps256_ps128(v));
+            let b = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(v));
+            slo = _mm256_add_pd(slo, a);
+            shi = _mm256_add_pd(shi, b);
+            qlo = _mm256_add_pd(qlo, _mm256_mul_pd(a, a));
+            qhi = _mm256_add_pd(qhi, _mm256_mul_pd(b, b));
+            i += 8;
+        }
+        let mut sums = [0.0f64; super::STRIPE];
+        let mut sqs = [0.0f64; super::STRIPE];
+        _mm256_storeu_pd(sums.as_mut_ptr(), slo);
+        _mm256_storeu_pd(sums.as_mut_ptr().add(4), shi);
+        _mm256_storeu_pd(sqs.as_mut_ptr(), qlo);
+        _mm256_storeu_pd(sqs.as_mut_ptr().add(4), qhi);
+        while i < n {
+            let xd = *xs.get_unchecked(i) as f64;
+            sums[i % super::STRIPE] += xd;
+            sqs[i % super::STRIPE] += xd * xd;
+            i += 1;
+        }
+        (super::fold_lanes(&sums), super::fold_lanes(&sqs))
+    }
+
+    #[target_feature(enable = "avx2,bmi2,popcnt")]
+    pub(super) unsafe fn abs_sum_striped_avx2(xs: &[f32]) -> f64 {
+        let n = xs.len();
+        let mask = _mm256_castsi256_ps(_mm256_set1_epi32(0x7fff_ffff));
+        let mut lo = _mm256_setzero_pd();
+        let mut hi = _mm256_setzero_pd();
+        let mut i = 0;
+        while i + 8 <= n {
+            let v = _mm256_and_ps(_mm256_loadu_ps(xs.as_ptr().add(i)), mask);
+            lo = _mm256_add_pd(lo, _mm256_cvtps_pd(_mm256_castps256_ps128(v)));
+            hi = _mm256_add_pd(hi, _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(v)));
+            i += 8;
+        }
+        let mut acc = [0.0f64; super::STRIPE];
+        _mm256_storeu_pd(acc.as_mut_ptr(), lo);
+        _mm256_storeu_pd(acc.as_mut_ptr().add(4), hi);
+        while i < n {
+            acc[i % super::STRIPE] += xs.get_unchecked(i).abs() as f64;
+            i += 1;
+        }
+        super::fold_lanes(&acc)
+    }
+
+    // -- eq. 3 threshold pass ------------------------------------------------
+
+    // Four elements per iteration (the magnitude test runs in f64, so a quad
+    // of f32 promotes to one 4×f64 vector). The in-band uniform draws are
+    // filled serially in lane order, so the generator consumes exactly one
+    // draw per in-band element in element order — bit- and state-identical
+    // to the scalar loop.
+    #[target_feature(enable = "avx2,bmi2,popcnt")]
+    pub(super) unsafe fn prune_avx2(delta: &[f32], tau: f64, rng: &mut Rng, out: &mut [f32]) {
+        let n = delta.len();
+        let tau_pd = _mm256_set1_pd(tau);
+        let tau_ps = _mm_set1_ps(tau as f32);
+        let sign_ps = _mm_castsi128_ps(_mm_set1_epi32(i32::MIN));
+        let abs_ps = _mm_castsi128_ps(_mm_set1_epi32(0x7fff_ffff));
+        let mut i = 0;
+        while i + 4 <= n {
+            let d = _mm_loadu_ps(delta.as_ptr().add(i));
+            let mag = _mm256_cvtps_pd(_mm_and_ps(d, abs_ps));
+            // out-of-band: |δ| > τ (ordered: NaN stays in-band, as in scalar)
+            let outb = _mm256_cmp_pd::<_CMP_GT_OQ>(mag, tau_pd);
+            let ob = _mm256_movemask_pd(outb) as usize;
+            let inb = !ob & 0xF;
+            let mut draws = [0.0f64; 4];
+            let mut bits = inb;
+            while bits != 0 {
+                let j = bits.trailing_zeros() as usize;
+                draws[j] = rng.uniform();
+                bits &= bits - 1;
+            }
+            let r = _mm256_loadu_pd(draws.as_ptr());
+            // promote: |δ| ≥ r·τ (ordered: NaN never promotes)
+            let keep = _mm256_cmp_pd::<_CMP_GE_OQ>(mag, _mm256_mul_pd(r, tau_pd));
+            let kb = _mm256_movemask_pd(keep) as usize & inb;
+            // promoted value: copysign(τ as f32, δ); τ ≥ 0 so OR the sign bit
+            let promoted = _mm_or_ps(tau_ps, _mm_and_ps(d, sign_ps));
+            let keep_ps = lane_mask4_ps(kb as u32);
+            let outb_ps = lane_mask4_ps(ob as u32);
+            // in-band lanes: keep ? promoted : +0.0 (masked AND, matching the
+            // scalar literal 0.0); out-of-band lanes pass δ through
+            let inval = _mm_and_ps(keep_ps, promoted);
+            let res = _mm_or_ps(_mm_and_ps(outb_ps, d), _mm_andnot_ps(outb_ps, inval));
+            _mm_storeu_ps(out.as_mut_ptr().add(i), res);
+            i += 4;
+        }
+        if i < n {
+            crate::sparsity::prune_slice_scalar(&delta[i..], tau, rng, &mut out[i..]);
+        }
+    }
+
+    // -- sign bit-plane codec ------------------------------------------------
+
+    // Survivor-order sign compaction shared by scalar tail and vector body:
+    // a 64-bit buffer absorbs up to 32 bits per word and spills whole u32s.
+    struct BitPacker {
+        buf: u64,
+        pos: u32,
+    }
+
+    impl BitPacker {
+        fn new() -> Self {
+            BitPacker { buf: 0, pos: 0 }
+        }
+
+        #[inline]
+        fn push(&mut self, packed: u32, cnt: u32, signs: &mut Vec<u32>) {
+            self.buf |= (packed as u64) << self.pos;
+            self.pos += cnt;
+            if self.pos >= 32 {
+                signs.push(self.buf as u32);
+                self.buf >>= 32;
+                self.pos -= 32;
+            }
+        }
+
+        #[inline]
+        fn finish(self, signs: &mut Vec<u32>) {
+            if self.pos > 0 {
+                signs.push(self.buf as u32);
+            }
+        }
+    }
+
+    #[target_feature(enable = "avx2,bmi2,popcnt")]
+    pub(super) unsafe fn sign_encode_planes_avx2(pruned: &[f32]) -> (Vec<u32>, Vec<u32>, u32) {
+        let n = pruned.len();
+        let words = n.div_ceil(32);
+        let mut presence = vec![0u32; words];
+        let mut signs: Vec<u32> = Vec::with_capacity(words);
+        let mut nnz = 0u32;
+        let mut packer = BitPacker::new();
+        let zero = _mm256_setzero_ps();
+        let mut w = 0;
+        while (w + 1) * 32 <= n {
+            let base = pruned.as_ptr().add(w * 32);
+            let mut pres: u32 = 0;
+            let mut neg: u32 = 0;
+            for o in 0..4 {
+                let v = _mm256_loadu_ps(base.add(o * 8));
+                // presence: v != 0.0 (unordered: true for NaN, like scalar !=)
+                let nz = _mm256_cmp_ps::<_CMP_NEQ_UQ>(v, zero);
+                // sign: v < 0.0 (ordered: false for NaN, like scalar <)
+                let lt = _mm256_cmp_ps::<_CMP_LT_OQ>(v, zero);
+                pres |= (_mm256_movemask_ps(nz) as u32 & 0xFF) << (o * 8);
+                neg |= (_mm256_movemask_ps(lt) as u32 & 0xFF) << (o * 8);
+            }
+            presence[w] = pres;
+            if pres != 0 {
+                let cnt = pres.count_ones();
+                packer.push(_pext_u32(neg, pres), cnt, &mut signs);
+                nnz += cnt;
+            }
+            w += 1;
+        }
+        let tail = w * 32;
+        if tail < n {
+            let mut pres: u32 = 0;
+            let mut neg: u32 = 0;
+            for (j, &v) in pruned[tail..].iter().enumerate() {
+                pres |= ((v != 0.0) as u32) << j;
+                neg |= ((v < 0.0) as u32) << j;
+            }
+            presence[w] = pres;
+            if pres != 0 {
+                let cnt = pres.count_ones();
+                packer.push(_pext_u32(neg, pres), cnt, &mut signs);
+                nnz += cnt;
+            }
+        }
+        packer.finish(&mut signs);
+        (presence, signs, nnz)
+    }
+
+    #[target_feature(enable = "avx2,bmi2,popcnt")]
+    pub(super) unsafe fn sparse_encode_avx2(
+        pruned: &[f32],
+        indices: &mut Vec<u32>,
+        values: &mut Vec<f32>,
+    ) {
+        let n = pruned.len();
+        let zero = _mm256_setzero_ps();
+        let mut i = 0;
+        while i + 8 <= n {
+            let v = _mm256_loadu_ps(pruned.as_ptr().add(i));
+            let nz = _mm256_cmp_ps::<_CMP_NEQ_UQ>(v, zero);
+            let mut m = _mm256_movemask_ps(nz) as u32 & 0xFF;
+            while m != 0 {
+                let j = m.trailing_zeros() as usize;
+                indices.push((i + j) as u32);
+                values.push(*pruned.get_unchecked(i + j));
+                m &= m - 1;
+            }
+            i += 8;
+        }
+        while i < n {
+            let v = *pruned.get_unchecked(i);
+            if v != 0.0 {
+                indices.push(i as u32);
+                values.push(v);
+            }
+            i += 1;
+        }
+    }
+
+    /// Survivor-order sign bits for one presence word: the `popcnt(word)`
+    /// low bits of the window starting at survivor ordinal `ord`.
+    #[target_feature(enable = "avx2,bmi2,popcnt")]
+    #[inline]
+    unsafe fn sign_window(signs: &[u32], ord: usize) -> u32 {
+        let wi = ord / 32;
+        let sh = ord % 32;
+        let lo = *signs.get_unchecked(wi) as u64;
+        let hi = if wi + 1 < signs.len() {
+            *signs.get_unchecked(wi + 1) as u64
+        } else {
+            0
+        };
+        ((lo | (hi << 32)) >> sh) as u32
+    }
+
+    /// All-ones/all-zero f32 lane masks from the low 8 bits of `bits`.
+    #[target_feature(enable = "avx2,bmi2,popcnt")]
+    #[inline]
+    unsafe fn lane_mask8_ps(bits: u32) -> __m256 {
+        let wv = _mm256_set1_epi32((bits & 0xFF) as i32);
+        let sel = _mm256_setr_epi32(1, 2, 4, 8, 16, 32, 64, 128);
+        _mm256_castsi256_ps(_mm256_cmpeq_epi32(_mm256_and_si256(wv, sel), sel))
+    }
+
+    /// All-ones/all-zero f32 lane masks (SSE width) from the low 4 bits.
+    #[target_feature(enable = "avx2,bmi2,popcnt")]
+    #[inline]
+    unsafe fn lane_mask4_ps(bits: u32) -> __m128 {
+        let wv = _mm_set1_epi32((bits & 0xF) as i32);
+        let sel = _mm_setr_epi32(1, 2, 4, 8);
+        _mm_castsi128_ps(_mm_cmpeq_epi32(_mm_and_si128(wv, sel), sel))
+    }
+
+    /// All-ones/all-zero f64 lane masks from the low 4 bits of `bits`.
+    #[target_feature(enable = "avx2,bmi2,popcnt")]
+    #[inline]
+    unsafe fn quad_mask4_pd(bits: u32) -> __m256d {
+        let wv = _mm256_set1_epi64x((bits & 0xF) as i64);
+        let sel = _mm256_setr_epi64x(1, 2, 4, 8);
+        _mm256_castsi256_pd(_mm256_cmpeq_epi64(_mm256_and_si256(wv, sel), sel))
+    }
+
+    #[target_feature(enable = "avx2,bmi2,popcnt")]
+    pub(super) unsafe fn sign_decode_into_avx2(
+        presence: &[u32],
+        signs: &[u32],
+        magnitude: f32,
+        out: &mut [f32],
+    ) {
+        let n = out.len();
+        let magv = _mm256_set1_ps(magnitude);
+        let sign_ps = _mm256_castsi256_ps(_mm256_set1_epi32(i32::MIN));
+        let mut ord = 0usize;
+        for (w, &word) in presence.iter().enumerate() {
+            let base = w * 32;
+            if base + 32 <= n {
+                if word == 0 {
+                    for o in 0..4 {
+                        _mm256_storeu_ps(out.as_mut_ptr().add(base + o * 8), _mm256_setzero_ps());
+                    }
+                    continue;
+                }
+                let negw = _pdep_u32(sign_window(signs, ord), word);
+                ord += word.count_ones() as usize;
+                for o in 0..4 {
+                    let pm = lane_mask8_ps(word >> (o * 8));
+                    let nm = lane_mask8_ps(negw >> (o * 8));
+                    // ±magnitude: XOR the sign bit on negative lanes — the
+                    // exact bit flip of scalar negation
+                    let val = _mm256_xor_ps(magv, _mm256_and_ps(nm, sign_ps));
+                    _mm256_storeu_ps(out.as_mut_ptr().add(base + o * 8), _mm256_and_ps(pm, val));
+                }
+            } else {
+                // partial final word: scalar walk, same ops as the oracle
+                for j in 0..(n - base) {
+                    let mut v = 0.0f32;
+                    if (word >> j) & 1 == 1 {
+                        let negbit = (*signs.get_unchecked(ord / 32) >> (ord % 32)) & 1;
+                        v = if negbit == 1 { -magnitude } else { magnitude };
+                        ord += 1;
+                    }
+                    *out.get_unchecked_mut(base + j) = v;
+                }
+            }
+        }
+    }
+
+    #[target_feature(enable = "avx2,bmi2,popcnt")]
+    pub(super) unsafe fn sign_axpy_f32_avx2(
+        presence: &[u32],
+        signs: &[u32],
+        magnitude: f32,
+        alpha: f32,
+        dst: &mut [f32],
+    ) {
+        let n = dst.len();
+        let magv = _mm256_set1_ps(magnitude);
+        let av = _mm256_set1_ps(alpha);
+        let sign_ps = _mm256_castsi256_ps(_mm256_set1_epi32(i32::MIN));
+        let mut ord = 0usize;
+        for (w, &word) in presence.iter().enumerate() {
+            if word == 0 {
+                continue;
+            }
+            let base = w * 32;
+            if base + 32 <= n {
+                let negw = _pdep_u32(sign_window(signs, ord), word);
+                ord += word.count_ones() as usize;
+                for o in 0..4 {
+                    let ob = (word >> (o * 8)) & 0xFF;
+                    if ob == 0 {
+                        continue;
+                    }
+                    let pm = lane_mask8_ps(ob);
+                    let nm = lane_mask8_ps(negw >> (o * 8));
+                    let val = _mm256_xor_ps(magv, _mm256_and_ps(nm, sign_ps));
+                    let p = dst.as_mut_ptr().add(base + o * 8);
+                    let d = _mm256_loadu_ps(p);
+                    let sum = _mm256_add_ps(d, _mm256_mul_ps(av, val));
+                    // blend, not add-zero: untouched lanes keep their bits
+                    _mm256_storeu_ps(p, _mm256_blendv_ps(d, sum, pm));
+                }
+            } else {
+                for j in 0..(n - base) {
+                    if (word >> j) & 1 == 1 {
+                        let negbit = (*signs.get_unchecked(ord / 32) >> (ord % 32)) & 1;
+                        let v = if negbit == 1 { -magnitude } else { magnitude };
+                        *dst.get_unchecked_mut(base + j) += alpha * v;
+                        ord += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    #[target_feature(enable = "avx2,bmi2,popcnt")]
+    pub(super) unsafe fn sign_axpy_f64_avx2(
+        presence: &[u32],
+        signs: &[u32],
+        magnitude: f32,
+        alpha: f64,
+        dst: &mut [f64],
+    ) {
+        let n = dst.len();
+        let magv = _mm256_set1_pd(magnitude as f64);
+        let av = _mm256_set1_pd(alpha);
+        let sign_pd = _mm256_castsi256_pd(_mm256_set1_epi64x(i64::MIN));
+        let mut ord = 0usize;
+        for (w, &word) in presence.iter().enumerate() {
+            if word == 0 {
+                continue;
+            }
+            let base = w * 32;
+            if base + 32 <= n {
+                let negw = _pdep_u32(sign_window(signs, ord), word);
+                ord += word.count_ones() as usize;
+                for q in 0..8 {
+                    let qb = (word >> (q * 4)) & 0xF;
+                    if qb == 0 {
+                        continue;
+                    }
+                    let pm = quad_mask4_pd(qb);
+                    let nm = quad_mask4_pd(negw >> (q * 4));
+                    // (±magnitude) as f64 == ±(magnitude as f64): the widening
+                    // cast is exact and sign-preserving
+                    let val = _mm256_xor_pd(magv, _mm256_and_pd(nm, sign_pd));
+                    let p = dst.as_mut_ptr().add(base + q * 4);
+                    let d = _mm256_loadu_pd(p);
+                    let sum = _mm256_add_pd(d, _mm256_mul_pd(av, val));
+                    _mm256_storeu_pd(p, _mm256_blendv_pd(d, sum, pm));
+                }
+            } else {
+                for j in 0..(n - base) {
+                    if (word >> j) & 1 == 1 {
+                        let negbit = (*signs.get_unchecked(ord / 32) >> (ord % 32)) & 1;
+                        let v = if negbit == 1 { -magnitude } else { magnitude };
+                        *dst.get_unchecked_mut(base + j) += alpha * v as f64;
+                        ord += 1;
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Parity pins: every vector kernel against its scalar oracle, bit-for-bit,
+// over lengths that cross vector-width and bit-plane word boundaries and
+// data that includes ±0.0, NaN, and denormals. These call the x86 fns
+// directly (no global force_scalar toggling), so they cannot race.
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn striped_sum_matches_sequential_for_integers() {
+        // integer-valued data sums exactly in any association
+        let xs: Vec<f32> = (0..1000).map(|i| (i % 17) as f32 - 8.0).collect();
+        let seq: f64 = xs.iter().map(|&x| x as f64).sum();
+        assert_eq!(sum_striped_scalar(&xs), seq);
+        let (s, q) = sum_sumsq_striped_scalar(&xs);
+        assert_eq!(s, seq);
+        let seq_q: f64 = xs.iter().map(|&x| (x as f64) * (x as f64)).sum();
+        assert_eq!(q, seq_q);
+    }
+
+    #[test]
+    fn force_scalar_pins_the_oracle_path() {
+        force_scalar(true);
+        assert!(!active());
+        force_scalar(false);
+        assert_eq!(active(), available() && std::env::var("EFFICIENTGRAD_SIMD").map_or(true, |v| v != "0"));
+    }
+
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    mod vector {
+        use super::super::*;
+        use crate::util::rng::Rng;
+
+        /// Lengths that cross the 4/8-lane widths, the 32-bit plane words,
+        /// and stay odd-tailed.
+        const LENS: &[usize] = &[0, 1, 3, 4, 5, 7, 8, 9, 31, 32, 33, 63, 64, 65, 255, 1000];
+
+        /// Deterministic data with hostile values mixed in.
+        fn data(n: usize, seed: u64) -> Vec<f32> {
+            let mut rng = Rng::new(seed);
+            (0..n)
+                .map(|i| match i % 13 {
+                    0 => 0.0,
+                    5 => -0.0,
+                    7 if i % 39 == 7 => f32::NAN,
+                    9 => f32::MIN_POSITIVE / 2.0, // denormal
+                    11 => 3.4e37,
+                    _ => (rng.uniform_in(-2.0, 2.0)) as f32,
+                })
+                .collect()
+        }
+
+        fn bits(xs: &[f32]) -> Vec<u32> {
+            xs.iter().map(|x| x.to_bits()).collect()
+        }
+
+        fn bits64(xs: &[f64]) -> Vec<u64> {
+            xs.iter().map(|x| x.to_bits()).collect()
+        }
+
+        #[test]
+        fn elementwise_vector_kernels_bit_match_scalar() {
+            if !available() {
+                eprintln!("SKIP: cpu lacks avx2/bmi2/popcnt");
+                return;
+            }
+            for &n in LENS {
+                let src = data(n, 11 + n as u64);
+                let base = data(n, 99 + n as u64);
+                let refr = data(n, 7 + n as u64);
+
+                let mut a = base.clone();
+                let mut b = base.clone();
+                add_assign_scalar(&mut a, &src);
+                unsafe { x86::add_assign_avx2(&mut b, &src) };
+                assert_eq!(bits(&a), bits(&b), "add_assign n={n}");
+
+                let mut a = base.clone();
+                let mut b = base.clone();
+                axpy_scalar(&mut a, -0.37, &src);
+                unsafe { x86::axpy_avx2(&mut b, -0.37, &src) };
+                assert_eq!(bits(&a), bits(&b), "axpy n={n}");
+
+                let mut a = base.clone();
+                let mut b = base.clone();
+                scale_scalar(&mut a, 1.7);
+                unsafe { x86::scale_avx2(&mut b, 1.7) };
+                assert_eq!(bits(&a), bits(&b), "scale n={n}");
+
+                let mut a = vec![0.0f32; n];
+                let mut b = vec![0.0f32; n];
+                scaled_scalar(&mut a, -2.5, &src);
+                unsafe { x86::scaled_avx2(&mut b, -2.5, &src) };
+                assert_eq!(bits(&a), bits(&b), "scaled n={n}");
+
+                let mut a = base.clone();
+                let mut b = base.clone();
+                fold_delta_scalar(&mut a, &src, &refr);
+                unsafe { x86::fold_delta_avx2(&mut b, &src, &refr) };
+                assert_eq!(bits(&a), bits(&b), "fold_delta n={n}");
+
+                let mut a = vec![0.0f32; n];
+                let mut b = vec![0.0f32; n];
+                abs_into_scalar(&mut a, &src);
+                unsafe { x86::abs_into_avx2(&mut b, &src) };
+                assert_eq!(bits(&a), bits(&b), "abs_into n={n}");
+
+                let mut a = vec![0.0f64; n];
+                let mut b = vec![0.0f64; n];
+                widen_scalar(&mut a, &src);
+                unsafe { x86::widen_avx2(&mut b, &src) };
+                assert_eq!(bits64(&a), bits64(&b), "widen n={n}");
+
+                let mut a: Vec<f64> = base.iter().map(|&v| v as f64 * 0.5).collect();
+                let mut b = a.clone();
+                axpy_widen_scalar(&mut a, -0.125, &src);
+                unsafe { x86::axpy_widen_avx2(&mut b, -0.125, &src) };
+                assert_eq!(bits64(&a), bits64(&b), "axpy_widen n={n}");
+
+                let wide: Vec<f64> = src.iter().map(|&v| v as f64 * 1.0000001).collect();
+                let mut a = vec![0.0f32; n];
+                let mut b = vec![0.0f32; n];
+                narrow_scalar(&mut a, &wide);
+                unsafe { x86::narrow_avx2(&mut b, &wide) };
+                assert_eq!(bits(&a), bits(&b), "narrow n={n}");
+            }
+        }
+
+        #[test]
+        fn striped_reductions_bit_match_scalar() {
+            if !available() {
+                eprintln!("SKIP: cpu lacks avx2/bmi2/popcnt");
+                return;
+            }
+            for &n in LENS {
+                // finite-only data: NaN poisons every reduction identically,
+                // but bit-compare of NaN payloads is not the contract
+                let mut rng = Rng::new(n as u64 + 5);
+                let xs: Vec<f32> = (0..n)
+                    .map(|i| {
+                        if i % 9 == 4 {
+                            -0.0
+                        } else {
+                            rng.uniform_in(-3.0, 3.0) as f32
+                        }
+                    })
+                    .collect();
+                let a = sum_striped_scalar(&xs);
+                let b = unsafe { x86::sum_striped_avx2(&xs) };
+                assert_eq!(a.to_bits(), b.to_bits(), "sum n={n}");
+                let (s0, q0) = sum_sumsq_striped_scalar(&xs);
+                let (s1, q1) = unsafe { x86::sum_sumsq_striped_avx2(&xs) };
+                assert_eq!(s0.to_bits(), s1.to_bits(), "fused sum n={n}");
+                assert_eq!(q0.to_bits(), q1.to_bits(), "fused sumsq n={n}");
+                let a = abs_sum_striped_scalar(&xs);
+                let b = unsafe { x86::abs_sum_striped_avx2(&xs) };
+                assert_eq!(a.to_bits(), b.to_bits(), "abs_sum n={n}");
+            }
+        }
+
+        #[test]
+        fn vector_prune_bit_matches_scalar_and_rng_state() {
+            if !available() {
+                eprintln!("SKIP: cpu lacks avx2/bmi2/popcnt");
+                return;
+            }
+            for &n in LENS {
+                for (tau, seed) in [(0.0f64, 1u64), (0.05, 2), (0.8, 3), (10.0, 4)] {
+                    let delta = data(n, seed * 1000 + n as u64);
+                    let mut rs = Rng::new(42 + seed);
+                    let mut rv = Rng::new(42 + seed);
+                    let mut os = vec![9.0f32; n];
+                    let mut ov = vec![9.0f32; n];
+                    crate::sparsity::prune_slice_scalar(&delta, tau, &mut rs, &mut os);
+                    unsafe { x86::prune_avx2(&delta, tau, &mut rv, &mut ov) };
+                    assert_eq!(bits(&os), bits(&ov), "prune n={n} tau={tau}");
+                    assert_eq!(rs.state(), rv.state(), "rng state n={n} tau={tau}");
+                }
+            }
+        }
+
+        #[test]
+        fn vector_sign_codec_bit_matches_scalar_walk() {
+            if !available() {
+                eprintln!("SKIP: cpu lacks avx2/bmi2/popcnt");
+                return;
+            }
+            use crate::comm::wire::{SignTensor, TensorUpdate};
+            for &n in LENS {
+                // pruned-looking data: mostly zeros with ± survivors
+                let mut rng = Rng::new(n as u64 + 77);
+                let pruned: Vec<f32> = (0..n)
+                    .map(|_| {
+                        let u = rng.uniform();
+                        if u < 0.7 {
+                            0.0
+                        } else if u < 0.85 {
+                            0.25
+                        } else {
+                            -0.25
+                        }
+                    })
+                    .collect();
+                // encode: vector planes vs the scalar push-loop oracle
+                let scalar = SignTensor::encode_scalar(&pruned);
+                let (pres, signs, nnz) = sign_encode_planes(&pruned);
+                assert_eq!(scalar.presence, pres, "presence n={n}");
+                assert_eq!(scalar.signs, signs, "signs n={n}");
+                assert_eq!(scalar.nnz, nnz, "nnz n={n}");
+
+                // sparse encode
+                let mut idx = Vec::new();
+                let mut vals = Vec::new();
+                sparse_encode_into(&pruned, &mut idx, &mut vals);
+                let sidx: Vec<u32> = pruned
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &v)| v != 0.0)
+                    .map(|(i, _)| i as u32)
+                    .collect();
+                assert_eq!(idx, sidx, "sparse indices n={n}");
+
+                // decode / folds: vector vs the survivor-walk oracle
+                let t = scalar;
+                let mut dec_s = vec![0.0f32; n];
+                t.for_each_survivor(|i, v| dec_s[i] = v);
+                let mut dec_v = vec![7.0f32; n];
+                sign_decode_into(&t.presence, &t.signs, t.magnitude, &mut dec_v);
+                assert_eq!(bits(&dec_s), bits(&dec_v), "decode n={n}");
+
+                let base = data(n, n as u64 + 3);
+                let mut f32_s = base.clone();
+                t.for_each_survivor(|i, v| f32_s[i] += -0.4 * v);
+                let mut f32_v = base.clone();
+                sign_axpy_f32(&t.presence, &t.signs, t.magnitude, -0.4, &mut f32_v);
+                assert_eq!(bits(&f32_s), bits(&f32_v), "sign axpy f32 n={n}");
+
+                let based: Vec<f64> = base.iter().map(|&v| v as f64 * 0.3).collect();
+                let mut f64_s = based.clone();
+                t.for_each_survivor(|i, v| f64_s[i] += 0.9 * v as f64);
+                let mut f64_v = based;
+                sign_axpy_f64(&t.presence, &t.signs, t.magnitude, 0.9, &mut f64_v);
+                assert_eq!(bits64(&f64_s), bits64(&f64_v), "sign axpy f64 n={n}");
+
+                // and the dispatching wrapper agrees with the oracle e2e
+                let up = TensorUpdate::Sign(t);
+                let dense = up.decode_dense();
+                assert_eq!(bits(&dense), bits(&dec_s), "decode_dense n={n}");
+            }
+        }
+    }
+}

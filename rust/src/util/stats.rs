@@ -4,39 +4,49 @@
 
 /// Mean of a slice (0.0 for empty).
 ///
-/// Summation is chunked at the fixed [`crate::util::par::CHUNK`]
-/// boundary (per-chunk partials combined in chunk order), so the result
-/// is bit-identical whether the chunks run sequentially or in parallel;
-/// inputs at or below one chunk are the plain sequential sum.
+/// The per-chunk sum is the lane-striped reduction of
+/// [`crate::util::simd`] (`STRIPE` f64 accumulators, element `i` folding
+/// into lane `i % STRIPE`, lanes combined sequentially), chunked at the
+/// fixed [`crate::util::par::CHUNK`] boundary with partials combined in
+/// chunk order — so the result is bit-identical whether the chunks run
+/// sequentially or in parallel, and whether a chunk runs scalar or AVX2.
 pub fn mean(xs: &[f32]) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     if xs.len() <= crate::util::par::CHUNK {
-        // single chunk == the plain sum, bit for bit — and the per-step
-        // metrics path stays allocation-free
-        return xs.iter().map(|&x| x as f64).sum::<f64>() / xs.len() as f64;
+        // single chunk stays inline and allocation-free
+        return crate::util::simd::sum_striped(xs) / xs.len() as f64;
     }
-    let partials = crate::util::par::map_chunks(xs, |c| c.iter().map(|&x| x as f64).sum::<f64>());
+    let partials = crate::util::par::map_chunks(xs, crate::util::simd::sum_striped);
     partials.iter().sum::<f64>() / xs.len() as f64
 }
 
-/// Population standard deviation. Two chunked passes (see [`mean`] for
-/// the determinism contract); this is the σ of the paper's eq. 5, on the
+/// Population standard deviation — the σ of the paper's eq. 5, on the
 /// codec's per-tensor hot path, so big tensors run it on every core.
+///
+/// One *fused* pass per chunk accumulates Σx and Σx² together (striped,
+/// f64 — see [`mean`] for the determinism contract), then
+/// σ = √max(0, Σx²/n − mean²); the max guards the moment identity
+/// against f64 rounding when the variance underflows toward zero.
+/// Replaces the old two-sweep (mean, then Σ(x−m)²) formulation: half the
+/// memory traffic, and the two agree to f64 rounding (pinned by a test
+/// below) — for zero-centred gradient deltas at f32 scale the moment
+/// form loses no meaningful precision.
 pub fn std_dev(xs: &[f32]) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
-    let m = mean(xs);
-    if xs.len() <= crate::util::par::CHUNK {
-        return (xs.iter().map(|&x| (x as f64 - m).powi(2)).sum::<f64>() / xs.len() as f64)
-            .sqrt();
-    }
-    let partials = crate::util::par::map_chunks(xs, |c| {
-        c.iter().map(|&x| (x as f64 - m).powi(2)).sum::<f64>()
-    });
-    (partials.iter().sum::<f64>() / xs.len() as f64).sqrt()
+    let (sum, sumsq) = if xs.len() <= crate::util::par::CHUNK {
+        crate::util::simd::sum_sumsq_striped(xs)
+    } else {
+        crate::util::par::map_chunks(xs, crate::util::simd::sum_sumsq_striped)
+            .iter()
+            .fold((0.0, 0.0), |(s, q), &(cs, cq)| (s + cs, q + cq))
+    };
+    let n = xs.len() as f64;
+    let m = sum / n;
+    (sumsq / n - m * m).max(0.0).sqrt()
 }
 
 /// Fraction of exact zeros (realized pruning sparsity).
@@ -228,6 +238,61 @@ mod tests {
         let xs = [1.0f32, 2.0, 3.0, 4.0];
         assert!((mean(&xs) - 2.5).abs() < 1e-12);
         assert!((std_dev(&xs) - 1.118033988749895).abs() < 1e-9);
+    }
+
+    /// The old two-sweep std_dev (mean, then Σ(x−m)²) is the numerical
+    /// reference the fused moment form is held against. True bit parity
+    /// between the formulations is impossible (different associations);
+    /// the contract is agreement to f64 rounding at gradient-like scale.
+    fn std_dev_two_sweep(xs: &[f32]) -> f64 {
+        let m = mean(xs);
+        (xs.iter().map(|&x| (x as f64 - m).powi(2)).sum::<f64>() / xs.len() as f64).sqrt()
+    }
+
+    #[test]
+    fn fused_std_dev_matches_two_sweep_reference() {
+        let mut rng = crate::util::rng::Rng::new(31);
+        for &n in &[5usize, 1000, crate::util::par::CHUNK + 17] {
+            let mut xs = vec![0f32; n];
+            rng.fill_normal(&mut xs, 0.05); // gradient-like scale
+            let fused = std_dev(&xs);
+            let two = std_dev_two_sweep(&xs);
+            assert!(
+                (fused - two).abs() <= 1e-9 * two.max(1e-12),
+                "n={n}: fused {fused} vs two-sweep {two}"
+            );
+        }
+        // exactly representable data: the two agree exactly
+        let xs = [1.0f32, 2.0, 3.0, 4.0];
+        assert_eq!(std_dev(&xs), std_dev_two_sweep(&xs));
+    }
+
+    /// Pin the fused kernel's exact shape: striped lanes folded in order,
+    /// chunk partials combined in chunk order. A reimplementation here
+    /// must match bit for bit at any size — this is what makes the value
+    /// independent of thread count and (with the simd parity pins in
+    /// `util::simd`) of the scalar/vector choice.
+    #[test]
+    fn fused_std_dev_chunk_fold_is_bit_deterministic() {
+        let mut rng = crate::util::rng::Rng::new(32);
+        let n = 2 * crate::util::par::CHUNK + 123;
+        let mut xs = vec![0f32; n];
+        rng.fill_normal(&mut xs, 1.0);
+        let (mut sum, mut sumsq) = (0.0f64, 0.0f64);
+        for chunk in xs.chunks(crate::util::par::CHUNK) {
+            let mut sums = [0.0f64; crate::util::simd::STRIPE];
+            let mut sqs = [0.0f64; crate::util::simd::STRIPE];
+            for (i, &x) in chunk.iter().enumerate() {
+                let xd = x as f64;
+                sums[i % crate::util::simd::STRIPE] += xd;
+                sqs[i % crate::util::simd::STRIPE] += xd * xd;
+            }
+            sum += sums.iter().sum::<f64>();
+            sumsq += sqs.iter().sum::<f64>();
+        }
+        let m = sum / n as f64;
+        let want = (sumsq / n as f64 - m * m).max(0.0).sqrt();
+        assert_eq!(std_dev(&xs).to_bits(), want.to_bits());
     }
 
     #[test]

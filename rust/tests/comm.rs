@@ -91,6 +91,98 @@ fn prop_sign_roundtrip_preserves_support_signs_and_bytes() {
     );
 }
 
+/// Lengths that straddle the bit-plane codec's u32 word boundaries —
+/// the exact shapes where a word-at-a-time (movemask-style) encoder can
+/// get partial-word masking wrong.
+const PLANE_BOUNDARY_LENS: [usize; 8] = [0, 1, 31, 32, 33, 63, 64, 65];
+
+#[test]
+fn prop_sign_planes_roundtrip_at_word_boundaries() {
+    // random ± survivor patterns at every boundary length: the planes
+    // must survive encode → decode → re-encode unchanged, and the wire
+    // bytes must match the documented formula at every nnz
+    for_all2(
+        105,
+        &UsizeIn(0, PLANE_BOUNDARY_LENS.len() - 1),
+        &UsizeIn(0, 1 << 20),
+        96,
+        |&li, &seed| {
+            let n = PLANE_BOUNDARY_LENS[li];
+            let mut rng = Rng::new(seed as u64);
+            let pruned: Vec<f32> = (0..n)
+                .map(|_| match rng.below(4) {
+                    0 | 1 => 0.0,
+                    2 => 0.25,
+                    _ => -0.25,
+                })
+                .collect();
+            let g = SignTensor::encode(&pruned);
+            let nnz = pruned.iter().filter(|&&x| x != 0.0).count();
+            if g.nnz as usize != nnz {
+                return Err(format!("n={n}: nnz {} != {nnz}", g.nnz));
+            }
+            if g.wire_bytes() != sign_tensor_bytes(n, nnz) {
+                return Err(format!("n={n} nnz={nnz}: wire bytes != formula"));
+            }
+            // plane widths: ceil(n/32) presence words, ceil(nnz/32) sign
+            // words — the partial-word tails the boundary lengths probe
+            if g.presence.len() != n.div_ceil(32) || g.signs.len() != nnz.div_ceil(32) {
+                return Err(format!(
+                    "n={n} nnz={nnz}: plane widths {}/{}",
+                    g.presence.len(),
+                    g.signs.len()
+                ));
+            }
+            let decoded = TensorUpdate::Sign(g.clone()).decode_dense();
+            for (i, (&d, &p)) in decoded.iter().zip(&pruned).enumerate() {
+                if (p == 0.0) != (d == 0.0) {
+                    return Err(format!("n={n}: support changed at {i}"));
+                }
+                if p != 0.0 && d.signum() != p.signum() {
+                    return Err(format!("n={n}: sign flipped at {i}"));
+                }
+            }
+            // re-encoding the decode reproduces the planes bit for bit
+            let g2 = SignTensor::encode(&decoded);
+            if g2.presence != g.presence || g2.signs != g.signs || g2.nnz != g.nnz {
+                return Err(format!("n={n}: planes not a fixed point of decode∘encode"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn sign_planes_all_and_no_survivors_at_word_boundaries() {
+    for n in PLANE_BOUNDARY_LENS {
+        // no survivors: empty sign plane, zeroed presence, zero decode
+        let g = SignTensor::encode(&vec![0.0f32; n]);
+        assert_eq!(g.nnz, 0, "n={n}");
+        assert_eq!(g.wire_bytes(), sign_tensor_bytes(n, 0), "n={n}");
+        assert!(g.signs.is_empty(), "n={n}: sign words for zero survivors");
+        assert!(g.presence.iter().all(|&w| w == 0), "n={n}");
+        assert_eq!(TensorUpdate::Sign(g).decode_dense(), vec![0.0f32; n]);
+
+        // all survivors, alternating sign: presence saturates every word
+        // (partial last word masked, never overrun)
+        let pruned: Vec<f32> =
+            (0..n).map(|i| if i % 2 == 0 { 0.5 } else { -0.5 }).collect();
+        let g = SignTensor::encode(&pruned);
+        assert_eq!(g.nnz as usize, n, "n={n}");
+        assert_eq!(g.wire_bytes(), sign_tensor_bytes(n, n), "n={n}");
+        for (wi, &w) in g.presence.iter().enumerate() {
+            let bits_here = (n - wi * 32).min(32);
+            let want = if bits_here == 32 { u32::MAX } else { (1u32 << bits_here) - 1 };
+            assert_eq!(w, want, "n={n}: presence word {wi}");
+        }
+        let decoded = TensorUpdate::Sign(g).decode_dense();
+        for (i, (&d, &p)) in decoded.iter().zip(&pruned).enumerate() {
+            assert_eq!(d.signum(), p.signum(), "n={n}: sign at {i}");
+            assert_ne!(d, 0.0, "n={n}: survivor dropped at {i}");
+        }
+    }
+}
+
 #[test]
 fn prop_sign_beats_sparse_beats_dense_at_high_sparsity() {
     // at ≤ ~46% survivors (eq. 3 at P=0.9) the byte ordering that

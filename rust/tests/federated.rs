@@ -969,6 +969,44 @@ fn sample_m_off_and_full_fleet_are_bit_for_bit() {
     }
 }
 
+#[cfg(feature = "simd")]
+#[test]
+fn simd_and_scalar_kernels_are_bit_for_bit_twin_runs() {
+    // the tentpole's end-to-end pin: a federated run with every host
+    // kernel forced down the scalar oracle path must be a bit-for-bit
+    // twin — across ALL parity families — of the same run on the
+    // vectorized kernels. Chunk boundaries are fixed by util::par, so
+    // vectorizing inside a chunk must not move a single ledger byte,
+    // survivor count, or parameter bit. Toggling the global force flag
+    // while other tests run concurrently is safe for exactly the reason
+    // this test exists: the two paths are indistinguishable.
+    use efficientgrad::util::simd;
+    let Some(m) = manifest() else {
+        eprintln!("SKIP: artifacts missing");
+        return;
+    };
+    if !simd::available() {
+        eprintln!("SKIP: simd compiled in but not available on this host");
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    for comm in [CommMode::Sign, CommMode::Pruned] {
+        let mut cfg = small_cfg(3, 3);
+        cfg.comm = comm;
+        simd::force_scalar(true);
+        let scalar = harness::run(&rt, &m, cfg.clone());
+        simd::force_scalar(false);
+        let scalar = scalar.unwrap();
+        let vector = harness::run(&rt, &m, cfg).unwrap();
+        assert_twin_parity(
+            &format!("scalar vs simd kernels ({comm:?})"),
+            &scalar,
+            &vector,
+            Parity::full(),
+        );
+    }
+}
+
 #[test]
 fn sampled_kill_and_resume_reproduces_the_cohort_sequence() {
     // the sample stream's durability pin: the run store persists the
