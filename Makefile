@@ -6,7 +6,7 @@
 
 MANIFEST := artifacts/manifest.json
 
-.PHONY: artifacts artifacts-full test bench bench-comm bench-pruning clean-artifacts
+.PHONY: artifacts artifacts-full test bench bench-comm bench-pruning bench-net clean-artifacts
 
 $(MANIFEST):
 	python python/compile/aot.py --outdir artifacts
@@ -33,6 +33,11 @@ bench-comm:
 # half needs no artifacts; the train-step half skips without them.
 bench-pruning:
 	cd rust && cargo bench --bench pruning_hotpath
+
+# transport soak: loopback-TCP vs in-process round latency + byte-parity
+# pin. Lite-worker fleet — needs no artifacts, runs anywhere (incl. CI).
+bench-net:
+	cd rust && cargo bench --bench net_soak
 
 clean-artifacts:
 	rm -rf artifacts

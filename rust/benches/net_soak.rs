@@ -1,0 +1,205 @@
+//! Transport soak: loopback-TCP vs the in-process channel transport.
+//!
+//! Two things are measured and one is pinned:
+//!
+//!   * round latency — a full dense-downlink round (dispatch → worker
+//!     step → gathered report) over each transport, so the wire tax of
+//!     the length-prefixed TCP path is visible next to the channel
+//!     baseline;
+//!   * plane bytes — the handshake/heartbeat/framing tax the TCP
+//!     transport ledgers separately from payload bytes (the in-process
+//!     transport must stay at exactly 0);
+//!   * parity — before timing anything, a soak loop asserts the report
+//!     frames a TCP round produces are byte-for-byte the frames the
+//!     in-process transport produces from the same seed. A transport
+//!     that perturbs what workers receive or send fails here, not in a
+//!     statistics table.
+//!
+//! Rows land in `BENCH_net.json` (tracked across PRs next to
+//! `BENCH_runtime.json` / `BENCH_comm.json`). Set
+//! `EFFICIENTGRAD_BENCH_SHORT=1` (CI) for a reduced soak.
+//!
+//!     cargo bench --bench net_soak
+
+use std::sync::mpsc;
+use std::thread;
+use std::time::Duration;
+
+use efficientgrad::benchlib::{bench, fmt_ns, Report};
+use efficientgrad::comm::envelope::encode_update;
+use efficientgrad::comm::{Frame, FrameKind, ModelUpdate};
+use efficientgrad::config::{CommMode, CommPruner};
+use efficientgrad::coordinator::{CommSetup, LiteWorker, WorkerTask};
+use efficientgrad::net::client::{self, ClientConfig};
+use efficientgrad::net::tcp::TcpTransport;
+use efficientgrad::net::{InProcess, Transport};
+use efficientgrad::tensor::Tensor;
+use efficientgrad::util::rng::Rng;
+
+/// Model size (one tensor, 4·P = 16 KB dense downlink per worker) —
+/// big enough that framing overhead is amortised realistically, small
+/// enough that the short soak stays inside a CI minute.
+const P: usize = 4096;
+const N_WORKERS: usize = 3;
+const SEED: u64 = 11;
+const HASH: u64 = 0x50AC;
+const HEARTBEAT_MS: u64 = 25;
+const DEADLINE_MS: u64 = 10_000;
+const HEADERS: [&str; 6] = ["op", "mean", "p50", "p95", "rounds/s", "plane B"];
+
+fn short_mode() -> bool {
+    std::env::var_os("EFFICIENTGRAD_BENCH_SHORT").is_some()
+}
+
+fn comm() -> CommSetup {
+    CommSetup {
+        mode: CommMode::Pruned,
+        rate: 0.1,
+        pruner: CommPruner::Stochastic,
+    }
+}
+
+fn head_params() -> Vec<Tensor> {
+    let mut rng = Rng::new(SEED);
+    let mut data = vec![0f32; P];
+    rng.fill_normal(&mut data, 0.5);
+    vec![Tensor::new(vec![P], data)]
+}
+
+fn spawn_client(addr: String, worker_id: usize) -> thread::JoinHandle<anyhow::Result<()>> {
+    thread::spawn(move || {
+        let cfg = ClientConfig {
+            worker_id,
+            config_hash: HASH,
+            heartbeat_ms: HEARTBEAT_MS,
+            round_deadline_ms: DEADLINE_MS,
+            seed: SEED,
+            max_connect_attempts: 32,
+        };
+        client::serve(&addr, &cfg, LiteWorker::new(worker_id, SEED, comm()))
+    })
+}
+
+/// One dense-downlink round over any transport; replies in worker-id
+/// order so twin rounds compare positionally.
+fn dense_round(t: &mut dyn Transport, round: usize, frame: &Frame) -> Vec<(usize, Frame)> {
+    let (tx, rx) = mpsc::channel();
+    for wid in 0..t.workers() {
+        t.submit(
+            wid,
+            WorkerTask {
+                round,
+                version: round as u64 + 1,
+                frame: frame.clone(),
+                local_steps: 2,
+                slowdown: 1.0,
+                sleep: false,
+                reply: tx.clone(),
+            },
+        )
+        .unwrap();
+    }
+    drop(tx);
+    let mut got: Vec<(usize, Frame)> = rx.iter().collect();
+    got.sort_by_key(|&(wid, _)| wid);
+    got
+}
+
+fn main() {
+    let short = short_mode();
+    let soak_rounds = if short { 3 } else { 16 };
+    let (warmup, iters) = if short { (1, 5) } else { (2, 20) };
+
+    let frame = Frame::seal(
+        FrameKind::Update,
+        &encode_update(&ModelUpdate::Dense(head_params())),
+    );
+
+    let mut inproc = InProcess::new(
+        (0..N_WORKERS)
+            .map(|i| LiteWorker::new(i, SEED, comm()))
+            .collect::<Vec<_>>(),
+    );
+    let mut tcp = TcpTransport::bind("127.0.0.1:0", N_WORKERS, HASH, HEARTBEAT_MS, DEADLINE_MS)
+        .expect("bind loopback");
+    let addr = tcp.local_addr().expect("bound addr");
+    let fleet: Vec<_> = (0..N_WORKERS)
+        .map(|i| spawn_client(addr.to_string(), i))
+        .collect();
+
+    // parity soak first: the statistics below are only worth reading if
+    // the two transports are carrying identical traffic
+    for round in 0..soak_rounds {
+        let a = dense_round(&mut inproc, round, &frame);
+        let b = dense_round(&mut tcp, round, &frame);
+        assert_eq!(a.len(), N_WORKERS, "round {round}: in-process fleet short");
+        assert_eq!(b.len(), N_WORKERS, "round {round}: tcp fleet short");
+        for ((wa, fa), (wb, fb)) in a.iter().zip(&b) {
+            assert_eq!(wa, wb, "round {round}: reply order by worker id");
+            assert_eq!(
+                fa.as_bytes(),
+                fb.as_bytes(),
+                "round {round} worker {wa}: report frames must be byte-identical"
+            );
+            assert_eq!(fa.open().unwrap().0, FrameKind::Report);
+        }
+    }
+    assert_eq!(inproc.plane_bytes(), 0, "channels pay no plane tax");
+    assert!(tcp.plane_bytes() > 0, "TCP must ledger its plane tax");
+    println!(
+        "parity soak: {soak_rounds} rounds × {N_WORKERS} workers bit-identical across transports"
+    );
+
+    let mut rep = Report::new("Transport soak: loopback TCP vs in-process", &HEADERS);
+
+    let mut round = soak_rounds;
+    let s = bench(
+        "in-process round",
+        warmup,
+        iters,
+        Duration::from_secs(60),
+        || {
+            let got = dense_round(&mut inproc, round, &frame);
+            assert_eq!(got.len(), N_WORKERS);
+            round += 1;
+        },
+    );
+    rep.row(vec![
+        format!("in-process round ({N_WORKERS}w)"),
+        fmt_ns(s.mean_ns),
+        fmt_ns(s.p50_ns),
+        fmt_ns(s.p95_ns),
+        format!("{:.1}", s.throughput(1.0)),
+        inproc.plane_bytes().to_string(),
+    ]);
+
+    let mut round = soak_rounds;
+    let s = bench(
+        "loopback-TCP round",
+        warmup,
+        iters,
+        Duration::from_secs(60),
+        || {
+            let got = dense_round(&mut tcp, round, &frame);
+            assert_eq!(got.len(), N_WORKERS);
+            round += 1;
+        },
+    );
+    rep.row(vec![
+        format!("loopback-TCP round ({N_WORKERS}w)"),
+        fmt_ns(s.mean_ns),
+        fmt_ns(s.p50_ns),
+        fmt_ns(s.p95_ns),
+        format!("{:.1}", s.throughput(1.0)),
+        tcp.plane_bytes().to_string(),
+    ]);
+
+    tcp.shutdown();
+    for h in fleet {
+        h.join().expect("client thread").expect("client exits Ok");
+    }
+
+    rep.print();
+    rep.save_json(std::path::Path::new("BENCH_net.json")).unwrap();
+    println!("json -> BENCH_net.json");
+}

@@ -70,14 +70,49 @@ pub enum FrameKind {
     Report = 2,
     /// Uplink: worker could not open/apply its downlink; empty payload.
     Nack = 3,
+    /// Transport downlink: a full `WorkerTask` (round header + the inner
+    /// sealed [`FrameKind::Update`] frame, byte-for-byte as dispatched).
+    Task = 4,
+    /// Transport uplink: worker finished one task; empty payload. Plays
+    /// the role the in-process reply channel's hangup plays.
+    RoundDone = 5,
+    /// Transport handshake, worker → coordinator: worker id + config hash.
+    Hello = 6,
+    /// Transport handshake, coordinator → worker: admission granted.
+    Welcome = 7,
+    /// Transport liveness probe; empty payload, either direction.
+    Heartbeat = 8,
+    /// Transport farewell: the peer is closing this connection cleanly.
+    Goodbye = 9,
+    /// Transport control, coordinator → worker: send back a snapshot.
+    Capture = 10,
+    /// Transport control, worker → coordinator: a serialized snapshot.
+    Snapshot = 11,
+    /// Transport control, coordinator → worker: restore from snapshot.
+    Restore = 12,
+    /// Transport control, worker → coordinator: restore applied; empty.
+    RestoreAck = 13,
 }
 
 impl FrameKind {
-    fn from_u16(v: u16) -> Result<Self> {
+    /// Decode a header kind field. Public so the transport layer can
+    /// *route* a frame by its claimed kind without opening it — payload
+    /// bytes still only leave through [`Frame::open`].
+    pub fn from_u16(v: u16) -> Result<Self> {
         Ok(match v {
             1 => FrameKind::Update,
             2 => FrameKind::Report,
             3 => FrameKind::Nack,
+            4 => FrameKind::Task,
+            5 => FrameKind::RoundDone,
+            6 => FrameKind::Hello,
+            7 => FrameKind::Welcome,
+            8 => FrameKind::Heartbeat,
+            9 => FrameKind::Goodbye,
+            10 => FrameKind::Capture,
+            11 => FrameKind::Snapshot,
+            12 => FrameKind::Restore,
+            13 => FrameKind::RestoreAck,
             other => bail!("unknown frame kind {other}"),
         })
     }
@@ -145,6 +180,15 @@ impl Frame {
     pub fn bytes_mut(&mut self) -> &mut Vec<u8> {
         &mut self.0
     }
+
+    /// Rehydrate a frame from bytes read off a socket. Deliberately
+    /// unchecked: a `Frame` is just a byte container, and [`Frame::open`]
+    /// remains the only gate through which payload bytes escape — wire
+    /// garbage arrives as a frame that then fails to open, exactly like
+    /// a fault-harness corruption.
+    pub fn from_wire(bytes: Vec<u8>) -> Frame {
+        Frame(bytes)
+    }
 }
 
 /// Little-endian payload serializer (the counterpart of [`ByteReader`]).
@@ -179,6 +223,13 @@ impl ByteWriter {
 
     pub fn put_f64(&mut self, v: f64) {
         self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Raw bytes, verbatim — for nested already-sealed frames (the
+    /// transport's task messages carry the downlink frame unmodified, so
+    /// fault-injected damage travels bit-for-bit).
+    pub fn put_raw(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
     }
 
     pub fn into_bytes(self) -> Vec<u8> {
@@ -243,6 +294,13 @@ impl<'a> ByteReader<'a> {
     pub fn get_f32s(&mut self, n: usize) -> Result<Vec<f32>> {
         let raw = self.take(4 * n)?;
         Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    /// Read `n` raw bytes after checking they remain (the counterpart of
+    /// [`ByteWriter::put_raw`] — the caller owns any further validation,
+    /// e.g. a nested frame's own [`Frame::open`]).
+    pub fn get_raw(&mut self, n: usize) -> Result<&'a [u8]> {
+        self.take(n)
     }
 
     /// Fail if payload bytes remain — trailing garbage is a schema

@@ -474,6 +474,23 @@ pub struct FedConfig {
     /// resume from `run_store` instead of starting fresh
     /// (`federated.resume` / `--resume`); requires `run_store`
     pub resume: bool,
+    /// TCP listen address (`federated.listen` / `--listen`, e.g.
+    /// `127.0.0.1:4800`; port 0 picks a free one): the leader binds here
+    /// and waits for `efficientgrad worker --connect` processes instead
+    /// of spawning in-process worker threads. `None` (the default) keeps
+    /// the in-process fleet. Timing-only: never part of the config hash.
+    pub listen: Option<String>,
+    /// transport heartbeat period in ms (`federated.heartbeat_ms` /
+    /// `--heartbeat-ms`): both sides of a TCP connection pulse at this
+    /// rate, and a peer silent for 4 periods is declared dead — which
+    /// feeds the ordinary dropout/resync machinery, never a hang.
+    /// Timing-only: excluded from the config hash.
+    pub heartbeat_ms: u64,
+    /// per-frame send/recv deadline in ms (`federated.round_deadline_ms`
+    /// / `--round-deadline-ms`): the longest the leader waits for a
+    /// handshake, control round-trip, or blocked send before writing the
+    /// peer off. Timing-only: excluded from the config hash.
+    pub round_deadline_ms: u64,
     pub train: TrainConfig,
 }
 
@@ -507,6 +524,9 @@ impl Default for FedConfig {
             faults: None,
             run_store: None,
             resume: false,
+            listen: None,
+            heartbeat_ms: 50,
+            round_deadline_ms: 30_000,
             train: TrainConfig::default(),
         }
     }
@@ -554,6 +574,12 @@ impl FedConfig {
                 .context("federated.faults")?,
             run_store: t.get("federated.run_store").and_then(Value::as_str).map(String::from),
             resume: t.bool_or("federated.resume", d.resume),
+            listen: t.get("federated.listen").and_then(Value::as_str).map(String::from),
+            heartbeat_ms: t.usize_or("federated.heartbeat_ms", d.heartbeat_ms as usize) as u64,
+            round_deadline_ms: t.usize_or(
+                "federated.round_deadline_ms",
+                d.round_deadline_ms as usize,
+            ) as u64,
             train: TrainConfig::from_table(t)?,
         };
         cfg.validate()?;
@@ -586,6 +612,16 @@ impl FedConfig {
         }
         if self.resume && self.run_store.is_none() {
             bail!("federated.resume needs federated.run_store (nowhere to resume from)");
+        }
+        if self.heartbeat_ms == 0 {
+            bail!("heartbeat_ms must be at least 1");
+        }
+        if self.round_deadline_ms < self.heartbeat_ms {
+            bail!(
+                "round_deadline_ms {} below heartbeat_ms {} — every exchange would time out",
+                self.round_deadline_ms,
+                self.heartbeat_ms
+            );
         }
         Ok(())
     }
@@ -809,6 +845,35 @@ mod tests {
         // resume without a store is a config error
         let t = Table::parse("[federated]\nresume = true").unwrap();
         assert!(FedConfig::from_table(&t).is_err());
+    }
+
+    #[test]
+    fn transport_knobs_parse_with_in_process_default() {
+        // unset: in-process fleet, stock heartbeat/deadline
+        let c = FedConfig::from_table(&Table::default()).unwrap();
+        assert!(c.listen.is_none());
+        assert_eq!(c.heartbeat_ms, 50);
+        assert_eq!(c.round_deadline_ms, 30_000);
+        let t = Table::parse(
+            "[federated]\nlisten = \"127.0.0.1:0\"\nheartbeat_ms = 20\n\
+             round_deadline_ms = 5000",
+        )
+        .unwrap();
+        let c = FedConfig::from_table(&t).unwrap();
+        assert_eq!(c.listen.as_deref(), Some("127.0.0.1:0"));
+        assert_eq!(c.heartbeat_ms, 20);
+        assert_eq!(c.round_deadline_ms, 5000);
+        // a zero heartbeat or a deadline shorter than one heartbeat
+        // would make every exchange time out — config error, not a hang
+        for bad in [
+            "[federated]\nheartbeat_ms = 0",
+            "[federated]\nheartbeat_ms = 100\nround_deadline_ms = 50",
+        ] {
+            assert!(
+                FedConfig::from_table(&Table::parse(bad).unwrap()).is_err(),
+                "accepted {bad:?}"
+            );
+        }
     }
 
     #[test]

@@ -13,6 +13,19 @@
 //! compiles its own executable — exactly like a fleet of edge devices,
 //! each with its own accelerator and its own ParamStore replica.
 //!
+//! The leader reaches its fleet through a swappable transport tier
+//! ([`crate::net`]): in-process channels by default (`Leader::new`
+//! spawns the worker threads itself), or — with `federated.listen` /
+//! `--listen` — a length-prefixed TCP endpoint that remote worker
+//! processes (`efficientgrad worker --connect …`) join via a versioned,
+//! config-hash-checked handshake. The round protocol, fault injection,
+//! and every payload byte are identical on both; the loopback-TCP run
+//! is pinned bit-for-bit against the in-process run in
+//! `tests/federated.rs`. The leader also polls a shutdown flag
+//! ([`crate::net::signal`], armed by SIGINT/SIGTERM in `main`) at every
+//! round boundary: a signalled run finishes its round, persists the run
+//! store, says goodbye to its workers, and exits resumable.
+//!
 //! ## Round schedules
 //!
 //! Two leader schedules, selected by `federated.pipeline` / `--pipeline`
@@ -140,6 +153,7 @@ pub mod versions;
 pub mod worker;
 
 use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -155,9 +169,12 @@ use crate::data::synthetic::{generate, SynthConfig};
 use crate::data::Dataset;
 use crate::faults::FaultPlan;
 use crate::manifest::{ArtifactSpec, Manifest, ModelSpec};
+use crate::net::tcp::TcpTransport;
+use crate::net::{InProcess, Transport};
 use crate::params::ParamStore;
 use crate::runtime::{Runtime, TransferStats};
 use crate::tensor::Tensor;
+use crate::util::backoff::Backoff;
 use crate::util::rng::Rng;
 
 pub use evaluator::{EvalOutcome, Evaluator};
@@ -195,6 +212,15 @@ pub struct RoundReport {
     /// lands in the round that read it). Ledgered separately from the
     /// payload bytes so the integrity tax is visible
     pub envelope_bytes: u64,
+    /// transport-plane bytes this round, as seen from the leader's
+    /// endpoint: message length prefixes, handshakes, heartbeats, task
+    /// framing, goodbyes — every wire byte the transport tier adds on
+    /// top of the payload + envelope ledgers above. Always 0 in-process
+    /// (no sockets, no tax). Deliberately **excluded** from the twin-run
+    /// wire family: heartbeat counts depend on wall-clock timing, so
+    /// this is the one ledger field the TCP⇔in-process parity pin does
+    /// not compare (`docs/TRANSFER_MODEL.md` §Transport tier)
+    pub transport_bytes: u64,
     /// workers the leader dispatched a task to this round
     pub dispatched: usize,
     /// worker ids that missed a round (offline at dispatch, dispatch
@@ -294,10 +320,14 @@ impl RoundReport {
     }
 
     /// Every network byte this round moved, both directions (payloads +
-    /// envelope overhead), including the edge→root tier's uplinks on
-    /// two-tier rounds.
+    /// envelope overhead + transport-plane tax), including the
+    /// edge→root tier's uplinks on two-tier rounds.
     pub fn network_bytes(&self) -> u64 {
-        self.upload_bytes + self.download_bytes + self.envelope_bytes + self.tier_upload_bytes
+        self.upload_bytes
+            + self.download_bytes
+            + self.envelope_bytes
+            + self.tier_upload_bytes
+            + self.transport_bytes
     }
 
     /// Simulated Joules of this round's *measured* device-bus traffic at
@@ -417,9 +447,13 @@ struct Gather {
     /// per-worker: this round's exchange is settled (accepted report,
     /// rejected report, or quarantine) — indexed by worker id
     resolved: Vec<bool>,
-    /// per-worker: a dense retry was already sent this round (the
-    /// escalation ladder allows exactly one)
-    retried: Vec<bool>,
+    /// per-worker dense-retry budget for the round (the escalation
+    /// ladder allows exactly one). A [`Backoff`] rather than a bool so
+    /// the in-process and TCP transports share one retry discipline:
+    /// in-process uses the zero-delay [`Backoff::immediate`] schedule
+    /// (no jitter stream consumed — bit-identical to the old latch),
+    /// and the budget/delay knobs live in one place
+    retry: Vec<Backoff>,
     /// accepted (folded) fresh reports
     received: usize,
     corrupt_frames: usize,
@@ -439,7 +473,7 @@ impl Gather {
     fn new(mode: CommMode, n_workers: usize, aggregators: usize) -> Self {
         Self {
             resolved: vec![false; n_workers],
-            retried: vec![false; n_workers],
+            retry: vec![Backoff::immediate(1); n_workers],
             received: 0,
             corrupt_frames: 0,
             rejected_reports: 0,
@@ -467,15 +501,15 @@ impl Gather {
 }
 
 /// Process one uplink frame for the current round. Returns the reply
-/// channel of a dense retry when the frame was a first Nack — the caller
-/// drains it to resolution before touching the main channel again (the
-/// `retried` latch makes the nested calls terminal, so recursion depth
-/// is bounded at one).
+/// channel of a dense retry when the frame was a Nack with retry budget
+/// left — the caller drains it to resolution before touching the main
+/// channel again (the exhausted [`Backoff`] makes the nested calls
+/// terminal, so recursion depth is bounded at one).
 #[allow(clippy::too_many_arguments)]
 fn handle_frame(
     g: &mut Gather,
     worker_version: &mut [Option<u64>],
-    workers: &[WorkerHandle],
+    transport: &mut dyn Transport,
     plan: &FaultPlan,
     head_params: &[Tensor],
     round: usize,
@@ -509,22 +543,28 @@ fn handle_frame(
                 g.corrupt_frames += 1;
                 return Ok(None);
             }
-            if g.retried[wid] {
-                // the dense retry was rejected too: give up for the
-                // round, dense-resync at next dispatch
-                log::warn!(
-                    "round {round}: worker {wid} rejected the dense retry — quarantined"
-                );
-                g.resolved[wid] = true;
-                g.dropped.push(wid);
-                worker_version[wid] = None;
-                return Ok(None);
+            let delay_ms = match g.retry[wid].next_delay_ms() {
+                // the retry budget is spent (the dense retry was
+                // rejected too): give up for the round, dense-resync at
+                // next dispatch
+                None => {
+                    log::warn!(
+                        "round {round}: worker {wid} rejected the dense retry — quarantined"
+                    );
+                    g.resolved[wid] = true;
+                    g.dropped.push(wid);
+                    worker_version[wid] = None;
+                    return Ok(None);
+                }
+                Some(d) => d,
+            };
+            if delay_ms > 0 {
+                std::thread::sleep(Duration::from_millis(delay_ms));
             }
             // escalation step 1: answer the nack with a dense snapshot
             // of the reference head on a fresh reply channel. The
             // retry's slowdown/sleep are fixed at healthy — straggler
             // injection is timing-only and already drawn for the round.
-            g.retried[wid] = true;
             g.downlink_retries += 1;
             let payload = ModelUpdate::Dense(head_params.to_vec());
             g.download_bytes += payload.wire_bytes();
@@ -535,7 +575,7 @@ fn handle_frame(
                 plan.mutate(&mut retry, f, round, wid, 1);
             }
             let (rtx, rrx) = mpsc::channel();
-            match workers[wid].submit(WorkerTask {
+            match transport.submit(wid, WorkerTask {
                 round,
                 version: base_version,
                 frame: retry,
@@ -605,6 +645,16 @@ fn handle_frame(
             g.resolved[wid] = true;
             Ok(None)
         }
+        // transport-control kinds (Task, Hello, Heartbeat, …) are
+        // consumed by the transport tier and never reach the round's
+        // data path — one arriving here means the peer is broken or
+        // forging frames
+        _ => {
+            log::warn!("round {round}: worker {wid} sent a {kind:?} frame on the uplink");
+            g.corrupt_frames += 1;
+            g.quarantine(wid, worker_version);
+            Ok(None)
+        }
     }
 }
 
@@ -649,7 +699,15 @@ pub struct Leader {
     /// round. `None` only while an encode is in flight on the overlap
     /// thread (the thread owns it and hands it back at join).
     down_codec: Option<DeltaCodec>,
-    workers: Vec<WorkerHandle>,
+    /// the pipe to the worker fleet: in-process channels by default,
+    /// a TCP endpoint under `cfg.listen` — the round protocol is
+    /// transport-agnostic (`crate::net`)
+    transport: Box<dyn Transport>,
+    /// round-boundary shutdown flag: the process-wide signal flag by
+    /// default ([`crate::net::signal`]); tests swap in a leaked local
+    /// flag via [`Leader::set_stop_flag`] so they never poison other
+    /// tests' leaders
+    stop: &'static AtomicBool,
     test: Dataset,
     /// the sequential schedule's eval driver. `None` under
     /// `cfg.pipeline`: the evaluator thread owns the sweep there, and a
@@ -714,25 +772,43 @@ impl Leader {
             )?)
         };
 
-        let workers = shards
-            .into_iter()
-            .enumerate()
-            .map(|(i, shard)| {
-                WorkerHandle::spawn(
-                    i,
-                    shard,
-                    art.clone(),
-                    &model,
-                    cfg.train.clone(),
-                    worker::CommSetup {
-                        mode: cfg.comm,
-                        rate: cfg.comm_rate,
-                        pruner: cfg.comm_pruner,
-                    },
-                    cfg.faults.clone(),
-                )
-            })
-            .collect::<Result<Vec<_>>>()?;
+        // the transport decides where the fleet lives: `listen` binds a
+        // TCP endpoint and waits for `efficientgrad worker --connect`
+        // processes (admitted only with a matching config hash); the
+        // default spawns the worker threads right here, exactly as
+        // before. Remote workers build their own shard/artifact state
+        // via [`spawn_edge_worker`].
+        let transport: Box<dyn Transport> = match &cfg.listen {
+            Some(addr) => Box::new(TcpTransport::bind(
+                addr,
+                cfg.workers,
+                runstore::config_hash(&cfg),
+                cfg.heartbeat_ms,
+                cfg.round_deadline_ms,
+            )?),
+            None => {
+                let workers = shards
+                    .into_iter()
+                    .enumerate()
+                    .map(|(i, shard)| {
+                        WorkerHandle::spawn(
+                            i,
+                            shard,
+                            art.clone(),
+                            &model,
+                            cfg.train.clone(),
+                            worker::CommSetup {
+                                mode: cfg.comm,
+                                rate: cfg.comm_rate,
+                                pruner: cfg.comm_pruner,
+                            },
+                            cfg.faults.clone(),
+                        )
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                Box::new(InProcess::new(workers))
+            }
+        };
 
         let global = ParamStore::init(&model, cfg.train.seed);
         // retain enough history to chain a worker max_chain versions
@@ -749,7 +825,8 @@ impl Leader {
             )),
             cfg,
             global,
-            workers,
+            transport,
+            stop: crate::net::signal::shutdown_flag(),
             test,
             eval,
             model,
@@ -779,6 +856,20 @@ impl Leader {
         &self.ring
     }
 
+    /// The bound listen address under `cfg.listen` (`None` in-process).
+    /// With `--listen 127.0.0.1:0` this is how callers learn the
+    /// OS-assigned port to point workers at.
+    pub fn listen_addr(&self) -> Option<std::net::SocketAddr> {
+        self.transport.local_addr()
+    }
+
+    /// Replace the round-boundary shutdown flag (default: the
+    /// process-wide signal flag). Tests pass a `Box::leak`ed flag so
+    /// exercising graceful shutdown cannot poison other tests' leaders.
+    pub fn set_stop_flag(&mut self, flag: &'static AtomicBool) {
+        self.stop = flag;
+    }
+
     /// Install a persisted [`runstore::RunState`]: refuses a store whose
     /// config hash or worker count disagrees with this leader (resuming
     /// under different hyperparameters would silently produce a
@@ -793,11 +884,11 @@ impl Leader {
                 state.config_hash
             );
         }
-        if state.workers.len() != self.workers.len() {
+        if state.workers.len() != self.transport.workers() {
             bail!(
                 "run store has {} workers, this run {}",
                 state.workers.len(),
-                self.workers.len()
+                self.transport.workers()
             );
         }
         self.global.params = state.global;
@@ -805,9 +896,13 @@ impl Leader {
         if let Some(c) = self.down_codec.as_mut() {
             c.set_residual(state.down_residual);
         }
+        // over TCP this blocks (up to the per-worker deadline) until
+        // each worker has connected and acked its snapshot — start the
+        // worker processes before the resumed leader, their handshake
+        // backoff rides out the window where nothing is listening yet
         for (i, p) in state.workers.iter().enumerate() {
             self.worker_version[i] = p.version;
-            self.workers[i].restore(p.snap.clone())?;
+            self.transport.restore(i, p.snap.clone())?;
         }
         self.rng_states = Some(state.rng);
         self.start_round = state.round + 1;
@@ -823,12 +918,12 @@ impl Leader {
     /// every worker's snapshot (blocks behind any still-running task),
     /// the global params, version ring, downlink residual, and the
     /// passed-in RNG states.
-    fn persist(&self, dir: &Path, round: usize, rng: runstore::RngStates) -> Result<()> {
-        let mut workers = Vec::with_capacity(self.workers.len());
-        for w in &self.workers {
+    fn persist(&mut self, dir: &Path, round: usize, rng: runstore::RngStates) -> Result<()> {
+        let mut workers = Vec::with_capacity(self.transport.workers());
+        for wid in 0..self.transport.workers() {
             workers.push(runstore::WorkerPersist {
-                version: self.worker_version[w.id],
-                snap: w.capture()?,
+                version: self.worker_version[wid],
+                snap: self.transport.capture(wid)?,
             });
         }
         let state = runstore::RunState {
@@ -950,9 +1045,21 @@ impl Leader {
         let mut inbox: Vec<InFlightRound> = Vec::new();
 
         for round in start_round..self.cfg.rounds {
+            // graceful shutdown (SIGINT/SIGTERM or a test flag): checked
+            // only at the round boundary, so the flag never interrupts a
+            // fold mid-flight — the previous round fully drained and
+            // persisted, the run store is resumable with --resume, and
+            // the teardown below closes worker connections cleanly
+            if self.stop.load(Ordering::SeqCst) {
+                log::warn!("shutdown requested — stopping before round {round}");
+                break;
+            }
             let t0 = Instant::now();
             let mut leader_busy = Duration::ZERO;
             let base_version = self.ring.head_version();
+            // transport-plane tax is ledgered per round as a delta of
+            // the transport's cumulative counter (0 in-process)
+            let plane0 = self.transport.plane_bytes();
 
             // broadcast: dense snapshots in dense mode; otherwise the
             // per-round delta / retained-delta chain / dense resync that
@@ -960,8 +1067,8 @@ impl Leader {
             // sealed in an integrity-checked frame (and possibly damaged
             // right after, if the fault plan says this downlink fails)
             let (tx, rx) = mpsc::channel::<(usize, Frame)>();
-            let mut g = Gather::new(self.cfg.comm, self.workers.len(), self.cfg.aggregators);
-            let mut dispatched_ids = Vec::with_capacity(self.workers.len());
+            let mut g = Gather::new(self.cfg.comm, self.transport.workers(), self.cfg.aggregators);
+            let mut dispatched_ids = Vec::with_capacity(self.transport.workers());
             let mut downlink_survivors = 0u64;
             let mut chained_downlinks = 0usize;
             // cohort: 0 < sample_m < n draws m worker ids per round from
@@ -973,7 +1080,7 @@ impl Leader {
             // workers just sit the round out with their replica intact:
             // the next cohort that includes them chains them forward
             // (`k ≤ max_chain`) or dense-resyncs beyond the window.
-            let n = self.workers.len();
+            let n = self.transport.workers();
             let sampling = self.cfg.sample_m > 0 && self.cfg.sample_m < n;
             let cohort: Vec<usize> = if sampling {
                 let mut ids: Vec<usize> = sample_rng
@@ -988,13 +1095,33 @@ impl Leader {
                 (0..n).collect()
             };
             for &wid in &cohort {
-                let w = &self.workers[wid];
+                // transport-site faults fire before the dropout draw;
+                // they key on (round, wid) without touching the leader's
+                // rng streams, so twin runs under the same fault plan
+                // draw dropout/straggler in the same order for the same
+                // ids on either transport
+                if plan.disconnects(round, wid) {
+                    // the fault plan severs this worker's connection: the
+                    // leader sees a dead link at dispatch. In-process the
+                    // sever is a no-op and the worker is simply skipped —
+                    // either way its replica is intact, only stale, so
+                    // the next dispatch chains or dense-resyncs it
+                    self.transport.sever(wid);
+                    g.dropped.push(wid);
+                    continue;
+                }
+                if plan.partitioned(round, wid) {
+                    // network partition: the link is up but unroutable
+                    // this round; skip dispatch, keep the version tag
+                    g.dropped.push(wid);
+                    continue;
+                }
                 if dropout_rng.uniform() < self.cfg.dropout_prob {
                     // unreachable this round: misses the downlink, ships
                     // nothing. Its replica is intact, only *stale* — the
                     // next dispatch chains it forward if it is within the
                     // max_chain window, dense resync beyond it
-                    g.dropped.push(w.id);
+                    g.dropped.push(wid);
                     continue;
                 }
                 let slowdown = if straggler_rng.uniform() < self.cfg.straggler_prob {
@@ -1002,7 +1129,7 @@ impl Leader {
                 } else {
                     1.0
                 };
-                let payload = self.downlink_payload(w.id);
+                let payload = self.downlink_payload(wid);
                 let (wire, survivors, is_dense, is_chain) = (
                     payload.wire_bytes(),
                     payload.survivors(),
@@ -1010,23 +1137,26 @@ impl Leader {
                     payload.is_chain(),
                 );
                 let mut frame = Frame::seal(FrameKind::Update, &encode_update(&payload));
-                if let Some(f) = plan.downlink(round, w.id, 0) {
-                    plan.mutate(&mut frame, f, round, w.id, 0);
+                if let Some(f) = plan.downlink(round, wid, 0) {
+                    plan.mutate(&mut frame, f, round, wid, 0);
                 }
-                match w.submit(WorkerTask {
-                    round,
-                    version: base_version,
-                    frame,
-                    local_steps: self.cfg.local_steps,
-                    slowdown,
-                    sleep: self.cfg.straggler_sleep,
-                    reply: tx.clone(),
-                }) {
+                match self.transport.submit(
+                    wid,
+                    WorkerTask {
+                        round,
+                        version: base_version,
+                        frame,
+                        local_steps: self.cfg.local_steps,
+                        slowdown,
+                        sleep: self.cfg.straggler_sleep,
+                        reply: tx.clone(),
+                    },
+                ) {
                     Ok(()) => {
                         // ledger counts delivered messages only — a
                         // dispatch failure ships nothing
-                        dispatched_ids.push(w.id);
-                        self.worker_version[w.id] = Some(base_version);
+                        dispatched_ids.push(wid);
+                        self.worker_version[wid] = Some(base_version);
                         g.download_bytes += wire;
                         g.envelope_bytes += FRAME_HEADER_BYTES;
                         downlink_survivors += survivors;
@@ -1038,9 +1168,9 @@ impl Leader {
                         }
                     }
                     Err(e) => {
-                        log::warn!("round {round}: worker {} unreachable: {e:#}", w.id);
-                        g.dropped.push(w.id);
-                        self.worker_version[w.id] = None;
+                        log::warn!("round {round}: worker {wid} unreachable: {e:#}");
+                        g.dropped.push(wid);
+                        self.worker_version[wid] = None;
                     }
                 }
             }
@@ -1070,21 +1200,30 @@ impl Leader {
             let mut late_reports = 0usize;
             let mut stale_weight_mass = 0.0f64;
             {
-                let workers = &self.workers;
+                let transport: &mut dyn Transport = &mut *self.transport;
+                let n_live = transport.workers();
                 let worker_version = &mut self.worker_version;
                 let head_params: &[Tensor] = &self.ring.head().params;
                 while full_barrier || g.received < quorum_needed {
                     match rx.recv() {
                         Ok((wid, frame)) => {
-                            if wid >= workers.len() {
+                            if wid >= n_live {
                                 g.corrupt_frames += 1;
                                 continue;
+                            }
+                            // slow-reader fault: the leader's read of this
+                            // worker's uplink stalls. Injected at the same
+                            // site for both transports, after the bounds
+                            // check and before any ledgering
+                            let lag = plan.slow_read_ms(round, wid);
+                            if lag > 0 {
+                                std::thread::sleep(Duration::from_millis(lag));
                             }
                             let t = Instant::now();
                             let retry_rx = handle_frame(
                                 &mut g,
                                 worker_version,
-                                workers,
+                                transport,
                                 &plan,
                                 head_params,
                                 round,
@@ -1097,14 +1236,15 @@ impl Leader {
                             if let Some(rrx) = retry_rx {
                                 // drain the retry channel to resolution
                                 // before touching the main channel again
-                                // (the retried latch makes these calls
-                                // terminal — no nested retries)
+                                // (the bounded per-worker retry budget
+                                // makes these calls terminal once spent
+                                // — no unbounded nested retries)
                                 while let Ok((rwid, rframe)) = rrx.recv() {
                                     let t = Instant::now();
                                     handle_frame(
                                         &mut g,
                                         worker_version,
-                                        workers,
+                                        transport,
                                         &plan,
                                         head_params,
                                         round,
@@ -1451,6 +1591,7 @@ impl Leader {
             };
             leader_busy += t.elapsed();
 
+            let transport_bytes = self.transport.plane_bytes().saturating_sub(plane0);
             let mut report = RoundReport {
                 round,
                 version: base_version + 1,
@@ -1459,6 +1600,7 @@ impl Leader {
                 upload_bytes,
                 download_bytes,
                 envelope_bytes,
+                transport_bytes,
                 dispatched: dispatched_ids.len(),
                 dropped,
                 corrupt_frames,
@@ -1593,12 +1735,54 @@ impl Leader {
         })
     }
 
-    /// Graceful shutdown (joins worker threads).
-    pub fn shutdown(self) {
-        for w in self.workers {
-            w.shutdown();
-        }
+    /// Graceful shutdown: in-process this joins the worker threads; over
+    /// TCP it sends goodbye frames and closes every connection.
+    pub fn shutdown(mut self) {
+        self.transport.shutdown();
     }
+}
+
+/// Build the worker a remote process would run for slot `id` of a
+/// federated config — the same shard, artifact, and comm setup the
+/// in-process path spawns, so a TCP fleet trains bit-for-bit the run
+/// the leader would have produced locally. Both sides regenerate the
+/// dataset from the seeded recipe; only config (hash-checked at the
+/// handshake) has to agree, never data files.
+pub fn spawn_edge_worker(manifest: &Manifest, cfg: &FedConfig, id: usize) -> Result<WorkerHandle> {
+    if id >= cfg.workers {
+        bail!("worker id {id} out of range (fleet of {})", cfg.workers);
+    }
+    cfg.validate()?;
+    let model = manifest.model(&cfg.train.model)?.clone();
+    let full = generate(&SynthConfig {
+        n: cfg.train.train_examples + cfg.train.test_examples,
+        difficulty: cfg.train.difficulty as f32,
+        seed: cfg.train.seed,
+        ..Default::default()
+    });
+    let (train, _test) = full.split(cfg.train.train_examples);
+    let shard = train
+        .shard(cfg.workers, cfg.iid, cfg.train.seed ^ 0x5A4D)
+        .into_iter()
+        .nth(id)
+        .expect("shard() yields cfg.workers shards");
+    let tag = format!("train_{}", cfg.train.mode);
+    let art = model
+        .artifact(&tag)
+        .with_context(|| format!("mode {:?} not exported for {}", cfg.train.mode, model.name))?;
+    WorkerHandle::spawn(
+        id,
+        shard,
+        art.clone(),
+        &model,
+        cfg.train.clone(),
+        worker::CommSetup {
+            mode: cfg.comm,
+            rate: cfg.comm_rate,
+            pruner: cfg.comm_pruner,
+        },
+        cfg.faults.clone(),
+    )
 }
 
 #[cfg(test)]
@@ -1614,6 +1798,7 @@ mod tests {
             upload_bytes: 0,
             download_bytes: 0,
             envelope_bytes: 0,
+            transport_bytes: 0,
             dispatched: 0,
             dropped: Vec::new(),
             corrupt_frames: 0,
@@ -1708,7 +1893,10 @@ mod tests {
         frame: Frame,
     ) -> Result<Option<mpsc::Receiver<(usize, Frame)>>> {
         let plan = FaultPlan::default();
-        handle_frame(g, wv, &[], &plan, &[], 0, 0, 1, wid, frame)
+        // a workerless transport: nack retries fall straight through the
+        // submit-failure path, which these tests never exercise
+        let mut transport = InProcess::new(Vec::<WorkerHandle>::new());
+        handle_frame(g, wv, &mut transport, &plan, &[], 0, 0, 1, wid, frame)
     }
 
     #[test]

@@ -661,6 +661,11 @@ mod tests {
         timing.run_store = Some("/tmp/x".into());
         timing.resume = true;
         timing.faults = Some("corrupt=0.5,seed=9".parse().unwrap());
+        // transport knobs move bytes, not the trajectory: a TCP fleet
+        // must be able to resume an in-process run store and vice versa
+        timing.listen = Some("127.0.0.1:0".into());
+        timing.heartbeat_ms = 5;
+        timing.round_deadline_ms = 1_000;
         assert_eq!(h, config_hash(&timing), "timing/fault knobs must not fork the hash");
         let mut different = base.clone();
         different.rounds += 1;

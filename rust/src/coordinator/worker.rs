@@ -525,6 +525,14 @@ impl WorkerHandle {
                         transfer: driver.transfer_stats(),
                     };
                     let mut frame = Frame::seal(FrameKind::Report, &report.encode());
+                    // transport-site delay: the link is slow, not wrong —
+                    // the report arrives late but intact, same injection
+                    // point on both transports (a real sleep, so the
+                    // frame genuinely races the other workers' sends)
+                    let lag = plan.net_delay_ms(task.round, id);
+                    if lag > 0 {
+                        std::thread::sleep(Duration::from_millis(lag));
+                    }
                     // uplink wire faults fire at send — after the seal,
                     // exactly where a radio would damage the bytes
                     match plan.uplink(task.round, id) {

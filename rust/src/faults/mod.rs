@@ -22,10 +22,16 @@
 //!   steps — no report, no nack, just silence;
 //! * **kill-at-round-r** (coordinator): the leader process stops after
 //!   persisting round `r`, for crash/resume drills against the run
-//!   store.
+//!   store;
+//! * **transport** (per dispatch, injected *inside* the [`crate::net`]
+//!   transport so the same plan drives both impls): `delay` an uplink
+//!   send, `disconnect` a worker's link (severed, reconnects next
+//!   round), `partition` it (link up but unreachable this round), or
+//!   `slowread` the leader's receive path.
 //!
 //! Configured via `federated.faults` / `--faults`, e.g.
-//! `"corrupt=0.05,truncate=0.01,dup=0.02,reorder=0.1,crash=0.02,kill=3,seed=7"`.
+//! `"corrupt=0.05,truncate=0.01,dup=0.02,reorder=0.1,crash=0.02,kill=3,seed=7"`
+//! (plus `delay=`, `disconnect=`, `partition=`, `slowread=`).
 //! The `force_*` fields are test hooks that target an exact
 //! (round, worker) — they are not parseable from config and default
 //! empty.
@@ -56,6 +62,10 @@ const SITE_DOWN_CORRUPT: u64 = 5;
 const SITE_DOWN_TRUNCATE: u64 = 6;
 const SITE_CRASH: u64 = 7;
 const SITE_MUTATE: u64 = 8;
+const SITE_NET_DELAY: u64 = 9;
+const SITE_NET_DISCONNECT: u64 = 10;
+const SITE_NET_PARTITION: u64 = 11;
+const SITE_NET_SLOWREAD: u64 = 12;
 
 /// Seeded, stateless chaos schedule. See the module docs for the
 /// determinism contract.
@@ -71,6 +81,16 @@ pub struct FaultPlan {
     pub reorder: f64,
     /// per-dispatch probability a worker crashes mid-round
     pub crash: f64,
+    /// per-dispatch probability the worker's uplink send is delayed
+    pub delay: f64,
+    /// per-dispatch probability the worker's link is severed (the
+    /// worker reconnects and resyncs next round)
+    pub disconnect: f64,
+    /// per-dispatch probability the worker is unreachable this round
+    /// (link stays up — distinguishes routing loss from socket death)
+    pub partition: f64,
+    /// per-dispatch probability the leader's receive path stalls
+    pub slow_read: f64,
     /// coordinator stops after persisting this round
     pub kill_round: Option<usize>,
     /// chaos seed — independent of the training seed
@@ -92,6 +112,10 @@ impl Default for FaultPlan {
             duplicate: 0.0,
             reorder: 0.0,
             crash: 0.0,
+            delay: 0.0,
+            disconnect: 0.0,
+            partition: 0.0,
+            slow_read: 0.0,
             kill_round: None,
             seed: 0,
             force_downlink_corrupt: Vec::new(),
@@ -109,6 +133,10 @@ impl FaultPlan {
             || self.duplicate > 0.0
             || self.reorder > 0.0
             || self.crash > 0.0
+            || self.delay > 0.0
+            || self.disconnect > 0.0
+            || self.partition > 0.0
+            || self.slow_read > 0.0
             || self.kill_round.is_some()
             || !self.force_downlink_corrupt.is_empty()
             || !self.force_crash.is_empty()
@@ -182,6 +210,38 @@ impl FaultPlan {
         1 + rng.below(20)
     }
 
+    /// Transport fault: worker's link is severed this round. The worker
+    /// reconnects (with backoff) and resyncs via the version ring.
+    pub fn disconnects(&self, round: usize, worker: usize) -> bool {
+        self.hit(SITE_NET_DISCONNECT, round, worker, 0, self.disconnect)
+    }
+
+    /// Transport fault: worker is unreachable this round although its
+    /// link stays up (a routing partition, not a socket death).
+    pub fn partitioned(&self, round: usize, worker: usize) -> bool {
+        self.hit(SITE_NET_PARTITION, round, worker, 0, self.partition)
+    }
+
+    /// Transport fault: milliseconds of injected uplink-send delay for
+    /// this worker's report (0 = no delay this round).
+    pub fn net_delay_ms(&self, round: usize, worker: usize) -> u64 {
+        if !self.hit(SITE_NET_DELAY, round, worker, 0, self.delay) {
+            return 0;
+        }
+        let mut rng = self.stream(SITE_NET_DELAY, round, worker, 1);
+        1 + rng.below(30)
+    }
+
+    /// Transport fault: milliseconds the leader's receive path stalls
+    /// before processing this worker's report (0 = no stall).
+    pub fn slow_read_ms(&self, round: usize, worker: usize) -> u64 {
+        if !self.hit(SITE_NET_SLOWREAD, round, worker, 0, self.slow_read) {
+            return 0;
+        }
+        let mut rng = self.stream(SITE_NET_SLOWREAD, round, worker, 1);
+        1 + rng.below(30)
+    }
+
     /// Damage a sealed frame in place per the decision. `Duplicate` and
     /// `Reorder` are transport behaviors (the sender handles them) and
     /// leave the bytes alone.
@@ -213,8 +273,9 @@ impl std::str::FromStr for FaultPlan {
     type Err = anyhow::Error;
 
     /// Parse `"key=value,..."` with keys `corrupt`, `truncate`, `dup`,
-    /// `reorder`, `crash` (probabilities in `[0,1]`), `kill` (round
-    /// index) and `seed`.
+    /// `reorder`, `crash`, `delay`, `disconnect`, `partition`,
+    /// `slowread` (probabilities in `[0,1]`), `kill` (round index) and
+    /// `seed`.
     fn from_str(s: &str) -> Result<Self> {
         let mut plan = FaultPlan::default();
         for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
@@ -236,6 +297,10 @@ impl std::str::FromStr for FaultPlan {
                 "dup" => prob(&mut plan.duplicate)?,
                 "reorder" => prob(&mut plan.reorder)?,
                 "crash" => prob(&mut plan.crash)?,
+                "delay" => prob(&mut plan.delay)?,
+                "disconnect" => prob(&mut plan.disconnect)?,
+                "partition" => prob(&mut plan.partition)?,
+                "slowread" => prob(&mut plan.slow_read)?,
                 "kill" => {
                     plan.kill_round =
                         Some(value.parse().with_context(|| format!("fault kill={value:?}"))?)
@@ -257,6 +322,11 @@ impl std::fmt::Display for FaultPlan {
             "corrupt={},truncate={},dup={},reorder={},crash={}",
             self.corrupt, self.truncate, self.duplicate, self.reorder, self.crash
         )?;
+        write!(
+            f,
+            ",delay={},disconnect={},partition={},slowread={}",
+            self.delay, self.disconnect, self.partition, self.slow_read
+        )?;
         if let Some(r) = self.kill_round {
             write!(f, ",kill={r}")?;
         }
@@ -271,19 +341,26 @@ mod tests {
 
     #[test]
     fn parse_full_spec_and_defaults() {
-        let spec = "corrupt=0.05, truncate=0.01,dup=0.02,reorder=0.1,crash=0.02,kill=3,seed=7";
+        let spec = "corrupt=0.05, truncate=0.01,dup=0.02,reorder=0.1,crash=0.02,kill=3,seed=7,\
+                    delay=0.2,disconnect=0.1,partition=0.05,slowread=0.15";
         let p: FaultPlan = spec.parse().unwrap();
         assert_eq!(p.corrupt, 0.05);
         assert_eq!(p.truncate, 0.01);
         assert_eq!(p.duplicate, 0.02);
         assert_eq!(p.reorder, 0.1);
         assert_eq!(p.crash, 0.02);
+        assert_eq!(p.delay, 0.2);
+        assert_eq!(p.disconnect, 0.1);
+        assert_eq!(p.partition, 0.05);
+        assert_eq!(p.slow_read, 0.15);
         assert_eq!(p.kill_round, Some(3));
         assert_eq!(p.seed, 7);
         let d: FaultPlan = "crash=1".parse().unwrap();
         assert_eq!(d.corrupt, 0.0);
+        assert_eq!(d.disconnect, 0.0);
         assert_eq!(d.kill_round, None);
         assert!(d.is_active());
+        assert!("disconnect=0.5".parse::<FaultPlan>().unwrap().is_active());
         assert!(!FaultPlan::default().is_active());
     }
 
@@ -296,6 +373,7 @@ mod tests {
             "corrupt=-0.1",   // out of range
             "kill=soon",      // not a round index
             "seed=minus-one", // not a u64
+            "disconnect=2",   // out of range
         ] {
             assert!(bad.parse::<FaultPlan>().is_err(), "{bad:?} parsed");
         }
@@ -303,7 +381,9 @@ mod tests {
 
     #[test]
     fn display_parse_roundtrip() {
-        let p: FaultPlan = "corrupt=0.05,crash=0.02,kill=3,seed=7".parse().unwrap();
+        let p: FaultPlan = "corrupt=0.05,crash=0.02,disconnect=0.1,delay=0.3,kill=3,seed=7"
+            .parse()
+            .unwrap();
         let back: FaultPlan = p.to_string().parse().unwrap();
         assert_eq!(back, p);
     }
@@ -344,8 +424,39 @@ mod tests {
                 assert_eq!(p.uplink(round, worker), None);
                 assert_eq!(p.downlink(round, worker, 0), None);
                 assert_eq!(p.crash_point(round, worker, 20), None);
+                assert!(!p.disconnects(round, worker));
+                assert!(!p.partitioned(round, worker));
+                assert_eq!(p.net_delay_ms(round, worker), 0);
+                assert_eq!(p.slow_read_ms(round, worker), 0);
             }
         }
+    }
+
+    #[test]
+    fn transport_faults_are_deterministic_and_bounded() {
+        let p: FaultPlan = "delay=0.5,disconnect=0.3,partition=0.3,slowread=0.5,seed=13"
+            .parse()
+            .unwrap();
+        let q = p.clone();
+        let (mut hits, mut misses) = (0, 0);
+        for round in 0..50 {
+            for worker in 0..4 {
+                assert_eq!(p.disconnects(round, worker), q.disconnects(round, worker));
+                assert_eq!(p.partitioned(round, worker), q.partitioned(round, worker));
+                assert_eq!(p.net_delay_ms(round, worker), q.net_delay_ms(round, worker));
+                assert_eq!(p.slow_read_ms(round, worker), q.slow_read_ms(round, worker));
+                let d = p.net_delay_ms(round, worker);
+                assert!(d <= 30, "delay {d}ms above bound");
+                let s = p.slow_read_ms(round, worker);
+                assert!(s <= 30, "slow-read {s}ms above bound");
+                if p.disconnects(round, worker) || d > 0 {
+                    hits += 1;
+                } else {
+                    misses += 1;
+                }
+            }
+        }
+        assert!(hits > 0 && misses > 0, "transport decisions never varied: {hits}/{misses}");
     }
 
     #[test]

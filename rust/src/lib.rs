@@ -10,8 +10,10 @@
 //! * **L3 (this crate)**: the runtime system — PJRT execution
 //!   ([`runtime`]), single-device training ([`training`]), the federated
 //!   edge coordinator ([`coordinator`]) with pruned-delta network
-//!   compression ([`comm`]), and the accelerator simulator that
-//!   reproduces the paper's hardware evaluation ([`accel`]).
+//!   compression ([`comm`]), a swappable transport tier ([`net`]) that
+//!   carries the round protocol over in-process channels or loopback/LAN
+//!   TCP, and the accelerator simulator that reproduces the paper's
+//!   hardware evaluation ([`accel`]).
 //!
 //! Python never runs on the request path: once `make artifacts` has been
 //! run, the `efficientgrad` binary is self-contained.
@@ -40,6 +42,7 @@ pub mod data;
 pub mod faults;
 pub mod figures;
 pub mod manifest;
+pub mod net;
 pub mod params;
 pub mod runtime;
 pub mod sparsity;

@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   train      single-device training via the AOT artifacts
 //!   federated  leader + N edge workers with FedAvg (paper §1 deployment)
+//!   worker     one edge worker connecting to a `federated --listen` leader
 //!   simulate   accelerator simulator (Fig. 5b / headline numbers)
 //!   figures    regenerate paper figures into reports/
 //!   doctor     validate artifacts against the manifest
@@ -86,6 +87,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
     match cmd {
         "train" => cmd_train(rest),
         "federated" => cmd_federated(rest),
+        "worker" => cmd_worker(rest),
         "simulate" => cmd_simulate(rest),
         "figures" => cmd_figures(rest),
         "doctor" => cmd_doctor(rest),
@@ -108,6 +110,7 @@ fn print_help() {
          COMMANDS:\n\
          \u{20}  train      single-device training on the synthetic edge workload\n\
          \u{20}  federated  federated leader + N edge workers (FedAvg)\n\
+         \u{20}  worker     one edge worker joining a `federated --listen` leader over TCP\n\
          \u{20}  simulate   accelerator simulator: EfficientGrad vs EyerissV2-BP\n\
          \u{20}  figures    regenerate the paper's figures into reports/\n\
          \u{20}  doctor     validate artifacts/ against manifest.json\n\
@@ -170,9 +173,11 @@ fn cmd_train(raw: &[String]) -> Result<()> {
     Ok(())
 }
 
-fn cmd_federated(raw: &[String]) -> Result<()> {
-    let mut specs = common_flags();
-    specs.extend([
+/// Flags shared by `federated` and `worker`: both sides must accept the
+/// full trajectory-affecting set so a worker process can reconstruct
+/// the exact config the leader hashes at the handshake.
+fn federated_flags() -> Vec<FlagSpec> {
+    vec![
         FlagSpec { name: "workers", help: "number of edge workers", takes_value: true, default: Some("4") },
         FlagSpec { name: "rounds", help: "federated rounds", takes_value: true, default: Some("8") },
         FlagSpec { name: "local-steps", help: "local steps per round", takes_value: true, default: Some("10") },
@@ -193,14 +198,13 @@ fn cmd_federated(raw: &[String]) -> Result<()> {
         FlagSpec { name: "faults", help: "deterministic fault injection, e.g. \"corrupt=0.05,truncate=0.01,dup=0.02,reorder=0.1,crash=0.02,kill=3,seed=7\"", takes_value: true, default: None },
         FlagSpec { name: "run-store", help: "durable run store directory: persist a resumable snapshot after every round", takes_value: true, default: None },
         FlagSpec { name: "resume", help: "resume from --run-store instead of starting fresh", takes_value: false, default: None },
-    ]);
-    if raw.iter().any(|a| a == "--help") {
-        println!("{}", render_help("efficientgrad", "federated", "Federated edge training", &specs));
-        return Ok(());
-    }
-    let args = Args::parse(raw, &specs)?;
-    let table = load_table(&args)?;
-    let mut cfg = FedConfig::from_table(&table)?;
+        FlagSpec { name: "heartbeat-ms", help: "transport heartbeat period (TCP transport; a peer silent for 4 periods is dropped)", takes_value: true, default: None },
+        FlagSpec { name: "round-deadline-ms", help: "per-frame send/recv deadline on the TCP transport", takes_value: true, default: None },
+    ]
+}
+
+/// Apply the shared federated CLI overrides onto a parsed config.
+fn apply_federated_overrides(args: &Args, cfg: &mut FedConfig) -> Result<()> {
     if let Some(v) = args.get_usize("workers")? {
         cfg.workers = v;
     }
@@ -261,11 +265,44 @@ fn cmd_federated(raw: &[String]) -> Result<()> {
     if args.get_bool("resume") {
         cfg.resume = true;
     }
-    cfg.validate()?; // one normative range check, config-file and CLI alike
+    if let Some(v) = args.get_usize("heartbeat-ms")? {
+        cfg.heartbeat_ms = v as u64;
+    }
+    if let Some(v) = args.get_usize("round-deadline-ms")? {
+        cfg.round_deadline_ms = v as u64;
+    }
+    cfg.validate() // one normative range check, config-file and CLI alike
+}
+
+fn cmd_federated(raw: &[String]) -> Result<()> {
+    let mut specs = common_flags();
+    specs.extend(federated_flags());
+    specs.push(FlagSpec { name: "listen", help: "bind a TCP endpoint (e.g. 127.0.0.1:4800; port 0 = auto) and wait for `worker --connect` processes instead of spawning in-process workers", takes_value: true, default: None });
+    if raw.iter().any(|a| a == "--help") {
+        println!("{}", render_help("efficientgrad", "federated", "Federated edge training", &specs));
+        return Ok(());
+    }
+    let args = Args::parse(raw, &specs)?;
+    let table = load_table(&args)?;
+    let mut cfg = FedConfig::from_table(&table)?;
+    apply_federated_overrides(&args, &mut cfg)?;
+    if let Some(v) = args.get("listen") {
+        cfg.listen = Some(v.into());
+    }
+    // Ctrl-C / SIGTERM: finish the in-flight round, persist the run
+    // store, say goodbye to the fleet, exit resumable
+    efficientgrad::net::signal::install();
 
     let rt = Runtime::cpu()?;
     let manifest = Manifest::load(&efficientgrad::artifacts_dir())?;
     let mut leader = coordinator::Leader::new(&rt, &manifest, cfg.clone())?;
+    if let Some(addr) = leader.listen_addr() {
+        println!(
+            "listening on {addr} — start {} × `efficientgrad worker --connect {addr} \
+             --worker-id <i>` (same federated flags as this leader)",
+            cfg.workers
+        );
+    }
     let summary = leader.run()?;
     leader.shutdown();
     let link = efficientgrad::accel::LinkEnergy::wifi();
@@ -305,6 +342,61 @@ fn cmd_federated(raw: &[String]) -> Result<()> {
         net_joules * 1e3,
         link.pj_per_byte / 1e3,
     );
+    Ok(())
+}
+
+fn cmd_worker(raw: &[String]) -> Result<()> {
+    let mut specs = common_flags();
+    specs.extend(federated_flags());
+    specs.extend([
+        FlagSpec { name: "connect", help: "leader address to join (host:port from `federated --listen`)", takes_value: true, default: None },
+        FlagSpec { name: "worker-id", help: "this worker's fleet slot in [0, workers)", takes_value: true, default: None },
+        FlagSpec { name: "max-connect-attempts", help: "reconnect budget before giving up", takes_value: true, default: Some("16") },
+    ]);
+    if raw.iter().any(|a| a == "--help") {
+        println!(
+            "{}",
+            render_help(
+                "efficientgrad",
+                "worker",
+                "One edge worker joining a `federated --listen` leader over TCP.\n\
+                 Pass the SAME training/federated flags as the leader: admission is\n\
+                 refused unless the trajectory-affecting config hashes match.",
+                &specs
+            )
+        );
+        return Ok(());
+    }
+    let args = Args::parse(raw, &specs)?;
+    let addr = args
+        .get("connect")
+        .ok_or_else(|| anyhow::anyhow!("worker needs --connect <host:port>"))?
+        .to_string();
+    let id = args
+        .get_usize("worker-id")?
+        .ok_or_else(|| anyhow::anyhow!("worker needs --worker-id <i>"))?;
+    let table = load_table(&args)?;
+    let mut cfg = FedConfig::from_table(&table)?;
+    apply_federated_overrides(&args, &mut cfg)?;
+    // the leader owns the run store / resume lifecycle; a worker's state
+    // is pushed to it over the wire at restore time
+    cfg.resume = false;
+    cfg.run_store = None;
+    efficientgrad::net::signal::install();
+
+    let manifest = Manifest::load(&efficientgrad::artifacts_dir())?;
+    let worker = coordinator::spawn_edge_worker(&manifest, &cfg, id)?;
+    let client_cfg = efficientgrad::net::client::ClientConfig {
+        worker_id: id,
+        config_hash: coordinator::runstore::config_hash(&cfg),
+        heartbeat_ms: cfg.heartbeat_ms,
+        round_deadline_ms: cfg.round_deadline_ms,
+        seed: cfg.train.seed,
+        max_connect_attempts: args.get_usize("max-connect-attempts")?.unwrap_or(16) as u32,
+    };
+    log::info!("worker {id}: joining leader at {addr}");
+    efficientgrad::net::client::serve(&addr, &client_cfg, worker)?;
+    println!("worker {id}: done (leader closed the run)");
     Ok(())
 }
 

@@ -1,0 +1,308 @@
+//! Worker-side TCP client: connect, handshake, serve rounds until the
+//! coordinator says goodbye.
+//!
+//! [`serve`] wraps any [`Worker`] — the real PJRT-backed
+//! `WorkerHandle` in the `worker` subcommand, the artifact-free
+//! `LiteWorker` in tests and benches — and speaks the transport
+//! protocol on its behalf: `Hello`/`Welcome` admission (schema version
+//! via [`Frame::open`], config hash checked by the coordinator),
+//! `Task` → run → forward replies → `RoundDone`, `Capture`/`Restore`
+//! control round-trips, heartbeats both ways, and seeded
+//! exponential-backoff reconnect ([`Backoff`], jitter stream
+//! `seed ^ worker_id`) when the connection drops. A `Goodbye` — at
+//! admission (refusal) or mid-run (graceful coordinator shutdown) —
+//! ends service cleanly; refusals are terminal rather than retried,
+//! because a config-hash or schema mismatch will not fix itself.
+//!
+//! The inner downlink frame extracted from a `Task` is handed to the
+//! worker byte-for-byte; if the fault plan damaged it, the worker's own
+//! open/decode path nacks it, exactly as in-process.
+
+use std::net::{Shutdown, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::comm::envelope::{Frame, FrameKind};
+use crate::coordinator::{Worker, WorkerTask};
+use crate::net::proto::{self, MsgReader};
+use crate::util::backoff::Backoff;
+
+/// Everything a worker process needs to join a coordinator.
+#[derive(Clone, Debug)]
+pub struct ClientConfig {
+    pub worker_id: usize,
+    /// hash of the trajectory-affecting run config; must match the
+    /// coordinator's or admission is refused
+    pub config_hash: u64,
+    pub heartbeat_ms: u64,
+    pub round_deadline_ms: u64,
+    /// run seed — the reconnect jitter stream derives from
+    /// `seed ^ worker_id`, so twin runs schedule retries identically
+    pub seed: u64,
+    pub max_connect_attempts: u32,
+}
+
+/// Why one connection's service ended.
+enum SessionEnd {
+    /// coordinator closed cleanly — stop serving
+    Goodbye,
+    /// admission refused (hash/schema/slot) — terminal, no retry
+    Refused(String),
+    /// connection died — reconnect with backoff
+    Lost(String),
+}
+
+/// Serve `worker` to the coordinator at `addr` until a goodbye
+/// (`Ok`), a refusal, or reconnect exhaustion (`Err`). Always shuts
+/// the worker down before returning.
+pub fn serve<W: Worker>(addr: &str, cfg: &ClientConfig, mut worker: W) -> Result<()> {
+    let mut backoff = Backoff::new(
+        cfg.seed ^ cfg.worker_id as u64,
+        25,
+        2_000,
+        cfg.max_connect_attempts,
+    );
+    loop {
+        let stream = match connect(addr, cfg, &mut backoff) {
+            Ok(s) => s,
+            Err(e) => {
+                worker.shutdown();
+                return Err(e);
+            }
+        };
+        match session(stream, cfg, &mut worker, &mut backoff) {
+            SessionEnd::Goodbye => {
+                log::info!("worker {}: coordinator said goodbye; stopping", cfg.worker_id);
+                worker.shutdown();
+                return Ok(());
+            }
+            SessionEnd::Refused(why) => {
+                worker.shutdown();
+                bail!("worker {}: admission refused: {why}", cfg.worker_id);
+            }
+            SessionEnd::Lost(why) => match backoff.next_delay_ms() {
+                Some(d) => {
+                    log::warn!("worker {}: connection lost ({why}); reconnecting in {d}ms", cfg.worker_id);
+                    thread::sleep(Duration::from_millis(d));
+                }
+                None => {
+                    worker.shutdown();
+                    bail!("worker {}: connection lost ({why}), reconnect attempts exhausted", cfg.worker_id);
+                }
+            },
+        }
+    }
+}
+
+/// Dial until connected or the backoff budget runs out.
+fn connect(addr: &str, cfg: &ClientConfig, backoff: &mut Backoff) -> Result<TcpStream> {
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => match backoff.next_delay_ms() {
+                Some(d) => {
+                    log::info!("worker {}: dial {addr} failed ({e}); retrying in {d}ms", cfg.worker_id);
+                    thread::sleep(Duration::from_millis(d));
+                }
+                None => bail!("worker {}: could not reach {addr}: {e}", cfg.worker_id),
+            },
+        }
+    }
+}
+
+/// One connection's full lifecycle: handshake, heartbeat thread, serve
+/// loop, teardown.
+fn session<W: Worker>(
+    mut stream: TcpStream,
+    cfg: &ClientConfig,
+    worker: &mut W,
+    backoff: &mut Backoff,
+) -> SessionEnd {
+    if stream.set_nodelay(true).is_err()
+        || stream
+            .set_read_timeout(Some(Duration::from_millis(cfg.heartbeat_ms.max(1))))
+            .is_err()
+        || stream
+            .set_write_timeout(Some(Duration::from_millis(cfg.round_deadline_ms.max(1))))
+            .is_err()
+    {
+        return SessionEnd::Lost("socket setup failed".into());
+    }
+    let hello = Frame::seal(
+        FrameKind::Hello,
+        &proto::encode_hello(cfg.worker_id, cfg.config_hash),
+    );
+    if let Err(e) = proto::send_msg(&mut stream, &hello) {
+        return SessionEnd::Lost(format!("hello send: {e}"));
+    }
+    let deadline = Instant::now() + Duration::from_millis(cfg.round_deadline_ms.max(1));
+    let mut rd = MsgReader::new();
+    loop {
+        match rd.poll(&mut stream) {
+            Ok(Some(frame)) => match proto::peek_kind(&frame) {
+                Some(FrameKind::Welcome) => break,
+                Some(FrameKind::Goodbye) => {
+                    return SessionEnd::Refused("coordinator turned the handshake away".into())
+                }
+                other => return SessionEnd::Lost(format!("unexpected {other:?} before welcome")),
+            },
+            Ok(None) if Instant::now() < deadline => {}
+            Ok(None) => return SessionEnd::Lost("welcome timed out".into()),
+            Err(e) => return SessionEnd::Lost(format!("awaiting welcome: {e}")),
+        }
+    }
+    backoff.reset(); // admitted: future losses restart the schedule
+    log::info!("worker {}: admitted by coordinator", cfg.worker_id);
+    // dedicated heartbeat thread on a cloned write half: the serve loop
+    // blocks for a whole local round inside Worker::submit, and the
+    // coordinator must keep seeing a pulse through it
+    let writer = match stream.try_clone() {
+        Ok(w) => Arc::new(Mutex::new(w)),
+        Err(e) => return SessionEnd::Lost(format!("stream clone: {e}")),
+    };
+    let hb_stop = Arc::new(AtomicBool::new(false));
+    let hb = {
+        let writer = writer.clone();
+        let hb_stop = hb_stop.clone();
+        let every = Duration::from_millis(cfg.heartbeat_ms.max(1));
+        thread::spawn(move || {
+            let beat = Frame::seal(FrameKind::Heartbeat, &[]);
+            while !hb_stop.load(Ordering::SeqCst) {
+                let sent = {
+                    let mut w = writer.lock().unwrap();
+                    proto::send_msg(&mut *w, &beat)
+                };
+                if sent.is_err() {
+                    break;
+                }
+                thread::sleep(every);
+            }
+        })
+    };
+    let end = serve_frames(&mut stream, cfg, worker, &writer, &mut rd);
+    hb_stop.store(true, Ordering::SeqCst);
+    // closing the socket also fails the heartbeat thread's next send,
+    // so the join is bounded by one heartbeat interval
+    let _ = stream.shutdown(Shutdown::Both);
+    let _ = hb.join();
+    end
+}
+
+/// The admitted serve loop: route inbound frames, run tasks, answer
+/// control round-trips, watch coordinator liveness.
+fn serve_frames<W: Worker>(
+    stream: &mut TcpStream,
+    cfg: &ClientConfig,
+    worker: &mut W,
+    writer: &Arc<Mutex<TcpStream>>,
+    rd: &mut MsgReader,
+) -> SessionEnd {
+    let liveness = Duration::from_millis((cfg.heartbeat_ms * 4).max(200));
+    let mut last_seen = Instant::now();
+    loop {
+        match rd.poll(stream) {
+            Ok(Some(frame)) => {
+                match proto::peek_kind(&frame) {
+                    Some(FrameKind::Task) => {
+                        let tw = match frame.open() {
+                            Ok((FrameKind::Task, payload)) => match proto::decode_task(payload) {
+                                Ok(t) => t,
+                                Err(e) => return SessionEnd::Lost(format!("malformed task: {e}")),
+                            },
+                            _ => return SessionEnd::Lost("task frame failed to open".into()),
+                        };
+                        let (tx, rx) = mpsc::channel();
+                        let task = WorkerTask {
+                            round: tw.round,
+                            version: tw.version,
+                            frame: tw.frame,
+                            local_steps: tw.local_steps,
+                            slowdown: tw.slowdown,
+                            sleep: tw.sleep,
+                            reply: tx,
+                        };
+                        if let Err(e) = worker.submit(task) {
+                            return SessionEnd::Lost(format!("worker rejected task: {e}"));
+                        }
+                        // forward every reply (report or nack), then mark
+                        // the task done — RoundDone is what releases the
+                        // coordinator's reply sender, standing in for the
+                        // in-process channel hangup
+                        while let Ok((_id, f)) = rx.recv() {
+                            let sent = {
+                                let mut w = writer.lock().unwrap();
+                                proto::send_msg(&mut *w, &f)
+                            };
+                            if sent.is_err() {
+                                return SessionEnd::Lost("reply send failed".into());
+                            }
+                        }
+                        let done = Frame::seal(FrameKind::RoundDone, &[]);
+                        let sent = {
+                            let mut w = writer.lock().unwrap();
+                            proto::send_msg(&mut *w, &done)
+                        };
+                        if sent.is_err() {
+                            return SessionEnd::Lost("round-done send failed".into());
+                        }
+                    }
+                    Some(FrameKind::Capture) => match worker.capture() {
+                        Ok(snap) => {
+                            let f = Frame::seal(FrameKind::Snapshot, &proto::encode_snapshot(&snap));
+                            let sent = {
+                                let mut w = writer.lock().unwrap();
+                                proto::send_msg(&mut *w, &f)
+                            };
+                            if sent.is_err() {
+                                return SessionEnd::Lost("snapshot send failed".into());
+                            }
+                        }
+                        // no snapshot to send: the coordinator's capture
+                        // times out, the same failure it sees in-process
+                        Err(e) => log::warn!("worker {}: capture failed: {e}", cfg.worker_id),
+                    },
+                    Some(FrameKind::Restore) => {
+                        let res = match frame.open() {
+                            Ok((FrameKind::Restore, payload)) => {
+                                proto::decode_snapshot(payload).and_then(|s| worker.restore(s))
+                            }
+                            Ok((kind, _)) => Err(anyhow::anyhow!("expected Restore, got {kind:?}")),
+                            Err(e) => Err(e),
+                        };
+                        let err_text = res.as_ref().err().map(|e| e.to_string());
+                        let ack = Frame::seal(
+                            FrameKind::RestoreAck,
+                            &proto::encode_restore_ack(err_text.as_deref()),
+                        );
+                        let sent = {
+                            let mut w = writer.lock().unwrap();
+                            proto::send_msg(&mut *w, &ack)
+                        };
+                        if sent.is_err() {
+                            return SessionEnd::Lost("restore-ack send failed".into());
+                        }
+                    }
+                    Some(FrameKind::Heartbeat) => {}
+                    Some(FrameKind::Goodbye) => return SessionEnd::Goodbye,
+                    other => {
+                        log::warn!("worker {}: ignoring unroutable {other:?} frame", cfg.worker_id)
+                    }
+                }
+                // every processed frame proves the coordinator lives —
+                // reset AFTER processing, since a task blocks this loop
+                // for a full local round
+                last_seen = Instant::now();
+            }
+            Ok(None) => {
+                if last_seen.elapsed() > liveness {
+                    return SessionEnd::Lost("coordinator heartbeats stopped".into());
+                }
+            }
+            Err(e) => return SessionEnd::Lost(format!("read: {e}")),
+        }
+    }
+}

@@ -1,0 +1,209 @@
+//! The transport tier: how the leader's round protocol reaches workers.
+//!
+//! ROADMAP item 1 ("coordinator as a service") wants real remote edge
+//! devices without forking the coordinator. This module makes the pipe
+//! swappable: the leader drives a [`Transport`] trait object, and two
+//! implementations exist —
+//!
+//! * [`InProcess`]: the existing in-process channels, refactored behind
+//!   the trait. Pure delegation to [`Worker`] handles; zero transport
+//!   tax ([`Transport::plane_bytes`] = 0). Bit-for-bit today's default.
+//! * [`tcp::TcpTransport`] + [`client::serve`]: a length-prefixed TCP
+//!   transport over `std::net`, reusing [`crate::comm::envelope`]
+//!   frames as the message unit. Versioned handshake (schema version is
+//!   checked by [`crate::comm::envelope::Frame::open`] itself, the
+//!   config hash by the coordinator), per-connection heartbeats,
+//!   deadlines on every send/receive, seeded reconnect with exponential
+//!   backoff ([`crate::util::backoff::Backoff`]), and a goodbye frame
+//!   on graceful shutdown.
+//!
+//! ## Determinism contract
+//!
+//! The headline pin (tests/federated.rs): a loopback-TCP federated run
+//! is bit-for-bit identical to the in-process run — params, eval accs,
+//! and every wire/schedule/device ledger — under the same seeded
+//! [`crate::faults::FaultPlan`]. That works because the transport moves
+//! *sealed frames* without interpreting them (fault-injected damage
+//! travels verbatim), control traffic (handshake, heartbeats, task
+//! framing) never reaches the round's data path, and its byte tax is
+//! ledgered separately in `RoundReport::transport_bytes` — the one
+//! field excluded from the twin-run wire family, because heartbeat
+//! counts are timing-dependent by design.
+//!
+//! A dead connection surfaces exactly like an in-process worker going
+//! silent: the transport drops the round's pending reply senders, the
+//! leader's gather sees the channel close, and the existing
+//! dropout/quorum/staleness machinery does the rest — no new failure
+//! vocabulary, no hung fold. Transport-site faults (`delay=`,
+//! `disconnect=`, `partition=`, `slowread=` in the fault spec) fire at
+//! shared injection sites driven by the same plan on both transports.
+
+pub mod client;
+pub mod proto;
+pub mod signal;
+pub mod tcp;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{Worker, WorkerSnapshot, WorkerTask};
+
+/// The leader-facing pipe to the worker fleet. Object-safe: the leader
+/// holds a `Box<dyn Transport>` and runs the identical round protocol
+/// over channels or sockets.
+pub trait Transport {
+    /// Number of worker slots this transport addresses.
+    fn workers(&self) -> usize;
+
+    /// Deliver one round's work order to worker `wid`. The report (or
+    /// nack) comes back on `task.reply`; a worker that fails its round
+    /// simply never sends — the closed channel is the failure signal,
+    /// same as in-process. An error here means the worker is
+    /// unreachable *now* (the TCP impl waits up to the round deadline
+    /// for a live connection first).
+    fn submit(&mut self, wid: usize, task: WorkerTask) -> Result<()>;
+
+    /// Round-boundary snapshot of worker `wid`'s cross-round state
+    /// (run-store persistence). Blocks behind any still-running task.
+    fn capture(&mut self, wid: usize) -> Result<WorkerSnapshot>;
+
+    /// Install a persisted snapshot into worker `wid` (resume).
+    fn restore(&mut self, wid: usize, snap: WorkerSnapshot) -> Result<()>;
+
+    /// Cumulative transport-plane bytes: length prefixes, handshakes,
+    /// heartbeats, task framing, goodbyes — every wire byte that is
+    /// *not* already ledgered as payload or envelope. 0 in-process.
+    fn plane_bytes(&self) -> u64 {
+        0
+    }
+
+    /// Fault hook: hard-kill worker `wid`'s link (the `disconnect=`
+    /// site). In-process links cannot be severed — the worker just
+    /// misses the round, which the caller records as a dropout either
+    /// way; over TCP the socket genuinely dies and the worker
+    /// reconnects with backoff.
+    fn sever(&mut self, _wid: usize) {}
+
+    /// The bound listen address, when this transport has one.
+    fn local_addr(&self) -> Option<std::net::SocketAddr> {
+        None
+    }
+
+    /// Graceful teardown: goodbye frames + connection close over TCP,
+    /// worker-thread joins in-process. Idempotent.
+    fn shutdown(&mut self) {}
+}
+
+/// The in-process transport: a vector of [`Worker`]s behind the trait.
+/// [`Transport::submit`] is a direct channel send — today's default
+/// path, unchanged to the bit.
+pub struct InProcess<W: Worker> {
+    workers: Vec<W>,
+}
+
+impl<W: Worker> InProcess<W> {
+    pub fn new(workers: Vec<W>) -> Self {
+        Self { workers }
+    }
+}
+
+impl<W: Worker> Transport for InProcess<W> {
+    fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    fn submit(&mut self, wid: usize, task: WorkerTask) -> Result<()> {
+        self.workers
+            .get_mut(wid)
+            .with_context(|| format!("no worker {wid}"))?
+            .submit(task)
+    }
+
+    fn capture(&mut self, wid: usize) -> Result<WorkerSnapshot> {
+        self.workers
+            .get_mut(wid)
+            .with_context(|| format!("no worker {wid}"))?
+            .capture()
+    }
+
+    fn restore(&mut self, wid: usize, snap: WorkerSnapshot) -> Result<()> {
+        self.workers
+            .get_mut(wid)
+            .with_context(|| format!("no worker {wid}"))?
+            .restore(snap)
+    }
+
+    fn shutdown(&mut self) {
+        for w in self.workers.drain(..) {
+            w.shutdown();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::envelope::encode_update;
+    use crate::comm::{Frame, FrameKind, ModelUpdate};
+    use crate::config::{CommMode, CommPruner};
+    use crate::coordinator::{CommSetup, LiteWorker};
+    use crate::tensor::Tensor;
+
+    fn lite_fleet(n: usize) -> InProcess<LiteWorker> {
+        let setup = CommSetup {
+            mode: CommMode::Pruned,
+            rate: 0.3,
+            pruner: CommPruner::Stochastic,
+        };
+        InProcess::new((0..n).map(|i| LiteWorker::new(i, 7, setup)).collect())
+    }
+
+    #[test]
+    fn in_process_transport_delegates_and_bounds_checks() {
+        let mut t = lite_fleet(2);
+        assert_eq!(t.workers(), 2);
+        assert_eq!(t.plane_bytes(), 0, "in-process moves no transport-plane bytes");
+        assert!(t.local_addr().is_none());
+        let update = ModelUpdate::Dense(vec![Tensor::new(vec![4], vec![1.0, -2.0, 0.5, 4.0])]);
+        let (tx, rx) = std::sync::mpsc::channel();
+        t.submit(
+            1,
+            WorkerTask {
+                round: 0,
+                version: 1,
+                frame: Frame::seal(FrameKind::Update, &encode_update(&update)),
+                local_steps: 2,
+                slowdown: 1.0,
+                sleep: false,
+                reply: tx,
+            },
+        )
+        .unwrap();
+        let (wid, frame) = rx.recv().unwrap();
+        assert_eq!(wid, 1);
+        assert_eq!(frame.open().unwrap().0, FrameKind::Report);
+        // capture/restore pass straight through to the worker
+        let snap = t.capture(1).unwrap();
+        t.restore(1, snap).unwrap();
+        // out-of-range worker ids are errors, not panics
+        let (tx, _rx) = std::sync::mpsc::channel();
+        assert!(t
+            .submit(
+                9,
+                WorkerTask {
+                    round: 0,
+                    version: 1,
+                    frame: Frame::seal(FrameKind::Nack, &[]),
+                    local_steps: 1,
+                    slowdown: 1.0,
+                    sleep: false,
+                    reply: tx,
+                },
+            )
+            .is_err());
+        assert!(t.capture(9).is_err());
+        // sever is a no-op in-process; shutdown drains the fleet
+        t.sever(0);
+        t.shutdown();
+        assert_eq!(t.workers(), 0);
+    }
+}

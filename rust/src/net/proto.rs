@@ -1,0 +1,415 @@
+//! Socket message layer: length-prefixed [`Frame`]s plus the transport
+//! control payloads (task, hello, snapshot, restore-ack).
+//!
+//! One socket message = a 4-byte little-endian length prefix followed by
+//! the sealed frame bytes, verbatim. The prefix only delimits — every
+//! integrity property (magic, schema version, checksum) still lives in
+//! [`Frame::open`], so a transport never adds a second trust boundary.
+//! Crucially the payload frames the coordinator dispatches (downlink
+//! updates, uplink reports) travel *inside* transport messages as raw
+//! bytes: fault-injected damage sealed in by [`crate::faults`] arrives
+//! at the peer bit-for-bit, which is what keeps the loopback-TCP run
+//! twin-identical to the in-process run.
+
+use std::io::{ErrorKind, Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+use crate::comm::envelope::{ByteReader, ByteWriter, Frame, FrameKind};
+use crate::coordinator::WorkerSnapshot;
+use crate::tensor::Tensor;
+
+/// Hard ceiling on one socket message (prefix value). A forged prefix
+/// can therefore never balloon the reassembly buffer past 1 GiB.
+pub const MAX_MSG_BYTES: u32 = 1 << 30;
+
+/// Bytes a frame costs on the socket: its wire bytes + the length
+/// prefix. The prefix is the only cost the transport adds to frames the
+/// round protocol already ledgers.
+pub const LEN_PREFIX_BYTES: u64 = 4;
+
+/// Write one message: length prefix, then the sealed frame.
+pub fn send_msg<W: Write>(w: &mut W, frame: &Frame) -> Result<()> {
+    let bytes = frame.as_bytes();
+    if bytes.len() as u64 > MAX_MSG_BYTES as u64 {
+        bail!("frame of {} bytes exceeds message ceiling {MAX_MSG_BYTES}", bytes.len());
+    }
+    w.write_all(&(bytes.len() as u32).to_le_bytes()).context("write length prefix")?;
+    w.write_all(bytes).context("write frame")?;
+    w.flush().context("flush message")?;
+    Ok(())
+}
+
+/// Incremental message reassembler for one connection. Feed it a stream
+/// with a read timeout; [`MsgReader::poll`] returns `Ok(Some(frame))`
+/// per complete message, `Ok(None)` on timeout (so the caller can run
+/// heartbeat/liveness checks between reads), and `Err` on EOF, a forged
+/// prefix, or a genuine socket error.
+#[derive(Default)]
+pub struct MsgReader {
+    buf: Vec<u8>,
+}
+
+impl MsgReader {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Pop a complete message off the front of the buffer, if one is in.
+    fn try_extract(&mut self) -> Result<Option<Frame>> {
+        if self.buf.len() < LEN_PREFIX_BYTES as usize {
+            return Ok(None);
+        }
+        let len = u32::from_le_bytes(self.buf[0..4].try_into().unwrap());
+        if len > MAX_MSG_BYTES {
+            bail!("message prefix claims {len} bytes (ceiling {MAX_MSG_BYTES})");
+        }
+        let total = LEN_PREFIX_BYTES as usize + len as usize;
+        if self.buf.len() < total {
+            return Ok(None);
+        }
+        let msg = self.buf[LEN_PREFIX_BYTES as usize..total].to_vec();
+        self.buf.drain(..total);
+        Ok(Some(Frame::from_wire(msg)))
+    }
+
+    /// One read step against `stream` (which should carry a read
+    /// timeout). Timeouts surface as `Ok(None)`, a closed peer as `Err`.
+    pub fn poll<R: Read>(&mut self, stream: &mut R) -> Result<Option<Frame>> {
+        loop {
+            if let Some(f) = self.try_extract()? {
+                return Ok(Some(f));
+            }
+            let mut chunk = [0u8; 64 * 1024];
+            match stream.read(&mut chunk) {
+                Ok(0) => bail!("connection closed by peer"),
+                Ok(n) => self.buf.extend_from_slice(&chunk[..n]),
+                Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                    return Ok(None)
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e).context("socket read"),
+            }
+        }
+    }
+}
+
+/// Route a frame by its claimed header kind WITHOUT opening it. `None`
+/// when the bytes are too short or the kind field is unknown — the
+/// caller must then treat the frame as data and let the checked path
+/// ([`Frame::open`] → quarantine) deal with it, so damaged frames reach
+/// the same rejection machinery on both transports instead of killing
+/// the connection.
+pub fn peek_kind(frame: &Frame) -> Option<FrameKind> {
+    let b = frame.as_bytes();
+    if b.len() < 8 {
+        return None;
+    }
+    FrameKind::from_u16(u16::from_le_bytes([b[6], b[7]])).ok()
+}
+
+/// A [`FrameKind::Task`] payload: the round header fields of a
+/// `WorkerTask`, plus the inner sealed downlink frame as raw bytes.
+/// (The reply channel is transport-local and never serialized.)
+pub struct TaskWire {
+    pub round: usize,
+    pub version: u64,
+    pub local_steps: usize,
+    pub slowdown: f64,
+    pub sleep: bool,
+    /// the downlink frame, byte-for-byte as the coordinator sealed
+    /// (and the fault plan possibly mutated) it
+    pub frame: Frame,
+}
+
+pub fn encode_task(t: &TaskWire) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.put_u32(t.round as u32);
+    w.put_u64(t.version);
+    w.put_u32(t.local_steps as u32);
+    w.put_f64(t.slowdown);
+    w.put_u8(t.sleep as u8);
+    w.put_u64(t.frame.wire_bytes());
+    w.put_raw(t.frame.as_bytes());
+    w.into_bytes()
+}
+
+pub fn decode_task(payload: &[u8]) -> Result<TaskWire> {
+    let mut r = ByteReader::new(payload);
+    let round = r.get_u32()? as usize;
+    let version = r.get_u64()?;
+    let local_steps = r.get_u32()? as usize;
+    let slowdown = r.get_f64()?;
+    let sleep = match r.get_u8()? {
+        0 => false,
+        1 => true,
+        other => bail!("task sleep flag {other} is not a bool"),
+    };
+    let inner_len = r.get_u64()?;
+    if inner_len > r.remaining() as u64 {
+        bail!("task claims {inner_len}-byte inner frame in {} bytes", r.remaining());
+    }
+    let frame = Frame::from_wire(r.get_raw(inner_len as usize)?.to_vec());
+    r.finish()?;
+    Ok(TaskWire { round, version, local_steps, slowdown, sleep, frame })
+}
+
+/// A [`FrameKind::Hello`] payload: who is connecting, and the hash of
+/// the trajectory-affecting config it was launched with. The
+/// coordinator refuses a mismatched hash — two processes disagreeing on
+/// the run config must fail loudly at handshake, not drift silently.
+pub fn encode_hello(worker_id: usize, config_hash: u64) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.put_u32(worker_id as u32);
+    w.put_u64(config_hash);
+    w.into_bytes()
+}
+
+pub fn decode_hello(payload: &[u8]) -> Result<(usize, u64)> {
+    let mut r = ByteReader::new(payload);
+    let wid = r.get_u32()? as usize;
+    let hash = r.get_u64()?;
+    r.finish()?;
+    Ok((wid, hash))
+}
+
+fn write_tensors(w: &mut ByteWriter, ts: &[Tensor]) {
+    w.put_u32(ts.len() as u32);
+    for t in ts {
+        w.put_u32(t.shape().len() as u32);
+        for &d in t.shape() {
+            w.put_u32(d as u32);
+        }
+        for &v in t.data() {
+            w.put_f32(v);
+        }
+    }
+}
+
+fn read_tensors(r: &mut ByteReader) -> Result<Vec<Tensor>> {
+    let n = r.get_u32()? as usize;
+    let mut ts = Vec::with_capacity(n.min(r.remaining()));
+    for _ in 0..n {
+        let rank = r.get_u32()? as usize;
+        if rank > 8 {
+            bail!("snapshot tensor rank {rank} exceeds limit 8");
+        }
+        let mut shape = Vec::with_capacity(rank);
+        let mut elems: usize = 1;
+        for _ in 0..rank {
+            let d = r.get_u32()? as usize;
+            elems = elems
+                .checked_mul(d)
+                .filter(|&e| e <= r.remaining())
+                .context("snapshot tensor shape overflows payload")?;
+            shape.push(d);
+        }
+        let data = r.get_f32s(elems)?;
+        ts.push(Tensor::new(shape, data));
+    }
+    Ok(ts)
+}
+
+/// A [`FrameKind::Snapshot`] / [`FrameKind::Restore`] payload: the full
+/// `WorkerSnapshot`, with the same length-before-allocation validation
+/// discipline as the update decoder.
+pub fn encode_snapshot(s: &WorkerSnapshot) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    write_tensors(&mut w, &s.reference);
+    w.put_u32(s.residual.len() as u32);
+    for v in &s.residual {
+        w.put_u64(v.len() as u64);
+        for &x in v {
+            w.put_f32(x);
+        }
+    }
+    w.put_u64(s.batches_drawn);
+    write_tensors(&mut w, &s.momenta);
+    w.put_u64(s.step);
+    w.into_bytes()
+}
+
+pub fn decode_snapshot(payload: &[u8]) -> Result<WorkerSnapshot> {
+    let mut r = ByteReader::new(payload);
+    let reference = read_tensors(&mut r)?;
+    let n = r.get_u32()? as usize;
+    if n > r.remaining() {
+        bail!("snapshot claims {n} residual vecs in {} bytes", r.remaining());
+    }
+    let mut residual = Vec::with_capacity(n);
+    for _ in 0..n {
+        let len = r.get_u64()? as usize;
+        residual.push(r.get_f32s(len)?);
+    }
+    let batches_drawn = r.get_u64()?;
+    let momenta = read_tensors(&mut r)?;
+    let step = r.get_u64()?;
+    r.finish()?;
+    Ok(WorkerSnapshot { reference, residual, batches_drawn, momenta, step })
+}
+
+/// A [`FrameKind::RestoreAck`] payload: ok flag + error text.
+pub fn encode_restore_ack(err: Option<&str>) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    match err {
+        None => w.put_u8(1),
+        Some(msg) => {
+            w.put_u8(0);
+            w.put_raw(msg.as_bytes());
+        }
+    }
+    w.into_bytes()
+}
+
+/// Decode a restore-ack: `Ok(())` on success, `Err(text)` on a reported
+/// failure. An outer `Err` means the payload itself was malformed.
+pub fn decode_restore_ack(payload: &[u8]) -> Result<std::result::Result<(), String>> {
+    let mut r = ByteReader::new(payload);
+    let ok = r.get_u8()?;
+    let text = String::from_utf8_lossy(r.get_raw(r.remaining())?).into_owned();
+    Ok(match ok {
+        1 => Ok(()),
+        _ => Err(if text.is_empty() { "restore failed".into() } else { text }),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::envelope::encode_update;
+    use crate::comm::ModelUpdate;
+
+    fn inner_frame() -> Frame {
+        let u = ModelUpdate::Dense(vec![Tensor::new(vec![3], vec![1.0, -2.5, f32::NAN])]);
+        Frame::seal(FrameKind::Update, &encode_update(&u))
+    }
+
+    #[test]
+    fn task_wire_roundtrips_including_damaged_inner_frames() {
+        let mut damaged = inner_frame();
+        damaged.bytes_mut()[30] ^= 0xA5; // fault-plan-style corruption
+        for frame in [inner_frame(), damaged] {
+            let t = TaskWire {
+                round: 7,
+                version: 42,
+                local_steps: 3,
+                slowdown: 1.5,
+                sleep: true,
+                frame: frame.clone(),
+            };
+            let back = decode_task(&encode_task(&t)).unwrap();
+            assert_eq!(back.round, 7);
+            assert_eq!(back.version, 42);
+            assert_eq!(back.local_steps, 3);
+            assert_eq!(back.slowdown.to_bits(), 1.5f64.to_bits());
+            assert!(back.sleep);
+            // the inner frame travels byte-for-byte, damage included
+            assert_eq!(back.frame.as_bytes(), frame.as_bytes());
+        }
+        // forged inner length: clean error, no panic
+        let mut w = ByteWriter::new();
+        w.put_u32(0);
+        w.put_u64(0);
+        w.put_u32(1);
+        w.put_f64(1.0);
+        w.put_u8(0);
+        w.put_u64(u64::MAX);
+        assert!(decode_task(&w.into_bytes()).is_err());
+    }
+
+    #[test]
+    fn hello_and_restore_ack_roundtrip() {
+        let (wid, hash) = decode_hello(&encode_hello(5, 0xDEAD_BEEF)).unwrap();
+        assert_eq!((wid, hash), (5, 0xDEAD_BEEF));
+        assert!(decode_hello(&[1, 2]).is_err(), "truncated hello must error");
+        assert_eq!(decode_restore_ack(&encode_restore_ack(None)).unwrap(), Ok(()));
+        let err = decode_restore_ack(&encode_restore_ack(Some("bad shard"))).unwrap();
+        assert_eq!(err, Err("bad shard".into()));
+    }
+
+    #[test]
+    fn snapshot_payload_roundtrips_bit_for_bit() {
+        let snap = WorkerSnapshot {
+            reference: vec![Tensor::new(vec![2, 2], vec![1.0, -0.0, f32::NAN, 4.0])],
+            residual: vec![vec![0.25, -0.5], vec![]],
+            batches_drawn: 99,
+            momenta: vec![Tensor::new(vec![3], vec![0.1, 0.2, 0.3])],
+            step: 1234,
+        };
+        let back = decode_snapshot(&encode_snapshot(&snap)).unwrap();
+        assert_eq!(back.batches_drawn, 99);
+        assert_eq!(back.step, 1234);
+        assert_eq!(back.residual.len(), 2);
+        assert_eq!(back.residual[0], vec![0.25, -0.5]);
+        let bits = |ts: &[Tensor]| -> Vec<Vec<u32>> {
+            ts.iter().map(|t| t.data().iter().map(|v| v.to_bits()).collect()).collect()
+        };
+        assert_eq!(bits(&back.reference), bits(&snap.reference));
+        assert_eq!(bits(&back.momenta), bits(&snap.momenta));
+        assert_eq!(back.reference[0].shape(), &[2, 2]);
+        // forged tensor count / rank: clean errors
+        assert!(decode_snapshot(&[0xFF; 6]).is_err());
+    }
+
+    #[test]
+    fn msg_reader_reassembles_split_and_back_to_back_messages() {
+        let a = inner_frame();
+        let b = Frame::seal(FrameKind::Heartbeat, &[]);
+        let mut wire = Vec::new();
+        send_msg(&mut wire, &a).unwrap();
+        send_msg(&mut wire, &b).unwrap();
+        // feed the byte stream one byte at a time through a cursor-like
+        // reader: every message must come out whole and in order
+        struct Trickle<'a> {
+            bytes: &'a [u8],
+            pos: usize,
+        }
+        impl std::io::Read for Trickle<'_> {
+            fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+                if self.pos >= self.bytes.len() {
+                    return Err(std::io::Error::new(ErrorKind::WouldBlock, "drained"));
+                }
+                buf[0] = self.bytes[self.pos];
+                self.pos += 1;
+                Ok(1)
+            }
+        }
+        let mut rd = MsgReader::new();
+        let mut src = Trickle { bytes: &wire, pos: 0 };
+        let mut got = Vec::new();
+        loop {
+            match rd.poll(&mut src) {
+                Ok(Some(f)) => got.push(f),
+                Ok(None) => break, // trickle drained (WouldBlock)
+                Err(e) => panic!("unexpected error: {e}"),
+            }
+        }
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].as_bytes(), a.as_bytes());
+        assert_eq!(got[1].as_bytes(), b.as_bytes());
+        // a closed peer (EOF) is an error, not a silent None
+        let mut eof = std::io::Cursor::new(Vec::<u8>::new());
+        assert!(rd.poll(&mut eof).is_err());
+        // a forged length prefix is rejected before allocation
+        let mut rd = MsgReader::new();
+        let mut forged = std::io::Cursor::new((MAX_MSG_BYTES + 1).to_le_bytes().to_vec());
+        assert!(rd.poll(&mut forged).is_err());
+    }
+
+    #[test]
+    fn peek_kind_routes_without_opening() {
+        assert_eq!(peek_kind(&Frame::seal(FrameKind::Heartbeat, &[])), Some(FrameKind::Heartbeat));
+        // corruption in the payload does not stop routing…
+        let mut f = Frame::seal(FrameKind::Report, &[1, 2, 3]);
+        let n = f.as_bytes().len();
+        f.bytes_mut()[n - 1] ^= 0xA5;
+        assert_eq!(peek_kind(&f), Some(FrameKind::Report));
+        assert!(f.open().is_err());
+        // …while an unroutable kind field or a stub frame yields None
+        let mut f = Frame::seal(FrameKind::Report, &[]);
+        f.bytes_mut()[6] = 0xEE;
+        f.bytes_mut()[7] = 0xEE;
+        assert_eq!(peek_kind(&f), None);
+        assert_eq!(peek_kind(&Frame::from_wire(vec![0u8; 5])), None);
+    }
+}

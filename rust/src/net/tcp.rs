@@ -1,0 +1,540 @@
+//! Leader-side TCP transport: one listener, one connection slot per
+//! worker id, the same round protocol the in-process channels carry.
+//!
+//! Topology: [`TcpTransport::bind`] owns a nonblocking listener and an
+//! accept thread. Each accepted socket gets a transient handshake
+//! thread (so a half-open connection can never stall other admissions):
+//! it must produce a valid `Hello` — schema-checked by
+//! [`Frame::open`], worker id in range, config hash matching the
+//! leader's — within the round deadline, or it is refused with a
+//! `Goodbye`. An admitted connection is registered in its worker's slot
+//! (bumping the slot epoch, so a stale session thread can never clobber
+//! a reconnected successor) and serviced by a session thread that reads
+//! frames, routes them by *claimed* kind ([`proto::peek_kind`]), emits
+//! heartbeats, and enforces the liveness window.
+//!
+//! Routing is deliberately unvalidating: only recognizably-control
+//! frames (`RoundDone`, `Snapshot`, `RestoreAck`, `Heartbeat`,
+//! `Goodbye`) are consumed by the transport. Everything else — reports,
+//! nacks, and any frame too damaged to route — is forwarded to the
+//! round's reply channel, where the coordinator's existing
+//! open/decode/quarantine machinery judges it. That keeps fault-plan
+//! corruption flowing to the same code on both transports.
+//!
+//! Failure model: any socket error, liveness miss, or `Goodbye` kills
+//! the connection — the kill drops the round's pending reply senders,
+//! which the gather loop observes as a channel close, i.e. exactly an
+//! in-process worker going silent. The worker then reconnects with
+//! seeded backoff and is resynced by the version ring like any dropout.
+
+use std::collections::VecDeque;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::comm::envelope::{Frame, FrameKind};
+use crate::coordinator::{WorkerSnapshot, WorkerTask};
+use crate::net::proto::{self, MsgReader, TaskWire, LEN_PREFIX_BYTES};
+use crate::net::Transport;
+
+/// One admitted connection. Cloned between the slot table, the session
+/// thread, and transient submit/control callers; all shared state is
+/// behind `Arc`s, and `epoch` pins which registration this handle
+/// belongs to.
+#[derive(Clone)]
+struct Conn {
+    writer: Arc<Mutex<TcpStream>>,
+    /// reply senders for in-flight tasks, oldest first. `RoundDone`
+    /// pops one (dropping the sender = the in-process hangup);
+    /// killing the connection clears all (= worker went silent).
+    pending: Arc<Mutex<VecDeque<mpsc::Sender<(usize, Frame)>>>>,
+    /// one-shot waiters for control round-trips (capture/restore).
+    control: Arc<Mutex<VecDeque<mpsc::Sender<Frame>>>>,
+    alive: Arc<AtomicBool>,
+    epoch: u64,
+}
+
+/// A worker id's connection slot. `epoch` counts registrations so only
+/// the current connection's death may clear the slot.
+#[derive(Default)]
+struct Slot {
+    conn: Option<Conn>,
+    epoch: u64,
+}
+
+/// Kill a connection: mark dead, drop every waiting sender (failure
+/// signal to the gather / control callers), close the socket, and clear
+/// the slot — unless a newer epoch already replaced it.
+fn kill(slot: &Mutex<Slot>, conn: &Conn) {
+    conn.alive.store(false, Ordering::SeqCst);
+    conn.pending.lock().unwrap().clear();
+    conn.control.lock().unwrap().clear();
+    let _ = conn.writer.lock().unwrap().shutdown(Shutdown::Both);
+    let mut s = slot.lock().unwrap();
+    if s.epoch == conn.epoch {
+        s.conn = None;
+    }
+}
+
+/// The coordinator's TCP endpoint. See the module docs for topology.
+pub struct TcpTransport {
+    n: usize,
+    heartbeat_ms: u64,
+    deadline_ms: u64,
+    slots: Arc<Vec<Mutex<Slot>>>,
+    /// transport-plane byte ledger (prefixes, handshakes, heartbeats,
+    /// task framing) — see `Transport::plane_bytes`
+    plane: Arc<AtomicU64>,
+    stop: Arc<AtomicBool>,
+    addr: SocketAddr,
+    accept: Option<thread::JoinHandle<()>>,
+}
+
+impl TcpTransport {
+    /// Bind `addr` (e.g. `127.0.0.1:0`) and start admitting up to `n`
+    /// workers whose `Hello` carries `config_hash`.
+    pub fn bind(
+        addr: &str,
+        n: usize,
+        config_hash: u64,
+        heartbeat_ms: u64,
+        deadline_ms: u64,
+    ) -> Result<Self> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+        let local = listener.local_addr().context("listener local_addr")?;
+        listener.set_nonblocking(true).context("nonblocking listener")?;
+        let slots: Arc<Vec<Mutex<Slot>>> =
+            Arc::new((0..n).map(|_| Mutex::new(Slot::default())).collect());
+        let plane = Arc::new(AtomicU64::new(0));
+        let stop = Arc::new(AtomicBool::new(false));
+        let accept = {
+            let (slots, plane, stop) = (slots.clone(), plane.clone(), stop.clone());
+            thread::Builder::new()
+                .name("net-accept".into())
+                .spawn(move || {
+                    accept_loop(listener, slots, plane, stop, n, config_hash, heartbeat_ms, deadline_ms)
+                })
+                .context("spawn accept thread")?
+        };
+        Ok(Self {
+            n,
+            heartbeat_ms,
+            deadline_ms,
+            slots,
+            plane,
+            stop,
+            addr: local,
+            accept: Some(accept),
+        })
+    }
+
+    fn live_conn(&self, wid: usize) -> Option<Conn> {
+        let s = self.slots[wid].lock().unwrap();
+        s.conn.clone().filter(|c| c.alive.load(Ordering::SeqCst))
+    }
+
+    fn deadline(&self) -> Instant {
+        Instant::now() + Duration::from_millis(self.deadline_ms.max(1))
+    }
+
+    /// One control round-trip: send `kind(payload)`, await the single
+    /// response frame. Retries across reconnects until the deadline.
+    fn control_rpc(&self, wid: usize, kind: FrameKind, payload: &[u8]) -> Result<Frame> {
+        let deadline = self.deadline();
+        loop {
+            if let Some(conn) = self.live_conn(wid) {
+                let (tx, rx) = mpsc::channel();
+                conn.control.lock().unwrap().push_back(tx);
+                let req = Frame::seal(kind, payload);
+                let sent = {
+                    let mut w = conn.writer.lock().unwrap();
+                    proto::send_msg(&mut *w, &req)
+                };
+                match sent {
+                    Err(_) => {
+                        conn.control.lock().unwrap().pop_back();
+                        kill(&self.slots[wid], &conn);
+                    }
+                    Ok(()) => {
+                        self.plane
+                            .fetch_add(LEN_PREFIX_BYTES + req.wire_bytes(), Ordering::Relaxed);
+                        let left = deadline.saturating_duration_since(Instant::now());
+                        match rx.recv_timeout(left.max(Duration::from_millis(1))) {
+                            Ok(frame) => return Ok(frame),
+                            Err(mpsc::RecvTimeoutError::Timeout) => {
+                                bail!("worker {wid}: {kind:?} timed out after {}ms", self.deadline_ms)
+                            }
+                            // connection died mid-rpc: retry within deadline
+                            Err(mpsc::RecvTimeoutError::Disconnected) => {}
+                        }
+                    }
+                }
+            }
+            if Instant::now() >= deadline {
+                bail!("worker {wid}: no live connection within {}ms", self.deadline_ms);
+            }
+            thread::sleep(Duration::from_millis(5));
+        }
+    }
+
+    fn close(&mut self) {
+        if self.stop.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        let bye = Frame::seal(FrameKind::Goodbye, &[]);
+        for slot in self.slots.iter() {
+            let conn = slot.lock().unwrap().conn.clone();
+            let Some(conn) = conn else { continue };
+            if !conn.alive.load(Ordering::SeqCst) {
+                continue;
+            }
+            let sent = {
+                let mut w = conn.writer.lock().unwrap();
+                proto::send_msg(&mut *w, &bye)
+            };
+            if sent.is_ok() {
+                self.plane
+                    .fetch_add(LEN_PREFIX_BYTES + bye.wire_bytes(), Ordering::Relaxed);
+            }
+            // half-close: queued bytes (the goodbye) still flush; the
+            // session thread notices `stop` and finishes the teardown
+            let _ = conn.writer.lock().unwrap().shutdown(Shutdown::Write);
+        }
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Transport for TcpTransport {
+    fn workers(&self) -> usize {
+        self.n
+    }
+
+    fn submit(&mut self, wid: usize, task: WorkerTask) -> Result<()> {
+        if wid >= self.n {
+            bail!("no worker {wid}");
+        }
+        let inner_bytes = task.frame.wire_bytes();
+        let payload = proto::encode_task(&TaskWire {
+            round: task.round,
+            version: task.version,
+            local_steps: task.local_steps,
+            slowdown: task.slowdown,
+            sleep: task.sleep,
+            frame: task.frame,
+        });
+        let outer = Frame::seal(FrameKind::Task, &payload);
+        // transport tax = prefix + task framing; the inner downlink
+        // frame's bytes are already ledgered by the round protocol
+        let tax = LEN_PREFIX_BYTES + outer.wire_bytes() - inner_bytes;
+        let deadline = self.deadline();
+        loop {
+            if let Some(conn) = self.live_conn(wid) {
+                // register the reply sender BEFORE sending, so the
+                // report can never race past an empty pending queue
+                conn.pending.lock().unwrap().push_back(task.reply.clone());
+                let sent = {
+                    let mut w = conn.writer.lock().unwrap();
+                    proto::send_msg(&mut *w, &outer)
+                };
+                match sent {
+                    Ok(()) => {
+                        self.plane.fetch_add(tax, Ordering::Relaxed);
+                        return Ok(());
+                    }
+                    Err(_) => {
+                        // roll back our sender: the leader submits
+                        // serially, so ours is the back; a concurrent
+                        // RoundDone only ever pops the front
+                        conn.pending.lock().unwrap().pop_back();
+                        kill(&self.slots[wid], &conn);
+                    }
+                }
+            }
+            if Instant::now() >= deadline {
+                bail!("worker {wid}: no live connection within {}ms", self.deadline_ms);
+            }
+            thread::sleep(Duration::from_millis(5));
+        }
+    }
+
+    fn capture(&mut self, wid: usize) -> Result<WorkerSnapshot> {
+        let frame = self.control_rpc(wid, FrameKind::Capture, &[])?;
+        let (kind, payload) = frame.open().context("snapshot frame")?;
+        if kind != FrameKind::Snapshot {
+            bail!("worker {wid}: expected Snapshot, got {kind:?}");
+        }
+        proto::decode_snapshot(payload)
+    }
+
+    fn restore(&mut self, wid: usize, snap: WorkerSnapshot) -> Result<()> {
+        let frame = self.control_rpc(wid, FrameKind::Restore, &proto::encode_snapshot(&snap))?;
+        let (kind, payload) = frame.open().context("restore-ack frame")?;
+        if kind != FrameKind::RestoreAck {
+            bail!("worker {wid}: expected RestoreAck, got {kind:?}");
+        }
+        proto::decode_restore_ack(payload)?
+            .map_err(|e| anyhow::anyhow!("worker {wid}: restore failed: {e}"))
+    }
+
+    fn plane_bytes(&self) -> u64 {
+        self.plane.load(Ordering::Relaxed)
+    }
+
+    fn sever(&mut self, wid: usize) {
+        if let Some(conn) = self.live_conn(wid) {
+            kill(&self.slots[wid], &conn);
+        }
+    }
+
+    fn local_addr(&self) -> Option<SocketAddr> {
+        Some(self.addr)
+    }
+
+    fn shutdown(&mut self) {
+        self.close();
+    }
+}
+
+impl Drop for TcpTransport {
+    fn drop(&mut self) {
+        self.close();
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn accept_loop(
+    listener: TcpListener,
+    slots: Arc<Vec<Mutex<Slot>>>,
+    plane: Arc<AtomicU64>,
+    stop: Arc<AtomicBool>,
+    n: usize,
+    config_hash: u64,
+    heartbeat_ms: u64,
+    deadline_ms: u64,
+) {
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                log::debug!("connection attempt from {peer}");
+                let (slots, plane, stop) = (slots.clone(), plane.clone(), stop.clone());
+                // transient, detached: a half-open peer stalls only its
+                // own handshake thread, never the accept loop
+                let _ = thread::Builder::new().name("net-handshake".into()).spawn(move || {
+                    handshake(stream, slots, plane, stop, n, config_hash, heartbeat_ms, deadline_ms)
+                });
+            }
+            Err(_) => thread::sleep(Duration::from_millis(5)),
+        }
+    }
+}
+
+/// Refuse an admission attempt: best-effort goodbye, then close.
+fn refuse(stream: &TcpStream, plane: &AtomicU64, why: &str) {
+    log::warn!("refusing connection: {why}");
+    let bye = Frame::seal(FrameKind::Goodbye, &[]);
+    let mut w = stream;
+    if proto::send_msg(&mut w, &bye).is_ok() {
+        plane.fetch_add(LEN_PREFIX_BYTES + bye.wire_bytes(), Ordering::Relaxed);
+    }
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+#[allow(clippy::too_many_arguments)]
+fn handshake(
+    mut stream: TcpStream,
+    slots: Arc<Vec<Mutex<Slot>>>,
+    plane: Arc<AtomicU64>,
+    stop: Arc<AtomicBool>,
+    n: usize,
+    config_hash: u64,
+    heartbeat_ms: u64,
+    deadline_ms: u64,
+) {
+    if stream.set_nonblocking(false).is_err()
+        || stream.set_nodelay(true).is_err()
+        || stream
+            .set_read_timeout(Some(Duration::from_millis(heartbeat_ms.max(1))))
+            .is_err()
+        || stream
+            .set_write_timeout(Some(Duration::from_millis(deadline_ms.max(1))))
+            .is_err()
+    {
+        return;
+    }
+    // the hello must arrive within the deadline — a half-open peer is
+    // cut off here and never touches a worker slot
+    let deadline = Instant::now() + Duration::from_millis(deadline_ms.max(1));
+    let mut rd = MsgReader::new();
+    let hello = loop {
+        match rd.poll(&mut stream) {
+            Ok(Some(frame)) => break frame,
+            Ok(None) if Instant::now() < deadline && !stop.load(Ordering::SeqCst) => {}
+            _ => {
+                refuse(&stream, &plane, "no handshake within deadline");
+                return;
+            }
+        }
+    };
+    plane.fetch_add(LEN_PREFIX_BYTES + hello.wire_bytes(), Ordering::Relaxed);
+    // schema version, checksum, kind: all enforced by open()
+    let (wid, hash) = match hello.open() {
+        Ok((FrameKind::Hello, payload)) => match proto::decode_hello(payload) {
+            Ok(h) => h,
+            Err(e) => {
+                refuse(&stream, &plane, &format!("malformed hello: {e}"));
+                return;
+            }
+        },
+        Ok((kind, _)) => {
+            refuse(&stream, &plane, &format!("expected Hello, got {kind:?}"));
+            return;
+        }
+        Err(e) => {
+            refuse(&stream, &plane, &format!("bad handshake frame: {e}"));
+            return;
+        }
+    };
+    if wid >= n {
+        refuse(&stream, &plane, &format!("worker id {wid} out of range (fleet of {n})"));
+        return;
+    }
+    if hash != config_hash {
+        refuse(
+            &stream,
+            &plane,
+            &format!("config hash mismatch: peer {hash:#018x}, ours {config_hash:#018x}"),
+        );
+        return;
+    }
+    let conn = {
+        let mut s = slots[wid].lock().unwrap();
+        if s.conn.as_ref().is_some_and(|c| c.alive.load(Ordering::SeqCst)) {
+            drop(s);
+            refuse(&stream, &plane, &format!("worker {wid} already connected"));
+            return;
+        }
+        let writer = match stream.try_clone() {
+            Ok(w) => w,
+            Err(_) => return,
+        };
+        s.epoch += 1;
+        let conn = Conn {
+            writer: Arc::new(Mutex::new(writer)),
+            pending: Arc::new(Mutex::new(VecDeque::new())),
+            control: Arc::new(Mutex::new(VecDeque::new())),
+            alive: Arc::new(AtomicBool::new(true)),
+            epoch: s.epoch,
+        };
+        s.conn = Some(conn.clone());
+        conn
+    };
+    let welcome = Frame::seal(FrameKind::Welcome, &[]);
+    let sent = {
+        let mut w = conn.writer.lock().unwrap();
+        proto::send_msg(&mut *w, &welcome)
+    };
+    if sent.is_err() {
+        kill(&slots[wid], &conn);
+        return;
+    }
+    plane.fetch_add(LEN_PREFIX_BYTES + welcome.wire_bytes(), Ordering::Relaxed);
+    log::info!("worker {wid} connected (epoch {})", conn.epoch);
+    session(stream, conn, wid, slots, plane, stop, heartbeat_ms);
+}
+
+/// Service one admitted connection: read + route frames, emit
+/// heartbeats, enforce the liveness window. Exits by killing the
+/// connection, which is what surfaces the failure to the round loop.
+fn session(
+    mut stream: TcpStream,
+    conn: Conn,
+    wid: usize,
+    slots: Arc<Vec<Mutex<Slot>>>,
+    plane: Arc<AtomicU64>,
+    stop: Arc<AtomicBool>,
+    heartbeat_ms: u64,
+) {
+    let mut rd = MsgReader::new();
+    let beat_every = Duration::from_millis(heartbeat_ms.max(1));
+    // missing ~4 consecutive heartbeats = dead, floored so tiny
+    // heartbeat settings don't turn scheduler hiccups into dropouts
+    let liveness = Duration::from_millis((heartbeat_ms * 4).max(200));
+    let mut last_seen = Instant::now();
+    let mut last_beat = Instant::now();
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        match rd.poll(&mut stream) {
+            Ok(Some(frame)) => {
+                last_seen = Instant::now();
+                let wire = LEN_PREFIX_BYTES + frame.wire_bytes();
+                match proto::peek_kind(&frame) {
+                    Some(FrameKind::RoundDone) => {
+                        plane.fetch_add(wire, Ordering::Relaxed);
+                        // dropping the sender = the in-process hangup
+                        conn.pending.lock().unwrap().pop_front();
+                    }
+                    Some(FrameKind::Snapshot) | Some(FrameKind::RestoreAck) => {
+                        plane.fetch_add(wire, Ordering::Relaxed);
+                        let tx = conn.control.lock().unwrap().pop_front();
+                        if let Some(tx) = tx {
+                            let _ = tx.send(frame);
+                        }
+                    }
+                    Some(FrameKind::Heartbeat) => {
+                        plane.fetch_add(wire, Ordering::Relaxed);
+                    }
+                    Some(FrameKind::Goodbye) => {
+                        plane.fetch_add(wire, Ordering::Relaxed);
+                        log::info!("worker {wid} said goodbye");
+                        break;
+                    }
+                    // the data path: reports, nacks, and anything too
+                    // damaged to route — forwarded to the round's reply
+                    // channel for the coordinator's open/quarantine
+                    // machinery. Only the prefix is transport tax; the
+                    // frame itself is already ledgered by the round.
+                    _ => {
+                        plane.fetch_add(LEN_PREFIX_BYTES, Ordering::Relaxed);
+                        let tx = conn.pending.lock().unwrap().front().cloned();
+                        if let Some(tx) = tx {
+                            let _ = tx.send((wid, frame));
+                        } else {
+                            log::warn!("worker {wid}: frame with no round in flight; dropped");
+                        }
+                    }
+                }
+            }
+            Ok(None) => {
+                if last_seen.elapsed() > liveness {
+                    log::warn!("worker {wid}: liveness window missed; dropping connection");
+                    break;
+                }
+            }
+            Err(e) => {
+                log::info!("worker {wid}: connection lost: {e}");
+                break;
+            }
+        }
+        if last_beat.elapsed() >= beat_every {
+            let beat = Frame::seal(FrameKind::Heartbeat, &[]);
+            let sent = {
+                let mut w = conn.writer.lock().unwrap();
+                proto::send_msg(&mut *w, &beat)
+            };
+            if sent.is_err() {
+                break;
+            }
+            plane.fetch_add(LEN_PREFIX_BYTES + beat.wire_bytes(), Ordering::Relaxed);
+            last_beat = Instant::now();
+        }
+    }
+    kill(&slots[wid], &conn);
+}

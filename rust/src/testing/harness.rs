@@ -19,6 +19,10 @@
 //! runs flat vs tiered twins whose tier ledgers *must* differ while
 //! every PR-6-era ledger stays identical — tier fields are asserted
 //! against the `docs/TRANSFER_MODEL.md` §Fleet tier formula separately.
+//! `transport_bytes` is likewise excluded: heartbeat counts depend on
+//! wall-clock timing, so the TCP-vs-in-process pin demands identical
+//! payload/envelope ledgers while the transport-plane tax differs by
+//! construction (in-process is always 0; see §Transport tier).
 
 use anyhow::Result;
 
@@ -251,6 +255,7 @@ mod tests {
             upload_bytes: 1000 + r as u64,
             download_bytes: 900,
             envelope_bytes: 96,
+            transport_bytes: 0,
             dispatched: 2,
             dropped: Vec::new(),
             corrupt_frames: 0,
@@ -324,6 +329,18 @@ mod tests {
         b.cohort = vec![1, 2];
         let (va, vb) = (vec![a], vec![b]);
         assert_round_parity("cohort", &va, &vb, Parity::full());
+    }
+
+    #[test]
+    fn transport_plane_bytes_are_not_in_the_wire_family() {
+        // the TCP-vs-in-process pin depends on this: the twins must pass
+        // a full-parity check even though only the TCP side pays a
+        // (timing-dependent) heartbeat/handshake/length-prefix tax
+        let a = round(5);
+        let mut b = round(5);
+        b.transport_bytes = 8_192;
+        let (va, vb) = (vec![a], vec![b]);
+        assert_round_parity("transport", &va, &vb, Parity::full());
     }
 
     #[test]

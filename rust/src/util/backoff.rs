@@ -1,0 +1,136 @@
+//! Seeded exponential backoff with deterministic jitter.
+//!
+//! Shared by the transport reconnect loop (`net::client`) and the
+//! coordinator's bounded downlink retry: both need "try again, later,
+//! but not forever" with delays that are reproducible from the run
+//! seed so twin runs schedule retries identically. The jitter stream
+//! is a dedicated RNG lane (`seed ^ 0xB0FF`) so consuming backoff
+//! delays never perturbs the training/fault/sampling streams.
+//!
+//! Delay schedule: attempt `k` (0-based) draws uniformly from
+//! `[ceil/2, ceil]` where `ceil = min(cap_ms, base_ms << k)` —
+//! "decorrelated-half" jitter keeps retries from synchronising across
+//! workers while never collapsing below half the exponential ceiling.
+
+use crate::util::rng::Rng;
+
+/// Dedicated stream tag for backoff jitter (see module docs).
+const BACKOFF_STREAM: u64 = 0xB0FF;
+
+/// Seeded exponential backoff with bounded attempts.
+#[derive(Clone, Debug)]
+pub struct Backoff {
+    rng: Rng,
+    base_ms: u64,
+    cap_ms: u64,
+    max_attempts: u32,
+    attempt: u32,
+}
+
+impl Backoff {
+    /// A backoff whose jitter stream is derived from `seed ^ 0xB0FF`.
+    /// `base_ms` is the first-attempt ceiling, `cap_ms` clamps the
+    /// exponential growth, and `max_attempts` bounds total retries.
+    pub fn new(seed: u64, base_ms: u64, cap_ms: u64, max_attempts: u32) -> Self {
+        Self {
+            rng: Rng::new(seed ^ BACKOFF_STREAM),
+            base_ms,
+            cap_ms,
+            max_attempts,
+            attempt: 0,
+        }
+    }
+
+    /// A degenerate backoff that allows `max_attempts` retries with no
+    /// delay — the in-process retry discipline (PR 6's bounded downlink
+    /// retry), where sleeping would only slow the twin-run harness.
+    pub fn immediate(max_attempts: u32) -> Self {
+        Self::new(0, 0, 0, max_attempts)
+    }
+
+    /// Next delay in milliseconds, or `None` once attempts are exhausted.
+    /// Consuming a delay advances both the attempt counter and the
+    /// jitter stream, so two `Backoff`s built from the same seed yield
+    /// identical schedules.
+    pub fn next_delay_ms(&mut self) -> Option<u64> {
+        if self.attempt >= self.max_attempts {
+            return None;
+        }
+        // shift clamp: past 2^20 * base the cap has long since taken over
+        let ceil = self.cap_ms.min(self.base_ms << self.attempt.min(20));
+        self.attempt += 1;
+        if ceil == 0 {
+            return Some(0);
+        }
+        let half = ceil / 2;
+        Some(half + self.rng.below(ceil - half + 1))
+    }
+
+    /// True once every attempt has been consumed.
+    pub fn exhausted(&self) -> bool {
+        self.attempt >= self.max_attempts
+    }
+
+    /// Attempts consumed so far.
+    pub fn attempts(&self) -> u32 {
+        self.attempt
+    }
+
+    /// Rearm after a success: resets the attempt counter (the jitter
+    /// stream keeps advancing — determinism only requires that the same
+    /// seed + same sequence of consume/reset calls replays identically).
+    pub fn reset(&mut self) {
+        self.attempt = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_delays_respect_cap_and_grow() {
+        let mut b = Backoff::new(7, 25, 2000, 16);
+        let mut prev_ceil = 0u64;
+        for k in 0..16u32 {
+            let d = b.next_delay_ms().expect("attempts remain");
+            let ceil = 2000u64.min(25u64 << k.min(20));
+            assert!(d <= ceil, "attempt {k}: delay {d} above ceiling {ceil}");
+            assert!(d >= ceil / 2, "attempt {k}: delay {d} below half-ceiling");
+            assert!(ceil >= prev_ceil, "ceiling must be monotone");
+            prev_ceil = ceil;
+        }
+        assert!(b.exhausted());
+        assert_eq!(b.next_delay_ms(), None);
+    }
+
+    #[test]
+    fn backoff_jitter_is_deterministic_per_seed() {
+        let take = |seed: u64| -> Vec<u64> {
+            let mut b = Backoff::new(seed, 25, 2000, 10);
+            std::iter::from_fn(|| b.next_delay_ms()).collect()
+        };
+        assert_eq!(take(42), take(42), "same seed, same schedule");
+        assert_ne!(take(42), take(43), "different seeds must diverge");
+    }
+
+    #[test]
+    fn backoff_reset_rearms_attempts() {
+        let mut b = Backoff::new(1, 10, 100, 2);
+        assert!(b.next_delay_ms().is_some());
+        assert!(b.next_delay_ms().is_some());
+        assert!(b.exhausted());
+        b.reset();
+        assert!(!b.exhausted());
+        assert_eq!(b.attempts(), 0);
+        assert!(b.next_delay_ms().is_some());
+    }
+
+    #[test]
+    fn backoff_immediate_is_zero_delay_bounded() {
+        let mut b = Backoff::immediate(1);
+        assert_eq!(b.next_delay_ms(), Some(0));
+        assert!(b.exhausted());
+        assert_eq!(b.next_delay_ms(), None);
+    }
+}

@@ -1,6 +1,7 @@
 //! Foundation substrates built in-repo (no network; see DESIGN.md
 //! substitutions): PRNG, JSON, statistics, logging.
 
+pub mod backoff;
 pub mod fs;
 pub mod json;
 pub mod logging;

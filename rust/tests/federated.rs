@@ -1,14 +1,20 @@
 //! Integration tests for the federated coordinator (leader + workers over
 //! real PJRT executables; each worker brings up its own client).
 
+use std::sync::atomic::AtomicBool;
+use std::thread;
+
 use efficientgrad::comm::wire::{sign_model_bytes_envelope, sparse_model_bytes};
 use efficientgrad::config::{CommMode, CommPruner, FedConfig, TrainConfig};
-use efficientgrad::coordinator::Leader;
+use efficientgrad::coordinator::{self, runstore, Leader};
 use efficientgrad::faults::FaultPlan;
 use efficientgrad::manifest::Manifest;
+use efficientgrad::net::client::{self, ClientConfig};
 use efficientgrad::params::ParamStore;
 use efficientgrad::runtime::{resident_step_state_bytes, Runtime, TransferStats};
-use efficientgrad::testing::harness::{self, assert_round_parity, assert_twin_parity, Parity};
+use efficientgrad::testing::harness::{
+    self, assert_round_parity, assert_twin_parity, Parity, TwinRun,
+};
 
 fn manifest() -> Option<Manifest> {
     Manifest::load(&efficientgrad::artifacts_dir()).ok()
@@ -1005,6 +1011,217 @@ fn simd_and_scalar_kernels_are_bit_for_bit_twin_runs() {
             Parity::full(),
         );
     }
+}
+
+/// Point `cfg.workers` client threads at a TCP leader on `addr` — each
+/// builds its own shard/artifact/runtime state via [`spawn_edge_worker`]
+/// and serves rounds, exactly what an `efficientgrad worker --connect`
+/// process does (the manifest is re-loaded per thread for the same
+/// reason: a remote worker shares no memory with the leader).
+fn spawn_fleet(cfg: &FedConfig, addr: &str) -> Vec<thread::JoinHandle<anyhow::Result<()>>> {
+    (0..cfg.workers)
+        .map(|id| {
+            let cfg = cfg.clone();
+            let addr = addr.to_string();
+            thread::spawn(move || {
+                let m = Manifest::load(&efficientgrad::artifacts_dir())?;
+                let worker = coordinator::spawn_edge_worker(&m, &cfg, id)?;
+                client::serve(
+                    &addr,
+                    &ClientConfig {
+                        worker_id: id,
+                        config_hash: runstore::config_hash(&cfg),
+                        heartbeat_ms: cfg.heartbeat_ms,
+                        round_deadline_ms: cfg.round_deadline_ms,
+                        seed: cfg.train.seed,
+                        max_connect_attempts: 12,
+                    },
+                    worker,
+                )
+            })
+        })
+        .collect()
+}
+
+/// Join a TCP client fleet after the leader is gone. A worker severed
+/// in the run's *final* round has no way to learn the run ended — it
+/// redials a dead address until its budget runs out, exactly as a real
+/// deployment's orphaned worker would — so dial exhaustion is the one
+/// tolerated error; anything else fails the test.
+fn join_fleet(fleet: Vec<thread::JoinHandle<anyhow::Result<()>>>) {
+    for h in fleet {
+        if let Err(e) = h.join().unwrap() {
+            let msg = format!("{e:#}");
+            assert!(
+                msg.contains("could not reach") || msg.contains("exhausted"),
+                "client failed for a non-teardown reason: {msg}"
+            );
+        }
+    }
+}
+
+/// Run a federated config over loopback TCP: bind on an OS-assigned
+/// port, bring up the client fleet, run, capture the twin, tear down.
+fn run_tcp(rt: &Runtime, m: &Manifest, mut cfg: FedConfig) -> TwinRun {
+    cfg.listen = Some("127.0.0.1:0".into());
+    let mut leader = Leader::new(rt, m, cfg.clone()).unwrap();
+    let addr = leader.listen_addr().expect("tcp leader must bind").to_string();
+    let fleet = spawn_fleet(&cfg, &addr);
+    let summary = leader.run().unwrap();
+    let params = leader.global_params().to_vec();
+    leader.shutdown();
+    join_fleet(fleet);
+    TwinRun { summary, params }
+}
+
+#[test]
+fn loopback_tcp_run_is_bit_for_bit_the_in_process_run() {
+    // the transport tier's headline pin: the same config, seed, and
+    // fault plan (live disconnect AND uplink-delay injection) over
+    // loopback TCP must reproduce the in-process run bit for bit —
+    // params, eval accs, every payload/envelope ledger. Only the
+    // transport-plane tax may differ, and it must say what happened:
+    // channels are free, sockets are not.
+    let Some(m) = manifest() else {
+        eprintln!("SKIP: artifacts missing");
+        return;
+    };
+    let rt = Runtime::cpu().unwrap();
+    let mut cfg = small_cfg(3, 5);
+    cfg.comm = CommMode::Pruned;
+    cfg.max_chain = 3; // comebacks ride chained deltas through the ring
+    cfg.faults = Some("disconnect=0.3,delay=0.4,seed=7".parse().unwrap());
+    let inproc = harness::run(&rt, &m, cfg.clone()).unwrap();
+    let tcp = run_tcp(&rt, &m, cfg);
+    // injection must actually have fired, or the test proves little: a
+    // disconnected worker sits its round out and resyncs on comeback
+    let dropped: usize = inproc.summary.rounds.iter().map(|r| r.dropped.len()).sum();
+    assert!(dropped > 0, "disconnect injection produced no dropouts");
+    assert_twin_parity("loopback tcp vs in-process", &inproc, &tcp, Parity::full());
+    for (a, b) in inproc.summary.rounds.iter().zip(&tcp.summary.rounds) {
+        assert_eq!(a.transport_bytes, 0, "round {}: channels pay no plane tax", a.round);
+        assert!(
+            b.transport_bytes > 0,
+            "round {}: TCP framing/handshake/heartbeats went unledgered",
+            b.round
+        );
+    }
+}
+
+#[test]
+fn tcp_kill_and_resume_reproduces_the_uninterrupted_run() {
+    // durability crossed with the wire: kill a loopback-TCP coordinator
+    // after round 1, resume it on a fresh port with a fresh client
+    // fleet (workers restore their replicas from the run store's
+    // snapshots over the wire), and the stitched run must match the
+    // *in-process uninterrupted* oracle bit for bit
+    let Some(m) = manifest() else {
+        eprintln!("SKIP: artifacts missing");
+        return;
+    };
+    let rt = Runtime::cpu().unwrap();
+    let dir = std::env::temp_dir().join(format!("effgrad_tcp_resume_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut base = small_cfg(3, 4);
+    base.comm = CommMode::Pruned;
+
+    let x = harness::run(&rt, &m, base.clone()).unwrap();
+
+    let mut killed = base.clone();
+    killed.run_store = Some(dir.to_string_lossy().into_owned());
+    killed.faults = Some(FaultPlan {
+        kill_round: Some(1),
+        ..FaultPlan::default()
+    });
+    let y1 = run_tcp(&rt, &m, killed);
+    assert_eq!(y1.summary.rounds.len(), 2, "the kill must halt the run after round 1");
+
+    // the resumed leader's restore blocks until every worker has acked
+    // its snapshot, so the fleet must be dialing BEFORE Leader::new —
+    // reserve a port, start the clients, let their seeded reconnect
+    // backoff ride out the window where nothing is listening yet
+    let addr = {
+        let probe = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        probe.local_addr().unwrap().to_string()
+    };
+    let mut resumed = base;
+    resumed.listen = Some(addr.clone());
+    resumed.run_store = Some(dir.to_string_lossy().into_owned());
+    resumed.resume = true;
+    let fleet = spawn_fleet(&resumed, &addr);
+    let mut leader = Leader::new(&rt, &m, resumed).unwrap();
+    let summary = leader.run().unwrap();
+    let params = leader.global_params().to_vec();
+    leader.shutdown();
+    for h in fleet {
+        h.join().unwrap().unwrap();
+    }
+    let y2 = TwinRun { summary, params };
+    assert_eq!(y2.summary.rounds.len(), 2, "the resume must run exactly rounds 2 and 3");
+    assert_eq!(y2.summary.rounds[0].round, 2);
+
+    assert_eq!(x.params, y2.params, "tcp resume forked the trajectory");
+    assert_round_parity(
+        "tcp kill/resume vs in-process uninterrupted",
+        &x.summary.rounds,
+        y1.summary.rounds.iter().chain(&y2.summary.rounds),
+        Parity::full(),
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn preset_stop_flag_halts_gracefully_and_preserves_resumability() {
+    // the signal path's pin: the round-boundary stop flag turns a run
+    // into a no-op *between* persisted rounds — never mid-fold — so a
+    // signalled-and-restarted run is bit-for-bit the uninterrupted one.
+    // The flag is a leaked test-local AtomicBool (never the process-wide
+    // signal flag, which would poison every other test's leader).
+    let Some(m) = manifest() else {
+        eprintln!("SKIP: artifacts missing");
+        return;
+    };
+    let rt = Runtime::cpu().unwrap();
+    let dir = std::env::temp_dir().join(format!("effgrad_stop_resume_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut base = small_cfg(3, 4);
+    base.comm = CommMode::Pruned;
+
+    let x = harness::run(&rt, &m, base.clone()).unwrap();
+
+    // rounds 0-1 complete and persist, then the injected kill halts
+    let mut killed = base.clone();
+    killed.run_store = Some(dir.to_string_lossy().into_owned());
+    killed.faults = Some(FaultPlan {
+        kill_round: Some(1),
+        ..FaultPlan::default()
+    });
+    let y1 = harness::run(&rt, &m, killed).unwrap();
+
+    // an operator signal lands before the restarted run's first round:
+    // the leader restores, runs zero rounds, returns Ok (not an error),
+    // and leaves the store exactly as it found it
+    let mut resumed = base;
+    resumed.run_store = Some(dir.to_string_lossy().into_owned());
+    resumed.resume = true;
+    let mut leader = Leader::new(&rt, &m, resumed.clone()).unwrap();
+    let stopped: &'static AtomicBool = Box::leak(Box::new(AtomicBool::new(true)));
+    leader.set_stop_flag(stopped);
+    let sum = leader.run().unwrap();
+    leader.shutdown();
+    assert_eq!(sum.rounds.len(), 0, "a pre-set stop flag must halt before any round");
+
+    // ...and the next restart picks up rounds 2-3 exactly
+    let y2 = harness::run(&rt, &m, resumed).unwrap();
+    assert_eq!(y2.summary.rounds.len(), 2);
+    assert_eq!(x.params, y2.params, "the signalled stop forked the trajectory");
+    assert_round_parity(
+        "stop/restart/resume",
+        &x.summary.rounds,
+        y1.summary.rounds.iter().chain(&y2.summary.rounds),
+        Parity::full(),
+    );
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]
