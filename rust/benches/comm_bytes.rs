@@ -16,9 +16,12 @@
 
 use efficientgrad::benchlib::{bench, fmt_ns, Report};
 use efficientgrad::comm::envelope::{encode_update, FRAME_HEADER_BYTES};
-use efficientgrad::comm::wire::{sign_tensor_bytes, sparse_tensor_bytes};
+use efficientgrad::comm::wire::{
+    chained_model_bytes, merged_chain_bytes, quantized_tensor_bytes, sign_tensor_bytes,
+    sparse_tensor_bytes, support_bytes,
+};
 use efficientgrad::comm::{DeltaCodec, Frame, FrameKind, ModelUpdate, TensorUpdate};
-use efficientgrad::config::{CommMode, CommPruner};
+use efficientgrad::config::{CommMode, CommPruner, WireQuant};
 use efficientgrad::tensor::Tensor;
 use efficientgrad::util::rng::Rng;
 use std::time::Duration;
@@ -61,23 +64,29 @@ fn main() {
     let reference = randn_like(&shapes, 0.1, &mut rng);
 
     // steady-state wire bytes at (Pruned, 0.9) per pruner — the top-k
-    // sharpening assert below compares them
+    // sharpening assert below compares them — plus the v2-quantization
+    // rows the §Wire v2 asserts compare
     let mut pruned_stochastic_wire = 0u64;
     let mut pruned_topk_wire = 0u64;
-    for (mode, rate, pruner) in [
-        (CommMode::Dense, 0.0, CommPruner::Stochastic),
-        (CommMode::Pruned, 0.5, CommPruner::Stochastic),
-        (CommMode::Pruned, 0.9, CommPruner::Stochastic),
-        (CommMode::Pruned, 0.99, CommPruner::Stochastic),
-        (CommMode::Pruned, 0.9, CommPruner::TopK),
-        (CommMode::Sign, 0.5, CommPruner::Stochastic),
-        (CommMode::Sign, 0.9, CommPruner::Stochastic),
-        (CommMode::Sign, 0.9, CommPruner::TopK),
-        (CommMode::Sign, 0.99, CommPruner::Stochastic),
+    let mut pruned_q8_wire = 0u64;
+    let mut pruned_q4_wire = 0u64;
+    let mut sign_topk_wire = 0u64;
+    for (mode, rate, pruner, quant) in [
+        (CommMode::Dense, 0.0, CommPruner::Stochastic, WireQuant::Off),
+        (CommMode::Pruned, 0.5, CommPruner::Stochastic, WireQuant::Off),
+        (CommMode::Pruned, 0.9, CommPruner::Stochastic, WireQuant::Off),
+        (CommMode::Pruned, 0.99, CommPruner::Stochastic, WireQuant::Off),
+        (CommMode::Pruned, 0.9, CommPruner::TopK, WireQuant::Off),
+        (CommMode::Pruned, 0.9, CommPruner::TopK, WireQuant::Q8),
+        (CommMode::Pruned, 0.9, CommPruner::TopK, WireQuant::Q4),
+        (CommMode::Sign, 0.5, CommPruner::Stochastic, WireQuant::Off),
+        (CommMode::Sign, 0.9, CommPruner::Stochastic, WireQuant::Off),
+        (CommMode::Sign, 0.9, CommPruner::TopK, WireQuant::Off),
+        (CommMode::Sign, 0.99, CommPruner::Stochastic, WireQuant::Off),
     ] {
         // drive the codec to its error-feedback steady state over
         // synthetic round deltas, then measure encode latency + bytes
-        let mut codec = DeltaCodec::with_pruner(mode, rate, pruner);
+        let mut codec = DeltaCodec::with_pruner(mode, rate, pruner).with_quant(quant);
         let mut delta_rng = Rng::new(11);
         let mut prune_rng = Rng::new(13);
         let mut local = reference.clone();
@@ -115,6 +124,11 @@ fn main() {
                         TensorUpdate::Sign(t) => {
                             sign_tensor_bytes(t.elems as usize, t.nnz as usize)
                         }
+                        TensorUpdate::Quantized(t) => quantized_tensor_bytes(
+                            support_bytes(t.elems as usize, &t.indices),
+                            t.nnz(),
+                            t.bits,
+                        ),
                     })
                     .sum();
                 assert_eq!(last.wire_bytes(), formula, "wire bytes drifted from formula");
@@ -131,17 +145,21 @@ fn main() {
             );
         }
 
-        let tag = match pruner {
+        let mut tag = match pruner {
             CommPruner::Stochastic => String::new(),
             CommPruner::TopK => "/topk".into(),
         };
+        if quant != WireQuant::Off {
+            tag.push('/');
+            tag.push_str(quant.as_str());
+        }
         let s = bench(
             &format!("encode {}/{rate}{tag}", mode.as_str()),
             2,
             iters,
             Duration::from_secs(if short { 2 } else { 6 }),
             || {
-                let mut c = DeltaCodec::with_pruner(mode, rate, pruner);
+                let mut c = DeltaCodec::with_pruner(mode, rate, pruner).with_quant(quant);
                 std::hint::black_box(
                     c.encode(&local, &reference, &mut Rng::new(3)).unwrap(),
                 );
@@ -155,10 +173,16 @@ fn main() {
             format!("{:.1}x", dense_bytes as f64 / wire as f64),
             survivors.to_string(),
         ]);
-        if mode == CommMode::Pruned && rate == 0.9 {
-            match pruner {
-                CommPruner::Stochastic => pruned_stochastic_wire = wire,
-                CommPruner::TopK => pruned_topk_wire = wire,
+        if rate == 0.9 {
+            match (mode, pruner, quant) {
+                (CommMode::Pruned, CommPruner::Stochastic, WireQuant::Off) => {
+                    pruned_stochastic_wire = wire
+                }
+                (CommMode::Pruned, CommPruner::TopK, WireQuant::Off) => pruned_topk_wire = wire,
+                (CommMode::Pruned, CommPruner::TopK, WireQuant::Q8) => pruned_q8_wire = wire,
+                (CommMode::Pruned, CommPruner::TopK, WireQuant::Q4) => pruned_q4_wire = wire,
+                (CommMode::Sign, CommPruner::TopK, WireQuant::Off) => sign_topk_wire = wire,
+                _ => {}
             }
         }
 
@@ -190,6 +214,81 @@ fn main() {
         pruned_topk_wire * 2 <= pruned_stochastic_wire,
         "top-k failed to sharpen the pruned cut: {pruned_topk_wire} vs {pruned_stochastic_wire}"
     );
+
+    // wire v2 (docs/TRANSFER_MODEL.md §Wire v2): quantizing the topk
+    // survivors drops the f32 payload 8 B → 1 B (q8) / 0.5 B (q4) + the
+    // shared support, so at P=0.9 q8 must cut the f32 row ≥ 2x, land
+    // within 2x of the sign format (which ships ~1.25 bits/survivor but
+    // no magnitudes), and q4 must undercut q8
+    println!(
+        "pruned/0.9/topk wire: f32 {pruned_topk_wire} B -> q8 {pruned_q8_wire} B -> q4 \
+         {pruned_q4_wire} B (sign/topk {sign_topk_wire} B)"
+    );
+    assert!(
+        pruned_q8_wire * 2 <= pruned_topk_wire,
+        "q8 failed to cut the f32 pruned wire: {pruned_q8_wire} vs {pruned_topk_wire}"
+    );
+    assert!(
+        pruned_q8_wire <= 2 * sign_topk_wire,
+        "q8 wire {pruned_q8_wire} not within 2x of sign {sign_topk_wire}"
+    );
+    assert!(
+        pruned_q4_wire < pruned_q8_wire,
+        "q4 wire {pruned_q4_wire} not below q8 {pruned_q8_wire}"
+    );
+
+    // merged-chain resync (k = 3): three steady-state q8 links merged
+    // into the UPDATE_CHAIN_MERGED record must ship ≤ 0.6x the bytes of
+    // the legacy per-link f32-sparse chain carrying the same survivors
+    {
+        let mut codec =
+            DeltaCodec::with_pruner(CommMode::Pruned, 0.9, CommPruner::TopK).with_quant(WireQuant::Q8);
+        let mut delta_rng = Rng::new(17);
+        let mut prune_rng = Rng::new(19);
+        let mut local = reference.clone();
+        let mut links = Vec::new();
+        for _ in 0..3 {
+            for (l, r) in local.iter_mut().zip(&reference) {
+                let mut d = vec![0f32; r.len()];
+                delta_rng.fill_normal(&mut d, 0.02);
+                l.data_mut().copy_from_slice(r.data());
+                for (o, &dv) in l.data_mut().iter_mut().zip(&d) {
+                    *o += dv;
+                }
+            }
+            match codec.encode(&local, &reference, &mut prune_rng).unwrap() {
+                ModelUpdate::Delta(us) => links.push(us),
+                _ => unreachable!("pruned encode emits deltas"),
+            }
+        }
+        let chain = ModelUpdate::Chain(links.clone());
+        let merged = chain.wire_bytes();
+        assert_eq!(merged, merged_chain_bytes(&links), "merged bytes drifted from formula");
+        let legacy = chained_model_bytes(links.iter().map(|l| {
+            l.iter()
+                .map(|u| match u {
+                    TensorUpdate::Quantized(t) => sparse_tensor_bytes(t.nnz()),
+                    _ => unreachable!("q8 encode emits quantized tensors"),
+                })
+                .sum()
+        }));
+        println!(
+            "merged k=3 chain: {merged} B vs legacy per-link f32 chain {legacy} B ({:.2}x)",
+            merged as f64 / legacy as f64
+        );
+        assert!(
+            merged * 10 <= legacy * 6,
+            "merged chain {merged} B missed the 0.6x cut vs legacy {legacy} B"
+        );
+        rep.row(vec![
+            "chain/k=3/merged-q8".into(),
+            "-".into(),
+            "-".into(),
+            merged.to_string(),
+            format!("{:.1}x", dense_bytes as f64 / merged as f64),
+            chain.survivors().to_string(),
+        ]);
+    }
 
     // integrity envelope (docs/TRANSFER_MODEL.md §Integrity & recovery):
     // sealing a payload adds a flat FRAME_HEADER_BYTES of header —

@@ -20,7 +20,7 @@
 use std::time::Duration;
 
 use efficientgrad::benchlib::{bench, fmt_ns, Report, Sample};
-use efficientgrad::comm::{SignTensor, TensorUpdate};
+use efficientgrad::comm::{SignTensor, SparseTensor, TensorUpdate};
 use efficientgrad::data::synthetic::{generate, SynthConfig};
 use efficientgrad::manifest::Manifest;
 use efficientgrad::params::ParamStore;
@@ -202,6 +202,10 @@ fn main() {
 
     // parity gate: both dispatch paths must agree bit for bit on every
     // kernel the matrix times (the e2e twin pin lives in tests/federated)
+    let ksp = SparseTensor::encode(&kpruned); // survivor values the v2 quantizer runs over
+    let (klo, khi) = simd::minmax(&ksp.values);
+    let kscale8 = (khi - klo) / 255.0;
+    let kscale4 = (khi - klo) / 15.0;
     {
         let run = |force: bool| {
             simd::force_scalar(force);
@@ -214,13 +218,31 @@ fn main() {
             kup.axpy_into_f64(0.25, &mut acc);
             let mut dec = vec![0f32; kn];
             kup.decode_into(&mut dec);
+            let mm = simd::minmax(&ksp.values);
+            let mut q8 = Vec::new();
+            simd::quantize_q8_into(&ksp.values, klo, kscale8, &mut q8);
+            let mut dq8 = Vec::new();
+            simd::dequantize_q8_into(&q8, ksp.values.len(), klo, kscale8, &mut dq8);
+            let mut q4 = Vec::new();
+            simd::quantize_q4_into(&ksp.values, klo, kscale4, &mut q4);
+            let mut dq4 = Vec::new();
+            simd::dequantize_q4_into(&q4, ksp.values.len(), klo, kscale4, &mut dq4);
             simd::force_scalar(false);
-            (bits(&ax), bits(&pr), enc, acc, bits(&dec))
+            (bits(&ax), bits(&pr), enc, acc, bits(&dec), (mm, q8, bits(&dq8), q4, bits(&dq4)))
         };
-        let (ax_s, pr_s, enc_s, acc_s, dec_s) = run(true);
-        let (ax_v, pr_v, enc_v, acc_v, dec_v) = run(false);
+        let (ax_s, pr_s, enc_s, acc_s, dec_s, qt_s) = run(true);
+        let (ax_v, pr_v, enc_v, acc_v, dec_v, qt_v) = run(false);
         assert_eq!(ax_s, ax_v, "axpy: scalar and simd paths disagree");
         assert_eq!(pr_s, pr_v, "threshold pass: scalar and simd paths disagree");
+        assert_eq!(
+            (qt_s.0 .0.to_bits(), qt_s.0 .1.to_bits()),
+            (qt_v.0 .0.to_bits(), qt_v.0 .1.to_bits()),
+            "minmax: scalar and simd paths disagree"
+        );
+        assert_eq!(qt_s.1, qt_v.1, "quantize q8: scalar and simd paths disagree");
+        assert_eq!(qt_s.2, qt_v.2, "dequantize q8: scalar and simd paths disagree");
+        assert_eq!(qt_s.3, qt_v.3, "quantize q4: scalar and simd paths disagree");
+        assert_eq!(qt_s.4, qt_v.4, "dequantize q4: scalar and simd paths disagree");
         assert_eq!(
             (&enc_s.presence, &enc_s.signs, enc_s.nnz, enc_s.magnitude.to_bits()),
             (&enc_v.presence, &enc_v.signs, enc_v.nnz, enc_v.magnitude.to_bits()),
@@ -245,14 +267,16 @@ fn main() {
     let mut matrix_rows: Vec<Vec<String>> = Vec::new();
     let mut speedups: Vec<(&str, f64)> = Vec::new();
     {
-        let mut emit = |name: &str, s: &Sample, v: &Sample| {
+        // `ne` is the element count the kernel actually touches (dense
+        // kernels: kn; the v2 quantizer: the survivor count)
+        let mut emit = |name: &str, s: &Sample, v: &Sample, ne: f64| {
             let speedup = s.mean_ns / v.mean_ns;
             let row = vec![
                 format!("matrix {name}"),
                 fmt_ns(s.mean_ns),
                 fmt_ns(v.mean_ns),
-                format!("{:.0}", s.throughput(kn as f64) / 1e6),
-                format!("{:.0}", v.throughput(kn as f64) / 1e6),
+                format!("{:.0}", s.throughput(ne) / 1e6),
+                format!("{:.0}", v.throughput(ne) / 1e6),
                 format!("{speedup:.2}x"),
             ];
             matrix.row(row.clone());
@@ -266,7 +290,7 @@ fn main() {
         let (s, v) = matrix_pair("axpy f32", iters, budget, || {
             simd::axpy(&mut dst, 0.5, &kpruned);
         });
-        emit("axpy f32 (dense)", &s, &v);
+        emit("axpy f32 (dense)", &s, &v, kn as f64);
 
         // the leader's O(nnz) fold of a sign update into the f64
         // accumulator — the per-worker per-round aggregation kernel
@@ -274,7 +298,7 @@ fn main() {
         let (s, v) = matrix_pair("fold axpy sign->f64", iters, budget, || {
             kup.axpy_into_f64(0.25, &mut acc);
         });
-        speedups.push(("fold axpy sign->f64", emit("fold axpy (sign->f64)", &s, &v)));
+        speedups.push(("fold axpy sign->f64", emit("fold axpy (sign->f64)", &s, &v, kn as f64)));
 
         // eq. 3 threshold/survivor-select pass, the codec's per-tensor
         // prune (deterministic partitioned variant)
@@ -282,14 +306,14 @@ fn main() {
         let (s, v) = matrix_pair("threshold pass", iters, budget, || {
             sparsity::stochastic_prune_into_partitioned(&kd, ktau, &kbase, &mut out);
         });
-        speedups.push(("threshold pass", emit("threshold pass (eq. 3 partitioned)", &s, &v)));
+        speedups.push(("threshold pass", emit("threshold pass (eq. 3 partitioned)", &s, &v, kn as f64)));
 
         // sign bit-plane encode: word-at-a-time movemask pack vs the old
         // per-element bit pushes
         let (s, v) = matrix_pair("sign encode", iters, budget, || {
             std::hint::black_box(SignTensor::encode(&kpruned));
         });
-        speedups.push(("sign encode", emit("sign encode (bit-planes)", &s, &v)));
+        speedups.push(("sign encode", emit("sign encode (bit-planes)", &s, &v, kn as f64)));
 
         // sign bit-plane decode into a dense buffer (no floor: the
         // scalar walk is already cheap next to the encode)
@@ -297,7 +321,33 @@ fn main() {
         let (s, v) = matrix_pair("sign decode", iters, budget, || {
             kup.decode_into(&mut dec);
         });
-        emit("sign decode (bit-planes)", &s, &v);
+        emit("sign decode (bit-planes)", &s, &v, kn as f64);
+
+        // the wire-v2 quantizer over the survivor values (codes packed
+        // 4/word at q8, 8/word at q4) and its decode-side inverse — the
+        // kernels `QuantTensor::{from_survivors, dequantize_values}`
+        // dispatch (no floor: survivor buffers are small next to the
+        // dense kernels, the e2e win is bytes, not nanoseconds)
+        let knnz = ksp.values.len() as f64;
+        let mut qc = Vec::new();
+        let (s, v) = matrix_pair("quantize q8", iters, budget, || {
+            simd::quantize_q8_into(&ksp.values, klo, kscale8, &mut qc);
+        });
+        emit("quantize q8 (affine pack)", &s, &v, knnz);
+        let mut dq = Vec::new();
+        let (s, v) = matrix_pair("dequantize q8", iters, budget, || {
+            simd::dequantize_q8_into(&qc, ksp.values.len(), klo, kscale8, &mut dq);
+        });
+        emit("dequantize q8 (unpack)", &s, &v, knnz);
+        let mut qc4 = Vec::new();
+        let (s, v) = matrix_pair("quantize q4", iters, budget, || {
+            simd::quantize_q4_into(&ksp.values, klo, kscale4, &mut qc4);
+        });
+        emit("quantize q4 (affine pack)", &s, &v, knnz);
+        let (s, v) = matrix_pair("dequantize q4", iters, budget, || {
+            simd::dequantize_q4_into(&qc4, ksp.values.len(), klo, kscale4, &mut dq);
+        });
+        emit("dequantize q4 (unpack)", &s, &v, knnz);
     }
     matrix.print();
     matrix

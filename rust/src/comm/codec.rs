@@ -27,8 +27,8 @@
 
 use anyhow::{bail, Result};
 
-use super::wire::{ModelUpdate, SignTensor, SparseTensor, TensorUpdate};
-use crate::config::{CommMode, CommPruner};
+use super::wire::{ModelUpdate, QuantTensor, SignTensor, SparseTensor, TensorUpdate};
+use crate::config::{CommMode, CommPruner, WireQuant};
 use crate::sparsity::{
     stochastic_prune_into_partitioned, tau_from_rate, topk_keep_count, topk_prune_into,
 };
@@ -46,6 +46,12 @@ pub struct DeltaCodec {
     /// survivor selection: eq. 3 stochastic promotion (default) or
     /// exact top-k by |δ| (`federated.comm_pruner = topk`)
     pruner: CommPruner,
+    /// v2 survivor-value quantization (`federated.wire_quant`): `Off`
+    /// ships legacy f32 values bit-for-bit; `Q8`/`Q4` ship affine codes
+    /// and the dequantization error joins the residual below. Only
+    /// `pruned` mode consults it (sign mode already shares one
+    /// magnitude; dense loses nothing to quantize against).
+    quant: WireQuant,
     /// per-tensor carried-over pruning error; empty until the first
     /// compressed encode
     residual: Vec<Vec<f32>>,
@@ -65,9 +71,18 @@ impl DeltaCodec {
             mode,
             rate,
             pruner,
+            quant: WireQuant::Off,
             residual: Vec::new(),
             scratch: Vec::new(),
         }
+    }
+
+    /// Builder: select the v2 survivor-value quantization. Defaults to
+    /// [`WireQuant::Off`] — every existing construction site stays the
+    /// legacy f32 wire bit-for-bit unless it opts in.
+    pub fn with_quant(mut self, quant: WireQuant) -> Self {
+        self.quant = quant;
+        self
     }
 
     pub fn mode(&self) -> CommMode {
@@ -76,6 +91,10 @@ impl DeltaCodec {
 
     pub fn pruner(&self) -> CommPruner {
         self.pruner
+    }
+
+    pub fn quant(&self) -> WireQuant {
+        self.quant
     }
 
     /// Encode `local − reference` (+ carried residual) into a wire
@@ -155,10 +174,15 @@ impl DeltaCodec {
                     topk_prune_into(res, topk_keep_count(res.len(), self.rate), &mut self.scratch);
                 }
             }
-            let update = match self.mode {
-                CommMode::Pruned => TensorUpdate::Sparse(SparseTensor::encode(&self.scratch)),
-                CommMode::Sign => TensorUpdate::Sign(SignTensor::encode(&self.scratch)),
-                CommMode::Dense => unreachable!("handled above"),
+            let update = match (self.mode, self.quant.to_bits()) {
+                (CommMode::Pruned, None) => {
+                    TensorUpdate::Sparse(SparseTensor::encode(&self.scratch))
+                }
+                (CommMode::Pruned, Some(bits)) => {
+                    TensorUpdate::Quantized(QuantTensor::encode(&self.scratch, bits))
+                }
+                (CommMode::Sign, _) => TensorUpdate::Sign(SignTensor::encode(&self.scratch)),
+                (CommMode::Dense, _) => unreachable!("handled above"),
             };
             // residual = (delta + old residual) − decode(update); for the
             // sparse format decode == pruned, for sign the shared
@@ -169,6 +193,11 @@ impl DeltaCodec {
                         res[i as usize] -= v;
                     }
                 }
+                // the *dequantized* survivor values are what the decoder
+                // reconstructs, so subtracting them (not the pre-quant
+                // survivors) leaves exactly the quantization error in the
+                // residual — the EF identity extends to the quantized wire
+                TensorUpdate::Quantized(t) => t.for_each_survivor(|i, v| res[i] -= v),
                 // x + (−1)·v ≡ x − v bit for bit; the fold dispatches to
                 // the vectorized sign kernel under `simd`
                 TensorUpdate::Sign(t) => t.axpy_into_slice(-1.0, res),
@@ -306,6 +335,51 @@ mod tests {
         let mut c2 = DeltaCodec::with_pruner(CommMode::Pruned, 0.9, CommPruner::TopK);
         let u2 = c2.encode(&local, &reference, &mut Rng::new(999)).unwrap();
         assert_eq!(u, u2, "top-k must not depend on the caller's rng");
+    }
+
+    #[test]
+    fn quantized_wire_keeps_the_ef_identity() {
+        use crate::config::WireQuant;
+        let n = 64;
+        let mut vals = vec![0f32; n];
+        Rng::new(77).fill_normal(&mut vals, 1.0);
+        let local = vec![t(&vals)];
+        let reference = vec![Tensor::zeros(&[n])];
+        for quant in [WireQuant::Q8, WireQuant::Q4] {
+            let mut c = DeltaCodec::with_pruner(CommMode::Pruned, 0.9, CommPruner::TopK)
+                .with_quant(quant);
+            assert_eq!(c.quant(), quant);
+            let u = c.encode(&local, &reference, &mut Rng::new(0)).unwrap();
+            let ModelUpdate::Delta(us) = &u else { panic!("expected delta") };
+            let TensorUpdate::Quantized(q) = &us[0] else {
+                panic!("pruned + wire_quant must ship Quantized tensors")
+            };
+            // same survivor support as the unquantized top-k encode
+            assert_eq!(q.nnz(), 7); // ⌈0.1·64⌉
+            // residual + decoded == delta, always — the quantization
+            // error (≤ scale/2 per survivor) is *in* the residual, not
+            // lost, so it re-enters the next round's delta
+            let decoded = us[0].decode_dense();
+            let norm2: f64 = vals
+                .iter()
+                .zip(&decoded)
+                .map(|(&d, &dq)| ((d - dq) as f64).powi(2))
+                .sum();
+            assert!(
+                (c.residual_norm() - norm2.sqrt()).abs() < 1e-6,
+                "EF identity broken under {quant:?}"
+            );
+            // per-survivor dequantization error within half a step
+            for (j, &i) in q.indices.iter().enumerate() {
+                let err = (q.value(j) - vals[i as usize]).abs();
+                assert!(err <= q.scale / 2.0 + 1e-6, "survivor {i} err {err}");
+            }
+        }
+        // Off stays bit-for-bit the legacy sparse wire
+        let mut off = DeltaCodec::with_pruner(CommMode::Pruned, 0.9, CommPruner::TopK);
+        let u = off.encode(&local, &reference, &mut Rng::new(0)).unwrap();
+        let ModelUpdate::Delta(us) = &u else { panic!() };
+        assert!(matches!(us[0], TensorUpdate::Sparse(_)));
     }
 
     #[test]

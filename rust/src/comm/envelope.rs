@@ -33,13 +33,19 @@
 
 use anyhow::{bail, Context, Result};
 
-use crate::comm::wire::{ModelUpdate, SignTensor, SparseTensor, TensorUpdate};
+use crate::comm::wire::{
+    chain_is_quantized, chain_union_indices, for_each_ordinal_gap, presence_bitmap,
+    bitmap_rle_encode, rle_decode_indices, ModelUpdate, QuantBits, QuantTensor, SignTensor,
+    SparseTensor, TensorUpdate,
+};
 use crate::tensor::Tensor;
 
 /// Wire schema version sealed into every frame. Bump on any layout
 /// change to `encode_update` / the report encoding; old decoders then
-/// reject new frames outright instead of misparsing them.
-pub const SCHEMA_VERSION: u16 = 1;
+/// reject new frames outright instead of misparsing them. v2 added the
+/// quantized tensor record ([`TensorUpdate::Quantized`]) and the merged
+/// chain encoding (`docs/TRANSFER_MODEL.md` §Wire v2).
+pub const SCHEMA_VERSION: u16 = 2;
 
 /// Fixed per-frame envelope overhead in bytes: 4 magic + 2 version +
 /// 2 kind + 8 payload length + 8 checksum.
@@ -225,6 +231,12 @@ impl ByteWriter {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
 
+    /// LEB128 varint (the v2 gap/count encoding —
+    /// [`crate::comm::wire::varint_len`] is its byte accounting).
+    pub fn put_varint(&mut self, v: u64) {
+        crate::comm::wire::push_varint(&mut self.buf, v);
+    }
+
     /// Raw bytes, verbatim — for nested already-sealed frames (the
     /// transport's task messages carry the downlink frame unmodified, so
     /// fault-injected damage travels bit-for-bit).
@@ -284,6 +296,24 @@ impl<'a> ByteReader<'a> {
         Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
+    /// Read one LEB128 varint; every byte is bounds-checked and over-long
+    /// (> 64-bit) encodings are rejected.
+    pub fn get_varint(&mut self) -> Result<u64> {
+        let mut v = 0u64;
+        let mut shift = 0u32;
+        loop {
+            let b = self.get_u8().context("varint truncated")?;
+            if shift >= 64 {
+                bail!("varint overflows u64");
+            }
+            v |= u64::from(b & 0x7f) << shift;
+            if b & 0x80 == 0 {
+                return Ok(v);
+            }
+            shift += 7;
+        }
+    }
+
     /// Read `n` u32s after checking `4·n` bytes remain.
     pub fn get_u32s(&mut self, n: usize) -> Result<Vec<u32>> {
         let raw = self.take(4 * n)?;
@@ -316,8 +346,18 @@ impl<'a> ByteReader<'a> {
 const UPDATE_DENSE: u8 = 0;
 const UPDATE_DELTA: u8 = 1;
 const UPDATE_CHAIN: u8 = 2;
+/// v2: a chain whose links are all quantized ships one merged support
+/// plane per tensor plus per-link varint ordinal gaps.
+const UPDATE_CHAIN_MERGED: u8 = 3;
 const TU_SPARSE: u8 = 0;
 const TU_SIGN: u8 = 1;
+/// v2: affine int8/int4 survivor codes over a raw-or-RLE support bitmap.
+const TU_QUANT: u8 = 2;
+
+/// Flag bits shared by the quantized tensor record and the merged-chain
+/// per-tensor / per-link headers.
+const QF_Q4: u8 = 1; // 4-bit codes (8-bit when clear)
+const QF_RLE: u8 = 2; // support plane is RLE (raw bitmap when clear)
 
 /// Serialize a [`ModelUpdate`] payload (the downlink body; uplink delta
 /// reports embed the same delta encoding inside the report payload).
@@ -346,11 +386,57 @@ pub(crate) fn write_update(w: &mut ByteWriter, u: &ModelUpdate) {
             w.put_u8(UPDATE_DELTA);
             write_delta(w, us);
         }
+        ModelUpdate::Chain(links) if chain_is_quantized(links) => {
+            write_merged_chain(w, links);
+        }
         ModelUpdate::Chain(links) => {
             w.put_u8(UPDATE_CHAIN);
             w.put_u32(links.len() as u32);
             for us in links {
                 write_delta(w, us);
+            }
+        }
+    }
+}
+
+/// v2 merged-chain body: per tensor position, ONE union support plane
+/// shared by every link, then each link's survivors as varint ordinal
+/// gaps into that union plus its affine header and packed codes. Byte
+/// accounting: [`crate::comm::wire::merged_chain_bytes`].
+fn write_merged_chain(w: &mut ByteWriter, links: &[Vec<TensorUpdate>]) {
+    w.put_u8(UPDATE_CHAIN_MERGED);
+    w.put_u32(links.len() as u32);
+    w.put_u32(links[0].len() as u32);
+    for t in 0..links[0].len() {
+        let union = chain_union_indices(links, t);
+        let elems = links[0][t].elems();
+        debug_assert!(links.iter().all(|us| us[t].elems() == elems));
+        let rle = crate::comm::wire::rle_bytes_from_indices(elems, &union)
+            < crate::comm::wire::raw_bitmap_bytes(elems);
+        w.put_u32(elems as u32);
+        w.put_u32(union.len() as u32);
+        w.put_u8(if rle { QF_RLE } else { 0 });
+        let bitmap = presence_bitmap(elems, &union);
+        if rle {
+            let stream = bitmap_rle_encode(&bitmap, elems);
+            w.put_u32(stream.len() as u32);
+            w.put_raw(&stream);
+        } else {
+            for &p in &bitmap {
+                w.put_u32(p);
+            }
+        }
+        for us in links {
+            let TensorUpdate::Quantized(q) = &us[t] else {
+                unreachable!("chain_is_quantized checked by the caller")
+            };
+            w.put_u8(if q.bits == QuantBits::Q4 { QF_Q4 } else { 0 });
+            w.put_f32(q.scale);
+            w.put_f32(q.zero);
+            w.put_varint(q.nnz() as u64);
+            for_each_ordinal_gap(&union, &q.indices, |d| w.put_varint(d));
+            for &c in &q.codes {
+                w.put_u32(c);
             }
         }
     }
@@ -381,6 +467,35 @@ fn write_delta(w: &mut ByteWriter, us: &[TensorUpdate]) {
                 }
                 for &s in &t.signs {
                     w.put_u32(s);
+                }
+            }
+            TensorUpdate::Quantized(t) => {
+                w.put_u8(TU_QUANT);
+                let rle = t.uses_rle();
+                let mut flags = 0u8;
+                if t.bits == QuantBits::Q4 {
+                    flags |= QF_Q4;
+                }
+                if rle {
+                    flags |= QF_RLE;
+                }
+                w.put_u8(flags);
+                w.put_u32(t.elems);
+                w.put_u32(t.indices.len() as u32);
+                w.put_f32(t.scale);
+                w.put_f32(t.zero);
+                let bitmap = presence_bitmap(t.elems as usize, &t.indices);
+                if rle {
+                    let stream = bitmap_rle_encode(&bitmap, t.elems as usize);
+                    w.put_u32(stream.len() as u32);
+                    w.put_raw(&stream);
+                } else {
+                    for &p in &bitmap {
+                        w.put_u32(p);
+                    }
+                }
+                for &c in &t.codes {
+                    w.put_u32(c);
                 }
             }
         }
@@ -434,8 +549,139 @@ pub(crate) fn read_update(r: &mut ByteReader) -> Result<ModelUpdate> {
             }
             ModelUpdate::Chain(out)
         }
+        UPDATE_CHAIN_MERGED => ModelUpdate::Chain(read_merged_chain(r)?),
         other => bail!("unknown update tag {other}"),
     })
+}
+
+/// Decode a v2 merged chain back into the in-memory per-link form (the
+/// apply path replays links one by one, so the replica math is
+/// unchanged — merging is purely a wire encoding). Validates the union
+/// support plane, that every link's ordinals are strictly increasing
+/// and in-bounds, that every union survivor is referenced by ≥ 1 link
+/// (the writer's union is minimal, so anything else is a forgery), and
+/// every code-plane tail bit.
+fn read_merged_chain(r: &mut ByteReader) -> Result<Vec<Vec<TensorUpdate>>> {
+    let links = r.get_u32()? as usize;
+    let tensors = r.get_u32()? as usize;
+    if links == 0 || tensors == 0 {
+        bail!("merged chain with {links} links × {tensors} tensors");
+    }
+    if links > r.remaining() || tensors > r.remaining() {
+        bail!("merged chain claims {links} links × {tensors} tensors in {} bytes", r.remaining());
+    }
+    let mut out: Vec<Vec<TensorUpdate>> = vec![Vec::with_capacity(tensors); links];
+    for _ in 0..tensors {
+        let elems = r.get_u32()?;
+        let union_nnz = r.get_u32()? as usize;
+        let tflags = r.get_u8()?;
+        if tflags & !QF_RLE != 0 {
+            bail!("unknown merged-tensor flags {tflags:#x}");
+        }
+        if union_nnz > elems as usize {
+            bail!("merged union nnz {union_nnz} > elems {elems}");
+        }
+        // every union survivor costs ≥ 1 gap byte in some link, so a
+        // legitimate union can never outgrow links · remaining — reject
+        // forged counts before allocating anything proportional to them
+        if union_nnz as u64 > links as u64 * r.remaining() as u64 {
+            bail!("merged union claims {union_nnz} survivors in {} bytes", r.remaining());
+        }
+        let union = if tflags & QF_RLE != 0 {
+            let slen = r.get_u32()? as usize;
+            let stream = r.get_raw(slen)?;
+            rle_decode_indices(stream, elems as usize, union_nnz)?
+        } else {
+            let bitmap = r.get_u32s((elems as usize).div_ceil(32))?;
+            bitmap_indices_checked(&bitmap, elems, union_nnz)?
+        };
+        let mut referenced = vec![false; union_nnz];
+        for link in out.iter_mut() {
+            let lflags = r.get_u8()?;
+            if lflags & !QF_Q4 != 0 {
+                bail!("unknown merged-link flags {lflags:#x}");
+            }
+            let bits = if lflags & QF_Q4 != 0 { QuantBits::Q4 } else { QuantBits::Q8 };
+            let scale = r.get_f32()?;
+            let zero = r.get_f32()?;
+            let nnz = r.get_varint()? as usize;
+            if nnz > union_nnz {
+                bail!("merged link nnz {nnz} > union {union_nnz}");
+            }
+            let mut indices = Vec::with_capacity(nnz);
+            let mut ord = 0u64;
+            for k in 0..nnz {
+                let d = r.get_varint()?;
+                if k == 0 {
+                    ord = d;
+                } else {
+                    if d == 0 {
+                        bail!("merged link ordinals not strictly increasing");
+                    }
+                    ord = ord.checked_add(d).context("merged link ordinal overflows")?;
+                }
+                if ord >= union_nnz as u64 {
+                    bail!("merged link ordinal {ord} out of union bounds {union_nnz}");
+                }
+                referenced[ord as usize] = true;
+                indices.push(union[ord as usize]);
+            }
+            let words = (nnz * bits.bits()).div_ceil(32);
+            let codes = r.get_u32s(words)?;
+            check_code_tail(&codes, nnz, bits)?;
+            link.push(TensorUpdate::Quantized(QuantTensor {
+                elems,
+                indices,
+                bits,
+                scale,
+                zero,
+                codes,
+            }));
+        }
+        if let Some(unused) = referenced.iter().position(|&s| !s) {
+            bail!("merged union survivor {unused} referenced by no link (union not minimal)");
+        }
+    }
+    Ok(out)
+}
+
+/// Raw-bitmap support decode shared by the quantized tensor record and
+/// the merged chain: popcount must equal the claimed nnz, tail bits
+/// past `elems` must be clear, and the survivor offsets come back
+/// sorted.
+fn bitmap_indices_checked(bitmap: &[u32], elems: u32, nnz: usize) -> Result<Vec<u32>> {
+    let pop: u64 = bitmap.iter().map(|w| u64::from(w.count_ones())).sum();
+    if pop != nnz as u64 {
+        bail!("support bitmap popcount {pop} != nnz {nnz}");
+    }
+    if let Some(last) = bitmap.last() {
+        let tail = elems as usize % 32;
+        if tail != 0 && (last >> tail) != 0 {
+            bail!("support bitmap sets bits past element {elems}");
+        }
+    }
+    let mut indices = Vec::with_capacity(nnz);
+    for (wi, &word) in bitmap.iter().enumerate() {
+        let mut bits = word;
+        while bits != 0 {
+            let b = bits.trailing_zeros() as usize;
+            bits &= bits - 1;
+            indices.push((wi * 32 + b) as u32);
+        }
+    }
+    Ok(indices)
+}
+
+/// Reject set bits past the last survivor's code in the packed plane —
+/// the writer zero-pads, so anything else is damage or a forgery.
+fn check_code_tail(codes: &[u32], nnz: usize, bits: QuantBits) -> Result<()> {
+    if let Some(&last) = codes.last() {
+        let used = (nnz * bits.bits()) % 32;
+        if used != 0 && (last >> used) != 0 {
+            bail!("quant code plane sets bits past survivor {nnz}");
+        }
+    }
+    Ok(())
 }
 
 fn read_delta(r: &mut ByteReader) -> Result<Vec<TensorUpdate>> {
@@ -480,6 +726,38 @@ fn read_delta(r: &mut ByteReader) -> Result<Vec<TensorUpdate>> {
                 }
                 TensorUpdate::Sign(SignTensor { elems, nnz, presence, signs, magnitude })
             }
+            TU_QUANT => {
+                let qflags = r.get_u8()?;
+                if qflags & !(QF_Q4 | QF_RLE) != 0 {
+                    bail!("unknown quant tensor flags {qflags:#x}");
+                }
+                let bits = if qflags & QF_Q4 != 0 { QuantBits::Q4 } else { QuantBits::Q8 };
+                let elems = r.get_u32()?;
+                let nnz = r.get_u32()? as usize;
+                if nnz > elems as usize {
+                    bail!("quant tensor nnz {nnz} > elems {elems}");
+                }
+                let scale = r.get_f32()?;
+                let zero = r.get_f32()?;
+                // the codes plane alone needs nnz·bits packed bits, so a
+                // legitimate nnz can never exceed 8× the remaining payload —
+                // reject forged counts before allocating proportional to them
+                if nnz as u64 * bits.bits() as u64 > 8 * r.remaining() as u64 {
+                    bail!("quant tensor claims {nnz} survivors in {} bytes", r.remaining());
+                }
+                let indices = if qflags & QF_RLE != 0 {
+                    let slen = r.get_u32()? as usize;
+                    let stream = r.get_raw(slen)?;
+                    rle_decode_indices(stream, elems as usize, nnz)?
+                } else {
+                    let bitmap = r.get_u32s((elems as usize).div_ceil(32))?;
+                    bitmap_indices_checked(&bitmap, elems, nnz)?
+                };
+                let words = (nnz * bits.bits()).div_ceil(32);
+                let codes = r.get_u32s(words)?;
+                check_code_tail(&codes, nnz, bits)?;
+                TensorUpdate::Quantized(QuantTensor { elems, indices, bits, scale, zero, codes })
+            }
             other => bail!("unknown tensor update tag {other}"),
         });
     }
@@ -496,13 +774,42 @@ mod tests {
             TensorUpdate::Sparse(SparseTensor::encode(&pruned)),
             TensorUpdate::Sign(SignTensor::encode(&pruned)),
         ];
+        // a long run so the RLE support path is exercised, and a short
+        // scattered one so the raw-bitmap path is
+        let mut run = vec![0.0f32; 400];
+        for (i, v) in run.iter_mut().enumerate().take(180).skip(100) {
+            *v = (i as f32 - 140.0) * 0.125;
+        }
+        let qdelta = vec![
+            TensorUpdate::Quantized(QuantTensor::encode(&pruned, QuantBits::Q8)),
+            TensorUpdate::Quantized(QuantTensor::encode(&run, QuantBits::Q4)),
+        ];
+        // same per-tensor elems as qdelta (links of one chain update the
+        // same model) but a shifted support, so the merged union is a
+        // strict superset of each link
+        let mut run2 = vec![0.0f32; 400];
+        for (i, v) in run2.iter_mut().enumerate().take(220).skip(150) {
+            *v = (i as f32 - 170.0) * 0.0625;
+        }
+        let qdelta2 = vec![
+            TensorUpdate::Quantized(QuantTensor::encode(&[0.0, 3.0, 0.0, -1.0, 0.0, 0.5, 0.75], QuantBits::Q8)),
+            TensorUpdate::Quantized(QuantTensor::encode(&run2, QuantBits::Q4)),
+        ];
         vec![
             ModelUpdate::Dense(vec![
                 Tensor::new(vec![2, 3], vec![1.0, -2.0, 3.5, 0.0, 4.25, -0.5]),
                 Tensor::new(vec![4], vec![9.0, 8.0, 7.0, 6.0]),
             ]),
             ModelUpdate::Delta(delta.clone()),
-            ModelUpdate::Chain(vec![delta.clone(), delta]),
+            ModelUpdate::Chain(vec![delta.clone(), delta.clone()]),
+            ModelUpdate::Delta(qdelta.clone()),
+            // all-quantized chain: travels as the merged v2 record
+            ModelUpdate::Chain(vec![qdelta.clone(), qdelta2, qdelta]),
+            // mixed chain: falls back to the per-link v1 record
+            ModelUpdate::Chain(vec![delta, vec![
+                TensorUpdate::Quantized(QuantTensor::encode(&pruned, QuantBits::Q8)),
+                TensorUpdate::Quantized(QuantTensor::encode(&run, QuantBits::Q8)),
+            ]]),
         ]
     }
 
@@ -597,6 +904,185 @@ mod tests {
         let mut bytes = encode_update(&sample_updates()[0]);
         bytes.push(0);
         assert!(decode_update(&bytes).is_err());
+    }
+
+    #[test]
+    fn all_quantized_chain_travels_as_the_merged_record() {
+        let updates = sample_updates();
+        let merged = &updates[4]; // the all-quantized chain
+        let mixed = &updates[5]; // the sparse/sign + quantized chain
+        assert_eq!(encode_update(merged)[0], UPDATE_CHAIN_MERGED);
+        assert_eq!(encode_update(mixed)[0], UPDATE_CHAIN);
+        // the win the merged record is sized against is the legacy
+        // f32-sparse chain (8 B/survivor + one support per link) — the
+        // same supports and values shipped the way PR 9 shipped them
+        let ModelUpdate::Chain(links) = merged else { panic!() };
+        let legacy: Vec<Vec<TensorUpdate>> = links
+            .iter()
+            .map(|l| {
+                l.iter()
+                    .map(|u| {
+                        let TensorUpdate::Quantized(q) = u else { panic!() };
+                        let mut vals = Vec::new();
+                        q.dequantize_values(&mut vals);
+                        TensorUpdate::Sparse(SparseTensor {
+                            elems: q.elems,
+                            indices: q.indices.clone(),
+                            values: vals,
+                        })
+                    })
+                    .collect()
+            })
+            .collect();
+        let legacy_bytes = encode_update(&ModelUpdate::Chain(legacy)).len();
+        assert!(
+            encode_update(merged).len() < legacy_bytes,
+            "merged record must beat the legacy f32 chain ({} vs {legacy_bytes})",
+            encode_update(merged).len()
+        );
+    }
+
+    #[test]
+    fn forged_merged_chains_are_rejected() {
+        // start from a valid merged encoding and check the reader's
+        // structural guards one by one
+        let merged = &sample_updates()[4];
+        let clean = encode_update(merged);
+        assert!(decode_update(&clean).is_ok());
+
+        // zero links / zero tensors
+        let mut w = ByteWriter::new();
+        w.put_u8(UPDATE_CHAIN_MERGED);
+        w.put_u32(0);
+        w.put_u32(1);
+        assert!(decode_update(&w.into_bytes()).is_err());
+
+        // union nnz beyond elems
+        let mut w = ByteWriter::new();
+        w.put_u8(UPDATE_CHAIN_MERGED);
+        w.put_u32(1); // links
+        w.put_u32(1); // tensors
+        w.put_u32(8); // elems
+        w.put_u32(9); // union nnz > elems
+        w.put_u8(0);
+        assert!(decode_update(&w.into_bytes()).is_err());
+
+        // a union survivor no link references (non-minimal union)
+        let mut w = ByteWriter::new();
+        w.put_u8(UPDATE_CHAIN_MERGED);
+        w.put_u32(1); // links
+        w.put_u32(1); // tensors
+        w.put_u32(64); // elems
+        w.put_u32(2); // union nnz
+        w.put_u8(0); // raw bitmap
+        w.put_u32(0b101); // union = {0, 2}
+        w.put_u32(0);
+        w.put_u8(0); // link flags: q8
+        w.put_f32(1.0); // scale
+        w.put_f32(0.0); // zero
+        w.put_varint(1); // link nnz: only ordinal 0
+        w.put_varint(0); // gap → ordinal 0
+        w.put_u32(7); // one code word
+        assert!(decode_update(&w.into_bytes())
+            .unwrap_err()
+            .to_string()
+            .contains("not minimal"));
+
+        // non-increasing ordinals within a link
+        let mut w = ByteWriter::new();
+        w.put_u8(UPDATE_CHAIN_MERGED);
+        w.put_u32(1);
+        w.put_u32(1);
+        w.put_u32(64);
+        w.put_u32(2);
+        w.put_u8(0);
+        w.put_u32(0b101);
+        w.put_u32(0);
+        w.put_u8(0);
+        w.put_f32(1.0);
+        w.put_f32(0.0);
+        w.put_varint(2);
+        w.put_varint(1); // ordinal 1
+        w.put_varint(0); // gap 0 after the first: forged
+        w.put_u32(0x0707);
+        assert!(decode_update(&w.into_bytes()).is_err());
+
+        // ordinal past the union
+        let mut w = ByteWriter::new();
+        w.put_u8(UPDATE_CHAIN_MERGED);
+        w.put_u32(1);
+        w.put_u32(1);
+        w.put_u32(64);
+        w.put_u32(2);
+        w.put_u8(0);
+        w.put_u32(0b101);
+        w.put_u32(0);
+        w.put_u8(0);
+        w.put_f32(1.0);
+        w.put_f32(0.0);
+        w.put_varint(1);
+        w.put_varint(2); // union has ordinals {0, 1} only
+        w.put_u32(7);
+        assert!(decode_update(&w.into_bytes()).is_err());
+
+        // every single-byte corruption of the merged record must be
+        // rejected or decode to something != the original (the seal
+        // catches damage in production; the decoder must stay total)
+        for pos in 1..clean.len() {
+            let mut dmg = clean.clone();
+            dmg[pos] ^= 0x5A;
+            if let Ok(back) = decode_update(&dmg) {
+                assert_ne!(&back, merged, "byte {pos} damage decoded to the original");
+            }
+        }
+    }
+
+    #[test]
+    fn forged_quant_tensor_records_are_rejected() {
+        fn quant_prefix(flags: u8, elems: u32, nnz: u32) -> ByteWriter {
+            let mut w = ByteWriter::new();
+            w.put_u8(UPDATE_DELTA);
+            w.put_u32(1); // one tensor
+            w.put_u8(TU_QUANT);
+            w.put_u8(flags);
+            w.put_u32(elems);
+            w.put_u32(nnz);
+            w.put_f32(0.5); // scale
+            w.put_f32(-1.0); // zero
+            w
+        }
+        // unknown flag bits
+        assert!(decode_update(&quant_prefix(0x80, 8, 1).into_bytes()).is_err());
+        // nnz > elems
+        assert!(decode_update(&quant_prefix(0, 8, 9).into_bytes()).is_err());
+        // forged huge nnz with no payload behind it: must error before
+        // allocating
+        assert!(decode_update(&quant_prefix(0, u32::MAX, u32::MAX).into_bytes()).is_err());
+        // popcount != nnz
+        let mut w = quant_prefix(0, 32, 2);
+        w.put_u32(0b111); // 3 bits set
+        w.put_u32(0x0102_0300); // codes
+        assert!(decode_update(&w.into_bytes()).is_err());
+        // bitmap bits past elems
+        let mut w = quant_prefix(0, 30, 2);
+        w.put_u32(1 | (1 << 31)); // bit 31 ≥ elems 30
+        w.put_u32(0x0000_0201);
+        assert!(decode_update(&w.into_bytes()).is_err());
+        // code plane with set bits past the last survivor
+        let mut w = quant_prefix(0, 32, 2);
+        w.put_u32(0b11);
+        w.put_u32(0xFFFF_FFFF); // survivors use 16 bits; tail must be clear
+        assert!(decode_update(&w.into_bytes()).is_err());
+        // RLE stream whose runs disagree with nnz
+        let mut w = quant_prefix(QF_RLE, 16, 3);
+        let mut stream = Vec::new();
+        crate::comm::wire::push_varint(&mut stream, 2); // zeros
+        crate::comm::wire::push_varint(&mut stream, 2); // ones: 2 != nnz 3
+        crate::comm::wire::push_varint(&mut stream, 12); // zeros to len
+        w.put_u32(stream.len() as u32);
+        w.put_raw(&stream);
+        w.put_u32(0x0003_0201);
+        assert!(decode_update(&w.into_bytes()).is_err());
     }
 
     #[test]

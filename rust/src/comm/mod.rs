@@ -54,4 +54,4 @@ pub mod wire;
 
 pub use codec::DeltaCodec;
 pub use envelope::{Frame, FrameKind};
-pub use wire::{ModelUpdate, SignTensor, SparseTensor, TensorUpdate};
+pub use wire::{ModelUpdate, QuantBits, QuantTensor, SignTensor, SparseTensor, TensorUpdate};

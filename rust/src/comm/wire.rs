@@ -44,6 +44,20 @@ pub const SIGN_TENSOR_HEADER_BYTES: u64 = 12;
 /// would have paid had it caught every round's downlink individually.
 pub const CHAIN_HEADER_BYTES: u64 = 8;
 
+/// Per-tensor header of the quantized format: element count + nnz
+/// (u32 each), the affine `scale` + `zero` (f32 each), and one flags
+/// byte (code width, support encoding).
+pub const QUANT_TENSOR_HEADER_BYTES: u64 = 17;
+
+/// Per-tensor header of a merged (v2) chain: element count + union nnz
+/// (u32 each) + one flags byte for the shared support encoding.
+pub const MERGED_TENSOR_HEADER_BYTES: u64 = 9;
+
+/// Per-link-per-tensor header inside a merged chain: flags byte (code
+/// width) + the link's affine `scale` + `zero` (f32 each). The link's
+/// support rides as varint ordinal gaps, not a header field.
+pub const MERGED_LINK_HEADER_BYTES: u64 = 9;
+
 /// Wire bytes of one dense f32 tensor: `4·E`.
 ///
 /// ```
@@ -161,6 +175,250 @@ pub fn fleet_tier_bytes(n_tensors: u64, edge_nnz: impl Iterator<Item = u64>) -> 
         .sum()
 }
 
+// ---------------------------------------------------------------------------
+// Wire v2 primitives: varints, RLE presence bitmaps, quantized survivors,
+// merged chains (docs/TRANSFER_MODEL.md §Wire v2)
+// ---------------------------------------------------------------------------
+
+/// Bytes of one LEB128 varint (7 payload bits per byte, high bit = more).
+///
+/// ```
+/// use efficientgrad::comm::wire::varint_len;
+/// assert_eq!(varint_len(0), 1);
+/// assert_eq!(varint_len(127), 1);
+/// assert_eq!(varint_len(128), 2);
+/// assert_eq!(varint_len(16_383), 2);
+/// assert_eq!(varint_len(16_384), 3);
+/// ```
+pub fn varint_len(mut v: u64) -> u64 {
+    let mut n = 1;
+    while v >= 0x80 {
+        v >>= 7;
+        n += 1;
+    }
+    n
+}
+
+/// Append `v` as a LEB128 varint.
+pub fn push_varint(buf: &mut Vec<u8>, mut v: u64) {
+    while v >= 0x80 {
+        buf.push((v as u8) | 0x80);
+        v >>= 7;
+    }
+    buf.push(v as u8);
+}
+
+/// Read one LEB128 varint at `*pos`, advancing it. Rejects truncated
+/// streams and over-long (> 10 byte) encodings.
+pub fn read_varint(bytes: &[u8], pos: &mut usize) -> Result<u64> {
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    loop {
+        let Some(&b) = bytes.get(*pos) else {
+            bail!("varint truncated");
+        };
+        *pos += 1;
+        if shift >= 64 {
+            bail!("varint overflows u64");
+        }
+        v |= u64::from(b & 0x7f) << shift;
+        if b & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+    }
+}
+
+/// Bytes of a raw presence bitmap over `elems` elements (u32 words).
+///
+/// ```
+/// use efficientgrad::comm::wire::raw_bitmap_bytes;
+/// assert_eq!(raw_bitmap_bytes(0), 0);
+/// assert_eq!(raw_bitmap_bytes(32), 4);
+/// assert_eq!(raw_bitmap_bytes(33), 8);
+/// assert_eq!(raw_bitmap_bytes(42_000), 5252);
+/// ```
+pub fn raw_bitmap_bytes(elems: usize) -> u64 {
+    4 * elems.div_ceil(32) as u64
+}
+
+/// Build the presence bitmap (bit `i % 32` of word `i / 32`) over sorted
+/// survivor element offsets.
+pub fn presence_bitmap(elems: usize, indices: &[u32]) -> Vec<u32> {
+    let mut words = vec![0u32; elems.div_ceil(32)];
+    for &i in indices {
+        words[i as usize / 32] |= 1 << (i % 32);
+    }
+    words
+}
+
+/// Run-length-encode a presence bitmap: alternating run lengths as
+/// varints, zeros first (the leading zero-run may be 0; every later run
+/// is > 0; a trailing zero-run is included so the runs always sum to
+/// `len`). Top-k pruning produces long runs, so for structured sparsity
+/// this beats the raw `4·⌈len/32⌉` bytes; the per-tensor flag bit in the
+/// quantized/merged formats picks whichever is smaller.
+pub fn bitmap_rle_encode(bitmap: &[u32], len: usize) -> Vec<u8> {
+    assert_eq!(bitmap.len(), len.div_ceil(32), "bitmap sized for {len} bits");
+    let mut out = Vec::new();
+    let bit = |i: usize| bitmap[i / 32] >> (i % 32) & 1 == 1;
+    let mut pos = 0usize;
+    let mut ones = false; // the run being measured
+    while pos < len {
+        let start = pos;
+        while pos < len && bit(pos) == ones {
+            pos += 1;
+        }
+        push_varint(&mut out, (pos - start) as u64);
+        ones = !ones;
+    }
+    out
+}
+
+/// Decode [`bitmap_rle_encode`]'s stream back to bitmap words. Rejects
+/// streams whose runs do not sum to exactly `len` or that leave trailing
+/// bytes.
+pub fn bitmap_rle_decode(bytes: &[u8], len: usize) -> Result<Vec<u32>> {
+    let mut words = vec![0u32; len.div_ceil(32)];
+    let mut pos = 0usize;
+    let mut at = 0usize;
+    let mut ones = false;
+    while at < len {
+        let run = read_varint(bytes, &mut pos)? as usize;
+        if run > len - at {
+            bail!("RLE run of {run} overruns the {len}-bit bitmap");
+        }
+        if ones {
+            for i in at..at + run {
+                words[i / 32] |= 1 << (i % 32);
+            }
+        }
+        at += run;
+        ones = !ones;
+    }
+    if pos != bytes.len() {
+        bail!("RLE stream has {} trailing bytes", bytes.len() - pos);
+    }
+    Ok(words)
+}
+
+/// Decode an RLE support stream straight to sorted survivor offsets —
+/// the envelope's decode path. Unlike [`bitmap_rle_decode`] this never
+/// allocates `O(elems)`: a forged header claiming a huge element count
+/// can only make the decoder do work (and memory) proportional to the
+/// claimed `nnz`, which the envelope bounds against the payload bytes
+/// actually present. Rejects runs past `elems`, ones-counts ≠ `nnz`,
+/// and trailing bytes.
+pub fn rle_decode_indices(bytes: &[u8], elems: usize, nnz: usize) -> Result<Vec<u32>> {
+    let mut indices = Vec::with_capacity(nnz);
+    let mut pos = 0usize;
+    let mut at = 0usize;
+    let mut ones = false;
+    while at < elems {
+        let run = read_varint(bytes, &mut pos)? as usize;
+        if run > elems - at {
+            bail!("RLE run of {run} overruns the {elems}-bit bitmap");
+        }
+        if ones {
+            if indices.len() + run > nnz {
+                bail!("RLE ones exceed the claimed nnz {nnz}");
+            }
+            for i in at..at + run {
+                indices.push(i as u32);
+            }
+        }
+        at += run;
+        ones = !ones;
+    }
+    if pos != bytes.len() {
+        bail!("RLE stream has {} trailing bytes", bytes.len() - pos);
+    }
+    if indices.len() != nnz {
+        bail!("RLE ones {} != claimed nnz {nnz}", indices.len());
+    }
+    Ok(indices)
+}
+
+/// RLE byte count straight from sorted survivor offsets — what
+/// [`bitmap_rle_encode`] would produce for their bitmap, in O(nnz)
+/// without materializing it. The byte-accounting side of the raw-vs-RLE
+/// choice.
+pub fn rle_bytes_from_indices(elems: usize, indices: &[u32]) -> u64 {
+    let mut bytes = 0u64;
+    let mut pos = 0u64;
+    let mut i = 0usize;
+    while i < indices.len() {
+        let start = indices[i] as u64;
+        let mut end = start + 1;
+        i += 1;
+        while i < indices.len() && indices[i] as u64 == end {
+            end += 1;
+            i += 1;
+        }
+        bytes += varint_len(start - pos); // zero-run (first may be 0)
+        bytes += varint_len(end - start); // ones-run
+        pos = end;
+    }
+    if pos < elems as u64 {
+        bytes += varint_len(elems as u64 - pos); // trailing zeros
+    }
+    bytes
+}
+
+/// Support bytes of one survivor set on the v2 wire: the smaller of the
+/// raw bitmap and its RLE stream (the header flag bit records which).
+pub fn support_bytes(elems: usize, indices: &[u32]) -> u64 {
+    raw_bitmap_bytes(elems).min(rle_bytes_from_indices(elems, indices))
+}
+
+/// Wire bytes of one quantized code plane: `nnz` codes of
+/// `bits ∈ {8, 4}` packed into u32 words.
+///
+/// ```
+/// use efficientgrad::comm::wire::{quant_code_bytes, QuantBits};
+/// assert_eq!(quant_code_bytes(0, QuantBits::Q8), 0);
+/// assert_eq!(quant_code_bytes(4_200, QuantBits::Q8), 4_200);
+/// assert_eq!(quant_code_bytes(4_200, QuantBits::Q4), 2_100);
+/// assert_eq!(quant_code_bytes(5, QuantBits::Q4), 4); // one padded word
+/// ```
+pub fn quant_code_bytes(nnz: usize, bits: QuantBits) -> u64 {
+    4 * (nnz * bits.bits()).div_ceil(32) as u64
+}
+
+/// Wire bytes of one quantized tensor: header + survivor support
+/// (raw-or-RLE bitmap, whichever `support_bytes` picked) + packed codes.
+/// The v2 replacement for [`sparse_tensor_bytes`]'s `8 + 8·nnz`: the
+/// 8-byte survivor (u32 index + f32 value) becomes ~`P/nnz` bitmap bits
+/// plus one 8- or 4-bit code.
+///
+/// ```
+/// use efficientgrad::comm::wire::{quantized_tensor_bytes, raw_bitmap_bytes, QuantBits};
+/// // ~42k-element tensor, 10% top-k survivors, raw bitmap support:
+/// // 17 + 4·⌈42000/32⌉ + 4·⌈4200·8/32⌉
+/// assert_eq!(
+///     quantized_tensor_bytes(raw_bitmap_bytes(42_000), 4_200, QuantBits::Q8),
+///     17 + 5_252 + 4_200
+/// );
+/// // q4 halves the code plane
+/// assert_eq!(
+///     quantized_tensor_bytes(raw_bitmap_bytes(42_000), 4_200, QuantBits::Q4),
+///     17 + 5_252 + 2_100
+/// );
+/// ```
+pub fn quantized_tensor_bytes(support: u64, nnz: usize, bits: QuantBits) -> u64 {
+    QUANT_TENSOR_HEADER_BYTES + support + quant_code_bytes(nnz, bits)
+}
+
+/// Checked `usize → u32` for wire headers. Every format addresses
+/// elements with u32 offsets and counts, so a buffer past 2³² elements
+/// must fail loudly here instead of silently truncating `elems`/indices
+/// and corrupting every decode downstream.
+pub(crate) fn checked_elems(len: usize) -> u32 {
+    u32::try_from(len).unwrap_or_else(|_| {
+        panic!("tensor of {len} elements exceeds the u32 wire index space (max {})", u32::MAX)
+    })
+}
+
 /// Pruned-delta survivors of one tensor: `u32` element offsets (sorted,
 /// ascending — encode walks the buffer in order) + exact `f32` values.
 #[derive(Clone, Debug, PartialEq)]
@@ -173,14 +431,17 @@ pub struct SparseTensor {
 
 impl SparseTensor {
     /// Encode the nonzero coordinates of a (pruned) dense buffer.
+    /// Panics past 2³² elements ([`checked_elems`]) — the u32 index
+    /// space is the format's hard ceiling.
     pub fn encode(pruned: &[f32]) -> Self {
+        let elems = checked_elems(pruned.len());
         let mut indices = Vec::new();
         let mut values = Vec::new();
         #[cfg(all(feature = "simd", target_arch = "x86_64"))]
         if crate::util::simd::active() {
             crate::util::simd::sparse_encode_into(pruned, &mut indices, &mut values);
             return Self {
-                elems: pruned.len() as u32,
+                elems,
                 indices,
                 values,
             };
@@ -192,7 +453,7 @@ impl SparseTensor {
             }
         }
         Self {
-            elems: pruned.len() as u32,
+            elems,
             indices,
             values,
         }
@@ -277,7 +538,7 @@ impl SignTensor {
             (crate::util::simd::abs_sum_striped(pruned) / nnz as f64) as f32
         };
         Self {
-            elems: pruned.len() as u32,
+            elems: checked_elems(pruned.len()),
             nnz,
             presence,
             signs,
@@ -324,11 +585,177 @@ impl SignTensor {
     }
 }
 
+/// Quantized code width of the v2 wire: 8- or 4-bit affine codes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QuantBits {
+    Q8,
+    Q4,
+}
+
+impl QuantBits {
+    /// Bits per survivor code.
+    pub fn bits(self) -> usize {
+        match self {
+            QuantBits::Q8 => 8,
+            QuantBits::Q4 => 4,
+        }
+    }
+
+    /// Top quantization level (`2^bits − 1`): codes span `0..=levels`.
+    pub fn levels(self) -> u32 {
+        match self {
+            QuantBits::Q8 => 255,
+            QuantBits::Q4 => 15,
+        }
+    }
+
+    /// Codes packed per u32 word.
+    pub fn per_word(self) -> usize {
+        32 / self.bits()
+    }
+
+    /// Code mask (`2^bits − 1` as a bit mask).
+    pub fn mask(self) -> u32 {
+        self.levels()
+    }
+}
+
+/// Affine-quantized survivors of one tensor (the v2 `pruned`-mode wire):
+/// the exact survivor *support* (sorted u32 offsets, shipped as a
+/// raw-or-RLE presence bitmap), and the survivor *values* squeezed to
+/// `bits`-wide affine codes `v ≈ zero + scale·q`. The quantization error
+/// per survivor is ≤ `scale/2`, and the [`crate::comm::DeltaCodec`]
+/// subtracts the *dequantized* values from its error-feedback residual,
+/// so the error re-enters the next round's delta instead of biasing
+/// training — the same mechanism that already absorbs pruning error.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantTensor {
+    /// element count of the dense tensor this update applies to
+    pub elems: u32,
+    /// sorted survivor element offsets
+    pub indices: Vec<u32>,
+    /// code width (8- or 4-bit)
+    pub bits: QuantBits,
+    /// affine step: `(max − min) / levels` over survivor values, 0 when
+    /// the survivors are constant or absent
+    pub scale: f32,
+    /// affine zero point: the minimum survivor value (codes are offsets
+    /// above it, so they never go negative)
+    pub zero: f32,
+    /// packed codes, `per_word()` per u32, little-endian within the word
+    pub codes: Vec<u32>,
+}
+
+impl QuantTensor {
+    /// Encode the nonzero coordinates of a (pruned) dense buffer with
+    /// `bits`-wide affine codes. The survivor scan reuses the sparse
+    /// encoder (vectorized under `--features simd`); min/max and the
+    /// quantize+pack pass dispatch through [`crate::util::simd`] with
+    /// the scalar path as the bit-parity oracle.
+    pub fn encode(pruned: &[f32], bits: QuantBits) -> Self {
+        let sp = SparseTensor::encode(pruned);
+        Self::from_survivors(sp.elems, sp.indices, &sp.values, bits)
+    }
+
+    /// Quantize an explicit survivor list (the encode core; also the
+    /// merged-chain decode path's reconstruction check).
+    pub fn from_survivors(elems: u32, indices: Vec<u32>, values: &[f32], bits: QuantBits) -> Self {
+        debug_assert_eq!(indices.len(), values.len());
+        let (lo, hi) = crate::util::simd::minmax(values);
+        let scale = if hi > lo {
+            (hi - lo) / bits.levels() as f32
+        } else {
+            0.0
+        };
+        let mut codes = Vec::new();
+        match bits {
+            QuantBits::Q8 => crate::util::simd::quantize_q8_into(values, lo, scale, &mut codes),
+            QuantBits::Q4 => crate::util::simd::quantize_q4_into(values, lo, scale, &mut codes),
+        }
+        Self {
+            elems,
+            indices,
+            bits,
+            scale,
+            zero: lo,
+            codes,
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Code of survivor ordinal `j` (unpacked from the word plane).
+    #[inline]
+    pub fn code(&self, j: usize) -> u32 {
+        let per = self.bits.per_word();
+        (self.codes[j / per] >> ((j % per) * self.bits.bits())) & self.bits.mask()
+    }
+
+    /// Dequantized value of survivor ordinal `j`: `zero + scale·code`.
+    /// Mul-then-add, never fused — the simd dequantize kernel performs
+    /// the identical two rounded ops, so both paths agree bit for bit.
+    #[inline]
+    pub fn value(&self, j: usize) -> f32 {
+        self.zero + self.scale * self.code(j) as f32
+    }
+
+    /// Visit `(element_index, dequantized_value)` for every survivor in
+    /// index order — the decode primitive behind `axpy_into` and the
+    /// codec's residual update.
+    pub fn for_each_survivor(&self, mut f: impl FnMut(usize, f32)) {
+        for (j, &i) in self.indices.iter().enumerate() {
+            f(i as usize, self.value(j));
+        }
+    }
+
+    /// Dequantize the full survivor value list into `out` (cleared
+    /// first). Dispatches to the vectorized unpack+affine kernel under
+    /// `--features simd`.
+    pub fn dequantize_values(&self, out: &mut Vec<f32>) {
+        match self.bits {
+            QuantBits::Q8 => crate::util::simd::dequantize_q8_into(
+                &self.codes,
+                self.nnz(),
+                self.zero,
+                self.scale,
+                out,
+            ),
+            QuantBits::Q4 => crate::util::simd::dequantize_q4_into(
+                &self.codes,
+                self.nnz(),
+                self.zero,
+                self.scale,
+                out,
+            ),
+        }
+    }
+
+    /// Whether the v2 support plane ships RLE (strictly smaller than the
+    /// raw bitmap) — the per-tensor flag bit of the header.
+    pub fn uses_rle(&self) -> bool {
+        rle_bytes_from_indices(self.elems as usize, &self.indices)
+            < raw_bitmap_bytes(self.elems as usize)
+    }
+
+    pub fn wire_bytes(&self) -> u64 {
+        quantized_tensor_bytes(
+            support_bytes(self.elems as usize, &self.indices),
+            self.nnz(),
+            self.bits,
+        )
+    }
+}
+
 /// One tensor's delta on the wire.
 #[derive(Clone, Debug, PartialEq)]
 pub enum TensorUpdate {
     Sparse(SparseTensor),
     Sign(SignTensor),
+    /// v2 `pruned`-mode wire: affine int8/int4 survivor codes
+    /// (`--wire-quant {q8,q4}`).
+    Quantized(QuantTensor),
 }
 
 impl TensorUpdate {
@@ -337,6 +764,7 @@ impl TensorUpdate {
         match self {
             TensorUpdate::Sparse(t) => t.elems as usize,
             TensorUpdate::Sign(t) => t.elems as usize,
+            TensorUpdate::Quantized(t) => t.elems as usize,
         }
     }
 
@@ -345,6 +773,7 @@ impl TensorUpdate {
         match self {
             TensorUpdate::Sparse(t) => t.nnz(),
             TensorUpdate::Sign(t) => t.nnz as usize,
+            TensorUpdate::Quantized(t) => t.nnz(),
         }
     }
 
@@ -352,6 +781,7 @@ impl TensorUpdate {
         match self {
             TensorUpdate::Sparse(t) => t.wire_bytes(),
             TensorUpdate::Sign(t) => t.wire_bytes(),
+            TensorUpdate::Quantized(t) => t.wire_bytes(),
         }
     }
 
@@ -369,6 +799,10 @@ impl TensorUpdate {
         match self {
             TensorUpdate::Sparse(t) => dst.axpy_sparse(alpha, &t.indices, &t.values),
             TensorUpdate::Sign(t) => t.axpy_into_slice(alpha, dst.data_mut()),
+            TensorUpdate::Quantized(t) => {
+                let d = dst.data_mut();
+                t.for_each_survivor(|i, v| d[i] += alpha * v);
+            }
         }
     }
 
@@ -399,6 +833,7 @@ impl TensorUpdate {
                 }
                 t.for_each_survivor(|i, v| dst[i] += alpha * v as f64)
             }
+            TensorUpdate::Quantized(t) => t.for_each_survivor(|i, v| dst[i] += alpha * v as f64),
         }
     }
 
@@ -410,6 +845,9 @@ impl TensorUpdate {
         match self {
             TensorUpdate::Sparse(t) => t.values.iter().all(|v| v.is_finite()),
             TensorUpdate::Sign(t) => t.magnitude.is_finite(),
+            // codes are integers; finite scale + zero ⇒ every
+            // dequantized survivor is finite
+            TensorUpdate::Quantized(t) => t.scale.is_finite() && t.zero.is_finite(),
         }
     }
 
@@ -450,8 +888,104 @@ impl TensorUpdate {
                 out.fill(0.0);
                 t.for_each_survivor(|i, v| out[i] = v);
             }
+            TensorUpdate::Quantized(t) => {
+                out.fill(0.0);
+                t.for_each_survivor(|i, v| out[i] = v);
+            }
         }
     }
+}
+
+/// Whether a chain takes the merged (v2) encoding: ≥ 2 all-quantized
+/// links. Off-mode chains carry `Sparse`/`Sign` links and keep the v1
+/// per-link encoding bit for bit; a *single* quantized link also stays
+/// v1 — its support bitmap already encodes every survivor position, so
+/// the merged record's ordinal-gap plane (~1 byte per survivor) would
+/// be pure overhead with nothing to share it against.
+pub fn chain_is_quantized(links: &[Vec<TensorUpdate>]) -> bool {
+    links.len() >= 2
+        && links
+            .iter()
+            .all(|us| !us.is_empty() && us.iter().all(|u| matches!(u, TensorUpdate::Quantized(_))))
+}
+
+/// Union survivor support of tensor position `t` across a quantized
+/// chain's links (sorted, deduped) — the one merged presence bitmap a
+/// v2 chain ships instead of k per-link bitmaps.
+pub fn chain_union_indices(links: &[Vec<TensorUpdate>], t: usize) -> Vec<u32> {
+    let mut all: Vec<u32> = Vec::new();
+    for us in links {
+        if let TensorUpdate::Quantized(q) = &us[t] {
+            all.extend_from_slice(&q.indices);
+        }
+    }
+    all.sort_unstable();
+    all.dedup();
+    all
+}
+
+/// Visit the varint ordinal gaps that encode `indices` against the
+/// merged `union` support: `d₀ = ord₀`, `dᵢ = ordᵢ − ordᵢ₋₁` (≥ 1),
+/// where `ord` is the index's position in `union`. Top-k chains overlap
+/// heavily round to round, so most gaps are 1 → one varint byte per
+/// survivor instead of a fresh bitmap per link. Both sorted;
+/// `indices ⊆ union` is the caller's invariant.
+pub fn for_each_ordinal_gap(union: &[u32], indices: &[u32], mut f: impl FnMut(u64)) {
+    let mut prev: Option<u64> = None;
+    let mut u = 0usize;
+    for &idx in indices {
+        while union[u] != idx {
+            u += 1;
+        }
+        let ord = u as u64;
+        f(match prev {
+            None => ord,
+            Some(p) => ord - p,
+        });
+        prev = Some(ord);
+        u += 1;
+    }
+}
+
+/// Wire bytes of a merged (v2) chain — the normative formula
+/// (`docs/TRANSFER_MODEL.md` §Wire v2):
+///
+/// `8 + Σ_t [9 + support(E_t, union_t) + Σ_ℓ (9 + varint(nnz_ℓₜ)
+///  + Σ varint(gaps) + quant_code_bytes(nnz_ℓₜ))]`
+///
+/// — one shared support plane per tensor where the v1 chain paid one
+/// per link per tensor. Requires [`chain_is_quantized`].
+///
+/// ```
+/// use efficientgrad::comm::wire::{merged_chain_bytes, QuantBits, QuantTensor, TensorUpdate};
+/// // one 64-element tensor, two links: survivors 0..10 and 5..15
+/// let mut a = vec![0.0f32; 64];
+/// let mut b = vec![0.0f32; 64];
+/// for i in 0..10 { a[i] = 1.0 + i as f32; }
+/// for i in 5..15 { b[i] = -(1.0 + i as f32); }
+/// let l1 = vec![TensorUpdate::Quantized(QuantTensor::encode(&a, QuantBits::Q8))];
+/// let l2 = vec![TensorUpdate::Quantized(QuantTensor::encode(&b, QuantBits::Q8))];
+/// // union = 0..15: RLE runs [0, 15, 49] → 3 B beats the 8 B raw bitmap.
+/// // each link: 9 B header + varint(10) + ten 1-B gaps + 3 code words
+/// assert_eq!(merged_chain_bytes(&[l1, l2]), 8 + (9 + 3) + (9 + 1 + 10 + 12) * 2);
+/// ```
+pub fn merged_chain_bytes(links: &[Vec<TensorUpdate>]) -> u64 {
+    debug_assert!(chain_is_quantized(links));
+    let mut bytes = CHAIN_HEADER_BYTES;
+    for t in 0..links[0].len() {
+        let union = chain_union_indices(links, t);
+        let elems = links[0][t].elems();
+        bytes += MERGED_TENSOR_HEADER_BYTES + support_bytes(elems, &union);
+        for us in links {
+            let TensorUpdate::Quantized(q) = &us[t] else {
+                unreachable!("chain_is_quantized checked")
+            };
+            bytes += MERGED_LINK_HEADER_BYTES + varint_len(q.nnz() as u64);
+            for_each_ordinal_gap(&union, &q.indices, |d| bytes += varint_len(d));
+            bytes += quant_code_bytes(q.nnz(), q.bits);
+        }
+    }
+    bytes
 }
 
 /// One full model exchange (uplink or downlink).
@@ -480,6 +1014,10 @@ impl ModelUpdate {
         match self {
             ModelUpdate::Dense(ts) => ts.iter().map(|t| dense_tensor_bytes(t.len())).sum(),
             ModelUpdate::Delta(us) => us.iter().map(TensorUpdate::wire_bytes).sum(),
+            // all-quantized chains (wire-quant on) take the merged v2
+            // encoding; everything else keeps the v1 per-link formula,
+            // so `--wire-quant off` ledgers are bit-for-bit legacy
+            ModelUpdate::Chain(links) if chain_is_quantized(links) => merged_chain_bytes(links),
             ModelUpdate::Chain(links) => chained_model_bytes(
                 links
                     .iter()
@@ -722,6 +1260,198 @@ mod tests {
         assert!(!ModelUpdate::Chain(vec![vec![TensorUpdate::Sign(sign)]]).all_finite());
         let dense = ModelUpdate::Dense(vec![Tensor::new(vec![2], vec![0.0, f32::NAN])]);
         assert!(!dense.all_finite());
+    }
+
+    #[test]
+    fn checked_elems_accepts_the_full_u32_range() {
+        assert_eq!(checked_elems(0), 0);
+        assert_eq!(checked_elems(42_000), 42_000);
+        assert_eq!(checked_elems(u32::MAX as usize), u32::MAX);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds the u32 wire index space")]
+    fn checked_elems_panics_past_u32() {
+        checked_elems(u32::MAX as usize + 1);
+    }
+
+    #[test]
+    fn quant_encode_decode_roundtrip_within_half_scale() {
+        let pruned = [0.0f32, 1.5, 0.0, -2.0, 0.0, 0.25, 3.75, 0.0];
+        for bits in [QuantBits::Q8, QuantBits::Q4] {
+            let t = QuantTensor::encode(&pruned, bits);
+            assert_eq!(t.elems, 8);
+            assert_eq!(t.indices, vec![1, 3, 5, 6]);
+            assert_eq!(t.zero, -2.0);
+            assert_eq!(t.scale, (3.75 - -2.0) / bits.levels() as f32);
+            let decoded = TensorUpdate::Quantized(t.clone()).decode_dense();
+            for (i, (&d, &p)) in decoded.iter().zip(&pruned).enumerate() {
+                if p == 0.0 {
+                    assert_eq!(d, 0.0, "non-survivor lane {i} touched");
+                } else {
+                    assert!(
+                        (d - p).abs() <= t.scale / 2.0 + 1e-6,
+                        "survivor {i}: {p} decoded {d}, scale {}",
+                        t.scale
+                    );
+                }
+            }
+            // min and max survivors land exactly on codes 0 / levels
+            assert_eq!(decoded[3], -2.0);
+            assert!((decoded[6] - 3.75).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn quant_constant_and_empty_survivors_are_exact() {
+        // all survivors equal: scale 0, every code 0, decode exact
+        let t = QuantTensor::encode(&[0.0f32, 0.5, 0.5, 0.0], QuantBits::Q4);
+        assert_eq!(t.scale, 0.0);
+        assert_eq!(t.zero, 0.5);
+        assert_eq!(
+            TensorUpdate::Quantized(t).decode_dense(),
+            vec![0.0, 0.5, 0.5, 0.0]
+        );
+        // no survivors at all
+        let e = QuantTensor::encode(&[0.0f32; 5], QuantBits::Q8);
+        assert_eq!(e.nnz(), 0);
+        assert_eq!(e.scale, 0.0);
+        assert_eq!(e.zero, 0.0);
+        assert_eq!(TensorUpdate::Quantized(e).decode_dense(), vec![0.0f32; 5]);
+    }
+
+    #[test]
+    fn quant_wire_bytes_match_documented_formula() {
+        // 70 elements, scattered survivors: raw bitmap support (RLE
+        // loses on scattered bits), 8-bit codes
+        let mut buf = vec![0.0f32; 70];
+        for i in (0..70).step_by(3) {
+            buf[i] = i as f32 + 1.0;
+        }
+        let t = QuantTensor::encode(&buf, QuantBits::Q8);
+        let nnz = t.nnz();
+        assert_eq!(nnz, 24);
+        assert!(!t.uses_rle(), "alternating support should keep raw bitmap");
+        assert_eq!(
+            t.wire_bytes(),
+            QUANT_TENSOR_HEADER_BYTES + raw_bitmap_bytes(70) + quant_code_bytes(nnz, QuantBits::Q8)
+        );
+        // one dense run: RLE wins and the flag flips
+        let mut run = vec![0.0f32; 1000];
+        for v in run.iter_mut().skip(100).take(200) {
+            *v = 1.0;
+        }
+        let r = QuantTensor::encode(&run, QuantBits::Q4);
+        assert!(r.uses_rle());
+        assert_eq!(
+            r.wire_bytes(),
+            QUANT_TENSOR_HEADER_BYTES
+                + rle_bytes_from_indices(1000, &r.indices)
+                + quant_code_bytes(200, QuantBits::Q4)
+        );
+        assert!(r.wire_bytes() < QUANT_TENSOR_HEADER_BYTES + raw_bitmap_bytes(1000));
+    }
+
+    #[test]
+    fn rle_roundtrips_and_matches_index_accounting() {
+        for len in [0usize, 1, 31, 32, 33, 63, 64, 65, 200] {
+            for pat in 0..4u32 {
+                let bitmap: Vec<u32> = (0..len.div_ceil(32))
+                    .map(|w| match pat {
+                        0 => 0,
+                        1 => u32::MAX,
+                        2 => 0x0F0F_0F0F,
+                        _ => (w as u32).wrapping_mul(0x9E37_79B9),
+                    })
+                    .collect();
+                // mask tail bits clear like every real presence plane
+                let mut bitmap = bitmap;
+                if len % 32 != 0 {
+                    if let Some(last) = bitmap.last_mut() {
+                        *last &= (1u32 << (len % 32)) - 1;
+                    }
+                }
+                let rle = bitmap_rle_encode(&bitmap, len);
+                assert_eq!(bitmap_rle_decode(&rle, len).unwrap(), bitmap, "len {len} pat {pat}");
+                let indices: Vec<u32> = (0..len as u32)
+                    .filter(|&i| bitmap[i as usize / 32] >> (i % 32) & 1 == 1)
+                    .collect();
+                assert_eq!(
+                    rle.len() as u64,
+                    rle_bytes_from_indices(len, &indices),
+                    "len {len} pat {pat}"
+                );
+                assert_eq!(presence_bitmap(len, &indices), bitmap);
+            }
+        }
+        // corrupt streams are rejected, not mis-decoded
+        assert!(bitmap_rle_decode(&[200, 1], 10).is_err()); // overruns
+        let good = bitmap_rle_encode(&[0b11], 2);
+        let mut trailing = good.clone();
+        trailing.push(0);
+        assert!(bitmap_rle_decode(&trailing, 2).is_err());
+    }
+
+    #[test]
+    fn merged_chain_wire_bytes_and_quantized_detection() {
+        let mut a = vec![0.0f32; 64];
+        let mut b = vec![0.0f32; 64];
+        for i in 0..10 {
+            a[i] = 1.0 + i as f32;
+        }
+        for i in 5..15 {
+            b[i] = -(1.0 + i as f32);
+        }
+        let l1 = vec![TensorUpdate::Quantized(QuantTensor::encode(&a, QuantBits::Q8))];
+        let l2 = vec![TensorUpdate::Quantized(QuantTensor::encode(&b, QuantBits::Q8))];
+        assert!(chain_is_quantized(&[l1.clone(), l2.clone()]));
+        assert_eq!(chain_union_indices(&[l1.clone(), l2.clone()], 0), (0u32..15).collect::<Vec<_>>());
+        let chain = ModelUpdate::Chain(vec![l1.clone(), l2.clone()]);
+        assert_eq!(chain.wire_bytes(), merged_chain_bytes(&[l1.clone(), l2]));
+        // a merged chain always beats the legacy f32 per-link encoding
+        let s1 = vec![TensorUpdate::Sparse(SparseTensor::encode(&a))];
+        let s2 = vec![TensorUpdate::Sparse(SparseTensor::encode(&b))];
+        let legacy = ModelUpdate::Chain(vec![s1, s2]);
+        assert!(!chain_is_quantized(match &legacy {
+            ModelUpdate::Chain(ls) => ls,
+            _ => unreachable!(),
+        }));
+        assert!(chain.wire_bytes() < legacy.wire_bytes());
+        // mixed chains fall back to the v1 per-link formula
+        let mixed = vec![
+            vec![TensorUpdate::Quantized(QuantTensor::encode(&a, QuantBits::Q8))],
+            vec![TensorUpdate::Sparse(SparseTensor::encode(&b))],
+        ];
+        assert!(!chain_is_quantized(&mixed));
+        // a single quantized link stays v1 too: its bitmap already codes
+        // the support, so the ordinal plane would only add bytes
+        assert!(!chain_is_quantized(&[l1.clone()]));
+        assert_eq!(
+            ModelUpdate::Chain(vec![l1.clone()]).wire_bytes(),
+            chained_model_bytes([l1.iter().map(TensorUpdate::wire_bytes).sum()].into_iter())
+        );
+        let mu = ModelUpdate::Chain(mixed.clone());
+        assert_eq!(
+            mu.wire_bytes(),
+            chained_model_bytes(mixed.iter().map(|us| us.iter().map(TensorUpdate::wire_bytes).sum()))
+        );
+    }
+
+    #[test]
+    fn ordinal_gaps_rebuild_link_support() {
+        let union = vec![2u32, 5, 9, 10, 11, 40];
+        let link = vec![5u32, 10, 11, 40];
+        let mut gaps = Vec::new();
+        for_each_ordinal_gap(&union, &link, |d| gaps.push(d));
+        assert_eq!(gaps, vec![1, 2, 1, 1]);
+        // replaying the gaps through the union recovers the link exactly
+        let mut ord = 0u64;
+        let mut rebuilt = Vec::new();
+        for (k, &d) in gaps.iter().enumerate() {
+            ord = if k == 0 { d } else { ord + d };
+            rebuilt.push(union[ord as usize]);
+        }
+        assert_eq!(rebuilt, link);
     }
 
     #[test]

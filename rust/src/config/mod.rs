@@ -274,6 +274,50 @@ impl CommPruner {
     }
 }
 
+/// v2 wire quantization of `pruned`-mode survivor values
+/// (`federated.wire_quant` / `--wire-quant`): affine int8/int4 codes with
+/// the dequantization error folded into the codec's error-feedback
+/// residual. `off` keeps the legacy f32 values bit-for-bit; ignored by
+/// `comm = dense` and `comm = sign` (sign already ships ~1 bit/survivor).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum WireQuant {
+    /// legacy f32 survivor values — bit-for-bit the v1 wire
+    #[default]
+    Off,
+    /// 8-bit affine codes: ≈4× smaller values plane, error ≤ range/510
+    Q8,
+    /// 4-bit affine codes: ≈8× smaller values plane, error ≤ range/30
+    Q4,
+}
+
+impl WireQuant {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "off" => Ok(Self::Off),
+            "q8" | "int8" => Ok(Self::Q8),
+            "q4" | "int4" => Ok(Self::Q4),
+            other => bail!("unknown wire quant {other:?} (want off|q8|q4)"),
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Self::Off => "off",
+            Self::Q8 => "q8",
+            Self::Q4 => "q4",
+        }
+    }
+
+    /// The wire code width, `None` when quantization is off.
+    pub fn to_bits(self) -> Option<crate::comm::wire::QuantBits> {
+        match self {
+            Self::Off => None,
+            Self::Q8 => Some(crate::comm::wire::QuantBits::Q8),
+            Self::Q4 => Some(crate::comm::wire::QuantBits::Q4),
+        }
+    }
+}
+
 /// Training hyperparameters (defaults match the paper's CIFAR recipe,
 /// scaled to the synthetic workload).
 #[derive(Clone, Debug)]
@@ -416,6 +460,11 @@ pub struct FedConfig {
     /// survivor selection for the compressed comm modes
     /// (`federated.comm_pruner` / `--comm-pruner`)
     pub comm_pruner: CommPruner,
+    /// v2 wire quantization of `pruned`-mode survivor values
+    /// (`federated.wire_quant` / `--wire-quant`): `off` keeps the legacy
+    /// f32 values bit-for-bit, `q8`/`q4` ship affine codes with the
+    /// quantization error absorbed by the error-feedback residual
+    pub wire_quant: WireQuant,
     /// aggregation quorum (`federated.quorum` / `--quorum`, in (0, 1]):
     /// the leader folds round r as soon as `⌈quorum·dispatched⌉` reports
     /// have arrived and dispatches round r+1 against the new version
@@ -511,6 +560,7 @@ impl Default for FedConfig {
             // point as the gradient pruning
             comm_rate: 0.9,
             comm_pruner: CommPruner::default(),
+            wire_quant: WireQuant::default(),
             quorum: 1.0,
             // a late report one version old still carries half a fresh
             // report's weight; only consulted when quorum < 1.0
@@ -560,6 +610,13 @@ impl FedConfig {
                 .transpose()
                 .context("federated.comm_pruner")?
                 .unwrap_or(d.comm_pruner),
+            wire_quant: t
+                .get("federated.wire_quant")
+                .and_then(Value::as_str)
+                .map(WireQuant::parse)
+                .transpose()
+                .context("federated.wire_quant")?
+                .unwrap_or(d.wire_quant),
             quorum: t.f64_or("federated.quorum", d.quorum),
             staleness_decay: t.f64_or("federated.staleness_decay", d.staleness_decay),
             pipeline_depth: t.usize_or("federated.pipeline_depth", d.pipeline_depth),
@@ -795,6 +852,26 @@ mod tests {
         }
         assert_eq!(CommPruner::parse("top-k").unwrap(), CommPruner::TopK);
         assert_eq!(CommPruner::TopK.as_str(), "topk");
+    }
+
+    #[test]
+    fn wire_quant_parsing() {
+        // unset: the legacy f32 wire, bit-for-bit
+        let c = FedConfig::from_table(&Table::default()).unwrap();
+        assert_eq!(c.wire_quant, WireQuant::Off);
+        assert!(c.wire_quant.to_bits().is_none());
+        let t = Table::parse("[federated]\ncomm = \"pruned\"\nwire_quant = \"q8\"").unwrap();
+        let c = FedConfig::from_table(&t).unwrap();
+        assert_eq!(c.wire_quant, WireQuant::Q8);
+        assert_eq!(c.wire_quant.to_bits(), Some(crate::comm::wire::QuantBits::Q8));
+        let t = Table::parse("[federated]\nwire_quant = \"int4\"").unwrap();
+        assert_eq!(FedConfig::from_table(&t).unwrap().wire_quant, WireQuant::Q4);
+        // unknown width errors, not silently off — a wrong wire_quant
+        // would invalidate every byte row downstream
+        let t = Table::parse("[federated]\nwire_quant = \"q2\"").unwrap();
+        assert!(FedConfig::from_table(&t).is_err());
+        assert_eq!(WireQuant::parse("int8").unwrap(), WireQuant::Q8);
+        assert_eq!(WireQuant::Q4.as_str(), "q4");
     }
 
     #[test]

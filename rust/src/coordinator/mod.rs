@@ -801,6 +801,7 @@ impl Leader {
                                 mode: cfg.comm,
                                 rate: cfg.comm_rate,
                                 pruner: cfg.comm_pruner,
+                                quant: cfg.wire_quant,
                             },
                             cfg.faults.clone(),
                         )
@@ -818,11 +819,10 @@ impl Leader {
         let mut this = Self {
             ring: VersionRing::new(ring_cap, global.params.clone()),
             worker_version: vec![None; cfg.workers],
-            down_codec: Some(DeltaCodec::with_pruner(
-                cfg.comm,
-                cfg.comm_rate,
-                cfg.comm_pruner,
-            )),
+            down_codec: Some(
+                DeltaCodec::with_pruner(cfg.comm, cfg.comm_rate, cfg.comm_pruner)
+                    .with_quant(cfg.wire_quant),
+            ),
             cfg,
             global,
             transport,
@@ -1780,6 +1780,7 @@ pub fn spawn_edge_worker(manifest: &Manifest, cfg: &FedConfig, id: usize) -> Res
             mode: cfg.comm,
             rate: cfg.comm_rate,
             pruner: cfg.comm_pruner,
+            quant: cfg.wire_quant,
         },
         cfg.faults.clone(),
     )

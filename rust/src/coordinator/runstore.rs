@@ -102,6 +102,7 @@ pub fn config_hash(cfg: &FedConfig) -> u64 {
     let canon = format!(
         "workers={} rounds={} local_steps={} iid={} straggler_prob={} \
          straggler_slowdown={} dropout_prob={} comm={:?} comm_rate={} comm_pruner={:?} \
+         wire_quant={:?} \
          quorum={} staleness_decay={} pipeline_depth={} max_chain={} sample_m={} \
          aggregators={} model={} mode={:?} \
          lr={} momentum={} seed={} train_examples={} test_examples={} difficulty={} \
@@ -116,6 +117,7 @@ pub fn config_hash(cfg: &FedConfig) -> u64 {
         cfg.comm,
         cfg.comm_rate,
         cfg.comm_pruner,
+        cfg.wire_quant,
         cfg.quorum,
         cfg.staleness_decay,
         cfg.pipeline_depth,
@@ -678,8 +680,13 @@ mod tests {
         let mut sampled = base.clone();
         sampled.sample_m = 2;
         assert_ne!(h, config_hash(&sampled));
-        let mut tiered = base;
+        let mut tiered = base.clone();
         tiered.aggregators = 2;
         assert_ne!(h, config_hash(&tiered));
+        // wire quantization changes every decoded value — trajectory-
+        // affecting, so it must fork the hash
+        let mut quantized = base;
+        quantized.wire_quant = crate::config::WireQuant::Q8;
+        assert_ne!(h, config_hash(&quantized));
     }
 }

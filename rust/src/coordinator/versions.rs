@@ -229,6 +229,68 @@ mod tests {
     }
 
     #[test]
+    fn quantized_chain_replays_bit_identically_and_ships_merged_bytes() {
+        // same pin as above, but the retained deltas are v2 Quantized
+        // tensors: chain_from must (a) replay to exactly the head params
+        // — apply is still link-by-link, merging is a wire encoding only
+        // — and (b) account wire bytes by the merged-chain formula,
+        // which undercuts the legacy f32-sparse chain PR 9 shipped
+        use crate::comm::wire::{merged_chain_bytes, sparse_tensor_bytes, QuantBits, QuantTensor};
+        let qdelta = |v: &[f32]| {
+            vec![TensorUpdate::Quantized(QuantTensor::encode(v, QuantBits::Q8))]
+        };
+        let mut ring = VersionRing::new(4, vec![Tensor::zeros(&[64])]);
+        for i in 0..3 {
+            let mut dense = vec![0.0f32; 64];
+            // overlapping supports so the merged union is non-trivial
+            for j in (i * 8)..(i * 8 + 24) {
+                dense[j] = (j as f32 - 12.0) * 0.25;
+            }
+            let d = qdelta(&dense);
+            let mut params = ring.head().params.clone();
+            ModelUpdate::Chain(vec![d.clone()]).apply(&mut params).unwrap();
+            ring.push(params, Some(d));
+        }
+        for k in 1..=3u64 {
+            let base = ring.head_version() - k;
+            let mut replica = ring.get(base).unwrap().params.clone();
+            let chain = ring.chain_from(base).unwrap();
+            let ModelUpdate::Chain(links) = &chain else { panic!() };
+            let per_link_v1 = chained_model_bytes(
+                links.iter().map(|l| l.iter().map(|u| u.wire_bytes()).sum()),
+            );
+            if k >= 2 {
+                // the merge needs ≥ 2 links to amortize the shared
+                // support; a single link rides the v1 record
+                assert_eq!(chain.wire_bytes(), merged_chain_bytes(links), "k={k}");
+            } else {
+                assert_eq!(chain.wire_bytes(), per_link_v1, "k={k}");
+            }
+            // every k undercuts what the legacy f32-sparse chain would
+            // have shipped for the same survivors (8 B each + support)
+            let legacy = chained_model_bytes(links.iter().map(|l| {
+                l.iter()
+                    .map(|u| {
+                        let TensorUpdate::Quantized(q) = u else { panic!() };
+                        sparse_tensor_bytes(q.nnz())
+                    })
+                    .sum()
+            }));
+            assert!(
+                chain.wire_bytes() < legacy,
+                "k={k}: quantized chain {} >= legacy f32 chain {legacy}",
+                chain.wire_bytes()
+            );
+            chain.apply(&mut replica).unwrap();
+            assert_eq!(
+                replica,
+                ring.head().params,
+                "k={k}: quantized chain replay diverged"
+            );
+        }
+    }
+
+    #[test]
     fn iter_and_from_versions_roundtrip_the_window() {
         let ring = ring_with(4, 3);
         let persisted: Vec<ModelVersion> = ring.iter().cloned().collect();

@@ -49,7 +49,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::comm::envelope::{decode_update, read_update, write_update, ByteReader, ByteWriter};
 use crate::comm::{DeltaCodec, Frame, FrameKind, ModelUpdate};
-use crate::config::{CommMode, CommPruner, TrainConfig};
+use crate::config::{CommMode, CommPruner, TrainConfig, WireQuant};
 use crate::data::batcher::Prefetcher;
 use crate::data::Dataset;
 use crate::faults::{FaultPlan, WireFault};
@@ -66,6 +66,9 @@ pub struct CommSetup {
     pub mode: CommMode,
     pub rate: f64,
     pub pruner: CommPruner,
+    /// v2 survivor-value quantization (`federated.wire_quant`); `Off`
+    /// keeps the legacy f32 wire bit-for-bit
+    pub quant: WireQuant,
 }
 
 /// One round's work order.
@@ -285,7 +288,8 @@ impl WorkerHandle {
                 // leader's reference replica), plus the uplink codec with
                 // its error-feedback residual
                 let mut reference: Vec<Tensor> = Vec::new();
-                let mut codec = DeltaCodec::with_pruner(comm.mode, comm.rate, comm.pruner);
+                let mut codec = DeltaCodec::with_pruner(comm.mode, comm.rate, comm.pruner)
+                    .with_quant(comm.quant);
                 let uplink_rng = Rng::new(cfg.seed ^ 0x5EED_C0DE).fold_in(id as u64);
                 // an absent plan is the all-zero plan: decisions are
                 // pure functions of (site, round, worker), so the zero
@@ -701,7 +705,8 @@ impl LiteWorker {
         Self {
             id,
             reference: std::sync::Arc::new(Vec::new()),
-            codec: DeltaCodec::with_pruner(comm.mode, comm.rate, comm.pruner),
+            codec: DeltaCodec::with_pruner(comm.mode, comm.rate, comm.pruner)
+                .with_quant(comm.quant),
             rate: comm.rate,
             batches_drawn: 0,
             uplink_rng: Rng::new(seed ^ 0x5EED_C0DE).fold_in(id as u64),
@@ -912,6 +917,7 @@ mod tests {
             mode: CommMode::Pruned,
             rate: 0.3,
             pruner: CommPruner::Stochastic,
+            quant: WireQuant::Off,
         }
     }
 

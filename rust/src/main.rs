@@ -189,6 +189,7 @@ fn federated_flags() -> Vec<FlagSpec> {
         FlagSpec { name: "comm", help: "network-tier encoding (dense|pruned|sign)", takes_value: true, default: None },
         FlagSpec { name: "comm-rate", help: "comm pruning rate P (pruned|sign modes)", takes_value: true, default: None },
         FlagSpec { name: "comm-pruner", help: "delta survivor selection (stochastic|topk)", takes_value: true, default: None },
+        FlagSpec { name: "wire-quant", help: "v2 wire quantization of pruned-mode survivor values (off|q8|q4); error feedback absorbs the quantization error", takes_value: true, default: None },
         FlagSpec { name: "quorum", help: "fold a round once this fraction of dispatched reports arrived (1.0 = full barrier); stragglers fold late with a staleness discount", takes_value: true, default: None },
         FlagSpec { name: "staleness-decay", help: "late-report weight decay λ (weight = examples·λ^k, k = versions behind; 0 discards)", takes_value: true, default: None },
         FlagSpec { name: "pipeline-depth", help: "max rounds in flight under a quorum (bounds late-report staleness)", takes_value: true, default: None },
@@ -237,6 +238,9 @@ fn apply_federated_overrides(args: &Args, cfg: &mut FedConfig) -> Result<()> {
     }
     if let Some(v) = args.get_choice("comm-pruner", &["stochastic", "topk", "top-k"])? {
         cfg.comm_pruner = efficientgrad::config::CommPruner::parse(v)?;
+    }
+    if let Some(v) = args.get_choice("wire-quant", &["off", "q8", "q4", "int8", "int4"])? {
+        cfg.wire_quant = efficientgrad::config::WireQuant::parse(v)?;
     }
     if let Some(v) = args.get_f64("quorum")? {
         cfg.quorum = v;

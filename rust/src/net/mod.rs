@@ -144,7 +144,7 @@ mod tests {
     use super::*;
     use crate::comm::envelope::encode_update;
     use crate::comm::{Frame, FrameKind, ModelUpdate};
-    use crate::config::{CommMode, CommPruner};
+    use crate::config::{CommMode, CommPruner, WireQuant};
     use crate::coordinator::{CommSetup, LiteWorker};
     use crate::tensor::Tensor;
 
@@ -153,6 +153,7 @@ mod tests {
             mode: CommMode::Pruned,
             rate: 0.3,
             pruner: CommPruner::Stochastic,
+            quant: WireQuant::Off,
         };
         InProcess::new((0..n).map(|i| LiteWorker::new(i, 7, setup)).collect())
     }

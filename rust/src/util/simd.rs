@@ -335,6 +335,143 @@ fn abs_sum_striped_scalar(xs: &[f32]) -> f64 {
 }
 
 // ---------------------------------------------------------------------------
+// Affine quantize kernels (the v2 wire, `comm::wire::QuantTensor`). Contract:
+// `values` are survivor values — finite and nonzero by construction (they
+// came through the prune threshold), with `zero = min` and
+// `scale = (max−min)/levels` computed by `minmax` below. Bit parity holds
+// because every float op both paths perform — sub, div, add, floor, mul — is
+// exactly rounded IEEE (no FMA, no reciprocal-multiply), and the
+// out-of-range clamps agree on everything the contract admits.
+// ---------------------------------------------------------------------------
+
+/// (min, max) over `values`; `(0.0, 0.0)` when empty. Exact — the min of a
+/// finite multiset is order-independent, so the 8-lane tree reduction and
+/// the scalar fold produce the same bits.
+pub fn minmax(values: &[f32]) -> (f32, f32) {
+    if values.is_empty() {
+        return (0.0, 0.0);
+    }
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if active() {
+        // SAFETY: active() verified avx2/bmi2/popcnt support.
+        return unsafe { x86::minmax_avx2(values) };
+    }
+    minmax_scalar(values)
+}
+
+fn minmax_scalar(values: &[f32]) -> (f32, f32) {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &v in values {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    (lo, hi)
+}
+
+/// The normative per-survivor code: `⌊(v − zero)/scale + 0.5⌋` clamped to
+/// `0..=levels`. `floor(x + 0.5)`, *not* `round(x)` — scalar `round` is
+/// half-away-from-zero while the vector rounding mode is nearest-even; the
+/// add-then-floor form uses only exactly-rounded ops so both paths agree.
+/// The `as u32` cast saturates (negatives and NaN to 0), matching the
+/// vector clamp on every in-contract input.
+#[inline]
+fn quant_code(v: f32, zero: f32, scale: f32, levels: u32) -> u32 {
+    (((v - zero) / scale + 0.5).floor() as u32).min(levels)
+}
+
+/// Quantize survivor values to packed 8-bit codes, 4 per u32 word
+/// (little-endian within the word), into `out` (cleared first).
+pub fn quantize_q8_into(values: &[f32], zero: f32, scale: f32, out: &mut Vec<u32>) {
+    out.clear();
+    out.resize(values.len().div_ceil(4), 0);
+    if scale == 0.0 {
+        // constant or empty survivors: every code is 0 by definition
+        // (division by a zero scale is undefined on both paths)
+        return;
+    }
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if active() {
+        // SAFETY: active() verified avx2/bmi2/popcnt support.
+        unsafe { x86::quantize_q8_avx2(values, zero, scale, out) };
+        return;
+    }
+    quantize_q8_scalar(values, zero, scale, out)
+}
+
+fn quantize_q8_scalar(values: &[f32], zero: f32, scale: f32, out: &mut [u32]) {
+    for (j, &v) in values.iter().enumerate() {
+        out[j / 4] |= quant_code(v, zero, scale, 255) << ((j % 4) * 8);
+    }
+}
+
+/// Quantize survivor values to packed 4-bit codes, 8 per u32 word
+/// (little-endian within the word), into `out` (cleared first).
+pub fn quantize_q4_into(values: &[f32], zero: f32, scale: f32, out: &mut Vec<u32>) {
+    out.clear();
+    out.resize(values.len().div_ceil(8), 0);
+    if scale == 0.0 {
+        return;
+    }
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if active() {
+        // SAFETY: active() verified avx2/bmi2/popcnt support.
+        unsafe { x86::quantize_q4_avx2(values, zero, scale, out) };
+        return;
+    }
+    quantize_q4_scalar(values, zero, scale, out)
+}
+
+fn quantize_q4_scalar(values: &[f32], zero: f32, scale: f32, out: &mut [u32]) {
+    for (j, &v) in values.iter().enumerate() {
+        out[j / 8] |= quant_code(v, zero, scale, 15) << ((j % 8) * 4);
+    }
+}
+
+/// Dequantize `nnz` packed 8-bit codes into survivor values
+/// (`zero + scale·q`, mul then add — never FMA), into `out` (cleared
+/// first). Panics if `codes` is shorter than `nnz` requires.
+pub fn dequantize_q8_into(codes: &[u32], nnz: usize, zero: f32, scale: f32, out: &mut Vec<f32>) {
+    out.clear();
+    out.resize(nnz, 0.0);
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if active() {
+        // SAFETY: active() verified avx2/bmi2/popcnt support.
+        unsafe { x86::dequantize_q8_avx2(codes, zero, scale, out) };
+        return;
+    }
+    dequantize_q8_scalar(codes, zero, scale, out)
+}
+
+fn dequantize_q8_scalar(codes: &[u32], zero: f32, scale: f32, out: &mut [f32]) {
+    for (j, o) in out.iter_mut().enumerate() {
+        let q = (codes[j / 4] >> ((j % 4) * 8)) & 0xFF;
+        *o = zero + scale * q as f32;
+    }
+}
+
+/// Dequantize `nnz` packed 4-bit codes into survivor values, into `out`
+/// (cleared first).
+pub fn dequantize_q4_into(codes: &[u32], nnz: usize, zero: f32, scale: f32, out: &mut Vec<f32>) {
+    out.clear();
+    out.resize(nnz, 0.0);
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if active() {
+        // SAFETY: active() verified avx2/bmi2/popcnt support.
+        unsafe { x86::dequantize_q4_avx2(codes, zero, scale, out) };
+        return;
+    }
+    dequantize_q4_scalar(codes, zero, scale, out)
+}
+
+fn dequantize_q4_scalar(codes: &[u32], zero: f32, scale: f32, out: &mut [f32]) {
+    for (j, o) in out.iter_mut().enumerate() {
+        let q = (codes[j / 8] >> ((j % 8) * 4)) & 0xF;
+        *o = zero + scale * q as f32;
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Vector-only entry points (cfg-gated). Callers gate on `active()`; the
 // scalar oracles for these kernels live at their call sites (`sparsity` for
 // the eq. 3 loop, `comm::wire` for the bit-plane codec) so the normative
@@ -994,6 +1131,164 @@ mod x86 {
             }
         }
     }
+
+    #[target_feature(enable = "avx2,bmi2,popcnt")]
+    pub(super) unsafe fn minmax_avx2(xs: &[f32]) -> (f32, f32) {
+        let n = xs.len();
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        let mut i = 0;
+        if n >= 8 {
+            let mut lov = _mm256_set1_ps(f32::INFINITY);
+            let mut hiv = _mm256_set1_ps(f32::NEG_INFINITY);
+            while i + 8 <= n {
+                let v = _mm256_loadu_ps(xs.as_ptr().add(i));
+                lov = _mm256_min_ps(lov, v);
+                hiv = _mm256_max_ps(hiv, v);
+                i += 8;
+            }
+            let mut lanes = [0.0f32; 8];
+            _mm256_storeu_ps(lanes.as_mut_ptr(), lov);
+            for &l in &lanes {
+                lo = lo.min(l);
+            }
+            _mm256_storeu_ps(lanes.as_mut_ptr(), hiv);
+            for &l in &lanes {
+                hi = hi.max(l);
+            }
+        }
+        while i < n {
+            let v = *xs.get_unchecked(i);
+            lo = lo.min(v);
+            hi = hi.max(v);
+            i += 1;
+        }
+        (lo, hi)
+    }
+
+    /// 8 clamped i32 codes → one byte each, at byte 0..4 of each 128-bit
+    /// lane; the two extracted dwords are the packed little-endian bytes of
+    /// lanes 0–3 and 4–7.
+    #[inline]
+    #[target_feature(enable = "avx2,bmi2,popcnt")]
+    unsafe fn pack8_codes(qi: __m256i) -> (u32, u32) {
+        let shuf = _mm256_setr_epi8(
+            0, 4, 8, 12, -1, -1, -1, -1, -1, -1, -1, -1, -1, -1, -1, -1, //
+            0, 4, 8, 12, -1, -1, -1, -1, -1, -1, -1, -1, -1, -1, -1, -1,
+        );
+        let packed = _mm256_shuffle_epi8(qi, shuf);
+        (
+            _mm256_extract_epi32::<0>(packed) as u32,
+            _mm256_extract_epi32::<4>(packed) as u32,
+        )
+    }
+
+    /// The vector twin of `quant_code`: sub, div, add, floor — each exactly
+    /// rounded — then truncate-to-i32 and clamp. Post-floor the value is an
+    /// integer, so truncation is exact; NaN converts to i32::MIN and clamps
+    /// to 0, same as the scalar saturating cast.
+    #[inline]
+    #[target_feature(enable = "avx2,bmi2,popcnt")]
+    unsafe fn quant_codes8(v: __m256, zv: __m256, sv: __m256, half: __m256, top: __m256i) -> __m256i {
+        let q = _mm256_floor_ps(_mm256_add_ps(_mm256_div_ps(_mm256_sub_ps(v, zv), sv), half));
+        let qi = _mm256_cvttps_epi32(q);
+        _mm256_min_epi32(_mm256_max_epi32(qi, _mm256_setzero_si256()), top)
+    }
+
+    #[target_feature(enable = "avx2,bmi2,popcnt")]
+    pub(super) unsafe fn quantize_q8_avx2(values: &[f32], zero: f32, scale: f32, out: &mut [u32]) {
+        let n = values.len();
+        let zv = _mm256_set1_ps(zero);
+        let sv = _mm256_set1_ps(scale);
+        let half = _mm256_set1_ps(0.5);
+        let top = _mm256_set1_epi32(255);
+        let mut i = 0;
+        while i + 8 <= n {
+            let v = _mm256_loadu_ps(values.as_ptr().add(i));
+            let (w0, w1) = pack8_codes(quant_codes8(v, zv, sv, half, top));
+            // i is 8-aligned, so these two words are wholly owned by this
+            // iteration and still hold their initial 0
+            out[i / 4] = w0;
+            out[i / 4 + 1] = w1;
+            i += 8;
+        }
+        while i < n {
+            let q = (((*values.get_unchecked(i) - zero) / scale + 0.5).floor() as u32).min(255);
+            out[i / 4] |= q << ((i % 4) * 8);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2,bmi2,popcnt")]
+    pub(super) unsafe fn quantize_q4_avx2(values: &[f32], zero: f32, scale: f32, out: &mut [u32]) {
+        let n = values.len();
+        let zv = _mm256_set1_ps(zero);
+        let sv = _mm256_set1_ps(scale);
+        let half = _mm256_set1_ps(0.5);
+        let top = _mm256_set1_epi32(15);
+        let mut i = 0;
+        while i + 8 <= n {
+            let v = _mm256_loadu_ps(values.as_ptr().add(i));
+            let (w0, w1) = pack8_codes(quant_codes8(v, zv, sv, half, top));
+            // each byte holds a 0..=15 code; pext compacts the 8 low
+            // nibbles of the byte pair into one u32 word
+            out[i / 8] = _pext_u64(w0 as u64 | ((w1 as u64) << 32), 0x0F0F_0F0F_0F0F_0F0F) as u32;
+            i += 8;
+        }
+        while i < n {
+            let q = (((*values.get_unchecked(i) - zero) / scale + 0.5).floor() as u32).min(15);
+            out[i / 8] |= q << ((i % 8) * 4);
+            i += 1;
+        }
+    }
+
+    /// 8 little-endian code bytes (as a u64) → `zero + scale·q` into
+    /// `out[j..j+8]`. Mul then add — same two rounded ops as the scalar
+    /// dequantizer.
+    #[inline]
+    #[target_feature(enable = "avx2,bmi2,popcnt")]
+    unsafe fn dequant8(bytes: u64, zv: __m256, sv: __m256, dst: *mut f32) {
+        let qi = _mm256_cvtepu8_epi32(_mm_cvtsi64_si128(bytes as i64));
+        let qf = _mm256_cvtepi32_ps(qi);
+        _mm256_storeu_ps(dst, _mm256_add_ps(zv, _mm256_mul_ps(sv, qf)));
+    }
+
+    #[target_feature(enable = "avx2,bmi2,popcnt")]
+    pub(super) unsafe fn dequantize_q8_avx2(codes: &[u32], zero: f32, scale: f32, out: &mut [f32]) {
+        let nnz = out.len();
+        let zv = _mm256_set1_ps(zero);
+        let sv = _mm256_set1_ps(scale);
+        let mut j = 0;
+        while j + 8 <= nnz {
+            let bytes = codes[j / 4] as u64 | ((codes[j / 4 + 1] as u64) << 32);
+            dequant8(bytes, zv, sv, out.as_mut_ptr().add(j));
+            j += 8;
+        }
+        while j < nnz {
+            let q = (codes[j / 4] >> ((j % 4) * 8)) & 0xFF;
+            *out.get_unchecked_mut(j) = zero + scale * q as f32;
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2,bmi2,popcnt")]
+    pub(super) unsafe fn dequantize_q4_avx2(codes: &[u32], zero: f32, scale: f32, out: &mut [f32]) {
+        let nnz = out.len();
+        let zv = _mm256_set1_ps(zero);
+        let sv = _mm256_set1_ps(scale);
+        let mut j = 0;
+        while j + 8 <= nnz {
+            // pdep spreads the word's 8 nibbles into 8 byte lanes
+            let bytes = _pdep_u64(codes[j / 8] as u64, 0x0F0F_0F0F_0F0F_0F0F);
+            dequant8(bytes, zv, sv, out.as_mut_ptr().add(j));
+            j += 8;
+        }
+        while j < nnz {
+            let q = (codes[j / 8] >> ((j % 8) * 4)) & 0xF;
+            *out.get_unchecked_mut(j) = zero + scale * q as f32;
+            j += 1;
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -1247,6 +1542,72 @@ mod tests {
                 let up = TensorUpdate::Sign(t);
                 let dense = up.decode_dense();
                 assert_eq!(bits(&dense), bits(&dec_s), "decode_dense n={n}");
+            }
+        }
+
+        #[test]
+        fn vector_quantize_kernels_bit_match_scalar() {
+            if !available() {
+                eprintln!("SKIP: cpu lacks avx2/bmi2/popcnt");
+                return;
+            }
+            // in-contract data: finite survivor values with zero/scale
+            // derived exactly as QuantTensor::from_survivors derives them
+            // (survivors are never NaN/±0.0 by construction — see the
+            // kernel contract at the top of the quantize section)
+            for &n in LENS {
+                let mut rng = Rng::new(n as u64 + 0x0DA7);
+                let values: Vec<f32> = (0..n)
+                    .map(|i| match i % 11 {
+                        0 => 1.0e-4,
+                        3 => -7.5,
+                        6 => 1.0e3,
+                        _ => rng.uniform_in(-4.0, 4.0) as f32,
+                    })
+                    .collect();
+
+                let (lo_s, hi_s) = minmax_scalar(&values);
+                if n > 0 {
+                    let (lo_v, hi_v) = unsafe { x86::minmax_avx2(&values) };
+                    assert_eq!(lo_s.to_bits(), lo_v.to_bits(), "min n={n}");
+                    assert_eq!(hi_s.to_bits(), hi_v.to_bits(), "max n={n}");
+                }
+
+                for levels in [255u32, 15] {
+                    let scale = if hi_s > lo_s {
+                        (hi_s - lo_s) / levels as f32
+                    } else {
+                        0.0
+                    };
+                    if scale == 0.0 {
+                        continue; // the wrapper's early-out, identical by construction
+                    }
+                    if levels == 255 {
+                        let mut cs = vec![0u32; n.div_ceil(4)];
+                        quantize_q8_scalar(&values, lo_s, scale, &mut cs);
+                        let mut cv = vec![0u32; n.div_ceil(4)];
+                        unsafe { x86::quantize_q8_avx2(&values, lo_s, scale, &mut cv) };
+                        assert_eq!(cs, cv, "q8 codes n={n}");
+
+                        let mut ds = vec![0.0f32; n];
+                        dequantize_q8_scalar(&cs, lo_s, scale, &mut ds);
+                        let mut dv = vec![0.0f32; n];
+                        unsafe { x86::dequantize_q8_avx2(&cs, lo_s, scale, &mut dv) };
+                        assert_eq!(bits(&ds), bits(&dv), "q8 dequant n={n}");
+                    } else {
+                        let mut cs = vec![0u32; n.div_ceil(8)];
+                        quantize_q4_scalar(&values, lo_s, scale, &mut cs);
+                        let mut cv = vec![0u32; n.div_ceil(8)];
+                        unsafe { x86::quantize_q4_avx2(&values, lo_s, scale, &mut cv) };
+                        assert_eq!(cs, cv, "q4 codes n={n}");
+
+                        let mut ds = vec![0.0f32; n];
+                        dequantize_q4_scalar(&cs, lo_s, scale, &mut ds);
+                        let mut dv = vec![0.0f32; n];
+                        unsafe { x86::dequantize_q4_avx2(&cs, lo_s, scale, &mut dv) };
+                        assert_eq!(bits(&ds), bits(&dv), "q4 dequant n={n}");
+                    }
+                }
             }
         }
     }

@@ -3,10 +3,15 @@
 //! exchange track the dense exchange. Pure host math — runs everywhere,
 //! no artifacts needed.
 
+use efficientgrad::comm::envelope::{decode_update, encode_update};
 use efficientgrad::comm::wire::{
-    dense_tensor_bytes, sign_tensor_bytes, sparse_tensor_bytes, SPARSE_TENSOR_HEADER_BYTES,
+    bitmap_rle_decode, bitmap_rle_encode, dense_tensor_bytes, presence_bitmap, quantized_tensor_bytes,
+    rle_decode_indices, sign_tensor_bytes, sparse_tensor_bytes, support_bytes,
+    SPARSE_TENSOR_HEADER_BYTES,
 };
-use efficientgrad::comm::{DeltaCodec, ModelUpdate, SignTensor, SparseTensor, TensorUpdate};
+use efficientgrad::comm::{
+    DeltaCodec, ModelUpdate, QuantBits, QuantTensor, SignTensor, SparseTensor, TensorUpdate,
+};
 use efficientgrad::config::CommMode;
 use efficientgrad::tensor::Tensor;
 use efficientgrad::testing::{for_all, for_all2, F64In, NormalVec, UsizeIn};
@@ -212,6 +217,130 @@ fn sign_mode_hits_the_ten_x_wire_cut_at_paper_p() {
     assert!(dense_tensor_bytes(n) / sign_tensor_bytes(n, nnz) >= 10);
     // the index+value format is bounded by its 8-byte survivors instead
     assert!(sparse_tensor_bytes(nnz) < dense_tensor_bytes(n));
+}
+
+// ---------------------------------------------------------------------------
+// wire v2: quantized survivors, RLE supports, merged chains
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_quantize_dequantize_error_within_half_scale() {
+    // the v2 quantizer's accuracy contract: every survivor dequantizes
+    // to within scale/2 of its exact f32 value (the bound the codec's
+    // error-feedback residual then absorbs), the support is preserved
+    // exactly, and the wire bytes match the documented formula
+    for_all(
+        106,
+        &NormalVec {
+            max_len: 700,
+            sigma: 1.5,
+        },
+        64,
+        |v| {
+            let mut pruned = v.clone();
+            let cut = pruned[0].abs();
+            for x in pruned.iter_mut() {
+                if x.abs() < cut {
+                    *x = 0.0;
+                }
+            }
+            for bits in [QuantBits::Q8, QuantBits::Q4] {
+                let q = QuantTensor::encode(&pruned, bits);
+                let want =
+                    quantized_tensor_bytes(support_bytes(pruned.len(), &q.indices), q.nnz(), bits);
+                if q.wire_bytes() != want {
+                    return Err(format!("{bits:?}: wire bytes != formula"));
+                }
+                let tol = (q.scale as f64) / 2.0 + 1e-6;
+                let decoded = TensorUpdate::Quantized(q).decode_dense();
+                for (i, (&d, &p)) in decoded.iter().zip(&pruned).enumerate() {
+                    // a survivor may dequantize to exactly 0.0, but a
+                    // pruned lane must stay 0
+                    if p == 0.0 && d != 0.0 {
+                        return Err(format!("{bits:?}: pruned lane {i} resurrected"));
+                    }
+                    if p != 0.0 && ((d - p) as f64).abs() > tol {
+                        return Err(format!(
+                            "{bits:?}: survivor {i} err {} > scale/2 {tol}",
+                            (d - p).abs()
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_rle_and_raw_bitmaps_roundtrip_at_word_boundaries() {
+    // random supports at every u32-word-boundary length: the RLE stream
+    // must decode back to the exact bitmap AND to the exact index list —
+    // the two readers the v2 decode paths use
+    for_all2(
+        107,
+        &UsizeIn(0, PLANE_BOUNDARY_LENS.len() - 1),
+        &UsizeIn(0, 1 << 20),
+        96,
+        |&li, &seed| {
+            let n = PLANE_BOUNDARY_LENS[li];
+            let mut rng = Rng::new(seed as u64);
+            // densities from empty to full so runs of every shape occur
+            let keep = rng.below(5);
+            let indices: Vec<u32> =
+                (0..n as u32).filter(|_| rng.below(4) <= keep).collect();
+            let bitmap = presence_bitmap(n, &indices);
+            let rle = bitmap_rle_encode(&bitmap, n);
+            let back = bitmap_rle_decode(&rle, n).map_err(|e| e.to_string())?;
+            if back != bitmap {
+                return Err(format!("n={n}: RLE→bitmap roundtrip diverged"));
+            }
+            let idx_back =
+                rle_decode_indices(&rle, n, indices.len()).map_err(|e| e.to_string())?;
+            if idx_back != indices {
+                return Err(format!("n={n}: RLE→indices roundtrip diverged"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn merged_chain_decode_matches_sequential_apply_for_k_1_2_3() {
+    // the merged-chain contract end to end: a k-link all-quantized chain
+    // serialized through the envelope (merged v2 record for k ≥ 2, v1
+    // for k = 1) must decode to the exact same links and, applied to a
+    // stale replica, land bit-for-bit where applying the k links one at
+    // a time would have
+    let n = 400;
+    let mut rng = Rng::new(61);
+    let links: Vec<Vec<TensorUpdate>> = (0..3)
+        .map(|_| {
+            let mut dense = vec![0f32; n];
+            rng.fill_normal(&mut dense, 0.5);
+            for x in dense.iter_mut() {
+                if rng.below(10) < 7 {
+                    *x = 0.0;
+                }
+            }
+            vec![TensorUpdate::Quantized(QuantTensor::encode(&dense, QuantBits::Q8))]
+        })
+        .collect();
+    for k in 1..=3usize {
+        let chain = ModelUpdate::Chain(links[3 - k..].to_vec());
+        let decoded = decode_update(&encode_update(&chain)).unwrap();
+        assert_eq!(decoded, chain, "k={k}: envelope roundtrip diverged");
+        let mut via_chain = vec![Tensor::zeros(&[n])];
+        decoded.apply(&mut via_chain).unwrap();
+        let mut via_links = vec![Tensor::zeros(&[n])];
+        for l in &links[3 - k..] {
+            ModelUpdate::Delta(l.clone()).apply(&mut via_links).unwrap();
+        }
+        assert_eq!(
+            via_chain, via_links,
+            "k={k}: merged decode diverged from sequential per-link apply"
+        );
+    }
 }
 
 // ---------------------------------------------------------------------------

@@ -5,7 +5,7 @@ use std::sync::atomic::AtomicBool;
 use std::thread;
 
 use efficientgrad::comm::wire::{sign_model_bytes_envelope, sparse_model_bytes};
-use efficientgrad::config::{CommMode, CommPruner, FedConfig, TrainConfig};
+use efficientgrad::config::{CommMode, CommPruner, FedConfig, TrainConfig, WireQuant};
 use efficientgrad::coordinator::{self, runstore, Leader};
 use efficientgrad::faults::FaultPlan;
 use efficientgrad::manifest::Manifest;
@@ -261,6 +261,133 @@ fn pruned_comm_tracks_dense_accuracy_and_cuts_bytes() {
             );
         }
     }
+}
+
+#[test]
+fn quantized_wire_tracks_dense_accuracy_and_cuts_pruned_bytes() {
+    // the wire-v2 acceptance pin: replacing pruned-mode f32 survivors
+    // with q8/q4 affine codes (each off by ≤ scale/2, the error carried
+    // in the codec's error-feedback residual) must stay within the SAME
+    // accuracy pin the f32 pruned run holds against dense, while the
+    // steady-state wire bytes drop ~4x (q8, ~1.3 B/survivor vs 8) and
+    // further at q4
+    let Some(m) = manifest() else {
+        eprintln!("SKIP: artifacts missing");
+        return;
+    };
+    let rt = Runtime::cpu().unwrap();
+    const ROUNDS: usize = 6;
+    let (dense, _) = run_to_summary(&rt, &m, small_cfg(2, ROUNDS));
+    let mut f32cfg = small_cfg(2, ROUNDS);
+    f32cfg.comm = CommMode::Pruned;
+    let (f32run, _) = run_to_summary(&rt, &m, f32cfg.clone());
+    let steady = |sum: &efficientgrad::coordinator::FedSummary| -> u64 {
+        sum.rounds[1..]
+            .iter()
+            .map(|r| r.upload_bytes + r.download_bytes)
+            .sum()
+    };
+    let mut nets = Vec::new();
+    for wq in [WireQuant::Q8, WireQuant::Q4] {
+        let mut cfg = f32cfg.clone();
+        cfg.wire_quant = wq;
+        let (sum, _) = run_to_summary(&rt, &m, cfg);
+        assert_eq!(sum.rounds.len(), ROUNDS);
+        assert!(
+            (sum.final_acc - dense.final_acc).abs() <= 0.25,
+            "{wq:?}: final acc {} vs dense {}",
+            sum.final_acc,
+            dense.final_acc
+        );
+        let first = sum.rounds.first().unwrap().mean_loss;
+        let last = sum.rounds.last().unwrap().mean_loss;
+        assert!(last < first, "{wq:?}: no progress {first} -> {last}");
+        for r in &sum.rounds {
+            // the round-0 resync is still a dense snapshot; every later
+            // link is a quantized delta
+            let expect_dense = if r.round == 0 { 2 } else { 0 };
+            assert_eq!(r.dense_downlinks, expect_dense, "{wq:?} round {}", r.round);
+            assert!(r.uplink_survivors > 0, "{wq:?} round {}", r.round);
+        }
+        nets.push(steady(&sum));
+    }
+    // the headline cut: q8 ≤ 1/4 of the f32 pruned exchange (survivor
+    // counts land in the same ~46% regime, bytes/survivor drop 8 → ~1.3),
+    // q4 strictly below q8
+    let f32_net = steady(&f32run);
+    assert!(
+        nets[0] * 4 <= f32_net,
+        "q8 missed the 4x cut: {} vs f32 pruned {f32_net}",
+        nets[0]
+    );
+    assert!(nets[1] < nets[0], "q4 {} not below q8 {}", nets[1], nets[0]);
+}
+
+#[test]
+fn wire_quant_off_is_bit_for_bit_the_legacy_exchange() {
+    // `--wire-quant off` (the default) must keep every legacy code path:
+    // a default-config run and an explicitly-off run — with churn, so
+    // resync/chain paths fire too — are bit-for-bit twins across every
+    // family, which together with the untouched PR 9 ledger pins above
+    // proves no quantization machinery leaks into the off path
+    let Some(m) = manifest() else {
+        eprintln!("SKIP: artifacts missing");
+        return;
+    };
+    let rt = Runtime::cpu().unwrap();
+    let mut base = small_cfg(3, 5);
+    base.comm = CommMode::Pruned;
+    base.dropout_prob = 0.3;
+    base.max_chain = 3;
+    let mut explicit = base.clone();
+    explicit.wire_quant = WireQuant::Off;
+    let a = harness::run(&rt, &m, base).unwrap();
+    let b = harness::run(&rt, &m, explicit).unwrap();
+    assert_twin_parity("wire-quant off vs default", &a, &b, Parity::full());
+}
+
+#[test]
+fn stale_quantized_reports_fold_below_full_weight_and_learn() {
+    // λ < 1 staleness crossed with q4 quantization: a late report now
+    // carries BOTH a decayed fold weight and a quantized payload — the
+    // elastic schedule and the v2 wire must compose without either
+    // breaking the other's accounting
+    let Some(m) = manifest() else {
+        eprintln!("SKIP: artifacts missing");
+        return;
+    };
+    let rt = Runtime::cpu().unwrap();
+    const ROUNDS: usize = 6;
+    let mut cfg = small_cfg(3, ROUNDS);
+    cfg.comm = CommMode::Pruned;
+    cfg.wire_quant = WireQuant::Q4;
+    cfg.quorum = 0.5;
+    cfg.staleness_decay = 0.7;
+    cfg.pipeline_depth = 2;
+    let (sum, _) = run_to_summary(&rt, &m, cfg);
+    assert_eq!(sum.rounds.len(), ROUNDS);
+    let mut total_late = 0usize;
+    for r in &sum.rounds {
+        if r.late_reports > 0 {
+            // λ = 0.7 at staleness ≥ 1: each late report folds at < 1
+            assert!(
+                r.stale_weight_mass < r.late_reports as f64,
+                "round {}: λ<1 mass {} not below late count {}",
+                r.round,
+                r.stale_weight_mass,
+                r.late_reports
+            );
+            assert!(r.stale_weight_mass > 0.0, "round {}", r.round);
+        }
+        assert!(r.mean_loss.is_finite());
+        assert!(r.eval_acc.is_finite());
+        total_late += r.late_reports;
+    }
+    assert!(
+        total_late >= ROUNDS - 2,
+        "late folding barely exercised: {total_late} late reports"
+    );
+    assert!(sum.final_acc > 0.12, "final acc {}", sum.final_acc);
 }
 
 #[test]
@@ -1106,6 +1233,30 @@ fn loopback_tcp_run_is_bit_for_bit_the_in_process_run() {
             b.round
         );
     }
+}
+
+#[test]
+fn loopback_tcp_quantized_run_is_bit_for_bit_the_in_process_run() {
+    // wire v2 crossed with the socket transport: the sealed frame is the
+    // unit the transport carries, so quantized records and merged chain
+    // resyncs (max_chain 3 + disconnect churn makes k ≥ 2 comebacks ride
+    // the UPDATE_CHAIN_MERGED record over the wire) must decode to the
+    // in-process run bit for bit — params, eval accs, every ledger
+    let Some(m) = manifest() else {
+        eprintln!("SKIP: artifacts missing");
+        return;
+    };
+    let rt = Runtime::cpu().unwrap();
+    let mut cfg = small_cfg(3, 5);
+    cfg.comm = CommMode::Pruned;
+    cfg.wire_quant = WireQuant::Q8;
+    cfg.max_chain = 3;
+    cfg.faults = Some("disconnect=0.3,delay=0.4,seed=7".parse().unwrap());
+    let inproc = harness::run(&rt, &m, cfg.clone()).unwrap();
+    let tcp = run_tcp(&rt, &m, cfg);
+    let dropped: usize = inproc.summary.rounds.iter().map(|r| r.dropped.len()).sum();
+    assert!(dropped > 0, "disconnect injection produced no dropouts");
+    assert_twin_parity("loopback tcp vs in-process (q8)", &inproc, &tcp, Parity::full());
 }
 
 #[test]
